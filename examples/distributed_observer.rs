@@ -1,0 +1,79 @@
+//! Distributed attribute observation: shard a stream across worker
+//! threads, observe in parallel with per-shard Quantization Observers, and
+//! merge the partial hashes with the paper's Sec. 3 Chan formulas — the
+//! merged observer answers split queries identically to a single-threaded
+//! one.
+//!
+//! Run: `cargo run --release --example distributed_observer [instances]`
+
+use qostream::common::timing::human_time;
+use qostream::coordinator::{CoordinatorConfig, Partitioner, ShardedObserverCoordinator};
+use qostream::criterion::VarianceReduction;
+use qostream::observer::{AttributeObserver, QuantizationObserver};
+use qostream::stream::{Friedman1, Stream};
+
+fn main() {
+    let instances: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(300_000);
+    let radius = 0.02;
+
+    // single-threaded reference
+    let mut single: Vec<QuantizationObserver> =
+        (0..10).map(|_| QuantizationObserver::with_radius(radius)).collect();
+    let mut stream = Friedman1::new(5, 1.0);
+    let start = std::time::Instant::now();
+    for _ in 0..instances {
+        let inst = stream.next_instance().unwrap();
+        for (f, qo) in single.iter_mut().enumerate() {
+            qo.observe(inst.x[f], inst.y, 1.0);
+        }
+    }
+    let single_secs = start.elapsed().as_secs_f64();
+    println!("single-threaded: {instances} instances in {}", human_time(single_secs));
+
+    for shards in [1, 2, 4] {
+        let coordinator = ShardedObserverCoordinator::new(
+            10,
+            CoordinatorConfig {
+                n_shards: shards,
+                radius,
+                batch_size: 512,
+                channel_capacity: 16,
+                partitioner: Partitioner::RoundRobin,
+            },
+        );
+        let mut stream = Friedman1::new(5, 1.0);
+        let report = coordinator.run(&mut stream, instances);
+        println!(
+            "{shards} shard(s): {} ({} inst/s), per-shard {:?}",
+            human_time(report.seconds),
+            (report.instances as f64 / report.seconds) as u64,
+            report.per_shard
+        );
+
+        // the merged result must match the single-threaded observers
+        for f in 0..10 {
+            let a = report.merged[f].best_split(&VarianceReduction);
+            let b = single[f].best_split(&VarianceReduction);
+            match (a, b) {
+                (Some(a), Some(b)) => {
+                    assert!(
+                        (a.threshold - b.threshold).abs() < 1e-9,
+                        "feature {f}: {} vs {}",
+                        a.threshold,
+                        b.threshold
+                    );
+                }
+                (None, None) => {}
+                _ => panic!("feature {f}: split disagreement"),
+            }
+            assert_eq!(report.merged[f].n_elements(), single[f].n_elements());
+        }
+        println!("  merged observers identical to single-threaded (all 10 features)");
+    }
+    println!("\nsplit decisions (feature, threshold, VR):");
+    for (f, qo) in single.iter().enumerate().take(5) {
+        if let Some(s) = qo.best_split(&VarianceReduction) {
+            println!("  x[{f}] <= {:.4}  (VR {:.4}, {} slots)", s.threshold, s.merit, qo.n_elements());
+        }
+    }
+}

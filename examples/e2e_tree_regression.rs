@@ -1,0 +1,82 @@
+//! End-to-end driver (DESIGN.md "E2E"): train Hoeffding tree regressors —
+//! one per attribute-observer configuration — prequentially on the
+//! Friedman #1 stream, log the loss curves, and compare accuracy, memory
+//! and throughput. This exercises the full stack the paper motivates:
+//! stream -> tree -> per-leaf observers -> split decisions.
+//!
+//! Run: `cargo run --release --example e2e_tree_regression [instances]`
+//! Results land in `results/e2e/`.
+
+use qostream::bench_suite::report::Report;
+use qostream::common::table::{fnum, Table};
+use qostream::eval::{prequential, MeanRegressor};
+use qostream::observer::paper_lineup;
+use qostream::stream::Friedman1;
+use qostream::tree::{HoeffdingTreeRegressor, HtrOptions};
+
+fn main() -> anyhow::Result<()> {
+    let instances: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(100_000);
+    let seed = 1u64;
+    println!("== qostream end-to-end: Friedman #1, {instances} instances, prequential ==\n");
+
+    let report = Report::create("e2e")?;
+    let mut summary = Table::new(vec![
+        "model", "MAE", "RMSE", "R2", "time_s", "inst/s", "elements", "leaves",
+    ]);
+
+    // baseline
+    {
+        let mut model = MeanRegressor::new();
+        let r = prequential(&mut model, &mut Friedman1::new(seed, 1.0), instances, 0);
+        summary.row(vec![
+            "mean-baseline".to_string(),
+            fnum(r.metrics.mae()),
+            fnum(r.metrics.rmse()),
+            fnum(r.metrics.r2()),
+            fnum(r.seconds),
+            fnum(r.throughput()),
+            "1".to_string(),
+            "-".to_string(),
+        ]);
+    }
+
+    let mut curves = Table::new(vec!["model", "instances", "mae", "rmse"]);
+    for fac in paper_lineup() {
+        let name = format!("htr[{}]", fac.name());
+        let mut tree = HoeffdingTreeRegressor::new(10, HtrOptions::default(), fac);
+        let r = prequential(
+            &mut tree,
+            &mut Friedman1::new(seed, 1.0),
+            instances,
+            instances / 20,
+        );
+        println!("{name}:");
+        for &(n, mae, rmse) in &r.curve {
+            println!("  after {n:>7}: MAE {mae:.4}  RMSE {rmse:.4}");
+            curves.row(vec![name.clone(), n.to_string(), fnum(mae), fnum(rmse)]);
+        }
+        println!(
+            "  final: {} leaves, {} splits, {} stored elements, {:.0} inst/s\n",
+            tree.n_leaves(),
+            tree.n_splits(),
+            tree.total_elements(),
+            r.throughput()
+        );
+        summary.row(vec![
+            name,
+            fnum(r.metrics.mae()),
+            fnum(r.metrics.rmse()),
+            fnum(r.metrics.r2()),
+            fnum(r.seconds),
+            fnum(r.throughput()),
+            tree.total_elements().to_string(),
+            tree.n_leaves().to_string(),
+        ]);
+    }
+
+    println!("{}", summary.render());
+    report.write_table("summary", &summary)?;
+    report.write_table("curves", &curves)?;
+    println!("written to results/e2e/");
+    Ok(())
+}

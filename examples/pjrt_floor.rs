@@ -1,0 +1,35 @@
+//! Measure the PJRT dispatch floor: round-trip time of a trivial
+//! f64[8,256] `a + 1` computation built with the XlaBuilder. This is the
+//! fixed overhead every `XlaSplitEngine` call pays regardless of the
+//! kernel's work — the denominator of the §Perf roofline analysis
+//! (EXPERIMENTS.md).
+//!
+//! Run: `cargo run --release --example pjrt_floor`
+
+use qostream::common::timing::{bench, human_time};
+
+fn main() -> anyhow::Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    let builder = xla::XlaBuilder::new("floor");
+    let shape = xla::Shape::array::<f64>(vec![8, 256]);
+    let p = builder.parameter_s(0, &shape, "a")?;
+    let one = builder.constant_r0(1f64)?;
+    let comp = p.add_(&one)?.build()?;
+    let exe = client.compile(&comp)?;
+
+    let data = vec![1.0f64; 8 * 256];
+    let lit = xla::Literal::vec1(&data).reshape(&[8, 256])?;
+    let stats = bench(5, 50, || {
+        exe.execute::<xla::Literal>(std::slice::from_ref(&lit))
+            .unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap()
+    });
+    println!(
+        "trivial f64[8,256] round-trip on {}: {}",
+        client.platform_name(),
+        human_time(stats.mean)
+    );
+    println!("(compare with `cargo bench --bench xla_vs_native` per-call times)");
+    Ok(())
+}

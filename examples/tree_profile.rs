@@ -1,0 +1,33 @@
+//! Profiling driver: train one QO_σ÷2 Hoeffding tree on 200k Friedman #1
+//! instances and report throughput. Used with `perf record` for the
+//! §Perf pass (EXPERIMENTS.md) — kept as a reproducible harness.
+//!
+//! Run: `cargo run --release --example tree_profile`
+//! Profile: `perf record ./target/release/examples/tree_profile`
+
+use qostream::eval::Regressor;
+use qostream::observer::{factory, QuantizationObserver, RadiusPolicy};
+use qostream::stream::{Friedman1, Stream};
+use qostream::tree::{HoeffdingTreeRegressor, HtrOptions};
+
+fn main() {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(200_000);
+    let fac = factory("QO_s2", || {
+        Box::new(QuantizationObserver::new(RadiusPolicy::std_fraction(2.0)))
+    });
+    let mut tree = HoeffdingTreeRegressor::new(10, HtrOptions::default(), fac);
+    let mut stream = Friedman1::new(1, 1.0);
+    let t0 = std::time::Instant::now();
+    for _ in 0..n {
+        let inst = stream.next_instance().unwrap();
+        tree.learn_one(&inst.x, inst.y);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "{} instances in {secs:.3}s = {} inst/s ({} leaves, {} elements)",
+        n,
+        (n as f64 / secs) as u64,
+        tree.n_leaves(),
+        tree.total_elements()
+    );
+}

@@ -1,0 +1,95 @@
+//! The three-layer stack end to end: Quantization Observers (rust, L3)
+//! feed their slot tables to the AOT-compiled JAX/Pallas split evaluator
+//! (L2+L1) running on the PJRT CPU client — and the answers match the
+//! native rust query path exactly.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example xla_split_eval`
+
+use qostream::common::timing::{bench, human_time};
+use qostream::common::Rng;
+use qostream::criterion::VarianceReduction;
+use qostream::observer::{AttributeObserver, QuantizationObserver};
+use qostream::runtime::{find_artifacts_dir, Manifest, SlotTable, XlaQuantizeEngine, XlaSplitEngine};
+
+fn main() -> anyhow::Result<()> {
+    let dir = find_artifacts_dir()?;
+    let manifest = Manifest::load(&dir)?;
+    let client = xla::PjRtClient::cpu()?;
+    println!("PJRT platform: {}", client.platform_name());
+
+    // --- split evaluation ---------------------------------------------
+    let split_engine = XlaSplitEngine::load(&client, &manifest)?;
+    println!("split_eval artifact: F={} S={}", split_engine.f, split_engine.s);
+
+    let mut rng = Rng::new(3);
+    let observers: Vec<QuantizationObserver> = (0..split_engine.f)
+        .map(|f| {
+            let mut qo = QuantizationObserver::with_radius(0.05);
+            for _ in 0..30_000 {
+                let x = rng.normal(0.0, 1.0);
+                let y = if x <= 0.2 * f as f64 - 0.5 { -1.0 } else { 1.0 };
+                qo.observe(x, y + rng.normal(0.0, 0.1), 1.0);
+            }
+            qo
+        })
+        .collect();
+
+    let tables: Vec<SlotTable> = observers.iter().map(SlotTable::from_qo).collect();
+    let xla_results = split_engine.best_splits(&tables)?;
+    for (f, (qo, res)) in observers.iter().zip(&xla_results).enumerate() {
+        let native = qo.best_split(&VarianceReduction).unwrap();
+        let x = res.unwrap();
+        println!(
+            "  feature {f}: XLA c={:+.4} vr={:.4} | native c={:+.4} vr={:.4} | slots={}",
+            x.threshold,
+            x.merit,
+            native.threshold,
+            native.merit,
+            qo.n_elements()
+        );
+        assert!((x.threshold - native.threshold).abs() < 1e-9);
+    }
+
+    // batched-vs-native timing (XLA amortizes across F features per call)
+    let refs: Vec<&QuantizationObserver> = observers.iter().collect();
+    let xla_stats = bench(3, 20, || split_engine.best_splits_for_observers(&refs).unwrap());
+    let native_stats = bench(3, 20, || {
+        refs.iter().map(|qo| qo.best_split(&VarianceReduction)).collect::<Vec<_>>()
+    });
+    println!(
+        "\nsplit query x{} features: XLA {} / call, native {} / call",
+        split_engine.f,
+        human_time(xla_stats.mean),
+        human_time(native_stats.mean)
+    );
+
+    // --- bulk quantization ingest --------------------------------------
+    let quant_engine = XlaQuantizeEngine::load(&client, &manifest)?;
+    println!("\nquantize artifact: B={} S={}", quant_engine.b, quant_engine.s);
+    let xs: Vec<f64> = (0..4096).map(|_| rng.normal(0.0, 1.0)).collect();
+    let ys: Vec<f64> = xs.iter().map(|x| x * x).collect();
+    let bulk = quant_engine.build_observer(&xs, &ys, 0.1)?;
+    let mut streaming = QuantizationObserver::with_radius(0.1);
+    for (&x, &y) in xs.iter().zip(&ys) {
+        streaming.observe(x, y, 1.0);
+    }
+    println!(
+        "bulk-ingested {} points -> {} slots (streaming observer: {} slots)",
+        xs.len(),
+        bulk.n_elements(),
+        streaming.n_elements()
+    );
+    assert_eq!(bulk.n_elements(), streaming.n_elements());
+    let (sb, ss) = (
+        bulk.best_split(&VarianceReduction).unwrap(),
+        streaming.best_split(&VarianceReduction).unwrap(),
+    );
+    println!(
+        "bulk split c={:.4} vr={:.4} | streaming split c={:.4} vr={:.4}",
+        sb.threshold, sb.merit, ss.threshold, ss.merit
+    );
+    assert!((sb.threshold - ss.threshold).abs() < 1e-9);
+    println!("\nthree-layer stack verified: rust -> PJRT -> (JAX+Pallas AOT) -> rust");
+    Ok(())
+}

@@ -1,0 +1,13 @@
+"""Build-time compile path: Pallas kernels (L1), JAX graphs (L2), AOT (aot.py).
+
+Nothing in this package is imported at runtime by the rust coordinator; it
+exists to author and lower the HLO artifacts under ``artifacts/``.
+
+The whole stack runs in float64: the rust side keeps f64 statistics and the
+artifact round-trip tests compare against rust math at tight tolerances, so
+x64 must be enabled before any jax import downstream.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

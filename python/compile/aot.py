@@ -1,0 +1,89 @@
+"""AOT: lower the L2 graphs to HLO *text* artifacts for the rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids, which the xla_extension 0.5.1
+bundled with the published ``xla`` crate rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Lowering goes stablehlo -> XlaComputation (``return_tuple=True`` so the rust
+side unwraps a tuple) -> ``as_hlo_text()``.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+Emits:  split_eval_f{F}_s{S}.hlo.txt, quantize_b{B}_s{S}.hlo.txt,
+        manifest.txt (shape metadata the rust runtime parses).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import quantize as qk
+from compile.kernels import vr_split as vk
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_split_eval(f: int, s: int) -> str:
+    lowered = jax.jit(model.split_eval).lower(*model.split_eval_example_args(f, s))
+    return to_hlo_text(lowered)
+
+
+def lower_quantize(b: int) -> str:
+    lowered = jax.jit(model.quantize_ingest).lower(*model.quantize_example_args(b))
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, f: int, s: int, b: int) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    written = []
+
+    split_name = f"split_eval_f{f}_s{s}.hlo.txt"
+    with open(os.path.join(out_dir, split_name), "w") as fh:
+        fh.write(lower_split_eval(f, s))
+    written.append(split_name)
+
+    quant_name = f"quantize_b{b}_s{s}.hlo.txt"
+    with open(os.path.join(out_dir, quant_name), "w") as fh:
+        fh.write(lower_quantize(b))
+    written.append(quant_name)
+
+    # Plain key=value manifest (the rust side has no serde; keep it trivial).
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as fh:
+        fh.write(f"split_eval={split_name}\n")
+        fh.write(f"split_eval.f={f}\n")
+        fh.write(f"split_eval.s={s}\n")
+        fh.write(f"quantize={quant_name}\n")
+        fh.write(f"quantize.b={b}\n")
+        fh.write(f"quantize.s={s}\n")
+    written.append("manifest.txt")
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--features", type=int, default=vk.DEFAULT_F)
+    ap.add_argument("--slots", type=int, default=vk.DEFAULT_S)
+    ap.add_argument("--batch", type=int, default=qk.DEFAULT_B)
+    args = ap.parse_args()
+    written = build(args.out_dir, args.features, args.slots, args.batch)
+    for name in written:
+        path = os.path.join(args.out_dir, name)
+        print(f"wrote {os.path.getsize(path)} bytes to {path}")
+
+
+if __name__ == "__main__":
+    main()

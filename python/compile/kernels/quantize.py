@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: batched quantization update (paper Alg. 1) as a
+segment-sum.
+
+The streaming update of the Quantization Observer is a hash insert per
+element. For bulk ingestion (replay buffers, warm-start, the coordinator's
+batch path) the same math is a *segment reduction*: every element lands in
+slot ``floor(x / r)`` and contributes (1, x, y, y^2) to that slot.
+
+TPU adaptation: a scatter-add is hostile to the MXU, but the identity
+
+    out[S, K] = one_hot(codes)[B, S]^T  @  vals[B, K]
+
+turns the histogram into a (S, B) x (B, K) matmul — exactly what the
+systolic array is built for (the paper's hash insert becomes a matmul, the
+same trick LightGBM-on-GPU uses for histogram building). Codes outside
+[0, S) produce an all-zero one-hot row and are dropped; the caller windows
+the batch so nothing is lost.
+
+interpret=True (CPU PJRT); f64 accumulate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default AOT shapes.
+DEFAULT_B = 1024
+DEFAULT_S = 256
+STAT_K = 4  # [count, sum_x, sum_y, sum_y2]
+
+
+def _segsum_kernel(codes_ref, vals_ref, out_ref):
+    codes = codes_ref[...]          # (B,) int32
+    vals = vals_ref[...]            # (B, K) f64
+    b = codes.shape[0]
+    s = out_ref.shape[0]
+    # one_hot: (B, S) f64 — rows with out-of-range codes are all zero.
+    iota = jax.lax.broadcasted_iota(jnp.int32, (b, s), 1)
+    onehot = (codes[:, None] == iota).astype(vals.dtype)
+    # (S, B) @ (B, K) -> (S, K): the MXU does the segment reduction.
+    out_ref[...] = jnp.dot(onehot.T, vals, preferred_element_type=vals.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("num_slots",))
+def segsum(codes, vals, *, num_slots: int = DEFAULT_S):
+    """Segment-sum ``vals`` rows into ``num_slots`` buckets by ``codes``.
+
+    Args:
+      codes: (B,) int32 rebased bucket codes; out-of-range rows are dropped.
+      vals:  (B, K) float64 per-element statistics rows.
+
+    Returns:
+      (num_slots, K) float64 aggregated table.
+    """
+    b, k = vals.shape
+    return pl.pallas_call(
+        _segsum_kernel,
+        out_shape=jax.ShapeDtypeStruct((num_slots, k), vals.dtype),
+        interpret=True,
+    )(codes, vals)
+
+
+@functools.partial(jax.jit, static_argnames=("num_slots",))
+def quantize_ingest(x, y, r, *, num_slots: int = DEFAULT_S):
+    """Full batched QO update: codes, rebase to the batch's min code,
+    aggregate into a dense slot table.
+
+    Args:
+      x, y: (B,) float64 feature / target batches.
+      r: scalar float64 quantization radius.
+
+    Returns:
+      (base_code, table): base_code is int32 (the code of slot 0); table is
+      (num_slots, 4) float64 [count, sum_x, sum_y, sum_y2].
+    """
+    codes = jnp.floor(x / r).astype(jnp.int32)
+    base = jnp.min(codes)
+    rebased = codes - base
+    ones = jnp.ones_like(x)
+    vals = jnp.stack([ones, x, y, y * y], axis=1)
+    table = segsum(rebased, vals, num_slots=num_slots)
+    return base, table

@@ -1,0 +1,187 @@
+"""Pure-numpy correctness oracles for the Pallas kernels.
+
+These are the trusted, slow implementations of the paper's math:
+
+* Welford / Chan et al. robust mean-variance statistics (paper Sec. 3,
+  Eqs. 2-7), implemented sequentially over slots.
+* The Quantization Observer split-candidate query (paper Alg. 2): prefix
+  Chan-merge over the sorted slots, complement-by-subtraction for the
+  right-hand side, Variance Reduction merit (Eq. 1, sign-corrected as in
+  FIMT) for every boundary candidate.
+* The batched quantization update (paper Alg. 1): bucket code
+  ``floor(x / r)`` and per-slot aggregation of (count, sum_x, sum_y,
+  sum_y2).
+
+Everything is float64: the rust coordinator keeps f64 statistics, and the
+pytest suite asserts near-exact agreement between kernel, oracle and the
+rust-side math.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Robust statistics (paper Sec. 3)
+# ---------------------------------------------------------------------------
+
+
+def welford_update(stats, y: float, w: float = 1.0):
+    """One Welford step (Eqs. 2-3), weighted.
+
+    ``stats`` is the triple (n, mean, M2).
+    """
+    n, mean, m2 = stats
+    n_new = n + w
+    delta = y - mean
+    mean_new = mean + (w / n_new) * delta
+    m2_new = m2 + w * delta * (y - mean_new)
+    return (n_new, mean_new, m2_new)
+
+
+def chan_merge(a, b):
+    """Chan et al. parallel merge (Eqs. 4-5)."""
+    na, ma, m2a = a
+    nb, mb, m2b = b
+    n = na + nb
+    if n <= 0.0:
+        return (0.0, 0.0, 0.0)
+    if na == 0.0:
+        return b
+    if nb == 0.0:
+        return a
+    delta = mb - ma
+    mean = (na * ma + nb * mb) / n
+    m2 = m2a + m2b + delta * delta * (na * nb / n)
+    return (n, mean, m2)
+
+
+def chan_subtract(ab, b):
+    """Complement of a partial estimate (Eqs. 6-7): returns A = AB - B."""
+    nab, mab, m2ab = ab
+    nb, mb, m2b = b
+    na = nab - nb
+    if na <= 0.0:
+        return (0.0, 0.0, 0.0)
+    ma = (nab * mab - nb * mb) / na
+    delta = mb - ma
+    m2a = m2ab - m2b - delta * delta * (na * nb / nab)
+    return (na, ma, max(m2a, 0.0))
+
+
+def variance(stats) -> float:
+    """Sample variance s^2 = M2 / (n - 1) (0 for n <= 1)."""
+    n, _, m2 = stats
+    if n <= 1.0:
+        return 0.0
+    return m2 / (n - 1.0)
+
+
+def variance_reduction(total, left, right) -> float:
+    """VR merit (paper Eq. 1, sign-corrected to the FIMT form):
+
+    VR = s2(d) - (|l-|/|d|) s2(l-) - (|l+|/|d|) s2(l+)
+    """
+    n = total[0]
+    if n <= 0.0:
+        return 0.0
+    return (
+        variance(total)
+        - (left[0] / n) * variance(left)
+        - (right[0] / n) * variance(right)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Split-candidate query oracle (paper Alg. 2), batched over features
+# ---------------------------------------------------------------------------
+
+NEG_INF = -np.inf
+
+
+def vr_split_ref(n, sum_x, mean, m2):
+    """Reference for the vr_split kernel.
+
+    Args:
+      n, sum_x, mean, m2: float64 arrays of shape (F, S). Slots are sorted
+        by quantization key and packed to the front; padding slots have
+        n == 0 and MUST be trailing.
+
+    Returns:
+      vr:    (F, S) float64 — merit of splitting *after* slot i (boundary
+             between slot i and slot i+1); -inf where there is no boundary.
+      split: (F, S) float64 — candidate split point, the midpoint of the
+             prototypes (sum_x/n) of slots i and i+1; 0 where invalid.
+    """
+    n = np.asarray(n, dtype=np.float64)
+    sum_x = np.asarray(sum_x, dtype=np.float64)
+    mean = np.asarray(mean, dtype=np.float64)
+    m2 = np.asarray(m2, dtype=np.float64)
+    F, S = n.shape
+    vr = np.full((F, S), NEG_INF, dtype=np.float64)
+    split = np.zeros((F, S), dtype=np.float64)
+    for f in range(F):
+        valid = int(np.sum(n[f] > 0.0))
+        if valid < 2:
+            continue
+        total = (0.0, 0.0, 0.0)
+        for i in range(valid):
+            total = chan_merge(total, (n[f, i], mean[f, i], m2[f, i]))
+        left = (0.0, 0.0, 0.0)
+        for i in range(valid - 1):
+            left = chan_merge(left, (n[f, i], mean[f, i], m2[f, i]))
+            right = chan_subtract(total, left)
+            vr[f, i] = variance_reduction(total, left, right)
+            proto_i = sum_x[f, i] / n[f, i]
+            proto_j = sum_x[f, i + 1] / n[f, i + 1]
+            split[f, i] = 0.5 * (proto_i + proto_j)
+    return vr, split
+
+
+def best_split_ref(n, sum_x, mean, m2):
+    """argmax over the vr_split_ref outputs: (best_idx, best_vr, best_split)."""
+    vr, split = vr_split_ref(n, sum_x, mean, m2)
+    idx = np.argmax(vr, axis=1)
+    rows = np.arange(vr.shape[0])
+    return idx, vr[rows, idx], split[rows, idx]
+
+
+# ---------------------------------------------------------------------------
+# Batched quantization-update oracle (paper Alg. 1)
+# ---------------------------------------------------------------------------
+
+
+def quantize_codes_ref(x, r: float):
+    """Bucket codes h = floor(x / r) (int64)."""
+    return np.floor(np.asarray(x, dtype=np.float64) / r).astype(np.int64)
+
+
+def segsum_ref(codes, x, y, num_slots: int):
+    """Reference for the quantize/segment-sum kernel.
+
+    ``codes`` are already rebased to [0, num_slots); out-of-range codes are
+    dropped (the rust side windows the batch so this never loses data).
+
+    Returns stacked (num_slots, 4): [count, sum_x, sum_y, sum_y2].
+    """
+    codes = np.asarray(codes)
+    x = np.asarray(x, dtype=np.float64)
+    y = np.asarray(y, dtype=np.float64)
+    out = np.zeros((num_slots, 4), dtype=np.float64)
+    for c, xi, yi in zip(codes, x, y):
+        if 0 <= c < num_slots:
+            out[c, 0] += 1.0
+            out[c, 1] += xi
+            out[c, 2] += yi
+            out[c, 3] += yi * yi
+    return out
+
+
+def quantize_ingest_ref(x, y, r: float, num_slots: int):
+    """Full ingest oracle: codes, rebase to min code, aggregate.
+
+    Returns (base_code, table) where table is (num_slots, 4).
+    """
+    codes = quantize_codes_ref(x, r)
+    base = int(codes.min()) if codes.size else 0
+    return base, segsum_ref(codes - base, x, y, num_slots)

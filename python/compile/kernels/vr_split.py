@@ -1,0 +1,148 @@
+"""L1 Pallas kernel: batched Variance-Reduction split-candidate evaluation.
+
+This is the compute hot-spot of the Quantization Observer's split query
+(paper Alg. 2), restated as a data-parallel computation so that *all*
+boundary candidates of *many* features are evaluated in one pass:
+
+  given per-slot statistics (n, sum_x, mean_y, M2_y) sorted by quantization
+  key and packed to the front of the slot axis, compute for every boundary
+  ``i`` (between slot i and slot i+1):
+
+    left  = prefix-merge(slots[0..=i])         (Chan et al. merge)
+    right = total - left                       (Chan et al. subtraction)
+    VR[i] = s2(total) - (nL/nT) s2(left) - (nR/nT) s2(right)
+    split[i] = (prototype[i] + prototype[i+1]) / 2
+
+The prefix Chan-merge has a closed form over cumulative sums: for a prefix
+with count cn, y-sum cs and y-square-sum cq,
+
+    mean = cs / cn          M2 = cq - cs^2 / cn
+
+which turns the sequential merge loop of Alg. 2 into three ``cumsum``s plus
+elementwise math — exactly the shape the VPU vectorizes over the slot axis.
+All math is f64 (slot statistics are pre-aggregated, so the classic
+naive-sum cancellation the paper warns about is bounded; the pytest suite
+checks agreement with the sequential Chan-merge oracle to 1e-9).
+
+TPU adaptation (DESIGN.md "Hardware adaptation"): the grid tiles the
+feature axis; each block holds (F_BLOCK, S) f64 slabs in VMEM (~10 KiB per
+feature at S=256), and S is kept a multiple of 128 so the per-boundary VR
+math maps onto full lanes. interpret=True everywhere (CPU PJRT).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+# Default AOT shapes (rust runtime pads to these).
+DEFAULT_F = 8
+DEFAULT_S = 256
+F_BLOCK = 8
+
+
+def _safe_div(a, b):
+    """a / b with 0 where b == 0 (padding slots)."""
+    return jnp.where(b != 0.0, a / jnp.where(b != 0.0, b, 1.0), 0.0)
+
+
+def _vr_split_kernel(n_ref, sum_x_ref, mean_ref, m2_ref, vr_ref, split_ref):
+    n = n_ref[...]
+    sum_x = sum_x_ref[...]
+    mean = mean_ref[...]
+    m2 = m2_ref[...]
+    fb, s = n.shape
+
+    # Slot-level sufficient statistics.
+    sy = n * mean                # per-slot sum of y
+    q = m2 + n * mean * mean     # per-slot sum of y^2
+
+    # Prefix (left) statistics via cumulative sums == closed-form Chan
+    # merge. (Perf note: a triangular-matmul formulation — MXU-shaped for
+    # TPU — was tried and measured 2x SLOWER on the CPU runtime's older
+    # XLA, so the cumsum lowering stays; see EXPERIMENTS.md §Perf.)
+    cn = jnp.cumsum(n, axis=1)
+    cs = jnp.cumsum(sy, axis=1)
+    cq = jnp.cumsum(q, axis=1)
+
+    # Totals: padding slots are all-zero, so the last prefix is the total.
+    nt = cn[:, -1:]
+    st = cs[:, -1:]
+    qt = cq[:, -1:]
+
+    def m2_of(cnt, ysum, ysq):
+        return jnp.maximum(ysq - _safe_div(ysum * ysum, cnt), 0.0)
+
+    def s2_of(cnt, ysum, ysq):
+        denom = jnp.where(cnt > 1.0, cnt - 1.0, 1.0)
+        return jnp.where(cnt > 1.0, m2_of(cnt, ysum, ysq) / denom, 0.0)
+
+    s2_t = s2_of(nt, st, qt)
+
+    nl = cn
+    s2_l = s2_of(cn, cs, cq)
+    nr = nt - cn
+    s2_r = s2_of(nr, st - cs, qt - cq)
+
+    frac_l = _safe_div(nl, jnp.broadcast_to(nt, nl.shape))
+    frac_r = _safe_div(nr, jnp.broadcast_to(nt, nr.shape))
+    vr = s2_t - frac_l * s2_l - frac_r * s2_r
+
+    # A boundary after slot i exists iff slot i and slot i+1 are both
+    # occupied (slots are packed, so occupancy is a prefix property).
+    zeros_col = jnp.zeros((fb, 1), dtype=n.dtype)
+    n_next = jnp.concatenate([n[:, 1:], zeros_col], axis=1)
+    sum_x_next = jnp.concatenate([sum_x[:, 1:], zeros_col], axis=1)
+    valid = (n > 0.0) & (n_next > 0.0)
+
+    proto = _safe_div(sum_x, n)
+    proto_next = _safe_div(sum_x_next, n_next)
+    split = jnp.where(valid, 0.5 * (proto + proto_next), 0.0)
+    vr = jnp.where(valid, vr, NEG_INF)
+
+    vr_ref[...] = vr
+    split_ref[...] = split
+
+
+@functools.partial(jax.jit, static_argnames=("f_block",))
+def vr_split(n, sum_x, mean, m2, *, f_block: int = F_BLOCK):
+    """Evaluate all split candidates for a batch of features.
+
+    Args:
+      n, sum_x, mean, m2: (F, S) float64 packed slot statistics.
+      f_block: feature-axis tile size (F must be a multiple).
+
+    Returns:
+      (vr, split): both (F, S) float64; ``vr`` is -inf at non-boundaries.
+    """
+    f, s = n.shape
+    assert f % f_block == 0, (f, f_block)
+    out_shape = [
+        jax.ShapeDtypeStruct((f, s), jnp.float64),
+        jax.ShapeDtypeStruct((f, s), jnp.float64),
+    ]
+    if f == f_block:
+        # Single block: skip the grid machinery entirely. The interpret-
+        # mode grid loop lowers to while/dynamic-slice HLO that the older
+        # XLA bundled with the rust runtime (xla_extension 0.5.1)
+        # optimizes poorly (~4x slower end-to-end; EXPERIMENTS.md §Perf).
+        return pl.pallas_call(
+            _vr_split_kernel,
+            out_shape=out_shape,
+            interpret=True,  # CPU PJRT; real-TPU would lower to Mosaic
+        )(n, sum_x, mean, m2)
+    grid = (f // f_block,)
+    spec = pl.BlockSpec((f_block, s), lambda i: (i, 0))
+    return pl.pallas_call(
+        _vr_split_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec],
+        out_specs=[spec, spec],
+        out_shape=out_shape,
+        interpret=True,  # CPU PJRT; real-TPU would lower to Mosaic
+    )(n, sum_x, mean, m2)

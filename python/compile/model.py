@@ -1,0 +1,66 @@
+"""L2 JAX graphs: the computations the rust runtime executes.
+
+Two graphs are AOT-lowered to HLO text (see ``aot.py``):
+
+* ``split_eval`` — evaluate every split candidate of a batch of features
+  (the paper's Alg. 2 batched over leaves x features) and reduce to the
+  best candidate per feature. Calls the ``vr_split`` Pallas kernel; the
+  argmax reduction stays at L2 so XLA fuses it with the kernel output.
+* ``quantize_ingest`` — bulk Quantization-Observer update (paper Alg. 1)
+  over a batch of (x, y) pairs, producing a dense slot table. Calls the
+  ``quantize.segsum`` Pallas kernel.
+
+The rust side pads its inputs to the fixed AOT shapes; both graphs are
+pure functions of their arguments (no captured state), so one compiled
+executable serves every leaf of every tree.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import quantize as qk
+from compile.kernels import vr_split as vk
+
+
+def split_eval(n, sum_x, mean, m2):
+    """Best split per feature from packed slot statistics.
+
+    Args:
+      n, sum_x, mean, m2: (F, S) float64 packed slot statistics (sorted by
+        key, padding slots trailing with n == 0).
+
+    Returns a 5-tuple:
+      vr:         (F, S) float64 merit of each boundary (-inf where invalid)
+      split:      (F, S) float64 candidate split points
+      best_idx:   (F,)   int32   argmax boundary per feature
+      best_vr:    (F,)   float64 merit of the best boundary
+      best_split: (F,)   float64 split point of the best boundary
+    """
+    vr, split = vk.vr_split(n, sum_x, mean, m2)
+    best_idx = jnp.argmax(vr, axis=1).astype(jnp.int32)
+    rows = jnp.arange(vr.shape[0])
+    best_vr = vr[rows, best_idx]
+    best_split = split[rows, best_idx]
+    return vr, split, best_idx, best_vr, best_split
+
+
+def quantize_ingest(x, y, r):
+    """Bulk QO update; see ``kernels.quantize.quantize_ingest``.
+
+    Returns (base_code:int32 scalar, table:(S,4) float64).
+    """
+    base, table = qk.quantize_ingest(x, y, r, num_slots=qk.DEFAULT_S)
+    return base, table
+
+
+def split_eval_example_args(f: int = vk.DEFAULT_F, s: int = vk.DEFAULT_S):
+    spec = jax.ShapeDtypeStruct((f, s), jnp.float64)
+    return (spec, spec, spec, spec)
+
+
+def quantize_example_args(b: int = qk.DEFAULT_B):
+    vec = jax.ShapeDtypeStruct((b,), jnp.float64)
+    scalar = jax.ShapeDtypeStruct((), jnp.float64)
+    return (vec, vec, scalar)

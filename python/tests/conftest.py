@@ -1,0 +1,8 @@
+import os
+import sys
+
+# Make `compile` importable when pytest runs from the python/ directory or
+# the repo root.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import compile  # noqa: F401  (enables jax x64 before any kernel import)

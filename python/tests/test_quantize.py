@@ -1,0 +1,103 @@
+"""quantize/segsum Pallas kernel vs the scatter oracle (ref.py)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import quantize as qk
+from compile.kernels import ref
+
+
+class TestSegsum:
+    def test_basic(self):
+        codes = np.array([0, 1, 1, 3], dtype=np.int32)
+        x = np.array([1.0, 2.0, 3.0, 4.0])
+        y = np.array([10.0, 20.0, 30.0, 40.0])
+        vals = np.stack([np.ones(4), x, y, y * y], axis=1)
+        out = np.asarray(qk.segsum(codes, vals, num_slots=8))
+        expected = ref.segsum_ref(codes, x, y, 8)
+        np.testing.assert_allclose(out, expected)
+        assert out[1, 0] == 2.0 and out[1, 2] == 50.0
+
+    def test_out_of_range_dropped(self):
+        codes = np.array([-1, 0, 8, 100], dtype=np.int32)
+        x = np.ones(4)
+        y = np.ones(4)
+        vals = np.stack([np.ones(4), x, y, y * y], axis=1)
+        out = np.asarray(qk.segsum(codes, vals, num_slots=8))
+        assert out[:, 0].sum() == 1.0  # only code 0 lands
+
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        b=st.sampled_from([8, 128, 1024]),
+        s=st.sampled_from([16, 256]),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_matches_ref(self, seed, b, s):
+        rng = np.random.default_rng(seed)
+        codes = rng.integers(-3, s + 3, b).astype(np.int32)
+        x = rng.normal(0, 10, b)
+        y = rng.normal(-5, 100, b)
+        vals = np.stack([np.ones(b), x, y, y * y], axis=1)
+        out = np.asarray(qk.segsum(codes, vals, num_slots=s))
+        expected = ref.segsum_ref(codes, x, y, s)
+        scale = max(1.0, np.max(np.abs(y)) ** 2)
+        np.testing.assert_allclose(out, expected, rtol=1e-9, atol=1e-9 * scale)
+
+
+class TestQuantizeIngest:
+    def test_codes_match_floor(self):
+        x = np.array([-0.31, -0.01, 0.0, 0.09, 0.11, 1.0])
+        codes = ref.quantize_codes_ref(x, 0.1)
+        np.testing.assert_array_equal(codes, [-4, -1, 0, 0, 1, 10])
+
+    @given(seed=st.integers(0, 2**31 - 1), r=st.sampled_from([0.01, 0.1, 0.5, 2.0]))
+    @settings(max_examples=25, deadline=None)
+    def test_matches_ref(self, seed, r):
+        rng = np.random.default_rng(seed)
+        x = rng.normal(0, 1, qk.DEFAULT_B)
+        y = rng.normal(0, 3, qk.DEFAULT_B)
+        base, table = model.quantize_ingest(x, y, np.float64(r))
+        base_r, table_r = ref.quantize_ingest_ref(x, y, r, qk.DEFAULT_S)
+        assert int(base) == base_r
+        np.testing.assert_allclose(np.asarray(table), table_r, rtol=1e-9, atol=1e-9)
+
+    def test_total_mass_conserved(self):
+        """When the code range fits in S slots, every point is counted."""
+        rng = np.random.default_rng(0)
+        x = rng.uniform(-1, 1, qk.DEFAULT_B)
+        y = rng.normal(0, 1, qk.DEFAULT_B)
+        _, table = model.quantize_ingest(x, y, np.float64(0.05))  # 40 codes max
+        table = np.asarray(table)
+        assert table[:, 0].sum() == qk.DEFAULT_B
+        np.testing.assert_allclose(table[:, 1].sum(), x.sum(), rtol=1e-12)
+        np.testing.assert_allclose(table[:, 2].sum(), y.sum(), rtol=1e-12)
+
+
+class TestComposition:
+    """Alg. 1 -> Alg. 2 composed: batch-quantize raw data, then find the
+    best split — the full QO path on the XLA side."""
+
+    def test_step_function_recovered(self):
+        rng = np.random.default_rng(5)
+        x = rng.uniform(-1, 1, qk.DEFAULT_B)
+        y = np.where(x <= 0.25, -2.0, 2.0) + rng.normal(0, 0.05, qk.DEFAULT_B)
+        base, table = model.quantize_ingest(x, y, np.float64(0.05))
+        table = np.asarray(table)
+        occupied = table[:, 0] > 0
+        k = int(occupied.sum())
+        f, s = 8, 256
+        n = np.zeros((f, s))
+        sx = np.zeros((f, s))
+        mean = np.zeros((f, s))
+        m2 = np.zeros((f, s))
+        cnt = table[occupied, 0]
+        n[0, :k] = cnt
+        sx[0, :k] = table[occupied, 1]
+        mean[0, :k] = table[occupied, 2] / cnt
+        m2[0, :k] = np.maximum(table[occupied, 3] - table[occupied, 2] ** 2 / cnt, 0.0)
+        _, _, best_idx, best_vr, best_split = model.split_eval(n, sx, mean, m2)
+        c = float(np.asarray(best_split)[0])
+        assert abs(c - 0.25) < 0.05, c
+        assert float(np.asarray(best_vr)[0]) > 3.0

@@ -1,0 +1,139 @@
+"""Properties of the robust statistics oracle (paper Sec. 3, Eqs. 2-7).
+
+These pin down the math that BOTH the Pallas kernels and the rust
+`qostream::stats` module implement; the rust unit tests mirror them.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+finite = st.floats(-1e6, 1e6, allow_nan=False, allow_infinity=False)
+samples = st.lists(finite, min_size=1, max_size=200)
+
+
+def welford_of(values):
+    s = (0.0, 0.0, 0.0)
+    for v in values:
+        s = ref.welford_update(s, v)
+    return s
+
+
+class TestWelford:
+    def test_single_observation(self):
+        s = welford_of([3.5])
+        assert s == (1.0, 3.5, 0.0)
+
+    def test_mean_matches_numpy(self):
+        vals = [1.0, 2.0, 4.0, 8.0]
+        n, mean, m2 = welford_of(vals)
+        assert n == 4.0
+        np.testing.assert_allclose(mean, np.mean(vals))
+        np.testing.assert_allclose(m2 / (n - 1), np.var(vals, ddof=1))
+
+    @given(samples)
+    @settings(max_examples=150, deadline=None)
+    def test_matches_numpy_anywhere(self, vals):
+        n, mean, m2 = welford_of(vals)
+        scale = max(1.0, np.max(np.abs(vals)))
+        np.testing.assert_allclose(mean, np.mean(vals), rtol=1e-9, atol=1e-9 * scale)
+        if len(vals) > 1:
+            np.testing.assert_allclose(
+                m2 / (n - 1), np.var(vals, ddof=1), rtol=1e-7, atol=1e-7 * scale**2
+            )
+
+    def test_weighted_update(self):
+        # weight w is equivalent to w unit repeats
+        s_w = ref.welford_update((0.0, 0.0, 0.0), 5.0, w=3.0)
+        s_r = welford_of([5.0, 5.0, 5.0])
+        np.testing.assert_allclose(s_w, s_r)
+
+    def test_cancellation_robustness(self):
+        # The classic naive-sum failure: huge offset, tiny variance.
+        # Naive sum-of-squares loses all signal in f64; Welford keeps it.
+        offset = 1e9
+        vals = [offset + v for v in (0.0, 0.1, 0.2, 0.3)]
+        n, mean, m2 = welford_of(vals)
+        np.testing.assert_allclose(m2 / (n - 1), np.var(vals, ddof=1), rtol=1e-4)
+        # and the reference variance is ~0.0167, not 0 or garbage
+        assert 0.001 < m2 / (n - 1) < 0.1
+
+
+class TestChanMerge:
+    @given(samples, samples)
+    @settings(max_examples=150, deadline=None)
+    def test_merge_equals_concat(self, a, b):
+        merged = ref.chan_merge(welford_of(a), welford_of(b))
+        direct = welford_of(a + b)
+        scale = max(1.0, np.max(np.abs(a + b)))
+        np.testing.assert_allclose(merged[0], direct[0])
+        np.testing.assert_allclose(merged[1], direct[1], rtol=1e-9, atol=1e-9 * scale)
+        np.testing.assert_allclose(merged[2], direct[2], rtol=1e-6, atol=1e-6 * scale**2)
+
+    @given(samples, samples, samples)
+    @settings(max_examples=100, deadline=None)
+    def test_merge_associative(self, a, b, c):
+        sa, sb, sc = welford_of(a), welford_of(b), welford_of(c)
+        left = ref.chan_merge(ref.chan_merge(sa, sb), sc)
+        right = ref.chan_merge(sa, ref.chan_merge(sb, sc))
+        scale = max(1.0, np.max(np.abs(a + b + c)))
+        np.testing.assert_allclose(left, right, rtol=1e-8, atol=1e-8 * scale**2)
+
+    def test_merge_identity(self):
+        s = welford_of([1.0, 2.0])
+        assert ref.chan_merge(s, (0.0, 0.0, 0.0)) == s
+        assert ref.chan_merge((0.0, 0.0, 0.0), s) == s
+
+
+class TestChanSubtract:
+    @given(samples, samples)
+    @settings(max_examples=150, deadline=None)
+    def test_subtract_inverts_merge(self, a, b):
+        """The paper's extension: A = (A+B) - B (Eqs. 6-7)."""
+        sa, sb = welford_of(a), welford_of(b)
+        sab = ref.chan_merge(sa, sb)
+        recovered = ref.chan_subtract(sab, sb)
+        scale = max(1.0, np.max(np.abs(a + b)))
+        np.testing.assert_allclose(recovered[0], sa[0])
+        np.testing.assert_allclose(recovered[1], sa[1], rtol=1e-7, atol=1e-7 * scale)
+        np.testing.assert_allclose(recovered[2], sa[2], rtol=1e-5, atol=1e-5 * scale**2)
+
+    def test_subtract_to_empty(self):
+        s = welford_of([1.0, 2.0, 3.0])
+        assert ref.chan_subtract(s, s) == (0.0, 0.0, 0.0)
+
+    def test_m2_never_negative(self):
+        s = welford_of([1.0, 1.0])
+        out = ref.chan_subtract(s, welford_of([1.0]))
+        assert out[2] >= 0.0
+
+
+class TestVarianceReduction:
+    def test_perfect_split(self):
+        # Two well-separated clusters: splitting between them removes all
+        # variance; VR == total variance.
+        left = welford_of([0.0] * 10)
+        right = welford_of([10.0] * 10)
+        total = ref.chan_merge(left, right)
+        vr = ref.variance_reduction(total, left, right)
+        np.testing.assert_allclose(vr, ref.variance(total))
+
+    def test_useless_split(self):
+        # Identical halves: VR ~ 0 (slightly positive from the df change).
+        vals = [1.0, 2.0, 3.0, 4.0]
+        left = welford_of(vals)
+        right = welford_of(vals)
+        total = ref.chan_merge(left, right)
+        vr = ref.variance_reduction(total, left, right)
+        assert abs(vr) < ref.variance(total) * 0.2
+
+    @given(samples, samples)
+    @settings(max_examples=100, deadline=None)
+    def test_vr_bounded_by_total_variance(self, a, b):
+        la, lb = welford_of(a), welford_of(b)
+        total = ref.chan_merge(la, lb)
+        vr = ref.variance_reduction(total, la, lb)
+        scale = max(1.0, float(np.max(np.abs(a + b)))) ** 2
+        assert vr <= ref.variance(total) + 1e-7 * scale

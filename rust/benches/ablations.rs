@@ -1,0 +1,161 @@
+//! `cargo bench --bench ablations` — the design-choice ablations DESIGN.md
+//! calls out:
+//!
+//! 1. **Radius sweep** — the merit/memory/time trade-off as r varies
+//!    (paper Sec. 6.1: "the smaller the radius, the higher the merit;
+//!    the larger the radius, the smaller the runtime and memory").
+//! 2. **Robust vs naive variance** — the Sec. 3 motivation: catastrophic
+//!    cancellation of the Σy² estimator under a large target offset.
+//! 3. **Insertion-cost crossover** — observe-time per element for QO
+//!    (O(1)) vs E-BST (O(log n)) as the sample grows.
+
+use qostream::common::table::{fnum, Table};
+use qostream::common::timing::human_time;
+use qostream::common::Rng;
+use qostream::criterion::VarianceReduction;
+use qostream::observer::{AttributeObserver, EBst, QuantizationObserver};
+use qostream::stats::{NaiveVarStats, VarStats};
+use std::time::Instant;
+
+fn radius_sweep() {
+    println!("== ablation 1: quantization radius sweep (N(0,1) feature, y = x^3, n=100k) ==");
+    let mut rng = Rng::new(1);
+    let sample: Vec<(f64, f64)> = (0..100_000)
+        .map(|_| {
+            let x = rng.normal(0.0, 1.0);
+            (x, x * x * x + rng.normal(0.0, 0.05))
+        })
+        .collect();
+    // exhaustive merit for reference
+    let mut ebst = EBst::new();
+    for &(x, y) in &sample {
+        ebst.observe(x, y, 1.0);
+    }
+    let merit_ref = ebst.best_split(&VarianceReduction).unwrap().merit;
+
+    let mut table =
+        Table::new(vec!["radius", "slots", "merit", "merit/exact", "observe", "query"]);
+    for &r in &[2.0, 1.0, 0.5, 0.25, 0.1, 0.05, 0.01, 0.005, 0.001] {
+        let mut qo = QuantizationObserver::with_radius(r);
+        let t0 = Instant::now();
+        for &(x, y) in &sample {
+            qo.observe(x, y, 1.0);
+        }
+        let observe = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let split = qo.best_split(&VarianceReduction).unwrap();
+        let query = t0.elapsed().as_secs_f64();
+        table.row(vec![
+            format!("{r}"),
+            qo.n_elements().to_string(),
+            fnum(split.merit),
+            format!("{:.4}", split.merit / merit_ref),
+            human_time(observe),
+            human_time(query),
+        ]);
+    }
+    println!("{}", table.render());
+}
+
+fn variance_robustness() {
+    println!("== ablation 2: robust (Welford/Chan) vs naive (sum-of-squares) variance ==");
+    let mut table = Table::new(vec!["offset", "true var", "robust err", "naive err"]);
+    let mut rng = Rng::new(2);
+    for &offset in &[0.0, 1e3, 1e6, 1e8, 1e9] {
+        let ys: Vec<f64> = (0..10_000).map(|_| offset + rng.normal(0.0, 0.1)).collect();
+        let mean = ys.iter().sum::<f64>() / ys.len() as f64;
+        let true_var =
+            ys.iter().map(|y| (y - mean) * (y - mean)).sum::<f64>() / (ys.len() - 1) as f64;
+        let mut robust = VarStats::new();
+        let mut naive = NaiveVarStats::new();
+        for &y in &ys {
+            robust.update(y, 1.0);
+            naive.update(y, 1.0);
+        }
+        let rerr = (robust.variance() - true_var).abs() / true_var;
+        let nerr = (naive.variance() - true_var).abs() / true_var;
+        table.row(vec![
+            format!("{offset:.0e}"),
+            fnum(true_var),
+            format!("{rerr:.2e}"),
+            format!("{nerr:.2e}"),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("(the naive estimator the original E-BST used loses ALL precision at 1e8+;\n the Sec. 3 robust estimators hold at ~1e-9 relative error)\n");
+}
+
+fn insertion_crossover() {
+    println!("== ablation 3: per-element observation cost, QO O(1) vs E-BST O(log n) ==");
+    let mut table = Table::new(vec!["n", "QO ns/insert", "E-BST ns/insert", "ratio"]);
+    for &n in &[1_000usize, 10_000, 100_000, 1_000_000] {
+        let mut rng = Rng::new(3);
+        let sample: Vec<(f64, f64)> =
+            (0..n).map(|_| (rng.normal(0.0, 1.0), rng.normal(0.0, 1.0))).collect();
+        let mut qo = QuantizationObserver::with_radius(0.05);
+        let t0 = Instant::now();
+        for &(x, y) in &sample {
+            qo.observe(x, y, 1.0);
+        }
+        let qo_ns = t0.elapsed().as_secs_f64() * 1e9 / n as f64;
+        let mut ebst = EBst::new();
+        let t0 = Instant::now();
+        for &(x, y) in &sample {
+            ebst.observe(x, y, 1.0);
+        }
+        let ebst_ns = t0.elapsed().as_secs_f64() * 1e9 / n as f64;
+        table.row(vec![
+            n.to_string(),
+            format!("{qo_ns:.1}"),
+            format!("{ebst_ns:.1}"),
+            format!("{:.2}x", ebst_ns / qo_ns),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("(QO's per-insert cost is flat; E-BST's grows with log n — the paper's\n headline complexity claim, measured)\n");
+}
+
+fn split_strategy() {
+    use qostream::observer::qo::SplitPointStrategy;
+    use qostream::observer::ExhaustiveObserver;
+    println!("== ablation 4: split-point strategy (prototype midpoint vs grid boundary) ==");
+    println!("(paper Sec. 4: 'other strategies could also be employed')");
+    let mut table = Table::new(vec!["radius", "|proto - exact|", "|grid - exact|"]);
+    let mut rng = Rng::new(4);
+    let sample: Vec<(f64, f64)> = (0..50_000)
+        .map(|_| {
+            let x = rng.normal(0.0, 1.0);
+            (x, x * x * x + rng.normal(0.0, 0.05))
+        })
+        .collect();
+    let mut oracle = ExhaustiveObserver::new();
+    for &(x, y) in &sample {
+        oracle.observe(x, y, 1.0);
+    }
+    let exact = oracle.best_split(&VarianceReduction).unwrap().threshold;
+    for &r in &[0.5, 0.1, 0.02] {
+        let mut proto = QuantizationObserver::with_radius(r);
+        let mut grid = QuantizationObserver::with_radius(r)
+            .with_strategy(SplitPointStrategy::GridBoundary);
+        for &(x, y) in &sample {
+            proto.observe(x, y, 1.0);
+            grid.observe(x, y, 1.0);
+        }
+        let tp = proto.best_split(&VarianceReduction).unwrap().threshold;
+        let tg = grid.best_split(&VarianceReduction).unwrap().threshold;
+        table.row(vec![
+            format!("{r}"),
+            format!("{:.5}", (tp - exact).abs()),
+            format!("{:.5}", (tg - exact).abs()),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("(prototype midpoints track the data inside the bucket; grid boundaries\n are data-independent — the accuracy gap is why the paper pays for sum_x)\n");
+}
+
+fn main() {
+    radius_sweep();
+    variance_robustness();
+    insertion_crossover();
+    split_strategy();
+}

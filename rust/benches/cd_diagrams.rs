@@ -1,0 +1,13 @@
+//! `cargo bench --bench cd_diagrams` — regenerates the paper's Figures 2,
+//! 4, 5 and 6: Friedman tests + Nemenyi critical-difference diagrams over
+//! the protocol grid for merit, elements, observation time and query time.
+
+use qostream::bench_suite::{cd, Profile, Protocol};
+
+fn main() {
+    let protocol = Protocol::new(Profile::Quick);
+    eprintln!("cd_diagrams: {}", protocol.describe());
+    let rendered = cd::generate(&protocol, true).expect("cd");
+    println!("{rendered}");
+    println!("full data written to results/cd/");
+}

@@ -1,0 +1,14 @@
+//! `cargo bench --bench fig1_sweep` — regenerates the paper's Figure 1
+//! (VR, stored elements, observation time, query time vs sample size) on
+//! the quick profile. Use the CLI (`qostream fig1 --profile standard|full`)
+//! for the larger grids.
+
+use qostream::bench_suite::{fig1, Profile, Protocol};
+
+fn main() {
+    let protocol = Protocol::new(Profile::Quick);
+    eprintln!("fig1_sweep: {}", protocol.describe());
+    let rendered = fig1::generate(&protocol, true).expect("fig1");
+    println!("{rendered}");
+    println!("full data written to results/fig1/");
+}

@@ -1,0 +1,12 @@
+//! `cargo bench --bench fig3_splitdiff` — regenerates the paper's Figure 3
+//! (average |split − E-BST split| per observer vs sample size).
+
+use qostream::bench_suite::{fig3, Profile, Protocol};
+
+fn main() {
+    let protocol = Protocol::new(Profile::Quick);
+    eprintln!("fig3_splitdiff: {}", protocol.describe());
+    let rendered = fig3::generate(&protocol, true).expect("fig3");
+    println!("{rendered}");
+    println!("full data written to results/fig3/");
+}

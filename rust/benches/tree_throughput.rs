@@ -1,0 +1,11 @@
+//! `cargo bench --bench tree_throughput` — the Sec. 7 integration bench:
+//! Hoeffding trees with each observer on Friedman #1, reporting prequential
+//! accuracy, throughput and stored elements.
+
+use qostream::bench_suite::tree_bench;
+
+fn main() {
+    let rendered = tree_bench::generate(30_000, 1).expect("tree bench");
+    println!("{rendered}");
+    println!("full data written to results/tree/");
+}

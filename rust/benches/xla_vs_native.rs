@@ -1,0 +1,72 @@
+//! `cargo bench --bench xla_vs_native` — stack-composition benchmark:
+//! split-candidate evaluation through the AOT JAX/Pallas artifact on PJRT
+//! vs the native rust query path, across slot counts and feature batches.
+//!
+//! Skips (with a message) when `artifacts/` is missing.
+
+use qostream::common::timing::{bench, human_time};
+use qostream::common::Rng;
+use qostream::criterion::VarianceReduction;
+use qostream::observer::{AttributeObserver, QuantizationObserver};
+use qostream::runtime::{find_artifacts_dir, Manifest, SlotTable, XlaSplitEngine};
+
+fn observers_with_slots(target_slots: usize, n_obs: usize) -> Vec<QuantizationObserver> {
+    // radius tuned so a N(0,1) sample lands in ~target_slots buckets
+    let radius = 6.0 / target_slots as f64;
+    let mut rng = Rng::new(11);
+    (0..n_obs)
+        .map(|_| {
+            let mut qo = QuantizationObserver::with_radius(radius);
+            for _ in 0..20_000 {
+                let x = rng.normal(0.0, 1.0);
+                qo.observe(x, x * x + rng.normal(0.0, 0.1), 1.0);
+            }
+            qo
+        })
+        .collect()
+}
+
+fn main() {
+    let Ok(dir) = find_artifacts_dir() else {
+        println!("xla_vs_native: artifacts/ missing — run `make artifacts` first (skipped)");
+        return;
+    };
+    let manifest = Manifest::load(&dir).expect("manifest");
+    let client = xla::PjRtClient::cpu().expect("pjrt");
+    let engine = XlaSplitEngine::load(&client, &manifest).expect("engine");
+    println!("engine F={} S={}\n", engine.f, engine.s);
+    println!(
+        "{:>8} {:>10} {:>14} {:>14} {:>10}",
+        "slots", "features", "xla/call", "native/call", "xla/native"
+    );
+    for &slots in &[16usize, 64, 200] {
+        let observers = observers_with_slots(slots, engine.f);
+        let tables: Vec<SlotTable> = observers.iter().map(SlotTable::from_qo).collect();
+        let actual_slots = tables[0].len();
+
+        let xla_stats = bench(3, 30, || engine.best_splits(&tables).unwrap());
+        let native_stats = bench(3, 30, || {
+            observers
+                .iter()
+                .map(|qo| qo.best_split(&VarianceReduction))
+                .collect::<Vec<_>>()
+        });
+        println!(
+            "{:>8} {:>10} {:>14} {:>14} {:>9.1}x",
+            actual_slots,
+            engine.f,
+            human_time(xla_stats.mean),
+            human_time(native_stats.mean),
+            xla_stats.mean / native_stats.mean
+        );
+
+        // correctness spot-check on every run
+        let xla_res = engine.best_splits(&tables).unwrap();
+        for (qo, res) in observers.iter().zip(&xla_res) {
+            let native = qo.best_split(&VarianceReduction).unwrap();
+            assert!((res.unwrap().threshold - native.threshold).abs() < 1e-9);
+        }
+    }
+    println!("\n(the XLA path amortizes across the feature batch; the native path");
+    println!(" wins on tiny tables — crossover analysis in EXPERIMENTS.md)");
+}

@@ -1,0 +1,201 @@
+//! Figures 2, 4, 5, 6: Friedman + Nemenyi critical-difference analysis of
+//! the four metrics over the protocol grid (α = 0.05, as in the paper).
+//!
+//! Each (size, distribution, task, noise) combination is one "dataset";
+//! repetitions are averaged before ranking (paper Sec. 5.1/6).
+
+use std::collections::BTreeMap;
+
+use crate::common::table::Table;
+use crate::observer::paper_lineup;
+use crate::stats::friedman::friedman_test;
+use crate::stats::nemenyi::{nemenyi, render_cd_diagram};
+
+use super::protocol::Protocol;
+use super::report::Report;
+use super::runner::CellResult;
+
+/// The four CD metrics and their ranking direction.
+/// merit: higher is better; the other three: lower is better.
+pub const CD_METRICS: &[(&str, bool)] = &[
+    ("merit", false),
+    ("elements", true),
+    ("observe", true),
+    ("query", true),
+];
+
+fn metric_of(name: &str, r: &CellResult) -> f64 {
+    match name {
+        "merit" => r.merit,
+        "elements" => r.elements as f64,
+        "observe" => r.observe_seconds,
+        "query" => r.query_seconds,
+        _ => panic!("unknown metric {name}"),
+    }
+}
+
+/// Build the (dataset × algorithm) measurement matrix for a metric,
+/// averaging repetitions.
+pub fn measurement_matrix(
+    results: &[CellResult],
+    metric: &str,
+    observers: &[String],
+) -> Vec<Vec<f64>> {
+    // dataset -> observer -> (sum, n)
+    let mut acc: BTreeMap<String, BTreeMap<String, (f64, usize)>> = BTreeMap::new();
+    for r in results {
+        let e = acc
+            .entry(r.dataset_key.clone())
+            .or_default()
+            .entry(r.observer.clone())
+            .or_insert((0.0, 0));
+        e.0 += metric_of(metric, r);
+        e.1 += 1;
+    }
+    acc.values()
+        .filter(|per_obs| observers.iter().all(|o| per_obs.contains_key(o)))
+        .map(|per_obs| {
+            observers
+                .iter()
+                .map(|o| {
+                    let (s, n) = per_obs[o];
+                    s / n as f64
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// The paper figure number for each metric's CD diagram.
+fn figure_of(metric: &str) -> &'static str {
+    match metric {
+        "merit" => "Figure 2",
+        "elements" => "Figure 4",
+        "observe" => "Figure 5",
+        "query" => "Figure 6",
+        _ => "?",
+    }
+}
+
+/// Run the CD analysis for one metric over precomputed results.
+pub fn analyze(results: &[CellResult], metric: &str) -> anyhow::Result<String> {
+    let observers: Vec<String> = paper_lineup().iter().map(|f| f.name()).collect();
+    let (_, lower_better) = CD_METRICS
+        .iter()
+        .find(|(m, _)| *m == metric)
+        .ok_or_else(|| anyhow::anyhow!("unknown metric {metric}"))?;
+    let matrix = measurement_matrix(results, metric, &observers);
+    anyhow::ensure!(matrix.len() >= 2, "need >= 2 datasets, got {}", matrix.len());
+    let fr = friedman_test(&matrix, *lower_better);
+    let ne = nemenyi(&fr, 0.05);
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{} — Friedman/Nemenyi on {metric} ({} datasets, {} algorithms)\n",
+        figure_of(metric),
+        fr.n_datasets,
+        fr.n_algorithms
+    ));
+    out.push_str(&format!(
+        "chi2_F = {:.3} (p = {:.3e}); F_F = {:.3} (p = {:.3e}); {}\n",
+        fr.chi2,
+        fr.p_chi2,
+        fr.f_stat,
+        fr.p_f,
+        if fr.significant(0.05) { "SIGNIFICANT at a=0.05" } else { "not significant" }
+    ));
+    out.push_str(&render_cd_diagram(&observers, &ne));
+
+    let mut table = Table::new(vec!["observer", "avg_rank"]);
+    let mut order: Vec<usize> = (0..observers.len()).collect();
+    order.sort_by(|&a, &b| fr.avg_ranks[a].partial_cmp(&fr.avg_ranks[b]).unwrap());
+    for i in order {
+        table.row(vec![observers[i].clone(), format!("{:.4}", fr.avg_ranks[i])]);
+    }
+    out.push_str(&table.render());
+    Ok(out)
+}
+
+/// Generate all four CD diagrams and write `results/cd/`.
+pub fn generate(protocol: &Protocol, progress: bool) -> anyhow::Result<String> {
+    let results = super::fig1::run_protocol(protocol, progress);
+    let report = Report::create("cd")?;
+    let mut all = String::new();
+    for (metric, _) in CD_METRICS {
+        let text = analyze(&results, metric)?;
+        report.write_text(&format!("{metric}.txt"), &text)?;
+        all.push_str(&text);
+        all.push('\n');
+    }
+    report.write_text("all.txt", &all)?;
+    Ok(all)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::protocol::Profile;
+    use crate::bench_suite::runner::run_cell;
+
+    fn small_results() -> Vec<CellResult> {
+        let protocol =
+            Protocol::new(Profile::Quick).with_sizes(vec![500, 1000]).with_repetitions(2);
+        let lineup = paper_lineup();
+        let mut out = Vec::new();
+        for cell in protocol.cells() {
+            for fac in &lineup {
+                out.push(run_cell(fac.as_ref(), &cell));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn matrix_shape_and_rep_averaging() {
+        let results = small_results();
+        let observers: Vec<String> = paper_lineup().iter().map(|f| f.name()).collect();
+        let m = measurement_matrix(&results, "elements", &observers);
+        // 2 sizes x 9 dists x 2 targets x 2 noise = 72 datasets
+        assert_eq!(m.len(), 72);
+        assert!(m.iter().all(|row| row.len() == 5));
+    }
+
+    #[test]
+    fn element_ranks_match_paper_fig4_order() {
+        // Fig 4: QO_s2 best rank, then QO_s3, QO_0.01, TE-BST, E-BST worst
+        let results = small_results();
+        let observers: Vec<String> = paper_lineup().iter().map(|f| f.name()).collect();
+        let m = measurement_matrix(&results, "elements", &observers);
+        let fr = friedman_test(&m, true);
+        let rank = |name: &str| {
+            fr.avg_ranks[observers.iter().position(|o| o == name).unwrap()]
+        };
+        assert!(rank("QO_s2") < rank("QO_0.01"), "{:?}", fr.avg_ranks);
+        assert!(rank("QO_0.01") < rank("TE-BST"), "{:?}", fr.avg_ranks);
+        assert!(rank("TE-BST") < rank("E-BST"), "{:?}", fr.avg_ranks);
+        assert!(fr.significant(0.05));
+    }
+
+    #[test]
+    fn merit_ranks_favor_exhaustive_methods() {
+        // Fig 2: E-BST & TE-BST rank above the QO variants on merit
+        let results = small_results();
+        let observers: Vec<String> = paper_lineup().iter().map(|f| f.name()).collect();
+        let m = measurement_matrix(&results, "merit", &observers);
+        let fr = friedman_test(&m, false);
+        let rank = |name: &str| {
+            fr.avg_ranks[observers.iter().position(|o| o == name).unwrap()]
+        };
+        assert!(rank("E-BST") < rank("QO_s2"), "{:?}", fr.avg_ranks);
+        assert!(rank("TE-BST") < rank("QO_s2"), "{:?}", fr.avg_ranks);
+    }
+
+    #[test]
+    fn analyze_renders_diagram() {
+        let results = small_results();
+        let text = analyze(&results, "query").unwrap();
+        assert!(text.contains("Figure 6"));
+        assert!(text.contains("CD ="));
+        assert!(text.contains("avg_rank"));
+    }
+}

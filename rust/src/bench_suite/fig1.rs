@@ -1,0 +1,207 @@
+//! Figure 1: per-task (lin/cub) averages of the four metrics vs sample
+//! size, one series per attribute observer — the paper's headline chart.
+
+use std::collections::BTreeMap;
+
+use crate::common::json::Json;
+use crate::common::plot::{render_chart, Series};
+use crate::common::table::{fnum, Table};
+use crate::observer::paper_lineup;
+
+use super::protocol::Protocol;
+use super::report::Report;
+use super::runner::{cell_sample, run_cell_on_sample, CellResult};
+
+/// All raw cell results for the protocol × the paper's observer lineup.
+pub fn run_protocol(protocol: &Protocol, progress: bool) -> Vec<CellResult> {
+    let lineup = paper_lineup();
+    let cells = protocol.cells();
+    let mut results = Vec::with_capacity(cells.len() * lineup.len());
+    for (i, cell) in cells.iter().enumerate() {
+        // generate once, share across observers (paper: same sample per AO)
+        let sample = cell_sample(cell);
+        for fac in &lineup {
+            results.push(run_cell_on_sample(fac.as_ref(), cell, &sample));
+        }
+        if progress && (i + 1) % 200 == 0 {
+            eprintln!("  fig1: {}/{} cells", i + 1, cells.len());
+        }
+    }
+    results
+}
+
+/// (task, observer, size) -> mean metric value.
+type SeriesMap = BTreeMap<(String, String, usize), (f64, usize)>;
+
+fn accumulate(results: &[CellResult], metric: impl Fn(&CellResult) -> f64) -> SeriesMap {
+    let mut map: SeriesMap = BTreeMap::new();
+    for r in results {
+        let key = (r.task.to_string(), r.observer.clone(), r.size);
+        let entry = map.entry(key).or_insert((0.0, 0));
+        entry.0 += metric(r);
+        entry.1 += 1;
+    }
+    map
+}
+
+/// The four Figure 1 metric rows.
+pub const METRICS: &[(&str, bool)] = &[
+    // (name, log-scale-y like the paper's lower three rows)
+    ("vr", false),
+    ("elements", true),
+    ("observe_s", true),
+    ("query_s", true),
+];
+
+fn metric_value(name: &str, r: &CellResult) -> f64 {
+    match name {
+        "vr" => r.merit,
+        "elements" => r.elements as f64,
+        "observe_s" => r.observe_seconds,
+        "query_s" => r.query_seconds,
+        _ => unreachable!(),
+    }
+}
+
+/// Render Figure 1 and write `results/fig1/`.
+pub fn generate(protocol: &Protocol, progress: bool) -> anyhow::Result<String> {
+    let results = run_protocol(protocol, progress);
+    let report = Report::create("fig1")?;
+    let mut rendered = String::new();
+
+    // raw dump for external plotting
+    let mut raw = Table::new(vec![
+        "observer", "dataset", "size", "task", "rep", "vr", "split", "elements", "observe_s",
+        "query_s",
+    ]);
+    for r in &results {
+        raw.row(vec![
+            r.observer.clone(),
+            r.dataset_key.clone(),
+            r.size.to_string(),
+            r.task.to_string(),
+            r.repetition.to_string(),
+            format!("{:.6e}", r.merit),
+            format!("{:.6e}", r.split_point),
+            r.elements.to_string(),
+            format!("{:.6e}", r.observe_seconds),
+            format!("{:.6e}", r.query_seconds),
+        ]);
+    }
+    report.write_text("raw.csv", &raw.to_csv())?;
+
+    let observers: Vec<String> = paper_lineup().iter().map(|f| f.name()).collect();
+    for task in ["lin", "cub"] {
+        for &(metric, log_y) in METRICS {
+            let acc = accumulate(&results, |r| metric_value(metric, r));
+            let mut series_list = Vec::new();
+            let mut table = Table::new({
+                let mut h = vec!["size".to_string()];
+                h.extend(observers.iter().cloned());
+                h
+            });
+            let sizes: Vec<usize> = {
+                let mut s: Vec<usize> = acc
+                    .keys()
+                    .filter(|(t, _, _)| t == task)
+                    .map(|(_, _, size)| *size)
+                    .collect();
+                s.sort_unstable();
+                s.dedup();
+                s
+            };
+            for ao in &observers {
+                let mut series = Series::new(ao.clone());
+                for &size in &sizes {
+                    if let Some((sum, count)) =
+                        acc.get(&(task.to_string(), ao.clone(), size))
+                    {
+                        series.push(size as f64, sum / *count as f64);
+                    }
+                }
+                series_list.push(series);
+            }
+            for &size in &sizes {
+                let mut row = vec![size.to_string()];
+                for ao in &observers {
+                    let v = acc
+                        .get(&(task.to_string(), ao.clone(), size))
+                        .map(|(s, c)| s / *c as f64)
+                        .unwrap_or(f64::NAN);
+                    row.push(fnum(v));
+                }
+                table.row(row);
+            }
+            let title = format!("Figure 1 [{task}] {metric} vs sample size");
+            let chart = render_chart(&title, &series_list, 64, 14, true, log_y);
+            rendered.push_str(&chart);
+            rendered.push('\n');
+            report.write_table(&format!("{task}_{metric}"), &table)?;
+        }
+    }
+    report.write_text("charts.txt", &rendered)?;
+
+    // summary JSON
+    let mut j = Json::obj();
+    j.set("cells", results.len() / observers.len());
+    j.set("observers", observers.clone());
+    report.write_json("meta.json", &j)?;
+    Ok(rendered)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::protocol::{Cell, Profile};
+    use crate::stream::synth::{Distribution, TargetFn};
+
+    #[test]
+    fn accumulate_means_by_key() {
+        let mk = |observer: &str, size: usize, merit: f64| CellResult {
+            observer: observer.into(),
+            dataset_key: "d".into(),
+            size,
+            task: "lin",
+            repetition: 0,
+            merit,
+            split_point: 0.0,
+            elements: 1,
+            observe_seconds: 0.0,
+            query_seconds: 0.0,
+        };
+        let rs = vec![mk("a", 100, 1.0), mk("a", 100, 3.0), mk("a", 200, 5.0)];
+        let acc = accumulate(&rs, |r| r.merit);
+        let (sum, count) = acc[&("lin".to_string(), "a".to_string(), 100)];
+        assert_eq!((sum, count), (4.0, 2));
+        let (sum, count) = acc[&("lin".to_string(), "a".to_string(), 200)];
+        assert_eq!((sum, count), (5.0, 1));
+    }
+
+    #[test]
+    fn tiny_protocol_generates_report() {
+        let protocol = Protocol::new(Profile::Quick)
+            .with_sizes(vec![100])
+            .with_repetitions(1);
+        let rendered = generate(&protocol, false).unwrap();
+        assert!(rendered.contains("Figure 1 [lin] vr"));
+        assert!(rendered.contains("Figure 1 [cub] query_s"));
+        assert!(std::path::Path::new("results/fig1/raw.csv").exists());
+    }
+
+    #[test]
+    fn cell_results_cover_all_observers() {
+        let protocol = Protocol::new(Profile::Quick)
+            .with_sizes(vec![50])
+            .with_repetitions(1);
+        let results = run_protocol(&protocol, false);
+        let cells = protocol.cells().len();
+        assert_eq!(results.len(), cells * 5);
+        let _ = Cell {
+            size: 50,
+            dist: Distribution::Normal { mu: 0.0, sigma: 1.0 },
+            target: TargetFn::Linear,
+            noise_fraction: 0.0,
+            repetition: 0,
+        };
+    }
+}

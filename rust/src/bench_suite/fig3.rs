@@ -1,0 +1,137 @@
+//! Figure 3: average absolute difference between each observer's chosen
+//! split point and E-BST's, per task and sample size — how close the
+//! approximate observers land to the exact search.
+
+use std::collections::BTreeMap;
+
+use crate::common::plot::{render_chart, Series};
+use crate::common::table::{fnum, Table};
+use crate::observer::paper_lineup;
+
+use super::protocol::Protocol;
+use super::report::Report;
+use super::runner::{cell_sample, run_cell_on_sample};
+
+/// (task, observer, size) -> (Σ|c − c_ebst|, count)
+type DiffMap = BTreeMap<(String, String, usize), (f64, usize)>;
+
+/// Compute the split-point differences across a protocol.
+pub fn run_diffs(protocol: &Protocol, progress: bool) -> DiffMap {
+    let lineup = paper_lineup();
+    let mut map: DiffMap = BTreeMap::new();
+    let cells = protocol.cells();
+    for (i, cell) in cells.iter().enumerate() {
+        let sample = cell_sample(cell);
+        let reference = run_cell_on_sample(lineup[0].as_ref(), cell, &sample); // E-BST
+        if !reference.split_point.is_finite() {
+            continue;
+        }
+        for fac in lineup.iter().skip(1) {
+            let r = run_cell_on_sample(fac.as_ref(), cell, &sample);
+            if !r.split_point.is_finite() {
+                continue;
+            }
+            let key = (r.task.to_string(), r.observer.clone(), r.size);
+            let e = map.entry(key).or_insert((0.0, 0));
+            e.0 += (r.split_point - reference.split_point).abs();
+            e.1 += 1;
+        }
+        if progress && (i + 1) % 200 == 0 {
+            eprintln!("  fig3: {}/{} cells", i + 1, cells.len());
+        }
+    }
+    map
+}
+
+/// Render Figure 3 and write `results/fig3/`.
+pub fn generate(protocol: &Protocol, progress: bool) -> anyhow::Result<String> {
+    let map = run_diffs(protocol, progress);
+    let report = Report::create("fig3")?;
+    let observers: Vec<String> =
+        paper_lineup().iter().skip(1).map(|f| f.name()).collect();
+    let mut rendered = String::new();
+    for task in ["lin", "cub"] {
+        let sizes: Vec<usize> = {
+            let mut s: Vec<usize> =
+                map.keys().filter(|(t, _, _)| t == task).map(|(_, _, z)| *z).collect();
+            s.sort_unstable();
+            s.dedup();
+            s
+        };
+        let mut table = Table::new({
+            let mut h = vec!["size".to_string()];
+            h.extend(observers.iter().cloned());
+            h
+        });
+        let mut series_list = Vec::new();
+        for ao in &observers {
+            let mut series = Series::new(ao.clone());
+            for &size in &sizes {
+                if let Some((sum, n)) = map.get(&(task.to_string(), ao.clone(), size)) {
+                    series.push(size as f64, sum / *n as f64);
+                }
+            }
+            series_list.push(series);
+        }
+        for &size in &sizes {
+            let mut row = vec![size.to_string()];
+            for ao in &observers {
+                let v = map
+                    .get(&(task.to_string(), ao.clone(), size))
+                    .map(|(s, n)| s / *n as f64)
+                    .unwrap_or(f64::NAN);
+                row.push(fnum(v));
+            }
+            table.row(row);
+        }
+        let title = format!("Figure 3 [{task}] |split - E-BST split| vs sample size");
+        rendered.push_str(&render_chart(&title, &series_list, 64, 12, true, true));
+        rendered.push('\n');
+        report.write_table(&format!("{task}_splitdiff"), &table)?;
+    }
+    report.write_text("charts.txt", &rendered)?;
+    Ok(rendered)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_suite::protocol::Profile;
+
+    #[test]
+    fn diffs_shrink_with_radius() {
+        // On the standard-scale settings QO_0.01 must land closer to
+        // E-BST than QO_s2 on average (paper Sec. 6.1 / Fig 3).
+        let protocol =
+            Protocol::new(Profile::Quick).with_sizes(vec![2500]).with_repetitions(2);
+        let map = run_diffs(&protocol, false);
+        let avg = |ao: &str| -> f64 {
+            let mut sum = 0.0;
+            let mut n = 0usize;
+            for ((_, a, _), (s, c)) in &map {
+                if a == ao {
+                    sum += s;
+                    n += c;
+                }
+            }
+            sum / n as f64
+        };
+        let d_fixed = avg("QO_0.01");
+        let d_s2 = avg("QO_s2");
+        assert!(
+            d_fixed < d_s2,
+            "QO_0.01 diff {d_fixed} should be < QO_s2 diff {d_s2}"
+        );
+        // and TE-BST is nearly exact
+        assert!(avg("TE-BST") < d_fixed.max(1e-4), "tebst={}", avg("TE-BST"));
+    }
+
+    #[test]
+    fn generate_writes_report() {
+        let protocol =
+            Protocol::new(Profile::Quick).with_sizes(vec![200]).with_repetitions(1);
+        let rendered = generate(&protocol, false).unwrap();
+        assert!(rendered.contains("Figure 3 [lin]"));
+        assert!(std::path::Path::new("results/fig3/lin_splitdiff.csv").exists());
+    }
+}

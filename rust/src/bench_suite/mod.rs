@@ -1,0 +1,27 @@
+//! The paper's evaluation, regenerated.
+//!
+//! DESIGN.md §3 maps every table and figure to a module here:
+//!
+//! | Paper artifact | Module | CLI |
+//! |---|---|---|
+//! | Table 1 protocol | [`protocol`] | `qostream protocol --describe` |
+//! | Figure 1 (VR / elements / observe / query vs size) | [`fig1`] | `qostream fig1` |
+//! | Figure 2 (CD on merit) | [`cd`] | `qostream cd --metric merit` |
+//! | Figure 3 (split-point diff vs E-BST) | [`fig3`] | `qostream fig3` |
+//! | Figure 4 (CD on elements) | [`cd`] | `qostream cd --metric elements` |
+//! | Figure 5 (CD on observe time) | [`cd`] | `qostream cd --metric observe` |
+//! | Figure 6 (CD on query time) | [`cd`] | `qostream cd --metric query` |
+//! | Sec. 7 tree integration | [`tree_bench`] | `qostream tree` |
+//!
+//! Results (CSV + JSON + ASCII charts) are written under `results/`.
+
+pub mod cd;
+pub mod fig1;
+pub mod fig3;
+pub mod protocol;
+pub mod report;
+pub mod runner;
+pub mod tree_bench;
+
+pub use protocol::{Cell, Profile, Protocol};
+pub use runner::{run_cell, CellResult};

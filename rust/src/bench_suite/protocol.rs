@@ -1,0 +1,202 @@
+//! The simulation protocol of the paper's Table 1: the cross product of
+//! sample sizes × sampling distributions × target functions × noise
+//! settings × repetitions.
+
+use crate::stream::synth::{Distribution, NoiseSpec, TargetFn};
+
+/// The paper's 19 sample sizes.
+pub const PAPER_SIZES: &[usize] = &[
+    50, 100, 200, 400, 500, 750, 1000, 2500, 5000, 7000, 10_000, 15_000, 25_000, 50_000, 75_000,
+    100_000, 200_000, 500_000, 1_000_000,
+];
+
+/// How much of the grid to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Profile {
+    /// Everything in Table 1 (hours of wall-clock on one core).
+    Full,
+    /// Sizes up to 50k, 5 repetitions — preserves every qualitative
+    /// comparison at ~1% of the cost. Default for `qostream`.
+    Standard,
+    /// Sizes up to 5k, 2 repetitions — smoke profile for `cargo bench`.
+    Quick,
+}
+
+impl Profile {
+    pub fn sizes(&self) -> Vec<usize> {
+        match self {
+            Profile::Full => PAPER_SIZES.to_vec(),
+            Profile::Standard => PAPER_SIZES.iter().copied().filter(|&s| s <= 50_000).collect(),
+            Profile::Quick => PAPER_SIZES.iter().copied().filter(|&s| s <= 5_000).collect(),
+        }
+    }
+
+    pub fn repetitions(&self) -> usize {
+        match self {
+            Profile::Full => 10,
+            Profile::Standard => 5,
+            Profile::Quick => 2,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Profile> {
+        match s {
+            "full" => Some(Profile::Full),
+            "standard" => Some(Profile::Standard),
+            "quick" => Some(Profile::Quick),
+            _ => None,
+        }
+    }
+}
+
+/// One experimental cell: a fully specified sample generation setting.
+#[derive(Clone, Copy, Debug)]
+pub struct Cell {
+    pub size: usize,
+    pub dist: Distribution,
+    pub target: TargetFn,
+    pub noise_fraction: f64,
+    pub repetition: usize,
+}
+
+impl Cell {
+    pub fn noise(&self) -> NoiseSpec {
+        NoiseSpec::for_distribution(&self.dist, self.noise_fraction)
+    }
+
+    /// Deterministic seed: every (cell, repetition) gets its own stream.
+    pub fn seed(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64; // FNV-1a over the cell identity
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        mix(self.size as u64);
+        for b in self.dist.label().bytes() {
+            mix(b as u64);
+        }
+        for b in self.target.label().bytes() {
+            mix(b as u64);
+        }
+        mix((self.noise_fraction * 1000.0) as u64);
+        mix(self.repetition as u64);
+        h
+    }
+
+    /// The "dataset" identity used for Friedman ranking (everything except
+    /// the repetition; the paper averages repetitions before ranking).
+    pub fn dataset_key(&self) -> String {
+        format!(
+            "{}|{}|{}|{}",
+            self.size,
+            self.dist.label(),
+            self.target.label(),
+            self.noise_fraction
+        )
+    }
+}
+
+/// The full grid for a profile.
+#[derive(Clone, Debug)]
+pub struct Protocol {
+    pub profile: Profile,
+    pub sizes: Vec<usize>,
+    pub repetitions: usize,
+}
+
+impl Protocol {
+    pub fn new(profile: Profile) -> Protocol {
+        Protocol { profile, sizes: profile.sizes(), repetitions: profile.repetitions() }
+    }
+
+    /// Restrict to explicit sizes (CLI `--sizes`).
+    pub fn with_sizes(mut self, sizes: Vec<usize>) -> Protocol {
+        self.sizes = sizes;
+        self
+    }
+
+    pub fn with_repetitions(mut self, reps: usize) -> Protocol {
+        self.repetitions = reps;
+        self
+    }
+
+    pub fn cells(&self) -> Vec<Cell> {
+        let mut out = Vec::new();
+        for &size in &self.sizes {
+            for dist in Distribution::table1() {
+                for target in [TargetFn::Linear, TargetFn::Cubic] {
+                    for noise_fraction in [0.0, 0.1] {
+                        for repetition in 0..self.repetitions {
+                            out.push(Cell { size, dist, target, noise_fraction, repetition });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    pub fn describe(&self) -> String {
+        format!(
+            "profile={:?} sizes={:?} dists=9 targets=[lin,cub] noise=[0%,10%] reps={} -> {} cells",
+            self.profile,
+            self.sizes,
+            self.repetitions,
+            self.cells().len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_sizes_match_table1() {
+        assert_eq!(PAPER_SIZES.len(), 19);
+        assert_eq!(PAPER_SIZES[0], 50);
+        assert_eq!(*PAPER_SIZES.last().unwrap(), 1_000_000);
+    }
+
+    #[test]
+    fn full_grid_cell_count() {
+        // 19 sizes x 9 dists x 2 targets x 2 noise x 10 reps
+        let p = Protocol::new(Profile::Full);
+        assert_eq!(p.cells().len(), 19 * 9 * 2 * 2 * 10);
+    }
+
+    #[test]
+    fn quick_profile_is_small() {
+        let p = Protocol::new(Profile::Quick);
+        assert!(p.cells().len() < 2000);
+        assert!(p.sizes.iter().all(|&s| s <= 5000));
+    }
+
+    #[test]
+    fn seeds_differ_across_cells_and_reps() {
+        let p = Protocol::new(Profile::Quick);
+        let cells = p.cells();
+        let mut seeds: Vec<u64> = cells.iter().map(|c| c.seed()).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), cells.len(), "seed collision");
+    }
+
+    #[test]
+    fn dataset_key_ignores_repetition() {
+        let p = Protocol::new(Profile::Quick);
+        let cells = p.cells();
+        let a = &cells[0];
+        let b = cells.iter().find(|c| c.repetition == 1).unwrap();
+        // same generation settings, different rep -> same dataset key when
+        // the rest matches
+        if a.size == b.size
+            && a.dist == b.dist
+            && a.target == b.target
+            && a.noise_fraction == b.noise_fraction
+        {
+            assert_eq!(a.dataset_key(), b.dataset_key());
+        }
+        assert_ne!(a.seed(), b.seed());
+    }
+}

@@ -1,0 +1,56 @@
+//! Results-directory writer: CSV + JSON + ASCII charts under `results/`.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::common::json::Json;
+use crate::common::table::Table;
+
+/// A named output directory under `results/`.
+pub struct Report {
+    pub dir: PathBuf,
+}
+
+impl Report {
+    /// Create (or reuse) `results/<name>/`.
+    pub fn create(name: &str) -> anyhow::Result<Report> {
+        let dir = Path::new("results").join(name);
+        fs::create_dir_all(&dir)?;
+        Ok(Report { dir })
+    }
+
+    pub fn write_text(&self, file: &str, content: &str) -> anyhow::Result<()> {
+        fs::write(self.dir.join(file), content)?;
+        Ok(())
+    }
+
+    pub fn write_table(&self, stem: &str, table: &Table) -> anyhow::Result<()> {
+        self.write_text(&format!("{stem}.csv"), &table.to_csv())?;
+        self.write_text(&format!("{stem}.txt"), &table.render())
+    }
+
+    pub fn write_json(&self, file: &str, json: &Json) -> anyhow::Result<()> {
+        self.write_text(file, &json.to_pretty())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_all_formats() {
+        let name = format!("test-report-{}", std::process::id());
+        let report = Report::create(&name).unwrap();
+        let mut t = Table::new(vec!["a"]);
+        t.row(vec!["1"]);
+        report.write_table("t", &t).unwrap();
+        let mut j = Json::obj();
+        j.set("k", 1.0);
+        report.write_json("j.json", &j).unwrap();
+        assert!(report.dir.join("t.csv").exists());
+        assert!(report.dir.join("t.txt").exists());
+        assert!(report.dir.join("j.json").exists());
+        std::fs::remove_dir_all(&report.dir).ok();
+    }
+}

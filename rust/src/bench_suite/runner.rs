@@ -1,0 +1,128 @@
+//! Run one protocol cell through one attribute observer, measuring the
+//! paper's four metrics (Sec. 5.3): split merit (VR), stored elements,
+//! observation time and query time.
+
+use std::time::Instant;
+
+use crate::criterion::VarianceReduction;
+use crate::observer::ObserverFactory;
+use crate::stream::synth::SyntheticRegression;
+use crate::stream::Stream;
+
+use super::protocol::Cell;
+
+/// Metrics of one (cell, observer) run.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub observer: String,
+    pub dataset_key: String,
+    pub size: usize,
+    pub task: &'static str,
+    pub repetition: usize,
+    /// Best split merit (VR) reported by the observer.
+    pub merit: f64,
+    /// Chosen split point (NaN if no split was possible).
+    pub split_point: f64,
+    /// Stored elements after the whole sample (nodes or slots).
+    pub elements: usize,
+    /// Seconds to monitor the whole sample.
+    pub observe_seconds: f64,
+    /// Seconds to produce the best split candidate.
+    pub query_seconds: f64,
+}
+
+/// Generate the cell's sample once (single monitored feature, as in the
+/// paper's AO-level protocol).
+pub fn cell_sample(cell: &Cell) -> Vec<(f64, f64)> {
+    let mut stream =
+        SyntheticRegression::new(cell.dist, cell.target, cell.noise(), 1, cell.seed());
+    (0..cell.size)
+        .map(|_| {
+            let inst = stream.next_instance().unwrap();
+            (inst.x[0], inst.y)
+        })
+        .collect()
+}
+
+/// Run one observer over a pre-generated sample.
+pub fn run_cell_on_sample(
+    factory: &dyn ObserverFactory,
+    cell: &Cell,
+    sample: &[(f64, f64)],
+) -> CellResult {
+    let mut ao = factory.build();
+    let start = Instant::now();
+    for &(x, y) in sample {
+        ao.observe(x, y, 1.0);
+    }
+    let observe_seconds = start.elapsed().as_secs_f64();
+
+    let start = Instant::now();
+    let suggestion = ao.best_split(&VarianceReduction);
+    let query_seconds = start.elapsed().as_secs_f64();
+
+    CellResult {
+        observer: factory.name(),
+        dataset_key: cell.dataset_key(),
+        size: cell.size,
+        task: cell.target.label(),
+        repetition: cell.repetition,
+        merit: suggestion.as_ref().map(|s| s.merit).unwrap_or(0.0),
+        split_point: suggestion.as_ref().map(|s| s.threshold).unwrap_or(f64::NAN),
+        elements: ao.n_elements(),
+        observe_seconds,
+        query_seconds,
+    }
+}
+
+/// Convenience: generate the sample and run.
+pub fn run_cell(factory: &dyn ObserverFactory, cell: &Cell) -> CellResult {
+    let sample = cell_sample(cell);
+    run_cell_on_sample(factory, cell, &sample)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::observer::paper_lineup;
+    use crate::stream::synth::{Distribution, TargetFn};
+
+    fn cell() -> Cell {
+        Cell {
+            size: 2000,
+            dist: Distribution::Normal { mu: 0.0, sigma: 1.0 },
+            target: TargetFn::Linear,
+            noise_fraction: 0.0,
+            repetition: 0,
+        }
+    }
+
+    #[test]
+    fn sample_is_deterministic() {
+        let c = cell();
+        assert_eq!(cell_sample(&c), cell_sample(&c));
+    }
+
+    #[test]
+    fn all_observers_produce_results() {
+        let c = cell();
+        let sample = cell_sample(&c);
+        for fac in paper_lineup() {
+            let r = run_cell_on_sample(fac.as_ref(), &c, &sample);
+            assert!(r.merit > 0.0, "{}: merit {}", r.observer, r.merit);
+            assert!(r.split_point.is_finite(), "{}", r.observer);
+            assert!(r.elements > 0);
+            assert!(r.observe_seconds >= 0.0 && r.query_seconds >= 0.0);
+        }
+    }
+
+    #[test]
+    fn ebst_stores_more_elements_than_qo() {
+        let c = cell();
+        let sample = cell_sample(&c);
+        let lineup = paper_lineup();
+        let ebst = run_cell_on_sample(lineup[0].as_ref(), &c, &sample);
+        let qo = run_cell_on_sample(lineup[3].as_ref(), &c, &sample);
+        assert!(qo.elements < ebst.elements / 10, "{} vs {}", qo.elements, ebst.elements);
+    }
+}

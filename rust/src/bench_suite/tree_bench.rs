@@ -1,0 +1,118 @@
+//! Sec. 7 extension experiment: the Hoeffding tree with each observer on
+//! realistic multi-feature streams — prequential accuracy, throughput and
+//! memory. This is the paper's "future work" (QO inside Hoeffding trees),
+//! implemented as a first-class benchmark.
+
+use crate::common::table::{fnum, Table};
+use crate::eval::{prequential, MeanRegressor, PrequentialReport};
+use crate::observer::paper_lineup;
+use crate::stream::Friedman1;
+use crate::tree::{HoeffdingTreeRegressor, HtrOptions};
+
+use super::report::Report;
+
+/// One row of the tree comparison.
+#[derive(Clone, Debug)]
+pub struct TreeRow {
+    pub model: String,
+    pub mae: f64,
+    pub rmse: f64,
+    pub r2: f64,
+    pub seconds: f64,
+    pub throughput: f64,
+    pub elements: usize,
+    pub leaves: usize,
+    pub splits: usize,
+}
+
+/// Run the tree comparison on Friedman #1 (noise σ=1) with `instances`.
+pub fn run(instances: usize, seed: u64) -> Vec<TreeRow> {
+    let mut rows = Vec::new();
+    // mean baseline
+    {
+        let mut model = MeanRegressor::new();
+        let report = prequential(&mut model, &mut Friedman1::new(seed, 1.0), instances, 0);
+        rows.push(row_of("mean-baseline", &report, 1, 0, 0));
+    }
+    for fac in paper_lineup() {
+        let name = format!("htr[{}]", fac.name());
+        let mut tree = HoeffdingTreeRegressor::new(10, HtrOptions::default(), fac);
+        let report = prequential(&mut tree, &mut Friedman1::new(seed, 1.0), instances, 0);
+        let (leaves, splits, elements) =
+            (tree.n_leaves(), tree.n_splits(), tree.total_elements());
+        rows.push(row_of(&name, &report, elements, leaves, splits));
+    }
+    rows
+}
+
+fn row_of(
+    name: &str,
+    report: &PrequentialReport,
+    elements: usize,
+    leaves: usize,
+    splits: usize,
+) -> TreeRow {
+    TreeRow {
+        model: name.to_string(),
+        mae: report.metrics.mae(),
+        rmse: report.metrics.rmse(),
+        r2: report.metrics.r2(),
+        seconds: report.seconds,
+        throughput: report.throughput(),
+        elements,
+        leaves,
+        splits,
+    }
+}
+
+/// Render + persist under `results/tree/`.
+pub fn generate(instances: usize, seed: u64) -> anyhow::Result<String> {
+    let rows = run(instances, seed);
+    let mut table = Table::new(vec![
+        "model", "MAE", "RMSE", "R2", "time_s", "inst/s", "elements", "leaves", "splits",
+    ]);
+    for r in &rows {
+        table.row(vec![
+            r.model.clone(),
+            fnum(r.mae),
+            fnum(r.rmse),
+            fnum(r.r2),
+            fnum(r.seconds),
+            fnum(r.throughput),
+            r.elements.to_string(),
+            r.leaves.to_string(),
+            r.splits.to_string(),
+        ]);
+    }
+    let rendered = format!(
+        "Tree integration benchmark (Friedman #1, {instances} instances, prequential)\n{}",
+        table.render()
+    );
+    let report = Report::create("tree")?;
+    report.write_table("tree", &table)?;
+    report.write_text("summary.txt", &rendered)?;
+    Ok(rendered)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_trees_beat_the_mean_baseline() {
+        let rows = run(8000, 3);
+        let baseline = rows[0].rmse;
+        assert_eq!(rows.len(), 6);
+        for r in &rows[1..] {
+            assert!(r.rmse < baseline, "{}: {} vs {}", r.model, r.rmse, baseline);
+            assert!(r.splits >= 1, "{} never split", r.model);
+        }
+    }
+
+    #[test]
+    fn generate_writes_results() {
+        let text = generate(4000, 5).unwrap();
+        assert!(text.contains("htr[QO_s2]"));
+        assert!(std::path::Path::new("results/tree/tree.csv").exists());
+    }
+}

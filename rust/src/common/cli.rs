@@ -1,0 +1,120 @@
+//! Tiny CLI argument parser (`clap` is not in the offline vendor set).
+//!
+//! Grammar: `prog <subcommand> [--key value | --flag] [positional...]`.
+//! `--key=value` is accepted too. Unknown keys are kept and can be
+//! validated by the subcommand.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without `argv[0]`).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(stripped.to_string(), v);
+                } else {
+                    args.flags.push(stripped.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.opt(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.opt(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.opt(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("fig1 extra --sizes 100,200 --seed=7 --quick");
+        assert_eq!(a.subcommand.as_deref(), Some("fig1"));
+        assert_eq!(a.opt("sizes"), Some("100,200"));
+        assert_eq!(a.opt("seed"), Some("7"));
+        assert!(a.flag("quick"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("run --verbose");
+        assert!(a.flag("verbose"));
+        assert!(a.opt("verbose").is_none());
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("x --n 42 --r 0.5");
+        assert_eq!(a.usize_or("n", 0), 42);
+        assert_eq!(a.f64_or("r", 1.0), 0.5);
+        assert_eq!(a.usize_or("missing", 9), 9);
+    }
+
+    #[test]
+    #[should_panic(expected = "expects an integer")]
+    fn bad_integer_panics() {
+        let a = parse("x --n abc");
+        a.usize_or("n", 0);
+    }
+}

@@ -1,0 +1,102 @@
+//! FxHash-style hasher (the rustc-internal multiply-xor hash) for the
+//! QO slot table. The std `HashMap` default (SipHash-1-3) is DoS-hardened
+//! but ~3× slower on 8-byte integer keys; QO's keys are `i64` bucket
+//! codes derived from the data, and the observer is not an adversarial
+//! hash-flooding surface inside a tree leaf, so the fast hash is the
+//! right trade (this is exactly what `rustc-hash` does; re-implemented
+//! here because the offline vendor set lacks the crate).
+//!
+//! Measured effect: see EXPERIMENTS.md §Perf (QO observe path).
+
+use std::hash::{BuildHasherDefault, Hasher};
+
+/// `BuildHasher` plugging [`FxHasher`] into `HashMap`.
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// Multiply-xor hasher specialised for small integer keys.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        let mut chunks = bytes.chunks_exact(8);
+        for chunk in &mut chunks {
+            self.add_to_hash(u64::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut buf = [0u8; 8];
+            buf[..rem.len()].copy_from_slice(rem);
+            self.add_to_hash(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u64(&mut self, v: u64) {
+        self.add_to_hash(v);
+    }
+
+    #[inline]
+    fn write_i64(&mut self, v: i64) {
+        self.add_to_hash(v as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, v: usize) {
+        self.add_to_hash(v as u64);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn hashmap_roundtrip() {
+        let mut m: HashMap<i64, u32, FxBuildHasher> = HashMap::default();
+        for k in -1000i64..1000 {
+            m.insert(k, (k * 2) as u32);
+        }
+        assert_eq!(m.len(), 2000);
+        for k in -1000i64..1000 {
+            assert_eq!(m[&k], (k * 2) as u32);
+        }
+    }
+
+    #[test]
+    fn distinct_keys_distinct_hashes_mostly() {
+        use std::hash::BuildHasher;
+        let bh = FxBuildHasher::default();
+        let mut hashes: Vec<u64> = (0i64..10_000).map(|k| bh.hash_one(k)).collect();
+        hashes.sort_unstable();
+        hashes.dedup();
+        assert_eq!(hashes.len(), 10_000, "collisions on sequential keys");
+    }
+
+    #[test]
+    fn byte_writes_consistent() {
+        use std::hash::BuildHasher;
+        let bh = FxBuildHasher::default();
+        // same bytes -> same hash
+        assert_eq!(bh.hash_one([1u8, 2, 3]), bh.hash_one([1u8, 2, 3]));
+        assert_ne!(bh.hash_one([1u8, 2, 3]), bh.hash_one([1u8, 2, 4]));
+    }
+}

@@ -1,0 +1,14 @@
+//! Zero-dependency substrate: the offline vendor set has no `rand`, `serde`,
+//! `clap` or `criterion`, so this module provides the small, well-tested
+//! pieces the rest of the crate needs.
+
+pub mod cli;
+pub mod fxhash;
+pub mod json;
+pub mod plot;
+pub mod proptest;
+pub mod rng;
+pub mod table;
+pub mod timing;
+
+pub use rng::Rng;

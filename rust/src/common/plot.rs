@@ -1,0 +1,131 @@
+//! ASCII line/series plots: the bench harness renders the paper's figures
+//! as terminal charts (the data series are also written to CSV/JSON for
+//! external plotting).
+
+/// One named series of (x, y) points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Series {
+        Series { name: name.into(), points: Vec::new() }
+    }
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+}
+
+/// Render multiple series on a shared log-x axis as an ASCII chart.
+/// `log_y` plots log10(y) (the paper's Figure 1 rows 2-4 are log-scaled).
+pub fn render_chart(title: &str, series: &[Series], width: usize, height: usize, log_x: bool, log_y: bool) -> String {
+    const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@', '%', '&'];
+    let tx = |v: f64| if log_x { v.max(1e-300).log10() } else { v };
+    let ty = |v: f64| if log_y { v.max(1e-300).log10() } else { v };
+
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for s in series {
+        for &(x, y) in &s.points {
+            if y.is_finite() && x.is_finite() {
+                xs.push(tx(x));
+                ys.push(ty(y));
+            }
+        }
+    }
+    if xs.is_empty() {
+        return format!("{title}\n  (no finite data)\n");
+    }
+    let (x_min, x_max) = bounds(&xs);
+    let (y_min, y_max) = bounds(&ys);
+    let x_span = (x_max - x_min).max(1e-12);
+    let y_span = (y_max - y_min).max(1e-12);
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in &s.points {
+            if !(y.is_finite() && x.is_finite()) {
+                continue;
+            }
+            let cx = (((tx(x) - x_min) / x_span) * (width - 1) as f64).round() as usize;
+            let cy = (((ty(y) - y_min) / y_span) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx.min(width - 1)] = mark;
+        }
+    }
+
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    let y_label = |frac: f64| -> f64 {
+        let v = y_min + frac * y_span;
+        if log_y {
+            10f64.powf(v)
+        } else {
+            v
+        }
+    };
+    for (i, row) in grid.iter().enumerate() {
+        let frac = 1.0 - i as f64 / (height - 1) as f64;
+        let label = if i == 0 || i == height - 1 || i == height / 2 {
+            format!("{:>10.3e} |", y_label(frac))
+        } else {
+            format!("{:>10} |", "")
+        };
+        out.push_str(&label);
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>10} +{}\n", "", "-".repeat(width)));
+    let x_lo = if log_x { 10f64.powf(x_min) } else { x_min };
+    let x_hi = if log_x { 10f64.powf(x_max) } else { x_max };
+    out.push_str(&format!("{:>12}{:.3e}{:>pad$}{:.3e}\n", "", x_lo, "", x_hi, pad = width.saturating_sub(18)));
+    out.push_str("  legend: ");
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("{}={} ", MARKS[si % MARKS.len()], s.name));
+    }
+    out.push('\n');
+    out
+}
+
+fn bounds(vals: &[f64]) -> (f64, f64) {
+    let lo = vals.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = vals.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    (lo, hi)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_marks_and_legend() {
+        let mut a = Series::new("qo");
+        let mut b = Series::new("ebst");
+        for i in 1..=10 {
+            a.push(i as f64 * 100.0, i as f64);
+            b.push(i as f64 * 100.0, (i * i) as f64);
+        }
+        let chart = render_chart("t", &[a, b], 40, 10, true, false);
+        assert!(chart.contains('*') && chart.contains('o'));
+        assert!(chart.contains("*=qo"));
+        assert!(chart.contains("o=ebst"));
+    }
+
+    #[test]
+    fn empty_series_no_panic() {
+        let chart = render_chart("t", &[Series::new("x")], 20, 5, false, false);
+        assert!(chart.contains("no finite data"));
+    }
+
+    #[test]
+    fn non_finite_filtered() {
+        let mut a = Series::new("x");
+        a.push(1.0, f64::NEG_INFINITY);
+        a.push(2.0, 1.0);
+        let chart = render_chart("t", &[a], 20, 5, false, true);
+        assert!(chart.contains('*'));
+    }
+}

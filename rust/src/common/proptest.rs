@@ -1,0 +1,75 @@
+//! Minimal property-testing harness.
+//!
+//! The offline vendor set has no `proptest`/`quickcheck`, so this module
+//! provides the subset the test suite needs: run a property over many
+//! seeded random cases, and on failure report the failing case index and a
+//! reproducible seed. No shrinking — failures print enough context to
+//! reproduce deterministically with `case_seed`.
+
+use super::rng::Rng;
+
+/// Run `cases` random checks of `prop`. The property receives a fresh
+/// deterministic [`Rng`] per case and returns `Err(description)` to fail.
+///
+/// Panics with the property name, case index and per-case seed on failure.
+pub fn check<F>(name: &str, seed: u64, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!(
+                "property {name:?} failed at case {case}/{cases} (case_seed={case_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Helper for approximate float equality with a relative + absolute band.
+pub fn close(a: f64, b: f64, rtol: f64, atol: f64) -> bool {
+    if a == b {
+        return true;
+    }
+    if !(a.is_finite() && b.is_finite()) {
+        return a == b || (a.is_nan() && b.is_nan());
+    }
+    (a - b).abs() <= atol + rtol * a.abs().max(b.abs())
+}
+
+/// `Err` unless `close(a, b, ...)`; formats a useful failure message.
+pub fn expect_close(what: &str, a: f64, b: f64, rtol: f64, atol: f64) -> Result<(), String> {
+    if close(a, b, rtol, atol) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (diff {})", (a - b).abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("sum-commutes", 1, 64, |rng| {
+            let (a, b) = (rng.f64(), rng.f64());
+            expect_close("a+b", a + b, b + a, 0.0, 0.0)
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property \"always-fails\" failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 2, 8, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn close_handles_special() {
+        assert!(close(f64::NAN, f64::NAN, 0.1, 0.1));
+        assert!(!close(f64::INFINITY, 1.0, 0.1, 0.1));
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9, 0.0));
+        assert!(!close(1.0, 1.1, 1e-3, 0.0));
+    }
+}

@@ -1,0 +1,130 @@
+//! Wall-clock measurement helpers and a small criterion-style bench runner
+//! (the `criterion` crate is not in the offline vendor set; `cargo bench`
+//! targets use `harness = false` and call [`bench()`](bench())).
+
+use std::time::Instant;
+
+/// Summary statistics of a set of timed iterations, in seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl BenchStats {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        if self.mean > 0.0 {
+            items_per_iter / self.mean
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "mean {} ± {} (min {}, max {}, n={})",
+            human_time(self.mean),
+            human_time(self.std),
+            human_time(self.min),
+            human_time(self.max),
+            self.iters
+        )
+    }
+}
+
+/// Render a duration in adaptive units (ns/µs/ms/s).
+pub fn human_time(secs: f64) -> String {
+    let abs = secs.abs();
+    if abs >= 1.0 {
+        format!("{secs:.3}s")
+    } else if abs >= 1e-3 {
+        format!("{:.3}ms", secs * 1e3)
+    } else if abs >= 1e-6 {
+        format!("{:.3}µs", secs * 1e6)
+    } else {
+        format!("{:.1}ns", secs * 1e9)
+    }
+}
+
+/// Time one invocation of `f`, returning (seconds, result).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (f64, T) {
+    let start = Instant::now();
+    let out = f();
+    (start.elapsed().as_secs_f64(), out)
+}
+
+/// Criterion-style measurement: `warmup` unrecorded runs, then `iters`
+/// recorded runs of `f`. The closure result is returned through a black-box
+/// sink so the optimizer cannot delete the work.
+pub fn bench<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let start = Instant::now();
+        std::hint::black_box(f());
+        samples.push(start.elapsed().as_secs_f64());
+    }
+    summarize(&samples)
+}
+
+/// Summarize raw per-iteration samples (seconds).
+pub fn summarize(samples: &[f64]) -> BenchStats {
+    let n = samples.len().max(1) as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    BenchStats {
+        iters: samples.len(),
+        mean,
+        std: var.sqrt(),
+        min: samples.iter().copied().fold(f64::INFINITY, f64::min),
+        max: samples.iter().copied().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut calls = 0usize;
+        let stats = bench(2, 5, || {
+            calls += 1;
+            calls
+        });
+        assert_eq!(calls, 7);
+        assert_eq!(stats.iters, 5);
+        assert!(stats.mean >= 0.0 && stats.min <= stats.max);
+    }
+
+    #[test]
+    fn summarize_basic() {
+        let s = summarize(&[1.0, 2.0, 3.0]);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert_eq!(human_time(2.5), "2.500s");
+        assert_eq!(human_time(0.0025), "2.500ms");
+        assert_eq!(human_time(2.5e-6), "2.500µs");
+        assert_eq!(human_time(2.5e-9), "2.5ns");
+    }
+
+    #[test]
+    fn throughput() {
+        let s = BenchStats { iters: 1, mean: 0.5, std: 0.0, min: 0.5, max: 0.5 };
+        assert!((s.throughput(100.0) - 200.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,284 @@
+//! Leader/worker runtime for distributed attribute observation.
+//!
+//! The leader owns the stream, batches instances, and pushes batches to
+//! worker shards over **bounded** channels (`std::sync::mpsc::sync_channel`)
+//! — a full channel blocks the leader, which is the backpressure policy: a
+//! slow shard throttles ingestion instead of ballooning memory. Workers
+//! maintain one fixed-radius [`QuantizationObserver`] per feature; when
+//! the stream ends the leader joins the workers and merges all partial
+//! hashes (Chan formulas) into one observer per feature.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+use crate::criterion::SplitCriterion;
+use crate::observer::qo::QuantizationObserver;
+use crate::observer::{AttributeObserver, SplitSuggestion};
+use crate::stream::{Instance, Stream};
+
+use super::shard::Partitioner;
+
+/// Coordinator tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct CoordinatorConfig {
+    pub n_shards: usize,
+    /// Instances per message (amortizes channel overhead).
+    pub batch_size: usize,
+    /// Bounded channel depth in *batches* (backpressure window).
+    pub channel_capacity: usize,
+    /// Fixed quantization radius shared by every shard (a shared grid is
+    /// what makes the partial hashes mergeable).
+    pub radius: f64,
+    pub partitioner: Partitioner,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> CoordinatorConfig {
+        CoordinatorConfig {
+            n_shards: 4,
+            batch_size: 256,
+            channel_capacity: 8,
+            radius: 0.1,
+            partitioner: Partitioner::RoundRobin,
+        }
+    }
+}
+
+/// Result of a coordinated observation run.
+pub struct CoordinatorReport {
+    /// One merged observer per feature (equivalent to single-threaded
+    /// observation of the whole stream).
+    pub merged: Vec<QuantizationObserver>,
+    /// Instances processed per shard.
+    pub per_shard: Vec<usize>,
+    pub instances: usize,
+    pub seconds: f64,
+}
+
+impl CoordinatorReport {
+    /// Best split per feature over the merged observers.
+    pub fn best_splits(&self, criterion: &dyn SplitCriterion) -> Vec<Option<SplitSuggestion>> {
+        self.merged.iter().map(|qo| qo.best_split(criterion)).collect()
+    }
+}
+
+/// The sharded observer coordinator (see module docs).
+pub struct ShardedObserverCoordinator {
+    n_features: usize,
+    config: CoordinatorConfig,
+}
+
+impl ShardedObserverCoordinator {
+    pub fn new(n_features: usize, config: CoordinatorConfig) -> ShardedObserverCoordinator {
+        assert!(config.n_shards >= 1);
+        assert!(config.batch_size >= 1);
+        assert!(config.channel_capacity >= 1);
+        assert!(config.radius > 0.0);
+        ShardedObserverCoordinator { n_features, config }
+    }
+
+    /// Observe up to `max_instances` from `stream` across the shards and
+    /// merge the partial observers.
+    pub fn run(&self, stream: &mut dyn Stream, max_instances: usize) -> CoordinatorReport {
+        let cfg = self.config;
+        let n_features = self.n_features;
+        let start = Instant::now();
+
+        let result = std::thread::scope(|scope| {
+            let mut senders: Vec<mpsc::SyncSender<Vec<Instance>>> = Vec::new();
+            let mut handles = Vec::new();
+            for _ in 0..cfg.n_shards {
+                let (tx, rx) = mpsc::sync_channel::<Vec<Instance>>(cfg.channel_capacity);
+                senders.push(tx);
+                handles.push(scope.spawn(move || {
+                    let mut observers: Vec<QuantizationObserver> = (0..n_features)
+                        .map(|_| QuantizationObserver::with_radius(cfg.radius))
+                        .collect();
+                    let mut count = 0usize;
+                    while let Ok(batch) = rx.recv() {
+                        for inst in &batch {
+                            for (f, qo) in observers.iter_mut().enumerate() {
+                                qo.observe(inst.x[f], inst.y, 1.0);
+                            }
+                            count += 1;
+                        }
+                    }
+                    (observers, count)
+                }));
+            }
+
+            // leader loop: batch, route, push (blocking on full channels)
+            let mut batches: Vec<Vec<Instance>> =
+                (0..cfg.n_shards).map(|_| Vec::with_capacity(cfg.batch_size)).collect();
+            let mut sent = 0usize;
+            while sent < max_instances {
+                let Some(inst) = stream.next_instance() else { break };
+                let shard = cfg.partitioner.shard_of(sent as u64, cfg.n_shards);
+                batches[shard].push(inst);
+                sent += 1;
+                if batches[shard].len() >= cfg.batch_size {
+                    let full = std::mem::replace(
+                        &mut batches[shard],
+                        Vec::with_capacity(cfg.batch_size),
+                    );
+                    senders[shard].send(full).expect("worker died");
+                }
+            }
+            for (shard, batch) in batches.into_iter().enumerate() {
+                if !batch.is_empty() {
+                    senders[shard].send(batch).expect("worker died");
+                }
+            }
+            drop(senders); // close channels: workers drain and return
+
+            let mut merged: Vec<QuantizationObserver> = (0..n_features)
+                .map(|_| QuantizationObserver::with_radius(cfg.radius))
+                .collect();
+            let mut per_shard = Vec::with_capacity(cfg.n_shards);
+            for handle in handles {
+                let (observers, count) = handle.join().expect("worker panicked");
+                per_shard.push(count);
+                for (f, qo) in observers.iter().enumerate() {
+                    merged[f].merge_from(qo);
+                }
+            }
+            (merged, per_shard, sent)
+        });
+
+        let (merged, per_shard, instances) = result;
+        CoordinatorReport { merged, per_shard, instances, seconds: start.elapsed().as_secs_f64() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::proptest::{check, expect_close};
+    use crate::criterion::VarianceReduction;
+    use crate::stream::synth::{Distribution, NoiseSpec, SyntheticRegression, TargetFn};
+
+    fn test_stream(seed: u64) -> SyntheticRegression {
+        SyntheticRegression::new(
+            Distribution::Normal { mu: 0.0, sigma: 1.0 },
+            TargetFn::Cubic,
+            NoiseSpec::NONE,
+            3,
+            seed,
+        )
+    }
+
+    fn single_threaded_reference(seed: u64, n: usize, radius: f64) -> Vec<QuantizationObserver> {
+        let mut stream = test_stream(seed);
+        let mut observers: Vec<QuantizationObserver> =
+            (0..3).map(|_| QuantizationObserver::with_radius(radius)).collect();
+        for _ in 0..n {
+            let inst = stream.next_instance().unwrap();
+            for (f, qo) in observers.iter_mut().enumerate() {
+                qo.observe(inst.x[f], inst.y, 1.0);
+            }
+        }
+        observers
+    }
+
+    #[test]
+    fn merged_equals_single_threaded() {
+        let n = 10_000;
+        let radius = 0.25;
+        let coordinator = ShardedObserverCoordinator::new(
+            3,
+            CoordinatorConfig { n_shards: 4, radius, ..Default::default() },
+        );
+        let report = coordinator.run(&mut test_stream(123), n);
+        assert_eq!(report.instances, n);
+        assert_eq!(report.per_shard.iter().sum::<usize>(), n);
+
+        let reference = single_threaded_reference(123, n, radius);
+        for (f, (merged, single)) in report.merged.iter().zip(reference.iter()).enumerate() {
+            assert_eq!(merged.n_elements(), single.n_elements(), "feature {f} slot count");
+            assert!((merged.total().n - single.total().n).abs() < 1e-9);
+            assert!(
+                (merged.total().m2 - single.total().m2).abs() / single.total().m2 < 1e-9,
+                "feature {f} m2"
+            );
+            let sm = merged.best_split(&VarianceReduction).unwrap();
+            let ss = single.best_split(&VarianceReduction).unwrap();
+            assert!((sm.threshold - ss.threshold).abs() < 1e-9, "feature {f} threshold");
+            assert!((sm.merit - ss.merit).abs() < 1e-7 * ss.merit.abs().max(1.0), "feature {f}");
+        }
+    }
+
+    #[test]
+    fn round_robin_balances_shards() {
+        let coordinator = ShardedObserverCoordinator::new(
+            3,
+            CoordinatorConfig { n_shards: 4, batch_size: 16, ..Default::default() },
+        );
+        let report = coordinator.run(&mut test_stream(9), 4096);
+        for &c in &report.per_shard {
+            assert_eq!(c, 1024);
+        }
+    }
+
+    #[test]
+    fn single_shard_works() {
+        let coordinator =
+            ShardedObserverCoordinator::new(3, CoordinatorConfig { n_shards: 1, ..Default::default() });
+        let report = coordinator.run(&mut test_stream(5), 1000);
+        assert_eq!(report.per_shard, vec![1000]);
+        assert!(report.best_splits(&VarianceReduction)[0].is_some());
+    }
+
+    #[test]
+    fn tiny_channel_capacity_exercises_backpressure() {
+        // capacity-1 channels force the leader to block on the workers
+        let coordinator = ShardedObserverCoordinator::new(
+            3,
+            CoordinatorConfig {
+                n_shards: 2,
+                batch_size: 8,
+                channel_capacity: 1,
+                ..Default::default()
+            },
+        );
+        let report = coordinator.run(&mut test_stream(31), 5000);
+        assert_eq!(report.instances, 5000);
+    }
+
+    #[test]
+    fn prop_sharding_preserves_totals() {
+        check("coordinator-totals", 0xD0, 10, |rng| {
+            let n = 500 + rng.below(2000) as usize;
+            let shards = 1 + rng.below(6) as usize;
+            let seed = rng.next_u64();
+            let coordinator = ShardedObserverCoordinator::new(
+                3,
+                CoordinatorConfig {
+                    n_shards: shards,
+                    batch_size: 1 + rng.below(64) as usize,
+                    radius: 0.3,
+                    partitioner: if rng.bool(0.5) {
+                        Partitioner::RoundRobin
+                    } else {
+                        Partitioner::IndexHash
+                    },
+                    ..Default::default()
+                },
+            );
+            let report = coordinator.run(&mut test_stream(seed), n);
+            let reference = single_threaded_reference(seed, n, 0.3);
+            for (merged, single) in report.merged.iter().zip(reference.iter()) {
+                if merged.n_elements() != single.n_elements() {
+                    return Err(format!(
+                        "slot count {} vs {}",
+                        merged.n_elements(),
+                        single.n_elements()
+                    ));
+                }
+                expect_close("total n", merged.total().n, single.total().n, 0.0, 1e-9)?;
+                expect_close("total mean", merged.total().mean, single.total().mean, 1e-9, 1e-9)?;
+                expect_close("total m2", merged.total().m2, single.total().m2, 1e-8, 1e-8)?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,20 @@
+//! Sharded streaming coordinator.
+//!
+//! The paper's Sec. 3 exists to make target statistics *mergeable and
+//! subtractable* (Chan et al. parallel formulas); the QO hash inherits
+//! that property slot-by-slot. This module exploits it: a leader thread
+//! fans the stream out to worker shards over bounded channels
+//! (backpressure), each shard maintains its own per-feature Quantization
+//! Observers, and at query time the leader merges the partial hashes
+//! losslessly — the merged observer is *bit-for-bit equivalent in
+//! expectation* (and numerically equivalent to ~1e-12) to one observer
+//! having seen the whole stream.
+//!
+//! This is the L3 "distributed attribute observation" runtime: the same
+//! pattern scales QO-backed trees across cores or machines.
+
+pub mod leader;
+pub mod shard;
+
+pub use leader::{CoordinatorConfig, CoordinatorReport, ShardedObserverCoordinator};
+pub use shard::Partitioner;

@@ -1,0 +1,55 @@
+//! Shard assignment policies.
+//!
+//! Because the per-slot statistics merge exactly (Chan et al.), *any*
+//! partition of the stream yields the same merged observer — the policy
+//! only affects load balance and channel contention.
+
+/// How instances are assigned to worker shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partitioner {
+    /// t-th instance goes to shard t mod n (perfect balance).
+    RoundRobin,
+    /// Hash of the instance index (decorrelates shard and stream phase —
+    /// relevant under concept drift).
+    IndexHash,
+}
+
+impl Partitioner {
+    #[inline]
+    pub fn shard_of(&self, index: u64, n_shards: usize) -> usize {
+        match self {
+            Partitioner::RoundRobin => (index % n_shards as u64) as usize,
+            Partitioner::IndexHash => {
+                let mut s = index;
+                (crate::common::rng::splitmix64(&mut s) % n_shards as u64) as usize
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_is_balanced() {
+        let mut counts = [0usize; 4];
+        for i in 0..1000 {
+            counts[Partitioner::RoundRobin.shard_of(i, 4)] += 1;
+        }
+        assert_eq!(counts, [250, 250, 250, 250]);
+    }
+
+    #[test]
+    fn hash_is_roughly_balanced_and_deterministic() {
+        let mut counts = [0usize; 4];
+        for i in 0..10_000 {
+            let s = Partitioner::IndexHash.shard_of(i, 4);
+            assert_eq!(s, Partitioner::IndexHash.shard_of(i, 4));
+            counts[s] += 1;
+        }
+        for c in counts {
+            assert!((c as i64 - 2500).abs() < 300, "{counts:?}");
+        }
+    }
+}

@@ -1,0 +1,224 @@
+//! Baseline regressors: the running-mean predictor and a normalized
+//! linear SGD model (the FIMT leaf perceptron uses the same core).
+
+use crate::stats::VarStats;
+
+use super::Regressor;
+
+/// Predicts the running target mean — the weakest sensible baseline and
+/// also the leaf model of a regression tree stump.
+#[derive(Clone, Debug, Default)]
+pub struct MeanRegressor {
+    stats: VarStats,
+}
+
+impl MeanRegressor {
+    pub fn new() -> MeanRegressor {
+        MeanRegressor::default()
+    }
+}
+
+impl Regressor for MeanRegressor {
+    fn predict(&self, _x: &[f64]) -> f64 {
+        self.stats.mean
+    }
+
+    fn learn_one(&mut self, _x: &[f64], y: f64) {
+        self.stats.update(y, 1.0);
+    }
+
+    fn name(&self) -> String {
+        "mean".to_string()
+    }
+
+    fn n_elements(&self) -> usize {
+        1
+    }
+}
+
+/// Linear model trained by SGD on z-normalized features and target
+/// (FIMT's leaf perceptron; Ikonomovska et al. 2011 Sec. 4.2).
+///
+/// Normalization uses running per-feature statistics, so the model is
+/// scale-free and the fixed learning rate is stable across the Table 1
+/// settings (feature scales span 0.1 to 7).
+#[derive(Clone, Debug)]
+pub struct LinearSgd {
+    weights: Vec<f64>,
+    bias: f64,
+    lr: f64,
+    feature_stats: Vec<VarStats>,
+    target_stats: VarStats,
+}
+
+impl LinearSgd {
+    pub fn new(n_features: usize, lr: f64) -> LinearSgd {
+        LinearSgd {
+            weights: vec![0.0; n_features],
+            bias: 0.0,
+            lr,
+            feature_stats: vec![VarStats::new(); n_features],
+            target_stats: VarStats::new(),
+        }
+    }
+
+    #[inline]
+    fn norm_x(&self, i: usize, xi: f64) -> f64 {
+        let s = &self.feature_stats[i];
+        let sd = s.std();
+        if sd > 0.0 {
+            (xi - s.mean) / (3.0 * sd)
+        } else {
+            0.0
+        }
+    }
+
+    /// Prediction in normalized target space.
+    fn predict_norm(&self, x: &[f64]) -> f64 {
+        let mut out = self.bias;
+        for (i, &xi) in x.iter().enumerate() {
+            out += self.weights[i] * self.norm_x(i, xi);
+        }
+        out
+    }
+}
+
+impl LinearSgd {
+    /// Fused learn + predict: returns the pre-update prediction computed
+    /// with the SAME normalized pass used by the gradient step, so
+    /// adaptive leaves don't pay for a second `predict_norm` loop per
+    /// instance (see EXPERIMENTS.md §Perf).
+    pub fn learn_returning_prediction(&mut self, x: &[f64], y: f64) -> f64 {
+        debug_assert_eq!(x.len(), self.weights.len());
+        for (i, &xi) in x.iter().enumerate() {
+            self.feature_stats[i].update(xi, 1.0);
+        }
+        self.target_stats.update(y, 1.0);
+        let sd = self.target_stats.std();
+        if sd == 0.0 {
+            return self.target_stats.mean;
+        }
+        let pred_norm = self.predict_norm(x);
+        let prediction = pred_norm * 3.0 * sd + self.target_stats.mean;
+        let y_norm = (y - self.target_stats.mean) / (3.0 * sd);
+        let err = pred_norm - y_norm;
+        for (i, &xi) in x.iter().enumerate() {
+            let xn = self.norm_x(i, xi);
+            self.weights[i] -= self.lr * err * xn;
+        }
+        self.bias -= self.lr * err;
+        prediction
+    }
+}
+
+impl Regressor for LinearSgd {
+    fn predict(&self, x: &[f64]) -> f64 {
+        let sd = self.target_stats.std();
+        if sd > 0.0 {
+            self.predict_norm(x) * 3.0 * sd + self.target_stats.mean
+        } else {
+            self.target_stats.mean
+        }
+    }
+
+    fn learn_one(&mut self, x: &[f64], y: f64) {
+        debug_assert_eq!(x.len(), self.weights.len());
+        for (i, &xi) in x.iter().enumerate() {
+            self.feature_stats[i].update(xi, 1.0);
+        }
+        self.target_stats.update(y, 1.0);
+        let sd = self.target_stats.std();
+        if sd == 0.0 {
+            return;
+        }
+        let y_norm = (y - self.target_stats.mean) / (3.0 * sd);
+        let err = self.predict_norm(x) - y_norm;
+        for (i, &xi) in x.iter().enumerate() {
+            let xn = self.norm_x(i, xi);
+            self.weights[i] -= self.lr * err * xn;
+        }
+        self.bias -= self.lr * err;
+    }
+
+    fn name(&self) -> String {
+        "linear-sgd".to_string()
+    }
+
+    fn n_elements(&self) -> usize {
+        self.weights.len() + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::Rng;
+
+    #[test]
+    fn mean_regressor_tracks_mean() {
+        let mut m = MeanRegressor::new();
+        for y in [2.0, 4.0, 6.0] {
+            m.learn_one(&[0.0], y);
+        }
+        assert!((m.predict(&[123.0]) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linear_sgd_fits_linear_function() {
+        let mut model = LinearSgd::new(2, 0.05);
+        let mut rng = Rng::new(31);
+        for _ in 0..20_000 {
+            let x = [rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)];
+            let y = 3.0 * x[0] - 2.0 * x[1] + 0.5;
+            model.learn_one(&x, y);
+        }
+        let mut max_err: f64 = 0.0;
+        for _ in 0..100 {
+            let x = [rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)];
+            let y = 3.0 * x[0] - 2.0 * x[1] + 0.5;
+            max_err = max_err.max((model.predict(&x) - y).abs());
+        }
+        assert!(max_err < 0.6, "max_err={max_err}");
+    }
+
+    #[test]
+    fn linear_sgd_beats_mean_on_linear_data() {
+        let mut lin = LinearSgd::new(1, 0.05);
+        let mut mean = MeanRegressor::new();
+        let mut rng = Rng::new(33);
+        let mut err_lin = 0.0;
+        let mut err_mean = 0.0;
+        for t in 0..5000 {
+            let x = [rng.uniform(-2.0, 2.0)];
+            let y = 5.0 * x[0];
+            if t > 1000 {
+                err_lin += (lin.predict(&x) - y).abs();
+                err_mean += (mean.predict(&x) - y).abs();
+            }
+            lin.learn_one(&x, y);
+            mean.learn_one(&x, y);
+        }
+        assert!(err_lin < 0.5 * err_mean, "lin={err_lin} mean={err_mean}");
+    }
+
+    #[test]
+    fn scale_invariance() {
+        // same data scaled by 1000: relative accuracy must be similar
+        let run = |scale: f64| -> f64 {
+            let mut model = LinearSgd::new(1, 0.05);
+            let mut rng = Rng::new(35);
+            let mut err = 0.0;
+            for t in 0..10_000 {
+                let x = [rng.uniform(-1.0, 1.0) * scale];
+                let y = 2.0 * x[0];
+                if t > 8000 {
+                    err += (model.predict(&x) - y).abs() / scale;
+                }
+                model.learn_one(&x, y);
+            }
+            err
+        };
+        let (e1, e1000) = (run(1.0), run(1000.0));
+        assert!((e1 - e1000).abs() / e1.max(1e-9) < 0.5, "e1={e1} e1000={e1000}");
+    }
+}

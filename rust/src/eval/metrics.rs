@@ -1,0 +1,137 @@
+//! Incremental regression metrics: MAE, RMSE and R² computed online (one
+//! pass, O(1) state) using the robust [`VarStats`] accumulator
+//! for the target-variance term of R².
+
+use crate::stats::VarStats;
+
+/// One-pass MAE / RMSE / R² accumulator.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RegressionMetrics {
+    n: f64,
+    abs_err_sum: f64,
+    sq_err_sum: f64,
+    target_stats: VarStats,
+}
+
+impl RegressionMetrics {
+    pub fn new() -> RegressionMetrics {
+        RegressionMetrics::default()
+    }
+
+    pub fn update(&mut self, y_true: f64, y_pred: f64) {
+        let err = y_true - y_pred;
+        self.n += 1.0;
+        self.abs_err_sum += err.abs();
+        self.sq_err_sum += err * err;
+        self.target_stats.update(y_true, 1.0);
+    }
+
+    pub fn count(&self) -> f64 {
+        self.n
+    }
+
+    pub fn mae(&self) -> f64 {
+        if self.n > 0.0 {
+            self.abs_err_sum / self.n
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mse(&self) -> f64 {
+        if self.n > 0.0 {
+            self.sq_err_sum / self.n
+        } else {
+            0.0
+        }
+    }
+
+    pub fn rmse(&self) -> f64 {
+        self.mse().sqrt()
+    }
+
+    /// R² = 1 − SSE / SST (0 when the target variance is degenerate).
+    pub fn r2(&self) -> f64 {
+        let sst = self.target_stats.m2;
+        if sst > 0.0 {
+            1.0 - self.sq_err_sum / sst
+        } else {
+            0.0
+        }
+    }
+
+    /// Merge two accumulators (metrics are additive).
+    pub fn merged(&self, o: &RegressionMetrics) -> RegressionMetrics {
+        RegressionMetrics {
+            n: self.n + o.n,
+            abs_err_sum: self.abs_err_sum + o.abs_err_sum,
+            sq_err_sum: self.sq_err_sum + o.sq_err_sum,
+            target_stats: self.target_stats + o.target_stats,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_predictions() {
+        let mut m = RegressionMetrics::new();
+        for y in [1.0, 2.0, 3.0] {
+            m.update(y, y);
+        }
+        assert_eq!(m.mae(), 0.0);
+        assert_eq!(m.rmse(), 0.0);
+        assert_eq!(m.r2(), 1.0);
+    }
+
+    #[test]
+    fn known_errors() {
+        let mut m = RegressionMetrics::new();
+        m.update(1.0, 2.0); // err 1
+        m.update(5.0, 2.0); // err 3
+        assert!((m.mae() - 2.0).abs() < 1e-12);
+        assert!((m.mse() - 5.0).abs() < 1e-12);
+        assert!((m.rmse() - 5f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn r2_of_mean_predictor_is_zero() {
+        // predicting the (final) mean gives R² ~ 0
+        let ys = [1.0, 2.0, 3.0, 4.0, 5.0];
+        let mean = 3.0;
+        let mut m = RegressionMetrics::new();
+        for &y in &ys {
+            m.update(y, mean);
+        }
+        assert!(m.r2().abs() < 1e-12);
+    }
+
+    #[test]
+    fn merged_equals_sequential() {
+        let mut a = RegressionMetrics::new();
+        let mut b = RegressionMetrics::new();
+        let mut whole = RegressionMetrics::new();
+        for i in 0..10 {
+            let (y, p) = (i as f64, i as f64 * 0.9);
+            if i < 5 {
+                a.update(y, p);
+            } else {
+                b.update(y, p);
+            }
+            whole.update(y, p);
+        }
+        let m = a.merged(&b);
+        assert!((m.mae() - whole.mae()).abs() < 1e-12);
+        assert!((m.r2() - whole.r2()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_metrics_are_finite() {
+        let m = RegressionMetrics::new();
+        assert_eq!(m.mae(), 0.0);
+        assert_eq!(m.rmse(), 0.0);
+        assert_eq!(m.r2(), 0.0);
+    }
+}

@@ -1,0 +1,26 @@
+//! Evaluation substrate: incremental regression metrics, the prequential
+//! (test-then-train) protocol and baseline regressors.
+
+pub mod baselines;
+pub mod metrics;
+pub mod prequential;
+
+pub use baselines::{LinearSgd, MeanRegressor};
+pub use metrics::RegressionMetrics;
+pub use prequential::{prequential, PrequentialReport};
+
+/// An online regression model (test-then-train interface).
+pub trait Regressor: Send {
+    /// Predict the target for `x` (must work from the first instance).
+    fn predict(&self, x: &[f64]) -> f64;
+
+    /// Learn from one labelled instance.
+    fn learn_one(&mut self, x: &[f64], y: f64);
+
+    fn name(&self) -> String;
+
+    /// Rough model-size indicator (element counts, see paper Sec. 5.3).
+    fn n_elements(&self) -> usize {
+        0
+    }
+}

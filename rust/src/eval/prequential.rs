@@ -1,0 +1,127 @@
+//! Prequential (interleaved test-then-train) evaluation: every instance is
+//! first used for prediction, then for learning — the standard protocol of
+//! the data-stream literature (Gama 2010).
+
+use std::time::Instant;
+
+use crate::stream::Stream;
+
+use super::{metrics::RegressionMetrics, Regressor};
+
+/// Outcome of a prequential run.
+#[derive(Clone, Debug)]
+pub struct PrequentialReport {
+    pub model: String,
+    pub stream: String,
+    pub instances: usize,
+    pub metrics: RegressionMetrics,
+    /// Wall-clock seconds spent in predict+learn.
+    pub seconds: f64,
+    /// Element count reported by the model at the end.
+    pub n_elements: usize,
+    /// Periodic checkpoints: (instances seen, MAE so far, RMSE so far).
+    pub curve: Vec<(usize, f64, f64)>,
+}
+
+impl PrequentialReport {
+    pub fn throughput(&self) -> f64 {
+        if self.seconds > 0.0 {
+            self.instances as f64 / self.seconds
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Run `model` prequentially over up to `max_instances` of `stream`,
+/// checkpointing the error curve every `checkpoint_every` instances
+/// (0 = no curve).
+pub fn prequential(
+    model: &mut dyn Regressor,
+    stream: &mut dyn Stream,
+    max_instances: usize,
+    checkpoint_every: usize,
+) -> PrequentialReport {
+    let mut metrics = RegressionMetrics::new();
+    let mut curve = Vec::new();
+    let mut seen = 0usize;
+    let start = Instant::now();
+    while seen < max_instances {
+        let Some(inst) = stream.next_instance() else { break };
+        let pred = model.predict(&inst.x);
+        metrics.update(inst.y, pred);
+        model.learn_one(&inst.x, inst.y);
+        seen += 1;
+        if checkpoint_every > 0 && seen % checkpoint_every == 0 {
+            curve.push((seen, metrics.mae(), metrics.rmse()));
+        }
+    }
+    PrequentialReport {
+        model: model.name(),
+        stream: stream.name(),
+        instances: seen,
+        metrics,
+        seconds: start.elapsed().as_secs_f64(),
+        n_elements: model.n_elements(),
+        curve,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::baselines::MeanRegressor;
+    use crate::stream::synth::{Distribution, NoiseSpec, SyntheticRegression, TargetFn};
+
+    fn stream() -> SyntheticRegression {
+        SyntheticRegression::new(
+            Distribution::Uniform { lo: -1.0, hi: 1.0 },
+            TargetFn::Linear,
+            NoiseSpec::NONE,
+            2,
+            77,
+        )
+    }
+
+    #[test]
+    fn runs_exact_instance_count() {
+        let mut model = MeanRegressor::new();
+        let mut s = stream();
+        let report = prequential(&mut model, &mut s, 500, 100);
+        assert_eq!(report.instances, 500);
+        assert_eq!(report.curve.len(), 5);
+        assert_eq!(report.curve.last().unwrap().0, 500);
+    }
+
+    #[test]
+    fn mean_regressor_r2_near_zero() {
+        let mut model = MeanRegressor::new();
+        let mut s = stream();
+        let report = prequential(&mut model, &mut s, 5000, 0);
+        assert!(report.metrics.r2() < 0.2, "r2={}", report.metrics.r2());
+        assert!(report.curve.is_empty());
+    }
+
+    #[test]
+    fn bounded_stream_stops_early() {
+        struct Two(usize);
+        impl Stream for Two {
+            fn next_instance(&mut self) -> Option<crate::stream::Instance> {
+                if self.0 == 0 {
+                    return None;
+                }
+                self.0 -= 1;
+                Some(crate::stream::Instance { x: vec![0.0], y: 1.0 })
+            }
+            fn n_features(&self) -> usize {
+                1
+            }
+            fn name(&self) -> String {
+                "two".into()
+            }
+        }
+        let mut model = MeanRegressor::new();
+        let report = prequential(&mut model, &mut Two(2), 100, 0);
+        assert_eq!(report.instances, 2);
+    }
+}

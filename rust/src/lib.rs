@@ -1,0 +1,43 @@
+//! # qostream
+//!
+//! A rust online-machine-learning framework reproducing
+//! *"Using dynamical quantization to perform split attempts in online tree
+//! regressors"* (Mastelini & de Carvalho, 2020).
+//!
+//! The paper contributes the **Quantization Observer (QO)**: a hashing-based
+//! attribute observer with O(1) insertion and sub-linear split-candidate
+//! queries for online regression trees, plus numerically robust
+//! *mergeable and subtractable* variance estimators (Welford updates with
+//! the Chan et al. parallel formulas extended with subtraction).
+//!
+//! This crate provides:
+//!
+//! * [`stats`] — the robust streaming statistics (paper Sec. 3) plus the
+//!   Friedman/Nemenyi machinery used by the paper's evaluation.
+//! * [`observer`] — QO (paper Sec. 4), E-BST, TE-BST and an exhaustive
+//!   oracle, all behind one [`observer::AttributeObserver`] trait.
+//! * [`criterion`] — split-merit heuristics (Variance Reduction, Eq. 1).
+//! * [`tree`] — a FIMT-like Hoeffding Tree Regressor with pluggable
+//!   observers (the paper's target integration, its Sec. 7 future work).
+//! * [`stream`] — synthetic generators implementing the paper's Table 1
+//!   protocol, drift wrappers and a CSV reader.
+//! * [`eval`] — prequential evaluation and incremental regression metrics.
+//! * [`coordinator`] — a sharded streaming runtime that exploits the
+//!   mergeability of the Sec. 3 statistics for parallel observation.
+//! * [`runtime`] — a PJRT/XLA backend that executes the AOT-compiled
+//!   JAX/Pallas split-evaluation artifacts from `artifacts/`.
+//! * [`bench_suite`] — regenerates every table and figure of the paper's
+//!   evaluation (see DESIGN.md for the experiment index).
+//! * [`common`] — zero-dependency substrate: PRNG, JSON writer, ASCII
+//!   tables/plots, a tiny property-testing harness, CLI parsing.
+
+pub mod bench_suite;
+pub mod common;
+pub mod coordinator;
+pub mod criterion;
+pub mod eval;
+pub mod observer;
+pub mod runtime;
+pub mod stats;
+pub mod stream;
+pub mod tree;

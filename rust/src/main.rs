@@ -1,0 +1,206 @@
+//! `qostream` CLI — the L3 entrypoint.
+//!
+//! Subcommands map one-to-one onto the paper's evaluation (DESIGN.md §3):
+//!
+//! ```text
+//! qostream protocol --describe                # Table 1 grid
+//! qostream fig1 [--profile quick|standard|full] [--sizes 100,1000] [--reps N]
+//! qostream fig3 [--profile ...]
+//! qostream cd [--metric merit|elements|observe|query|all] [--profile ...]
+//! qostream tree [--instances N] [--seed S]    # Sec. 7 integration
+//! qostream coordinator [--shards N] [--instances N]
+//! qostream xla [--instances N] [--radius R]
+//! qostream all                                # everything, standard profile
+//! ```
+
+use anyhow::Result;
+
+use qostream::bench_suite::{cd, fig1, fig3, protocol::Profile, tree_bench, Protocol};
+use qostream::common::cli::Args;
+use qostream::common::timing::human_time;
+use qostream::coordinator::{CoordinatorConfig, ShardedObserverCoordinator};
+use qostream::criterion::VarianceReduction;
+use qostream::observer::AttributeObserver;
+use qostream::runtime::{find_artifacts_dir, Manifest, XlaSplitEngine};
+use qostream::stream::{Friedman1, Stream};
+
+fn protocol_from(args: &Args) -> Protocol {
+    let profile = Profile::parse(args.get_or("profile", "standard"))
+        .unwrap_or_else(|| panic!("--profile must be quick|standard|full"));
+    let mut protocol = Protocol::new(profile);
+    if let Some(sizes) = args.opt("sizes") {
+        let sizes: Vec<usize> = sizes
+            .split(',')
+            .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("bad size {s:?}")))
+            .collect();
+        protocol = protocol.with_sizes(sizes);
+    }
+    if let Some(reps) = args.opt("reps") {
+        protocol = protocol.with_repetitions(reps.parse().expect("--reps integer"));
+    }
+    protocol
+}
+
+fn cmd_protocol(args: &Args) -> Result<()> {
+    let protocol = protocol_from(args);
+    println!("{}", protocol.describe());
+    Ok(())
+}
+
+fn cmd_fig1(args: &Args) -> Result<()> {
+    let protocol = protocol_from(args);
+    eprintln!("fig1: {}", protocol.describe());
+    let rendered = fig1::generate(&protocol, !args.flag("quiet"))?;
+    println!("{rendered}");
+    println!("written to results/fig1/");
+    Ok(())
+}
+
+fn cmd_fig3(args: &Args) -> Result<()> {
+    let protocol = protocol_from(args);
+    eprintln!("fig3: {}", protocol.describe());
+    let rendered = fig3::generate(&protocol, !args.flag("quiet"))?;
+    println!("{rendered}");
+    println!("written to results/fig3/");
+    Ok(())
+}
+
+fn cmd_cd(args: &Args) -> Result<()> {
+    let protocol = protocol_from(args);
+    let metric = args.get_or("metric", "all").to_string();
+    eprintln!("cd[{metric}]: {}", protocol.describe());
+    if metric == "all" {
+        println!("{}", cd::generate(&protocol, !args.flag("quiet"))?);
+        println!("written to results/cd/");
+    } else {
+        let results = fig1::run_protocol(&protocol, !args.flag("quiet"));
+        println!("{}", cd::analyze(&results, &metric)?);
+    }
+    Ok(())
+}
+
+fn cmd_tree(args: &Args) -> Result<()> {
+    let instances = args.usize_or("instances", 100_000);
+    let seed = args.u64_or("seed", 1);
+    println!("{}", tree_bench::generate(instances, seed)?);
+    println!("written to results/tree/");
+    Ok(())
+}
+
+fn cmd_coordinator(args: &Args) -> Result<()> {
+    let shards = args.usize_or("shards", 4);
+    let instances = args.usize_or("instances", 500_000);
+    let radius = args.f64_or("radius", 0.05);
+    let mut stream = Friedman1::new(args.u64_or("seed", 1), 1.0);
+    let coordinator = ShardedObserverCoordinator::new(
+        stream.n_features(),
+        CoordinatorConfig { n_shards: shards, radius, ..Default::default() },
+    );
+    println!("coordinating {instances} instances over {shards} shard(s), r={radius}");
+    let report = coordinator.run(&mut stream, instances);
+    println!(
+        "done in {} ({:.1}k inst/s); per-shard: {:?}",
+        human_time(report.seconds),
+        report.instances as f64 / report.seconds / 1e3,
+        report.per_shard
+    );
+    for (f, split) in report.best_splits(&VarianceReduction).iter().enumerate() {
+        match split {
+            Some(s) => println!(
+                "  feature {f}: slots={:<5} best split x <= {:.4} (VR {:.4})",
+                report.merged[f].n_elements(),
+                s.threshold,
+                s.merit
+            ),
+            None => println!("  feature {f}: no split"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_xla(args: &Args) -> Result<()> {
+    let dir = find_artifacts_dir()?;
+    let manifest = Manifest::load(&dir)?;
+    let client = xla::PjRtClient::cpu()?;
+    let engine = XlaSplitEngine::load(&client, &manifest)?;
+    println!(
+        "loaded split_eval artifact (F={}, S={}) on {}",
+        engine.f,
+        engine.s,
+        client.platform_name()
+    );
+    let n = args.usize_or("instances", 20_000);
+    let radius = args.f64_or("radius", 0.05);
+    let mut rng = qostream::common::Rng::new(args.u64_or("seed", 7));
+    let observers: Vec<qostream::observer::QuantizationObserver> = (0..engine.f)
+        .map(|f| {
+            let mut qo = qostream::observer::QuantizationObserver::with_radius(radius);
+            for _ in 0..n {
+                let x = rng.normal(0.0, 1.0);
+                let y = (f as f64 + 1.0) * x.powi(2) + rng.normal(0.0, 0.1);
+                qo.observe(x, y, 1.0);
+            }
+            qo
+        })
+        .collect();
+    let refs: Vec<&qostream::observer::QuantizationObserver> = observers.iter().collect();
+    let (secs, results) = qostream::common::timing::time_once(|| {
+        engine.best_splits_for_observers(&refs).expect("xla eval")
+    });
+    println!("evaluated {} features in {}", engine.f, human_time(secs));
+    for (f, (qo, res)) in observers.iter().zip(&results).enumerate() {
+        let native = qo.best_split(&VarianceReduction).unwrap();
+        let xres = res.expect("split");
+        println!(
+            "  feature {f}: xla (c={:.4}, vr={:.4})  native (c={:.4}, vr={:.4})  agree={}",
+            xres.threshold,
+            xres.merit,
+            native.threshold,
+            native.merit,
+            (xres.threshold - native.threshold).abs() < 1e-9
+        );
+    }
+    Ok(())
+}
+
+fn cmd_all(args: &Args) -> Result<()> {
+    cmd_fig1(args)?;
+    cmd_fig3(args)?;
+    cmd_cd(args)?;
+    cmd_tree(args)?;
+    Ok(())
+}
+
+const USAGE: &str = "\
+qostream — Quantization Observer for online tree regressors (paper reproduction)
+
+USAGE: qostream <subcommand> [options]
+
+SUBCOMMANDS
+  protocol     describe the Table 1 grid          [--profile quick|standard|full]
+  fig1         merit/elements/time vs sample size [--profile --sizes --reps]
+  fig3         split-point distance to E-BST      [--profile --sizes --reps]
+  cd           Friedman/Nemenyi CD diagrams       [--metric merit|elements|observe|query|all]
+  tree         Hoeffding-tree integration bench   [--instances N --seed S]
+  coordinator  sharded distributed observation    [--shards N --instances N --radius R]
+  xla          AOT split-eval via PJRT artifacts  [--instances N --radius R]
+  all          fig1 + fig3 + cd + tree (standard profile)
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("protocol") => cmd_protocol(&args),
+        Some("fig1") => cmd_fig1(&args),
+        Some("fig3") => cmd_fig3(&args),
+        Some("cd") => cmd_cd(&args),
+        Some("tree") => cmd_tree(&args),
+        Some("coordinator") => cmd_coordinator(&args),
+        Some("xla") => cmd_xla(&args),
+        Some("all") => cmd_all(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}

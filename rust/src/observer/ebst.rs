@@ -1,0 +1,344 @@
+//! E-BST — the Extended Binary Search Tree attribute observer
+//! (Ikonomovska et al. 2011), the baseline the paper compares against —
+//! and TE-BST, its input-truncating variant (paper Sec. 5.2).
+//!
+//! Each node is keyed by an observed feature value and stores the robust
+//! target statistics of every observation with `x ≤ key` that *passed
+//! through* the node on insertion (which covers the node's entire left
+//! subtree). An in-order traversal accumulating ancestor statistics then
+//! yields, at each node, the full left-hand statistics for the candidate
+//! split `x ≤ key`; the right side is the Chan subtraction from the total.
+//!
+//! Nodes live in an arena (`Vec`) with u32 child indices: cache-friendlier
+//! than boxed pointers and immune to recursion-depth issues — both the
+//! insertion and the traversal are iterative, so adversarially sorted
+//! input (a degenerate O(n)-deep tree) cannot overflow the stack.
+
+use crate::criterion::SplitCriterion;
+use crate::stats::VarStats;
+
+use super::{AttributeObserver, SplitSuggestion};
+
+const NONE: u32 = u32::MAX;
+
+#[derive(Clone, Copy, Debug)]
+struct Node {
+    key: f64,
+    /// Statistics of all y whose x ≤ key among observations routed
+    /// through this node.
+    stats_le: VarStats,
+    left: u32,
+    right: u32,
+}
+
+/// The classical E-BST observer.
+#[derive(Clone, Debug, Default)]
+pub struct EBst {
+    arena: Vec<Node>,
+    root: u32,
+    total: VarStats,
+}
+
+impl EBst {
+    pub fn new() -> EBst {
+        EBst { arena: Vec::new(), root: NONE, total: VarStats::new() }
+    }
+
+    fn insert(&mut self, key: f64, y: f64, w: f64) {
+        if self.root == NONE {
+            self.root = self.push_node(key, y, w);
+            return;
+        }
+        let mut idx = self.root;
+        loop {
+            let node = &mut self.arena[idx as usize];
+            if key <= node.key {
+                // x ≤ node.key: this observation belongs to the node's
+                // ≤-region statistics
+                node.stats_le.update(y, w);
+                if key == node.key {
+                    return;
+                }
+                if node.left == NONE {
+                    let new = self.push_node(key, y, w);
+                    self.arena[idx as usize].left = new;
+                    return;
+                }
+                idx = node.left;
+            } else {
+                if node.right == NONE {
+                    let new = self.push_node(key, y, w);
+                    self.arena[idx as usize].right = new;
+                    return;
+                }
+                idx = node.right;
+            }
+        }
+    }
+
+    fn push_node(&mut self, key: f64, y: f64, w: f64) -> u32 {
+        self.arena.push(Node {
+            key,
+            stats_le: VarStats::from_one(y, w),
+            left: NONE,
+            right: NONE,
+        });
+        (self.arena.len() - 1) as u32
+    }
+
+    /// Iterative in-order traversal; calls `visit(key, left_stats)` for
+    /// every candidate threshold with the statistics of `x ≤ key`.
+    fn for_each_candidate(&self, mut visit: impl FnMut(f64, VarStats)) {
+        if self.root == NONE {
+            return;
+        }
+        // (node, ancestor-left statistics, children-expanded?)
+        let mut stack: Vec<(u32, VarStats, bool)> = vec![(self.root, VarStats::new(), false)];
+        while let Some((idx, acc, expanded)) = stack.pop() {
+            let node = &self.arena[idx as usize];
+            if !expanded {
+                stack.push((idx, acc, true));
+                if node.left != NONE {
+                    stack.push((node.left, acc, false));
+                }
+            } else {
+                let left_stats = acc + node.stats_le;
+                visit(node.key, left_stats);
+                if node.right != NONE {
+                    stack.push((node.right, left_stats, false));
+                }
+            }
+        }
+    }
+
+    fn best_split_impl(&self, criterion: &dyn SplitCriterion) -> Option<SplitSuggestion> {
+        let mut best: Option<SplitSuggestion> = None;
+        let total = self.total;
+        self.for_each_candidate(|key, left| {
+            // the maximal key covers the whole sample: not a valid binary
+            // partition (empty right side)
+            if left.n >= total.n {
+                return;
+            }
+            let right = total - left;
+            let merit = criterion.merit(&total, &left, &right);
+            if best.map(|b| merit > b.merit).unwrap_or(true) {
+                best = Some(SplitSuggestion { threshold: key, merit, left, right });
+            }
+        });
+        best
+    }
+}
+
+impl AttributeObserver for EBst {
+    fn observe(&mut self, x: f64, y: f64, w: f64) {
+        if w <= 0.0 || !x.is_finite() || !y.is_finite() {
+            return;
+        }
+        self.total.update(y, w);
+        self.insert(x, y, w);
+    }
+
+    fn best_split(&self, criterion: &dyn SplitCriterion) -> Option<SplitSuggestion> {
+        self.best_split_impl(criterion)
+    }
+
+    fn n_elements(&self) -> usize {
+        self.arena.len()
+    }
+
+    fn name(&self) -> String {
+        "E-BST".to_string()
+    }
+
+    fn total(&self) -> VarStats {
+        self.total
+    }
+
+    fn reset(&mut self) {
+        self.arena.clear();
+        self.root = NONE;
+        self.total = VarStats::new();
+    }
+}
+
+/// TE-BST: E-BST over feature values truncated to `decimals` decimal
+/// places before insertion (paper Sec. 5.2 uses 3).
+#[derive(Clone, Debug)]
+pub struct TruncatedEBst {
+    inner: EBst,
+    factor: f64,
+    decimals: u32,
+}
+
+impl TruncatedEBst {
+    pub fn new(decimals: u32) -> TruncatedEBst {
+        TruncatedEBst { inner: EBst::new(), factor: 10f64.powi(decimals as i32), decimals }
+    }
+
+    /// Truncation toward zero, as "truncate to d decimal places" implies.
+    #[inline]
+    pub fn truncate(&self, x: f64) -> f64 {
+        (x * self.factor).trunc() / self.factor
+    }
+}
+
+impl AttributeObserver for TruncatedEBst {
+    fn observe(&mut self, x: f64, y: f64, w: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        self.inner.observe(self.truncate(x), y, w);
+    }
+
+    fn best_split(&self, criterion: &dyn SplitCriterion) -> Option<SplitSuggestion> {
+        self.inner.best_split(criterion)
+    }
+
+    fn n_elements(&self) -> usize {
+        self.inner.n_elements()
+    }
+
+    fn name(&self) -> String {
+        format!("TE-BST_{}", self.decimals)
+    }
+
+    fn total(&self) -> VarStats {
+        self.inner.total()
+    }
+
+    fn reset(&mut self) {
+        self.inner.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::proptest::{check, expect_close};
+    use crate::common::Rng;
+    use crate::criterion::VarianceReduction;
+    use crate::observer::ExhaustiveObserver;
+
+    #[test]
+    fn node_count_equals_distinct_values() {
+        let mut bst = EBst::new();
+        for x in [1.0, 2.0, 1.0, 3.0, 2.0, 1.0] {
+            bst.observe(x, x, 1.0);
+        }
+        assert_eq!(bst.n_elements(), 3);
+        assert_eq!(bst.total().n, 6.0);
+    }
+
+    #[test]
+    fn matches_exhaustive_on_random_data() {
+        // E-BST candidates are the observed values (threshold = key), the
+        // exhaustive oracle uses midpoints; merits at the argmax must agree
+        // because both partition identically between the same neighbours.
+        let mut bst = EBst::new();
+        let mut ex = ExhaustiveObserver::new();
+        let mut rng = Rng::new(21);
+        for _ in 0..2000 {
+            let x = rng.normal(0.0, 1.0);
+            let y = (x * 3.0).sin() + rng.normal(0.0, 0.05);
+            bst.observe(x, y, 1.0);
+            ex.observe(x, y, 1.0);
+        }
+        let sb = bst.best_split(&VarianceReduction).unwrap();
+        let se = ex.best_split(&VarianceReduction).unwrap();
+        assert!((sb.merit - se.merit).abs() < 1e-9, "{} vs {}", sb.merit, se.merit);
+        assert!((sb.left.n - se.left.n).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sorted_insertion_does_not_overflow() {
+        // degenerate O(n)-deep tree: iterative insert/traverse must survive
+        let mut bst = EBst::new();
+        for i in 0..30_000 {
+            bst.observe(i as f64, (i % 7) as f64, 1.0);
+        }
+        assert_eq!(bst.n_elements(), 30_000);
+        assert!(bst.best_split(&VarianceReduction).is_some());
+    }
+
+    #[test]
+    fn rightmost_key_not_proposed() {
+        let mut bst = EBst::new();
+        for (x, y) in [(1.0, 0.0), (2.0, 1.0), (3.0, 5.0)] {
+            bst.observe(x, y, 1.0);
+        }
+        let s = bst.best_split(&VarianceReduction).unwrap();
+        assert!(s.threshold < 3.0);
+        assert!(s.right.n > 0.0);
+    }
+
+    #[test]
+    fn truncation_collapses_nearby_values() {
+        let mut te = TruncatedEBst::new(3);
+        te.observe(0.12345, 1.0, 1.0);
+        te.observe(0.12349, 2.0, 1.0);
+        te.observe(0.12441, 3.0, 1.0);
+        assert_eq!(te.n_elements(), 2); // 0.123 and 0.124
+    }
+
+    #[test]
+    fn truncate_toward_zero() {
+        let te = TruncatedEBst::new(3);
+        assert_eq!(te.truncate(1.23456), 1.234);
+        assert_eq!(te.truncate(-1.23456), -1.234);
+    }
+
+    #[test]
+    fn tebst_fewer_elements_than_ebst() {
+        let mut bst = EBst::new();
+        let mut te = TruncatedEBst::new(3);
+        let mut rng = Rng::new(23);
+        for _ in 0..50_000 {
+            let x = rng.normal(0.0, 0.1);
+            bst.observe(x, x, 1.0);
+            te.observe(x, x, 1.0);
+        }
+        assert!(te.n_elements() < bst.n_elements());
+    }
+
+    #[test]
+    fn prop_partition_sums_to_total() {
+        check("ebst-partition-total", 0xC0, 40, |rng| {
+            let mut bst = EBst::new();
+            let n = 50 + rng.below(500);
+            for _ in 0..n {
+                bst.observe(rng.normal(0.0, 3.0), rng.normal(0.0, 1.0), 1.0);
+            }
+            if let Some(s) = bst.best_split(&VarianceReduction) {
+                let sum = s.left + s.right;
+                expect_close("n", sum.n, bst.total().n, 1e-9, 1e-9)?;
+                expect_close("mean", sum.mean, bst.total().mean, 1e-7, 1e-7)?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_ebst_merit_geq_qo_merit() {
+        // paper Sec. 6.1: exhaustive methods upper-bound QO's merit
+        use crate::observer::{QuantizationObserver, RadiusPolicy};
+        check("ebst>=qo", 0xC1, 25, |rng| {
+            let mut bst = EBst::new();
+            let mut qo = QuantizationObserver::new(RadiusPolicy::Fixed(0.25));
+            let n = 500 + rng.below(1500);
+            for _ in 0..n {
+                let x = rng.normal(0.0, 1.0);
+                let y = x.powi(3) + rng.normal(0.0, 0.2);
+                bst.observe(x, y, 1.0);
+                qo.observe(x, y, 1.0);
+            }
+            let mb = bst.best_split(&VarianceReduction).map(|s| s.merit).unwrap_or(0.0);
+            let mq = qo.best_split(&VarianceReduction).map(|s| s.merit).unwrap_or(0.0);
+            if mb + 1e-9 >= mq {
+                Ok(())
+            } else {
+                Err(format!("E-BST merit {mb} < QO merit {mq}"))
+            }
+        });
+    }
+}

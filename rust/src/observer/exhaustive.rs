@@ -1,0 +1,133 @@
+//! Exhaustive (batch-style) attribute observer: stores the raw sample and
+//! evaluates **every** boundary between distinct feature values.
+//!
+//! This is what a batch CART/FIMT split search would do with the full data
+//! in memory; it is the oracle the approximate observers (QO, E-BST,
+//! TE-BST) are tested against. O(n) memory, O(n log n) query.
+
+use crate::criterion::SplitCriterion;
+use crate::stats::VarStats;
+
+use super::{AttributeObserver, SplitSuggestion};
+
+#[derive(Clone, Debug, Default)]
+pub struct ExhaustiveObserver {
+    points: Vec<(f64, f64, f64)>,
+    total: VarStats,
+}
+
+impl ExhaustiveObserver {
+    pub fn new() -> ExhaustiveObserver {
+        ExhaustiveObserver::default()
+    }
+
+    /// Every candidate (threshold, merit), sorted by threshold — used by
+    /// tests that compare full merit curves rather than just the argmax.
+    pub fn all_candidates(&self, criterion: &dyn SplitCriterion) -> Vec<(f64, f64)> {
+        let mut pts = self.points.clone();
+        pts.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut out = Vec::new();
+        let mut left = VarStats::new();
+        for i in 0..pts.len().saturating_sub(1) {
+            let (x, y, w) = pts[i];
+            left.update(y, w);
+            let x_next = pts[i + 1].0;
+            if x_next <= x {
+                continue;
+            }
+            let right = self.total - left;
+            out.push((0.5 * (x + x_next), criterion.merit(&self.total, &left, &right)));
+        }
+        out
+    }
+}
+
+impl AttributeObserver for ExhaustiveObserver {
+    fn observe(&mut self, x: f64, y: f64, w: f64) {
+        if w <= 0.0 || !x.is_finite() || !y.is_finite() {
+            return;
+        }
+        self.points.push((x, y, w));
+        self.total.update(y, w);
+    }
+
+    fn best_split(&self, criterion: &dyn SplitCriterion) -> Option<SplitSuggestion> {
+        let mut pts = self.points.clone();
+        if pts.len() < 2 {
+            return None;
+        }
+        pts.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut left = VarStats::new();
+        let mut best: Option<SplitSuggestion> = None;
+        for i in 0..pts.len() - 1 {
+            let (x, y, w) = pts[i];
+            left.update(y, w);
+            let x_next = pts[i + 1].0;
+            if x_next <= x {
+                continue;
+            }
+            let right = self.total - left;
+            let merit = criterion.merit(&self.total, &left, &right);
+            if best.map(|b| merit > b.merit).unwrap_or(true) {
+                best = Some(SplitSuggestion { threshold: 0.5 * (x + x_next), merit, left, right });
+            }
+        }
+        best
+    }
+
+    fn n_elements(&self) -> usize {
+        self.points.len()
+    }
+
+    fn name(&self) -> String {
+        "Exhaustive".to_string()
+    }
+
+    fn total(&self) -> VarStats {
+        self.total
+    }
+
+    fn reset(&mut self) {
+        self.points.clear();
+        self.total = VarStats::new();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::criterion::VarianceReduction;
+
+    #[test]
+    fn exact_split_on_step() {
+        let mut ex = ExhaustiveObserver::new();
+        for i in 0..100 {
+            let x = i as f64 / 100.0;
+            ex.observe(x, if x <= 0.42 { 0.0 } else { 1.0 }, 1.0);
+        }
+        let s = ex.best_split(&VarianceReduction).unwrap();
+        assert!((s.threshold - 0.425).abs() < 1e-9, "{}", s.threshold);
+        assert!((s.merit - ex.total().variance()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_split_with_constant_feature() {
+        let mut ex = ExhaustiveObserver::new();
+        for y in [1.0, 2.0, 3.0] {
+            ex.observe(5.0, y, 1.0);
+        }
+        assert!(ex.best_split(&VarianceReduction).is_none());
+    }
+
+    #[test]
+    fn candidates_count_distinct_boundaries() {
+        let mut ex = ExhaustiveObserver::new();
+        for (x, y) in [(1.0, 0.0), (1.0, 1.0), (2.0, 2.0), (3.0, 0.5)] {
+            ex.observe(x, y, 1.0);
+        }
+        let cands = ex.all_candidates(&VarianceReduction);
+        assert_eq!(cands.len(), 2); // boundaries 1|2 and 2|3
+        assert!((cands[0].0 - 1.5).abs() < 1e-12);
+        assert!((cands[1].0 - 2.5).abs() < 1e-12);
+    }
+}

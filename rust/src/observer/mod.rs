@@ -1,0 +1,166 @@
+//! Attribute Observers (AOs): the structures an online regression tree
+//! keeps per numerical feature per leaf to monitor the stream and answer
+//! split-candidate queries.
+//!
+//! * [`QuantizationObserver`] — the paper's contribution (Sec. 4): O(1)
+//!   hashed insertion, O(|H| log |H|) query, |H| ≪ n memory.
+//! * [`EBst`] — the classical Extended Binary Search Tree baseline
+//!   (Ikonomovska et al. 2011): O(log n) insertion, O(n) memory/query.
+//! * [`TruncatedEBst`] — E-BST over inputs truncated to `d` decimal places
+//!   (the paper's TE-BST baseline).
+//! * [`ExhaustiveObserver`] — stores the raw sample and evaluates every
+//!   boundary; the test oracle.
+//!
+//! All observers use the robust [`VarStats`] estimators
+//! (the paper replaces the naive Σy² statistics in *all*
+//! compared AOs, Sec. 3).
+
+pub mod ebst;
+pub mod exhaustive;
+pub mod multi_target;
+pub mod qo;
+pub mod radius;
+
+pub use ebst::{EBst, TruncatedEBst};
+pub use exhaustive::ExhaustiveObserver;
+pub use multi_target::MultiTargetQuantizationObserver;
+pub use qo::QuantizationObserver;
+pub use radius::RadiusPolicy;
+
+use crate::criterion::SplitCriterion;
+use crate::stats::VarStats;
+
+/// A proposed binary split `x ≤ threshold` with its merit and the target
+/// statistics of the two branches.
+#[derive(Clone, Copy, Debug)]
+pub struct SplitSuggestion {
+    pub threshold: f64,
+    pub merit: f64,
+    pub left: VarStats,
+    pub right: VarStats,
+}
+
+/// The interface the tree (and the bench harness) programs against.
+pub trait AttributeObserver: Send {
+    /// Monitor one observation of the feature with target `y`, weight `w`.
+    fn observe(&mut self, x: f64, y: f64, w: f64);
+
+    /// Best split candidate under `criterion`, or `None` if fewer than two
+    /// distinct partitions have been observed.
+    fn best_split(&self, criterion: &dyn SplitCriterion) -> Option<SplitSuggestion>;
+
+    /// Number of stored elements (paper's memory metric: BST nodes or hash
+    /// slots — all elements store the same statistics, Sec. 5.3).
+    fn n_elements(&self) -> usize;
+
+    /// Observer name for reports.
+    fn name(&self) -> String;
+
+    /// Total target statistics seen by this observer.
+    fn total(&self) -> VarStats;
+
+    /// Forget everything (leaf reuse after a split).
+    fn reset(&mut self);
+}
+
+/// Factory for building one observer per feature (tree leaves need
+/// independently-owned instances).
+pub trait ObserverFactory: Send + Sync {
+    fn build(&self) -> Box<dyn AttributeObserver>;
+    fn name(&self) -> String;
+}
+
+/// Blanket factory from a closure.
+pub struct FnObserverFactory<F: Fn() -> Box<dyn AttributeObserver> + Send + Sync> {
+    pub f: F,
+    pub label: String,
+}
+
+impl<F: Fn() -> Box<dyn AttributeObserver> + Send + Sync> ObserverFactory
+    for FnObserverFactory<F>
+{
+    fn build(&self) -> Box<dyn AttributeObserver> {
+        (self.f)()
+    }
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+}
+
+/// Convenience constructor for boxed closure factories.
+pub fn factory<F>(label: &str, f: F) -> Box<dyn ObserverFactory>
+where
+    F: Fn() -> Box<dyn AttributeObserver> + Send + Sync + 'static,
+{
+    Box::new(FnObserverFactory { f, label: label.to_string() })
+}
+
+/// The paper's five compared observer configurations (Sec. 5.2).
+pub fn paper_lineup() -> Vec<Box<dyn ObserverFactory>> {
+    vec![
+        factory("E-BST", || Box::new(EBst::new())),
+        factory("TE-BST", || Box::new(TruncatedEBst::new(3))),
+        factory("QO_0.01", || {
+            Box::new(QuantizationObserver::new(RadiusPolicy::Fixed(0.01)))
+        }),
+        factory("QO_s2", || {
+            Box::new(QuantizationObserver::new(RadiusPolicy::std_fraction(2.0)))
+        }),
+        factory("QO_s3", || {
+            Box::new(QuantizationObserver::new(RadiusPolicy::std_fraction(3.0)))
+        }),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::criterion::VarianceReduction;
+
+    #[test]
+    fn paper_lineup_names() {
+        let names: Vec<String> = paper_lineup().iter().map(|f| f.name()).collect();
+        assert_eq!(names, vec!["E-BST", "TE-BST", "QO_0.01", "QO_s2", "QO_s3"]);
+    }
+
+    #[test]
+    fn factories_build_independent_observers() {
+        let lineup = paper_lineup();
+        let mut a = lineup[0].build();
+        let b = lineup[0].build();
+        a.observe(1.0, 2.0, 1.0);
+        assert_eq!(a.n_elements(), 1);
+        assert_eq!(b.n_elements(), 0);
+    }
+
+    #[test]
+    fn all_observers_agree_on_step_function() {
+        // y = -1 for x <= 0, +1 for x > 0: every AO must find a split
+        // near 0 with merit close to the full variance.
+        let crit = VarianceReduction;
+        for fac in paper_lineup() {
+            let mut ao = fac.build();
+            let mut rng = crate::common::Rng::new(99);
+            for _ in 0..2000 {
+                let x = rng.uniform(-1.0, 1.0);
+                let y = if x <= 0.0 { -1.0 } else { 1.0 };
+                ao.observe(x, y, 1.0);
+            }
+            let s = ao.best_split(&crit).unwrap_or_else(|| panic!("{} no split", fac.name()));
+            assert!(
+                s.threshold.abs() < 0.05,
+                "{}: threshold {}",
+                fac.name(),
+                s.threshold
+            );
+            let total = ao.total();
+            assert!(
+                s.merit > 0.9 * total.variance(),
+                "{}: merit {} vs var {}",
+                fac.name(),
+                s.merit,
+                total.variance()
+            );
+        }
+    }
+}

@@ -1,0 +1,512 @@
+//! The Quantization Observer (QO) — the paper's contribution (Sec. 4).
+//!
+//! A single hash table `H` maps bucket code `h = ⌊x / r⌋` to a slot holding
+//! the sum of the feature values and a robust target estimator
+//! ([`VarStats`]). Insertion is O(1) amortized (paper Alg. 1); the split
+//! query (paper Alg. 2) sorts the |H| occupied codes, prefix-merges the
+//! target statistics left-to-right, recovers right-hand statistics by the
+//! Chan subtraction, and proposes the midpoint of consecutive slot
+//! *prototypes* (mean feature value per slot) as the candidate threshold.
+//!
+//! Dynamical radii (r = σ̂/k) warm up on a small buffered prefix of the
+//! stream before freezing — see [`RadiusPolicy`].
+
+use std::collections::HashMap;
+
+use crate::common::fxhash::FxBuildHasher;
+
+use crate::criterion::SplitCriterion;
+use crate::stats::VarStats;
+
+use super::radius::{RadiusPolicy, RadiusState};
+use super::{AttributeObserver, SplitSuggestion};
+
+/// One hash slot: Σx (for the prototype) + robust target statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Slot {
+    pub sum_x: f64,
+    pub stats: VarStats,
+}
+
+impl Slot {
+    #[inline]
+    fn observe(&mut self, x: f64, y: f64, w: f64) {
+        self.sum_x += w * x;
+        self.stats.update(y, w);
+    }
+
+    /// Prototype feature value: the mean x of the slot's members.
+    #[inline]
+    pub fn prototype(&self) -> f64 {
+        if self.stats.n > 0.0 {
+            self.sum_x / self.stats.n
+        } else {
+            0.0
+        }
+    }
+}
+
+/// How the threshold between two consecutive occupied slots is chosen.
+/// The paper (Sec. 4) uses prototype midpoints and notes that "other
+/// strategies could also be employed" — the grid-boundary alternative is
+/// provided for the ablation bench (it needs no Σx bookkeeping at all).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SplitPointStrategy {
+    /// Midpoint of the two slots' mean feature values (paper Alg. 2).
+    #[default]
+    PrototypeMidpoint,
+    /// The quantization-grid edge after the left slot: (code+1)·r.
+    GridBoundary,
+}
+
+/// The Quantization Observer (paper Sec. 4).
+#[derive(Debug)]
+pub struct QuantizationObserver {
+    policy: RadiusPolicy,
+    state: RadiusState,
+    slots: HashMap<i64, Slot, FxBuildHasher>,
+    total: VarStats,
+    strategy: SplitPointStrategy,
+}
+
+impl QuantizationObserver {
+    pub fn new(policy: RadiusPolicy) -> QuantizationObserver {
+        QuantizationObserver {
+            policy,
+            state: RadiusState::new(policy),
+            slots: HashMap::default(),
+            total: VarStats::new(),
+            strategy: SplitPointStrategy::default(),
+        }
+    }
+
+    /// Select a split-point strategy (default: prototype midpoints).
+    pub fn with_strategy(mut self, strategy: SplitPointStrategy) -> Self {
+        self.strategy = strategy;
+        self
+    }
+
+    /// Fixed-radius constructor (paper's QO_0.01 uses `r = 0.01`).
+    pub fn with_radius(r: f64) -> QuantizationObserver {
+        QuantizationObserver::new(RadiusPolicy::Fixed(r))
+    }
+
+    /// The quantization radius, once decided.
+    pub fn radius(&self) -> Option<f64> {
+        self.state.radius()
+    }
+
+    /// Bucket code for `x` under radius `r` (paper: h = ⌊x/r⌋), saturating
+    /// at the i64 range so extreme `x/r` ratios cannot wrap.
+    #[inline]
+    pub fn code(x: f64, r: f64) -> i64 {
+        let q = (x / r).floor();
+        if q >= i64::MAX as f64 {
+            i64::MAX
+        } else if q <= i64::MIN as f64 {
+            i64::MIN
+        } else {
+            q as i64
+        }
+    }
+
+    #[inline]
+    fn insert_hashed(&mut self, r: f64, x: f64, y: f64, w: f64) {
+        self.slots.entry(Self::code(x, r)).or_default().observe(x, y, w);
+    }
+
+    /// Merge a pre-aggregated slot into the hash. Used by the bulk XLA
+    /// ingest path and by the sharded coordinator when combining partial
+    /// observers — correctness rests on the Chan merge (paper Eqs. 4–5).
+    ///
+    /// Panics if the radius is still warming (bulk merges only make sense
+    /// once the quantization grid is fixed).
+    pub fn absorb_slot(&mut self, code: i64, sum_x: f64, stats: VarStats) {
+        assert!(
+            self.state.radius().is_some(),
+            "absorb_slot requires a frozen radius (use RadiusPolicy::Fixed)"
+        );
+        if stats.is_empty() {
+            return;
+        }
+        let slot = self.slots.entry(code).or_default();
+        slot.sum_x += sum_x;
+        slot.stats += stats;
+        self.total += stats;
+    }
+
+    /// Merge everything another observer has seen into this one. Both
+    /// observers must use the same frozen radius (same grid), otherwise
+    /// bucket codes are incompatible.
+    pub fn merge_from(&mut self, other: &QuantizationObserver) {
+        let (ra, rb) = (self.state.radius(), other.state.radius());
+        match (ra, rb) {
+            (Some(ra), Some(rb)) => {
+                assert!(
+                    (ra - rb).abs() <= 1e-12 * ra.abs().max(rb.abs()),
+                    "radius mismatch: {ra} vs {rb}"
+                );
+            }
+            _ => panic!("merge_from requires both radii frozen"),
+        }
+        for (&code, slot) in &other.slots {
+            self.absorb_slot(code, slot.sum_x, slot.stats);
+        }
+    }
+
+    /// Occupied slots sorted by bucket code — the query-side view, also
+    /// used to feed the XLA split engine (`runtime::split_engine`).
+    pub fn sorted_slots(&self) -> Vec<(i64, Slot)> {
+        let mut items: Vec<(i64, Slot)> = self.slots.iter().map(|(&k, &s)| (k, s)).collect();
+        items.sort_unstable_by_key(|&(k, _)| k);
+        items
+    }
+
+    /// Split query over the warming buffer (before the radius freezes):
+    /// exhaustive sweep over the few buffered raw points so trees can
+    /// still attempt early splits.
+    fn best_split_buffered(&self, criterion: &dyn SplitCriterion) -> Option<SplitSuggestion> {
+        let buffer = match &self.state {
+            RadiusState::Warming { buffer, .. } => buffer,
+            RadiusState::Frozen(_) => return None,
+        };
+        let mut pts: Vec<(f64, f64, f64)> = buffer.clone();
+        if pts.len() < 2 {
+            return None;
+        }
+        pts.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        let mut left = VarStats::new();
+        let mut best: Option<SplitSuggestion> = None;
+        for i in 0..pts.len() - 1 {
+            let (x, y, w) = pts[i];
+            left.update(y, w);
+            let (x_next, _, _) = pts[i + 1];
+            if x_next <= x {
+                continue; // duplicate feature value: no boundary here
+            }
+            let right = self.total - left;
+            let merit = criterion.merit(&self.total, &left, &right);
+            if best.map(|b| merit > b.merit).unwrap_or(true) {
+                best = Some(SplitSuggestion {
+                    threshold: 0.5 * (x + x_next),
+                    merit,
+                    left,
+                    right,
+                });
+            }
+        }
+        best
+    }
+}
+
+impl AttributeObserver for QuantizationObserver {
+    fn observe(&mut self, x: f64, y: f64, w: f64) {
+        if w <= 0.0 || !x.is_finite() || !y.is_finite() {
+            return;
+        }
+        self.total.update(y, w);
+        match self.state.radius() {
+            Some(r) => self.insert_hashed(r, x, y, w),
+            None => {
+                if let Some((r, buffered)) = self.state.on_observe(x, y, w) {
+                    // radius froze: replay the warmup buffer into the hash
+                    for (bx, by, bw) in buffered {
+                        self.insert_hashed(r, bx, by, bw);
+                    }
+                }
+            }
+        }
+    }
+
+    fn best_split(&self, criterion: &dyn SplitCriterion) -> Option<SplitSuggestion> {
+        if self.state.radius().is_none() {
+            return self.best_split_buffered(criterion);
+        }
+        let slots = self.sorted_slots();
+        if slots.len() < 2 {
+            return None;
+        }
+        // paper Alg. 2: prefix-merge left-to-right, subtract for the right
+        let radius = self.state.radius().unwrap_or(1.0);
+        let mut left = VarStats::new();
+        let mut best: Option<SplitSuggestion> = None;
+        for window in slots.windows(2) {
+            let (code, slot) = window[0];
+            let (_, next) = window[1];
+            left += slot.stats;
+            let right = self.total - left;
+            let merit = criterion.merit(&self.total, &left, &right);
+            if best.map(|b| merit > b.merit).unwrap_or(true) {
+                let threshold = match self.strategy {
+                    SplitPointStrategy::PrototypeMidpoint => {
+                        0.5 * (slot.prototype() + next.prototype())
+                    }
+                    SplitPointStrategy::GridBoundary => (code + 1) as f64 * radius,
+                };
+                best = Some(SplitSuggestion { threshold, merit, left, right });
+            }
+        }
+        best
+    }
+
+    fn n_elements(&self) -> usize {
+        if self.slots.is_empty() {
+            self.state.buffered()
+        } else {
+            self.slots.len()
+        }
+    }
+
+    fn name(&self) -> String {
+        self.policy.label()
+    }
+
+    fn total(&self) -> VarStats {
+        self.total
+    }
+
+    fn reset(&mut self) {
+        self.state = RadiusState::new(self.policy);
+        self.slots.clear();
+        self.total = VarStats::new();
+        // strategy is configuration, not state: kept across resets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::proptest::{check, expect_close};
+    use crate::common::Rng;
+    use crate::criterion::VarianceReduction;
+    use crate::observer::ExhaustiveObserver;
+
+    #[test]
+    fn code_floor_semantics() {
+        assert_eq!(QuantizationObserver::code(0.0, 0.1), 0);
+        assert_eq!(QuantizationObserver::code(0.09, 0.1), 0);
+        assert_eq!(QuantizationObserver::code(0.10, 0.1), 1);
+        assert_eq!(QuantizationObserver::code(-0.01, 0.1), -1);
+        assert_eq!(QuantizationObserver::code(-0.1, 0.1), -1);
+        assert_eq!(QuantizationObserver::code(1e300, 1e-300), i64::MAX);
+        assert_eq!(QuantizationObserver::code(-1e300, 1e-300), i64::MIN);
+    }
+
+    #[test]
+    fn slot_count_bounded_by_range_over_radius() {
+        let mut qo = QuantizationObserver::with_radius(0.1);
+        let mut rng = Rng::new(5);
+        for _ in 0..10_000 {
+            qo.observe(rng.uniform(-1.0, 1.0), rng.f64(), 1.0);
+        }
+        // codes in [-10, 9] -> at most 20 slots, and n' << n
+        assert!(qo.n_elements() <= 20, "{}", qo.n_elements());
+        assert!(qo.n_elements() >= 15);
+    }
+
+    #[test]
+    fn total_matches_slot_merge() {
+        let mut qo = QuantizationObserver::with_radius(0.05);
+        let mut rng = Rng::new(6);
+        for _ in 0..3000 {
+            qo.observe(rng.normal(0.0, 1.0), rng.normal(2.0, 3.0), 1.0);
+        }
+        let merged = qo
+            .sorted_slots()
+            .into_iter()
+            .fold(VarStats::new(), |acc, (_, s)| acc + s.stats);
+        assert!((merged.n - qo.total().n).abs() < 1e-9);
+        assert!((merged.mean - qo.total().mean).abs() < 1e-9);
+        assert!((merged.m2 - qo.total().m2).abs() / qo.total().m2.max(1.0) < 1e-9);
+    }
+
+    #[test]
+    fn finds_step_split() {
+        let mut qo = QuantizationObserver::with_radius(0.02);
+        let mut rng = Rng::new(7);
+        for _ in 0..5000 {
+            let x = rng.uniform(-1.0, 1.0);
+            let y = if x <= 0.3 { 0.0 } else { 5.0 };
+            qo.observe(x, y, 1.0);
+        }
+        let s = qo.best_split(&VarianceReduction).unwrap();
+        assert!((s.threshold - 0.3).abs() < 0.03, "threshold={}", s.threshold);
+        assert!(s.left.mean < 0.5 && s.right.mean > 4.5);
+    }
+
+    #[test]
+    fn dynamic_radius_freezes_and_splits() {
+        let mut qo = QuantizationObserver::new(RadiusPolicy::std_fraction(2.0));
+        let mut rng = Rng::new(8);
+        for _ in 0..50 {
+            // still warming: buffered split queries must work
+            let x = rng.normal(0.0, 1.0);
+            qo.observe(x, if x <= 0.0 { -1.0 } else { 1.0 }, 1.0);
+        }
+        assert!(qo.radius().is_none());
+        assert!(qo.best_split(&VarianceReduction).is_some());
+        for _ in 0..5000 {
+            let x = rng.normal(0.0, 1.0);
+            qo.observe(x, if x <= 0.0 { -1.0 } else { 1.0 }, 1.0);
+        }
+        let r = qo.radius().expect("frozen after warmup");
+        assert!(r > 0.2 && r < 1.0, "r={r}"); // ~sigma/2
+        let s = qo.best_split(&VarianceReduction).unwrap();
+        assert!(s.threshold.abs() < 0.3, "threshold={}", s.threshold);
+    }
+
+    #[test]
+    fn smaller_radius_more_slots_better_merit() {
+        let mut rng = Rng::new(9);
+        let data: Vec<(f64, f64)> = (0..20_000)
+            .map(|_| {
+                let x = rng.uniform(-1.0, 1.0);
+                (x, 3.0 * x + rng.normal(0.0, 0.1))
+            })
+            .collect();
+        let mut merits = Vec::new();
+        let mut elements = Vec::new();
+        for r in [0.5, 0.1, 0.01] {
+            let mut qo = QuantizationObserver::with_radius(r);
+            for &(x, y) in &data {
+                qo.observe(x, y, 1.0);
+            }
+            merits.push(qo.best_split(&VarianceReduction).unwrap().merit);
+            elements.push(qo.n_elements());
+        }
+        assert!(elements[0] < elements[1] && elements[1] < elements[2], "{elements:?}");
+        assert!(merits[0] <= merits[1] + 1e-9 && merits[1] <= merits[2] + 1e-9, "{merits:?}");
+    }
+
+    #[test]
+    fn merit_close_to_exhaustive_oracle() {
+        // paper Sec. 6.1: QO merit is slightly below but very close to the
+        // exhaustive/E-BST merit
+        let mut rng = Rng::new(10);
+        let mut qo = QuantizationObserver::with_radius(0.01);
+        let mut ex = ExhaustiveObserver::new();
+        for _ in 0..5000 {
+            let x = rng.normal(0.0, 1.0);
+            let y = x * x + rng.normal(0.0, 0.1);
+            qo.observe(x, y, 1.0);
+            ex.observe(x, y, 1.0);
+        }
+        let mq = qo.best_split(&VarianceReduction).unwrap().merit;
+        let me = ex.best_split(&VarianceReduction).unwrap().merit;
+        assert!(mq <= me + 1e-9);
+        assert!(mq > 0.9 * me, "qo={mq} exhaustive={me}");
+    }
+
+    #[test]
+    fn reset_clears_everything() {
+        let mut qo = QuantizationObserver::with_radius(0.1);
+        qo.observe(1.0, 2.0, 1.0);
+        qo.reset();
+        assert_eq!(qo.n_elements(), 0);
+        assert!(qo.total().is_empty());
+        assert!(qo.best_split(&VarianceReduction).is_none());
+    }
+
+    #[test]
+    fn ignores_non_finite_and_zero_weight() {
+        let mut qo = QuantizationObserver::with_radius(0.1);
+        qo.observe(f64::NAN, 1.0, 1.0);
+        qo.observe(1.0, f64::INFINITY, 1.0);
+        qo.observe(1.0, 1.0, 0.0);
+        assert_eq!(qo.n_elements(), 0);
+        assert!(qo.total().is_empty());
+    }
+
+    #[test]
+    fn merge_from_equals_single_observer() {
+        let mut rng = Rng::new(77);
+        let data: Vec<(f64, f64)> =
+            (0..4000).map(|_| (rng.normal(0.0, 2.0), rng.normal(1.0, 3.0))).collect();
+        let mut whole = QuantizationObserver::with_radius(0.2);
+        let mut a = QuantizationObserver::with_radius(0.2);
+        let mut b = QuantizationObserver::with_radius(0.2);
+        for (i, &(x, y)) in data.iter().enumerate() {
+            whole.observe(x, y, 1.0);
+            if i % 2 == 0 {
+                a.observe(x, y, 1.0)
+            } else {
+                b.observe(x, y, 1.0)
+            }
+        }
+        a.merge_from(&b);
+        assert_eq!(a.n_elements(), whole.n_elements());
+        let sa = a.best_split(&VarianceReduction).unwrap();
+        let sw = whole.best_split(&VarianceReduction).unwrap();
+        assert!((sa.threshold - sw.threshold).abs() < 1e-9);
+        assert!((sa.merit - sw.merit).abs() < 1e-9);
+        assert!((a.total().m2 - whole.total().m2).abs() / whole.total().m2 < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "radius mismatch")]
+    fn merge_from_rejects_different_radius() {
+        let mut a = QuantizationObserver::with_radius(0.1);
+        let b = QuantizationObserver::with_radius(0.2);
+        a.merge_from(&b);
+    }
+
+    #[test]
+    fn absorb_slot_matches_observe() {
+        let mut direct = QuantizationObserver::with_radius(0.5);
+        direct.observe(0.7, 2.0, 1.0);
+        direct.observe(0.9, 4.0, 1.0);
+        let mut bulk = QuantizationObserver::with_radius(0.5);
+        let mut stats = VarStats::new();
+        stats.update(2.0, 1.0);
+        stats.update(4.0, 1.0);
+        bulk.absorb_slot(1, 1.6, stats);
+        assert_eq!(bulk.n_elements(), direct.n_elements());
+        assert!((bulk.total().mean - direct.total().mean).abs() < 1e-12);
+        let (ka, sa) = bulk.sorted_slots()[0];
+        let (kb, sb) = direct.sorted_slots()[0];
+        assert_eq!(ka, kb);
+        assert!((sa.sum_x - sb.sum_x).abs() < 1e-12);
+    }
+
+    #[test]
+    fn grid_boundary_strategy_close_to_prototype_midpoint() {
+        let mut rng = Rng::new(123);
+        let data: Vec<(f64, f64)> = (0..20_000)
+            .map(|_| {
+                let x = rng.uniform(-1.0, 1.0);
+                (x, if x <= 0.3 { 0.0 } else { 1.0 })
+            })
+            .collect();
+        let mut proto = QuantizationObserver::with_radius(0.05);
+        let mut grid = QuantizationObserver::with_radius(0.05)
+            .with_strategy(SplitPointStrategy::GridBoundary);
+        for &(x, y) in &data {
+            proto.observe(x, y, 1.0);
+            grid.observe(x, y, 1.0);
+        }
+        let sp = proto.best_split(&VarianceReduction).unwrap();
+        let sg = grid.best_split(&VarianceReduction).unwrap();
+        // same boundary slot => same merit; thresholds within one radius
+        assert!((sp.merit - sg.merit).abs() < 1e-12);
+        assert!((sp.threshold - sg.threshold).abs() <= 0.05 + 1e-12);
+        // grid boundary is an exact multiple of r
+        assert!((sg.threshold / 0.05 - (sg.threshold / 0.05).round()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prop_left_right_partition_total() {
+        check("qo-partition-total", 0xB0, 50, |rng| {
+            let mut qo = QuantizationObserver::with_radius(0.05 + rng.f64() * 0.2);
+            let n = 200 + rng.below(800);
+            for _ in 0..n {
+                qo.observe(rng.normal(0.0, 2.0), rng.normal(1.0, 1.0), 1.0);
+            }
+            if let Some(s) = qo.best_split(&VarianceReduction) {
+                let sum = s.left + s.right;
+                expect_close("n", sum.n, qo.total().n, 1e-9, 1e-9)?;
+                expect_close("mean", sum.mean, qo.total().mean, 1e-7, 1e-7)?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,163 @@
+//! Quantization-radius policies for the QO (paper Sec. 5.2).
+//!
+//! * `Fixed(r)` — the cold-start choice (the paper's QO_0.01);
+//! * `StdFraction { k, warmup }` — the dynamical choice: r = σ̂ / k, where
+//!   σ̂ is the running standard deviation of the *feature*. The paper notes
+//!   the full-sample σ is not available online, so the radius is frozen
+//!   from the running estimate once `warmup` observations have been
+//!   buffered (the buffered points are then re-inserted through the hash).
+
+use crate::stats::VarStats;
+
+/// How the QO picks its quantization radius.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RadiusPolicy {
+    /// Constant radius from the start.
+    Fixed(f64),
+    /// r = σ̂(feature) / k, frozen after `warmup` observations.
+    StdFraction { k: f64, warmup: usize },
+}
+
+impl RadiusPolicy {
+    /// The paper's dynamical variants with the default warmup (100).
+    pub fn std_fraction(k: f64) -> RadiusPolicy {
+        RadiusPolicy::StdFraction { k, warmup: 100 }
+    }
+
+    /// Human-readable label matching the paper's notation.
+    pub fn label(&self) -> String {
+        match self {
+            RadiusPolicy::Fixed(r) => format!("QO_{r}"),
+            RadiusPolicy::StdFraction { k, .. } => format!("QO_s{k}"),
+        }
+    }
+}
+
+/// Runtime state of the radius decision.
+#[derive(Clone, Debug)]
+pub enum RadiusState {
+    /// Radius decided; quantization active.
+    Frozen(f64),
+    /// Still warming up: buffering raw observations and tracking feature
+    /// dispersion.
+    Warming { k: f64, warmup: usize, feature_stats: VarStats, buffer: Vec<(f64, f64, f64)> },
+}
+
+impl RadiusState {
+    pub fn new(policy: RadiusPolicy) -> RadiusState {
+        match policy {
+            RadiusPolicy::Fixed(r) => {
+                assert!(r > 0.0, "radius must be positive");
+                RadiusState::Frozen(r)
+            }
+            RadiusPolicy::StdFraction { k, warmup } => {
+                assert!(k > 0.0 && warmup >= 2);
+                RadiusState::Warming {
+                    k,
+                    warmup,
+                    feature_stats: VarStats::new(),
+                    buffer: Vec::with_capacity(warmup),
+                }
+            }
+        }
+    }
+
+    /// Feed one observation. Returns `Some(radius, buffered)` at the
+    /// freeze transition: the caller must then insert the returned buffer
+    /// through the hash. Afterwards (and for `Fixed`), returns `None` and
+    /// the caller should hash the observation directly via [`Self::radius`].
+    pub fn on_observe(&mut self, x: f64, y: f64, w: f64) -> Option<(f64, Vec<(f64, f64, f64)>)> {
+        match self {
+            RadiusState::Frozen(_) => None,
+            RadiusState::Warming { k, warmup, feature_stats, buffer } => {
+                feature_stats.update(x, w);
+                buffer.push((x, y, w));
+                if buffer.len() >= *warmup {
+                    let std = feature_stats.std();
+                    // Degenerate feature (all equal so far): fall back to a
+                    // small absolute radius, mirroring the paper's fixed
+                    // cold-start value.
+                    let radius = if std > 0.0 { std / *k } else { 0.01 };
+                    let drained = std::mem::take(buffer);
+                    *self = RadiusState::Frozen(radius);
+                    Some((radius, drained))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
+    /// Current radius if frozen.
+    pub fn radius(&self) -> Option<f64> {
+        match self {
+            RadiusState::Frozen(r) => Some(*r),
+            RadiusState::Warming { .. } => None,
+        }
+    }
+
+    /// Observations currently buffered (warming phase).
+    pub fn buffered(&self) -> usize {
+        match self {
+            RadiusState::Frozen(_) => 0,
+            RadiusState::Warming { buffer, .. } => buffer.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_is_immediately_frozen() {
+        let mut st = RadiusState::new(RadiusPolicy::Fixed(0.25));
+        assert_eq!(st.radius(), Some(0.25));
+        assert!(st.on_observe(1.0, 2.0, 1.0).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "positive")]
+    fn zero_radius_rejected() {
+        RadiusState::new(RadiusPolicy::Fixed(0.0));
+    }
+
+    #[test]
+    fn std_fraction_freezes_after_warmup() {
+        let mut st = RadiusState::new(RadiusPolicy::StdFraction { k: 2.0, warmup: 10 });
+        let mut rng = crate::common::Rng::new(1);
+        let mut frozen = None;
+        for i in 0..10 {
+            let x = rng.normal(0.0, 4.0);
+            let out = st.on_observe(x, 0.0, 1.0);
+            if i < 9 {
+                assert!(out.is_none());
+                assert_eq!(st.buffered(), i + 1);
+            } else {
+                frozen = out;
+            }
+        }
+        let (radius, buffer) = frozen.expect("should freeze at warmup");
+        assert_eq!(buffer.len(), 10);
+        // σ of N(0,4) sample / 2 — loose check that it's in a sane band
+        assert!(radius > 0.5 && radius < 5.0, "radius={radius}");
+        assert_eq!(st.radius(), Some(radius));
+    }
+
+    #[test]
+    fn degenerate_feature_falls_back() {
+        let mut st = RadiusState::new(RadiusPolicy::StdFraction { k: 3.0, warmup: 5 });
+        let mut out = None;
+        for _ in 0..5 {
+            out = st.on_observe(7.0, 1.0, 1.0).or(out);
+        }
+        let (radius, _) = out.unwrap();
+        assert_eq!(radius, 0.01);
+    }
+
+    #[test]
+    fn labels_match_paper() {
+        assert_eq!(RadiusPolicy::Fixed(0.01).label(), "QO_0.01");
+        assert_eq!(RadiusPolicy::std_fraction(2.0).label(), "QO_s2");
+    }
+}

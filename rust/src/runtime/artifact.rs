@@ -1,0 +1,113 @@
+//! Artifact discovery and the `manifest.txt` parser.
+//!
+//! `make artifacts` writes a plain `key=value` manifest next to the HLO
+//! text files; this module locates the directory (``QOSTREAM_ARTIFACTS``
+//! env var, or an ``artifacts/`` directory walking up from the current
+//! directory) and exposes the recorded shapes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// Parsed `manifest.txt`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    entries: BTreeMap<String, String>,
+}
+
+impl Manifest {
+    /// Load `manifest.txt` from `dir`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Ok(Manifest { dir: dir.to_path_buf(), entries: parse_manifest(&text) })
+    }
+
+    pub fn get(&self, key: &str) -> Result<&str> {
+        self.entries
+            .get(key)
+            .map(String::as_str)
+            .ok_or_else(|| anyhow!("manifest missing key {key:?}"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.get(key)?.parse().with_context(|| format!("manifest key {key:?} not an integer"))
+    }
+
+    /// Absolute path of the artifact file recorded under `key`.
+    pub fn path_of(&self, key: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(self.get(key)?))
+    }
+}
+
+fn parse_manifest(text: &str) -> BTreeMap<String, String> {
+    text.lines()
+        .filter_map(|line| {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                return None;
+            }
+            line.split_once('=').map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+        })
+        .collect()
+}
+
+/// Locate the artifacts directory: `QOSTREAM_ARTIFACTS`, else walk up from
+/// the working directory looking for `artifacts/manifest.txt`.
+pub fn find_artifacts_dir() -> Result<PathBuf> {
+    if let Ok(dir) = std::env::var("QOSTREAM_ARTIFACTS") {
+        let p = PathBuf::from(dir);
+        anyhow::ensure!(p.join("manifest.txt").exists(), "QOSTREAM_ARTIFACTS has no manifest.txt");
+        return Ok(p);
+    }
+    let mut cur = std::env::current_dir()?;
+    loop {
+        let candidate = cur.join("artifacts");
+        if candidate.join("manifest.txt").exists() {
+            return Ok(candidate);
+        }
+        if !cur.pop() {
+            return Err(anyhow!(
+                "artifacts/ not found (run `make artifacts` or set QOSTREAM_ARTIFACTS)"
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_ignores_comments_and_blank_lines() {
+        let m = parse_manifest("# c\n\na=1\n b = two \n");
+        assert_eq!(m.get("a").unwrap(), "1");
+        assert_eq!(m.get("b").unwrap(), "two");
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn manifest_accessors() {
+        let dir = std::env::temp_dir().join(format!("qostream-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), "split_eval=se.hlo.txt\nsplit_eval.f=8\n")
+            .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.get("split_eval").unwrap(), "se.hlo.txt");
+        assert_eq!(m.get_usize("split_eval.f").unwrap(), 8);
+        assert!(m.get("nope").is_err());
+        assert!(m.path_of("split_eval").unwrap().ends_with("se.hlo.txt"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn find_artifacts_in_repo() {
+        // the repo's own artifacts/ should be discoverable from the test cwd
+        if let Ok(dir) = find_artifacts_dir() {
+            assert!(dir.join("manifest.txt").exists());
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! PJRT/XLA runtime: loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`, built once by `make artifacts`) and executes
+//! them from rust. Python never runs on this path.
+//!
+//! The interchange format is HLO *text*: jax ≥ 0.5 serializes protos with
+//! 64-bit instruction ids which the crate's bundled XLA (0.5.1) rejects;
+//! the text parser reassigns ids (see python/compile/aot.py and
+//! /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod quantize_engine;
+pub mod split_engine;
+
+pub use artifact::{find_artifacts_dir, Manifest};
+pub use quantize_engine::XlaQuantizeEngine;
+pub use split_engine::{SlotTable, XlaSplitEngine};

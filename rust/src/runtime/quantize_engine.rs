@@ -1,0 +1,188 @@
+//! `XlaQuantizeEngine`: the AOT-compiled bulk Quantization-Observer update
+//! (paper Alg. 1 as a batched segment-sum, L1 `quantize` Pallas kernel).
+//!
+//! Used by replay/warm-start paths: ingest a window of (x, y) pairs in one
+//! PJRT call, producing a dense slot table that merges into a
+//! [`QuantizationObserver`] via the Chan formulas.
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::observer::qo::QuantizationObserver;
+use crate::stats::VarStats;
+
+use super::artifact::Manifest;
+
+/// One aggregated slot from a batched ingest.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IngestedSlot {
+    pub code: i64,
+    pub n: f64,
+    pub sum_x: f64,
+    pub sum_y: f64,
+    pub sum_y2: f64,
+}
+
+impl IngestedSlot {
+    /// Robust (n, mean, M2) view of the slot's target statistics.
+    pub fn stats(&self) -> VarStats {
+        if self.n <= 0.0 {
+            return VarStats::EMPTY;
+        }
+        let mean = self.sum_y / self.n;
+        let m2 = (self.sum_y2 - self.sum_y * self.sum_y / self.n).max(0.0);
+        VarStats { n: self.n, mean, m2 }
+    }
+}
+
+/// PJRT-compiled `quantize_ingest` executable with its static (B, S) shape.
+pub struct XlaQuantizeEngine {
+    exe: xla::PjRtLoadedExecutable,
+    /// batch capacity per call
+    pub b: usize,
+    /// slot-window size per call
+    pub s: usize,
+}
+
+impl XlaQuantizeEngine {
+    pub fn load(client: &xla::PjRtClient, manifest: &Manifest) -> Result<XlaQuantizeEngine> {
+        let path = manifest.path_of("quantize")?;
+        let b = manifest.get_usize("quantize.b")?;
+        let s = manifest.get_usize("quantize.s")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling quantize artifact")?;
+        Ok(XlaQuantizeEngine { exe, b, s })
+    }
+
+    /// Ingest one batch (padded/truncated to the engine's B) and return
+    /// the occupied slots. The kernel windows codes to `[min_code,
+    /// min_code + S)`; values outside the window are re-ingested by the
+    /// caller loop in [`Self::ingest_all`].
+    fn ingest_batch(&self, xs: &[f64], ys: &[f64], radius: f64) -> Result<(Vec<IngestedSlot>, Vec<usize>)> {
+        assert_eq!(xs.len(), ys.len());
+        assert!(!xs.is_empty() && xs.len() <= self.b);
+        // pad by repeating the first element; subtract its contribution after
+        let mut px = xs.to_vec();
+        let mut py = ys.to_vec();
+        let pad = self.b - xs.len();
+        px.resize(self.b, xs[0]);
+        py.resize(self.b, ys[0]);
+
+        let x_lit = xla::Literal::vec1(&px);
+        let y_lit = xla::Literal::vec1(&py);
+        let r_lit = xla::Literal::scalar(radius);
+        let result =
+            self.exe.execute::<xla::Literal>(&[x_lit, y_lit, r_lit])?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 2, "expected 2 outputs, got {}", parts.len());
+        let base = parts[0].to_vec::<i32>()?[0] as i64;
+        let table = parts[1].to_vec::<f64>()?; // (S, 4) row-major
+
+        // subtract the padding contribution (pad copies of (xs[0], ys[0]))
+        let pad_code = QuantizationObserver::code(xs[0], radius) - base;
+        let mut slots = Vec::new();
+        let mut overflow = Vec::new();
+        for si in 0..self.s {
+            let row = &table[si * 4..si * 4 + 4];
+            let (mut n, mut sx, mut sy, mut sy2) = (row[0], row[1], row[2], row[3]);
+            if pad > 0 && si as i64 == pad_code {
+                n -= pad as f64;
+                sx -= pad as f64 * xs[0];
+                sy -= pad as f64 * ys[0];
+                sy2 -= pad as f64 * ys[0] * ys[0];
+            }
+            if n > 1e-9 {
+                slots.push(IngestedSlot {
+                    code: base + si as i64,
+                    n,
+                    sum_x: sx,
+                    sum_y: sy,
+                    sum_y2: sy2,
+                });
+            }
+        }
+        // detect dropped elements (codes >= base + S)
+        let total: f64 = slots.iter().map(|s| s.n).sum();
+        if (total - xs.len() as f64).abs() > 1e-6 {
+            for (i, &x) in xs.iter().enumerate() {
+                let c = QuantizationObserver::code(x, radius);
+                if c - base >= self.s as i64 {
+                    overflow.push(i);
+                }
+            }
+        }
+        Ok((slots, overflow))
+    }
+
+    /// Ingest an arbitrary-length sample, retrying window overflow until
+    /// every element is aggregated. Returns slots merged across batches,
+    /// sorted by code.
+    pub fn ingest_all(&self, xs: &[f64], ys: &[f64], radius: f64) -> Result<Vec<IngestedSlot>> {
+        use std::collections::BTreeMap;
+        let mut merged: BTreeMap<i64, IngestedSlot> = BTreeMap::new();
+        let mut queue: Vec<(f64, f64)> = xs.iter().copied().zip(ys.iter().copied()).collect();
+        // sorting bounds the per-batch code range, minimizing overflow passes
+        queue.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        while !queue.is_empty() {
+            let take = queue.len().min(self.b);
+            let batch: Vec<(f64, f64)> = queue.drain(..take).collect();
+            let bx: Vec<f64> = batch.iter().map(|p| p.0).collect();
+            let by: Vec<f64> = batch.iter().map(|p| p.1).collect();
+            let (slots, overflow) = self.ingest_batch(&bx, &by, radius)?;
+            for s in slots {
+                merged
+                    .entry(s.code)
+                    .and_modify(|m| {
+                        m.n += s.n;
+                        m.sum_x += s.sum_x;
+                        m.sum_y += s.sum_y;
+                        m.sum_y2 += s.sum_y2;
+                    })
+                    .or_insert(s);
+            }
+            for i in overflow {
+                queue.push(batch[i]);
+            }
+        }
+        Ok(merged.into_values().collect())
+    }
+
+    /// Ingest and materialize a ready-to-query [`QuantizationObserver`].
+    pub fn build_observer(
+        &self,
+        xs: &[f64],
+        ys: &[f64],
+        radius: f64,
+    ) -> Result<QuantizationObserver> {
+        let slots = self.ingest_all(xs, ys, radius)?;
+        let mut qo = QuantizationObserver::with_radius(radius);
+        for s in &slots {
+            qo.absorb_slot(s.code, s.sum_x, s.stats());
+        }
+        Ok(qo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ingested_slot_stats_roundtrip() {
+        // slot holding ys {1, 3}: mean 2, m2 2
+        let s = IngestedSlot { code: 0, n: 2.0, sum_x: 0.5, sum_y: 4.0, sum_y2: 10.0 };
+        let v = s.stats();
+        assert_eq!(v.n, 2.0);
+        assert!((v.mean - 2.0).abs() < 1e-12);
+        assert!((v.m2 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_slot_stats() {
+        let s = IngestedSlot { code: 0, n: 0.0, sum_x: 0.0, sum_y: 0.0, sum_y2: 0.0 };
+        assert!(s.stats().is_empty());
+    }
+}

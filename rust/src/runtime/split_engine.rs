@@ -1,0 +1,220 @@
+//! `XlaSplitEngine`: the AOT-compiled split-candidate evaluator.
+//!
+//! Executes the `split_eval` artifact (L2 JAX graph wrapping the L1
+//! `vr_split` Pallas kernel) on batches of packed slot tables — evaluating
+//! the best split of up to F features in one PJRT call. The tree and the
+//! benches use it as an alternative backend to the native rust query path
+//! (`cargo bench --bench xla_vs_native` compares them).
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::observer::qo::QuantizationObserver;
+use crate::stats::VarStats;
+
+use super::artifact::Manifest;
+
+/// Packed, key-sorted slot statistics for one feature (padding implicit).
+#[derive(Clone, Debug, Default)]
+pub struct SlotTable {
+    pub n: Vec<f64>,
+    pub sum_x: Vec<f64>,
+    pub mean: Vec<f64>,
+    pub m2: Vec<f64>,
+}
+
+impl SlotTable {
+    pub fn len(&self) -> usize {
+        self.n.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n.is_empty()
+    }
+
+    /// Extract from a Quantization Observer's hash (sorted by code).
+    pub fn from_qo(qo: &QuantizationObserver) -> SlotTable {
+        let slots = qo.sorted_slots();
+        let mut t = SlotTable {
+            n: Vec::with_capacity(slots.len()),
+            sum_x: Vec::with_capacity(slots.len()),
+            mean: Vec::with_capacity(slots.len()),
+            m2: Vec::with_capacity(slots.len()),
+        };
+        for (_, slot) in slots {
+            t.n.push(slot.stats.n);
+            t.sum_x.push(slot.sum_x);
+            t.mean.push(slot.stats.mean);
+            t.m2.push(slot.stats.m2);
+        }
+        t
+    }
+}
+
+/// Result of the XLA evaluation for one feature.
+#[derive(Clone, Copy, Debug)]
+pub struct XlaSplit {
+    pub best_idx: usize,
+    pub merit: f64,
+    pub threshold: f64,
+}
+
+/// PJRT-compiled `split_eval` executable with its static (F, S) shape.
+pub struct XlaSplitEngine {
+    exe: xla::PjRtLoadedExecutable,
+    /// features per call (AOT batch dimension)
+    pub f: usize,
+    /// slot capacity per feature
+    pub s: usize,
+}
+
+impl XlaSplitEngine {
+    /// Compile the artifact recorded in the manifest.
+    pub fn load(client: &xla::PjRtClient, manifest: &Manifest) -> Result<XlaSplitEngine> {
+        let path = manifest.path_of("split_eval")?;
+        let f = manifest.get_usize("split_eval.f")?;
+        let s = manifest.get_usize("split_eval.s")?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).context("compiling split_eval artifact")?;
+        Ok(XlaSplitEngine { exe, f, s })
+    }
+
+    /// Evaluate best splits for up to `self.f` features per call; longer
+    /// inputs are processed in chunks. Features whose table exceeds `s`
+    /// slots or has fewer than 2 slots yield `None` (callers fall back to
+    /// the native query path).
+    pub fn best_splits(&self, tables: &[SlotTable]) -> Result<Vec<Option<XlaSplit>>> {
+        let mut out = Vec::with_capacity(tables.len());
+        for chunk in tables.chunks(self.f) {
+            out.extend(self.eval_chunk(chunk)?);
+        }
+        Ok(out)
+    }
+
+    fn eval_chunk(&self, chunk: &[SlotTable]) -> Result<Vec<Option<XlaSplit>>> {
+        let (f, s) = (self.f, self.s);
+        let mut n = vec![0f64; f * s];
+        let mut sum_x = vec![0f64; f * s];
+        let mut mean = vec![0f64; f * s];
+        let mut m2 = vec![0f64; f * s];
+        let mut evaluable = vec![false; chunk.len()];
+        for (fi, table) in chunk.iter().enumerate() {
+            if table.len() < 2 || table.len() > s {
+                continue; // not evaluable on this engine shape
+            }
+            evaluable[fi] = true;
+            let base = fi * s;
+            n[base..base + table.len()].copy_from_slice(&table.n);
+            sum_x[base..base + table.len()].copy_from_slice(&table.sum_x);
+            mean[base..base + table.len()].copy_from_slice(&table.mean);
+            m2[base..base + table.len()].copy_from_slice(&table.m2);
+        }
+
+        let lit = |data: &[f64]| -> Result<xla::Literal> {
+            Ok(xla::Literal::vec1(data).reshape(&[f as i64, s as i64])?)
+        };
+        let args = [lit(&n)?, lit(&sum_x)?, lit(&mean)?, lit(&m2)?];
+        let result = self.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True:
+        // (vr[F,S], split[F,S], best_idx[F] s32, best_vr[F], best_split[F])
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(parts.len() == 5, "expected 5 outputs, got {}", parts.len());
+        let best_idx = parts[2].to_vec::<i32>()?;
+        let best_vr = parts[3].to_vec::<f64>()?;
+        let best_split = parts[4].to_vec::<f64>()?;
+
+        Ok((0..chunk.len())
+            .map(|fi| {
+                if !evaluable[fi] || !best_vr[fi].is_finite() {
+                    None
+                } else {
+                    Some(XlaSplit {
+                        best_idx: best_idx[fi] as usize,
+                        merit: best_vr[fi],
+                        threshold: best_split[fi],
+                    })
+                }
+            })
+            .collect())
+    }
+
+    /// Convenience: evaluate a set of QO observers directly.
+    pub fn best_splits_for_observers(
+        &self,
+        observers: &[&QuantizationObserver],
+    ) -> Result<Vec<Option<XlaSplit>>> {
+        let tables: Vec<SlotTable> = observers.iter().map(|qo| SlotTable::from_qo(qo)).collect();
+        self.best_splits(&tables)
+    }
+}
+
+/// Native reference computation over a [`SlotTable`] — the exact same math
+/// as the artifact, used by the round-trip tests and the comparison bench.
+pub fn native_best_split(table: &SlotTable) -> Option<XlaSplit> {
+    if table.len() < 2 {
+        return None;
+    }
+    let mut total = VarStats::new();
+    for i in 0..table.len() {
+        total += VarStats { n: table.n[i], mean: table.mean[i], m2: table.m2[i] };
+    }
+    let mut left = VarStats::new();
+    let mut best: Option<XlaSplit> = None;
+    for i in 0..table.len() - 1 {
+        left += VarStats { n: table.n[i], mean: table.mean[i], m2: table.m2[i] };
+        let right = total - left;
+        let merit = crate::criterion::SplitCriterion::merit(
+            &crate::criterion::VarianceReduction,
+            &total,
+            &left,
+            &right,
+        );
+        let proto_i = table.sum_x[i] / table.n[i];
+        let proto_j = table.sum_x[i + 1] / table.n[i + 1];
+        if best.map(|b| merit > b.merit).unwrap_or(true) {
+            best = Some(XlaSplit { best_idx: i, merit, threshold: 0.5 * (proto_i + proto_j) });
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::observer::AttributeObserver;
+
+    #[test]
+    fn slot_table_from_qo_sorted() {
+        let mut qo = QuantizationObserver::with_radius(0.5);
+        for (x, y) in [(1.2, 1.0), (-0.7, 2.0), (0.1, 3.0), (1.4, 4.0)] {
+            qo.observe(x, y, 1.0);
+        }
+        let t = SlotTable::from_qo(&qo);
+        assert_eq!(t.len(), 3); // codes -2, 0, 2
+        // sorted by code: prototypes increase
+        assert!(t.sum_x[0] / t.n[0] < t.sum_x[1] / t.n[1]);
+        assert!(t.sum_x[1] / t.n[1] < t.sum_x[2] / t.n[2]);
+    }
+
+    #[test]
+    fn native_best_split_step() {
+        let t = SlotTable {
+            n: vec![5.0, 5.0, 5.0, 5.0],
+            sum_x: vec![-10.0, -5.0, 5.0, 10.0],
+            mean: vec![0.0, 0.0, 8.0, 8.0],
+            m2: vec![0.0; 4],
+        };
+        let s = native_best_split(&t).unwrap();
+        assert_eq!(s.best_idx, 1);
+        assert!((s.threshold - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn native_none_for_single_slot() {
+        let t = SlotTable { n: vec![3.0], sum_x: vec![1.0], mean: vec![0.5], m2: vec![0.1] };
+        assert!(native_best_split(&t).is_none());
+    }
+}

@@ -1,0 +1,157 @@
+//! Friedman rank test over multiple datasets × multiple algorithms
+//! (Demšar 2006), used by the paper's Figures 2, 4, 5 and 6.
+
+use super::gamma::{chi2_sf, f_sf};
+
+/// Result of a Friedman test.
+#[derive(Clone, Debug)]
+pub struct FriedmanResult {
+    /// Average rank of each algorithm (1 = best); lower is better.
+    pub avg_ranks: Vec<f64>,
+    /// Friedman chi-square statistic χ²_F.
+    pub chi2: f64,
+    /// p-value of χ²_F against the chi-square(k−1) distribution.
+    pub p_chi2: f64,
+    /// Iman–Davenport corrected statistic F_F.
+    pub f_stat: f64,
+    /// p-value of F_F against F(k−1, (k−1)(N−1)).
+    pub p_f: f64,
+    /// Number of datasets N and algorithms k.
+    pub n_datasets: usize,
+    pub n_algorithms: usize,
+}
+
+impl FriedmanResult {
+    pub fn significant(&self, alpha: f64) -> bool {
+        self.p_f < alpha
+    }
+}
+
+/// Rank one row of measurements (lower = better ⇒ rank 1), ties get the
+/// average of the tied rank span.
+pub fn rank_row(values: &[f64]) -> Vec<f64> {
+    let k = values.len();
+    let mut idx: Vec<usize> = (0..k).collect();
+    idx.sort_by(|&a, &b| values[a].partial_cmp(&values[b]).unwrap_or(std::cmp::Ordering::Equal));
+    let mut ranks = vec![0.0; k];
+    let mut i = 0;
+    while i < k {
+        let mut j = i;
+        while j + 1 < k && values[idx[j + 1]] == values[idx[i]] {
+            j += 1;
+        }
+        // positions i..=j are tied: average rank (1-based)
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for &slot in &idx[i..=j] {
+            ranks[slot] = avg;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+/// Friedman test. `measurements[d][a]` is the metric of algorithm `a` on
+/// dataset `d`. `lower_is_better` controls the ranking direction.
+pub fn friedman_test(measurements: &[Vec<f64>], lower_is_better: bool) -> FriedmanResult {
+    let n = measurements.len();
+    assert!(n >= 2, "need at least 2 datasets");
+    let k = measurements[0].len();
+    assert!(k >= 2, "need at least 2 algorithms");
+
+    let mut rank_sums = vec![0.0; k];
+    for row in measurements {
+        assert_eq!(row.len(), k, "ragged measurement matrix");
+        let keyed: Vec<f64> = if lower_is_better {
+            row.clone()
+        } else {
+            row.iter().map(|v| -v).collect()
+        };
+        for (a, r) in rank_row(&keyed).into_iter().enumerate() {
+            rank_sums[a] += r;
+        }
+    }
+    let avg_ranks: Vec<f64> = rank_sums.iter().map(|s| s / n as f64).collect();
+
+    let nf = n as f64;
+    let kf = k as f64;
+    let sum_r2: f64 = avg_ranks.iter().map(|r| r * r).sum();
+    let chi2 = 12.0 * nf / (kf * (kf + 1.0)) * (sum_r2 - kf * (kf + 1.0) * (kf + 1.0) / 4.0);
+    let p_chi2 = chi2_sf(chi2, kf - 1.0);
+    // Iman–Davenport correction
+    let denom = nf * (kf - 1.0) - chi2;
+    let (f_stat, p_f) = if denom > 0.0 {
+        let f = (nf - 1.0) * chi2 / denom;
+        (f, f_sf(f, kf - 1.0, (kf - 1.0) * (nf - 1.0)))
+    } else {
+        (f64::INFINITY, 0.0)
+    };
+
+    FriedmanResult { avg_ranks, chi2, p_chi2, f_stat, p_f, n_datasets: n, n_algorithms: k }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_row_basic() {
+        assert_eq!(rank_row(&[0.3, 0.1, 0.2]), vec![3.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn rank_row_ties_averaged() {
+        assert_eq!(rank_row(&[1.0, 1.0, 2.0]), vec![1.5, 1.5, 3.0]);
+        assert_eq!(rank_row(&[5.0, 5.0, 5.0]), vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn clear_winner_detected() {
+        // algo 0 always best (lowest), algo 2 always worst
+        let data: Vec<Vec<f64>> =
+            (0..20).map(|d| vec![1.0 + d as f64, 2.0 + d as f64, 3.0 + d as f64]).collect();
+        let res = friedman_test(&data, true);
+        assert_eq!(res.avg_ranks, vec![1.0, 2.0, 3.0]);
+        assert!(res.p_chi2 < 0.001, "p={}", res.p_chi2);
+        assert!(res.significant(0.05));
+    }
+
+    #[test]
+    fn higher_is_better_flips_ranks() {
+        let data: Vec<Vec<f64>> = (0..10).map(|_| vec![1.0, 2.0]).collect();
+        let res = friedman_test(&data, false);
+        assert_eq!(res.avg_ranks, vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn no_difference_not_significant() {
+        // alternate winners evenly
+        let data: Vec<Vec<f64>> = (0..20)
+            .map(|d| if d % 2 == 0 { vec![1.0, 2.0] } else { vec![2.0, 1.0] })
+            .collect();
+        let res = friedman_test(&data, true);
+        assert!((res.avg_ranks[0] - 1.5).abs() < 1e-12);
+        assert!(res.p_chi2 > 0.5);
+        assert!(!res.significant(0.05));
+    }
+
+    #[test]
+    fn demsar_textbook_example() {
+        // Demšar (2006) Table 6 shape: 4 algorithms, 14 datasets.
+        // We verify χ² matches the hand formula on a small crafted case.
+        let data = vec![
+            vec![0.1, 0.2, 0.3, 0.4],
+            vec![0.2, 0.1, 0.4, 0.3],
+            vec![0.1, 0.2, 0.4, 0.3],
+            vec![0.1, 0.3, 0.2, 0.4],
+            vec![0.1, 0.2, 0.3, 0.4],
+            vec![0.2, 0.1, 0.3, 0.4],
+        ];
+        let res = friedman_test(&data, true);
+        // manual: rank sums per column
+        let expected_avg = [1.333_333_333, 1.833_333_333, 3.166_666_667, 3.666_666_667];
+        for (got, want) in res.avg_ranks.iter().zip(expected_avg.iter()) {
+            assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        }
+        assert!(res.chi2 > 0.0 && res.p_chi2 < 0.05);
+    }
+}

@@ -1,0 +1,210 @@
+//! Special functions needed by the hypothesis tests: log-gamma (Lanczos),
+//! regularized incomplete gamma (series + continued fraction), and the
+//! chi-square / F survival functions built on them.
+
+/// Lanczos approximation of ln Γ(x) for x > 0 (|rel err| < 1e-13).
+pub fn ln_gamma(x: f64) -> f64 {
+    // g = 7, n = 9 Lanczos coefficients
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // reflection formula
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Regularized lower incomplete gamma P(s, x) = γ(s, x)/Γ(s).
+pub fn gamma_p(s: f64, x: f64) -> f64 {
+    assert!(s > 0.0);
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x < s + 1.0 {
+        // series representation
+        let mut term = 1.0 / s;
+        let mut sum = term;
+        let mut k = s;
+        for _ in 0..500 {
+            k += 1.0;
+            term *= x / k;
+            sum += term;
+            if term.abs() < sum.abs() * 1e-15 {
+                break;
+            }
+        }
+        (sum.ln() + s * x.ln() - x - ln_gamma(s)).exp()
+    } else {
+        1.0 - gamma_q_cf(s, x)
+    }
+}
+
+/// Regularized upper incomplete gamma Q(s, x) via Lentz continued fraction.
+fn gamma_q_cf(s: f64, x: f64) -> f64 {
+    let mut b = x + 1.0 - s;
+    let mut c = 1.0 / 1e-300;
+    let mut d = 1.0 / b;
+    let mut h = d;
+    for i in 1..500 {
+        let an = -(i as f64) * (i as f64 - s);
+        b += 2.0;
+        d = an * d + b;
+        if d.abs() < 1e-300 {
+            d = 1e-300;
+        }
+        c = b + an / c;
+        if c.abs() < 1e-300 {
+            c = 1e-300;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < 1e-15 {
+            break;
+        }
+    }
+    (s * x.ln() - x - ln_gamma(s)).exp() * h
+}
+
+/// Chi-square survival function: P(X > x) with k degrees of freedom.
+pub fn chi2_sf(x: f64, k: f64) -> f64 {
+    if x <= 0.0 {
+        return 1.0;
+    }
+    (1.0 - gamma_p(k / 2.0, x / 2.0)).clamp(0.0, 1.0)
+}
+
+/// Regularized incomplete beta I_x(a, b) (for the F distribution).
+pub fn beta_inc(a: f64, b: f64, x: f64) -> f64 {
+    if x <= 0.0 {
+        return 0.0;
+    }
+    if x >= 1.0 {
+        return 1.0;
+    }
+    let ln_front = ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b) + a * x.ln() + b * (1.0 - x).ln();
+    let front = ln_front.exp();
+    // continued fraction (Lentz) — standard Numerical Recipes betacf
+    let cf = |a: f64, b: f64, x: f64| -> f64 {
+        let qab = a + b;
+        let qap = a + 1.0;
+        let qam = a - 1.0;
+        let mut c = 1.0;
+        let mut d = 1.0 - qab * x / qap;
+        if d.abs() < 1e-300 {
+            d = 1e-300;
+        }
+        d = 1.0 / d;
+        let mut h = d;
+        for m in 1..300 {
+            let m = m as f64;
+            let m2 = 2.0 * m;
+            let aa = m * (b - m) * x / ((qam + m2) * (a + m2));
+            d = 1.0 + aa * d;
+            if d.abs() < 1e-300 {
+                d = 1e-300;
+            }
+            c = 1.0 + aa / c;
+            if c.abs() < 1e-300 {
+                c = 1e-300;
+            }
+            d = 1.0 / d;
+            h *= d * c;
+            let aa = -(a + m) * (qab + m) * x / ((a + m2) * (qap + m2));
+            d = 1.0 + aa * d;
+            if d.abs() < 1e-300 {
+                d = 1e-300;
+            }
+            c = 1.0 + aa / c;
+            if c.abs() < 1e-300 {
+                c = 1e-300;
+            }
+            d = 1.0 / d;
+            let del = d * c;
+            h *= del;
+            if (del - 1.0).abs() < 1e-14 {
+                break;
+            }
+        }
+        h
+    };
+    if x < (a + 1.0) / (a + b + 2.0) {
+        front * cf(a, b, x) / a
+    } else {
+        1.0 - (ln_gamma(a + b) - ln_gamma(a) - ln_gamma(b) + b * (1.0 - x).ln() + a * x.ln())
+            .exp()
+            * cf(b, a, 1.0 - x)
+            / b
+    }
+}
+
+/// F-distribution survival function P(F > f) with (d1, d2) dof.
+pub fn f_sf(f: f64, d1: f64, d2: f64) -> f64 {
+    if f <= 0.0 {
+        return 1.0;
+    }
+    beta_inc(d2 / 2.0, d1 / 2.0, d2 / (d2 + d1 * f)).clamp(0.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Γ(1)=1, Γ(2)=1, Γ(5)=24, Γ(0.5)=√π
+        assert!(ln_gamma(1.0).abs() < 1e-12);
+        assert!(ln_gamma(2.0).abs() < 1e-12);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-12);
+        assert!((ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn chi2_sf_known_values() {
+        // scipy.stats.chi2.sf reference values
+        assert!((chi2_sf(3.841, 1.0) - 0.05004).abs() < 1e-4);
+        assert!((chi2_sf(9.488, 4.0) - 0.05002).abs() < 1e-4);
+        assert!((chi2_sf(18.307, 10.0) - 0.05001).abs() < 1e-4);
+        assert!((chi2_sf(0.0, 3.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gamma_p_limits() {
+        assert_eq!(gamma_p(2.0, 0.0), 0.0);
+        assert!((gamma_p(1.0, 30.0) - 1.0).abs() < 1e-10);
+        // P(1, x) = 1 - e^-x
+        assert!((gamma_p(1.0, 1.0) - (1.0 - (-1f64).exp())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f_sf_known_values() {
+        // scipy.stats.f.sf reference values
+        assert!((f_sf(4.256, 4.0, 10.0) - 0.028_734).abs() < 1e-3);
+        assert!((f_sf(1.0, 5.0, 5.0) - 0.5).abs() < 1e-10);
+    }
+
+    #[test]
+    fn beta_inc_symmetry() {
+        for &(a, b, x) in &[(2.0, 3.0, 0.4), (0.5, 0.5, 0.3), (5.0, 1.0, 0.9)] {
+            let lhs = beta_inc(a, b, x);
+            let rhs = 1.0 - beta_inc(b, a, 1.0 - x);
+            assert!((lhs - rhs).abs() < 1e-10, "{a} {b} {x}: {lhs} vs {rhs}");
+        }
+    }
+}

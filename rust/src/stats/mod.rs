@@ -1,0 +1,13 @@
+//! Streaming statistics (paper Sec. 3) and the evaluation statistics
+//! (Friedman + Nemenyi, Demšar 2006) used by the paper's Figures 2/4/5/6.
+
+pub mod friedman;
+pub mod gamma;
+pub mod naive;
+pub mod nemenyi;
+pub mod welford;
+
+pub use friedman::{friedman_test, FriedmanResult};
+pub use naive::NaiveVarStats;
+pub use nemenyi::{critical_difference, render_cd_diagram, NemenyiResult};
+pub use welford::VarStats;

@@ -1,0 +1,111 @@
+//! The *naive* incremental variance estimator (Σw, Σy, Σy²) that the
+//! original E-BST used — kept for the paper's robustness ablation
+//! (Sec. 3 motivates replacing it; `cargo bench --bench ablations`
+//! demonstrates the catastrophic cancellation it suffers).
+
+/// Naive sufficient statistics: Σw, Σwy, Σwy².
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct NaiveVarStats {
+    pub n: f64,
+    pub sum: f64,
+    pub sum_sq: f64,
+}
+
+impl NaiveVarStats {
+    pub fn new() -> NaiveVarStats {
+        NaiveVarStats::default()
+    }
+
+    #[inline]
+    pub fn update(&mut self, y: f64, w: f64) {
+        self.n += w;
+        self.sum += w * y;
+        self.sum_sq += w * y * y;
+    }
+
+    #[inline]
+    pub fn mean(&self) -> f64 {
+        if self.n > 0.0 {
+            self.sum / self.n
+        } else {
+            0.0
+        }
+    }
+
+    /// Sample variance via the (cancellation-prone) sum-of-squares formula.
+    /// Deliberately NOT clamped: the ablation shows the negative values.
+    #[inline]
+    pub fn variance(&self) -> f64 {
+        if self.n > 1.0 {
+            (self.sum_sq - self.sum * self.sum / self.n) / (self.n - 1.0)
+        } else {
+            0.0
+        }
+    }
+
+    #[inline]
+    pub fn merged(&self, o: &NaiveVarStats) -> NaiveVarStats {
+        NaiveVarStats { n: self.n + o.n, sum: self.sum + o.sum, sum_sq: self.sum_sq + o.sum_sq }
+    }
+
+    #[inline]
+    pub fn subtracted(&self, o: &NaiveVarStats) -> NaiveVarStats {
+        NaiveVarStats { n: self.n - o.n, sum: self.sum - o.sum, sum_sq: self.sum_sq - o.sum_sq }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::VarStats;
+
+    #[test]
+    fn agrees_with_robust_on_benign_data() {
+        let ys = [1.0, 2.0, 3.0, 4.0, 5.5];
+        let mut naive = NaiveVarStats::new();
+        let mut robust = VarStats::new();
+        for &y in &ys {
+            naive.update(y, 1.0);
+            robust.update(y, 1.0);
+        }
+        assert!((naive.mean() - robust.mean).abs() < 1e-12);
+        assert!((naive.variance() - robust.variance()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cancellation_failure_demonstrated() {
+        // Same case where VarStats stays accurate (welford.rs test):
+        // offset 1e9, true variance ~0.0167 — the naive estimator's
+        // relative error explodes by comparison.
+        let offset = 1e9;
+        let ys: Vec<f64> = [0.0, 0.1, 0.2, 0.3].iter().map(|v| v + offset).collect();
+        let mut naive = NaiveVarStats::new();
+        let mut robust = VarStats::new();
+        for &y in &ys {
+            naive.update(y, 1.0);
+            robust.update(y, 1.0);
+        }
+        let truth = 0.016_666_666_666_666_666;
+        let naive_err = (naive.variance() - truth).abs() / truth;
+        let robust_err = (robust.variance() - truth).abs() / truth;
+        assert!(naive_err > 100.0 * robust_err.max(1e-16), "naive={naive_err} robust={robust_err}");
+    }
+
+    #[test]
+    fn merge_subtract_roundtrip() {
+        let a = {
+            let mut s = NaiveVarStats::new();
+            s.update(1.0, 1.0);
+            s.update(2.0, 1.0);
+            s
+        };
+        let b = {
+            let mut s = NaiveVarStats::new();
+            s.update(7.0, 2.0);
+            s
+        };
+        let rec = a.merged(&b).subtracted(&b);
+        assert!((rec.n - a.n).abs() < 1e-12);
+        assert!((rec.sum - a.sum).abs() < 1e-9);
+    }
+}

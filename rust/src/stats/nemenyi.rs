@@ -1,0 +1,185 @@
+//! Nemenyi post-hoc test and ASCII critical-difference diagrams
+//! (Demšar 2006) — the rendering used for the paper's Figures 2/4/5/6.
+
+use super::friedman::FriedmanResult;
+
+/// Critical values q_α of the studentized range statistic divided by √2,
+/// for α = 0.05 and k = 2..=10 algorithms (Demšar 2006, Table 5a).
+const Q_ALPHA_005: [f64; 9] =
+    [1.960, 2.343, 2.569, 2.728, 2.850, 2.949, 3.031, 3.102, 3.164];
+
+/// Critical values for α = 0.10 (Demšar 2006, Table 5b).
+const Q_ALPHA_010: [f64; 9] =
+    [1.645, 2.052, 2.291, 2.459, 2.589, 2.693, 2.780, 2.855, 2.920];
+
+/// Nemenyi critical difference CD = q_α √(k(k+1)/(6N)).
+pub fn critical_difference(k: usize, n: usize, alpha: f64) -> f64 {
+    assert!((2..=10).contains(&k), "q_alpha table covers k in 2..=10");
+    let q = if (alpha - 0.05).abs() < 1e-9 {
+        Q_ALPHA_005[k - 2]
+    } else if (alpha - 0.10).abs() < 1e-9 {
+        Q_ALPHA_010[k - 2]
+    } else {
+        panic!("alpha must be 0.05 or 0.10 (tabled values)");
+    };
+    q * ((k * (k + 1)) as f64 / (6.0 * n as f64)).sqrt()
+}
+
+/// Pairwise Nemenyi outcome.
+#[derive(Clone, Debug)]
+pub struct NemenyiResult {
+    pub cd: f64,
+    pub avg_ranks: Vec<f64>,
+    /// `true` at (i, j) when algorithms i and j are NOT significantly
+    /// different (|rank_i − rank_j| < CD).
+    pub indistinct: Vec<Vec<bool>>,
+}
+
+/// Run the Nemenyi post-hoc on a Friedman result.
+pub fn nemenyi(friedman: &FriedmanResult, alpha: f64) -> NemenyiResult {
+    let k = friedman.n_algorithms;
+    let cd = critical_difference(k, friedman.n_datasets, alpha);
+    let mut indistinct = vec![vec![false; k]; k];
+    for i in 0..k {
+        for j in 0..k {
+            indistinct[i][j] = (friedman.avg_ranks[i] - friedman.avg_ranks[j]).abs() < cd;
+        }
+    }
+    NemenyiResult { cd, avg_ranks: friedman.avg_ranks.clone(), indistinct }
+}
+
+/// Render an ASCII critical-difference diagram:
+///
+/// ```text
+/// CD = 0.87   (k=5, N=684, alpha=0.05)
+/// 1.0                                         5.0
+/// |---------|---------|---------|---------|
+///    QO_s2 (1.52) ────┐
+///    QO_s3 (1.71) ────┤          <- bars join groups not separable at CD
+/// ```
+///
+/// The textual form lists each algorithm at its average rank and draws
+/// group bars for cliques of mutually indistinct algorithms.
+pub fn render_cd_diagram(names: &[String], result: &NemenyiResult) -> String {
+    let k = names.len();
+    assert_eq!(k, result.avg_ranks.len());
+    let width = 61usize; // rank axis 1..k mapped onto this many columns
+    let rank_to_col = |r: f64| -> usize {
+        let frac = (r - 1.0) / ((k as f64 - 1.0).max(1e-9));
+        (frac.clamp(0.0, 1.0) * (width - 1) as f64).round() as usize
+    };
+
+    let mut out = String::new();
+    out.push_str(&format!("CD = {:.4} (alpha on avg ranks 1..{k})\n", result.cd));
+
+    // axis
+    let mut axis = vec![b'-'; width];
+    for t in 0..k {
+        axis[rank_to_col(t as f64 + 1.0)] = b'+';
+    }
+    out.push_str(&format!("rank: 1{:>pad$}\n", k, pad = width - 1));
+    out.push_str(&format!("      {}\n", String::from_utf8(axis).unwrap()));
+
+    // CD ruler
+    let cd_cols = ((result.cd / ((k as f64 - 1.0).max(1e-9))) * (width - 1) as f64).round() as usize;
+    out.push_str(&format!(
+        "      |{}| = CD\n",
+        "=".repeat(cd_cols.clamp(1, width.saturating_sub(2)))
+    ));
+
+    // algorithms sorted by rank
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| result.avg_ranks[a].partial_cmp(&result.avg_ranks[b]).unwrap());
+    for &i in &order {
+        let col = rank_to_col(result.avg_ranks[i]);
+        out.push_str(&format!(
+            "      {}^ {} ({:.3})\n",
+            " ".repeat(col),
+            names[i],
+            result.avg_ranks[i]
+        ));
+    }
+
+    // maximal groups of mutually indistinct algorithms (by rank order)
+    let mut groups: Vec<(usize, usize)> = Vec::new();
+    for s in 0..k {
+        let mut e = s;
+        'grow: for t in s + 1..k {
+            for u in s..=t {
+                for v in s..=t {
+                    if !result.indistinct[order[u]][order[v]] {
+                        break 'grow;
+                    }
+                }
+            }
+            e = t;
+        }
+        if e > s && !groups.iter().any(|&(gs, ge)| gs <= s && e <= ge) {
+            groups.push((s, e));
+        }
+    }
+    for (gi, &(s, e)) in groups.iter().enumerate() {
+        let c0 = rank_to_col(result.avg_ranks[order[s]]);
+        let c1 = rank_to_col(result.avg_ranks[order[e]]);
+        let (c0, c1) = (c0.min(c1), c0.max(c1));
+        out.push_str(&format!(
+            "      {}{} group{}: {}\n",
+            " ".repeat(c0),
+            "█".repeat((c1 - c0 + 1).max(1)),
+            gi + 1,
+            order[s..=e].iter().map(|&i| names[i].as_str()).collect::<Vec<_>>().join(", ")
+        ));
+    }
+    if groups.is_empty() {
+        out.push_str("      (all pairwise differences exceed CD)\n");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::friedman::friedman_test;
+
+    #[test]
+    fn cd_formula_matches_demsar() {
+        // Demšar 2006: k=5, N=30 -> CD = 2.728 * sqrt(5*6/(6*30)) = 1.113...
+        let cd = critical_difference(5, 30, 0.05);
+        assert!((cd - 2.728 * (30.0f64 / 180.0).sqrt()).abs() < 1e-9);
+        assert!((cd - 1.1136).abs() < 1e-3, "cd={cd}");
+    }
+
+    #[test]
+    fn cd_alpha_010_smaller() {
+        assert!(critical_difference(5, 30, 0.10) < critical_difference(5, 30, 0.05));
+    }
+
+    #[test]
+    #[should_panic(expected = "q_alpha table")]
+    fn k_out_of_table_panics() {
+        critical_difference(11, 10, 0.05);
+    }
+
+    #[test]
+    fn nemenyi_groups_and_diagram() {
+        // 3 algorithms: 0 and 1 close together, 2 far away, many datasets
+        let data: Vec<Vec<f64>> = (0..40)
+            .map(|d| {
+                if d % 2 == 0 {
+                    vec![1.0, 1.1, 5.0]
+                } else {
+                    vec![1.1, 1.0, 5.0]
+                }
+            })
+            .collect();
+        let fr = friedman_test(&data, true);
+        let ne = nemenyi(&fr, 0.05);
+        assert!(ne.indistinct[0][1], "0 and 1 should be indistinct");
+        assert!(!ne.indistinct[0][2], "0 and 2 should differ");
+        let names = vec!["a".to_string(), "b".to_string(), "c".to_string()];
+        let diagram = render_cd_diagram(&names, &ne);
+        assert!(diagram.contains("CD ="));
+        assert!(diagram.contains("a ("));
+        assert!(diagram.contains("group1"));
+    }
+}

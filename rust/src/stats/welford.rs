@@ -1,0 +1,299 @@
+//! Robust incremental mean/variance (paper Sec. 3).
+//!
+//! [`VarStats`] keeps the Welford triple `(n, mean, M2)`:
+//!
+//! * **update** — Welford's algorithm (Eqs. 2–3), weighted;
+//! * **merge** (`+`) — Chan et al. parallel combination (Eqs. 4–5);
+//! * **subtract** (`-`) — the paper's extension (Eqs. 6–7), recovering the
+//!   complement of a partial estimate.
+//!
+//! These two closure properties are what let E-BST-style observers compute
+//! right-hand statistics as `total - left`, and what lets the
+//! [`crate::coordinator`] merge per-shard partial observations losslessly.
+
+use std::ops::{Add, AddAssign, Sub, SubAssign};
+
+/// Robust mergeable/subtractable variance estimator.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct VarStats {
+    /// Total observed weight (count when unweighted).
+    pub n: f64,
+    /// Running mean of the target.
+    pub mean: f64,
+    /// Second-order central moment accumulator (Σ w (y − ȳ)²).
+    pub m2: f64,
+}
+
+impl VarStats {
+    pub const EMPTY: VarStats = VarStats { n: 0.0, mean: 0.0, m2: 0.0 };
+
+    #[inline]
+    pub fn new() -> VarStats {
+        VarStats::EMPTY
+    }
+
+    /// A single observation with weight `w` (paper Alg. 1's `s²_{y_i}`).
+    #[inline]
+    pub fn from_one(y: f64, w: f64) -> VarStats {
+        VarStats { n: w, mean: y, m2: 0.0 }
+    }
+
+    /// Build from a slice (test/bootstrap convenience).
+    pub fn from_slice(ys: &[f64]) -> VarStats {
+        let mut s = VarStats::new();
+        for &y in ys {
+            s.update(y, 1.0);
+        }
+        s
+    }
+
+    /// Weighted Welford update (Eqs. 2–3 with weight `w`).
+    #[inline]
+    pub fn update(&mut self, y: f64, w: f64) {
+        if w <= 0.0 {
+            return;
+        }
+        self.n += w;
+        let delta = y - self.mean;
+        self.mean += (w / self.n) * delta;
+        self.m2 += w * delta * (y - self.mean);
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.n <= 0.0
+    }
+
+    /// Σ w·y reconstructed from the kept moments.
+    #[inline]
+    pub fn sum(&self) -> f64 {
+        self.n * self.mean
+    }
+
+    /// Sample variance s² = M2 / (n − 1); 0 when n ≤ 1.
+    #[inline]
+    pub fn variance(&self) -> f64 {
+        if self.n > 1.0 {
+            (self.m2 / (self.n - 1.0)).max(0.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// Population variance M2 / n; 0 when n ≤ 0.
+    #[inline]
+    pub fn variance_population(&self) -> f64 {
+        if self.n > 0.0 {
+            (self.m2 / self.n).max(0.0)
+        } else {
+            0.0
+        }
+    }
+
+    /// Sample standard deviation.
+    #[inline]
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Chan et al. merge (Eqs. 4–5).
+    #[inline]
+    pub fn merged(&self, other: &VarStats) -> VarStats {
+        if self.is_empty() {
+            return *other;
+        }
+        if other.is_empty() {
+            return *self;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        VarStats {
+            n,
+            mean: (self.n * self.mean + other.n * other.mean) / n,
+            m2: self.m2 + other.m2 + delta * delta * (self.n * other.n / n),
+        }
+    }
+
+    /// The paper's subtraction extension (Eqs. 6–7): `self` is the AB
+    /// total, `other` is the B part; returns A. Tiny negative `m2` from
+    /// cancellation is clamped to 0; non-positive remaining weight yields
+    /// the empty estimator.
+    #[inline]
+    pub fn subtracted(&self, other: &VarStats) -> VarStats {
+        let na = self.n - other.n;
+        if na <= 0.0 {
+            return VarStats::EMPTY;
+        }
+        if other.is_empty() {
+            return *self;
+        }
+        let mean_a = (self.n * self.mean - other.n * other.mean) / na;
+        let delta = other.mean - mean_a;
+        let m2_a = self.m2 - other.m2 - delta * delta * (na * other.n / self.n);
+        VarStats { n: na, mean: mean_a, m2: m2_a.max(0.0) }
+    }
+}
+
+impl Add for VarStats {
+    type Output = VarStats;
+    #[inline]
+    fn add(self, rhs: VarStats) -> VarStats {
+        self.merged(&rhs)
+    }
+}
+
+impl AddAssign for VarStats {
+    #[inline]
+    fn add_assign(&mut self, rhs: VarStats) {
+        *self = self.merged(&rhs);
+    }
+}
+
+impl Sub for VarStats {
+    type Output = VarStats;
+    #[inline]
+    fn sub(self, rhs: VarStats) -> VarStats {
+        self.subtracted(&rhs)
+    }
+}
+
+impl SubAssign for VarStats {
+    #[inline]
+    fn sub_assign(&mut self, rhs: VarStats) {
+        *self = self.subtracted(&rhs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::proptest::{check, expect_close};
+    use crate::common::Rng;
+
+    fn reference_var(ys: &[f64]) -> (f64, f64) {
+        let n = ys.len() as f64;
+        let mean = ys.iter().sum::<f64>() / n;
+        let var = if ys.len() > 1 {
+            ys.iter().map(|y| (y - mean) * (y - mean)).sum::<f64>() / (n - 1.0)
+        } else {
+            0.0
+        };
+        (mean, var)
+    }
+
+    #[test]
+    fn single_observation() {
+        let s = VarStats::from_one(3.5, 1.0);
+        assert_eq!((s.n, s.mean, s.m2), (1.0, 3.5, 0.0));
+        assert_eq!(s.variance(), 0.0);
+    }
+
+    #[test]
+    fn matches_two_pass_reference() {
+        let ys = [1.0, 2.0, 4.0, 8.0, -3.0];
+        let s = VarStats::from_slice(&ys);
+        let (mean, var) = reference_var(&ys);
+        assert!((s.mean - mean).abs() < 1e-12);
+        assert!((s.variance() - var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn weighted_equals_repeats() {
+        let mut w = VarStats::new();
+        w.update(5.0, 3.0);
+        w.update(1.0, 2.0);
+        let r = VarStats::from_slice(&[5.0, 5.0, 5.0, 1.0, 1.0]);
+        assert!((w.mean - r.mean).abs() < 1e-12);
+        assert!((w.m2 - r.m2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_weight_ignored() {
+        let mut s = VarStats::from_slice(&[1.0, 2.0]);
+        let before = s;
+        s.update(100.0, 0.0);
+        assert_eq!(s, before);
+    }
+
+    #[test]
+    fn cancellation_robustness() {
+        // naive sum-of-squares would return variance 0 (or negative) here
+        let offset = 1e9;
+        let ys: Vec<f64> = [0.0, 0.1, 0.2, 0.3].iter().map(|v| v + offset).collect();
+        let s = VarStats::from_slice(&ys);
+        let (_, var) = reference_var(&ys);
+        assert!((s.variance() - var).abs() / var < 1e-6, "{} vs {var}", s.variance());
+    }
+
+    #[test]
+    fn merge_identity() {
+        let s = VarStats::from_slice(&[1.0, 2.0]);
+        assert_eq!(s + VarStats::EMPTY, s);
+        assert_eq!(VarStats::EMPTY + s, s);
+    }
+
+    #[test]
+    fn subtract_all_gives_empty() {
+        let s = VarStats::from_slice(&[1.0, 2.0, 3.0]);
+        assert_eq!(s - s, VarStats::EMPTY);
+    }
+
+    #[test]
+    fn prop_merge_equals_concat() {
+        check("merge==concat", 0xA0, 200, |rng| {
+            let na = rng.below(50) as usize + 1;
+            let nb = rng.below(50) as usize + 1;
+            let a: Vec<f64> = (0..na).map(|_| rng.normal(0.0, 100.0)).collect();
+            let b: Vec<f64> = (0..nb).map(|_| rng.normal(5.0, 1.0)).collect();
+            let merged = VarStats::from_slice(&a) + VarStats::from_slice(&b);
+            let all: Vec<f64> = a.iter().chain(b.iter()).copied().collect();
+            let direct = VarStats::from_slice(&all);
+            expect_close("n", merged.n, direct.n, 0.0, 0.0)?;
+            expect_close("mean", merged.mean, direct.mean, 1e-10, 1e-10)?;
+            expect_close("m2", merged.m2, direct.m2, 1e-8, 1e-8)
+        });
+    }
+
+    #[test]
+    fn prop_merge_associative() {
+        check("merge-assoc", 0xA1, 200, |rng| {
+            let mk = |rng: &mut Rng| {
+                let n = rng.below(30) as usize + 1;
+                VarStats::from_slice(&(0..n).map(|_| rng.normal(0.0, 10.0)).collect::<Vec<_>>())
+            };
+            let (a, b, c) = (mk(rng), mk(rng), mk(rng));
+            let l = (a + b) + c;
+            let r = a + (b + c);
+            expect_close("mean", l.mean, r.mean, 1e-10, 1e-10)?;
+            expect_close("m2", l.m2, r.m2, 1e-8, 1e-8)
+        });
+    }
+
+    #[test]
+    fn prop_subtract_inverts_merge() {
+        check("sub-inverts-merge", 0xA2, 200, |rng| {
+            let na = rng.below(40) as usize + 1;
+            let nb = rng.below(40) as usize + 1;
+            let a = VarStats::from_slice(&(0..na).map(|_| rng.normal(-3.0, 7.0)).collect::<Vec<_>>());
+            let b = VarStats::from_slice(&(0..nb).map(|_| rng.normal(2.0, 0.5)).collect::<Vec<_>>());
+            let rec = (a + b) - b;
+            expect_close("n", rec.n, a.n, 0.0, 1e-12)?;
+            expect_close("mean", rec.mean, a.mean, 1e-8, 1e-8)?;
+            expect_close("m2", rec.m2, a.m2, 1e-6, 1e-6)
+        });
+    }
+
+    #[test]
+    fn prop_variance_non_negative() {
+        check("var>=0", 0xA3, 200, |rng| {
+            let n = rng.below(20) as usize + 2;
+            let s = VarStats::from_slice(&(0..n).map(|_| rng.normal(0.0, 1e-9)).collect::<Vec<_>>());
+            let t = s - VarStats::from_one(s.mean, 1.0);
+            if s.variance() >= 0.0 && t.variance() >= 0.0 {
+                Ok(())
+            } else {
+                Err(format!("negative variance {} {}", s.variance(), t.variance()))
+            }
+        });
+    }
+}

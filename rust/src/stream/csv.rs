@@ -1,0 +1,185 @@
+//! Streaming CSV reader: replay a real dataset file as a [`Stream`].
+//!
+//! Minimal dialect: comma-separated, optional header, no embedded commas
+//! in numeric data (quotes are tolerated and stripped). Non-numeric cells
+//! become NaN and the row is skipped — regression streams must be fully
+//! numeric.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+
+use super::{Instance, Stream};
+
+pub struct CsvStream {
+    reader: BufReader<Box<dyn Read + Send>>,
+    target_index: usize,
+    n_features: usize,
+    label: String,
+    line_buf: String,
+}
+
+impl CsvStream {
+    /// Open a CSV file; `target` names the target column (header required)
+    /// or is a 0-based index when the file has no header.
+    pub fn open(path: &Path, target: &str) -> anyhow::Result<CsvStream> {
+        let file = File::open(path)
+            .map_err(|e| anyhow::anyhow!("open {}: {e}", path.display()))?;
+        let label = path.file_name().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
+        Self::from_reader(Box::new(file), target, label)
+    }
+
+    /// Build from any reader (testing uses in-memory buffers).
+    pub fn from_reader(
+        raw: Box<dyn Read + Send>,
+        target: &str,
+        label: String,
+    ) -> anyhow::Result<CsvStream> {
+        let mut reader = BufReader::new(raw);
+        let mut first = String::new();
+        reader.read_line(&mut first)?;
+        let cells = split_csv(first.trim_end());
+        let all_numeric = cells.iter().all(|c| c.parse::<f64>().is_ok());
+        let (target_index, n_cols, consumed_header) = if all_numeric {
+            let idx: usize = target
+                .parse()
+                .map_err(|_| anyhow::anyhow!("no header: target must be a column index"))?;
+            (idx, cells.len(), false)
+        } else {
+            let idx = cells
+                .iter()
+                .position(|c| c == target)
+                .ok_or_else(|| anyhow::anyhow!("target column {target:?} not in header"))?;
+            (idx, cells.len(), true)
+        };
+        anyhow::ensure!(target_index < n_cols, "target index out of range");
+        let mut stream = CsvStream {
+            reader,
+            target_index,
+            n_features: n_cols - 1,
+            label,
+            line_buf: if consumed_header { String::new() } else { first },
+        };
+        // when the first line was data, stash it for the first next() call
+        if !consumed_header {
+            // keep line_buf as pending row
+        } else {
+            stream.line_buf.clear();
+        }
+        Ok(stream)
+    }
+
+    fn parse_row(&self, line: &str) -> Option<Instance> {
+        let cells = split_csv(line.trim_end());
+        if cells.len() != self.n_features + 1 {
+            return None;
+        }
+        let mut x = Vec::with_capacity(self.n_features);
+        let mut y = f64::NAN;
+        for (i, cell) in cells.iter().enumerate() {
+            let v: f64 = cell.trim().parse().ok()?;
+            if i == self.target_index {
+                y = v;
+            } else {
+                x.push(v);
+            }
+        }
+        if y.is_nan() {
+            return None;
+        }
+        Some(Instance { x, y })
+    }
+}
+
+fn split_csv(line: &str) -> Vec<String> {
+    line.split(',').map(|c| c.trim().trim_matches('"').to_string()).collect()
+}
+
+impl Stream for CsvStream {
+    fn next_instance(&mut self) -> Option<Instance> {
+        loop {
+            if !self.line_buf.is_empty() {
+                let line = std::mem::take(&mut self.line_buf);
+                if let Some(inst) = self.parse_row(&line) {
+                    return Some(inst);
+                }
+                continue;
+            }
+            let mut line = String::new();
+            match self.reader.read_line(&mut line) {
+                Ok(0) | Err(_) => return None,
+                Ok(_) => {
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    if let Some(inst) = self.parse_row(&line) {
+                        return Some(inst);
+                    }
+                    // malformed row: skip
+                }
+            }
+        }
+    }
+
+    fn n_features(&self) -> usize {
+        self.n_features
+    }
+
+    fn name(&self) -> String {
+        format!("csv[{}]", self.label)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn stream_of(content: &str, target: &str) -> CsvStream {
+        CsvStream::from_reader(Box::new(Cursor::new(content.to_string())), target, "mem".into())
+            .unwrap()
+    }
+
+    #[test]
+    fn header_and_target_by_name() {
+        let mut s = stream_of("a,b,y\n1,2,3\n4,5,6\n", "y");
+        assert_eq!(s.n_features(), 2);
+        let i1 = s.next_instance().unwrap();
+        assert_eq!(i1, Instance { x: vec![1.0, 2.0], y: 3.0 });
+        let i2 = s.next_instance().unwrap();
+        assert_eq!(i2.y, 6.0);
+        assert!(s.next_instance().is_none());
+    }
+
+    #[test]
+    fn target_in_middle_column() {
+        let mut s = stream_of("a,y,b\n1,9,2\n", "y");
+        assert_eq!(s.next_instance().unwrap(), Instance { x: vec![1.0, 2.0], y: 9.0 });
+    }
+
+    #[test]
+    fn headerless_by_index() {
+        let mut s = stream_of("1,2,3\n4,5,6\n", "2");
+        // first row must not be lost
+        assert_eq!(s.next_instance().unwrap(), Instance { x: vec![1.0, 2.0], y: 3.0 });
+        assert_eq!(s.next_instance().unwrap().y, 6.0);
+    }
+
+    #[test]
+    fn malformed_rows_skipped() {
+        let mut s = stream_of("a,y\n1,2\nbad,row\n3,4\n\n", "y");
+        assert_eq!(s.next_instance().unwrap().y, 2.0);
+        assert_eq!(s.next_instance().unwrap().y, 4.0);
+        assert!(s.next_instance().is_none());
+    }
+
+    #[test]
+    fn missing_target_errors() {
+        let res = CsvStream::from_reader(
+            Box::new(Cursor::new("a,b\n1,2\n".to_string())),
+            "nope",
+            "mem".into(),
+        );
+        assert!(res.is_err());
+    }
+}

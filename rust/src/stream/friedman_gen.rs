@@ -1,0 +1,91 @@
+//! The Friedman #1 synthetic regression benchmark (Friedman 1991), the
+//! standard non-trivial workload for regression-tree evaluation:
+//!
+//! ```text
+//! y = 10·sin(π·x1·x2) + 20·(x3 − 0.5)² + 10·x4 + 5·x5 + ε,  ε ~ N(0, σ)
+//! ```
+//!
+//! with 10 features i.i.d. U[0, 1] (features 6–10 are pure noise). Used by
+//! the end-to-end tree experiments.
+
+use crate::common::Rng;
+
+use super::{Instance, Stream};
+
+#[derive(Clone, Debug)]
+pub struct Friedman1 {
+    rng: Rng,
+    noise_sigma: f64,
+}
+
+impl Friedman1 {
+    pub fn new(seed: u64, noise_sigma: f64) -> Friedman1 {
+        Friedman1 { rng: Rng::new(seed), noise_sigma }
+    }
+
+    /// Noiseless target for a 10-feature input.
+    pub fn clean_target(x: &[f64]) -> f64 {
+        10.0 * (std::f64::consts::PI * x[0] * x[1]).sin()
+            + 20.0 * (x[2] - 0.5) * (x[2] - 0.5)
+            + 10.0 * x[3]
+            + 5.0 * x[4]
+    }
+}
+
+impl Stream for Friedman1 {
+    fn next_instance(&mut self) -> Option<Instance> {
+        let x: Vec<f64> = (0..10).map(|_| self.rng.f64()).collect();
+        let mut y = Self::clean_target(&x);
+        if self.noise_sigma > 0.0 {
+            y += self.rng.normal(0.0, self.noise_sigma);
+        }
+        Some(Instance { x, y })
+    }
+
+    fn n_features(&self) -> usize {
+        10
+    }
+
+    fn name(&self) -> String {
+        format!("friedman1[sigma={}]", self.noise_sigma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ten_features_in_unit_cube() {
+        let mut f = Friedman1::new(1, 0.0);
+        for _ in 0..100 {
+            let inst = f.next_instance().unwrap();
+            assert_eq!(inst.x.len(), 10);
+            assert!(inst.x.iter().all(|v| (0.0..1.0).contains(v)));
+        }
+    }
+
+    #[test]
+    fn known_target_values() {
+        // x1=x2=0.5: sin(pi/4)... compute directly
+        let x = [0.5, 0.5, 0.5, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let expected = 10.0 * (std::f64::consts::PI * 0.25).sin();
+        assert!((Friedman1::clean_target(&x) - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noiseless_is_deterministic_function_of_x() {
+        let mut f = Friedman1::new(2, 0.0);
+        let inst = f.next_instance().unwrap();
+        assert_eq!(inst.y, Friedman1::clean_target(&inst.x));
+    }
+
+    #[test]
+    fn irrelevant_features_do_not_matter() {
+        let mut a = [0.1; 10];
+        let mut b = [0.1; 10];
+        a[7] = 0.9;
+        b[7] = 0.2;
+        assert_eq!(Friedman1::clean_target(&a), Friedman1::clean_target(&b));
+    }
+}

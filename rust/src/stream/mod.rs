@@ -1,0 +1,45 @@
+//! Data-stream substrate: the paper's Table 1 synthetic protocol, the
+//! Friedman #1 benchmark generator, concept-drift wrappers and a CSV
+//! reader.
+
+pub mod csv;
+pub mod drift;
+pub mod friedman_gen;
+pub mod synth;
+
+pub use drift::{AbruptDrift, GradualDrift};
+pub use friedman_gen::Friedman1;
+pub use synth::{Distribution, NoiseSpec, SyntheticRegression, TargetFn};
+
+/// One labelled stream element.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Instance {
+    pub x: Vec<f64>,
+    pub y: f64,
+}
+
+/// An unbounded (or file-bounded) supervised data stream.
+pub trait Stream: Send {
+    /// Produce the next instance, or `None` when exhausted.
+    fn next_instance(&mut self) -> Option<Instance>;
+
+    /// Number of input features.
+    fn n_features(&self) -> usize;
+
+    fn name(&self) -> String;
+
+    /// Drain up to `n` instances into a vector (testing/bench helper).
+    fn take_vec(&mut self, n: usize) -> Vec<Instance>
+    where
+        Self: Sized,
+    {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            match self.next_instance() {
+                Some(inst) => out.push(inst),
+                None => break,
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,151 @@
+//! Leaf state of the Hoeffding Tree Regressor: per-feature attribute
+//! observers, target statistics and the leaf prediction model.
+
+use crate::eval::baselines::LinearSgd;
+use crate::eval::Regressor;
+use crate::observer::{AttributeObserver, ObserverFactory};
+use crate::stats::VarStats;
+
+/// Leaf prediction strategy (FIMT: target mean / perceptron / adaptive).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LeafModelKind {
+    /// Predict the leaf's target mean.
+    Mean,
+    /// Predict with the leaf's linear SGD model.
+    Linear,
+    /// Track faded errors of both and predict with whichever is currently
+    /// more accurate (FIMT-DD's adaptive node model).
+    Adaptive,
+}
+
+/// Fading factor for the adaptive model's error trackers.
+const FADE: f64 = 0.995;
+
+/// Mutable state of one leaf.
+pub struct LeafState {
+    /// Robust statistics of the leaf's target distribution. May be
+    /// warm-started from the parent branch statistics at split time.
+    pub stats: VarStats,
+    /// One observer per input feature (None when deactivated at max
+    /// depth — the leaf then stops paying observation costs).
+    pub observers: Option<Vec<Box<dyn AttributeObserver>>>,
+    pub linear: LinearSgd,
+    pub kind: LeafModelKind,
+    /// Faded absolute error of the mean / linear predictors (Adaptive).
+    pub mean_err: f64,
+    pub lin_err: f64,
+    /// Weight observed since the last split attempt.
+    pub weight_since_attempt: f64,
+    pub depth: usize,
+}
+
+impl LeafState {
+    pub fn new(
+        n_features: usize,
+        factory: &dyn ObserverFactory,
+        kind: LeafModelKind,
+        lr: f64,
+        depth: usize,
+        active: bool,
+    ) -> LeafState {
+        LeafState {
+            stats: VarStats::new(),
+            observers: active.then(|| (0..n_features).map(|_| factory.build()).collect()),
+            linear: LinearSgd::new(n_features, lr),
+            kind,
+            mean_err: 0.0,
+            lin_err: 0.0,
+            weight_since_attempt: 0.0,
+            depth,
+        }
+    }
+
+    pub fn is_active(&self) -> bool {
+        self.observers.is_some()
+    }
+
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        match self.kind {
+            LeafModelKind::Mean => self.stats.mean,
+            LeafModelKind::Linear => self.linear.predict(x),
+            LeafModelKind::Adaptive => {
+                if self.lin_err <= self.mean_err {
+                    self.linear.predict(x)
+                } else {
+                    self.stats.mean
+                }
+            }
+        }
+    }
+
+    pub fn learn(&mut self, x: &[f64], y: f64, w: f64) {
+        if self.kind == LeafModelKind::Adaptive {
+            self.mean_err = FADE * self.mean_err + (y - self.stats.mean).abs();
+        }
+        self.stats.update(y, w);
+        // fused: one normalized pass does both the error tracking and the
+        // gradient step (perf: avoids a second predict_norm loop)
+        let lin_pred = self.linear.learn_returning_prediction(x, y);
+        if self.kind == LeafModelKind::Adaptive {
+            self.lin_err = FADE * self.lin_err + (y - lin_pred).abs();
+        }
+        if let Some(observers) = &mut self.observers {
+            for (i, ao) in observers.iter_mut().enumerate() {
+                ao.observe(x[i], y, w);
+            }
+        }
+        self.weight_since_attempt += w;
+    }
+
+    /// Total stored elements across this leaf's observers (the paper's
+    /// memory metric).
+    pub fn n_elements(&self) -> usize {
+        self.observers
+            .as_ref()
+            .map(|obs| obs.iter().map(|o| o.n_elements()).sum())
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::Rng;
+    use crate::observer::{factory, QuantizationObserver, RadiusPolicy};
+
+    fn qo_factory() -> Box<dyn crate::observer::ObserverFactory> {
+        factory("QO", || Box::new(QuantizationObserver::new(RadiusPolicy::Fixed(0.1))))
+    }
+
+    #[test]
+    fn inactive_leaf_has_no_observers() {
+        let leaf = LeafState::new(3, qo_factory().as_ref(), LeafModelKind::Mean, 0.02, 5, false);
+        assert!(!leaf.is_active());
+        assert_eq!(leaf.n_elements(), 0);
+    }
+
+    #[test]
+    fn learn_updates_stats_and_observers() {
+        let mut leaf = LeafState::new(2, qo_factory().as_ref(), LeafModelKind::Mean, 0.02, 0, true);
+        leaf.learn(&[0.5, -0.5], 2.0, 1.0);
+        leaf.learn(&[0.7, 0.1], 4.0, 1.0);
+        assert_eq!(leaf.stats.n, 2.0);
+        assert!((leaf.predict(&[0.0, 0.0]) - 3.0).abs() < 1e-12);
+        assert!(leaf.n_elements() >= 2);
+        assert_eq!(leaf.weight_since_attempt, 2.0);
+    }
+
+    #[test]
+    fn adaptive_switches_to_linear_on_linear_data() {
+        let mut leaf =
+            LeafState::new(1, qo_factory().as_ref(), LeafModelKind::Adaptive, 0.05, 0, true);
+        let mut rng = Rng::new(41);
+        for _ in 0..5000 {
+            let x = rng.uniform(-1.0, 1.0);
+            leaf.learn(&[x], 4.0 * x, 1.0);
+        }
+        assert!(leaf.lin_err < leaf.mean_err, "lin={} mean={}", leaf.lin_err, leaf.mean_err);
+        let x = [0.5];
+        assert!((leaf.predict(&x) - 2.0).abs() < 0.5);
+    }
+}

@@ -1,0 +1,12 @@
+//! Online regression trees: a FIMT-like Hoeffding Tree Regressor with
+//! pluggable attribute observers — the system the paper's AOs exist to
+//! serve, and its Sec. 7 ("integrate QO into Hoeffding trees") future
+//! work, implemented here as the end-to-end driver.
+
+pub mod htr;
+pub mod leaf;
+pub mod options;
+
+pub use htr::HoeffdingTreeRegressor;
+pub use leaf::LeafModelKind;
+pub use options::HtrOptions;

@@ -1,0 +1,79 @@
+//! Hoeffding Tree Regressor configuration.
+
+pub use super::leaf::LeafModelKind;
+
+/// Hyper-parameters of [`super::HoeffdingTreeRegressor`]; defaults follow
+/// FIMT-DD / river conventions.
+#[derive(Clone, Copy, Debug)]
+pub struct HtrOptions {
+    /// Observations a leaf accumulates between split attempts.
+    pub grace_period: usize,
+    /// δ of the Hoeffding bound: confidence 1 − δ that the chosen split
+    /// is truly the best.
+    pub split_confidence: f64,
+    /// τ tie-break: split anyway once ε < τ (merits effectively tied).
+    pub tie_threshold: f64,
+    /// Leaf prediction strategy.
+    pub leaf_model: LeafModelKind,
+    /// Depth cap; leaves at the cap stop monitoring (bounded memory).
+    pub max_depth: usize,
+    /// Learning rate for the leaf perceptron.
+    pub leaf_lr: f64,
+    /// Minimum fraction of the leaf's weight each branch must receive for
+    /// a split to be admissible (guards against degenerate splits).
+    pub min_branch_frac: f64,
+}
+
+impl Default for HtrOptions {
+    fn default() -> HtrOptions {
+        HtrOptions {
+            grace_period: 200,
+            split_confidence: 1e-7,
+            tie_threshold: 0.05,
+            leaf_model: LeafModelKind::Adaptive,
+            max_depth: usize::MAX,
+            leaf_lr: 0.02,
+            min_branch_frac: 0.01,
+        }
+    }
+}
+
+impl HtrOptions {
+    /// Hoeffding bound ε = √(R² ln(1/δ) / 2n) with R = 1 (merit *ratios*
+    /// are compared, which live in [0, 1]).
+    pub fn hoeffding_bound(&self, n: f64) -> f64 {
+        if n <= 0.0 {
+            return f64::INFINITY;
+        }
+        ((1.0 / self.split_confidence).ln() / (2.0 * n)).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bound_shrinks_with_n() {
+        let o = HtrOptions::default();
+        let e1 = o.hoeffding_bound(200.0);
+        let e2 = o.hoeffding_bound(2000.0);
+        let e3 = o.hoeffding_bound(200_000.0);
+        assert!(e1 > e2 && e2 > e3);
+        // √(ln(1e7)/400) ≈ 0.2007
+        assert!((e1 - 0.2007).abs() < 1e-3, "e1={e1}");
+    }
+
+    #[test]
+    fn bound_at_zero_is_infinite() {
+        assert!(HtrOptions::default().hoeffding_bound(0.0).is_infinite());
+    }
+
+    #[test]
+    fn defaults_sane() {
+        let o = HtrOptions::default();
+        assert!(o.grace_period > 0);
+        assert!(o.split_confidence > 0.0 && o.split_confidence < 1.0);
+        assert!(o.tie_threshold > 0.0 && o.tie_threshold < 1.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Integration: every attribute observer against the exhaustive oracle
+//! across the paper's Table 1 data settings.
+//!
+//! The paper's Sec. 6.1 finding is the contract checked here: E-BST is
+//! exact (equal merit to the oracle), TE-BST is near-exact, and the QO
+//! variants trade a small, radius-controlled amount of merit for their
+//! memory/time advantage.
+
+use qostream::criterion::VarianceReduction;
+use qostream::observer::{paper_lineup, AttributeObserver, ExhaustiveObserver};
+use qostream::stream::synth::{Distribution, NoiseSpec, SyntheticRegression, TargetFn};
+use qostream::stream::Stream;
+
+/// Drive a single-feature synthetic sample through an observer.
+fn observe_sample(
+    ao: &mut dyn AttributeObserver,
+    dist: Distribution,
+    target: TargetFn,
+    n: usize,
+    seed: u64,
+) {
+    let mut stream = SyntheticRegression::new(
+        dist,
+        target,
+        NoiseSpec::for_distribution(&dist, 0.1),
+        1,
+        seed,
+    );
+    for _ in 0..n {
+        let inst = stream.next_instance().unwrap();
+        ao.observe(inst.x[0], inst.y, 1.0);
+    }
+}
+
+#[test]
+fn ebst_merit_equals_oracle_everywhere() {
+    for (di, dist) in Distribution::table1().into_iter().enumerate() {
+        for target in [TargetFn::Linear, TargetFn::Cubic] {
+            let mut ebst = paper_lineup()[0].build();
+            let mut oracle = ExhaustiveObserver::new();
+            let seed = 1000 + di as u64;
+            observe_sample(ebst.as_mut(), dist, target, 2000, seed);
+            observe_sample(&mut oracle, dist, target, 2000, seed);
+            let sb = ebst.best_split(&VarianceReduction).unwrap();
+            let so = oracle.best_split(&VarianceReduction).unwrap();
+            assert!(
+                (sb.merit - so.merit).abs() <= 1e-9 * so.merit.abs().max(1e-12),
+                "{} {}: {} vs {}",
+                dist.label(),
+                target.label(),
+                sb.merit,
+                so.merit
+            );
+        }
+    }
+}
+
+#[test]
+fn merit_ordering_oracle_geq_qo() {
+    // merit: oracle >= each QO variant, across the full Table 1 grid
+    for (di, dist) in Distribution::table1().into_iter().enumerate() {
+        for target in [TargetFn::Linear, TargetFn::Cubic] {
+            let seed = 2000 + di as u64;
+            let mut oracle = ExhaustiveObserver::new();
+            observe_sample(&mut oracle, dist, target, 3000, seed);
+            let mo = oracle.best_split(&VarianceReduction).unwrap().merit;
+            for fac in paper_lineup().into_iter().skip(2) {
+                let mut qo = fac.build();
+                observe_sample(qo.as_mut(), dist, target, 3000, seed);
+                let mq = qo.best_split(&VarianceReduction).map(|s| s.merit).unwrap_or(0.0);
+                assert!(
+                    mq <= mo + 1e-9 * mo.abs().max(1e-12),
+                    "{} {} {}: qo {} > oracle {}",
+                    fac.name(),
+                    dist.label(),
+                    target.label(),
+                    mq,
+                    mo
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn qo_merit_within_band_of_oracle() {
+    // Sec 6.1: "the actual obtained VR values were very similar" — check
+    // QO_0.01-style small radii recover >= 90% of the oracle merit on the
+    // unit-scale settings.
+    let dist = Distribution::Normal { mu: 0.0, sigma: 1.0 };
+    for target in [TargetFn::Linear, TargetFn::Cubic] {
+        let mut oracle = ExhaustiveObserver::new();
+        observe_sample(&mut oracle, dist, target, 5000, 42);
+        let mo = oracle.best_split(&VarianceReduction).unwrap().merit;
+        let mut qo = paper_lineup()[2].build(); // QO_0.01
+        observe_sample(qo.as_mut(), dist, target, 5000, 42);
+        let mq = qo.best_split(&VarianceReduction).unwrap().merit;
+        assert!(mq >= 0.9 * mo, "{}: {} vs {}", target.label(), mq, mo);
+    }
+}
+
+#[test]
+fn element_counts_ordering_matches_paper_fig4() {
+    // elements: QO_s2 <= QO_s3 <= QO_0.01 (unit-scale data) and every QO
+    // <= TE-BST <= E-BST
+    let dist = Distribution::Normal { mu: 0.0, sigma: 1.0 };
+    let n = 20_000;
+    let mut counts = std::collections::BTreeMap::new();
+    for fac in paper_lineup() {
+        let mut ao = fac.build();
+        observe_sample(ao.as_mut(), dist, TargetFn::Linear, n, 77);
+        counts.insert(fac.name(), ao.n_elements());
+    }
+    let c = |k: &str| counts[k];
+    assert!(c("QO_s2") <= c("QO_s3"), "{counts:?}");
+    assert!(c("QO_s3") <= c("QO_0.01"), "{counts:?}");
+    assert!(c("QO_0.01") <= c("TE-BST"), "{counts:?}");
+    assert!(c("TE-BST") <= c("E-BST"), "{counts:?}");
+    // and the headline: QO uses orders of magnitude fewer elements
+    assert!(c("QO_s2") * 100 < c("E-BST"), "{counts:?}");
+}
+
+#[test]
+fn split_points_converge_to_oracle_with_radius() {
+    // Fig 3: smaller radius -> split point closer to the E-BST/oracle one
+    let dist = Distribution::Uniform { lo: -1.0, hi: 1.0 };
+    let mut oracle = ExhaustiveObserver::new();
+    let seed = 55;
+    let n = 10_000;
+    observe_sample(&mut oracle, dist, TargetFn::Cubic, n, seed);
+    let t_oracle = oracle.best_split(&VarianceReduction).unwrap().threshold;
+
+    let mut diffs = Vec::new();
+    for radius in [0.5, 0.1, 0.01] {
+        let mut qo = qostream::observer::QuantizationObserver::with_radius(radius);
+        observe_sample(&mut qo, dist, TargetFn::Cubic, n, seed);
+        let t = qo.best_split(&VarianceReduction).unwrap().threshold;
+        diffs.push((t - t_oracle).abs());
+    }
+    assert!(
+        diffs[2] <= diffs[0] + 1e-9,
+        "radius 0.01 diff {} should not exceed radius 0.5 diff {}",
+        diffs[2],
+        diffs[0]
+    );
+    assert!(diffs[2] < 0.05, "small-radius split should be near oracle: {diffs:?}");
+}
+
+#[test]
+fn noise_does_not_break_any_observer() {
+    let dist = Distribution::Bimodal { mu1: -7.0, sigma1: 7.0, mu2: 7.0, sigma2: 0.1 };
+    for fac in paper_lineup() {
+        let mut ao = fac.build();
+        observe_sample(ao.as_mut(), dist, TargetFn::Cubic, 5000, 91);
+        let s = ao.best_split(&VarianceReduction);
+        assert!(s.is_some(), "{} returned no split", fac.name());
+        let s = s.unwrap();
+        assert!(s.merit.is_finite() && s.threshold.is_finite(), "{}", fac.name());
+        assert!(s.left.n > 0.0 && s.right.n > 0.0, "{}", fac.name());
+    }
+}

@@ -1,0 +1,166 @@
+//! Integration: load the AOT artifacts (built by `make artifacts`) on the
+//! PJRT CPU client and verify the XLA results match the native rust math
+//! and the observers themselves.
+//!
+//! These tests require `artifacts/manifest.txt`; they panic with a clear
+//! message if it is missing (run `make artifacts`).
+
+use qostream::common::Rng;
+use qostream::criterion::VarianceReduction;
+use qostream::observer::{AttributeObserver, QuantizationObserver};
+use qostream::runtime::split_engine::native_best_split;
+use qostream::runtime::{find_artifacts_dir, Manifest, SlotTable, XlaQuantizeEngine, XlaSplitEngine};
+
+fn manifest() -> Manifest {
+    let dir = find_artifacts_dir().expect("artifacts/ missing — run `make artifacts`");
+    Manifest::load(&dir).expect("manifest parse")
+}
+
+fn client() -> xla::PjRtClient {
+    xla::PjRtClient::cpu().expect("PJRT CPU client")
+}
+
+fn random_qo(seed: u64, n: usize, radius: f64) -> QuantizationObserver {
+    let mut rng = Rng::new(seed);
+    let mut qo = QuantizationObserver::with_radius(radius);
+    for _ in 0..n {
+        let x = rng.normal(0.0, 1.0);
+        let y = 2.0 * x.powi(3) - x + rng.normal(0.0, 0.1);
+        qo.observe(x, y, 1.0);
+    }
+    qo
+}
+
+#[test]
+fn split_engine_matches_native_math() {
+    let c = client();
+    let engine = XlaSplitEngine::load(&c, &manifest()).expect("load split_eval");
+    assert_eq!(engine.f, 8);
+    assert_eq!(engine.s, 256);
+
+    let tables: Vec<SlotTable> =
+        (0..8).map(|i| SlotTable::from_qo(&random_qo(100 + i, 3000, 0.05))).collect();
+    let results = engine.best_splits(&tables).expect("execute");
+    assert_eq!(results.len(), 8);
+    for (table, res) in tables.iter().zip(&results) {
+        let native = native_best_split(table).expect("native split");
+        let xla_res = res.expect("xla split");
+        assert_eq!(xla_res.best_idx, native.best_idx, "argmax must agree");
+        assert!(
+            (xla_res.merit - native.merit).abs() <= 1e-9 * native.merit.abs().max(1.0),
+            "merit {} vs {}",
+            xla_res.merit,
+            native.merit
+        );
+        assert!((xla_res.threshold - native.threshold).abs() < 1e-9);
+    }
+}
+
+#[test]
+fn split_engine_matches_observer_query() {
+    let c = client();
+    let engine = XlaSplitEngine::load(&c, &manifest()).expect("load split_eval");
+    let qo = random_qo(7, 5000, 0.05);
+    let res = engine
+        .best_splits_for_observers(&[&qo])
+        .expect("execute")[0]
+        .expect("split found");
+    let native = qo.best_split(&VarianceReduction).expect("native split");
+    assert!(
+        (res.threshold - native.threshold).abs() < 1e-9,
+        "{} vs {}",
+        res.threshold,
+        native.threshold
+    );
+    assert!((res.merit - native.merit).abs() <= 1e-9 * native.merit.abs().max(1.0));
+}
+
+#[test]
+fn split_engine_handles_more_features_than_f() {
+    let c = client();
+    let engine = XlaSplitEngine::load(&c, &manifest()).expect("load split_eval");
+    // 19 tables -> 3 chunks of 8
+    let tables: Vec<SlotTable> =
+        (0..19).map(|i| SlotTable::from_qo(&random_qo(200 + i, 800, 0.1))).collect();
+    let results = engine.best_splits(&tables).expect("execute");
+    assert_eq!(results.len(), 19);
+    for (table, res) in tables.iter().zip(&results) {
+        let native = native_best_split(table).unwrap();
+        assert_eq!(res.unwrap().best_idx, native.best_idx);
+    }
+}
+
+#[test]
+fn split_engine_skips_degenerate_tables() {
+    let c = client();
+    let engine = XlaSplitEngine::load(&c, &manifest()).expect("load split_eval");
+    let empty = SlotTable::default();
+    let single = SlotTable {
+        n: vec![5.0],
+        sum_x: vec![1.0],
+        mean: vec![2.0],
+        m2: vec![0.3],
+    };
+    let good = SlotTable::from_qo(&random_qo(3, 500, 0.1));
+    let results = engine.best_splits(&[empty, single, good]).expect("execute");
+    assert!(results[0].is_none());
+    assert!(results[1].is_none());
+    assert!(results[2].is_some());
+}
+
+#[test]
+fn quantize_engine_matches_streaming_observer() {
+    let c = client();
+    let engine = XlaQuantizeEngine::load(&c, &manifest()).expect("load quantize");
+    assert_eq!(engine.b, 1024);
+
+    let mut rng = Rng::new(42);
+    let n = 3000; // forces multiple batches incl. a partial one
+    let xs: Vec<f64> = (0..n).map(|_| rng.normal(0.0, 1.5)).collect();
+    let ys: Vec<f64> = xs.iter().map(|x| x * x + 0.5).collect();
+    let radius = 0.1;
+
+    let bulk = engine.build_observer(&xs, &ys, radius).expect("bulk ingest");
+    let mut streaming = QuantizationObserver::with_radius(radius);
+    for (&x, &y) in xs.iter().zip(&ys) {
+        streaming.observe(x, y, 1.0);
+    }
+
+    assert_eq!(bulk.n_elements(), streaming.n_elements(), "slot counts");
+    assert!((bulk.total().n - streaming.total().n).abs() < 1e-6);
+    assert!(
+        (bulk.total().mean - streaming.total().mean).abs() < 1e-9,
+        "{} vs {}",
+        bulk.total().mean,
+        streaming.total().mean
+    );
+    assert!(
+        (bulk.total().m2 - streaming.total().m2).abs() / streaming.total().m2 < 1e-9,
+        "m2 {} vs {}",
+        bulk.total().m2,
+        streaming.total().m2
+    );
+    let sb = bulk.best_split(&VarianceReduction).unwrap();
+    let ss = streaming.best_split(&VarianceReduction).unwrap();
+    assert!((sb.threshold - ss.threshold).abs() < 1e-9);
+    assert!((sb.merit - ss.merit).abs() <= 1e-9 * ss.merit.abs().max(1.0));
+}
+
+#[test]
+fn quantize_engine_wide_range_overflow_path() {
+    // a sample whose code range exceeds S=256 in one batch exercises the
+    // overflow/re-ingest loop
+    let c = client();
+    let engine = XlaQuantizeEngine::load(&c, &manifest()).expect("load quantize");
+    let mut rng = Rng::new(77);
+    let xs: Vec<f64> = (0..2000).map(|_| rng.uniform(-50.0, 50.0)).collect();
+    let ys: Vec<f64> = xs.iter().map(|x| x.signum()).collect();
+    let radius = 0.1; // 1000 possible codes >> 256
+    let bulk = engine.build_observer(&xs, &ys, radius).expect("bulk ingest");
+    let mut streaming = QuantizationObserver::with_radius(radius);
+    for (&x, &y) in xs.iter().zip(&ys) {
+        streaming.observe(x, y, 1.0);
+    }
+    assert_eq!(bulk.n_elements(), streaming.n_elements());
+    assert!((bulk.total().n - streaming.total().n).abs() < 1e-6);
+}
