@@ -1,11 +1,18 @@
 //! `cargo bench --bench tree_throughput` — the Sec. 7 integration bench:
 //! Hoeffding trees with each observer on Friedman #1, reporting prequential
-//! accuracy, throughput and stored elements.
+//! accuracy, throughput and stored elements — followed by the forest
+//! scenario (single tree vs online bagging vs ARF, QO vs E-BST observers
+//! inside the ensemble, on a drifting Friedman stream).
 
-use qostream::bench_suite::tree_bench;
+use qostream::bench_suite::{forest_bench, tree_bench};
 
 fn main() {
     let rendered = tree_bench::generate(30_000, 1).expect("tree bench");
     println!("{rendered}");
     println!("full data written to results/tree/");
+
+    let cfg = forest_bench::ForestBenchConfig::default();
+    let rendered = forest_bench::generate(&cfg).expect("forest bench");
+    println!("{rendered}");
+    println!("full data written to results/forest/");
 }

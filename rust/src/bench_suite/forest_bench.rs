@@ -1,0 +1,231 @@
+//! Forest-vs-single-tree scenario: ensembles (online bagging, ARF) against
+//! one Hoeffding tree on a drifting Friedman #1 stream, with both QO and
+//! E-BST observers inside the ensemble — where the paper's cheap-observer
+//! economics actually compound (every instance fans out to λ·members tree
+//! updates).
+//!
+//! CLI: `qostream forest [--instances N --members M --lambda L ...]`;
+//! bench: `cargo bench --bench tree_throughput`. Results land in
+//! `results/forest/`.
+
+use crate::common::table::{fnum, Table};
+use crate::eval::{prequential, MeanRegressor, PrequentialReport};
+use crate::forest::{ArfOptions, ArfRegressor, OnlineBaggingRegressor, SubspaceSize};
+use crate::observer::{factory, EBst, ObserverFactory, QuantizationObserver, RadiusPolicy};
+use crate::stream::{AbruptDrift, Friedman1, Stream};
+use crate::tree::{HoeffdingTreeRegressor, HtrOptions};
+
+use super::report::Report;
+
+/// Scenario parameters (CLI-exposed).
+#[derive(Clone, Copy, Debug)]
+pub struct ForestBenchConfig {
+    pub instances: usize,
+    pub members: usize,
+    pub lambda: f64,
+    pub subspace: SubspaceSize,
+    pub seed: u64,
+    /// Abrupt concept change position (0 = stationary stream).
+    pub drift_at: usize,
+}
+
+impl Default for ForestBenchConfig {
+    fn default() -> ForestBenchConfig {
+        ForestBenchConfig {
+            instances: 20_000,
+            members: 10,
+            lambda: 6.0,
+            subspace: SubspaceSize::Sqrt,
+            seed: 1,
+            drift_at: 10_000,
+        }
+    }
+}
+
+impl ForestBenchConfig {
+    /// The scenario's stream: Friedman #1 that abruptly swaps the roles of
+    /// its informative features at `drift_at` (stationary when 0).
+    pub fn stream(&self) -> Box<dyn Stream> {
+        if self.drift_at == 0 {
+            Box::new(Friedman1::new(self.seed, 1.0))
+        } else {
+            Box::new(AbruptDrift::new(
+                Box::new(Friedman1::new(self.seed, 1.0)),
+                Box::new(Friedman1::swapped(self.seed.wrapping_add(1), 1.0)),
+                self.drift_at,
+            ))
+        }
+    }
+}
+
+/// One row of the forest comparison.
+#[derive(Clone, Debug)]
+pub struct ForestRow {
+    pub model: String,
+    pub mae: f64,
+    pub rmse: f64,
+    pub r2: f64,
+    pub seconds: f64,
+    pub throughput: f64,
+    pub elements: usize,
+    pub warnings: usize,
+    pub drifts: usize,
+}
+
+fn row_of(report: &PrequentialReport, warnings: usize, drifts: usize) -> ForestRow {
+    ForestRow {
+        model: report.model.clone(),
+        mae: report.metrics.mae(),
+        rmse: report.metrics.rmse(),
+        r2: report.metrics.r2(),
+        seconds: report.seconds,
+        throughput: report.throughput(),
+        elements: report.n_elements,
+        warnings,
+        drifts,
+    }
+}
+
+/// The scenario's QO observer configuration (paper QO_s2) — shared with
+/// the CLI so the `--parallel` demo runs the exact same observers as the
+/// bench table it prints next to.
+pub fn qo_factory() -> Box<dyn ObserverFactory> {
+    factory("QO_s2", || {
+        Box::new(QuantizationObserver::new(RadiusPolicy::std_fraction(2.0)))
+    })
+}
+
+/// The scenario's E-BST observer configuration (shared with the CLI).
+pub fn ebst_factory() -> Box<dyn ObserverFactory> {
+    factory("E-BST", || Box::new(EBst::new()))
+}
+
+fn arf_options(cfg: &ForestBenchConfig) -> ArfOptions {
+    ArfOptions {
+        n_members: cfg.members,
+        lambda: cfg.lambda,
+        subspace: cfg.subspace,
+        seed: cfg.seed,
+        ..Default::default()
+    }
+}
+
+/// Run the scenario lineup: mean baseline, single trees, bagging, and ARF
+/// with both observer families.
+pub fn run(cfg: &ForestBenchConfig) -> Vec<ForestRow> {
+    let n_features = 10;
+    let mut rows = Vec::new();
+    {
+        let mut model = MeanRegressor::new();
+        let report = prequential(&mut model, &mut *cfg.stream(), cfg.instances, 0);
+        rows.push(row_of(&report, 0, 0));
+    }
+    for fac in [qo_factory(), ebst_factory()] {
+        let mut tree = HoeffdingTreeRegressor::new(n_features, HtrOptions::default(), fac);
+        let report = prequential(&mut tree, &mut *cfg.stream(), cfg.instances, 0);
+        rows.push(row_of(&report, 0, 0));
+    }
+    {
+        let mut bag = OnlineBaggingRegressor::new(
+            n_features,
+            cfg.members,
+            cfg.lambda,
+            HtrOptions::default(),
+            qo_factory(),
+            cfg.seed,
+        );
+        let report = prequential(&mut bag, &mut *cfg.stream(), cfg.instances, 0);
+        rows.push(row_of(&report, 0, 0));
+    }
+    for fac in [qo_factory(), ebst_factory()] {
+        let mut arf = ArfRegressor::new(n_features, arf_options(cfg), fac);
+        let report = prequential(&mut arf, &mut *cfg.stream(), cfg.instances, 0);
+        let (w, d) = (arf.n_warnings(), arf.n_drifts());
+        rows.push(row_of(&report, w, d));
+    }
+    rows
+}
+
+/// Render + persist under `results/forest/`.
+pub fn generate(cfg: &ForestBenchConfig) -> anyhow::Result<String> {
+    let rows = run(cfg);
+    let mut table = Table::new(vec![
+        "model", "MAE", "RMSE", "R2", "time_s", "inst/s", "elements", "warnings", "drifts",
+    ]);
+    for r in &rows {
+        table.row(vec![
+            r.model.clone(),
+            fnum(r.mae),
+            fnum(r.rmse),
+            fnum(r.r2),
+            fnum(r.seconds),
+            fnum(r.throughput),
+            r.elements.to_string(),
+            r.warnings.to_string(),
+            r.drifts.to_string(),
+        ]);
+    }
+    let rendered = format!(
+        "Forest benchmark ({} instances, {} members, lambda={}, subspace={}, drift@{})\n{}",
+        cfg.instances,
+        cfg.members,
+        cfg.lambda,
+        cfg.subspace.label(),
+        cfg.drift_at,
+        table.render()
+    );
+    let report = Report::create("forest")?;
+    report.write_table("forest", &table)?;
+    report.write_text("summary.txt", &rendered)?;
+    Ok(rendered)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> ForestBenchConfig {
+        ForestBenchConfig {
+            instances: 4000,
+            members: 3,
+            lambda: 1.0,
+            drift_at: 2000,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn lineup_shape_and_sanity() {
+        let rows = run(&small_cfg());
+        assert_eq!(rows.len(), 6);
+        assert_eq!(rows[0].model, "mean");
+        let baseline = rows[0].rmse;
+        for r in &rows[1..] {
+            assert!(r.rmse.is_finite() && r.mae.is_finite(), "{}", r.model);
+            assert!(
+                r.rmse < baseline,
+                "{} rmse {} should beat mean {baseline}",
+                r.model,
+                r.rmse
+            );
+        }
+        assert!(rows[4].model.starts_with("arf["));
+        assert!(rows[5].model.contains("E-BST"));
+    }
+
+    #[test]
+    fn generate_writes_results() {
+        let text = generate(&small_cfg()).unwrap();
+        assert!(text.contains("arf["));
+        assert!(text.contains("bag["));
+        assert!(std::path::Path::new("results/forest/forest.csv").exists());
+    }
+
+    #[test]
+    fn stationary_config_uses_plain_stream() {
+        let cfg = ForestBenchConfig { drift_at: 0, ..small_cfg() };
+        assert_eq!(cfg.stream().name(), "friedman1[sigma=1]");
+        let drifting = small_cfg();
+        assert!(drifting.stream().name().starts_with("abrupt["));
+    }
+}

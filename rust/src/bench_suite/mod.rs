@@ -12,12 +12,14 @@
 //! | Figure 5 (CD on observe time) | [`cd`] | `qostream cd --metric observe` |
 //! | Figure 6 (CD on query time) | [`cd`] | `qostream cd --metric query` |
 //! | Sec. 7 tree integration | [`tree_bench`] | `qostream tree` |
+//! | Forest extension (ensembles + drift) | [`forest_bench`] | `qostream forest` |
 //!
 //! Results (CSV + JSON + ASCII charts) are written under `results/`.
 
 pub mod cd;
 pub mod fig1;
 pub mod fig3;
+pub mod forest_bench;
 pub mod protocol;
 pub mod report;
 pub mod runner;

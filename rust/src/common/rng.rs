@@ -125,6 +125,25 @@ impl Rng {
         mu + sigma * self.standard_normal()
     }
 
+    /// Poisson(λ) by Knuth's inversion: multiply uniforms until the
+    /// product drops below e^{-λ}. Exact and O(λ) per draw — fine for the
+    /// λ ≤ 10 used by online bagging (Oza & Russell 2001).
+    pub fn poisson(&mut self, lambda: f64) -> u64 {
+        if lambda <= 0.0 {
+            return 0;
+        }
+        let limit = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= self.f64();
+            if p <= limit {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
     /// Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
@@ -226,6 +245,31 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(sorted, (0..50).collect::<Vec<_>>());
         assert_ne!(xs, (0..50).collect::<Vec<_>>()); // overwhelmingly likely
+    }
+
+    #[test]
+    fn poisson_moments_match_lambda() {
+        let mut r = Rng::new(21);
+        for lambda in [0.5, 1.0, 6.0] {
+            let n = 100_000;
+            let (mut s, mut s2) = (0.0, 0.0);
+            for _ in 0..n {
+                let v = r.poisson(lambda) as f64;
+                s += v;
+                s2 += v * v;
+            }
+            let mean = s / n as f64;
+            let var = s2 / n as f64 - mean * mean;
+            assert!((mean - lambda).abs() < 0.05 * lambda.max(1.0), "mean={mean} lambda={lambda}");
+            assert!((var - lambda).abs() < 0.1 * lambda.max(1.0), "var={var} lambda={lambda}");
+        }
+    }
+
+    #[test]
+    fn poisson_zero_lambda_is_zero() {
+        let mut r = Rng::new(22);
+        assert_eq!(r.poisson(0.0), 0);
+        assert_eq!(r.poisson(-1.0), 0);
     }
 
     #[test]

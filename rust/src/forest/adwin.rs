@@ -1,0 +1,356 @@
+//! ADWIN — ADaptive WINdowing drift detection (Bifet & Gavaldà 2007).
+//!
+//! Maintains a variable-length window over a real-valued signal (here: a
+//! tree's prequential absolute error) as an exponential histogram: rows of
+//! at most [`MAX_BUCKETS`] buckets, where a row-`i` bucket summarizes 2^i
+//! observations. Whenever two adjacent sub-windows have means that differ
+//! by more than a δ-calibrated bound, the older sub-window is dropped —
+//! the window adapts itself to the most recent concept.
+//!
+//! The buckets are the paper's own Sec. 3 [`VarStats`] estimators: row
+//! compaction is the Chan **merge** and window shrinking is the paper's
+//! **subtraction** extension, so the detector inherits the same numerical
+//! robustness the observers do (no catastrophic cancellation under large
+//! error offsets).
+//!
+//! The cut bound follows the original paper's normal-approximation form:
+//!
+//! ```text
+//! eps_cut = sqrt(2 m σ²_W ln(2/δ')) + (2/3) m ln(2/δ'),   m = 1/n0 + 1/n1
+//! ```
+//!
+//! with δ' = δ / W (union bound over the W possible cut positions).
+
+use crate::stats::VarStats;
+
+/// Maximum buckets kept per exponential-histogram row.
+const MAX_BUCKETS: usize = 5;
+/// Cut checks run every `CLOCK` observations (amortizes the O(log W) scan).
+const CLOCK: u32 = 32;
+/// Each side of a candidate cut must hold at least this much weight.
+const MIN_SIDE: f64 = 5.0;
+/// No cut checks until the window holds at least this many observations.
+const MIN_WINDOW: f64 = 16.0;
+
+/// ADWIN change detector over a streaming real-valued signal.
+#[derive(Clone, Debug)]
+pub struct Adwin {
+    delta: f64,
+    /// `rows[i]` holds buckets of 2^i observations, oldest first; higher
+    /// rows are older. Global order oldest→newest is: rows from last to
+    /// first, each row front to back.
+    rows: Vec<Vec<VarStats>>,
+    total: VarStats,
+    tick: u32,
+    n_detections: usize,
+    /// Direction of the last detection: `true` when the kept (recent)
+    /// window had a HIGHER mean than the dropped prefix. Consumers
+    /// monitoring an error signal use this to distinguish degradation
+    /// (rising error → real drift) from improvement (falling error while
+    /// a model converges — a change ADWIN rightly adapts to, but not a
+    /// reason to discard the model).
+    last_shrink_rise: bool,
+}
+
+impl Adwin {
+    /// `delta` is the false-alarm confidence (smaller = more conservative;
+    /// ARF convention: 0.01 for warnings, 0.001 for drifts).
+    pub fn new(delta: f64) -> Adwin {
+        assert!(delta > 0.0 && delta < 1.0, "delta must be in (0, 1)");
+        Adwin {
+            delta,
+            rows: vec![Vec::new()],
+            total: VarStats::new(),
+            tick: 0,
+            n_detections: 0,
+            last_shrink_rise: false,
+        }
+    }
+
+    /// Feed one observation; returns `true` when a distribution change was
+    /// detected (the window just dropped its stale prefix).
+    pub fn update(&mut self, value: f64) -> bool {
+        if !value.is_finite() {
+            return false;
+        }
+        self.total.update(value, 1.0);
+        self.rows[0].push(VarStats::from_one(value, 1.0));
+        self.compress();
+        self.tick += 1;
+        if self.tick >= CLOCK {
+            self.tick = 0;
+            self.shrink()
+        } else {
+            false
+        }
+    }
+
+    /// Mean of the current window.
+    pub fn mean(&self) -> f64 {
+        self.total.mean
+    }
+
+    /// Sample variance of the current window.
+    pub fn variance(&self) -> f64 {
+        self.total.variance()
+    }
+
+    /// Observations currently in the window.
+    pub fn width(&self) -> usize {
+        self.total.n.round() as usize
+    }
+
+    /// Number of detected changes since construction / last reset.
+    pub fn n_detections(&self) -> usize {
+        self.n_detections
+    }
+
+    /// Whether the most recent detection saw the signal RISE (recent mean
+    /// above the dropped prefix's mean). Meaningful right after
+    /// [`Adwin::update`] returns `true`.
+    pub fn rising(&self) -> bool {
+        self.last_shrink_rise
+    }
+
+    /// Forget everything (fresh detector, same delta).
+    pub fn reset(&mut self) {
+        self.rows = vec![Vec::new()];
+        self.total = VarStats::new();
+        self.tick = 0;
+        self.n_detections = 0;
+        self.last_shrink_rise = false;
+    }
+
+    fn n_buckets(&self) -> usize {
+        self.rows.iter().map(Vec::len).sum()
+    }
+
+    /// Cascade row overflows upward, pairing the two oldest buckets of a
+    /// row into one twice-as-large bucket of the next row (Chan merge).
+    fn compress(&mut self) {
+        let mut level = 0;
+        while level < self.rows.len() {
+            if self.rows[level].len() > MAX_BUCKETS {
+                let a = self.rows[level].remove(0);
+                let b = self.rows[level].remove(0);
+                if level + 1 == self.rows.len() {
+                    self.rows.push(Vec::new());
+                }
+                self.rows[level + 1].push(a + b);
+            }
+            level += 1;
+        }
+    }
+
+    /// Drop stale buckets while any admissible cut shows significantly
+    /// different sub-window means. Returns whether anything was dropped.
+    fn shrink(&mut self) -> bool {
+        if self.total.n < MIN_WINDOW {
+            return false;
+        }
+        let mut detected = false;
+        let mut dropped_acc = VarStats::new();
+        while self.n_buckets() > 2 && self.has_cut() {
+            // oldest bucket lives at the front of the highest row
+            let level = self.rows.iter().rposition(|r| !r.is_empty()).expect("nonempty");
+            let dropped = self.rows[level].remove(0);
+            self.total = self.total - dropped;
+            dropped_acc += dropped;
+            while self.rows.len() > 1 && self.rows.last().map(Vec::is_empty).unwrap_or(false) {
+                self.rows.pop();
+            }
+            detected = true;
+        }
+        if detected {
+            self.n_detections += 1;
+            self.last_shrink_rise = self.total.mean > dropped_acc.mean;
+        }
+        detected
+    }
+
+    /// Scan every bucket boundary oldest→newest for a significant cut.
+    fn has_cut(&self) -> bool {
+        let total = self.total;
+        let var = total.variance_population();
+        let delta_prime = self.delta / total.n.max(2.0);
+        let ln_term = (2.0 / delta_prime).ln();
+        let mut acc = VarStats::new();
+        for level in (0..self.rows.len()).rev() {
+            for bucket in &self.rows[level] {
+                acc = acc + *bucket;
+                let n0 = acc.n;
+                let n1 = total.n - n0;
+                if n0 < MIN_SIDE || n1 < MIN_SIDE {
+                    continue;
+                }
+                let rest = total - acc;
+                let m = 1.0 / n0 + 1.0 / n1;
+                let eps = (2.0 * m * var * ln_term).sqrt() + 2.0 / 3.0 * m * ln_term;
+                if (acc.mean - rest.mean).abs() > eps {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::proptest::check;
+    use crate::common::Rng;
+    use crate::stream::synth::{Distribution, NoiseSpec, SyntheticRegression, TargetFn};
+    use crate::stream::{AbruptDrift, Instance, Stream};
+
+    /// A stream whose target is a constant level plus Gaussian noise —
+    /// the drift building block (mirrors the wrapper in `stream::drift`
+    /// tests).
+    fn level_stream(level: f64, noise: f64, seed: u64) -> Box<dyn Stream> {
+        struct Level {
+            level: f64,
+            noise: f64,
+            rng: Rng,
+            inner: SyntheticRegression,
+        }
+        impl Stream for Level {
+            fn next_instance(&mut self) -> Option<Instance> {
+                let mut inst = self.inner.next_instance().unwrap();
+                inst.y = self.level + self.rng.normal(0.0, self.noise);
+                Some(inst)
+            }
+            fn n_features(&self) -> usize {
+                self.inner.n_features()
+            }
+            fn name(&self) -> String {
+                format!("level{}", self.level)
+            }
+        }
+        Box::new(Level {
+            level,
+            noise,
+            rng: Rng::new(seed ^ 0xABCD),
+            inner: SyntheticRegression::new(
+                Distribution::Uniform { lo: -1.0, hi: 1.0 },
+                TargetFn::Linear,
+                NoiseSpec::NONE,
+                1,
+                seed,
+            ),
+        })
+    }
+
+    #[test]
+    fn window_tracks_mean_when_stationary() {
+        let mut adwin = Adwin::new(0.002);
+        let mut rng = Rng::new(1);
+        for _ in 0..2000 {
+            adwin.update(rng.normal(3.0, 0.5));
+        }
+        assert!((adwin.mean() - 3.0).abs() < 0.1, "mean={}", adwin.mean());
+        assert_eq!(adwin.width(), 2000, "stationary window must keep everything");
+        assert_eq!(adwin.n_detections(), 0);
+    }
+
+    #[test]
+    fn detects_mean_shift_on_abrupt_drift_stream() {
+        let drift_at = 1500;
+        let mut stream = AbruptDrift::new(
+            level_stream(0.0, 0.5, 10),
+            level_stream(2.0, 0.5, 11),
+            drift_at,
+        );
+        let mut adwin = Adwin::new(0.002);
+        let mut detected_at = None;
+        for i in 0..4000 {
+            let inst = stream.next_instance().unwrap();
+            if adwin.update(inst.y) && detected_at.is_none() {
+                detected_at = Some(i);
+            }
+        }
+        let at = detected_at.expect("a 4-sigma mean shift must be detected");
+        assert!(at >= drift_at, "detected before the drift: {at}");
+        assert!(at < drift_at + 500, "detection too slow: {at}");
+        assert!(adwin.rising(), "an upward shift must report rising");
+        // after shrinking, the window mean reflects the new concept
+        assert!((adwin.mean() - 2.0).abs() < 0.2, "mean={}", adwin.mean());
+    }
+
+    #[test]
+    fn falling_shift_detected_but_not_rising() {
+        let mut adwin = Adwin::new(0.002);
+        let mut rng = Rng::new(19);
+        for _ in 0..1000 {
+            adwin.update(rng.normal(5.0, 0.3));
+        }
+        let mut detected = false;
+        for _ in 0..1000 {
+            detected |= adwin.update(rng.normal(1.0, 0.3));
+        }
+        assert!(detected, "a large downward shift must still shrink the window");
+        assert!(!adwin.rising(), "downward shift must not report rising");
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut adwin = Adwin::new(0.01);
+        for i in 0..100 {
+            adwin.update(i as f64);
+        }
+        adwin.reset();
+        assert_eq!(adwin.width(), 0);
+        assert_eq!(adwin.n_detections(), 0);
+        assert_eq!(adwin.mean(), 0.0);
+    }
+
+    #[test]
+    fn bucket_memory_is_logarithmic() {
+        let mut adwin = Adwin::new(0.002);
+        let mut rng = Rng::new(3);
+        for _ in 0..50_000 {
+            adwin.update(rng.normal(0.0, 1.0));
+        }
+        // MAX_BUCKETS per row, ~log2(50k) rows
+        assert!(adwin.n_buckets() <= MAX_BUCKETS * 20, "{} buckets", adwin.n_buckets());
+        assert_eq!(adwin.width(), 50_000);
+    }
+
+    #[test]
+    fn prop_never_fires_on_stationary_stream() {
+        // the satellite contract: delta = 0.002 must produce no false
+        // alarms on stationary noise (union-bounded cut test)
+        check("adwin-stationary", 0xF0, 10, |rng| {
+            let mut adwin = Adwin::new(0.002);
+            let mu = rng.uniform(-5.0, 5.0);
+            let sigma = 0.1 + rng.f64() * 2.0;
+            for _ in 0..3000 {
+                if adwin.update(rng.normal(mu, sigma)) {
+                    return Err(format!("false alarm (mu={mu}, sigma={sigma})"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_detects_large_shifts_quickly() {
+        check("adwin-detects-shift", 0xF1, 10, |rng| {
+            let mut adwin = Adwin::new(0.002);
+            let sigma = 0.5;
+            let jump = 4.0 + rng.f64() * 4.0; // 8..16 sigma shift
+            for _ in 0..1000 {
+                adwin.update(rng.normal(0.0, sigma));
+            }
+            for i in 0..500 {
+                if adwin.update(rng.normal(jump, sigma)) {
+                    return if i < 200 {
+                        Ok(())
+                    } else {
+                        Err(format!("slow detection: {i} samples for a {jump}-shift"))
+                    };
+                }
+            }
+            Err(format!("missed a {jump} mean shift"))
+        });
+    }
+}

@@ -1,0 +1,41 @@
+//! Online ensemble learning on top of the QO-backed Hoeffding trees.
+//!
+//! The paper's Quantization Observer makes per-instance observation cheap
+//! enough that *aggressive* split attempting becomes affordable; the place
+//! where that economy compounds is an **ensemble**, where every instance
+//! fans out to many trees (Manapragada et al., "An Eager Splitting
+//! Strategy for Online Decision Trees in Ensembles"). This subsystem
+//! scales the single [`crate::tree::HoeffdingTreeRegressor`] into
+//! competitive online forests:
+//!
+//! * [`adwin`] — the ADWIN drift detector (Bifet & Gavaldà 2007), built
+//!   on the paper's Sec. 3 mergeable/subtractable [`crate::stats::VarStats`]
+//!   estimators;
+//! * [`subspace`] (re-exported from [`crate::tree::subspace`], where it
+//!   lives so the tree layer stays ensemble-free) — per-leaf random
+//!   feature subspaces via [`crate::tree::HtrOptions::subspace`];
+//! * [`bagging`] — Oza–Russell online bagging with Poisson(λ) instance
+//!   weighting;
+//! * [`arf`] — the Adaptive Random Forest Regressor (Gomes et al. 2017):
+//!   bagging + subspaces + per-member warning/drift detectors with
+//!   background trees swapped in on drift;
+//! * [`parallel`] — multi-core member fitting over the same bounded
+//!   channel/backpressure machinery as [`crate::coordinator`], bit-for-bit
+//!   identical to sequential training.
+//!
+//! Both ensembles implement [`crate::eval::Regressor`], so the
+//! prequential harness, the CLI (`qostream forest`) and the bench suite
+//! drive them exactly like a single tree.
+
+pub mod adwin;
+pub mod arf;
+pub mod bagging;
+pub mod parallel;
+
+pub use crate::tree::subspace;
+pub use crate::tree::subspace::{sample_subspace, SubspaceSize};
+
+pub use adwin::Adwin;
+pub use arf::{ArfOptions, ArfRegressor};
+pub use bagging::OnlineBaggingRegressor;
+pub use parallel::{fit_parallel, ParallelEnsemble, ParallelFitConfig, ParallelFitReport};

@@ -1,0 +1,249 @@
+//! Parallel ensemble fitting.
+//!
+//! Ensemble members are trained from independent per-member state (their
+//! own tree, PRNG and detectors), so member updates commute across
+//! members — the only ordering that matters is each member's own view of
+//! the instance sequence. This module exploits that with the same
+//! leader/worker shape as [`crate::coordinator`]: the leader owns the
+//! stream, batches instances, and **broadcasts** each batch (an `Arc`, so
+//! instances are shared, not copied) to worker threads over bounded
+//! channels; each worker owns a disjoint chunk of members and replays
+//! every batch through them in order. A full channel blocks the leader —
+//! backpressure, not unbounded buffering.
+//!
+//! Because every member consumes the identical instance sequence through
+//! identical per-member state transitions, the parallel fit is
+//! **bit-for-bit identical** to the sequential `learn_one` loop (asserted
+//! end-to-end in `rust/tests/forest_e2e.rs`).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::stream::{Instance, Stream};
+
+/// An ensemble whose members can be trained independently of each other.
+pub trait ParallelEnsemble {
+    type Member: Send;
+
+    /// All members, as one mutable slice (chunked across workers).
+    fn members_mut(&mut self) -> &mut [Self::Member];
+
+    /// Advance one member by one instance (the member must not touch any
+    /// state outside itself).
+    fn learn_member(member: &mut Self::Member, x: &[f64], y: f64);
+}
+
+/// Tuning knobs of the parallel fit.
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelFitConfig {
+    /// Worker threads (clamped to the member count; 0 = all cores).
+    pub n_workers: usize,
+    /// Instances per broadcast message.
+    pub batch_size: usize,
+    /// Bounded channel depth in batches (backpressure window).
+    pub channel_capacity: usize,
+}
+
+impl Default for ParallelFitConfig {
+    fn default() -> ParallelFitConfig {
+        ParallelFitConfig { n_workers: 0, batch_size: 256, channel_capacity: 8 }
+    }
+}
+
+/// Outcome of a parallel fit.
+#[derive(Clone, Debug)]
+pub struct ParallelFitReport {
+    pub instances: usize,
+    pub seconds: f64,
+    pub n_workers: usize,
+    /// Instances replayed per worker (every worker sees the full stream).
+    pub per_worker: Vec<usize>,
+}
+
+impl ParallelFitReport {
+    pub fn throughput(&self) -> f64 {
+        if self.seconds > 0.0 {
+            self.instances as f64 / self.seconds
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// Train `ensemble` on up to `max_instances` of `stream` with members
+/// spread across worker threads. Equivalent to calling the ensemble's
+/// sequential learn loop instance by instance, only faster.
+pub fn fit_parallel<E: ParallelEnsemble>(
+    ensemble: &mut E,
+    stream: &mut dyn Stream,
+    max_instances: usize,
+    config: ParallelFitConfig,
+) -> ParallelFitReport {
+    let members = ensemble.members_mut();
+    let n_members = members.len();
+    assert!(n_members >= 1, "cannot fit an empty ensemble");
+    let available = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let workers = if config.n_workers == 0 { available } else { config.n_workers };
+    let workers = workers.clamp(1, n_members);
+    let batch_size = config.batch_size.max(1);
+    let start = Instant::now();
+
+    let (sent, per_worker) = std::thread::scope(|scope| {
+        let mut senders: Vec<mpsc::SyncSender<Arc<Vec<Instance>>>> = Vec::new();
+        let mut handles = Vec::new();
+        let per_chunk = (n_members + workers - 1) / workers;
+        for chunk in members.chunks_mut(per_chunk) {
+            let (tx, rx) = mpsc::sync_channel::<Arc<Vec<Instance>>>(
+                config.channel_capacity.max(1),
+            );
+            senders.push(tx);
+            handles.push(scope.spawn(move || {
+                let mut count = 0usize;
+                while let Ok(batch) = rx.recv() {
+                    for inst in batch.iter() {
+                        for member in chunk.iter_mut() {
+                            E::learn_member(member, &inst.x, inst.y);
+                        }
+                    }
+                    count += batch.len();
+                }
+                count
+            }));
+        }
+
+        // leader loop: batch and broadcast (blocking on full channels)
+        let mut batch = Vec::with_capacity(batch_size);
+        let mut sent = 0usize;
+        while sent < max_instances {
+            let Some(inst) = stream.next_instance() else { break };
+            batch.push(inst);
+            sent += 1;
+            if batch.len() >= batch_size {
+                let full = Arc::new(std::mem::replace(
+                    &mut batch,
+                    Vec::with_capacity(batch_size),
+                ));
+                for tx in &senders {
+                    tx.send(full.clone()).expect("worker died");
+                }
+            }
+        }
+        if !batch.is_empty() {
+            let last = Arc::new(batch);
+            for tx in &senders {
+                tx.send(last.clone()).expect("worker died");
+            }
+        }
+        drop(senders); // close channels: workers drain and return
+
+        let per_worker: Vec<usize> =
+            handles.into_iter().map(|h| h.join().expect("worker panicked")).collect();
+        (sent, per_worker)
+    });
+
+    ParallelFitReport {
+        instances: sent,
+        seconds: start.elapsed().as_secs_f64(),
+        n_workers: per_worker.len(),
+        per_worker,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::Regressor;
+    use crate::forest::bagging::OnlineBaggingRegressor;
+    use crate::observer::{factory, ObserverFactory, QuantizationObserver, RadiusPolicy};
+    use crate::stream::Friedman1;
+    use crate::tree::HtrOptions;
+
+    fn qo_factory() -> Box<dyn ObserverFactory> {
+        factory("QO_s2", || {
+            Box::new(QuantizationObserver::new(RadiusPolicy::std_fraction(2.0)))
+        })
+    }
+
+    fn bag(seed: u64) -> OnlineBaggingRegressor {
+        OnlineBaggingRegressor::new(10, 4, 2.0, HtrOptions::default(), qo_factory(), seed)
+    }
+
+    #[test]
+    fn parallel_fit_equals_sequential_fit() {
+        let n = 3000;
+        let mut sequential = bag(11);
+        let mut stream = Friedman1::new(99, 1.0);
+        for _ in 0..n {
+            let inst = stream.next_instance().unwrap();
+            sequential.learn_one(&inst.x, inst.y);
+        }
+
+        let mut parallel = bag(11);
+        let report = fit_parallel(
+            &mut parallel,
+            &mut Friedman1::new(99, 1.0),
+            n,
+            ParallelFitConfig { n_workers: 3, ..Default::default() },
+        );
+        assert_eq!(report.instances, n);
+        assert!(report.per_worker.iter().all(|&c| c == n));
+
+        let mut probe_stream = Friedman1::new(123, 0.0);
+        for _ in 0..50 {
+            let inst = probe_stream.next_instance().unwrap();
+            let a = sequential.predict(&inst.x);
+            let b = parallel.predict(&inst.x);
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn worker_count_clamps_to_members() {
+        let mut ensemble = bag(5);
+        let report = fit_parallel(
+            &mut ensemble,
+            &mut Friedman1::new(1, 1.0),
+            500,
+            ParallelFitConfig { n_workers: 64, batch_size: 32, ..Default::default() },
+        );
+        assert_eq!(report.n_workers, 4); // 4 members
+        assert_eq!(report.per_worker.len(), 4);
+    }
+
+    #[test]
+    fn bounded_stream_stops_early() {
+        struct Three(usize);
+        impl crate::stream::Stream for Three {
+            fn next_instance(&mut self) -> Option<Instance> {
+                if self.0 == 0 {
+                    return None;
+                }
+                self.0 -= 1;
+                Some(Instance { x: vec![0.0; 10], y: 1.0 })
+            }
+            fn n_features(&self) -> usize {
+                10
+            }
+            fn name(&self) -> String {
+                "three".into()
+            }
+        }
+        let mut ensemble = bag(2);
+        let report =
+            fit_parallel(&mut ensemble, &mut Three(3), 1000, ParallelFitConfig::default());
+        assert_eq!(report.instances, 3);
+    }
+
+    #[test]
+    fn tiny_channel_capacity_exercises_backpressure() {
+        let mut ensemble = bag(3);
+        let report = fit_parallel(
+            &mut ensemble,
+            &mut Friedman1::new(2, 1.0),
+            2000,
+            ParallelFitConfig { n_workers: 2, batch_size: 8, channel_capacity: 1 },
+        );
+        assert_eq!(report.instances, 2000);
+    }
+}

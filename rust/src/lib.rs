@@ -19,6 +19,10 @@
 //! * [`criterion`] — split-merit heuristics (Variance Reduction, Eq. 1).
 //! * [`tree`] — a FIMT-like Hoeffding Tree Regressor with pluggable
 //!   observers (the paper's target integration, its Sec. 7 future work).
+//! * [`forest`] — online ensembles over those trees: ADWIN drift
+//!   detection, Oza–Russell online bagging, an Adaptive Random Forest
+//!   Regressor with per-leaf random feature subspaces, and parallel
+//!   member fitting that reuses the [`coordinator`] channel machinery.
 //! * [`stream`] — synthetic generators implementing the paper's Table 1
 //!   protocol, drift wrappers and a CSV reader.
 //! * [`eval`] — prequential evaluation and incremental regression metrics.
@@ -36,6 +40,7 @@ pub mod common;
 pub mod coordinator;
 pub mod criterion;
 pub mod eval;
+pub mod forest;
 pub mod observer;
 pub mod runtime;
 pub mod stats;

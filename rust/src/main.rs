@@ -8,6 +8,7 @@
 //! qostream fig3 [--profile ...]
 //! qostream cd [--metric merit|elements|observe|query|all] [--profile ...]
 //! qostream tree [--instances N] [--seed S]    # Sec. 7 integration
+//! qostream forest [--members N] [--lambda L] [--subspace sqrt|all|K] [--parallel W]
 //! qostream coordinator [--shards N] [--instances N]
 //! qostream xla [--instances N] [--radius R]
 //! qostream all                                # everything, standard profile
@@ -15,11 +16,13 @@
 
 use anyhow::Result;
 
-use qostream::bench_suite::{cd, fig1, fig3, protocol::Profile, tree_bench, Protocol};
+use qostream::bench_suite::{cd, fig1, fig3, forest_bench, protocol::Profile, tree_bench, Protocol};
 use qostream::common::cli::Args;
 use qostream::common::timing::human_time;
 use qostream::coordinator::{CoordinatorConfig, ShardedObserverCoordinator};
 use qostream::criterion::VarianceReduction;
+use qostream::eval::Regressor;
+use qostream::forest::{fit_parallel, ArfOptions, ArfRegressor, ParallelFitConfig, SubspaceSize};
 use qostream::observer::AttributeObserver;
 use qostream::runtime::{find_artifacts_dir, Manifest, XlaSplitEngine};
 use qostream::stream::{Friedman1, Stream};
@@ -84,6 +87,73 @@ fn cmd_tree(args: &Args) -> Result<()> {
     let seed = args.u64_or("seed", 1);
     println!("{}", tree_bench::generate(instances, seed)?);
     println!("written to results/tree/");
+    Ok(())
+}
+
+fn observer_factory(kind: &str) -> Box<dyn qostream::observer::ObserverFactory> {
+    match kind {
+        "qo" => forest_bench::qo_factory(),
+        "ebst" => forest_bench::ebst_factory(),
+        other => panic!("--observer must be qo|ebst, got {other:?}"),
+    }
+}
+
+fn cmd_forest(args: &Args) -> Result<()> {
+    let instances = args.usize_or("instances", 20_000);
+    let cfg = forest_bench::ForestBenchConfig {
+        instances,
+        members: args.usize_or("members", 10),
+        lambda: args.f64_or("lambda", 6.0),
+        subspace: SubspaceSize::parse(args.get_or("subspace", "sqrt"))
+            .unwrap_or_else(|| panic!("--subspace must be all|sqrt|<count>|<fraction>")),
+        seed: args.u64_or("seed", 1),
+        drift_at: args.usize_or("drift-at", instances / 2),
+    };
+    println!("{}", forest_bench::generate(&cfg)?);
+    println!("written to results/forest/");
+
+    let workers = args.usize_or("parallel", 0);
+    if workers > 0 {
+        // multi-core fit demo: same members, same seed, sharded over
+        // worker threads — predictions must match the sequential path
+        let observer = args.get_or("observer", "qo").to_string();
+        let opts = ArfOptions {
+            n_members: cfg.members,
+            lambda: cfg.lambda,
+            subspace: cfg.subspace,
+            seed: cfg.seed,
+            ..Default::default()
+        };
+        let mut sequential = ArfRegressor::new(10, opts, observer_factory(&observer));
+        let mut stream = cfg.stream();
+        let (seq_secs, _) = qostream::common::timing::time_once(|| {
+            for _ in 0..cfg.instances {
+                let Some(inst) = stream.next_instance() else { break };
+                sequential.learn_one(&inst.x, inst.y);
+            }
+        });
+        let mut parallel = ArfRegressor::new(10, opts, observer_factory(&observer));
+        let report = fit_parallel(
+            &mut parallel,
+            &mut *cfg.stream(),
+            cfg.instances,
+            ParallelFitConfig { n_workers: workers, ..Default::default() },
+        );
+        let mut probe = Friedman1::new(cfg.seed ^ 0xBEEF, 0.0);
+        let identical = (0..100).all(|_| {
+            let inst = probe.next_instance().unwrap();
+            sequential.predict(&inst.x) == parallel.predict(&inst.x)
+        });
+        println!(
+            "parallel fit: {} workers, {} in {} ({:.1}k inst/s vs {:.1}k sequential); \
+             predictions identical to sequential: {identical}",
+            report.n_workers,
+            report.instances,
+            human_time(report.seconds),
+            report.throughput() / 1e3,
+            cfg.instances as f64 / seq_secs / 1e3,
+        );
+    }
     Ok(())
 }
 
@@ -168,6 +238,7 @@ fn cmd_all(args: &Args) -> Result<()> {
     cmd_fig3(args)?;
     cmd_cd(args)?;
     cmd_tree(args)?;
+    cmd_forest(args)?;
     Ok(())
 }
 
@@ -182,9 +253,12 @@ SUBCOMMANDS
   fig3         split-point distance to E-BST      [--profile --sizes --reps]
   cd           Friedman/Nemenyi CD diagrams       [--metric merit|elements|observe|query|all]
   tree         Hoeffding-tree integration bench   [--instances N --seed S]
+  forest       online ensembles vs single tree    [--instances N --members M --lambda L
+               (bagging + ARF on drifting data)    --subspace all|sqrt|K --drift-at N --seed S
+                                                   --parallel W --observer qo|ebst (demo only)]
   coordinator  sharded distributed observation    [--shards N --instances N --radius R]
   xla          AOT split-eval via PJRT artifacts  [--instances N --radius R]
-  all          fig1 + fig3 + cd + tree (standard profile)
+  all          fig1 + fig3 + cd + tree + forest (standard profile)
 ";
 
 fn main() -> Result<()> {
@@ -195,6 +269,7 @@ fn main() -> Result<()> {
         Some("fig3") => cmd_fig3(&args),
         Some("cd") => cmd_cd(&args),
         Some("tree") => cmd_tree(&args),
+        Some("forest") => cmd_forest(&args),
         Some("coordinator") => cmd_coordinator(&args),
         Some("xla") => cmd_xla(&args),
         Some("all") => cmd_all(&args),

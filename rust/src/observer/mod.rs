@@ -95,6 +95,27 @@ where
     Box::new(FnObserverFactory { f, label: label.to_string() })
 }
 
+/// A factory view over shared configuration: ensembles hold one
+/// `Arc<dyn ObserverFactory>` and hand every member tree (and every
+/// background tree spawned later) its own boxed [`ArcFactory`] clone.
+pub struct ArcFactory(std::sync::Arc<dyn ObserverFactory>);
+
+impl ArcFactory {
+    pub fn new(shared: std::sync::Arc<dyn ObserverFactory>) -> ArcFactory {
+        ArcFactory(shared)
+    }
+}
+
+impl ObserverFactory for ArcFactory {
+    fn build(&self) -> Box<dyn AttributeObserver> {
+        self.0.build()
+    }
+
+    fn name(&self) -> String {
+        self.0.name()
+    }
+}
+
 /// The paper's five compared observer configurations (Sec. 5.2).
 pub fn paper_lineup() -> Vec<Box<dyn ObserverFactory>> {
     vec![
@@ -121,6 +142,20 @@ mod tests {
     fn paper_lineup_names() {
         let names: Vec<String> = paper_lineup().iter().map(|f| f.name()).collect();
         assert_eq!(names, vec!["E-BST", "TE-BST", "QO_0.01", "QO_s2", "QO_s3"]);
+    }
+
+    #[test]
+    fn arc_factory_forwards_to_shared() {
+        let shared: std::sync::Arc<dyn ObserverFactory> =
+            std::sync::Arc::from(factory("E-BST", || Box::new(EBst::new())));
+        let a = ArcFactory::new(shared.clone());
+        let b = ArcFactory::new(shared);
+        assert_eq!(a.name(), "E-BST");
+        let mut oa = a.build();
+        let ob = b.build();
+        oa.observe(1.0, 2.0, 1.0);
+        assert_eq!(oa.n_elements(), 1);
+        assert_eq!(ob.n_elements(), 0, "builds must stay independent");
     }
 
     #[test]

@@ -16,11 +16,21 @@ use super::{Instance, Stream};
 pub struct Friedman1 {
     rng: Rng,
     noise_sigma: f64,
+    swapped: bool,
 }
 
 impl Friedman1 {
     pub fn new(seed: u64, noise_sigma: f64) -> Friedman1 {
-        Friedman1 { rng: Rng::new(seed), noise_sigma }
+        Friedman1 { rng: Rng::new(seed), noise_sigma, swapped: false }
+    }
+
+    /// The *swapped* concept: same U[0,1]^10 inputs, but the roles of the
+    /// five informative features are reversed (x5..x1 instead of x1..x5).
+    /// Composing `new` → `swapped` with [`super::AbruptDrift`] yields a
+    /// genuine concept change over an unchanged input distribution — the
+    /// drift workload of the forest experiments.
+    pub fn swapped(seed: u64, noise_sigma: f64) -> Friedman1 {
+        Friedman1 { rng: Rng::new(seed), noise_sigma, swapped: true }
     }
 
     /// Noiseless target for a 10-feature input.
@@ -30,12 +40,24 @@ impl Friedman1 {
             + 10.0 * x[3]
             + 5.0 * x[4]
     }
+
+    /// Noiseless target of the swapped concept.
+    pub fn clean_target_swapped(x: &[f64]) -> f64 {
+        10.0 * (std::f64::consts::PI * x[4] * x[3]).sin()
+            + 20.0 * (x[2] - 0.5) * (x[2] - 0.5)
+            + 10.0 * x[1]
+            + 5.0 * x[0]
+    }
 }
 
 impl Stream for Friedman1 {
     fn next_instance(&mut self) -> Option<Instance> {
         let x: Vec<f64> = (0..10).map(|_| self.rng.f64()).collect();
-        let mut y = Self::clean_target(&x);
+        let mut y = if self.swapped {
+            Self::clean_target_swapped(&x)
+        } else {
+            Self::clean_target(&x)
+        };
         if self.noise_sigma > 0.0 {
             y += self.rng.normal(0.0, self.noise_sigma);
         }
@@ -47,7 +69,11 @@ impl Stream for Friedman1 {
     }
 
     fn name(&self) -> String {
-        format!("friedman1[sigma={}]", self.noise_sigma)
+        if self.swapped {
+            format!("friedman1-swapped[sigma={}]", self.noise_sigma)
+        } else {
+            format!("friedman1[sigma={}]", self.noise_sigma)
+        }
     }
 }
 
@@ -78,6 +104,28 @@ mod tests {
         let mut f = Friedman1::new(2, 0.0);
         let inst = f.next_instance().unwrap();
         assert_eq!(inst.y, Friedman1::clean_target(&inst.x));
+    }
+
+    #[test]
+    fn swapped_concept_differs_but_shares_inputs() {
+        // same seed -> identical feature vectors, different targets
+        let mut a = Friedman1::new(5, 0.0);
+        let mut b = Friedman1::swapped(5, 0.0);
+        let ia = a.next_instance().unwrap();
+        let ib = b.next_instance().unwrap();
+        assert_eq!(ia.x, ib.x);
+        assert!((ia.y - ib.y).abs() > 1e-9, "concepts should differ almost surely");
+        assert_eq!(ib.y, Friedman1::clean_target_swapped(&ib.x));
+    }
+
+    #[test]
+    fn swapped_is_a_feature_permutation() {
+        let x = [0.9, 0.1, 0.4, 0.7, 0.2, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let permuted = [0.2, 0.7, 0.4, 0.1, 0.9, 0.0, 0.0, 0.0, 0.0, 0.0];
+        assert!(
+            (Friedman1::clean_target_swapped(&x) - Friedman1::clean_target(&permuted)).abs()
+                < 1e-12
+        );
     }
 
     #[test]

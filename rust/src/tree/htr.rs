@@ -10,9 +10,12 @@
 //! The observer type is pluggable ([`ObserverFactory`]) — this is where
 //! the paper's QO vs E-BST trade-off plays out inside a real model.
 
+use crate::common::Rng;
 use crate::criterion::{SplitCriterion, VarianceReduction};
 use crate::eval::Regressor;
 use crate::observer::{ObserverFactory, SplitSuggestion};
+
+use super::subspace::sample_subspace;
 
 use super::leaf::LeafState;
 use super::options::HtrOptions;
@@ -32,6 +35,10 @@ pub struct HoeffdingTreeRegressor {
     criterion: Box<dyn SplitCriterion>,
     n_splits: usize,
     observer_label: String,
+    /// Subspace draws (and any future stochastic choices). With
+    /// `SubspaceSize::All` it is never consumed, so plain trees remain
+    /// bit-for-bit reproducible regardless of `options.seed`.
+    rng: Rng,
 }
 
 impl HoeffdingTreeRegressor {
@@ -41,8 +48,12 @@ impl HoeffdingTreeRegressor {
         factory: Box<dyn ObserverFactory>,
     ) -> HoeffdingTreeRegressor {
         let observer_label = factory.name();
+        let mut rng = Rng::new(options.seed);
+        let k = options.subspace.resolve(n_features);
+        let monitored = sample_subspace(&mut rng, n_features, k);
         let root_leaf = Node::Leaf(Box::new(LeafState::new(
             n_features,
+            monitored,
             factory.as_ref(),
             options.leaf_model,
             options.leaf_lr,
@@ -58,6 +69,7 @@ impl HoeffdingTreeRegressor {
             criterion: Box::new(VarianceReduction),
             n_splits: 0,
             observer_label,
+            rng,
         }
     }
 
@@ -109,7 +121,7 @@ impl HoeffdingTreeRegressor {
             let Some(observers) = &leaf.observers else { return };
             let mut best: Option<(usize, SplitSuggestion)> = None;
             let mut second = 0.0f64;
-            for (f, ao) in observers.iter().enumerate() {
+            for (slot, ao) in observers.iter().enumerate() {
                 if let Some(s) = ao.best_split(self.criterion.as_ref()) {
                     match &best {
                         Some((_, b)) if s.merit <= b.merit => second = second.max(s.merit),
@@ -117,7 +129,9 @@ impl HoeffdingTreeRegressor {
                             if let Some((_, b)) = &best {
                                 second = second.max(b.merit);
                             }
-                            best = Some((f, s));
+                            // observers are indexed by slot; the split acts
+                            // on the slot's monitored feature
+                            best = Some((leaf.monitored[slot], s));
                         }
                     }
                 }
@@ -136,16 +150,21 @@ impl HoeffdingTreeRegressor {
         }
 
         // materialize the split: two fresh leaves, target stats warm-
-        // started from the winning partition (FIMT), fresh observers,
-        // the parent's linear model cloned into both children.
+        // started from the winning partition (FIMT), fresh observers over
+        // freshly drawn feature subspaces, the parent's linear model
+        // cloned into both children.
         let child_active = depth + 1 < self.options.max_depth;
         let parent_linear = {
             let Node::Leaf(leaf) = &self.nodes[leaf_idx as usize] else { unreachable!() };
             leaf.linear.clone()
         };
-        let mut mk_child = |stats: crate::stats::VarStats| -> u32 {
+        let k = self.options.subspace.resolve(self.n_features);
+        let monitored_left = sample_subspace(&mut self.rng, self.n_features, k);
+        let monitored_right = sample_subspace(&mut self.rng, self.n_features, k);
+        let mut mk_child = |monitored: Vec<usize>, stats: crate::stats::VarStats| -> u32 {
             let mut child = LeafState::new(
                 self.n_features,
+                monitored,
                 self.factory.as_ref(),
                 self.options.leaf_model,
                 self.options.leaf_lr,
@@ -157,8 +176,8 @@ impl HoeffdingTreeRegressor {
             self.nodes.push(Node::Leaf(Box::new(child)));
             (self.nodes.len() - 1) as u32
         };
-        let left = mk_child(suggestion.left);
-        let right = mk_child(suggestion.right);
+        let left = mk_child(monitored_left, suggestion.left);
+        let right = mk_child(monitored_right, suggestion.right);
         self.nodes[leaf_idx as usize] =
             Node::Split { feature, threshold: suggestion.threshold, left, right };
         self.n_splits += 1;
@@ -432,6 +451,64 @@ mod tests {
             }
             assert!(tree.n_splits() >= 1, "{name}: never split");
         }
+    }
+
+    #[test]
+    fn subspace_tree_learns_and_splits_on_monitored_features() {
+        use crate::tree::subspace::SubspaceSize;
+        let mut tree = HoeffdingTreeRegressor::new(
+            5,
+            HtrOptions {
+                leaf_model: LeafModelKind::Mean,
+                subspace: SubspaceSize::Fixed(2),
+                seed: 7,
+                ..Default::default()
+            },
+            qo_factory(),
+        );
+        let mut rng = Rng::new(71);
+        for _ in 0..20_000 {
+            let x: Vec<f64> = (0..5).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            // every feature is informative, so any 2-feature subspace can split
+            let y: f64 = x.iter().map(|v| if *v <= 0.0 { 0.0 } else { 1.0 }).sum();
+            tree.learn_one(&x, y);
+        }
+        assert!(tree.n_splits() >= 1, "subspace tree never split");
+        // every leaf monitors exactly 2 of the 5 features
+        for node in &tree.nodes {
+            if let Node::Leaf(leaf) = node {
+                assert_eq!(leaf.monitored.len(), 2);
+                assert!(leaf.monitored.iter().all(|&f| f < 5));
+            }
+        }
+    }
+
+    #[test]
+    fn subspace_trees_deterministic_per_seed() {
+        use crate::tree::subspace::SubspaceSize;
+        let build = || {
+            HoeffdingTreeRegressor::new(
+                4,
+                HtrOptions {
+                    subspace: SubspaceSize::Sqrt,
+                    seed: 99,
+                    ..Default::default()
+                },
+                qo_factory(),
+            )
+        };
+        let mut a = build();
+        let mut b = build();
+        let mut rng = Rng::new(73);
+        for _ in 0..6000 {
+            let x: Vec<f64> = (0..4).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let y = 3.0 * x[0] - x[2];
+            a.learn_one(&x, y);
+            b.learn_one(&x, y);
+        }
+        assert_eq!(a.n_splits(), b.n_splits());
+        let probe = [0.3, -0.4, 0.9, 0.1];
+        assert_eq!(a.predict(&probe).to_bits(), b.predict(&probe).to_bits());
     }
 
     #[test]

@@ -26,9 +26,13 @@ pub struct LeafState {
     /// Robust statistics of the leaf's target distribution. May be
     /// warm-started from the parent branch statistics at split time.
     pub stats: VarStats,
-    /// One observer per input feature (None when deactivated at max
+    /// One observer per *monitored* feature (None when deactivated at max
     /// depth — the leaf then stops paying observation costs).
     pub observers: Option<Vec<Box<dyn AttributeObserver>>>,
+    /// Feature index each observer watches: `observers[i]` monitors
+    /// `x[monitored[i]]`. The full range for a plain tree; a random
+    /// subspace for ensemble members (see [`super::subspace`]).
+    pub monitored: Vec<usize>,
     pub linear: LinearSgd,
     pub kind: LeafModelKind,
     /// Faded absolute error of the mean / linear predictors (Adaptive).
@@ -42,15 +46,18 @@ pub struct LeafState {
 impl LeafState {
     pub fn new(
         n_features: usize,
+        monitored: Vec<usize>,
         factory: &dyn ObserverFactory,
         kind: LeafModelKind,
         lr: f64,
         depth: usize,
         active: bool,
     ) -> LeafState {
+        debug_assert!(monitored.iter().all(|&f| f < n_features));
         LeafState {
             stats: VarStats::new(),
-            observers: active.then(|| (0..n_features).map(|_| factory.build()).collect()),
+            observers: active.then(|| monitored.iter().map(|_| factory.build()).collect()),
+            monitored,
             linear: LinearSgd::new(n_features, lr),
             kind,
             mean_err: 0.0,
@@ -90,8 +97,8 @@ impl LeafState {
             self.lin_err = FADE * self.lin_err + (y - lin_pred).abs();
         }
         if let Some(observers) = &mut self.observers {
-            for (i, ao) in observers.iter_mut().enumerate() {
-                ao.observe(x[i], y, w);
+            for (ao, &f) in observers.iter_mut().zip(&self.monitored) {
+                ao.observe(x[f], y, w);
             }
         }
         self.weight_since_attempt += w;
@@ -119,14 +126,23 @@ mod tests {
 
     #[test]
     fn inactive_leaf_has_no_observers() {
-        let leaf = LeafState::new(3, qo_factory().as_ref(), LeafModelKind::Mean, 0.02, 5, false);
+        let leaf = LeafState::new(
+            3,
+            vec![0, 1, 2],
+            qo_factory().as_ref(),
+            LeafModelKind::Mean,
+            0.02,
+            5,
+            false,
+        );
         assert!(!leaf.is_active());
         assert_eq!(leaf.n_elements(), 0);
     }
 
     #[test]
     fn learn_updates_stats_and_observers() {
-        let mut leaf = LeafState::new(2, qo_factory().as_ref(), LeafModelKind::Mean, 0.02, 0, true);
+        let mut leaf =
+            LeafState::new(2, vec![0, 1], qo_factory().as_ref(), LeafModelKind::Mean, 0.02, 0, true);
         leaf.learn(&[0.5, -0.5], 2.0, 1.0);
         leaf.learn(&[0.7, 0.1], 4.0, 1.0);
         assert_eq!(leaf.stats.n, 2.0);
@@ -136,9 +152,24 @@ mod tests {
     }
 
     #[test]
+    fn subspace_leaf_observes_only_monitored_features() {
+        // monitor only feature 1: the observer must see x[1], not x[0]
+        let mut leaf =
+            LeafState::new(2, vec![1], qo_factory().as_ref(), LeafModelKind::Mean, 0.02, 0, true);
+        for i in 0..50 {
+            // x[0] wanders over many radius-0.1 buckets; x[1] stays in one
+            leaf.learn(&[i as f64, 0.05], i as f64, 1.0);
+        }
+        let observers = leaf.observers.as_ref().unwrap();
+        assert_eq!(observers.len(), 1);
+        assert_eq!(observers[0].n_elements(), 1, "x[1] is constant: one slot");
+        assert_eq!(leaf.stats.n, 50.0);
+    }
+
+    #[test]
     fn adaptive_switches_to_linear_on_linear_data() {
         let mut leaf =
-            LeafState::new(1, qo_factory().as_ref(), LeafModelKind::Adaptive, 0.05, 0, true);
+            LeafState::new(1, vec![0], qo_factory().as_ref(), LeafModelKind::Adaptive, 0.05, 0, true);
         let mut rng = Rng::new(41);
         for _ in 0..5000 {
             let x = rng.uniform(-1.0, 1.0);

@@ -6,7 +6,9 @@
 pub mod htr;
 pub mod leaf;
 pub mod options;
+pub mod subspace;
 
 pub use htr::HoeffdingTreeRegressor;
 pub use leaf::LeafModelKind;
 pub use options::HtrOptions;
+pub use subspace::SubspaceSize;

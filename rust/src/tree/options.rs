@@ -1,6 +1,7 @@
 //! Hoeffding Tree Regressor configuration.
 
 pub use super::leaf::LeafModelKind;
+pub use super::subspace::SubspaceSize;
 
 /// Hyper-parameters of [`super::HoeffdingTreeRegressor`]; defaults follow
 /// FIMT-DD / river conventions.
@@ -22,6 +23,12 @@ pub struct HtrOptions {
     /// Minimum fraction of the leaf's weight each branch must receive for
     /// a split to be admissible (guards against degenerate splits).
     pub min_branch_frac: f64,
+    /// Random feature subspace each leaf monitors (ensemble hook; `All`
+    /// reproduces the plain Hoeffding tree exactly).
+    pub subspace: SubspaceSize,
+    /// Seed of the tree's internal PRNG (subspace draws). Trees with the
+    /// same options, seed and input stream are bit-for-bit identical.
+    pub seed: u64,
 }
 
 impl Default for HtrOptions {
@@ -34,6 +41,8 @@ impl Default for HtrOptions {
             max_depth: usize::MAX,
             leaf_lr: 0.02,
             min_branch_frac: 0.01,
+            subspace: SubspaceSize::All,
+            seed: 0,
         }
     }
 }

@@ -1,0 +1,161 @@
+//! Random feature subspaces for ensemble trees (Breiman 2001, adapted to
+//! the online setting by Adaptive Random Forests, Gomes et al. 2017).
+//!
+//! Each leaf of an ensemble member monitors only a random subset of the
+//! input features; the observers for the unmonitored features are never
+//! built, which both decorrelates the members (the accuracy lever) and
+//! multiplies the memory savings of the Quantization Observer (the cost
+//! lever). The subset is re-drawn for every new leaf, so a single tree
+//! still sees every feature somewhere in its structure.
+//!
+//! This lives in the tree layer (it depends only on [`crate::common`])
+//! so the core tree stays independent of the ensemble subsystem;
+//! [`crate::forest`] re-exports it. [`SubspaceSize`] is the policy knob
+//! on [`super::HtrOptions`]; [`sample_subspace`] is the draw itself.
+
+use crate::common::Rng;
+
+/// How many features each leaf monitors.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SubspaceSize {
+    /// Monitor everything (plain Hoeffding tree; the default).
+    All,
+    /// ⌈√d⌉ features — the random-forest convention.
+    Sqrt,
+    /// ⌈f·d⌉ features for a fraction `f` in (0, 1].
+    Fraction(f64),
+    /// Exactly `k` features (clamped to `[1, d]`).
+    Fixed(usize),
+}
+
+impl Default for SubspaceSize {
+    fn default() -> SubspaceSize {
+        SubspaceSize::All
+    }
+}
+
+impl SubspaceSize {
+    /// Resolve the policy to a concrete count for `d` input features.
+    pub fn resolve(&self, d: usize) -> usize {
+        let k = match *self {
+            SubspaceSize::All => d,
+            SubspaceSize::Sqrt => (d as f64).sqrt().ceil() as usize,
+            SubspaceSize::Fraction(f) => (f * d as f64).ceil() as usize,
+            SubspaceSize::Fixed(k) => k,
+        };
+        k.clamp(1, d.max(1))
+    }
+
+    /// Parse a CLI spelling: `all`, `sqrt`, a fraction in (0, 1) or an
+    /// integer count.
+    pub fn parse(s: &str) -> Option<SubspaceSize> {
+        match s {
+            "all" => Some(SubspaceSize::All),
+            "sqrt" => Some(SubspaceSize::Sqrt),
+            _ => {
+                if let Ok(k) = s.parse::<usize>() {
+                    return Some(SubspaceSize::Fixed(k));
+                }
+                match s.parse::<f64>() {
+                    Ok(f) if f > 0.0 && f < 1.0 => Some(SubspaceSize::Fraction(f)),
+                    _ => None,
+                }
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            SubspaceSize::All => "all".to_string(),
+            SubspaceSize::Sqrt => "sqrt".to_string(),
+            SubspaceSize::Fraction(f) => format!("{f}"),
+            SubspaceSize::Fixed(k) => format!("{k}"),
+        }
+    }
+}
+
+/// Draw `k` distinct feature indices out of `0..d`, sorted ascending
+/// (partial Fisher–Yates; O(d) per draw). `k >= d` returns the full range
+/// without consuming randomness, so `SubspaceSize::All` trees stay
+/// bit-identical to pre-subspace builds.
+pub fn sample_subspace(rng: &mut Rng, d: usize, k: usize) -> Vec<usize> {
+    if k >= d {
+        return (0..d).collect();
+    }
+    let mut idx: Vec<usize> = (0..d).collect();
+    for i in 0..k {
+        let j = i + rng.below((d - i) as u64) as usize;
+        idx.swap(i, j);
+    }
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::proptest::check;
+
+    #[test]
+    fn resolve_covers_policies() {
+        assert_eq!(SubspaceSize::All.resolve(10), 10);
+        assert_eq!(SubspaceSize::Sqrt.resolve(10), 4);
+        assert_eq!(SubspaceSize::Sqrt.resolve(9), 3);
+        assert_eq!(SubspaceSize::Fraction(0.6).resolve(10), 6);
+        assert_eq!(SubspaceSize::Fixed(3).resolve(10), 3);
+        assert_eq!(SubspaceSize::Fixed(99).resolve(10), 10);
+        assert_eq!(SubspaceSize::Fixed(0).resolve(10), 1);
+    }
+
+    #[test]
+    fn parse_spellings() {
+        assert_eq!(SubspaceSize::parse("all"), Some(SubspaceSize::All));
+        assert_eq!(SubspaceSize::parse("sqrt"), Some(SubspaceSize::Sqrt));
+        assert_eq!(SubspaceSize::parse("4"), Some(SubspaceSize::Fixed(4)));
+        assert_eq!(SubspaceSize::parse("0.5"), Some(SubspaceSize::Fraction(0.5)));
+        assert_eq!(SubspaceSize::parse("nope"), None);
+        assert_eq!(SubspaceSize::parse("1.5"), None);
+    }
+
+    #[test]
+    fn full_draw_consumes_no_randomness() {
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        assert_eq!(sample_subspace(&mut a, 5, 5), vec![0, 1, 2, 3, 4]);
+        assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn prop_subspace_is_sorted_distinct_in_range() {
+        check("subspace-valid", 0xE0, 100, |rng| {
+            let d = 1 + rng.below(20) as usize;
+            let k = 1 + rng.below(d as u64) as usize;
+            let s = sample_subspace(rng, d, k);
+            if s.len() != k {
+                return Err(format!("len {} != k {k}", s.len()));
+            }
+            for w in s.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("not sorted/distinct: {s:?}"));
+                }
+            }
+            if s.iter().any(|&f| f >= d) {
+                return Err(format!("out of range: {s:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn draws_cover_all_features_eventually() {
+        let mut rng = Rng::new(11);
+        let mut seen = [false; 10];
+        for _ in 0..200 {
+            for f in sample_subspace(&mut rng, 10, 3) {
+                seen[f] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "{seen:?}");
+    }
+}

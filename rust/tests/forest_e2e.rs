@@ -1,0 +1,159 @@
+//! End-to-end forest contracts (the PR's acceptance criteria):
+//!
+//! 1. an [`ArfRegressor`] with ≥ 10 members beats a single
+//!    `HoeffdingTreeRegressor` on MAE on a `stream::AbruptDrift` Friedman
+//!    stream, and
+//! 2. the parallel fitting path produces predictions identical to
+//!    sequential fitting with the same seed.
+
+use qostream::eval::{prequential, Regressor};
+use qostream::forest::{
+    fit_parallel, ArfOptions, ArfRegressor, OnlineBaggingRegressor, ParallelFitConfig,
+    SubspaceSize,
+};
+use qostream::observer::{factory, ObserverFactory, QuantizationObserver, RadiusPolicy};
+use qostream::stream::{AbruptDrift, Friedman1, Stream};
+use qostream::tree::{HoeffdingTreeRegressor, HtrOptions};
+
+fn qo_factory() -> Box<dyn ObserverFactory> {
+    factory("QO_s2", || {
+        Box::new(QuantizationObserver::new(RadiusPolicy::std_fraction(2.0)))
+    })
+}
+
+/// Friedman #1 whose informative-feature roles swap abruptly at `position`
+/// — same input distribution, genuinely different concept.
+fn drift_stream(position: usize) -> AbruptDrift {
+    AbruptDrift::new(
+        Box::new(Friedman1::new(7, 1.0)),
+        Box::new(Friedman1::swapped(8, 1.0)),
+        position,
+    )
+}
+
+#[test]
+fn arf_beats_single_tree_on_drifting_friedman() {
+    let n = 16_000;
+    let drift_at = 8_000;
+
+    let mut tree = HoeffdingTreeRegressor::new(10, HtrOptions::default(), qo_factory());
+    let r_tree = prequential(&mut tree, &mut drift_stream(drift_at), n, 0);
+
+    let mut arf = ArfRegressor::new(
+        10,
+        ArfOptions {
+            n_members: 10,
+            lambda: 6.0,
+            subspace: SubspaceSize::Fraction(0.7),
+            seed: 1,
+            ..Default::default()
+        },
+        qo_factory(),
+    );
+    let r_arf = prequential(&mut arf, &mut drift_stream(drift_at), n, 0);
+
+    assert!(
+        r_arf.metrics.mae() < r_tree.metrics.mae(),
+        "ARF MAE {} must beat the single tree's {} on the drifting stream",
+        r_arf.metrics.mae(),
+        r_tree.metrics.mae()
+    );
+    assert!(r_arf.metrics.r2() > 0.4, "ARF r2 = {}", r_arf.metrics.r2());
+    assert!(arf.n_splits() >= arf.n_members(), "forest barely grew");
+}
+
+#[test]
+fn parallel_arf_fit_identical_to_sequential() {
+    let n = 6_000;
+    let drift_at = 3_000;
+    let opts = ArfOptions { n_members: 6, lambda: 4.0, seed: 99, ..Default::default() };
+
+    let mut sequential = ArfRegressor::new(10, opts, qo_factory());
+    let mut stream = drift_stream(drift_at);
+    for _ in 0..n {
+        let inst = stream.next_instance().unwrap();
+        sequential.learn_one(&inst.x, inst.y);
+    }
+
+    let mut parallel = ArfRegressor::new(10, opts, qo_factory());
+    let report = fit_parallel(
+        &mut parallel,
+        &mut drift_stream(drift_at),
+        n,
+        ParallelFitConfig { n_workers: 3, batch_size: 128, channel_capacity: 4 },
+    );
+    assert_eq!(report.instances, n);
+    assert_eq!(report.n_workers, 3);
+    assert_eq!(sequential.n_drifts(), parallel.n_drifts());
+    assert_eq!(sequential.n_warnings(), parallel.n_warnings());
+
+    let mut probe = Friedman1::new(4242, 0.0);
+    for _ in 0..200 {
+        let inst = probe.next_instance().unwrap();
+        let a = sequential.predict(&inst.x);
+        let b = parallel.predict(&inst.x);
+        assert_eq!(a.to_bits(), b.to_bits(), "parallel {b} != sequential {a}");
+    }
+}
+
+#[test]
+fn parallel_bagging_fit_identical_to_sequential() {
+    let n = 4_000;
+    let mut sequential =
+        OnlineBaggingRegressor::new(10, 5, 6.0, HtrOptions::default(), qo_factory(), 55);
+    let mut stream = Friedman1::new(17, 1.0);
+    for _ in 0..n {
+        let inst = stream.next_instance().unwrap();
+        sequential.learn_one(&inst.x, inst.y);
+    }
+
+    let mut parallel =
+        OnlineBaggingRegressor::new(10, 5, 6.0, HtrOptions::default(), qo_factory(), 55);
+    fit_parallel(
+        &mut parallel,
+        &mut Friedman1::new(17, 1.0),
+        n,
+        ParallelFitConfig { n_workers: 2, ..Default::default() },
+    );
+
+    let mut probe = Friedman1::new(31, 0.0);
+    for _ in 0..100 {
+        let inst = probe.next_instance().unwrap();
+        assert_eq!(
+            sequential.predict(&inst.x).to_bits(),
+            parallel.predict(&inst.x).to_bits()
+        );
+    }
+}
+
+#[test]
+fn arf_detects_the_concept_swap() {
+    // at least one member must raise a warning or drift after the swap —
+    // the adaptation machinery has to actually engage on this workload
+    let n = 12_000;
+    let drift_at = 6_000;
+    let mut arf = ArfRegressor::new(
+        10,
+        ArfOptions { n_members: 8, lambda: 6.0, seed: 3, ..Default::default() },
+        qo_factory(),
+    );
+    let mut stream = drift_stream(drift_at);
+    let mut before = (0, 0);
+    for i in 0..n {
+        let inst = stream.next_instance().unwrap();
+        arf.learn_one(&inst.x, inst.y);
+        if i + 1 == drift_at {
+            before = (arf.n_warnings(), arf.n_drifts());
+        }
+    }
+    let raised_after =
+        (arf.n_warnings() + arf.n_drifts()) > (before.0 + before.1);
+    assert!(
+        raised_after,
+        "no member reacted to the swap (warnings {} -> {}, drifts {} -> {})",
+        before.0,
+        arf.n_warnings(),
+        before.1,
+        arf.n_drifts()
+    );
+}

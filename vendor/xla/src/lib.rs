@@ -1,0 +1,261 @@
+//! API-compatible offline stub of the PJRT/XLA binding surface `qostream`
+//! programs against.
+//!
+//! The real backend links libxla and a PJRT CPU plugin; this container
+//! build has neither, so [`PjRtClient::cpu`] reports the runtime as
+//! unavailable and every consumer (the `runtime` module, the `xla`
+//! CLI subcommand, `runtime_roundtrip` tests, `xla_vs_native` bench)
+//! detects that and skips the PJRT path. Pure host-side [`Literal`]
+//! construction is implemented for real so literal-handling code keeps
+//! working; anything that would require a compiled executable returns
+//! [`Error`].
+//!
+//! Swapping this stub for a real `xla` crate (same module paths) re-enables
+//! the full AOT artifact path without touching `qostream` itself.
+
+use std::fmt;
+
+/// Error type of the stubbed binding layer.
+#[derive(Clone, Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable() -> Error {
+    Error::new(
+        "PJRT runtime not available in this build (offline stub); \
+         link the real xla crate to enable the AOT artifact path",
+    )
+}
+
+/// Element types a [`Shape`] or [`Literal`] can carry.
+pub trait NativeType: Copy + 'static {
+    const NAME: &'static str;
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+}
+
+macro_rules! native {
+    ($t:ty, $name:literal) => {
+        impl NativeType for $t {
+            const NAME: &'static str = $name;
+            fn from_f64(v: f64) -> $t {
+                v as $t
+            }
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+        }
+    };
+}
+
+native!(f64, "f64");
+native!(f32, "f32");
+native!(i64, "s64");
+native!(i32, "s32");
+
+/// Array shape: element type name + dimensions.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Shape {
+    element: &'static str,
+    dims: Vec<i64>,
+}
+
+impl Shape {
+    pub fn array<E: NativeType>(dims: Vec<i64>) -> Shape {
+        Shape { element: E::NAME, dims }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Host-side literal: f64 storage plus dimensions (sufficient for the
+/// argument-marshalling code paths exercised without a runtime).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Vec<f64>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1(data: &[f64]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Rank-0 scalar literal.
+    pub fn scalar(v: f64) -> Literal {
+        Literal { data: vec![v], dims: Vec::new() }
+    }
+
+    /// Reinterpret with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error::new(format!(
+                "reshape: {} elements cannot take shape {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Decompose a tuple literal. The stub never produces tuples (they only
+    /// come back from executions), so this is always an error here.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+
+    /// Copy out as a typed vector.
+    pub fn to_vec<E: NativeType>(&self) -> Result<Vec<E>> {
+        Ok(self.data.iter().map(|&v| E::from_f64(v)).collect())
+    }
+}
+
+/// Parsed HLO module (stub: parsing requires the runtime's HLO parser).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+/// An XLA computation handle.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// Graph-construction builder (stub: all ops report the runtime missing).
+pub struct XlaBuilder {
+    _name: String,
+}
+
+impl XlaBuilder {
+    pub fn new(name: &str) -> XlaBuilder {
+        XlaBuilder { _name: name.to_string() }
+    }
+
+    pub fn parameter_s(&self, _id: i64, _shape: &Shape, _name: &str) -> Result<XlaOp> {
+        Err(unavailable())
+    }
+
+    pub fn constant_r0<E: NativeType>(&self, _v: E) -> Result<XlaOp> {
+        Err(unavailable())
+    }
+}
+
+/// A node in a computation under construction.
+pub struct XlaOp {
+    _priv: (),
+}
+
+impl XlaOp {
+    pub fn add_(&self, _rhs: &XlaOp) -> Result<XlaOp> {
+        Err(unavailable())
+    }
+
+    pub fn build(&self) -> Result<XlaComputation> {
+        Err(unavailable())
+    }
+}
+
+/// PJRT client handle. [`PjRtClient::cpu`] is the single entry point; in
+/// this stub it always fails, which is how downstream code discovers the
+/// runtime is absent.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+/// A compiled executable (unreachable in the stub: `compile` always errs).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+/// A device buffer (unreachable in the stub).
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(format!("{err}").contains("not available"));
+    }
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let m = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(m.to_vec::<f64>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(m.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+        assert!(lit.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let s = Literal::scalar(2.5);
+        assert_eq!(s.to_vec::<f64>().unwrap(), vec![2.5]);
+        let shape = Shape::array::<f64>(vec![8, 256]);
+        assert_eq!(shape.dims(), &[8, 256]);
+    }
+}
