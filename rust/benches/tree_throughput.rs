@@ -2,7 +2,9 @@
 //! Hoeffding trees with each observer on Friedman #1, reporting prequential
 //! accuracy, throughput and stored elements — followed by the forest
 //! scenario (single tree vs online bagging vs ARF, QO vs E-BST observers
-//! inside the ensemble, on a drifting Friedman stream).
+//! inside the ensemble, on a drifting Friedman stream) and the
+//! split-query backend comparison (per-observer vs batched paths on a
+//! ≥ 10-member forest; bit-identical models, different wall-clock).
 
 use qostream::bench_suite::{forest_bench, tree_bench};
 
@@ -15,4 +17,6 @@ fn main() {
     let rendered = forest_bench::generate(&cfg).expect("forest bench");
     println!("{rendered}");
     println!("full data written to results/forest/");
+    // (the forest summary above already includes the split-query backend
+    // comparison line produced by forest_bench::backend_comparison)
 }

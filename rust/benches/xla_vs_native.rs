@@ -1,14 +1,20 @@
-//! `cargo bench --bench xla_vs_native` — stack-composition benchmark:
-//! split-candidate evaluation through the AOT JAX/Pallas artifact on PJRT
-//! vs the native rust query path, across slot counts and feature batches.
+//! `cargo bench --bench xla_vs_native` — stack-composition benchmark for
+//! the split-query backends:
 //!
-//! Skips (with a message) when `artifacts/` is missing.
+//! 1. per-observer queries vs the flat-packed [`NativeBatchBackend`]
+//!    (always runs — both are pure rust and bit-identical);
+//! 2. the AOT JAX/Pallas artifact on PJRT vs the native query path,
+//!    across slot counts and feature batches (skips with a message when
+//!    `artifacts/` or the runtime is missing).
 
 use qostream::common::timing::{bench, human_time};
 use qostream::common::Rng;
 use qostream::criterion::VarianceReduction;
 use qostream::observer::{AttributeObserver, QuantizationObserver};
-use qostream::runtime::{find_artifacts_dir, Manifest, SlotTable, XlaSplitEngine};
+use qostream::runtime::{
+    find_artifacts_dir, Manifest, NativeBatchBackend, PerObserverBackend, SlotTable,
+    SplitBackend, SplitQuery, XlaSplitEngine,
+};
 
 fn observers_with_slots(target_slots: usize, n_obs: usize) -> Vec<QuantizationObserver> {
     // radius tuned so a N(0,1) sample lands in ~target_slots buckets
@@ -26,13 +32,59 @@ fn observers_with_slots(target_slots: usize, n_obs: usize) -> Vec<QuantizationOb
         .collect()
 }
 
+fn native_backend_section() {
+    println!("== native split-query backends (per-observer vs flat batch) ==");
+    println!(
+        "{:>8} {:>10} {:>14} {:>14} {:>12}",
+        "slots", "features", "batch/call", "loop/call", "batch/loop"
+    );
+    let criterion = VarianceReduction;
+    for &slots in &[16usize, 64, 200] {
+        let observers = observers_with_slots(slots, 16);
+        let queries: Vec<SplitQuery<'_>> = observers
+            .iter()
+            .map(|qo| SplitQuery { observer: qo as &dyn AttributeObserver, criterion: &criterion })
+            .collect();
+        let actual_slots = observers[0].n_elements();
+
+        let batch_stats = bench(3, 30, || NativeBatchBackend.best_splits(&queries));
+        let loop_stats = bench(3, 30, || PerObserverBackend.best_splits(&queries));
+        println!(
+            "{:>8} {:>10} {:>14} {:>14} {:>11.2}x",
+            actual_slots,
+            queries.len(),
+            human_time(batch_stats.mean),
+            human_time(loop_stats.mean),
+            batch_stats.mean / loop_stats.mean
+        );
+
+        // bit-identity spot-check on every run
+        let batched = NativeBatchBackend.best_splits(&queries);
+        let looped = PerObserverBackend.best_splits(&queries);
+        for (b, l) in batched.iter().zip(&looped) {
+            let (b, l) = (b.expect("split"), l.expect("split"));
+            assert_eq!(b.threshold.to_bits(), l.threshold.to_bits());
+            assert_eq!(b.merit.to_bits(), l.merit.to_bits());
+        }
+    }
+    println!();
+}
+
 fn main() {
+    native_backend_section();
+
     let Ok(dir) = find_artifacts_dir() else {
-        println!("xla_vs_native: artifacts/ missing — run `make artifacts` first (skipped)");
+        println!("xla_vs_native: artifacts/ missing — run `make artifacts` first (xla section skipped)");
         return;
     };
     let manifest = Manifest::load(&dir).expect("manifest");
-    let client = xla::PjRtClient::cpu().expect("pjrt");
+    let client = match xla::PjRtClient::cpu() {
+        Ok(client) => client,
+        Err(err) => {
+            println!("xla_vs_native: PJRT unavailable ({err}) — xla section skipped");
+            return;
+        }
+    };
     let engine = XlaSplitEngine::load(&client, &manifest).expect("engine");
     println!("engine F={} S={}\n", engine.f, engine.s);
     println!(

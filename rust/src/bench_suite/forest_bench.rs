@@ -9,9 +9,11 @@
 //! `results/forest/`.
 
 use crate::common::table::{fnum, Table};
-use crate::eval::{prequential, MeanRegressor, PrequentialReport};
+use crate::common::timing::time_once;
+use crate::eval::{prequential, MeanRegressor, PrequentialReport, Regressor};
 use crate::forest::{ArfOptions, ArfRegressor, OnlineBaggingRegressor, SubspaceSize};
 use crate::observer::{factory, EBst, ObserverFactory, QuantizationObserver, RadiusPolicy};
+use crate::runtime::backend::SplitBackendKind;
 use crate::stream::{AbruptDrift, Friedman1, Stream};
 use crate::tree::{HoeffdingTreeRegressor, HtrOptions};
 
@@ -27,6 +29,9 @@ pub struct ForestBenchConfig {
     pub seed: u64,
     /// Abrupt concept change position (0 = stationary stream).
     pub drift_at: usize,
+    /// Split-query engine for every tree in the lineup
+    /// (`--split-backend`; bit-identical results, different wall-clock).
+    pub split_backend: SplitBackendKind,
 }
 
 impl Default for ForestBenchConfig {
@@ -38,6 +43,7 @@ impl Default for ForestBenchConfig {
             subspace: SubspaceSize::Sqrt,
             seed: 1,
             drift_at: 10_000,
+            split_backend: SplitBackendKind::default(),
         }
     }
 }
@@ -100,12 +106,17 @@ pub fn ebst_factory() -> Box<dyn ObserverFactory> {
     factory("E-BST", || Box::new(EBst::new()))
 }
 
+fn tree_options(cfg: &ForestBenchConfig) -> HtrOptions {
+    HtrOptions { split_backend: cfg.split_backend, ..Default::default() }
+}
+
 fn arf_options(cfg: &ForestBenchConfig) -> ArfOptions {
     ArfOptions {
         n_members: cfg.members,
         lambda: cfg.lambda,
         subspace: cfg.subspace,
         seed: cfg.seed,
+        tree: tree_options(cfg),
         ..Default::default()
     }
 }
@@ -121,7 +132,7 @@ pub fn run(cfg: &ForestBenchConfig) -> Vec<ForestRow> {
         rows.push(row_of(&report, 0, 0));
     }
     for fac in [qo_factory(), ebst_factory()] {
-        let mut tree = HoeffdingTreeRegressor::new(n_features, HtrOptions::default(), fac);
+        let mut tree = HoeffdingTreeRegressor::new(n_features, tree_options(cfg), fac);
         let report = prequential(&mut tree, &mut *cfg.stream(), cfg.instances, 0);
         rows.push(row_of(&report, 0, 0));
     }
@@ -130,7 +141,7 @@ pub fn run(cfg: &ForestBenchConfig) -> Vec<ForestRow> {
             n_features,
             cfg.members,
             cfg.lambda,
-            HtrOptions::default(),
+            tree_options(cfg),
             qo_factory(),
             cfg.seed,
         );
@@ -144,6 +155,85 @@ pub fn run(cfg: &ForestBenchConfig) -> Vec<ForestRow> {
         rows.push(row_of(&report, w, d));
     }
     rows
+}
+
+/// Head-to-head split-query paths on the same forest: a ≥ 10-member ARF
+/// trained twice with identical seeds — per-observer queries vs the
+/// batched backend. The models must agree bit-for-bit (same splits, same
+/// predictions); only the query path, and so the wall-clock, differs.
+#[derive(Clone, Copy, Debug)]
+pub struct BackendComparison {
+    pub members: usize,
+    pub instances: usize,
+    /// Seconds to train with per-observer split queries.
+    pub per_observer_secs: f64,
+    /// Seconds to train with the batched native backend.
+    pub batched_secs: f64,
+    /// Whether the two forests ended bit-identical (they must).
+    pub identical: bool,
+}
+
+impl BackendComparison {
+    pub fn speedup(&self) -> f64 {
+        if self.batched_secs > 0.0 {
+            self.per_observer_secs / self.batched_secs
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "split-query paths on arf[{}x] over {} instances: \
+             per-observer {:.3}s vs native-batch {:.3}s ({:.2}x), bit-identical: {}",
+            self.members,
+            self.instances,
+            self.per_observer_secs,
+            self.batched_secs,
+            self.speedup(),
+            self.identical,
+        )
+    }
+}
+
+/// Run the per-observer vs batched split-query comparison (the scenario
+/// the batched-backend PR is benchmarked by). Uses at least 10 members
+/// regardless of `cfg.members`.
+pub fn backend_comparison(cfg: &ForestBenchConfig) -> BackendComparison {
+    let members = cfg.members.max(10);
+    let train = |kind: SplitBackendKind| -> (ArfRegressor, f64) {
+        let opts = ArfOptions {
+            n_members: members,
+            lambda: cfg.lambda,
+            subspace: cfg.subspace,
+            seed: cfg.seed,
+            tree: HtrOptions { split_backend: kind, ..Default::default() },
+            ..Default::default()
+        };
+        let mut arf = ArfRegressor::new(10, opts, qo_factory());
+        let mut stream = cfg.stream();
+        let (secs, _) = time_once(|| {
+            for _ in 0..cfg.instances {
+                let Some(inst) = stream.next_instance() else { break };
+                arf.learn_one(&inst.x, inst.y);
+            }
+        });
+        (arf, secs)
+    };
+    let (reference, per_observer_secs) = train(SplitBackendKind::PerObserver);
+    let (batched, batched_secs) = train(SplitBackendKind::NativeBatch);
+    let mut probe = Friedman1::new(cfg.seed ^ 0x5EED, 0.0);
+    let identical = (0..100).all(|_| {
+        let inst = probe.next_instance().unwrap();
+        reference.predict(&inst.x).to_bits() == batched.predict(&inst.x).to_bits()
+    });
+    BackendComparison {
+        members,
+        instances: cfg.instances,
+        per_observer_secs,
+        batched_secs,
+        identical,
+    }
 }
 
 /// Render + persist under `results/forest/`.
@@ -165,14 +255,18 @@ pub fn generate(cfg: &ForestBenchConfig) -> anyhow::Result<String> {
             r.drifts.to_string(),
         ]);
     }
+    let comparison = backend_comparison(cfg);
     let rendered = format!(
-        "Forest benchmark ({} instances, {} members, lambda={}, subspace={}, drift@{})\n{}",
+        "Forest benchmark ({} instances, {} members, lambda={}, subspace={}, drift@{}, \
+         split-backend={})\n{}\n{}\n",
         cfg.instances,
         cfg.members,
         cfg.lambda,
         cfg.subspace.label(),
         cfg.drift_at,
-        table.render()
+        cfg.split_backend.label(),
+        table.render(),
+        comparison.render(),
     );
     let report = Report::create("forest")?;
     report.write_table("forest", &table)?;
@@ -219,6 +313,19 @@ mod tests {
         assert!(text.contains("arf["));
         assert!(text.contains("bag["));
         assert!(std::path::Path::new("results/forest/forest.csv").exists());
+    }
+
+    #[test]
+    fn backend_comparison_is_bit_identical() {
+        let cfg = ForestBenchConfig { instances: 2500, ..small_cfg() };
+        let cmp = backend_comparison(&cfg);
+        assert_eq!(cmp.members, 10, "the scenario contract is a >= 10-member forest");
+        assert!(
+            cmp.identical,
+            "native-batch split queries diverged from the per-observer path"
+        );
+        assert!(cmp.per_observer_secs > 0.0 && cmp.batched_secs > 0.0);
+        assert!(cmp.render().contains("bit-identical: true"));
     }
 
     #[test]

@@ -17,12 +17,16 @@
 //! [`crate::forest::parallel::fit_parallel`] trains members on worker
 //! threads with bit-for-bit the same result as the sequential loop.
 
+use std::sync::Arc;
+
 use crate::common::Rng;
 use crate::eval::Regressor;
 use crate::observer::{ArcFactory, ObserverFactory};
+use crate::runtime::backend::SplitBackend;
 use crate::tree::{HoeffdingTreeRegressor, HtrOptions};
 
 use super::adwin::Adwin;
+use super::batch::flush_split_attempts;
 use super::parallel::ParallelEnsemble;
 use crate::tree::subspace::SubspaceSize;
 
@@ -72,7 +76,15 @@ pub struct ArfMember {
     n_features: usize,
     lambda: f64,
     tree_options: HtrOptions,
-    factory: std::sync::Arc<dyn ObserverFactory>,
+    factory: Arc<dyn ObserverFactory>,
+    backend: Arc<dyn SplitBackend>,
+    /// Whether the foreground tree has trained on ≥ 1 instance. Until it
+    /// has, its prediction is the untrained prior mean and the prequential
+    /// error must NOT seed the drift detectors (it inflates the window
+    /// with "falling error" mass that has nothing to do with the stream).
+    fg_trained: bool,
+    /// Same, for the background tree (carried over when it is swapped in).
+    bg_trained: bool,
     n_warnings: usize,
     n_drifts: usize,
 }
@@ -88,21 +100,38 @@ impl ArfMember {
     }
 
     /// One prequential step: monitor the member's error, Poisson-train the
-    /// foreground (and background) tree, then react to detector signals.
-    pub(crate) fn learn(&mut self, x: &[f64], y: f64) {
-        let err = (y - self.tree.predict(x)).abs();
+    /// foreground (and background) tree in deferred-attempt mode, then
+    /// react to detector signals. Due split attempts stay queued on the
+    /// trees — the forest flushes all members through one batched backend
+    /// call per round; [`Self::learn`] (the per-worker parallel path)
+    /// flushes this member alone with bit-identical results.
+    pub(crate) fn train_queued(&mut self, x: &[f64], y: f64) {
+        // error BEFORE training (prequential), but only once the tree's
+        // prediction reflects at least one observed instance
+        let err = if self.fg_trained {
+            Some((y - self.tree.predict(x)).abs())
+        } else {
+            None
+        };
         let k = self.rng.poisson(self.lambda);
         for _ in 0..k {
-            self.tree.learn_one(x, y);
+            self.tree.learn_one_deferred(x, y);
+        }
+        if k > 0 {
+            self.fg_trained = true;
         }
         if self.background.is_some() {
             let kb = self.rng.poisson(self.lambda);
             if let Some(bg) = &mut self.background {
                 for _ in 0..kb {
-                    bg.learn_one(x, y);
+                    bg.learn_one_deferred(x, y);
+                }
+                if kb > 0 {
+                    self.bg_trained = true;
                 }
             }
         }
+        let Some(err) = err else { return };
         let warning = self.warning.update(err);
         let drift = self.drift.update(err);
         // Only a RISING error is degradation. A falling error is the tree
@@ -112,16 +141,56 @@ impl ArfMember {
             // swap in the background tree (fresh restart when none trained
             // yet) and re-arm both detectors for the new concept
             self.tree = match self.background.take() {
-                Some(bg) => bg,
-                None => self.fresh_tree(),
+                Some(bg) => {
+                    self.fg_trained = self.bg_trained;
+                    bg
+                }
+                None => {
+                    self.fg_trained = false;
+                    self.fresh_tree()
+                }
             };
+            self.bg_trained = false;
             self.warning.reset();
             self.drift.reset();
             self.n_drifts += 1;
         } else if warning && self.warning.rising() && self.background.is_none() {
             self.background = Some(self.fresh_tree());
+            self.bg_trained = false;
             self.n_warnings += 1;
         }
+    }
+
+    /// Whether any of this member's trees has a queued split attempt.
+    fn has_pending(&self) -> bool {
+        !self.tree.pending_attempts().is_empty()
+            || self
+                .background
+                .as_ref()
+                .is_some_and(|bg| !bg.pending_attempts().is_empty())
+    }
+
+    /// Flush this member's queued split attempts through its backend.
+    fn flush(&mut self) {
+        if !self.has_pending() {
+            return; // hot path: attempts are due ~once per grace period
+        }
+        let mut trees: Vec<&mut HoeffdingTreeRegressor> = Vec::with_capacity(2);
+        trees.push(&mut self.tree);
+        if let Some(bg) = &mut self.background {
+            trees.push(bg);
+        }
+        flush_split_attempts(self.backend.as_ref(), &mut trees);
+    }
+
+    /// The self-contained member step used by the parallel fitting path:
+    /// train, then flush this member's own queue. Bit-identical to the
+    /// sequential forest round (train all members, flush all at once)
+    /// because backend evaluation is independent per query and members
+    /// share no state.
+    pub(crate) fn learn(&mut self, x: &[f64], y: f64) {
+        self.train_queued(x, y);
+        self.flush();
     }
 }
 
@@ -130,6 +199,9 @@ pub struct ArfRegressor {
     members: Vec<ArfMember>,
     options: ArfOptions,
     observer_label: String,
+    /// Shared split-query engine: one batched call resolves every
+    /// member's due attempts per [`Regressor::learn_one`] round.
+    backend: Arc<dyn SplitBackend>,
 }
 
 impl ArfRegressor {
@@ -141,7 +213,8 @@ impl ArfRegressor {
         assert!(options.n_members >= 1, "need at least one member");
         assert!(options.lambda > 0.0, "lambda must be positive");
         let observer_label = factory.name();
-        let shared: std::sync::Arc<dyn ObserverFactory> = std::sync::Arc::from(factory);
+        let shared: Arc<dyn ObserverFactory> = Arc::from(factory);
+        let backend = options.tree.split_backend.build();
         let mut seeder = Rng::new(options.seed);
         let members = (0..options.n_members)
             .map(|i| {
@@ -165,12 +238,15 @@ impl ArfRegressor {
                     lambda: options.lambda,
                     tree_options,
                     factory: shared.clone(),
+                    backend: backend.clone(),
+                    fg_trained: false,
+                    bg_trained: false,
                     n_warnings: 0,
                     n_drifts: 0,
                 }
             })
             .collect();
-        ArfRegressor { members, options, observer_label }
+        ArfRegressor { members, options, observer_label, backend }
     }
 
     pub fn n_members(&self) -> usize {
@@ -205,8 +281,21 @@ impl Regressor for ArfRegressor {
 
     fn learn_one(&mut self, x: &[f64], y: f64) {
         for member in &mut self.members {
-            member.learn(x, y);
+            member.train_queued(x, y);
         }
+        if !self.members.iter().any(ArfMember::has_pending) {
+            return; // hot path: attempts are due ~once per grace period
+        }
+        // one batched backend call resolves every member's due attempts
+        let mut trees: Vec<&mut HoeffdingTreeRegressor> =
+            Vec::with_capacity(self.members.len() * 2);
+        for member in &mut self.members {
+            trees.push(&mut member.tree);
+            if let Some(bg) = &mut member.background {
+                trees.push(bg);
+            }
+        }
+        flush_split_attempts(self.backend.as_ref(), &mut trees);
     }
 
     fn name(&self) -> String {
@@ -290,6 +379,26 @@ mod tests {
             "{} drifts on a stationary stream",
             arf.n_drifts()
         );
+    }
+
+    #[test]
+    fn no_detector_signals_on_a_short_prefix() {
+        // satellite contract: the untrained tree's prior-mean error must
+        // not seed the ADWIN windows, so a short stationary prefix raises
+        // no warnings at all (the converging-tree error is falling, and
+        // it only reaches the detectors once the tree has trained)
+        let mut arf = ArfRegressor::new(
+            10,
+            ArfOptions { n_members: 5, seed: 11, ..Default::default() },
+            qo_factory(),
+        );
+        let mut stream = Friedman1::new(13, 1.0);
+        for _ in 0..300 {
+            let inst = stream.next_instance().unwrap();
+            arf.learn_one(&inst.x, inst.y);
+        }
+        assert_eq!(arf.n_warnings(), 0, "warmup error leaked into the detectors");
+        assert_eq!(arf.n_drifts(), 0);
     }
 
     #[test]

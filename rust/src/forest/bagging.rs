@@ -9,11 +9,15 @@
 //! ([`crate::forest::parallel`]) is bit-for-bit identical to the
 //! sequential loop.
 
+use std::sync::Arc;
+
 use crate::common::Rng;
 use crate::eval::Regressor;
 use crate::observer::{ArcFactory, ObserverFactory};
+use crate::runtime::backend::SplitBackend;
 use crate::tree::{HoeffdingTreeRegressor, HtrOptions};
 
+use super::batch::flush_split_attempts;
 use super::parallel::ParallelEnsemble;
 
 /// One bagged member: a tree plus its private Poisson weighting stream.
@@ -21,15 +25,27 @@ pub struct BagMember {
     pub tree: HoeffdingTreeRegressor,
     rng: Rng,
     lambda: f64,
+    backend: Arc<dyn SplitBackend>,
 }
 
 impl BagMember {
     /// Train on one instance with Poisson(λ) importance (possibly zero
-    /// times — the online analogue of being left out of the bootstrap).
-    pub(crate) fn learn(&mut self, x: &[f64], y: f64) {
+    /// times — the online analogue of being left out of the bootstrap),
+    /// queueing due split attempts on the tree.
+    pub(crate) fn train_queued(&mut self, x: &[f64], y: f64) {
         let k = self.rng.poisson(self.lambda);
         for _ in 0..k {
-            self.tree.learn_one(x, y);
+            self.tree.learn_one_deferred(x, y);
+        }
+    }
+
+    /// Self-contained member step (the parallel fitting path): train,
+    /// then flush this member's queue through its backend. Bit-identical
+    /// to the sequential forest round, which flushes all members at once.
+    pub(crate) fn learn(&mut self, x: &[f64], y: f64) {
+        self.train_queued(x, y);
+        if !self.tree.pending_attempts().is_empty() {
+            flush_split_attempts(self.backend.as_ref(), &mut [&mut self.tree]);
         }
     }
 }
@@ -38,6 +54,8 @@ impl BagMember {
 pub struct OnlineBaggingRegressor {
     members: Vec<BagMember>,
     observer_label: String,
+    /// Shared split-query engine: one batched call per `learn_one` round.
+    backend: Arc<dyn SplitBackend>,
 }
 
 impl OnlineBaggingRegressor {
@@ -55,7 +73,8 @@ impl OnlineBaggingRegressor {
         assert!(n_members >= 1, "need at least one member");
         assert!(lambda > 0.0, "lambda must be positive");
         let observer_label = factory.name();
-        let shared: std::sync::Arc<dyn ObserverFactory> = std::sync::Arc::from(factory);
+        let shared: Arc<dyn ObserverFactory> = Arc::from(factory);
+        let backend = tree_options.split_backend.build();
         let mut seeder = Rng::new(seed);
         let members = (0..n_members)
             .map(|i| {
@@ -69,10 +88,11 @@ impl OnlineBaggingRegressor {
                     ),
                     rng,
                     lambda,
+                    backend: backend.clone(),
                 }
             })
             .collect();
-        OnlineBaggingRegressor { members, observer_label }
+        OnlineBaggingRegressor { members, observer_label, backend }
     }
 
     pub fn n_members(&self) -> usize {
@@ -93,8 +113,18 @@ impl Regressor for OnlineBaggingRegressor {
 
     fn learn_one(&mut self, x: &[f64], y: f64) {
         for member in &mut self.members {
-            member.learn(x, y);
+            member.train_queued(x, y);
         }
+        if self.members.iter().all(|m| m.tree.pending_attempts().is_empty()) {
+            return; // hot path: attempts are due ~once per grace period
+        }
+        // one batched backend call resolves every member's due attempts
+        let mut trees: Vec<&mut HoeffdingTreeRegressor> =
+            Vec::with_capacity(self.members.len());
+        for member in &mut self.members {
+            trees.push(&mut member.tree);
+        }
+        flush_split_attempts(self.backend.as_ref(), &mut trees);
     }
 
     fn name(&self) -> String {

@@ -1,0 +1,154 @@
+//! Cross-member batched split-attempt flushing.
+//!
+//! Forest members train in deferred-attempt mode
+//! ([`HoeffdingTreeRegressor::learn_one_deferred`]): due split attempts
+//! queue on each tree instead of being evaluated inline. Once every
+//! member has consumed the instance, [`flush_split_attempts`] gathers all
+//! queued leaves across all member (and background) trees and answers
+//! every feature of every leaf through **one** [`SplitBackend`] call —
+//! the forest-scale amortization the ROADMAP's "one PJRT call per forest
+//! tick" goal needs, and a single flat pass for the native batch backend.
+//!
+//! Determinism: which leaves are due is a pure function of per-member
+//! state (each leaf's observed weight against its grace period), never of
+//! thread timing, and backend evaluation is independent per query — so a
+//! member flushed alone (the [`super::parallel::fit_parallel`] worker
+//! path) resolves exactly as it does inside the forest-wide batch, and
+//! `fit_parallel` stays bit-for-bit identical to sequential training.
+
+use crate::observer::SplitSuggestion;
+use crate::runtime::backend::{SplitBackend, SplitQuery};
+use crate::tree::HoeffdingTreeRegressor;
+
+/// Drain every tree's deferred-attempt queue and resolve all of them
+/// through a single `backend.best_splits` call.
+pub fn flush_split_attempts(
+    backend: &dyn SplitBackend,
+    trees: &mut [&mut HoeffdingTreeRegressor],
+) {
+    // Phase 1 (mutable): drain the queues into (tree, leaf) jobs.
+    let mut jobs: Vec<(usize, u32)> = Vec::new();
+    for (ti, tree) in trees.iter_mut().enumerate() {
+        for leaf_idx in tree.take_pending() {
+            jobs.push((ti, leaf_idx));
+        }
+    }
+    if jobs.is_empty() {
+        return;
+    }
+
+    // Phase 2 (shared): flatten every job's observers into one query list.
+    let mut queries: Vec<SplitQuery<'_>> = Vec::new();
+    let mut segments: Vec<(usize, usize)> = Vec::with_capacity(jobs.len());
+    for &(ti, leaf_idx) in &jobs {
+        let tree: &HoeffdingTreeRegressor = &*trees[ti];
+        let criterion = tree.criterion();
+        let start = queries.len();
+        for ao in tree.leaf_observers(leaf_idx) {
+            queries.push(SplitQuery { observer: ao.as_ref(), criterion });
+        }
+        segments.push((start, queries.len()));
+    }
+
+    // Phase 3: one backend call for the whole forest round.
+    let results: Vec<Option<SplitSuggestion>> = backend.best_splits(&queries);
+    drop(queries);
+
+    // Phase 4 (mutable): hand each job its result segment.
+    for (&(ti, leaf_idx), &(start, end)) in jobs.iter().zip(&segments) {
+        trees[ti].resolve_attempt(leaf_idx, &results[start..end]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::Rng;
+    use crate::eval::Regressor;
+    use crate::observer::{factory, ObserverFactory, QuantizationObserver, RadiusPolicy};
+    use crate::runtime::backend::{NativeBatchBackend, PerObserverBackend};
+    use crate::tree::HtrOptions;
+
+    fn qo_factory() -> Box<dyn ObserverFactory> {
+        factory("QO_s2", || {
+            Box::new(QuantizationObserver::new(RadiusPolicy::std_fraction(2.0)))
+        })
+    }
+
+    fn tree() -> HoeffdingTreeRegressor {
+        HoeffdingTreeRegressor::new(2, HtrOptions::default(), qo_factory())
+    }
+
+    #[test]
+    fn batched_flush_equals_inline_attempts() {
+        // two deferred trees flushed through ONE cross-tree backend call
+        // per instance must match two inline trees exactly
+        let (mut inline_a, mut inline_b) = (tree(), tree());
+        let (mut def_a, mut def_b) = (tree(), tree());
+        let backend = NativeBatchBackend;
+        let mut rng = Rng::new(1234);
+        for _ in 0..6000 {
+            let xa = [rng.f64(), rng.f64()];
+            let xb = [rng.f64(), rng.f64()];
+            let (ya, yb) = (
+                if xa[0] <= 0.4 { 0.0 } else { 2.0 },
+                if xb[1] <= 0.6 { 1.0 } else { -1.0 },
+            );
+            inline_a.learn_one(&xa, ya);
+            inline_b.learn_one(&xb, yb);
+            def_a.learn_one_deferred(&xa, ya);
+            def_b.learn_one_deferred(&xb, yb);
+            flush_split_attempts(&backend, &mut [&mut def_a, &mut def_b]);
+        }
+        assert!(inline_a.n_splits() + inline_b.n_splits() >= 2, "trees never grew");
+        assert_eq!(inline_a.n_splits(), def_a.n_splits());
+        assert_eq!(inline_b.n_splits(), def_b.n_splits());
+        for _ in 0..50 {
+            let probe = [rng.f64(), rng.f64()];
+            assert_eq!(
+                inline_a.predict(&probe).to_bits(),
+                def_a.predict(&probe).to_bits()
+            );
+            assert_eq!(
+                inline_b.predict(&probe).to_bits(),
+                def_b.predict(&probe).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn backends_agree_through_the_batched_flush() {
+        let run = |use_batch: bool| {
+            let mut t = tree();
+            let mut rng = Rng::new(77);
+            for _ in 0..5000 {
+                let x = [rng.f64(), rng.f64()];
+                let y = if x[0] <= 0.5 { -3.0 } else { 3.0 };
+                t.learn_one_deferred(&x, y);
+                if use_batch {
+                    flush_split_attempts(&NativeBatchBackend, &mut [&mut t]);
+                } else {
+                    flush_split_attempts(&PerObserverBackend, &mut [&mut t]);
+                }
+            }
+            t
+        };
+        let a = run(true);
+        let b = run(false);
+        assert_eq!(a.n_splits(), b.n_splits());
+        assert!(a.n_splits() >= 1);
+        let mut rng = Rng::new(78);
+        for _ in 0..50 {
+            let probe = [rng.f64(), rng.f64()];
+            assert_eq!(a.predict(&probe).to_bits(), b.predict(&probe).to_bits());
+        }
+    }
+
+    #[test]
+    fn empty_queues_are_a_noop() {
+        let mut a = tree();
+        flush_split_attempts(&NativeBatchBackend, &mut [&mut a]);
+        assert_eq!(a.n_splits(), 0);
+        flush_split_attempts(&NativeBatchBackend, &mut []);
+    }
+}

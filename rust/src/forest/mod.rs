@@ -19,6 +19,10 @@
 //! * [`arf`] — the Adaptive Random Forest Regressor (Gomes et al. 2017):
 //!   bagging + subspaces + per-member warning/drift detectors with
 //!   background trees swapped in on drift;
+//! * [`batch`] — cross-member batched split-attempt flushing: members
+//!   train in deferred-attempt mode and every due leaf across the whole
+//!   forest is answered through one
+//!   [`crate::runtime::backend::SplitBackend`] call per round;
 //! * [`parallel`] — multi-core member fitting over the same bounded
 //!   channel/backpressure machinery as [`crate::coordinator`], bit-for-bit
 //!   identical to sequential training.
@@ -30,6 +34,7 @@
 pub mod adwin;
 pub mod arf;
 pub mod bagging;
+pub mod batch;
 pub mod parallel;
 
 pub use crate::tree::subspace;
@@ -38,4 +43,5 @@ pub use crate::tree::subspace::{sample_subspace, SubspaceSize};
 pub use adwin::Adwin;
 pub use arf::{ArfOptions, ArfRegressor};
 pub use bagging::OnlineBaggingRegressor;
+pub use batch::flush_split_attempts;
 pub use parallel::{fit_parallel, ParallelEnsemble, ParallelFitConfig, ParallelFitReport};

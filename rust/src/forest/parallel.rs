@@ -14,7 +14,13 @@
 //! Because every member consumes the identical instance sequence through
 //! identical per-member state transitions, the parallel fit is
 //! **bit-for-bit identical** to the sequential `learn_one` loop (asserted
-//! end-to-end in `rust/tests/forest_e2e.rs`).
+//! end-to-end in `rust/tests/forest_e2e.rs`). This holds with batched
+//! split queries too: a worker flushes each member's deferred attempts
+//! right after that member's round ([`super::batch`]), while the
+//! sequential ensemble flushes all members in one backend call — which
+//! leaves are due is a pure function of per-member state (never thread
+//! timing), and backend evaluation is independent per query, so both
+//! schedules resolve every attempt identically.
 
 use std::sync::mpsc;
 use std::sync::Arc;

@@ -8,7 +8,8 @@
 //! qostream fig3 [--profile ...]
 //! qostream cd [--metric merit|elements|observe|query|all] [--profile ...]
 //! qostream tree [--instances N] [--seed S]    # Sec. 7 integration
-//! qostream forest [--members N] [--lambda L] [--subspace sqrt|all|K] [--parallel W]
+//! qostream forest [--members N] [--lambda L] [--subspace sqrt|all|K]
+//!                 [--split-backend per-observer|native-batch|xla] [--parallel W]
 //! qostream coordinator [--shards N] [--instances N]
 //! qostream xla [--instances N] [--radius R]
 //! qostream all                                # everything, standard profile
@@ -24,7 +25,7 @@ use qostream::criterion::VarianceReduction;
 use qostream::eval::Regressor;
 use qostream::forest::{fit_parallel, ArfOptions, ArfRegressor, ParallelFitConfig, SubspaceSize};
 use qostream::observer::AttributeObserver;
-use qostream::runtime::{find_artifacts_dir, Manifest, XlaSplitEngine};
+use qostream::runtime::{find_artifacts_dir, Manifest, SplitBackendKind, XlaSplitEngine};
 use qostream::stream::{Friedman1, Stream};
 
 fn protocol_from(args: &Args) -> Protocol {
@@ -108,6 +109,10 @@ fn cmd_forest(args: &Args) -> Result<()> {
             .unwrap_or_else(|| panic!("--subspace must be all|sqrt|<count>|<fraction>")),
         seed: args.u64_or("seed", 1),
         drift_at: args.usize_or("drift-at", instances / 2),
+        split_backend: SplitBackendKind::parse(args.get_or("split-backend", "native-batch"))
+            .unwrap_or_else(|| {
+                panic!("--split-backend must be per-observer|native-batch|xla")
+            }),
     };
     println!("{}", forest_bench::generate(&cfg)?);
     println!("written to results/forest/");
@@ -122,6 +127,10 @@ fn cmd_forest(args: &Args) -> Result<()> {
             lambda: cfg.lambda,
             subspace: cfg.subspace,
             seed: cfg.seed,
+            tree: qostream::tree::HtrOptions {
+                split_backend: cfg.split_backend,
+                ..Default::default()
+            },
             ..Default::default()
         };
         let mut sequential = ArfRegressor::new(10, opts, observer_factory(&observer));
@@ -254,7 +263,8 @@ SUBCOMMANDS
   cd           Friedman/Nemenyi CD diagrams       [--metric merit|elements|observe|query|all]
   tree         Hoeffding-tree integration bench   [--instances N --seed S]
   forest       online ensembles vs single tree    [--instances N --members M --lambda L
-               (bagging + ARF on drifting data)    --subspace all|sqrt|K --drift-at N --seed S
+               (bagging + ARF on drifting data,    --subspace all|sqrt|K --drift-at N --seed S
+                batched split queries)             --split-backend per-observer|native-batch|xla
                                                    --parallel W --observer qo|ebst (demo only)]
   coordinator  sharded distributed observation    [--shards N --instances N --radius R]
   xla          AOT split-eval via PJRT artifacts  [--instances N --radius R]

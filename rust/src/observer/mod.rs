@@ -61,6 +61,14 @@ pub trait AttributeObserver: Send {
 
     /// Forget everything (leaf reuse after a split).
     fn reset(&mut self);
+
+    /// Downcast hook for batched split backends
+    /// ([`crate::runtime::backend`]): Quantization Observers expose
+    /// themselves so a backend can pack their slot tables; every other
+    /// observer stays opaque and is answered per-observer.
+    fn as_qo(&self) -> Option<&QuantizationObserver> {
+        None
+    }
 }
 
 /// Factory for building one observer per feature (tree leaves need

@@ -86,6 +86,11 @@ impl QuantizationObserver {
         self
     }
 
+    /// The configured split-point strategy (batched backends replicate it).
+    pub fn strategy(&self) -> SplitPointStrategy {
+        self.strategy
+    }
+
     /// Fixed-radius constructor (paper's QO_0.01 uses `r = 0.01`).
     pub fn with_radius(r: f64) -> QuantizationObserver {
         QuantizationObserver::new(RadiusPolicy::Fixed(r))
@@ -241,7 +246,12 @@ impl AttributeObserver for QuantizationObserver {
                     SplitPointStrategy::PrototypeMidpoint => {
                         0.5 * (slot.prototype() + next.prototype())
                     }
-                    SplitPointStrategy::GridBoundary => (code + 1) as f64 * radius,
+                    // saturating: `code` itself saturates at the i64 range
+                    // for extreme x/r, so plain `code + 1` could overflow
+                    // (a panic in debug builds)
+                    SplitPointStrategy::GridBoundary => {
+                        code.saturating_add(1) as f64 * radius
+                    }
                 };
                 best = Some(SplitSuggestion { threshold, merit, left, right });
             }
@@ -270,6 +280,10 @@ impl AttributeObserver for QuantizationObserver {
         self.slots.clear();
         self.total = VarStats::new();
         // strategy is configuration, not state: kept across resets
+    }
+
+    fn as_qo(&self) -> Option<&QuantizationObserver> {
+        Some(self)
     }
 }
 
@@ -491,6 +505,40 @@ mod tests {
         assert!((sp.threshold - sg.threshold).abs() <= 0.05 + 1e-12);
         // grid boundary is an exact multiple of r
         assert!((sg.threshold / 0.05 - (sg.threshold / 0.05).round()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn grid_boundary_saturated_slot_does_not_overflow() {
+        // regression for the `code + 1` overflow: bucket codes saturate at
+        // the i64 range for extreme x/r (see `code`), so the grid-boundary
+        // threshold must use saturating arithmetic — in debug builds the
+        // old `code + 1` could wrap and panic. Build slots at the very top
+        // of the code range and query every boundary.
+        let mut qo = QuantizationObserver::with_radius(0.5)
+            .with_strategy(SplitPointStrategy::GridBoundary);
+        let mut lo = VarStats::new();
+        lo.update(0.0, 1.0);
+        lo.update(0.2, 1.0);
+        let mut hi = VarStats::new();
+        hi.update(10.0, 1.0);
+        hi.update(9.5, 1.0);
+        qo.absorb_slot(i64::MAX - 1, 1.0, lo);
+        qo.absorb_slot(i64::MAX, 2.0, hi);
+        let s = qo.best_split(&VarianceReduction).expect("two slots must split");
+        // the only boundary's left code is i64::MAX - 1: threshold is the
+        // saturated grid edge i64::MAX · r
+        assert!(s.threshold.is_finite(), "threshold={}", s.threshold);
+        assert!((s.threshold - i64::MAX as f64 * 0.5).abs() <= 1.0);
+
+        // the observe() route: x/r beyond the i64 range saturates codes at
+        // both ends; the query must survive those slots too
+        let mut extreme = QuantizationObserver::with_radius(1e-300)
+            .with_strategy(SplitPointStrategy::GridBoundary);
+        extreme.observe(-1e300, -1.0, 1.0); // code i64::MIN
+        extreme.observe(0.0, 0.0, 1.0); // code 0
+        extreme.observe(1e300, 1.0, 1.0); // code i64::MAX
+        let s = extreme.best_split(&VarianceReduction).expect("three slots");
+        assert!(s.threshold.is_finite(), "threshold={}", s.threshold);
     }
 
     #[test]

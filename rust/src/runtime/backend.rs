@@ -1,0 +1,544 @@
+//! `SplitBackend`: pluggable engines for split-candidate evaluation.
+//!
+//! The paper makes split *queries* sub-linear per observer; this module
+//! makes them batched across observers — all features of a leaf, and (via
+//! [`crate::forest::batch`]) all due leaves across every forest member —
+//! so one engine call amortizes the query loop the way the XLA artifact
+//! amortizes its PJRT dispatch:
+//!
+//! * [`PerObserverBackend`] — the original path: each observer answers its
+//!   own `best_split` query independently.
+//! * [`NativeBatchBackend`] — packs every frozen Quantization Observer
+//!   into one flat slot arena (reusing [`SlotTable::from_qo`]) and
+//!   evaluates the whole batch in a single cache-friendly pass. Produces
+//!   **bit-identical** results to the per-observer path (asserted by a
+//!   property test below); non-QO observers fall back transparently.
+//! * [`XlaSplitBackend`] — the AOT JAX/Pallas `split_eval` artifact on
+//!   PJRT behind the same trait; construction fails cleanly when the
+//!   runtime or artifacts are absent (callers fall back, exactly like the
+//!   `runtime_roundtrip` tests self-skip).
+//!
+//! [`SplitBackendKind`] is the `Copy` configuration knob carried by
+//! [`crate::tree::HtrOptions`] and exposed by the CLI's
+//! `--split-backend` flag.
+
+use std::sync::{Arc, OnceLock};
+
+use anyhow::Result;
+
+use crate::criterion::SplitCriterion;
+use crate::observer::qo::SplitPointStrategy;
+use crate::observer::{AttributeObserver, SplitSuggestion};
+use crate::stats::VarStats;
+
+use super::artifact::{find_artifacts_dir, Manifest};
+use super::split_engine::{SlotTable, XlaSplit, XlaSplitEngine};
+
+/// One split-candidate query: an observer plus the merit criterion its
+/// owning tree evaluates candidates under.
+#[derive(Clone, Copy)]
+pub struct SplitQuery<'a> {
+    pub observer: &'a dyn AttributeObserver,
+    pub criterion: &'a dyn SplitCriterion,
+}
+
+/// A split-candidate evaluation engine. `best_splits` answers one query
+/// per input observer, in order; `None` means the observer has no
+/// admissible candidate (fewer than two partitions observed).
+pub trait SplitBackend: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    fn best_splits(&self, queries: &[SplitQuery<'_>]) -> Vec<Option<SplitSuggestion>>;
+}
+
+/// The original query path: every observer answers independently.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PerObserverBackend;
+
+impl SplitBackend for PerObserverBackend {
+    fn name(&self) -> &'static str {
+        "per-observer"
+    }
+
+    fn best_splits(&self, queries: &[SplitQuery<'_>]) -> Vec<Option<SplitSuggestion>> {
+        queries.iter().map(|q| q.observer.best_split(q.criterion)).collect()
+    }
+}
+
+/// How one packed query resolves its candidate thresholds.
+enum ThresholdRule {
+    /// Midpoint of consecutive slot prototypes (paper Alg. 2).
+    Prototype,
+    /// Grid edge after the left slot: `(code + 1) · r` (ablation strategy).
+    Grid { radius: f64, codes_start: usize },
+}
+
+/// One packed query: a contiguous segment of the flat slot arena.
+struct Segment {
+    start: usize,
+    len: usize,
+    total: VarStats,
+    rule: ThresholdRule,
+}
+
+enum Plan {
+    /// Not packable (non-QO, warming radius, < 2 slots): query directly.
+    Direct,
+    Packed(Segment),
+}
+
+/// Batched native evaluation: all packable observers share one flat slot
+/// arena and are answered in a single pass. Bit-identical to
+/// [`PerObserverBackend`] by construction — the evaluation replays exactly
+/// the per-observer query arithmetic (same merges, same order, same
+/// threshold formulas) over the packed copies of the same slot statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NativeBatchBackend;
+
+impl SplitBackend for NativeBatchBackend {
+    fn name(&self) -> &'static str {
+        "native-batch"
+    }
+
+    fn best_splits(&self, queries: &[SplitQuery<'_>]) -> Vec<Option<SplitSuggestion>> {
+        // Pack phase: one flat arena across every packable query.
+        let mut flat = SlotTable::default();
+        let mut codes: Vec<i64> = Vec::new();
+        let mut plans: Vec<Plan> = Vec::with_capacity(queries.len());
+        for q in queries {
+            let Some(qo) = q.observer.as_qo() else {
+                plans.push(Plan::Direct);
+                continue;
+            };
+            let Some(radius) = qo.radius() else {
+                // still warming: the buffered sweep is not slot-shaped
+                plans.push(Plan::Direct);
+                continue;
+            };
+            // single pass: the observer's sorted slots land directly in
+            // the arena (same sort the per-observer query pays, no
+            // intermediate per-query table)
+            let start = flat.n.len();
+            let len = flat.append_qo(qo);
+            if len < 2 {
+                flat.truncate(start);
+                plans.push(Plan::Direct);
+                continue;
+            }
+            let rule = match qo.strategy() {
+                SplitPointStrategy::PrototypeMidpoint => ThresholdRule::Prototype,
+                SplitPointStrategy::GridBoundary => {
+                    // bucket codes are only needed for the ablation-only
+                    // grid strategy; the extra sorted pass is acceptable
+                    // off the default path
+                    let codes_start = codes.len();
+                    codes.extend(qo.sorted_slots().iter().map(|&(code, _)| code));
+                    ThresholdRule::Grid { radius, codes_start }
+                }
+            };
+            plans.push(Plan::Packed(Segment { start, len, total: qo.total(), rule }));
+        }
+
+        // Eval phase: one pass over the arena, segment by segment.
+        queries
+            .iter()
+            .zip(plans)
+            .map(|(q, plan)| match plan {
+                Plan::Direct => q.observer.best_split(q.criterion),
+                Plan::Packed(seg) => eval_segment(&flat, &codes, &seg, q.criterion),
+            })
+            .collect()
+    }
+}
+
+#[inline]
+fn slot_stats(flat: &SlotTable, i: usize) -> VarStats {
+    VarStats { n: flat.n[i], mean: flat.mean[i], m2: flat.m2[i] }
+}
+
+#[inline]
+fn prototype(flat: &SlotTable, i: usize) -> f64 {
+    if flat.n[i] > 0.0 {
+        flat.sum_x[i] / flat.n[i]
+    } else {
+        0.0
+    }
+}
+
+/// Replays `QuantizationObserver::best_split` over a packed segment —
+/// every operation, order and comparison matches the observer's own query
+/// so the result is bit-identical.
+fn eval_segment(
+    flat: &SlotTable,
+    codes: &[i64],
+    seg: &Segment,
+    criterion: &dyn SplitCriterion,
+) -> Option<SplitSuggestion> {
+    let total = seg.total;
+    let end = seg.start + seg.len;
+    let mut left = VarStats::new();
+    let mut best: Option<SplitSuggestion> = None;
+    for i in seg.start..end - 1 {
+        left += slot_stats(flat, i);
+        let right = total - left;
+        let merit = criterion.merit(&total, &left, &right);
+        if best.map(|b| merit > b.merit).unwrap_or(true) {
+            let threshold = match seg.rule {
+                ThresholdRule::Prototype => {
+                    0.5 * (prototype(flat, i) + prototype(flat, i + 1))
+                }
+                ThresholdRule::Grid { radius, codes_start } => {
+                    let code = codes[codes_start + (i - seg.start)];
+                    code.saturating_add(1) as f64 * radius
+                }
+            };
+            best = Some(SplitSuggestion { threshold, merit, left, right });
+        }
+    }
+    best
+}
+
+/// The AOT `split_eval` artifact behind the [`SplitBackend`] trait.
+///
+/// Only frozen prototype-midpoint QO tables that fit the engine's static
+/// (F, S) shape ride the PJRT path; everything else (and any execution
+/// error) falls back to the per-observer query. Branch statistics for the
+/// winning cut are reconstructed natively — the artifact returns only
+/// `(best_idx, merit, threshold)`.
+pub struct XlaSplitBackend {
+    engine: XlaSplitEngine,
+}
+
+impl XlaSplitBackend {
+    /// Load from the discovered artifacts. Errors when PJRT or the
+    /// artifacts are absent — callers fall back (the CLI, benches and
+    /// [`SplitBackendKind::build`] self-skip exactly like the
+    /// `runtime_roundtrip` tests).
+    pub fn load() -> Result<XlaSplitBackend> {
+        let dir = find_artifacts_dir()?;
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let engine = XlaSplitEngine::load(&client, &manifest)?;
+        Ok(XlaSplitBackend { engine })
+    }
+
+    /// Wrap an already-loaded engine (tests / custom clients).
+    pub fn from_engine(engine: XlaSplitEngine) -> XlaSplitBackend {
+        XlaSplitBackend { engine }
+    }
+}
+
+/// Rebuild branch statistics for an artifact cut. Callers must have
+/// validated `xs.best_idx` as an internal boundary (`< table.len() - 1`),
+/// otherwise the right branch would be empty.
+fn suggestion_from(table: &SlotTable, total: &VarStats, xs: XlaSplit) -> SplitSuggestion {
+    debug_assert!(xs.best_idx + 1 < table.len());
+    let mut left = VarStats::new();
+    for i in 0..=xs.best_idx {
+        left += VarStats { n: table.n[i], mean: table.mean[i], m2: table.m2[i] };
+    }
+    let right = *total - left;
+    SplitSuggestion { threshold: xs.threshold, merit: xs.merit, left, right }
+}
+
+impl SplitBackend for XlaSplitBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn best_splits(&self, queries: &[SplitQuery<'_>]) -> Vec<Option<SplitSuggestion>> {
+        let mut tables: Vec<SlotTable> = Vec::new();
+        let mut totals: Vec<VarStats> = Vec::new();
+        let mut map: Vec<Option<usize>> = Vec::with_capacity(queries.len());
+        for q in queries {
+            // the artifact hard-codes variance-reduction scoring and
+            // prototype-midpoint thresholds: anything else must take the
+            // per-observer path so merits stay comparable within a leaf
+            let criterion_matches =
+                q.criterion.name() == crate::criterion::VarianceReduction.name();
+            let packed = q.observer.as_qo().filter(|_| criterion_matches).and_then(|qo| {
+                if qo.radius().is_none()
+                    || qo.strategy() != SplitPointStrategy::PrototypeMidpoint
+                {
+                    return None;
+                }
+                let table = SlotTable::from_qo(qo);
+                if table.len() >= 2 && table.len() <= self.engine.s {
+                    Some((table, qo.total()))
+                } else {
+                    None
+                }
+            });
+            match packed {
+                Some((table, total)) => {
+                    map.push(Some(tables.len()));
+                    tables.push(table);
+                    totals.push(total);
+                }
+                None => map.push(None),
+            }
+        }
+        let evaluated = match self.engine.best_splits(&tables) {
+            Ok(results) => results,
+            Err(_) => vec![None; tables.len()],
+        };
+        queries
+            .iter()
+            .zip(&map)
+            .map(|(q, slot)| match slot {
+                Some(ti) => match evaluated[*ti] {
+                    // the cut index must name an internal boundary;
+                    // anything else from the artifact is a shape bug and
+                    // falls back like every other engine error
+                    Some(xs) if xs.best_idx + 1 < tables[*ti].len() => {
+                        Some(suggestion_from(&tables[*ti], &totals[*ti], xs))
+                    }
+                    _ => q.observer.best_split(q.criterion),
+                },
+                None => q.observer.best_split(q.criterion),
+            })
+            .collect()
+    }
+}
+
+/// Configuration-level backend selector (CLI `--split-backend`, carried by
+/// [`crate::tree::HtrOptions::split_backend`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SplitBackendKind {
+    /// Query each observer independently (the original path).
+    PerObserver,
+    /// Flat-packed native batch evaluation (always available,
+    /// bit-identical to `PerObserver`). The default.
+    #[default]
+    NativeBatch,
+    /// The AOT PJRT artifact; falls back to `NativeBatch` when the
+    /// runtime or artifacts are absent.
+    Xla,
+}
+
+impl SplitBackendKind {
+    /// Parse the CLI spelling.
+    pub fn parse(s: &str) -> Option<SplitBackendKind> {
+        match s {
+            "per-observer" | "observer" => Some(SplitBackendKind::PerObserver),
+            "native-batch" | "native" | "batch" => Some(SplitBackendKind::NativeBatch),
+            "xla" => Some(SplitBackendKind::Xla),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            SplitBackendKind::PerObserver => "per-observer",
+            SplitBackendKind::NativeBatch => "native-batch",
+            SplitBackendKind::Xla => "xla",
+        }
+    }
+
+    /// Backend object for this kind. `Xla` tries the artifact path once
+    /// per process (the engine is shared) and falls back to the native
+    /// batch when unavailable.
+    pub fn build(&self) -> Arc<dyn SplitBackend> {
+        match self {
+            SplitBackendKind::PerObserver => Arc::new(PerObserverBackend),
+            SplitBackendKind::NativeBatch => Arc::new(NativeBatchBackend),
+            SplitBackendKind::Xla => xla_or_fallback(),
+        }
+    }
+
+    /// Backend object for a tree: `None` for `PerObserver`, whose inline
+    /// query loop needs no backend object at all.
+    pub fn instantiate(&self) -> Option<Arc<dyn SplitBackend>> {
+        match self {
+            SplitBackendKind::PerObserver => None,
+            other => Some(other.build()),
+        }
+    }
+}
+
+fn xla_or_fallback() -> Arc<dyn SplitBackend> {
+    static CACHE: OnceLock<Option<Arc<XlaSplitBackend>>> = OnceLock::new();
+    let cached = CACHE.get_or_init(|| match XlaSplitBackend::load() {
+        Ok(backend) => Some(Arc::new(backend)),
+        Err(err) => {
+            eprintln!(
+                "split-backend xla unavailable ({err}); falling back to native-batch"
+            );
+            None
+        }
+    });
+    match cached {
+        Some(backend) => {
+            let shared: Arc<dyn SplitBackend> = backend.clone();
+            shared
+        }
+        None => Arc::new(NativeBatchBackend),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::proptest::check;
+    use crate::common::Rng;
+    use crate::criterion::VarianceReduction;
+    use crate::observer::{EBst, QuantizationObserver, RadiusPolicy};
+
+    fn queries_of<'a>(
+        observers: &'a [Box<dyn AttributeObserver>],
+        criterion: &'a dyn SplitCriterion,
+    ) -> Vec<SplitQuery<'a>> {
+        observers
+            .iter()
+            .map(|ao| SplitQuery { observer: ao.as_ref(), criterion })
+            .collect()
+    }
+
+    fn bits_identical(a: &Option<SplitSuggestion>, b: &Option<SplitSuggestion>) -> bool {
+        match (a, b) {
+            (None, None) => true,
+            (Some(a), Some(b)) => {
+                a.threshold.to_bits() == b.threshold.to_bits()
+                    && a.merit.to_bits() == b.merit.to_bits()
+                    && a.left.n.to_bits() == b.left.n.to_bits()
+                    && a.left.mean.to_bits() == b.left.mean.to_bits()
+                    && a.left.m2.to_bits() == b.left.m2.to_bits()
+                    && a.right.n.to_bits() == b.right.n.to_bits()
+                    && a.right.mean.to_bits() == b.right.mean.to_bits()
+                    && a.right.m2.to_bits() == b.right.m2.to_bits()
+            }
+            _ => false,
+        }
+    }
+
+    /// The argmax/runner-up selection the tree applies to backend results;
+    /// used to assert the chosen (feature, threshold, merit) agrees.
+    fn select(results: &[Option<SplitSuggestion>]) -> Option<(usize, u64, u64)> {
+        let mut best: Option<(usize, SplitSuggestion)> = None;
+        for (slot, s) in results.iter().enumerate() {
+            let Some(s) = s else { continue };
+            match &best {
+                Some((_, b)) if s.merit <= b.merit => {}
+                _ => best = Some((slot, *s)),
+            }
+        }
+        best.map(|(slot, s)| (slot, s.threshold.to_bits(), s.merit.to_bits()))
+    }
+
+    #[test]
+    fn prop_native_batch_bit_identical_to_per_observer() {
+        // the satellite contract: across random streams, radii (fixed,
+        // dynamic/warming) strategies and observer mixes, the batched
+        // backend returns bit-identical (feature, threshold, merit) —
+        // and branch statistics — to the per-observer query loop.
+        check("native-batch-vs-per-observer", 0xBA7C, 40, |rng| {
+            let n_obs = 1 + rng.below(6) as usize;
+            let mut observers: Vec<Box<dyn AttributeObserver>> = Vec::new();
+            for _ in 0..n_obs {
+                let pick = rng.below(5);
+                let ao: Box<dyn AttributeObserver> = match pick {
+                    0 => Box::new(EBst::new()),
+                    1 => Box::new(QuantizationObserver::new(RadiusPolicy::std_fraction(
+                        2.0,
+                    ))),
+                    2 => Box::new(
+                        QuantizationObserver::with_radius(0.02 + rng.f64() * 0.3)
+                            .with_strategy(SplitPointStrategy::GridBoundary),
+                    ),
+                    _ => Box::new(QuantizationObserver::with_radius(
+                        0.02 + rng.f64() * 0.3,
+                    )),
+                };
+                observers.push(ao);
+            }
+            // random stream; sometimes tiny so warming/no-split paths run
+            let n = 3 + rng.below(500);
+            for _ in 0..n {
+                let x = rng.normal(0.0, 1.0 + rng.f64());
+                let y = if rng.bool(0.5) { 3.0 * x } else { x * x } + rng.normal(0.0, 0.2);
+                for ao in observers.iter_mut() {
+                    ao.observe(x, y, 1.0);
+                }
+            }
+            let criterion = VarianceReduction;
+            let queries = queries_of(&observers, &criterion);
+            let batched = NativeBatchBackend.best_splits(&queries);
+            let direct = PerObserverBackend.best_splits(&queries);
+            for (i, (b, d)) in batched.iter().zip(&direct).enumerate() {
+                if !bits_identical(b, d) {
+                    return Err(format!("observer {i}: {b:?} != {d:?}"));
+                }
+            }
+            if select(&batched) != select(&direct) {
+                return Err(format!(
+                    "selection disagrees: {:?} vs {:?}",
+                    select(&batched),
+                    select(&direct)
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn native_batch_packs_many_observers_in_one_arena() {
+        let mut rng = Rng::new(5);
+        let observers: Vec<Box<dyn AttributeObserver>> = (0..8)
+            .map(|_| {
+                let mut qo = QuantizationObserver::with_radius(0.1);
+                for _ in 0..2000 {
+                    let x = rng.normal(0.0, 1.0);
+                    qo.observe(x, if x <= 0.2 { 0.0 } else { 1.0 }, 1.0);
+                }
+                Box::new(qo) as Box<dyn AttributeObserver>
+            })
+            .collect();
+        let criterion = VarianceReduction;
+        let queries = queries_of(&observers, &criterion);
+        let results = NativeBatchBackend.best_splits(&queries);
+        assert_eq!(results.len(), 8);
+        for (ao, r) in observers.iter().zip(&results) {
+            let s = r.expect("step function must split");
+            assert!((s.threshold - 0.2).abs() < 0.15, "threshold={}", s.threshold);
+            assert!(bits_identical(r, &ao.best_split(&VarianceReduction)));
+        }
+    }
+
+    #[test]
+    fn kind_parse_and_labels_roundtrip() {
+        for kind in [
+            SplitBackendKind::PerObserver,
+            SplitBackendKind::NativeBatch,
+            SplitBackendKind::Xla,
+        ] {
+            assert_eq!(SplitBackendKind::parse(kind.label()), Some(kind));
+        }
+        assert_eq!(SplitBackendKind::parse("native"), Some(SplitBackendKind::NativeBatch));
+        assert_eq!(SplitBackendKind::parse("nope"), None);
+        assert_eq!(SplitBackendKind::default(), SplitBackendKind::NativeBatch);
+    }
+
+    #[test]
+    fn xla_kind_falls_back_without_runtime() {
+        // the offline stub has no PJRT: building the xla kind must yield a
+        // working backend (native-batch fallback), never a panic
+        let backend = SplitBackendKind::Xla.build();
+        let mut qo = QuantizationObserver::with_radius(0.1);
+        let mut rng = Rng::new(9);
+        for _ in 0..1000 {
+            let x = rng.uniform(-1.0, 1.0);
+            qo.observe(x, if x <= 0.0 { 0.0 } else { 1.0 }, 1.0);
+        }
+        let criterion = VarianceReduction;
+        let queries = [SplitQuery { observer: &qo, criterion: &criterion }];
+        let results = backend.best_splits(&queries);
+        assert_eq!(results.len(), 1);
+        assert!(results[0].is_some());
+    }
+
+    #[test]
+    fn per_observer_kind_instantiates_to_none() {
+        assert!(SplitBackendKind::PerObserver.instantiate().is_none());
+        assert!(SplitBackendKind::NativeBatch.instantiate().is_some());
+    }
+}

@@ -8,9 +8,14 @@
 //! /opt/xla-example/README.md).
 
 pub mod artifact;
+pub mod backend;
 pub mod quantize_engine;
 pub mod split_engine;
 
 pub use artifact::{find_artifacts_dir, Manifest};
+pub use backend::{
+    NativeBatchBackend, PerObserverBackend, SplitBackend, SplitBackendKind, SplitQuery,
+    XlaSplitBackend,
+};
 pub use quantize_engine::XlaQuantizeEngine;
 pub use split_engine::{SlotTable, XlaSplitEngine};

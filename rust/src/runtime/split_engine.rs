@@ -33,20 +33,36 @@ impl SlotTable {
 
     /// Extract from a Quantization Observer's hash (sorted by code).
     pub fn from_qo(qo: &QuantizationObserver) -> SlotTable {
-        let slots = qo.sorted_slots();
-        let mut t = SlotTable {
-            n: Vec::with_capacity(slots.len()),
-            sum_x: Vec::with_capacity(slots.len()),
-            mean: Vec::with_capacity(slots.len()),
-            m2: Vec::with_capacity(slots.len()),
-        };
-        for (_, slot) in slots {
-            t.n.push(slot.stats.n);
-            t.sum_x.push(slot.sum_x);
-            t.mean.push(slot.stats.mean);
-            t.m2.push(slot.stats.m2);
-        }
+        let mut t = SlotTable::default();
+        t.append_qo(qo);
         t
+    }
+
+    /// Append one observer's slots (sorted by code) to this table in a
+    /// single pass — the batched backend packs many observers into one
+    /// flat arena this way, with no intermediate per-query table. Returns
+    /// the number of appended slots.
+    pub fn append_qo(&mut self, qo: &QuantizationObserver) -> usize {
+        let slots = qo.sorted_slots();
+        self.n.reserve(slots.len());
+        self.sum_x.reserve(slots.len());
+        self.mean.reserve(slots.len());
+        self.m2.reserve(slots.len());
+        for (_, slot) in &slots {
+            self.n.push(slot.stats.n);
+            self.sum_x.push(slot.sum_x);
+            self.mean.push(slot.stats.mean);
+            self.m2.push(slot.stats.m2);
+        }
+        slots.len()
+    }
+
+    /// Drop every row from `len` on (undo of a partial [`Self::append_qo`]).
+    pub fn truncate(&mut self, len: usize) {
+        self.n.truncate(len);
+        self.sum_x.truncate(len);
+        self.mean.truncate(len);
+        self.m2.truncate(len);
     }
 }
 
@@ -153,17 +169,25 @@ impl XlaSplitEngine {
 
 /// Native reference computation over a [`SlotTable`] — the exact same math
 /// as the artifact, used by the round-trip tests and the comparison bench.
+///
+/// Zero-weight slots (possible in hand-built or padded tables; a live QO
+/// never produces them) are skipped entirely, matching the XLA path's
+/// `evaluable` guard: they contribute no statistics, host no cut, and —
+/// crucially — never enter the `sum_x / n` prototype division, which would
+/// otherwise yield a NaN threshold that silently poisons the suggestion.
 pub fn native_best_split(table: &SlotTable) -> Option<XlaSplit> {
-    if table.len() < 2 {
+    let occupied: Vec<usize> = (0..table.len()).filter(|&i| table.n[i] > 0.0).collect();
+    if occupied.len() < 2 {
         return None;
     }
     let mut total = VarStats::new();
-    for i in 0..table.len() {
+    for &i in &occupied {
         total += VarStats { n: table.n[i], mean: table.mean[i], m2: table.m2[i] };
     }
     let mut left = VarStats::new();
     let mut best: Option<XlaSplit> = None;
-    for i in 0..table.len() - 1 {
+    for pair in occupied.windows(2) {
+        let (i, j) = (pair[0], pair[1]);
         left += VarStats { n: table.n[i], mean: table.mean[i], m2: table.m2[i] };
         let right = total - left;
         let merit = crate::criterion::SplitCriterion::merit(
@@ -173,7 +197,7 @@ pub fn native_best_split(table: &SlotTable) -> Option<XlaSplit> {
             &right,
         );
         let proto_i = table.sum_x[i] / table.n[i];
-        let proto_j = table.sum_x[i + 1] / table.n[i + 1];
+        let proto_j = table.sum_x[j] / table.n[j];
         if best.map(|b| merit > b.merit).unwrap_or(true) {
             best = Some(XlaSplit { best_idx: i, merit, threshold: 0.5 * (proto_i + proto_j) });
         }
@@ -216,5 +240,47 @@ mod tests {
     fn native_none_for_single_slot() {
         let t = SlotTable { n: vec![3.0], sum_x: vec![1.0], mean: vec![0.5], m2: vec![0.1] };
         assert!(native_best_split(&t).is_none());
+    }
+
+    #[test]
+    fn native_skips_zero_weight_slots() {
+        // regression: a padded table used to divide sum_x/n on an empty
+        // slot, propagating a NaN threshold into the suggestion
+        let dense = SlotTable {
+            n: vec![5.0, 5.0],
+            sum_x: vec![-5.0, 5.0],
+            mean: vec![0.0, 8.0],
+            m2: vec![0.0, 0.0],
+        };
+        let padded = SlotTable {
+            n: vec![0.0, 5.0, 0.0, 5.0, 0.0],
+            sum_x: vec![0.0, -5.0, 0.0, 5.0, 0.0],
+            mean: vec![0.0, 0.0, 0.0, 8.0, 0.0],
+            m2: vec![0.0; 5],
+        };
+        let a = native_best_split(&dense).unwrap();
+        let b = native_best_split(&padded).unwrap();
+        assert!(b.threshold.is_finite(), "padding leaked a NaN: {}", b.threshold);
+        assert_eq!(b.best_idx, 1, "cut must sit on the occupied slot");
+        assert_eq!(a.threshold.to_bits(), b.threshold.to_bits());
+        assert_eq!(a.merit.to_bits(), b.merit.to_bits());
+    }
+
+    #[test]
+    fn native_none_when_fewer_than_two_occupied() {
+        let t = SlotTable {
+            n: vec![0.0, 4.0, 0.0],
+            sum_x: vec![0.0, 2.0, 0.0],
+            mean: vec![0.0, 1.5, 0.0],
+            m2: vec![0.0, 0.2, 0.0],
+        };
+        assert!(native_best_split(&t).is_none());
+        let empty = SlotTable {
+            n: vec![0.0, 0.0],
+            sum_x: vec![0.0, 0.0],
+            mean: vec![0.0, 0.0],
+            m2: vec![0.0, 0.0],
+        };
+        assert!(native_best_split(&empty).is_none());
     }
 }

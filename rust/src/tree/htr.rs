@@ -10,10 +10,13 @@
 //! The observer type is pluggable ([`ObserverFactory`]) — this is where
 //! the paper's QO vs E-BST trade-off plays out inside a real model.
 
+use std::sync::Arc;
+
 use crate::common::Rng;
 use crate::criterion::{SplitCriterion, VarianceReduction};
 use crate::eval::Regressor;
-use crate::observer::{ObserverFactory, SplitSuggestion};
+use crate::observer::{AttributeObserver, ObserverFactory, SplitSuggestion};
+use crate::runtime::backend::{SplitBackend, SplitQuery};
 
 use super::subspace::sample_subspace;
 
@@ -39,6 +42,11 @@ pub struct HoeffdingTreeRegressor {
     /// `SubspaceSize::All` it is never consumed, so plain trees remain
     /// bit-for-bit reproducible regardless of `options.seed`.
     rng: Rng,
+    /// Split-query engine (`None` = the inline per-observer loop).
+    backend: Option<Arc<dyn SplitBackend>>,
+    /// Leaves whose split attempts became due in deferred mode
+    /// ([`Self::learn_one_deferred`]), awaiting a batched flush.
+    pending: Vec<u32>,
 }
 
 impl HoeffdingTreeRegressor {
@@ -60,6 +68,7 @@ impl HoeffdingTreeRegressor {
             0,
             options.max_depth > 0,
         )));
+        let backend = options.split_backend.instantiate();
         HoeffdingTreeRegressor {
             nodes: vec![root_leaf],
             root: 0,
@@ -70,6 +79,8 @@ impl HoeffdingTreeRegressor {
             n_splits: 0,
             observer_label,
             rng,
+            backend,
+            pending: Vec::new(),
         }
     }
 
@@ -77,6 +88,19 @@ impl HoeffdingTreeRegressor {
     pub fn with_criterion(mut self, criterion: Box<dyn SplitCriterion>) -> Self {
         self.criterion = criterion;
         self
+    }
+
+    /// Replace the split-query backend (e.g. an externally loaded
+    /// [`crate::runtime::backend::XlaSplitBackend`]), overriding whatever
+    /// [`HtrOptions::split_backend`] instantiated.
+    pub fn with_split_backend(mut self, backend: Arc<dyn SplitBackend>) -> Self {
+        self.backend = Some(backend);
+        self
+    }
+
+    /// The criterion split candidates are scored under.
+    pub fn criterion(&self) -> &dyn SplitCriterion {
+        self.criterion.as_ref()
     }
 
     fn route(&self, x: &[f64]) -> u32 {
@@ -112,17 +136,60 @@ impl HoeffdingTreeRegressor {
         ratio < 1.0 - eps || eps < self.options.tie_threshold
     }
 
+    /// Evaluate a due leaf's candidates — through the configured backend
+    /// when one is set, else the inline per-observer loop — and split if
+    /// the Hoeffding bound allows.
     fn attempt_split(&mut self, leaf_idx: u32) {
+        if let Some(backend) = self.backend.clone() {
+            return self.attempt_split_through(leaf_idx, backend.as_ref());
+        }
+        let suggestions: Vec<Option<SplitSuggestion>> = {
+            let Node::Leaf(leaf) = &self.nodes[leaf_idx as usize] else { return };
+            let Some(observers) = &leaf.observers else { return };
+            observers
+                .iter()
+                .map(|ao| ao.best_split(self.criterion.as_ref()))
+                .collect()
+        };
+        self.resolve_attempt(leaf_idx, &suggestions);
+    }
+
+    /// Evaluate one leaf's candidates through an explicit backend (the
+    /// configured one, or a flush-supplied one in deferred mode — see
+    /// [`Self::learn_one_deferred`]).
+    fn attempt_split_through(&mut self, leaf_idx: u32, backend: &dyn SplitBackend) {
+        let suggestions = {
+            let Node::Leaf(leaf) = &self.nodes[leaf_idx as usize] else { return };
+            let Some(observers) = &leaf.observers else { return };
+            let queries: Vec<SplitQuery<'_>> = observers
+                .iter()
+                .map(|ao| SplitQuery {
+                    observer: ao.as_ref(),
+                    criterion: self.criterion.as_ref(),
+                })
+                .collect();
+            backend.best_splits(&queries)
+        };
+        self.resolve_attempt(leaf_idx, &suggestions);
+    }
+
+    /// Apply externally evaluated split-candidate results to a leaf:
+    /// `suggestions[i]` answers observer slot `i` (as returned by a
+    /// [`SplitBackend`] over [`Self::leaf_observers`]). Selects the best
+    /// and runner-up candidates exactly like the inline loop, then splits
+    /// if the Hoeffding bound allows. No-op when the node is no longer an
+    /// active leaf.
+    pub fn resolve_attempt(&mut self, leaf_idx: u32, suggestions: &[Option<SplitSuggestion>]) {
         let (best, second_merit, n, depth) = {
             let Node::Leaf(leaf) = &self.nodes[leaf_idx as usize] else { return };
             if !leaf.is_active() {
                 return;
             }
-            let Some(observers) = &leaf.observers else { return };
+            debug_assert_eq!(suggestions.len(), leaf.monitored.len());
             let mut best: Option<(usize, SplitSuggestion)> = None;
             let mut second = 0.0f64;
-            for (slot, ao) in observers.iter().enumerate() {
-                if let Some(s) = ao.best_split(self.criterion.as_ref()) {
+            for (slot, suggestion) in suggestions.iter().enumerate() {
+                if let Some(s) = suggestion {
                     match &best {
                         Some((_, b)) if s.merit <= b.merit => second = second.max(s.merit),
                         _ => {
@@ -131,7 +198,7 @@ impl HoeffdingTreeRegressor {
                             }
                             // observers are indexed by slot; the split acts
                             // on the slot's monitored feature
-                            best = Some((leaf.monitored[slot], s));
+                            best = Some((leaf.monitored[slot], *s));
                         }
                     }
                 }
@@ -181,6 +248,63 @@ impl HoeffdingTreeRegressor {
         self.nodes[leaf_idx as usize] =
             Node::Split { feature, threshold: suggestion.threshold, left, right };
         self.n_splits += 1;
+    }
+
+    /// Route + learn one instance; returns the leaf when a split attempt
+    /// became due (shared by the inline and deferred learn paths).
+    fn learn_routing(&mut self, x: &[f64], y: f64) -> Option<u32> {
+        debug_assert_eq!(x.len(), self.n_features);
+        let leaf_idx = self.route(x);
+        let Node::Leaf(leaf) = &mut self.nodes[leaf_idx as usize] else { unreachable!() };
+        leaf.learn(x, y, 1.0);
+        if leaf.weight_since_attempt >= self.options.grace_period as f64 {
+            leaf.weight_since_attempt = 0.0;
+            Some(leaf_idx)
+        } else {
+            None
+        }
+    }
+
+    /// Deferred-attempt mode: like [`Regressor::learn_one`], but a due
+    /// split attempt is queued on the tree instead of evaluated inline.
+    /// Ensembles use this to collect every member's due leaves and flush
+    /// them through one batched backend call per round
+    /// ([`crate::forest::batch::flush_split_attempts`]); a single tree can
+    /// flush its own queue with [`Self::flush_pending`].
+    pub fn learn_one_deferred(&mut self, x: &[f64], y: f64) {
+        if let Some(leaf_idx) = self.learn_routing(x, y) {
+            if !self.pending.contains(&leaf_idx) {
+                self.pending.push(leaf_idx);
+            }
+        }
+    }
+
+    /// Leaves queued by [`Self::learn_one_deferred`], not yet flushed.
+    pub fn pending_attempts(&self) -> &[u32] {
+        &self.pending
+    }
+
+    /// Drain the deferred-attempt queue (callers evaluate the returned
+    /// leaves via [`Self::leaf_observers`] + [`Self::resolve_attempt`]).
+    pub fn take_pending(&mut self) -> Vec<u32> {
+        std::mem::take(&mut self.pending)
+    }
+
+    /// Observer handles of a leaf, in slot order (empty when the node is
+    /// frozen or no longer a leaf).
+    pub fn leaf_observers(&self, leaf_idx: u32) -> &[Box<dyn AttributeObserver>] {
+        match &self.nodes[leaf_idx as usize] {
+            Node::Leaf(leaf) => leaf.observers.as_deref().unwrap_or(&[]),
+            _ => &[],
+        }
+    }
+
+    /// Evaluate and resolve every queued attempt through `backend` (each
+    /// leaf's features still batch into one backend call).
+    pub fn flush_pending(&mut self, backend: &dyn SplitBackend) {
+        for leaf_idx in self.take_pending() {
+            self.attempt_split_through(leaf_idx, backend);
+        }
     }
 
     pub fn n_splits(&self) -> usize {
@@ -254,19 +378,7 @@ impl Regressor for HoeffdingTreeRegressor {
     }
 
     fn learn_one(&mut self, x: &[f64], y: f64) {
-        debug_assert_eq!(x.len(), self.n_features);
-        let leaf_idx = self.route(x);
-        let attempt = {
-            let Node::Leaf(leaf) = &mut self.nodes[leaf_idx as usize] else { unreachable!() };
-            leaf.learn(x, y, 1.0);
-            if leaf.weight_since_attempt >= self.options.grace_period as f64 {
-                leaf.weight_since_attempt = 0.0;
-                true
-            } else {
-                false
-            }
-        };
-        if attempt {
+        if let Some(leaf_idx) = self.learn_routing(x, y) {
             self.attempt_split(leaf_idx);
         }
     }
@@ -509,6 +621,83 @@ mod tests {
         assert_eq!(a.n_splits(), b.n_splits());
         let probe = [0.3, -0.4, 0.9, 0.1];
         assert_eq!(a.predict(&probe).to_bits(), b.predict(&probe).to_bits());
+    }
+
+    #[test]
+    fn native_batch_backend_bit_identical_to_per_observer() {
+        use crate::runtime::backend::SplitBackendKind;
+        let build = |kind: SplitBackendKind| {
+            HoeffdingTreeRegressor::new(
+                5,
+                HtrOptions { split_backend: kind, ..Default::default() },
+                qo_factory(),
+            )
+        };
+        let mut a = build(SplitBackendKind::PerObserver);
+        let mut b = build(SplitBackendKind::NativeBatch);
+        let mut rng = Rng::new(91);
+        for _ in 0..12_000 {
+            let x: Vec<f64> = (0..5).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let y = if x[2] <= 0.1 { -2.0 } else { 3.0 * x[0] };
+            a.learn_one(&x, y);
+            b.learn_one(&x, y);
+        }
+        assert!(a.n_splits() >= 1, "tree never grew");
+        assert_eq!(a.n_splits(), b.n_splits());
+        assert_eq!(a.n_nodes(), b.n_nodes());
+        for _ in 0..100 {
+            let probe: Vec<f64> = (0..5).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            assert_eq!(a.predict(&probe).to_bits(), b.predict(&probe).to_bits());
+        }
+    }
+
+    #[test]
+    fn deferred_queue_with_immediate_flush_matches_inline() {
+        use crate::runtime::backend::NativeBatchBackend;
+        let mut inline = HoeffdingTreeRegressor::new(2, HtrOptions::default(), qo_factory());
+        let mut deferred = HoeffdingTreeRegressor::new(2, HtrOptions::default(), qo_factory());
+        let backend = NativeBatchBackend;
+        let mut rng = Rng::new(93);
+        for _ in 0..6000 {
+            let x = [rng.f64(), rng.f64()];
+            let y = if x[0] <= 0.5 { 0.0 } else { 4.0 };
+            inline.learn_one(&x, y);
+            deferred.learn_one_deferred(&x, y);
+            // flushing after every instance reproduces the inline timing
+            deferred.flush_pending(&backend);
+        }
+        assert!(deferred.pending_attempts().is_empty());
+        assert!(inline.n_splits() >= 1);
+        assert_eq!(inline.n_splits(), deferred.n_splits());
+        for _ in 0..50 {
+            let probe = [rng.f64(), rng.f64()];
+            assert_eq!(
+                inline.predict(&probe).to_bits(),
+                deferred.predict(&probe).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn deferred_queue_holds_attempts_until_flush() {
+        use crate::runtime::backend::PerObserverBackend;
+        let mut tree = HoeffdingTreeRegressor::new(
+            1,
+            HtrOptions { leaf_model: LeafModelKind::Mean, ..Default::default() },
+            qo_factory(),
+        );
+        let mut rng = Rng::new(95);
+        for _ in 0..5000 {
+            let x = rng.uniform(-1.0, 1.0);
+            tree.learn_one_deferred(&[x], if x <= 0.0 { -5.0 } else { 5.0 });
+        }
+        // attempts were queued, never evaluated: the tree must not split
+        assert_eq!(tree.n_splits(), 0);
+        assert!(!tree.pending_attempts().is_empty());
+        tree.flush_pending(&PerObserverBackend);
+        assert!(tree.pending_attempts().is_empty());
+        // one flush resolves the (single) due root attempt
+        assert!(tree.n_splits() >= 1, "flush must perform the queued attempt");
     }
 
     #[test]

@@ -10,5 +10,5 @@ pub mod subspace;
 
 pub use htr::HoeffdingTreeRegressor;
 pub use leaf::LeafModelKind;
-pub use options::HtrOptions;
+pub use options::{HtrOptions, SplitBackendKind};
 pub use subspace::SubspaceSize;

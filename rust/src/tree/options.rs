@@ -2,6 +2,7 @@
 
 pub use super::leaf::LeafModelKind;
 pub use super::subspace::SubspaceSize;
+pub use crate::runtime::backend::SplitBackendKind;
 
 /// Hyper-parameters of [`super::HoeffdingTreeRegressor`]; defaults follow
 /// FIMT-DD / river conventions.
@@ -29,6 +30,10 @@ pub struct HtrOptions {
     /// Seed of the tree's internal PRNG (subspace draws). Trees with the
     /// same options, seed and input stream are bit-for-bit identical.
     pub seed: u64,
+    /// Split-query engine ([`crate::runtime::backend`]). `NativeBatch`
+    /// (the default) is bit-identical to `PerObserver`; only the query
+    /// path — and so the wall-clock — differs.
+    pub split_backend: SplitBackendKind,
 }
 
 impl Default for HtrOptions {
@@ -43,6 +48,7 @@ impl Default for HtrOptions {
             min_branch_frac: 0.01,
             subspace: SubspaceSize::All,
             seed: 0,
+            split_backend: SplitBackendKind::default(),
         }
     }
 }

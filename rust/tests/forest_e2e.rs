@@ -13,7 +13,7 @@ use qostream::forest::{
 };
 use qostream::observer::{factory, ObserverFactory, QuantizationObserver, RadiusPolicy};
 use qostream::stream::{AbruptDrift, Friedman1, Stream};
-use qostream::tree::{HoeffdingTreeRegressor, HtrOptions};
+use qostream::tree::{HoeffdingTreeRegressor, HtrOptions, SplitBackendKind};
 
 fn qo_factory() -> Box<dyn ObserverFactory> {
     factory("QO_s2", || {
@@ -122,6 +122,49 @@ fn parallel_bagging_fit_identical_to_sequential() {
         assert_eq!(
             sequential.predict(&inst.x).to_bits(),
             parallel.predict(&inst.x).to_bits()
+        );
+    }
+}
+
+#[test]
+fn batched_split_backend_bit_identical_to_per_observer_forest() {
+    // the PR acceptance criterion at forest scale: with warnings, drifts
+    // and background trees in play, the batched split-query backend must
+    // reproduce the per-observer path bit-for-bit — same splits, same
+    // detector signals, same predictions
+    let n = 6_000;
+    let drift_at = 3_000;
+    let run = |kind: SplitBackendKind| {
+        let mut arf = ArfRegressor::new(
+            10,
+            ArfOptions {
+                n_members: 6,
+                lambda: 6.0,
+                seed: 5,
+                tree: HtrOptions { split_backend: kind, ..Default::default() },
+                ..Default::default()
+            },
+            qo_factory(),
+        );
+        let mut stream = drift_stream(drift_at);
+        for _ in 0..n {
+            let inst = stream.next_instance().unwrap();
+            arf.learn_one(&inst.x, inst.y);
+        }
+        arf
+    };
+    let reference = run(SplitBackendKind::PerObserver);
+    let batched = run(SplitBackendKind::NativeBatch);
+    assert_eq!(reference.n_splits(), batched.n_splits());
+    assert_eq!(reference.n_warnings(), batched.n_warnings());
+    assert_eq!(reference.n_drifts(), batched.n_drifts());
+    let mut probe = Friedman1::new(909, 0.0);
+    for _ in 0..200 {
+        let inst = probe.next_instance().unwrap();
+        assert_eq!(
+            reference.predict(&inst.x).to_bits(),
+            batched.predict(&inst.x).to_bits(),
+            "batched backend diverged from the per-observer path"
         );
     }
 }
