@@ -10,11 +10,17 @@
 
 use crate::common::table::{fnum, Table};
 use crate::common::timing::time_once;
-use crate::eval::{prequential, MeanRegressor, PrequentialReport, Regressor};
-use crate::forest::{ArfOptions, ArfRegressor, OnlineBaggingRegressor, SubspaceSize};
+use crate::coordinator::{fit_sharded_voting, ForestCoordinatorConfig};
+use crate::eval::{
+    prequential, MeanRegressor, PrequentialReport, RegressionMetrics, Regressor,
+};
+use crate::forest::{
+    fit_parallel, ArfOptions, ArfRegressor, OnlineBaggingRegressor, ParallelFitConfig,
+    SubspaceSize,
+};
 use crate::observer::{factory, EBst, ObserverFactory, QuantizationObserver, RadiusPolicy};
 use crate::runtime::backend::SplitBackendKind;
-use crate::stream::{AbruptDrift, Friedman1, Stream};
+use crate::stream::{AbruptDrift, Friedman1, GradualDrift, Stream};
 use crate::tree::{HoeffdingTreeRegressor, HtrOptions};
 
 use super::report::Report;
@@ -236,6 +242,199 @@ pub fn backend_comparison(cfg: &ForestBenchConfig) -> BackendComparison {
     }
 }
 
+/// Head-to-head execution schedules on the same forest: the sequential
+/// `learn_one` loop, multi-core `fit_parallel`, and the leader/shard
+/// distributed fit ([`crate::coordinator::forest`]) — three times the same
+/// seeds, so all three must end bit-identical; only the schedule, and so
+/// the wall-clock, differs. `identical` covers both the *leader-merged
+/// distributed vote* and the `fit_parallel` model against the sequential
+/// `predict`.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardedComparison {
+    pub members: usize,
+    pub instances: usize,
+    pub shards: usize,
+    /// Seconds for the sequential learn loop.
+    pub sequential_secs: f64,
+    /// Seconds for `fit_parallel` with `shards` workers.
+    pub parallel_secs: f64,
+    /// Seconds for the sharded leader/shard fit.
+    pub sharded_secs: f64,
+    /// Whether the leader-merged distributed vote AND the `fit_parallel`
+    /// model matched the sequential predictions bit-for-bit (they must).
+    pub identical: bool,
+}
+
+impl ShardedComparison {
+    fn throughput(&self, secs: f64) -> f64 {
+        crate::common::timing::throughput(self.instances, secs)
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "execution schedules on arf[{}x] over {} instances ({} shards): \
+             sequential {:.1}k inst/s, fit_parallel {:.1}k inst/s ({:.2}x), \
+             sharded {:.1}k inst/s ({:.2}x, one split round-trip per shard per tick), \
+             leader-merged vote bit-identical: {}",
+            self.members,
+            self.instances,
+            self.shards,
+            self.throughput(self.sequential_secs) / 1e3,
+            self.throughput(self.parallel_secs) / 1e3,
+            self.sequential_secs / self.parallel_secs.max(1e-12),
+            self.throughput(self.sharded_secs) / 1e3,
+            self.sequential_secs / self.sharded_secs.max(1e-12),
+            self.identical,
+        )
+    }
+}
+
+/// Run the sequential vs `fit_parallel` vs sharded-coordinator comparison
+/// (the distributed-forest PR's benchmark scenario).
+pub fn sharded_comparison(cfg: &ForestBenchConfig, shards: usize) -> ShardedComparison {
+    let opts = arf_options(cfg);
+
+    let mut sequential = ArfRegressor::new(10, opts, qo_factory());
+    let mut stream = cfg.stream();
+    let (sequential_secs, _) = time_once(|| {
+        for _ in 0..cfg.instances {
+            let Some(inst) = stream.next_instance() else { break };
+            sequential.learn_one(&inst.x, inst.y);
+        }
+    });
+
+    let mut parallel = ArfRegressor::new(10, opts, qo_factory());
+    let parallel_report = fit_parallel(
+        &mut parallel,
+        &mut *cfg.stream(),
+        cfg.instances,
+        ParallelFitConfig { n_workers: shards, ..Default::default() },
+    );
+
+    let mut sharded = ArfRegressor::new(10, opts, qo_factory());
+    let mut probe = Friedman1::new(cfg.seed ^ 0xA11, 0.0);
+    let probes: Vec<Vec<f64>> =
+        (0..100).map(|_| probe.next_instance().unwrap().x).collect();
+    let (sharded_report, merged) = fit_sharded_voting(
+        &mut sharded,
+        &mut *cfg.stream(),
+        cfg.instances,
+        &probes,
+        ForestCoordinatorConfig { n_shards: shards, ..Default::default() },
+    );
+
+    // all three schedules must agree: the leader-merged distributed vote
+    // AND the fit_parallel model against the sequential predictions
+    let identical = probes.iter().zip(&merged).all(|(x, &v)| {
+        let want = sequential.predict(x).to_bits();
+        v.to_bits() == want && parallel.predict(x).to_bits() == want
+    });
+    ShardedComparison {
+        members: sequential.n_members(),
+        instances: cfg.instances,
+        shards,
+        sequential_secs,
+        parallel_secs: parallel_report.seconds,
+        sharded_secs: sharded_report.seconds,
+        identical,
+    }
+}
+
+/// Gradual/recurring-drift recovery scenario: a [`GradualDrift`] sigmoid
+/// hand-over between the Friedman #1 concept and its swapped variant, with
+/// windowed RMSE before, during and after the transition — the open
+/// ROADMAP item asserting ARF actually *recovers* (post-drift RMSE back
+/// within a factor of the pre-drift RMSE) instead of merely degrading
+/// gracefully.
+#[derive(Clone, Copy, Debug)]
+pub struct DriftRecovery {
+    pub instances: usize,
+    /// Sigmoid center of the hand-over.
+    pub position: usize,
+    /// Sigmoid width of the hand-over.
+    pub width: usize,
+    /// Instances per measurement window.
+    pub window: usize,
+    /// RMSE over the window ending where the hand-over effectively begins.
+    /// The sigmoid is centered at `position`, so the clean pre-drift
+    /// window must end at `position - width` (p_new ≈ 2% there), not at
+    /// `position` (p_new = 50%).
+    pub pre_rmse: f64,
+    /// RMSE over the hand-over window (mixture of both concepts).
+    pub during_rmse: f64,
+    /// RMSE over the final window, after re-convergence.
+    pub post_rmse: f64,
+    pub warnings: usize,
+    pub drifts: usize,
+}
+
+impl DriftRecovery {
+    /// post / pre RMSE: ~1 means full recovery on the new concept.
+    pub fn recovery_factor(&self) -> f64 {
+        self.post_rmse / self.pre_rmse
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "gradual drift (center {}, width {}): RMSE pre {:.4} -> during {:.4} -> \
+             post {:.4} (recovery factor {:.2}; {} warnings, {} drifts)",
+            self.position,
+            self.width,
+            self.pre_rmse,
+            self.during_rmse,
+            self.post_rmse,
+            self.recovery_factor(),
+            self.warnings,
+            self.drifts,
+        )
+    }
+}
+
+/// Run the gradual-drift recovery scenario on an ARF built from `cfg`.
+pub fn gradual_drift_recovery(cfg: &ForestBenchConfig) -> DriftRecovery {
+    let position = cfg.instances / 2;
+    let width = (cfg.instances / 10).max(1);
+    let window = (cfg.instances / 8).max(1);
+    let mut stream = GradualDrift::new(
+        Box::new(Friedman1::new(cfg.seed, 1.0)),
+        Box::new(Friedman1::swapped(cfg.seed.wrapping_add(1), 1.0)),
+        position,
+        width,
+        cfg.seed ^ 0xD81F,
+    );
+    let mut arf = ArfRegressor::new(10, arf_options(cfg), qo_factory());
+    let mut pre = RegressionMetrics::new();
+    let mut during = RegressionMetrics::new();
+    let mut post = RegressionMetrics::new();
+    // `position` is the sigmoid CENTER (p_new = 50% there), so instances
+    // near it are already drift-contaminated; the pre-drift baseline
+    // window ends at `position - width`, where p_new ≈ 2%.
+    let drift_start = position.saturating_sub(width);
+    for i in 0..cfg.instances {
+        let Some(inst) = stream.next_instance() else { break };
+        let pred = arf.predict(&inst.x);
+        if i >= drift_start.saturating_sub(window) && i < drift_start {
+            pre.update(inst.y, pred);
+        } else if i >= position && i < position + width {
+            during.update(inst.y, pred);
+        } else if i + window >= cfg.instances {
+            post.update(inst.y, pred);
+        }
+        arf.learn_one(&inst.x, inst.y);
+    }
+    DriftRecovery {
+        instances: cfg.instances,
+        position,
+        width,
+        window,
+        pre_rmse: pre.rmse(),
+        during_rmse: during.rmse(),
+        post_rmse: post.rmse(),
+        warnings: arf.n_warnings(),
+        drifts: arf.n_drifts(),
+    }
+}
+
 /// Render + persist under `results/forest/`.
 pub fn generate(cfg: &ForestBenchConfig) -> anyhow::Result<String> {
     let rows = run(cfg);
@@ -256,9 +455,13 @@ pub fn generate(cfg: &ForestBenchConfig) -> anyhow::Result<String> {
         ]);
     }
     let comparison = backend_comparison(cfg);
+    // the sharded execution-schedule comparison is CLI-gated (`qostream
+    // forest --shards N`) — running it here too would train three more
+    // full forests per bench run and duplicate the CLI path's work
+    let recovery = gradual_drift_recovery(cfg);
     let rendered = format!(
         "Forest benchmark ({} instances, {} members, lambda={}, subspace={}, drift@{}, \
-         split-backend={})\n{}\n{}\n",
+         split-backend={})\n{}\n{}\n{}\n",
         cfg.instances,
         cfg.members,
         cfg.lambda,
@@ -267,6 +470,7 @@ pub fn generate(cfg: &ForestBenchConfig) -> anyhow::Result<String> {
         cfg.split_backend.label(),
         table.render(),
         comparison.render(),
+        recovery.render(),
     );
     let report = Report::create("forest")?;
     report.write_table("forest", &table)?;
@@ -326,6 +530,49 @@ mod tests {
         );
         assert!(cmp.per_observer_secs > 0.0 && cmp.batched_secs > 0.0);
         assert!(cmp.render().contains("bit-identical: true"));
+    }
+
+    #[test]
+    fn sharded_comparison_is_bit_identical_and_timed() {
+        let cfg = ForestBenchConfig { instances: 2500, ..small_cfg() };
+        let cmp = sharded_comparison(&cfg, 3);
+        assert_eq!(cmp.shards, 3);
+        assert_eq!(cmp.members, cfg.members);
+        assert!(
+            cmp.identical,
+            "the leader-merged distributed vote diverged from the sequential forest"
+        );
+        assert!(cmp.sequential_secs > 0.0 && cmp.parallel_secs > 0.0 && cmp.sharded_secs > 0.0);
+        assert!(cmp.render().contains("bit-identical: true"));
+    }
+
+    #[test]
+    fn arf_recovers_from_gradual_drift() {
+        // the open ROADMAP item: after the sigmoid hand-over to the
+        // swapped Friedman concept completes, the forest's windowed RMSE
+        // must re-converge to within a factor of its pre-drift RMSE
+        let cfg = ForestBenchConfig {
+            instances: 12_000,
+            members: 5,
+            lambda: 6.0,
+            seed: 1,
+            ..Default::default()
+        };
+        let rec = gradual_drift_recovery(&cfg);
+        assert_eq!(rec.position, 6_000);
+        assert!(rec.pre_rmse > 0.0 && rec.pre_rmse.is_finite());
+        assert!(rec.post_rmse.is_finite());
+        assert!(
+            rec.recovery_factor() < 2.0,
+            "no recovery: pre {} -> post {} (factor {:.2})",
+            rec.pre_rmse,
+            rec.post_rmse,
+            rec.recovery_factor()
+        );
+        assert!(
+            rec.warnings + rec.drifts >= 1,
+            "the adaptation machinery never engaged on the gradual drift"
+        );
     }
 
     #[test]

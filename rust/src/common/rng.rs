@@ -128,9 +128,36 @@ impl Rng {
     /// Poisson(λ) by Knuth's inversion: multiply uniforms until the
     /// product drops below e^{-λ}. Exact and O(λ) per draw — fine for the
     /// λ ≤ 10 used by online bagging (Oza & Russell 2001).
+    ///
+    /// Knuth's limit `e^{-λ}` underflows to 0.0 near λ ≈ 745, after which
+    /// the loop only terminates once the uniform product itself underflows
+    /// and returns a garbage count. Above [`Self::POISSON_SPLIT_THRESHOLD`]
+    /// the draw is split via Poisson(λ) = Poisson(λ/2) + Poisson(λ/2)
+    /// (exact: sums of independent Poissons are Poisson), keeping every
+    /// inversion far from the underflow regime; above
+    /// [`Self::POISSON_NORMAL_THRESHOLD`] (where the split would need
+    /// λ/500 inversions, and where λ = ∞ would recurse without bound) the
+    /// Normal(λ, λ) approximation takes over, saturating at `u64::MAX`.
+    /// λ at or below the split threshold spends exactly the same random
+    /// numbers as before, so seeded streams using bagging-scale λ are
+    /// unchanged. NaN, zero and negative rates draw 0 events.
     pub fn poisson(&mut self, lambda: f64) -> u64 {
-        if lambda <= 0.0 {
+        if lambda.is_nan() || lambda <= 0.0 {
             return 0;
+        }
+        if lambda > Self::POISSON_NORMAL_THRESHOLD {
+            // Beyond any bagging-scale rate the split trick stops being
+            // affordable (λ/500 inversions per draw, each O(λ) work), and
+            // λ = ∞ would recurse until the stack dies. Poisson(λ) is
+            // asymptotically Normal(λ, λ) with relative error O(λ^{-1/2})
+            // < 0.1% here; the cast saturates an overflowing draw to
+            // u64::MAX (and ∞ − ∞ = NaN maps there explicitly).
+            let draw = self.normal(lambda, lambda.sqrt()).round();
+            return if draw.is_nan() { u64::MAX } else { draw.max(0.0) as u64 };
+        }
+        if lambda > Self::POISSON_SPLIT_THRESHOLD {
+            let half = lambda * 0.5;
+            return self.poisson(half) + self.poisson(half);
         }
         let limit = (-lambda).exp();
         let mut k = 0u64;
@@ -143,6 +170,17 @@ impl Rng {
             k += 1;
         }
     }
+
+    /// λ above which [`Self::poisson`] splits the draw; e^{-500} ≈ 7e-218
+    /// is still comfortably representable as a normal f64. The recursion
+    /// depth is bounded by [`Self::POISSON_NORMAL_THRESHOLD`]:
+    /// log2(1e6 / 500) ≈ 11 levels at most.
+    pub const POISSON_SPLIT_THRESHOLD: f64 = 500.0;
+
+    /// λ above which [`Self::poisson`] switches to the Normal(λ, λ)
+    /// approximation (also the guard that keeps non-finite or absurd λ
+    /// from recursing or looping forever).
+    pub const POISSON_NORMAL_THRESHOLD: f64 = 1e6;
 
     /// Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
@@ -266,10 +304,47 @@ mod tests {
     }
 
     #[test]
+    fn poisson_large_lambda_moments_survive_the_underflow_regime() {
+        // λ = 1000: e^{-λ} underflows to 0.0, so unsplit Knuth inversion
+        // would loop until the product underflows and return garbage; the
+        // split recursion must keep mean ≈ var ≈ λ
+        let mut r = Rng::new(31);
+        let lambda = 1000.0;
+        let n = 20_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = r.poisson(lambda) as f64;
+            s += v;
+            s2 += v * v;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!((mean - lambda).abs() < 0.02 * lambda, "mean={mean}");
+        assert!((var - lambda).abs() < 0.1 * lambda, "var={var}");
+    }
+
+    #[test]
     fn poisson_zero_lambda_is_zero() {
         let mut r = Rng::new(22);
         assert_eq!(r.poisson(0.0), 0);
         assert_eq!(r.poisson(-1.0), 0);
+        assert_eq!(r.poisson(f64::NAN), 0);
+    }
+
+    #[test]
+    fn poisson_degenerate_lambda_terminates() {
+        // λ = ∞ used to recurse until the stack died; it must saturate,
+        // and absurd finite rates must come back ≈ λ without the split
+        // recursion ever being asked for λ/500 inversions
+        let mut r = Rng::new(27);
+        assert_eq!(r.poisson(f64::INFINITY), u64::MAX);
+        for _ in 0..100 {
+            let lambda = 1e12;
+            let v = r.poisson(lambda) as f64;
+            // 5σ band around λ (σ = sqrt(λ) = 1e6)
+            assert!((v - lambda).abs() < 5e6, "draw {v} too far from {lambda}");
+        }
+        assert!(r.poisson(1e300) > 0, "huge finite rate must still terminate");
     }
 
     #[test]

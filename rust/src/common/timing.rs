@@ -59,6 +59,16 @@ pub fn time_once<T>(f: impl FnOnce() -> T) -> (f64, T) {
     (start.elapsed().as_secs_f64(), out)
 }
 
+/// Items-per-second throughput, with the zero-duration convention shared
+/// by every fit report (`∞` rather than NaN/panic on a 0-second clock).
+pub fn throughput(items: usize, seconds: f64) -> f64 {
+    if seconds > 0.0 {
+        items as f64 / seconds
+    } else {
+        f64::INFINITY
+    }
+}
+
 /// Criterion-style measurement: `warmup` unrecorded runs, then `iters`
 /// recorded runs of `f`. The closure result is returned through a black-box
 /// sink so the optimizer cannot delete the work.

@@ -1,0 +1,534 @@
+//! Sharded distributed forest: *member*-sharding over the leader/shard
+//! bounded-channel machinery.
+//!
+//! [`crate::coordinator::leader`] shards the **data**: instances scatter
+//! across workers and the per-feature observers merge losslessly (Chan
+//! formulas). This module shards the **model**: ensemble members spread
+//! across worker shards, every shard sees the *whole* stream (the leader
+//! broadcasts instance batches over bounded `sync_channel`s — a full
+//! channel blocks the leader, so a slow shard throttles ingestion instead
+//! of ballooning memory), and each shard trains only its own members.
+//!
+//! The shard's natural unit of work is its members' batched split flush
+//! ([`crate::forest::batch::flush_split_attempts`]): members train in
+//! deferred-attempt mode and every due leaf across the shard resolves
+//! through **one** [`SplitBackend`] round-trip per tick — the
+//! one-call-per-tick protocol the ROADMAP's distributed-forest item asks
+//! for, and the schedule a real PJRT backend amortizes its dispatch over.
+//!
+//! At vote time the leader broadcasts the probe batch; every shard ships
+//! its members' votes back and the leader folds them **in global member
+//! order** through [`fold_votes`]. Shipping pre-reduced per-shard Σs would
+//! reassociate an IEEE sum, so the per-member votes travel instead and the
+//! leader replays the exact sequential fold — which is why the merged
+//! distributed vote, like the trained members themselves, is **bit-for-bit
+//! identical** to the sequential ensemble (property-tested below across
+//! shard counts, batch sizes and partitioners, and end-to-end in
+//! `rust/tests/forest_e2e.rs`).
+//!
+//! Anything implementing [`ParallelEnsemble`] shards for free: ARF and
+//! online bagging both do.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::forest::parallel::{broadcast_batches, ParallelEnsemble};
+use crate::forest::vote::fold_votes;
+use crate::runtime::backend::SplitBackend;
+use crate::stream::{Instance, Stream};
+
+use super::shard::Partitioner;
+
+/// Tuning knobs of the sharded forest fit.
+#[derive(Clone, Copy, Debug)]
+pub struct ForestCoordinatorConfig {
+    /// Worker shards (clamped to the member count).
+    pub n_shards: usize,
+    /// Instances per broadcast message.
+    pub batch_size: usize,
+    /// Bounded channel depth in batches (backpressure window).
+    pub channel_capacity: usize,
+    /// Member → shard assignment policy. Any policy is bit-exact — member
+    /// state never depends on which shard trains it — so the choice only
+    /// affects load balance.
+    pub partitioner: Partitioner,
+}
+
+impl Default for ForestCoordinatorConfig {
+    fn default() -> ForestCoordinatorConfig {
+        ForestCoordinatorConfig {
+            n_shards: 4,
+            batch_size: 256,
+            channel_capacity: 8,
+            partitioner: Partitioner::RoundRobin,
+        }
+    }
+}
+
+/// What the leader sends to a worker shard.
+enum Request {
+    /// Train every member of the shard on the batch — one split-backend
+    /// round-trip per tick across the shard's members.
+    Train(Arc<Vec<Instance>>),
+    /// Vote on probe points; the shard replies with per-member votes.
+    Vote(Arc<Vec<Vec<f64>>>),
+}
+
+/// A shard's per-member votes on one probe batch. Votes carry global
+/// member indices so the leader can fold them in member order (see the
+/// module docs for why pre-reduced Σs would break bit-equality).
+struct VoteReply {
+    /// Global member indices, in the shard's local order.
+    members: Vec<usize>,
+    /// Per-member trained flags, parallel to `members`.
+    trained: Vec<bool>,
+    /// `preds[local_member][probe]`, parallel to `members`.
+    preds: Vec<Vec<f64>>,
+}
+
+/// Outcome of a sharded forest fit.
+#[derive(Clone, Debug)]
+pub struct ShardedFitReport {
+    pub instances: usize,
+    pub seconds: f64,
+    /// Shards actually spawned (hash partitioners may leave some empty).
+    pub n_shards: usize,
+    /// Members owned by each spawned shard.
+    pub members_per_shard: Vec<usize>,
+    /// Instances replayed by each shard (each sees the full stream).
+    pub instances_per_shard: Vec<usize>,
+    /// `SplitBackend::best_splits` round-trips per shard — at most one per
+    /// tick, exactly one for every tick where a member had a due leaf.
+    pub backend_calls_per_shard: Vec<usize>,
+    /// Members with ≥ 1 trained instance per shard at the end of the run.
+    pub trained_per_shard: Vec<usize>,
+}
+
+impl ShardedFitReport {
+    pub fn throughput(&self) -> f64 {
+        crate::common::timing::throughput(self.instances, self.seconds)
+    }
+}
+
+/// Train `ensemble` on up to `max_instances` of `stream` with members
+/// sharded across worker threads. Bit-for-bit identical to the sequential
+/// learn loop (see module docs).
+pub fn fit_sharded<E: ParallelEnsemble>(
+    ensemble: &mut E,
+    stream: &mut dyn Stream,
+    max_instances: usize,
+    config: ForestCoordinatorConfig,
+) -> ShardedFitReport {
+    fit_sharded_voting(ensemble, stream, max_instances, &[], config).0
+}
+
+/// [`fit_sharded`], then answer `probes` through the distributed vote
+/// protocol: shards compute their members' predictions in parallel and the
+/// leader merges them into one prediction per probe — bit-for-bit what the
+/// sequential ensemble's `predict` returns on the same model state.
+pub fn fit_sharded_voting<E: ParallelEnsemble>(
+    ensemble: &mut E,
+    stream: &mut dyn Stream,
+    max_instances: usize,
+    probes: &[Vec<f64>],
+    config: ForestCoordinatorConfig,
+) -> (ShardedFitReport, Vec<f64>) {
+    let backend = ensemble.split_backend();
+    let members = ensemble.members_mut();
+    let n_members = members.len();
+    assert!(n_members >= 1, "cannot fit an empty ensemble");
+    assert!(config.n_shards >= 1, "need at least one shard");
+    let n_shards = config.n_shards.min(n_members);
+    let batch_size = config.batch_size.max(1);
+    let start = Instant::now();
+
+    // member -> shard assignment; spawn only populated shards
+    let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); n_shards];
+    for (i, shard) in
+        config.partitioner.assignment(n_members, n_shards).into_iter().enumerate()
+    {
+        assigned[shard].push(i);
+    }
+    let groups: Vec<Vec<usize>> =
+        assigned.into_iter().filter(|group| !group.is_empty()).collect();
+    let members_per_shard: Vec<usize> = groups.iter().map(Vec::len).collect();
+
+    // disjoint &mut member handles, extracted by global index
+    let mut slots: Vec<Option<&mut E::Member>> = members.iter_mut().map(Some).collect();
+
+    let (sent, per_shard, backend_calls, trained, merged) =
+        std::thread::scope(|scope| {
+            let (reply_tx, reply_rx) = mpsc::channel::<VoteReply>();
+            let mut senders: Vec<mpsc::SyncSender<Request>> = Vec::new();
+            let mut handles = Vec::new();
+            for idxs in groups {
+                let (tx, rx) =
+                    mpsc::sync_channel::<Request>(config.channel_capacity.max(1));
+                senders.push(tx);
+                let reply_tx = reply_tx.clone();
+                let backend: Arc<dyn SplitBackend> = backend.clone();
+                let mut mems: Vec<&mut E::Member> =
+                    idxs.iter().map(|&i| slots[i].take().expect("member assigned twice")).collect();
+                handles.push(scope.spawn(move || {
+                    let mut count = 0usize;
+                    let mut calls = 0usize;
+                    while let Ok(request) = rx.recv() {
+                        match request {
+                            Request::Train(batch) => {
+                                for inst in batch.iter() {
+                                    for m in mems.iter_mut() {
+                                        E::train_member(m, &inst.x, inst.y);
+                                    }
+                                    // the shard's unit of work: ONE backend
+                                    // round-trip resolves every member's due
+                                    // leaves this tick
+                                    if E::flush_members(&mut mems, backend.as_ref()) {
+                                        calls += 1;
+                                    }
+                                }
+                                count += batch.len();
+                            }
+                            Request::Vote(probes) => {
+                                let trained: Vec<bool> =
+                                    mems.iter().map(|m| E::member_trained(m)).collect();
+                                let preds: Vec<Vec<f64>> = mems
+                                    .iter()
+                                    .map(|m| {
+                                        probes
+                                            .iter()
+                                            .map(|p| E::member_predict(m, p))
+                                            .collect()
+                                    })
+                                    .collect();
+                                reply_tx
+                                    .send(VoteReply {
+                                        members: idxs.clone(),
+                                        trained,
+                                        preds,
+                                    })
+                                    .expect("leader hung up mid-vote");
+                            }
+                        }
+                    }
+                    let trained =
+                        mems.iter().map(|m| E::member_trained(m)).filter(|&t| t).count();
+                    (count, calls, trained)
+                }));
+            }
+            drop(reply_tx); // the leader only receives
+
+            // leader loop: batch and broadcast (blocking on full channels),
+            // shared with `fit_parallel`
+            let sent = broadcast_batches(
+                stream,
+                max_instances,
+                batch_size,
+                &senders,
+                Request::Train,
+            );
+
+            // distributed vote: collect every shard's member votes, then
+            // fold them in global member order (bit-for-bit `predict`)
+            let mut merged = Vec::with_capacity(probes.len());
+            if !probes.is_empty() {
+                let shared = Arc::new(probes.to_vec());
+                for tx in &senders {
+                    tx.send(Request::Vote(shared.clone())).expect("shard died");
+                }
+                let mut grid_preds: Vec<Vec<f64>> = vec![Vec::new(); n_members];
+                let mut grid_trained: Vec<bool> = vec![false; n_members];
+                for _ in 0..senders.len() {
+                    let reply = reply_rx.recv().expect("shard died before voting");
+                    for ((global, member_trained), member_preds) in reply
+                        .members
+                        .into_iter()
+                        .zip(reply.trained)
+                        .zip(reply.preds)
+                    {
+                        grid_trained[global] = member_trained;
+                        grid_preds[global] = member_preds;
+                    }
+                }
+                merged.extend((0..probes.len()).map(|p| {
+                    fold_votes((0..n_members).map(|m| (grid_preds[m][p], grid_trained[m])))
+                }));
+            }
+
+            drop(senders); // close channels: shards drain and return
+            let mut per_shard = Vec::with_capacity(handles.len());
+            let mut backend_calls = Vec::with_capacity(handles.len());
+            let mut trained = Vec::with_capacity(handles.len());
+            for handle in handles {
+                let (count, calls, shard_trained) =
+                    handle.join().expect("shard panicked");
+                per_shard.push(count);
+                backend_calls.push(calls);
+                trained.push(shard_trained);
+            }
+            (sent, per_shard, backend_calls, trained, merged)
+        });
+
+    (
+        ShardedFitReport {
+            instances: sent,
+            seconds: start.elapsed().as_secs_f64(),
+            n_shards: members_per_shard.len(),
+            members_per_shard,
+            instances_per_shard: per_shard,
+            backend_calls_per_shard: backend_calls,
+            trained_per_shard: trained,
+        },
+        merged,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    use super::*;
+    use crate::common::proptest::check;
+    use crate::eval::Regressor;
+    use crate::forest::{ArfOptions, ArfRegressor, OnlineBaggingRegressor};
+    use crate::observer::{
+        factory, ObserverFactory, QuantizationObserver, RadiusPolicy, SplitSuggestion,
+    };
+    use crate::runtime::backend::{NativeBatchBackend, SplitQuery};
+    use crate::stream::Friedman1;
+    use crate::tree::HtrOptions;
+
+    fn qo_factory() -> Box<dyn ObserverFactory> {
+        factory("QO_s2", || {
+            Box::new(QuantizationObserver::new(RadiusPolicy::std_fraction(2.0)))
+        })
+    }
+
+    fn arf(members: usize, seed: u64) -> ArfRegressor {
+        ArfRegressor::new(
+            10,
+            ArfOptions { n_members: members, lambda: 3.0, seed, ..Default::default() },
+            qo_factory(),
+        )
+    }
+
+    fn probe_points(n: usize) -> Vec<Vec<f64>> {
+        let mut probe = Friedman1::new(0xBEEF, 0.0);
+        (0..n).map(|_| probe.next_instance().unwrap().x).collect()
+    }
+
+    /// Backend wrapper counting `best_splits` round-trips.
+    struct CountingBackend {
+        inner: NativeBatchBackend,
+        calls: AtomicUsize,
+    }
+
+    impl CountingBackend {
+        fn new() -> CountingBackend {
+            CountingBackend { inner: NativeBatchBackend, calls: AtomicUsize::new(0) }
+        }
+    }
+
+    impl SplitBackend for CountingBackend {
+        fn name(&self) -> &'static str {
+            "counting"
+        }
+
+        fn best_splits(&self, queries: &[SplitQuery<'_>]) -> Vec<Option<SplitSuggestion>> {
+            self.calls.fetch_add(1, Ordering::Relaxed);
+            self.inner.best_splits(queries)
+        }
+    }
+
+    fn train_sequential(model: &mut dyn Regressor, seed: u64, n: usize) {
+        let mut stream = Friedman1::new(seed, 1.0);
+        for _ in 0..n {
+            let inst = stream.next_instance().unwrap();
+            model.learn_one(&inst.x, inst.y);
+        }
+    }
+
+    #[test]
+    fn sharded_arf_bit_identical_to_sequential() {
+        let n = 4000;
+        let mut sequential = arf(5, 7);
+        train_sequential(&mut sequential, 11, n);
+
+        let mut sharded = arf(5, 7);
+        let probes = probe_points(50);
+        let (report, merged) = fit_sharded_voting(
+            &mut sharded,
+            &mut Friedman1::new(11, 1.0),
+            n,
+            &probes,
+            ForestCoordinatorConfig { n_shards: 3, batch_size: 64, ..Default::default() },
+        );
+        assert_eq!(report.instances, n);
+        assert_eq!(report.n_shards, 3);
+        assert_eq!(report.members_per_shard.iter().sum::<usize>(), 5);
+        assert!(report.instances_per_shard.iter().all(|&c| c == n));
+        assert_eq!(sequential.n_splits(), sharded.n_splits());
+        assert_eq!(sequential.n_warnings(), sharded.n_warnings());
+        assert_eq!(sequential.n_drifts(), sharded.n_drifts());
+
+        // the leader-merged distributed vote IS the sequential predict
+        for (x, &v) in probes.iter().zip(&merged) {
+            assert_eq!(
+                v.to_bits(),
+                sequential.predict(x).to_bits(),
+                "merged vote diverged at {x:?}"
+            );
+        }
+        // and the reassembled sharded ensemble agrees member-for-member
+        for x in &probes {
+            assert_eq!(sharded.predict(x).to_bits(), sequential.predict(x).to_bits());
+        }
+    }
+
+    #[test]
+    fn one_backend_round_trip_per_shard_per_tick() {
+        let n = 3000;
+        let counter = Arc::new(CountingBackend::new());
+        let shared: Arc<dyn SplitBackend> = counter.clone();
+        let mut sharded = arf(4, 3).with_split_backend(shared);
+        let report = fit_sharded(
+            &mut sharded,
+            &mut Friedman1::new(5, 1.0),
+            n,
+            ForestCoordinatorConfig { n_shards: 2, batch_size: 32, ..Default::default() },
+        );
+        assert_eq!(report.n_shards, 2);
+        // every round-trip the shards made went through the shared backend
+        let total: usize = report.backend_calls_per_shard.iter().sum();
+        assert_eq!(total, counter.calls.load(Ordering::Relaxed));
+        // at most one round-trip per tick, and training actually queried
+        for &calls in &report.backend_calls_per_shard {
+            assert!(calls >= 1, "a shard never flushed: {report:?}");
+            assert!(calls <= n, "more than one backend call per tick: {report:?}");
+        }
+        assert!(sharded.n_splits() >= 1, "forest never grew");
+    }
+
+    #[test]
+    fn sharded_bagging_bit_identical_to_sequential() {
+        let n = 3000;
+        let mut sequential =
+            OnlineBaggingRegressor::new(10, 6, 2.0, HtrOptions::default(), qo_factory(), 23);
+        train_sequential(&mut sequential, 29, n);
+
+        let mut sharded =
+            OnlineBaggingRegressor::new(10, 6, 2.0, HtrOptions::default(), qo_factory(), 23);
+        let probes = probe_points(40);
+        let (report, merged) = fit_sharded_voting(
+            &mut sharded,
+            &mut Friedman1::new(29, 1.0),
+            n,
+            &probes,
+            ForestCoordinatorConfig {
+                n_shards: 4,
+                batch_size: 17,
+                channel_capacity: 2,
+                partitioner: Partitioner::IndexHash,
+            },
+        );
+        assert!((1..=4).contains(&report.n_shards));
+        assert_eq!(report.members_per_shard.iter().sum::<usize>(), 6);
+        for (x, &v) in probes.iter().zip(&merged) {
+            assert_eq!(v.to_bits(), sequential.predict(x).to_bits());
+        }
+    }
+
+    #[test]
+    fn single_shard_and_oversubscription_work() {
+        // 1 shard degenerates to the sequential schedule; 16 shards clamp
+        // to the member count
+        for shards in [1usize, 16] {
+            let mut sequential = arf(3, 13);
+            train_sequential(&mut sequential, 17, 1500);
+            let mut sharded = arf(3, 13);
+            let probes = probe_points(20);
+            let (report, merged) = fit_sharded_voting(
+                &mut sharded,
+                &mut Friedman1::new(17, 1.0),
+                1500,
+                &probes,
+                ForestCoordinatorConfig { n_shards: shards, ..Default::default() },
+            );
+            assert!(report.n_shards <= 3);
+            for (x, &v) in probes.iter().zip(&merged) {
+                assert_eq!(v.to_bits(), sequential.predict(x).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_channel_capacity_exercises_backpressure() {
+        let mut sharded = arf(4, 19);
+        let report = fit_sharded(
+            &mut sharded,
+            &mut Friedman1::new(2, 1.0),
+            2000,
+            ForestCoordinatorConfig {
+                n_shards: 2,
+                batch_size: 8,
+                channel_capacity: 1,
+                ..Default::default()
+            },
+        );
+        assert_eq!(report.instances, 2000);
+    }
+
+    #[test]
+    fn prop_sharded_forest_identical_across_configs() {
+        // the acceptance property: across shard counts, batch sizes and
+        // partitioners, the sharded forest (trained members AND the
+        // leader-merged distributed vote) is bit-for-bit the sequential
+        // ensemble
+        check("sharded-forest-vs-sequential", 0x5A4D, 6, |rng| {
+            let n = 800 + rng.below(1200) as usize;
+            let members = 2 + rng.below(5) as usize;
+            let seed = rng.next_u64();
+            let stream_seed = rng.next_u64();
+            let config = ForestCoordinatorConfig {
+                n_shards: 1 + rng.below(6) as usize,
+                batch_size: 1 + rng.below(96) as usize,
+                channel_capacity: 1 + rng.below(8) as usize,
+                partitioner: if rng.bool(0.5) {
+                    Partitioner::RoundRobin
+                } else {
+                    Partitioner::IndexHash
+                },
+            };
+
+            let mut sequential = arf(members, seed);
+            train_sequential(&mut sequential, stream_seed, n);
+
+            let mut sharded = arf(members, seed);
+            let probes = probe_points(10);
+            let (report, merged) = fit_sharded_voting(
+                &mut sharded,
+                &mut Friedman1::new(stream_seed, 1.0),
+                n,
+                &probes,
+                config,
+            );
+            if report.instances != n {
+                return Err(format!("trained {} of {n}", report.instances));
+            }
+            if sequential.n_splits() != sharded.n_splits() {
+                return Err(format!(
+                    "splits {} vs {}",
+                    sharded.n_splits(),
+                    sequential.n_splits()
+                ));
+            }
+            for (x, &v) in probes.iter().zip(&merged) {
+                let want = sequential.predict(x);
+                if v.to_bits() != want.to_bits() {
+                    return Err(format!("vote {v} != sequential {want} ({config:?})"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,4 +1,7 @@
-//! Leader/worker runtime for distributed attribute observation.
+//! Leader/worker runtime for distributed attribute observation — the
+//! *observer-sharding* (data-parallel) half of [`crate::coordinator`]; the
+//! member-sharding (model-parallel) forest runtime lives in
+//! [`super::forest`].
 //!
 //! The leader owns the stream, batches instances, and pushes batches to
 //! worker shards over **bounded** channels (`std::sync::mpsc::sync_channel`)
@@ -221,8 +224,10 @@ mod tests {
 
     #[test]
     fn single_shard_works() {
-        let coordinator =
-            ShardedObserverCoordinator::new(3, CoordinatorConfig { n_shards: 1, ..Default::default() });
+        let coordinator = ShardedObserverCoordinator::new(
+            3,
+            CoordinatorConfig { n_shards: 1, ..Default::default() },
+        );
         let report = coordinator.run(&mut test_stream(5), 1000);
         assert_eq!(report.per_shard, vec![1000]);
         assert!(report.best_splits(&VarianceReduction)[0].is_some());

@@ -1,20 +1,40 @@
-//! Sharded streaming coordinator.
+//! Sharded streaming coordinators.
 //!
 //! The paper's Sec. 3 exists to make target statistics *mergeable and
 //! subtractable* (Chan et al. parallel formulas); the QO hash inherits
-//! that property slot-by-slot. This module exploits it: a leader thread
-//! fans the stream out to worker shards over bounded channels
-//! (backpressure), each shard maintains its own per-feature Quantization
-//! Observers, and at query time the leader merges the partial hashes
-//! losslessly — the merged observer is *bit-for-bit equivalent in
-//! expectation* (and numerically equivalent to ~1e-12) to one observer
-//! having seen the whole stream.
+//! that property slot-by-slot. Both runtimes in this module exploit it,
+//! but they shard along different axes:
 //!
-//! This is the L3 "distributed attribute observation" runtime: the same
-//! pattern scales QO-backed trees across cores or machines.
+//! * **Observer sharding** ([`leader`], [`shard`]) is *data-parallel*: the
+//!   leader scatters instances across worker shards, each shard maintains
+//!   its own per-feature Quantization Observers over its slice of the
+//!   stream, and at query time the leader merges the partial hashes
+//!   losslessly — the merged observer is numerically equivalent (~1e-12)
+//!   to one observer having seen the whole stream. Correct for any
+//!   partition of the *instances* because the statistics merge exactly.
+//!
+//! * **Member sharding** ([`forest`]) is *model-parallel*: the leader
+//!   **broadcasts** every instance batch to all shards, each shard owns a
+//!   disjoint subset of ensemble *members* and trains only those, and the
+//!   leader folds the shards' per-member votes into the ensemble
+//!   prediction. Correct for any partition of the *members* because member
+//!   updates are independent — which also makes the result **bit-for-bit**
+//!   identical to the sequential ensemble, not merely numerically close.
+//!   Each shard resolves all of its members' due split attempts through
+//!   one [`crate::runtime::backend::SplitBackend`] round-trip per tick.
+//!
+//! Both run on the same bounded-`sync_channel` backpressure machinery: a
+//! full channel blocks the leader, so a slow shard throttles ingestion
+//! instead of ballooning memory. This is the L3 distributed runtime — the
+//! same two patterns scale QO-backed trees and forests across cores or
+//! machines.
 
+pub mod forest;
 pub mod leader;
 pub mod shard;
 
+pub use forest::{
+    fit_sharded, fit_sharded_voting, ForestCoordinatorConfig, ShardedFitReport,
+};
 pub use leader::{CoordinatorConfig, CoordinatorReport, ShardedObserverCoordinator};
 pub use shard::Partitioner;

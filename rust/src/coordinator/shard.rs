@@ -2,9 +2,12 @@
 //!
 //! Because the per-slot statistics merge exactly (Chan et al.), *any*
 //! partition of the stream yields the same merged observer — the policy
-//! only affects load balance and channel contention.
+//! only affects load balance and channel contention. The same policies
+//! assign ensemble *members* to shards in [`super::forest`], where any
+//! partition is bit-exact because member updates are independent.
 
-/// How instances are assigned to worker shards.
+/// How instances (or forest members, in [`super::forest`]) are assigned to
+/// worker shards.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Partitioner {
     /// t-th instance goes to shard t mod n (perfect balance).
@@ -25,6 +28,14 @@ impl Partitioner {
             }
         }
     }
+
+    /// Assign `n_items` items (instances, forest members) to `n_shards`
+    /// shards up front: `result[i]` is item i's shard. Convenience over
+    /// [`Self::shard_of`] for callers that partition a known-size set once,
+    /// like the member assignment in [`super::forest`].
+    pub fn assignment(&self, n_items: usize, n_shards: usize) -> Vec<usize> {
+        (0..n_items).map(|i| self.shard_of(i as u64, n_shards)).collect()
+    }
 }
 
 #[cfg(test)]
@@ -38,6 +49,18 @@ mod tests {
             counts[Partitioner::RoundRobin.shard_of(i, 4)] += 1;
         }
         assert_eq!(counts, [250, 250, 250, 250]);
+    }
+
+    #[test]
+    fn assignment_matches_shard_of() {
+        for partitioner in [Partitioner::RoundRobin, Partitioner::IndexHash] {
+            let assigned = partitioner.assignment(64, 5);
+            assert_eq!(assigned.len(), 64);
+            for (i, &s) in assigned.iter().enumerate() {
+                assert_eq!(s, partitioner.shard_of(i as u64, 5));
+                assert!(s < 5);
+            }
+        }
     }
 
     #[test]

@@ -28,6 +28,7 @@ use crate::tree::{HoeffdingTreeRegressor, HtrOptions};
 use super::adwin::Adwin;
 use super::batch::flush_split_attempts;
 use super::parallel::ParallelEnsemble;
+use super::vote::fold_votes;
 use crate::tree::subspace::SubspaceSize;
 
 /// ARF hyper-parameters.
@@ -271,12 +272,23 @@ impl ArfRegressor {
     pub fn options(&self) -> &ArfOptions {
         &self.options
     }
+
+    /// Replace the shared split-query engine (e.g. an instrumented backend
+    /// in tests); every member's flush handle is updated too.
+    pub fn with_split_backend(mut self, backend: Arc<dyn SplitBackend>) -> ArfRegressor {
+        for member in &mut self.members {
+            member.backend = backend.clone();
+        }
+        self.backend = backend;
+        self
+    }
 }
 
 impl Regressor for ArfRegressor {
     fn predict(&self, x: &[f64]) -> f64 {
-        let sum: f64 = self.members.iter().map(|m| m.tree.predict(x)).sum();
-        sum / self.members.len() as f64
+        // only trained members vote: a fresh post-drift-swap tree predicts
+        // the untrained prior mean and would drag the forest toward it
+        fold_votes(self.members.iter().map(|m| (m.tree.predict(x), m.fg_trained)))
     }
 
     fn learn_one(&mut self, x: &[f64], y: f64) {
@@ -287,15 +299,9 @@ impl Regressor for ArfRegressor {
             return; // hot path: attempts are due ~once per grace period
         }
         // one batched backend call resolves every member's due attempts
-        let mut trees: Vec<&mut HoeffdingTreeRegressor> =
-            Vec::with_capacity(self.members.len() * 2);
-        for member in &mut self.members {
-            trees.push(&mut member.tree);
-            if let Some(bg) = &mut member.background {
-                trees.push(bg);
-            }
-        }
-        flush_split_attempts(self.backend.as_ref(), &mut trees);
+        let backend = self.backend.clone();
+        let mut refs: Vec<&mut ArfMember> = self.members.iter_mut().collect();
+        <ArfRegressor as ParallelEnsemble>::flush_members(&mut refs, backend.as_ref());
     }
 
     fn name(&self) -> String {
@@ -322,6 +328,38 @@ impl ParallelEnsemble for ArfRegressor {
 
     fn learn_member(member: &mut ArfMember, x: &[f64], y: f64) {
         member.learn(x, y);
+    }
+
+    fn train_member(member: &mut ArfMember, x: &[f64], y: f64) {
+        member.train_queued(x, y);
+    }
+
+    fn flush_members(members: &mut [&mut ArfMember], backend: &dyn SplitBackend) -> bool {
+        if !members.iter().any(|m| m.has_pending()) {
+            return false; // hot path: attempts are due ~once per grace period
+        }
+        let mut trees: Vec<&mut HoeffdingTreeRegressor> =
+            Vec::with_capacity(members.len() * 2);
+        for member in members.iter_mut() {
+            trees.push(&mut member.tree);
+            if let Some(bg) = &mut member.background {
+                trees.push(bg);
+            }
+        }
+        flush_split_attempts(backend, &mut trees);
+        true
+    }
+
+    fn split_backend(&self) -> Arc<dyn SplitBackend> {
+        self.backend.clone()
+    }
+
+    fn member_predict(member: &ArfMember, x: &[f64]) -> f64 {
+        member.tree.predict(x)
+    }
+
+    fn member_trained(member: &ArfMember) -> bool {
+        member.fg_trained
     }
 }
 
@@ -399,6 +437,51 @@ mod tests {
         }
         assert_eq!(arf.n_warnings(), 0, "warmup error leaked into the detectors");
         assert_eq!(arf.n_drifts(), 0);
+    }
+
+    #[test]
+    fn untrained_members_are_excluded_from_the_vote() {
+        let mut arf = small_arf(4, 21);
+        let mut stream = Friedman1::new(77, 1.0);
+        for _ in 0..4000 {
+            let inst = stream.next_instance().unwrap();
+            arf.learn_one(&inst.x, inst.y);
+        }
+        let probe = [0.5; 10];
+        let before = arf.predict(&probe);
+
+        // simulate the post-drift swap when no background tree had trained
+        // yet: the fresh foreground predicts the untrained prior mean
+        let fresh = arf.members[0].fresh_tree();
+        arf.members[0].tree = fresh;
+        arf.members[0].fg_trained = false;
+        let after = arf.predict(&probe);
+
+        // the vote must be exactly the trained members' mean...
+        let trained_mean =
+            arf.members[1..].iter().map(|m| m.tree.predict(&probe)).sum::<f64>() / 3.0;
+        assert_eq!(after.to_bits(), trained_mean.to_bits());
+        // ...not the all-member average, which the fresh member's
+        // prior-mean prediction drags toward 0
+        let dragged = arf.members.iter().map(|m| m.tree.predict(&probe)).sum::<f64>()
+            / arf.members.len() as f64;
+        assert!(
+            (after - before).abs() < (dragged - before).abs(),
+            "swap dragged the vote: before {before}, after {after}, dragged {dragged}"
+        );
+    }
+
+    #[test]
+    fn fresh_forest_falls_back_to_the_flat_mean() {
+        // no member has trained: the vote degrades to the flat mean of the
+        // prior predictions instead of dividing by a zero trained-count
+        let arf = small_arf(3, 9);
+        let probe = [0.2; 10];
+        let p = arf.predict(&probe);
+        assert!(p.is_finite(), "untrained forest produced {p}");
+        let flat =
+            arf.members.iter().map(|m| m.tree.predict(&probe)).sum::<f64>() / 3.0;
+        assert_eq!(p.to_bits(), flat.to_bits());
     }
 
     #[test]

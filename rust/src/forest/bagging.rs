@@ -19,6 +19,7 @@ use crate::tree::{HoeffdingTreeRegressor, HtrOptions};
 
 use super::batch::flush_split_attempts;
 use super::parallel::ParallelEnsemble;
+use super::vote::fold_votes;
 
 /// One bagged member: a tree plus its private Poisson weighting stream.
 pub struct BagMember {
@@ -26,6 +27,10 @@ pub struct BagMember {
     rng: Rng,
     lambda: f64,
     backend: Arc<dyn SplitBackend>,
+    /// Whether the tree has trained on ≥ 1 instance — every Poisson draw
+    /// can be zero early on, and an untrained tree's prior-mean prediction
+    /// must not enter the ensemble vote.
+    trained: bool,
 }
 
 impl BagMember {
@@ -36,6 +41,9 @@ impl BagMember {
         let k = self.rng.poisson(self.lambda);
         for _ in 0..k {
             self.tree.learn_one_deferred(x, y);
+        }
+        if k > 0 {
+            self.trained = true;
         }
     }
 
@@ -89,6 +97,7 @@ impl OnlineBaggingRegressor {
                     rng,
                     lambda,
                     backend: backend.clone(),
+                    trained: false,
                 }
             })
             .collect();
@@ -103,12 +112,27 @@ impl OnlineBaggingRegressor {
     pub fn n_splits(&self) -> usize {
         self.members.iter().map(|m| m.tree.n_splits()).sum()
     }
+
+    /// Replace the shared split-query engine (e.g. an instrumented backend
+    /// in tests); every member's flush handle is updated too.
+    pub fn with_split_backend(
+        mut self,
+        backend: Arc<dyn SplitBackend>,
+    ) -> OnlineBaggingRegressor {
+        for member in &mut self.members {
+            member.backend = backend.clone();
+        }
+        self.backend = backend;
+        self
+    }
 }
 
 impl Regressor for OnlineBaggingRegressor {
     fn predict(&self, x: &[f64]) -> f64 {
-        let sum: f64 = self.members.iter().map(|m| m.tree.predict(x)).sum();
-        sum / self.members.len() as f64
+        // only trained members vote (see [`super::vote`]): with every
+        // Poisson draw possibly zero, a member can stay at the untrained
+        // prior for a while
+        fold_votes(self.members.iter().map(|m| (m.tree.predict(x), m.trained)))
     }
 
     fn learn_one(&mut self, x: &[f64], y: f64) {
@@ -119,12 +143,12 @@ impl Regressor for OnlineBaggingRegressor {
             return; // hot path: attempts are due ~once per grace period
         }
         // one batched backend call resolves every member's due attempts
-        let mut trees: Vec<&mut HoeffdingTreeRegressor> =
-            Vec::with_capacity(self.members.len());
-        for member in &mut self.members {
-            trees.push(&mut member.tree);
-        }
-        flush_split_attempts(self.backend.as_ref(), &mut trees);
+        let backend = self.backend.clone();
+        let mut refs: Vec<&mut BagMember> = self.members.iter_mut().collect();
+        <OnlineBaggingRegressor as ParallelEnsemble>::flush_members(
+            &mut refs,
+            backend.as_ref(),
+        );
     }
 
     fn name(&self) -> String {
@@ -145,6 +169,34 @@ impl ParallelEnsemble for OnlineBaggingRegressor {
 
     fn learn_member(member: &mut BagMember, x: &[f64], y: f64) {
         member.learn(x, y);
+    }
+
+    fn train_member(member: &mut BagMember, x: &[f64], y: f64) {
+        member.train_queued(x, y);
+    }
+
+    fn flush_members(members: &mut [&mut BagMember], backend: &dyn SplitBackend) -> bool {
+        if members.iter().all(|m| m.tree.pending_attempts().is_empty()) {
+            return false; // hot path: attempts are due ~once per grace period
+        }
+        let mut trees: Vec<&mut HoeffdingTreeRegressor> = Vec::with_capacity(members.len());
+        for member in members.iter_mut() {
+            trees.push(&mut member.tree);
+        }
+        flush_split_attempts(backend, &mut trees);
+        true
+    }
+
+    fn split_backend(&self) -> Arc<dyn SplitBackend> {
+        self.backend.clone()
+    }
+
+    fn member_predict(member: &BagMember, x: &[f64]) -> f64 {
+        member.tree.predict(x)
+    }
+
+    fn member_trained(member: &BagMember) -> bool {
+        member.trained
     }
 }
 

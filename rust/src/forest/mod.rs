@@ -23,9 +23,14 @@
 //!   train in deferred-attempt mode and every due leaf across the whole
 //!   forest is answered through one
 //!   [`crate::runtime::backend::SplitBackend`] call per round;
+//! * [`vote`] — the shared ensemble vote: only *trained* members vote,
+//!   and the fold order is fixed so the sharded-forest leader
+//!   ([`crate::coordinator::forest`]) reproduces `predict` bit-for-bit;
 //! * [`parallel`] — multi-core member fitting over the same bounded
 //!   channel/backpressure machinery as [`crate::coordinator`], bit-for-bit
-//!   identical to sequential training.
+//!   identical to sequential training. For sharding members across
+//!   leader/worker shards with one split round-trip per tick, see
+//!   [`crate::coordinator::forest`].
 //!
 //! Both ensembles implement [`crate::eval::Regressor`], so the
 //! prequential harness, the CLI (`qostream forest`) and the bench suite
@@ -36,6 +41,7 @@ pub mod arf;
 pub mod bagging;
 pub mod batch;
 pub mod parallel;
+pub mod vote;
 
 pub use crate::tree::subspace;
 pub use crate::tree::subspace::{sample_subspace, SubspaceSize};
@@ -45,3 +51,4 @@ pub use arf::{ArfOptions, ArfRegressor};
 pub use bagging::OnlineBaggingRegressor;
 pub use batch::flush_split_attempts;
 pub use parallel::{fit_parallel, ParallelEnsemble, ParallelFitConfig, ParallelFitReport};
+pub use vote::fold_votes;

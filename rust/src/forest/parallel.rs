@@ -26,9 +26,16 @@ use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
+use crate::runtime::backend::SplitBackend;
 use crate::stream::{Instance, Stream};
 
 /// An ensemble whose members can be trained independently of each other.
+///
+/// Beyond the worker-thread fitting contract ([`fit_parallel`]), the trait
+/// exposes the pieces the *sharded* forest runtime
+/// ([`crate::coordinator::forest`]) needs: deferred-mode training, a
+/// cross-member flush (one backend round-trip per shard per tick), and the
+/// per-member vote the leader folds into the ensemble prediction.
 pub trait ParallelEnsemble {
     type Member: Send;
 
@@ -38,6 +45,67 @@ pub trait ParallelEnsemble {
     /// Advance one member by one instance (the member must not touch any
     /// state outside itself).
     fn learn_member(member: &mut Self::Member, x: &[f64], y: f64);
+
+    /// Advance one member by one instance in deferred-attempt mode: due
+    /// split attempts queue on the member's trees instead of resolving
+    /// inline (callers batch them through [`Self::flush_members`]).
+    fn train_member(member: &mut Self::Member, x: &[f64], y: f64);
+
+    /// Resolve every queued split attempt across `members` through **one**
+    /// `backend.best_splits` call. Returns whether the backend was invoked
+    /// (false = nothing was pending). Bit-identical to flushing members one
+    /// by one: which leaves are due is per-member state and backend
+    /// evaluation is independent per query.
+    fn flush_members(members: &mut [&mut Self::Member], backend: &dyn SplitBackend) -> bool;
+
+    /// The ensemble's shared split-query engine (cloned into each shard).
+    fn split_backend(&self) -> Arc<dyn SplitBackend>;
+
+    /// The member's current prediction (its vote, whether trained or not).
+    fn member_predict(member: &Self::Member, x: &[f64]) -> f64;
+
+    /// Whether the member has trained on at least one instance. Untrained
+    /// members are excluded from the ensemble vote
+    /// ([`crate::forest::fold_votes`]).
+    fn member_trained(member: &Self::Member) -> bool;
+}
+
+/// The shared leader loop: pull up to `max_instances` from `stream`,
+/// batch them, and broadcast every batch (an `Arc`, shared not copied) to
+/// all `senders`, blocking on full channels (backpressure). `wrap` turns
+/// the shared batch into the channel's message type — identity for
+/// [`fit_parallel`], the train request for the sharded coordinator
+/// ([`crate::coordinator::forest`]). Returns how many instances were sent.
+pub(crate) fn broadcast_batches<T>(
+    stream: &mut dyn Stream,
+    max_instances: usize,
+    batch_size: usize,
+    senders: &[mpsc::SyncSender<T>],
+    wrap: impl Fn(Arc<Vec<Instance>>) -> T,
+) -> usize {
+    let mut batch = Vec::with_capacity(batch_size);
+    let mut sent = 0usize;
+    while sent < max_instances {
+        let Some(inst) = stream.next_instance() else { break };
+        batch.push(inst);
+        sent += 1;
+        if batch.len() >= batch_size {
+            let full = Arc::new(std::mem::replace(
+                &mut batch,
+                Vec::with_capacity(batch_size),
+            ));
+            for tx in senders {
+                tx.send(wrap(full.clone())).expect("worker shard died");
+            }
+        }
+    }
+    if !batch.is_empty() {
+        let last = Arc::new(batch);
+        for tx in senders {
+            tx.send(wrap(last.clone())).expect("worker shard died");
+        }
+    }
+    sent
 }
 
 /// Tuning knobs of the parallel fit.
@@ -69,11 +137,7 @@ pub struct ParallelFitReport {
 
 impl ParallelFitReport {
     pub fn throughput(&self) -> f64 {
-        if self.seconds > 0.0 {
-            self.instances as f64 / self.seconds
-        } else {
-            f64::INFINITY
-        }
+        crate::common::timing::throughput(self.instances, self.seconds)
     }
 }
 
@@ -98,8 +162,17 @@ pub fn fit_parallel<E: ParallelEnsemble>(
     let (sent, per_worker) = std::thread::scope(|scope| {
         let mut senders: Vec<mpsc::SyncSender<Arc<Vec<Instance>>>> = Vec::new();
         let mut handles = Vec::new();
-        let per_chunk = (n_members + workers - 1) / workers;
-        for chunk in members.chunks_mut(per_chunk) {
+        // Balanced chunking: ceil-sized chunks can exhaust the members
+        // before the worker budget (6 members over 4 workers would yield
+        // chunks of 2+2+2 and only 3 threads). Distribute the remainder so
+        // exactly `workers` chunks exist, each of size base or base + 1.
+        let base = n_members / workers;
+        let extra = n_members % workers;
+        let mut rest = members;
+        for w in 0..workers {
+            let size = base + usize::from(w < extra);
+            let (chunk, tail) = rest.split_at_mut(size);
+            rest = tail;
             let (tx, rx) = mpsc::sync_channel::<Arc<Vec<Instance>>>(
                 config.channel_capacity.max(1),
             );
@@ -119,28 +192,7 @@ pub fn fit_parallel<E: ParallelEnsemble>(
         }
 
         // leader loop: batch and broadcast (blocking on full channels)
-        let mut batch = Vec::with_capacity(batch_size);
-        let mut sent = 0usize;
-        while sent < max_instances {
-            let Some(inst) = stream.next_instance() else { break };
-            batch.push(inst);
-            sent += 1;
-            if batch.len() >= batch_size {
-                let full = Arc::new(std::mem::replace(
-                    &mut batch,
-                    Vec::with_capacity(batch_size),
-                ));
-                for tx in &senders {
-                    tx.send(full.clone()).expect("worker died");
-                }
-            }
-        }
-        if !batch.is_empty() {
-            let last = Arc::new(batch);
-            for tx in &senders {
-                tx.send(last.clone()).expect("worker died");
-            }
-        }
+        let sent = broadcast_batches(stream, max_instances, batch_size, &senders, |b| b);
         drop(senders); // close channels: workers drain and return
 
         let per_worker: Vec<usize> =
@@ -201,6 +253,42 @@ mod tests {
             let a = sequential.predict(&inst.x);
             let b = parallel.predict(&inst.x);
             assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn non_divisible_ratio_spawns_exactly_the_requested_workers() {
+        // 6 members over 4 workers used to ceil-chunk into 2+2+2 and spawn
+        // only 3 threads while reporting 4; balanced chunks (2,2,1,1) must
+        // spawn all 4, and the report must reflect the real thread count
+        let mut ensemble =
+            OnlineBaggingRegressor::new(10, 6, 2.0, HtrOptions::default(), qo_factory(), 8);
+        let report = fit_parallel(
+            &mut ensemble,
+            &mut Friedman1::new(4, 1.0),
+            600,
+            ParallelFitConfig { n_workers: 4, batch_size: 64, ..Default::default() },
+        );
+        assert_eq!(report.n_workers, 4);
+        assert_eq!(report.per_worker.len(), 4);
+        assert!(report.per_worker.iter().all(|&c| c == 600), "{:?}", report.per_worker);
+
+        // chunking must not affect the trained model (members are
+        // independent): same seed fitted sequentially is bit-identical
+        let mut sequential =
+            OnlineBaggingRegressor::new(10, 6, 2.0, HtrOptions::default(), qo_factory(), 8);
+        let mut stream = Friedman1::new(4, 1.0);
+        for _ in 0..600 {
+            let inst = stream.next_instance().unwrap();
+            sequential.learn_one(&inst.x, inst.y);
+        }
+        let mut probe = Friedman1::new(40, 0.0);
+        for _ in 0..50 {
+            let inst = probe.next_instance().unwrap();
+            assert_eq!(
+                sequential.predict(&inst.x).to_bits(),
+                ensemble.predict(&inst.x).to_bits()
+            );
         }
     }
 

@@ -1,0 +1,68 @@
+//! Ensemble vote folding.
+//!
+//! A freshly (re)started member — a post-drift-swap ARF tree, or a bagged
+//! member whose Poisson draws have all been zero so far — predicts the
+//! untrained prior mean, and averaging it into the ensemble vote drags the
+//! prediction toward that prior for no reason. [`fold_votes`] is the one
+//! shared vote: the mean over *trained* members, falling back to the flat
+//! mean of every member's (prior) prediction only when no member has
+//! trained yet.
+//!
+//! Both sequential `predict` implementations ([`super::ArfRegressor`],
+//! [`super::OnlineBaggingRegressor`]) and the sharded-forest leader
+//! ([`crate::coordinator::forest`]) fold through this function **in global
+//! member order**, which is what makes the leader-merged distributed vote
+//! bit-for-bit identical to the sequential ensemble: IEEE addition is not
+//! associative, so shipping pre-reduced per-shard Σs would reassociate the
+//! sum — instead shards ship per-member votes and the leader replays the
+//! exact sequential fold.
+
+/// Fold `(prediction, trained)` votes, in member order, into the ensemble
+/// prediction (see module docs). Returns 0.0 for an empty vote.
+pub fn fold_votes<I: Iterator<Item = (f64, bool)>>(votes: I) -> f64 {
+    let (mut sum_all, mut n_all) = (0.0f64, 0usize);
+    let (mut sum_trained, mut n_trained) = (0.0f64, 0usize);
+    for (pred, trained) in votes {
+        sum_all += pred;
+        n_all += 1;
+        if trained {
+            sum_trained += pred;
+            n_trained += 1;
+        }
+    }
+    if n_trained > 0 {
+        sum_trained / n_trained as f64
+    } else if n_all > 0 {
+        sum_all / n_all as f64
+    } else {
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trained_members_only() {
+        let v = fold_votes([(10.0, true), (0.0, false), (14.0, true)].into_iter());
+        assert_eq!(v, 12.0);
+    }
+
+    #[test]
+    fn all_untrained_falls_back_to_flat_mean() {
+        let v = fold_votes([(1.0, false), (2.0, false), (3.0, false)].into_iter());
+        assert_eq!(v, 2.0);
+    }
+
+    #[test]
+    fn empty_vote_is_zero() {
+        assert_eq!(fold_votes(std::iter::empty()), 0.0);
+    }
+
+    #[test]
+    fn single_trained_member_wins_outright() {
+        let v = fold_votes([(0.0, false), (7.5, true), (0.0, false)].into_iter());
+        assert_eq!(v, 7.5);
+    }
+}

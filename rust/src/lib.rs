@@ -26,8 +26,10 @@
 //! * [`stream`] — synthetic generators implementing the paper's Table 1
 //!   protocol, drift wrappers and a CSV reader.
 //! * [`eval`] — prequential evaluation and incremental regression metrics.
-//! * [`coordinator`] — a sharded streaming runtime that exploits the
-//!   mergeability of the Sec. 3 statistics for parallel observation.
+//! * [`coordinator`] — sharded streaming runtimes: data-parallel observer
+//!   sharding (exploiting the mergeability of the Sec. 3 statistics) and
+//!   model-parallel forest member sharding with one split-backend
+//!   round-trip per shard per tick.
 //! * [`runtime`] — a PJRT/XLA backend that executes the AOT-compiled
 //!   JAX/Pallas split-evaluation artifacts from `artifacts/`.
 //! * [`bench_suite`] — regenerates every table and figure of the paper's

@@ -10,6 +10,7 @@
 //! qostream tree [--instances N] [--seed S]    # Sec. 7 integration
 //! qostream forest [--members N] [--lambda L] [--subspace sqrt|all|K]
 //!                 [--split-backend per-observer|native-batch|xla] [--parallel W]
+//!                 [--shards N]                 # leader/shard distributed fit
 //! qostream coordinator [--shards N] [--instances N]
 //! qostream xla [--instances N] [--radius R]
 //! qostream all                                # everything, standard profile
@@ -163,6 +164,14 @@ fn cmd_forest(args: &Args) -> Result<()> {
             cfg.instances as f64 / seq_secs / 1e3,
         );
     }
+
+    let shards = args.usize_or("shards", 0);
+    if shards > 0 {
+        // leader/shard distributed forest: members sharded across workers,
+        // one split-backend round-trip per shard per tick, and the
+        // leader-merged vote asserted bit-identical to sequential
+        println!("{}", forest_bench::sharded_comparison(&cfg, shards).render());
+    }
     Ok(())
 }
 
@@ -264,8 +273,9 @@ SUBCOMMANDS
   tree         Hoeffding-tree integration bench   [--instances N --seed S]
   forest       online ensembles vs single tree    [--instances N --members M --lambda L
                (bagging + ARF on drifting data,    --subspace all|sqrt|K --drift-at N --seed S
-                batched split queries)             --split-backend per-observer|native-batch|xla
-                                                   --parallel W --observer qo|ebst (demo only)]
+                batched split queries,             --split-backend per-observer|native-batch|xla
+                sharded leader/worker fitting)     --parallel W --shards N
+                                                   --observer qo|ebst (demo only)]
   coordinator  sharded distributed observation    [--shards N --instances N --radius R]
   xla          AOT split-eval via PJRT artifacts  [--instances N --radius R]
   all          fig1 + fig3 + cd + tree + forest (standard profile)

@@ -1,11 +1,15 @@
-//! End-to-end forest contracts (the PR's acceptance criteria):
+//! End-to-end forest contracts (the PR acceptance criteria):
 //!
 //! 1. an [`ArfRegressor`] with ≥ 10 members beats a single
 //!    `HoeffdingTreeRegressor` on MAE on a `stream::AbruptDrift` Friedman
-//!    stream, and
+//!    stream,
 //! 2. the parallel fitting path produces predictions identical to
-//!    sequential fitting with the same seed.
+//!    sequential fitting with the same seed, and
+//! 3. the sharded distributed forest (`coordinator::forest`) — trained
+//!    members and the leader-merged distributed vote alike — is
+//!    bit-for-bit identical to the sequential ensemble.
 
+use qostream::coordinator::{fit_sharded_voting, ForestCoordinatorConfig, Partitioner};
 use qostream::eval::{prequential, Regressor};
 use qostream::forest::{
     fit_parallel, ArfOptions, ArfRegressor, OnlineBaggingRegressor, ParallelFitConfig,
@@ -166,6 +170,94 @@ fn batched_split_backend_bit_identical_to_per_observer_forest() {
             batched.predict(&inst.x).to_bits(),
             "batched backend diverged from the per-observer path"
         );
+    }
+}
+
+#[test]
+fn sharded_forest_identical_to_sequential() {
+    // the distributed-forest acceptance criterion, end to end: with
+    // warnings, drifts and background trees in play, the leader/shard fit
+    // and its leader-merged distributed vote must reproduce the sequential
+    // ensemble bit-for-bit
+    let n = 6_000;
+    let drift_at = 3_000;
+    let opts = ArfOptions { n_members: 6, lambda: 4.0, seed: 99, ..Default::default() };
+
+    let mut sequential = ArfRegressor::new(10, opts, qo_factory());
+    let mut stream = drift_stream(drift_at);
+    for _ in 0..n {
+        let inst = stream.next_instance().unwrap();
+        sequential.learn_one(&inst.x, inst.y);
+    }
+
+    let mut probe = Friedman1::new(4242, 0.0);
+    let probes: Vec<Vec<f64>> = (0..200).map(|_| probe.next_instance().unwrap().x).collect();
+
+    for partitioner in [Partitioner::RoundRobin, Partitioner::IndexHash] {
+        let mut sharded = ArfRegressor::new(10, opts, qo_factory());
+        let (report, merged) = fit_sharded_voting(
+            &mut sharded,
+            &mut drift_stream(drift_at),
+            n,
+            &probes,
+            ForestCoordinatorConfig {
+                n_shards: 3,
+                batch_size: 128,
+                channel_capacity: 4,
+                partitioner,
+            },
+        );
+        assert_eq!(report.instances, n);
+        assert!((1..=3).contains(&report.n_shards));
+        assert_eq!(report.members_per_shard.iter().sum::<usize>(), 6);
+        assert!(report.instances_per_shard.iter().all(|&c| c == n));
+        // every shard batched its split attempts: at most one backend
+        // round-trip per tick, and at least one over the whole run
+        for (&calls, &members) in
+            report.backend_calls_per_shard.iter().zip(&report.members_per_shard)
+        {
+            assert!(calls >= 1, "a {members}-member shard never flushed");
+            assert!(calls <= n, "more than one backend round-trip per tick");
+        }
+        assert_eq!(sequential.n_splits(), sharded.n_splits());
+        assert_eq!(sequential.n_warnings(), sharded.n_warnings());
+        assert_eq!(sequential.n_drifts(), sharded.n_drifts());
+        for (x, &vote) in probes.iter().zip(&merged) {
+            let want = sequential.predict(x);
+            assert_eq!(
+                vote.to_bits(),
+                want.to_bits(),
+                "distributed vote {vote} != sequential {want} ({partitioner:?})"
+            );
+        }
+    }
+}
+
+#[test]
+fn sharded_bagging_identical_to_sequential() {
+    let n = 4_000;
+    let mut sequential =
+        OnlineBaggingRegressor::new(10, 5, 6.0, HtrOptions::default(), qo_factory(), 55);
+    let mut stream = Friedman1::new(17, 1.0);
+    for _ in 0..n {
+        let inst = stream.next_instance().unwrap();
+        sequential.learn_one(&inst.x, inst.y);
+    }
+
+    let mut probe = Friedman1::new(31, 0.0);
+    let probes: Vec<Vec<f64>> = (0..100).map(|_| probe.next_instance().unwrap().x).collect();
+    let mut sharded =
+        OnlineBaggingRegressor::new(10, 5, 6.0, HtrOptions::default(), qo_factory(), 55);
+    let (report, merged) = fit_sharded_voting(
+        &mut sharded,
+        &mut Friedman1::new(17, 1.0),
+        n,
+        &probes,
+        ForestCoordinatorConfig { n_shards: 2, ..Default::default() },
+    );
+    assert_eq!(report.instances, n);
+    for (x, &vote) in probes.iter().zip(&merged) {
+        assert_eq!(vote.to_bits(), sequential.predict(x).to_bits());
     }
 }
 
