@@ -1,0 +1,71 @@
+//! Serve quickstart: start the learn/predict server in-process, train a
+//! forest over a real TCP socket, take a checkpoint, restore it into a
+//! second server, and verify both answer a held-out batch bit-for-bit
+//! identically — the full serve/persist loop in one file.
+//!
+//! Run: `cargo run --release --example serve_quickstart`
+
+use qostream::eval::Regressor;
+use qostream::forest::{ArfOptions, ArfRegressor};
+use qostream::observer::ObserverSpec;
+use qostream::persist::Model;
+use qostream::serve::{ServeClient, ServeOptions, Server};
+use qostream::stream::{Friedman1, Stream};
+
+fn main() -> anyhow::Result<()> {
+    // 1. a 5-member ARF behind the server, snapshots hot-swapped every
+    //    250 applied learns
+    let model = Model::Arf(ArfRegressor::new(
+        10,
+        ArfOptions { n_members: 5, seed: 7, ..Default::default() },
+        ObserverSpec::from_label("QO_s2").expect("paper label").to_factory(),
+    ));
+    let server = Server::start(
+        model,
+        "127.0.0.1:0", // ephemeral port
+        ServeOptions { snapshot_every: 250, ..Default::default() },
+    )?;
+    println!("serving on {}", server.addr());
+
+    // 2. train over the wire: 5000 Friedman #1 instances
+    let mut client = ServeClient::connect(server.addr())?;
+    let mut stream = Friedman1::new(3, 1.0);
+    for _ in 0..5000 {
+        let inst = stream.next_instance().expect("endless stream");
+        client.learn(&inst.x, inst.y)?;
+    }
+
+    // 3. reads come from the hot-swapped snapshot, concurrent with training
+    let probe = [0.5; 10];
+    println!("prediction at x=0.5…: {:.4}", client.predict(&probe)?);
+
+    // 4. checkpoint: drains this connection's learns, publishes, returns
+    //    the full model as canonical JSON
+    let checkpoint = client.snapshot()?;
+    println!("checkpoint: {} bytes", checkpoint.len());
+
+    // 5. restore into a brand-new server and compare a held-out batch
+    let restored = Model::from_text(&checkpoint)?;
+    let server_b = Server::start(restored, "127.0.0.1:0", ServeOptions::default())?;
+    let mut client_b = ServeClient::connect(server_b.addr())?;
+    let mut held_out = Friedman1::new(0xBEEF, 0.0);
+    let batch: Vec<Vec<f64>> =
+        (0..50).map(|_| held_out.next_instance().unwrap().x).collect();
+    let live = client.predict_batch(&batch)?;
+    let cold = client_b.predict_batch(&batch)?;
+    let identical =
+        live.iter().zip(&cold).all(|(a, b)| a.to_bits() == b.to_bits());
+    println!("restored server bit-identical on 50 held-out probes: {identical}");
+
+    // 6. clean shutdown; join returns the final trained model
+    client.shutdown()?;
+    client_b.shutdown()?;
+    let final_model = server.join()?;
+    server_b.join()?;
+    println!(
+        "final model: {} ({} elements)",
+        final_model.name(),
+        final_model.n_elements()
+    );
+    Ok(())
+}

@@ -13,6 +13,7 @@
 //! | Figure 6 (CD on query time) | [`cd`] | `qostream cd --metric query` |
 //! | Sec. 7 tree integration | [`tree_bench`] | `qostream tree` |
 //! | Forest extension (ensembles + drift) | [`forest_bench`] | `qostream forest` |
+//! | Serving scenario (predict latency, learns/sec, checkpoint sizes) | [`serve_bench`] | `qostream serve --bench` |
 //!
 //! Results (CSV + JSON + ASCII charts) are written under `results/`.
 
@@ -23,6 +24,7 @@ pub mod forest_bench;
 pub mod protocol;
 pub mod report;
 pub mod runner;
+pub mod serve_bench;
 pub mod tree_bench;
 
 pub use protocol::{Cell, Profile, Protocol};

@@ -1,0 +1,283 @@
+//! Serving scenario: predict latency and training throughput of the
+//! [`crate::serve`] server under live load, plus the QO vs E-BST
+//! checkpoint-size comparison (the paper's memory story, Sec. 5.3,
+//! restated in bytes-on-the-wire).
+//!
+//! A background client streams Friedman #1 `learn`s over TCP while the
+//! foreground client hammers `predict` and records per-request latency;
+//! snapshot hot-swapping stays enabled throughout, so the p50/p99 numbers
+//! include the swaps. Run via `qostream serve --bench`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::common::table::Table;
+use crate::common::timing::human_time;
+use crate::eval::Regressor;
+use crate::forest::{ArfOptions, ArfRegressor};
+use crate::persist::Model;
+use crate::serve::{ServeClient, ServeOptions, Server};
+use crate::stream::{Friedman1, Stream};
+use crate::tree::{HoeffdingTreeRegressor, HtrOptions};
+
+use super::forest_bench::{ebst_factory, qo_factory};
+use super::report::Report;
+
+/// Scenario parameters (CLI-exposed via `qostream serve --bench`).
+#[derive(Clone, Copy, Debug)]
+pub struct ServeBenchConfig {
+    /// Learns the background client streams.
+    pub instances: usize,
+    /// ARF members of the served model.
+    pub members: usize,
+    /// Applied learns between snapshot hot-swaps.
+    pub snapshot_every: usize,
+    /// Minimum predict-latency samples to collect.
+    pub min_predict_samples: usize,
+    pub seed: u64,
+}
+
+impl Default for ServeBenchConfig {
+    fn default() -> ServeBenchConfig {
+        ServeBenchConfig {
+            instances: 5000,
+            members: 5,
+            snapshot_every: 500,
+            min_predict_samples: 500,
+            seed: 1,
+        }
+    }
+}
+
+/// Measured outcome of one serving run.
+#[derive(Clone, Debug)]
+pub struct ServeBenchResult {
+    pub learns: usize,
+    pub learn_seconds: f64,
+    pub predict_samples: usize,
+    pub predict_p50: f64,
+    pub predict_p99: f64,
+    pub snapshots: u64,
+    /// (label, bytes, elements) for the checkpoint-size comparison.
+    pub checkpoint_sizes: Vec<(String, usize, usize)>,
+}
+
+impl ServeBenchResult {
+    pub fn learns_per_sec(&self) -> f64 {
+        crate::common::timing::throughput(self.learns, self.learn_seconds)
+    }
+}
+
+/// Percentile over raw samples (nearest-rank; `q` in [0, 1]).
+pub fn percentile(samples: &mut [f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_unstable_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((q * samples.len() as f64).ceil() as usize).clamp(1, samples.len());
+    samples[rank - 1]
+}
+
+/// Drive one full serving scenario against a real TCP server on an
+/// ephemeral port.
+pub fn run(cfg: &ServeBenchConfig) -> Result<ServeBenchResult> {
+    let model = Model::Arf(ArfRegressor::new(
+        10,
+        ArfOptions {
+            n_members: cfg.members,
+            lambda: 6.0,
+            seed: cfg.seed,
+            ..Default::default()
+        },
+        qo_factory(),
+    ));
+    let server = Server::start(
+        model,
+        "127.0.0.1:0",
+        ServeOptions { snapshot_every: cfg.snapshot_every, ..Default::default() },
+    )?;
+    let addr = server.addr();
+
+    // background client: stream learns as fast as the queue admits them
+    let done = Arc::new(AtomicBool::new(false));
+    let learner = {
+        let done = done.clone();
+        let (instances, seed) = (cfg.instances, cfg.seed);
+        std::thread::spawn(move || -> Result<f64> {
+            let out = (|| -> Result<f64> {
+                let mut client = ServeClient::connect(addr)?;
+                let mut stream = Friedman1::new(seed, 1.0);
+                let start = Instant::now();
+                for _ in 0..instances {
+                    let inst = stream.next_instance().expect("endless stream");
+                    client.learn(&inst.x, inst.y)?;
+                }
+                Ok(start.elapsed().as_secs_f64())
+            })();
+            // set on EVERY exit path: the foreground latency loop spins
+            // until this flips, even when the learner fails
+            done.store(true, Ordering::SeqCst);
+            out
+        })
+    };
+
+    // foreground client: predict latency while training runs
+    let mut client = ServeClient::connect(addr)?;
+    let mut probe = Friedman1::new(cfg.seed ^ 0x5EED, 0.0);
+    let mut latencies = Vec::new();
+    while !done.load(Ordering::SeqCst) || latencies.len() < cfg.min_predict_samples {
+        let inst = probe.next_instance().expect("endless stream");
+        let start = Instant::now();
+        let p = client.predict(&inst.x)?;
+        latencies.push(start.elapsed().as_secs_f64());
+        debug_assert!(p.is_finite());
+    }
+    let learn_seconds = learner
+        .join()
+        .map_err(|_| anyhow!("learner thread panicked"))?
+        .map_err(|e| e.context("background learner failed"))?;
+
+    // force a final hot-swap (checkpoint through the full codec), read
+    // the counters, then stop the server
+    client.snapshot()?;
+    let stats = client.stats()?;
+    let snapshots = stats
+        .get("snapshots")
+        .and_then(crate::common::json::Json::as_f64)
+        .unwrap_or(0.0) as u64;
+    client.shutdown()?;
+    server.join()?;
+
+    let predict_samples = latencies.len();
+    let mut sorted = latencies;
+    let predict_p50 = percentile(&mut sorted, 0.50);
+    let predict_p99 = percentile(&mut sorted, 0.99);
+
+    Ok(ServeBenchResult {
+        learns: cfg.instances,
+        learn_seconds,
+        predict_samples,
+        predict_p50,
+        predict_p99,
+        snapshots,
+        checkpoint_sizes: checkpoint_sizes(cfg)?,
+    })
+}
+
+/// QO vs E-BST checkpoint bytes for the same tree on the same stream:
+/// the paper's elements metric, restated as serialized model size.
+fn checkpoint_sizes(cfg: &ServeBenchConfig) -> Result<Vec<(String, usize, usize)>> {
+    let mut out = Vec::new();
+    for factory in [qo_factory(), ebst_factory()] {
+        let label = factory.name();
+        let mut tree = HoeffdingTreeRegressor::new(10, HtrOptions::default(), factory);
+        let mut stream = Friedman1::new(cfg.seed, 1.0);
+        for _ in 0..cfg.instances {
+            let inst = stream.next_instance().expect("endless stream");
+            tree.learn_one(&inst.x, inst.y);
+        }
+        let elements = tree.total_elements();
+        let model = Model::Tree(tree);
+        let bytes = model.to_text()?.len();
+        out.push((format!("htr[{label}]"), bytes, elements));
+    }
+    Ok(out)
+}
+
+/// Render + persist under `results/serve/`.
+pub fn generate(cfg: &ServeBenchConfig) -> Result<String> {
+    let result = run(cfg)?;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "serving scenario: {} learns streamed over TCP, {}-member ARF, \
+         snapshot hot-swap every {} learns\n",
+        result.learns, cfg.members, cfg.snapshot_every
+    ));
+    out.push_str(&format!(
+        "  learns/sec     : {:.1}k ({} in {})\n",
+        result.learns_per_sec() / 1e3,
+        result.learns,
+        human_time(result.learn_seconds)
+    ));
+    out.push_str(&format!(
+        "  predict latency: p50 {}  p99 {}  ({} samples, concurrent with training)\n",
+        human_time(result.predict_p50),
+        human_time(result.predict_p99),
+        result.predict_samples
+    ));
+    out.push_str(&format!("  snapshots published: {}\n", result.snapshots));
+    out.push_str("checkpoint sizes (same tree, same stream):\n");
+    let mut table = Table::new(vec!["model", "checkpoint_bytes", "elements"]);
+    for (label, bytes, elements) in &result.checkpoint_sizes {
+        table.row(vec![label.clone(), bytes.to_string(), elements.to_string()]);
+    }
+    out.push_str(&table.render());
+
+    let report = Report::create("serve")?;
+    report.write_text("serve.txt", &out)?;
+    let mut j = crate::common::json::Json::obj();
+    j.set("learns", result.learns)
+        .set("learn_seconds", result.learn_seconds)
+        .set("learns_per_sec", result.learns_per_sec())
+        .set("predict_p50_s", result.predict_p50)
+        .set("predict_p99_s", result.predict_p99)
+        .set("predict_samples", result.predict_samples)
+        .set("snapshots", result.snapshots);
+    let mut sizes = crate::common::json::Json::Arr(Vec::new());
+    for (label, bytes, elements) in &result.checkpoint_sizes {
+        let mut row = crate::common::json::Json::obj();
+        row.set("model", label.as_str()).set("bytes", *bytes).set("elements", *elements);
+        sizes.push(row);
+    }
+    j.set("checkpoint_sizes", sizes);
+    report.write_json("serve.json", &j)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let mut xs = vec![4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&mut xs, 0.5), 2.0);
+        assert_eq!(percentile(&mut xs, 0.99), 4.0);
+        assert_eq!(percentile(&mut xs, 0.0), 1.0);
+        assert_eq!(percentile(&mut [], 0.5), 0.0);
+    }
+
+    #[test]
+    fn tiny_scenario_reports_sane_numbers() {
+        // a real end-to-end run, sized for CI: the acceptance contract
+        // (p50/p99 + learns/sec with hot-swap enabled) must hold
+        let cfg = ServeBenchConfig {
+            instances: 400,
+            members: 2,
+            snapshot_every: 100,
+            min_predict_samples: 20,
+            seed: 3,
+        };
+        let result = run(&cfg).expect("scenario must complete");
+        assert_eq!(result.learns, 400);
+        assert!(result.learn_seconds > 0.0);
+        assert!(result.predict_samples >= 20);
+        assert!(result.predict_p50 > 0.0);
+        assert!(result.predict_p99 >= result.predict_p50);
+        assert!(result.snapshots >= 1, "hot-swap never happened");
+        assert_eq!(result.checkpoint_sizes.len(), 2);
+        // the QO tree's checkpoint must undercut the E-BST tree's — the
+        // paper's memory argument, in serialized bytes
+        let (qo, ebst) = (&result.checkpoint_sizes[0], &result.checkpoint_sizes[1]);
+        assert!(qo.0.contains("QO") && ebst.0.contains("E-BST"));
+        assert!(
+            qo.1 < ebst.1,
+            "QO checkpoint ({} B) must be smaller than E-BST ({} B)",
+            qo.1,
+            ebst.1
+        );
+    }
+}

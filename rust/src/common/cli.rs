@@ -59,22 +59,52 @@ impl Args {
         self.opt(key).unwrap_or(default)
     }
 
+    /// Panicking accessor for contexts with no error channel (bench
+    /// binaries); the CLI proper goes through [`Args::try_usize`] so a
+    /// malformed flag becomes usage + nonzero exit instead of a panic.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
-        self.opt(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+        self.try_usize(key, default).unwrap_or_else(|e| panic!("{e}"))
     }
 
+    /// Panicking variant of [`Args::try_u64`] (see [`Args::usize_or`]).
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
-        self.opt(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+        self.try_u64(key, default).unwrap_or_else(|e| panic!("{e}"))
     }
 
+    /// Panicking variant of [`Args::try_f64`] (see [`Args::usize_or`]).
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
-        self.opt(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
-            .unwrap_or(default)
+        self.try_f64(key, default).unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Non-panicking variant of [`Args::usize_or`]: a malformed value is
+    /// a recoverable error the CLI turns into usage + nonzero exit.
+    pub fn try_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// Non-panicking variant of [`Args::u64_or`].
+    pub fn try_u64(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    /// Non-panicking variant of [`Args::f64_or`].
+    pub fn try_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got {v:?}")),
+        }
     }
 }
 
@@ -116,5 +146,17 @@ mod tests {
     fn bad_integer_panics() {
         let a = parse("x --n abc");
         a.usize_or("n", 0);
+    }
+
+    #[test]
+    fn try_accessors_return_errors_instead_of_panicking() {
+        let a = parse("x --n abc --r 0.5 --k 7");
+        assert!(a.try_usize("n", 0).unwrap_err().to_string().contains("--n"));
+        assert_eq!(a.try_usize("k", 0).unwrap(), 7);
+        assert_eq!(a.try_usize("missing", 9).unwrap(), 9);
+        assert_eq!(a.try_f64("r", 0.0).unwrap(), 0.5);
+        assert!(a.try_f64("n", 0.0).is_err());
+        assert_eq!(a.try_u64("k", 0).unwrap(), 7);
+        assert!(a.try_u64("n", 0).is_err());
     }
 }

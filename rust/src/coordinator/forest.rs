@@ -34,7 +34,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::forest::parallel::{broadcast_batches, ParallelEnsemble};
-use crate::forest::vote::fold_votes;
+use crate::forest::vote::{fold_votes, fold_votes_weighted};
 use crate::runtime::backend::SplitBackend;
 use crate::stream::{Instance, Stream};
 
@@ -83,6 +83,9 @@ struct VoteReply {
     members: Vec<usize>,
     /// Per-member trained flags, parallel to `members`.
     trained: Vec<bool>,
+    /// Per-member recent errors, parallel to `members` (only consulted by
+    /// ensembles folding with the accuracy-weighted vote).
+    recent_errs: Vec<f64>,
     /// `preds[local_member][probe]`, parallel to `members`.
     preds: Vec<Vec<f64>>,
 }
@@ -135,6 +138,7 @@ pub fn fit_sharded_voting<E: ParallelEnsemble>(
     config: ForestCoordinatorConfig,
 ) -> (ShardedFitReport, Vec<f64>) {
     let backend = ensemble.split_backend();
+    let weighted_vote = ensemble.weighted_vote();
     let members = ensemble.members_mut();
     let n_members = members.len();
     assert!(n_members >= 1, "cannot fit an empty ensemble");
@@ -192,6 +196,8 @@ pub fn fit_sharded_voting<E: ParallelEnsemble>(
                             Request::Vote(probes) => {
                                 let trained: Vec<bool> =
                                     mems.iter().map(|m| E::member_trained(m)).collect();
+                                let recent_errs: Vec<f64> =
+                                    mems.iter().map(|m| E::member_recent_err(m)).collect();
                                 let preds: Vec<Vec<f64>> = mems
                                     .iter()
                                     .map(|m| {
@@ -205,6 +211,7 @@ pub fn fit_sharded_voting<E: ParallelEnsemble>(
                                     .send(VoteReply {
                                         members: idxs.clone(),
                                         trained,
+                                        recent_errs,
                                         preds,
                                     })
                                     .expect("leader hung up mid-vote");
@@ -238,20 +245,33 @@ pub fn fit_sharded_voting<E: ParallelEnsemble>(
                 }
                 let mut grid_preds: Vec<Vec<f64>> = vec![Vec::new(); n_members];
                 let mut grid_trained: Vec<bool> = vec![false; n_members];
+                let mut grid_errs: Vec<f64> = vec![0.0; n_members];
                 for _ in 0..senders.len() {
                     let reply = reply_rx.recv().expect("shard died before voting");
-                    for ((global, member_trained), member_preds) in reply
+                    for (((global, member_trained), member_err), member_preds) in reply
                         .members
                         .into_iter()
                         .zip(reply.trained)
+                        .zip(reply.recent_errs)
                         .zip(reply.preds)
                     {
                         grid_trained[global] = member_trained;
+                        grid_errs[global] = member_err;
                         grid_preds[global] = member_preds;
                     }
                 }
+                // replay the exact fold the sequential `predict` uses —
+                // flat or accuracy-weighted — in global member order
                 merged.extend((0..probes.len()).map(|p| {
-                    fold_votes((0..n_members).map(|m| (grid_preds[m][p], grid_trained[m])))
+                    if weighted_vote {
+                        fold_votes_weighted((0..n_members).map(|m| {
+                            (grid_preds[m][p], grid_trained[m], grid_errs[m])
+                        }))
+                    } else {
+                        fold_votes(
+                            (0..n_members).map(|m| (grid_preds[m][p], grid_trained[m])),
+                        )
+                    }
                 }));
             }
 
@@ -382,6 +402,45 @@ mod tests {
         // and the reassembled sharded ensemble agrees member-for-member
         for x in &probes {
             assert_eq!(sharded.predict(x).to_bits(), sequential.predict(x).to_bits());
+        }
+    }
+
+    #[test]
+    fn sharded_weighted_vote_bit_identical_to_sequential() {
+        // the leader must replay the *weighted* fold when the ensemble
+        // votes by inverse recent error
+        let n = 4000;
+        let weighted_arf = |seed| {
+            ArfRegressor::new(
+                10,
+                ArfOptions {
+                    n_members: 4,
+                    lambda: 3.0,
+                    seed,
+                    weighted_vote: true,
+                    ..Default::default()
+                },
+                qo_factory(),
+            )
+        };
+        let mut sequential = weighted_arf(13);
+        train_sequential(&mut sequential, 17, n);
+
+        let mut sharded = weighted_arf(13);
+        let probes = probe_points(40);
+        let (_, merged) = fit_sharded_voting(
+            &mut sharded,
+            &mut Friedman1::new(17, 1.0),
+            n,
+            &probes,
+            ForestCoordinatorConfig { n_shards: 2, batch_size: 64, ..Default::default() },
+        );
+        for (x, &v) in probes.iter().zip(&merged) {
+            assert_eq!(
+                v.to_bits(),
+                sequential.predict(x).to_bits(),
+                "weighted merged vote diverged at {x:?}"
+            );
         }
     }
 

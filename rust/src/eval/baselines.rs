@@ -1,6 +1,12 @@
 //! Baseline regressors: the running-mean predictor and a normalized
 //! linear SGD model (the FIMT leaf perceptron uses the same core).
 
+use anyhow::{anyhow, Result};
+
+use crate::common::json::Json;
+use crate::persist::codec::{
+    field, jf64, parr, pf64, varstats_from, varstats_to_json,
+};
 use crate::stats::VarStats;
 
 use super::Regressor;
@@ -80,6 +86,47 @@ impl LinearSgd {
             out += self.weights[i] * self.norm_x(i, xi);
         }
         out
+    }
+
+    /// Checkpoint encoding ([`crate::persist`]): weights, bias, learning
+    /// rate and the running normalization statistics.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("weights", Json::Arr(self.weights.iter().map(|&w| jf64(w)).collect()))
+            .set("bias", jf64(self.bias))
+            .set("lr", jf64(self.lr))
+            .set(
+                "feature_stats",
+                Json::Arr(self.feature_stats.iter().map(varstats_to_json).collect()),
+            )
+            .set("target_stats", varstats_to_json(&self.target_stats));
+        o
+    }
+
+    /// Decode a model written by [`LinearSgd::to_json`].
+    pub fn from_json(j: &Json) -> Result<LinearSgd> {
+        let weights: Vec<f64> = parr(field(j, "weights")?, "weights")?
+            .iter()
+            .map(|w| pf64(w, "weights"))
+            .collect::<Result<_>>()?;
+        let feature_stats: Vec<VarStats> = parr(field(j, "feature_stats")?, "feature_stats")?
+            .iter()
+            .map(|s| varstats_from(s, "feature_stats"))
+            .collect::<Result<_>>()?;
+        if feature_stats.len() != weights.len() {
+            return Err(anyhow!(
+                "linear model: {} weights but {} feature stats",
+                weights.len(),
+                feature_stats.len()
+            ));
+        }
+        Ok(LinearSgd {
+            weights,
+            bias: pf64(field(j, "bias")?, "bias")?,
+            lr: pf64(field(j, "lr")?, "lr")?,
+            feature_stats,
+            target_stats: varstats_from(field(j, "target_stats")?, "target_stats")?,
+        })
     }
 }
 
@@ -199,6 +246,29 @@ mod tests {
             mean.learn_one(&x, y);
         }
         assert!(err_lin < 0.5 * err_mean, "lin={err_lin} mean={err_mean}");
+    }
+
+    #[test]
+    fn linear_sgd_json_roundtrip_is_bit_identical() {
+        let mut model = LinearSgd::new(3, 0.05);
+        let mut rng = Rng::new(71);
+        for _ in 0..500 {
+            let x = [rng.f64(), rng.normal(0.0, 2.0), rng.uniform(-1.0, 1.0)];
+            model.learn_one(&x, 2.0 * x[0] - x[2]);
+        }
+        let text = model.to_json().to_compact();
+        let mut back =
+            LinearSgd::from_json(&crate::common::json::Json::parse(&text).unwrap()).unwrap();
+        let probe = [0.3, -0.7, 0.9];
+        assert_eq!(model.predict(&probe).to_bits(), back.predict(&probe).to_bits());
+        // continued training stays identical
+        for _ in 0..100 {
+            let x = [rng.f64(), rng.normal(0.0, 2.0), rng.uniform(-1.0, 1.0)];
+            let y = 2.0 * x[0] - x[2];
+            model.learn_one(&x, y);
+            back.learn_one(&x, y);
+        }
+        assert_eq!(model.predict(&probe).to_bits(), back.predict(&probe).to_bits());
     }
 
     #[test]

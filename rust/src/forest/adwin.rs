@@ -21,6 +21,12 @@
 //!
 //! with δ' = δ / W (union bound over the W possible cut positions).
 
+use anyhow::{anyhow, Result};
+
+use crate::common::json::Json;
+use crate::persist::codec::{
+    field, jf64, jusize, parr, pbool, pf64, pusize, varstats_from, varstats_to_json,
+};
 use crate::stats::VarStats;
 
 /// Maximum buckets kept per exponential-histogram row.
@@ -119,6 +125,56 @@ impl Adwin {
         self.tick = 0;
         self.n_detections = 0;
         self.last_shrink_rise = false;
+    }
+
+    /// Checkpoint encoding ([`crate::persist`]): the full exponential
+    /// histogram plus the clock phase, so a restored detector fires at the
+    /// exact same instants the live one would have.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("delta", jf64(self.delta))
+            .set(
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|row| Json::Arr(row.iter().map(varstats_to_json).collect()))
+                        .collect(),
+                ),
+            )
+            .set("total", varstats_to_json(&self.total))
+            .set("tick", jusize(self.tick as usize))
+            .set("n_detections", jusize(self.n_detections))
+            .set("last_shrink_rise", self.last_shrink_rise);
+        o
+    }
+
+    /// Decode a detector written by [`Adwin::to_json`].
+    pub fn from_json(j: &Json) -> Result<Adwin> {
+        let delta = pf64(field(j, "delta")?, "delta")?;
+        if !(delta > 0.0 && delta < 1.0) {
+            return Err(anyhow!("adwin delta {delta} out of (0, 1)"));
+        }
+        let mut rows = Vec::new();
+        for row in parr(field(j, "rows")?, "rows")? {
+            let mut buckets = Vec::new();
+            for bucket in parr(row, "rows")? {
+                buckets.push(varstats_from(bucket, "rows")?);
+            }
+            rows.push(buckets);
+        }
+        if rows.is_empty() {
+            rows.push(Vec::new());
+        }
+        let tick = pusize(field(j, "tick")?, "tick")?;
+        Ok(Adwin {
+            delta,
+            rows,
+            total: varstats_from(field(j, "total")?, "total")?,
+            tick: u32::try_from(tick).map_err(|_| anyhow!("adwin tick overflows u32"))?,
+            n_detections: pusize(field(j, "n_detections")?, "n_detections")?,
+            last_shrink_rise: pbool(field(j, "last_shrink_rise")?, "last_shrink_rise")?,
+        })
     }
 
     fn n_buckets(&self) -> usize {
@@ -301,6 +357,30 @@ mod tests {
         assert_eq!(adwin.width(), 0);
         assert_eq!(adwin.n_detections(), 0);
         assert_eq!(adwin.mean(), 0.0);
+    }
+
+    #[test]
+    fn json_roundtrip_fires_at_identical_instants() {
+        let mut live = Adwin::new(0.002);
+        let mut rng = Rng::new(47);
+        for _ in 0..700 {
+            live.update(rng.normal(0.0, 0.5));
+        }
+        let text = live.to_json().to_compact();
+        let mut restored =
+            Adwin::from_json(&crate::common::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(restored.width(), live.width());
+        assert_eq!(restored.mean().to_bits(), live.mean().to_bits());
+        // drive both through a mean shift: detections (and their rising
+        // flags) must land on the same updates
+        for _ in 0..800 {
+            let v = rng.normal(3.0, 0.5);
+            assert_eq!(live.update(v), restored.update(v));
+            assert_eq!(live.rising(), restored.rising());
+        }
+        assert!(live.n_detections() >= 1, "shift must be detected");
+        assert_eq!(restored.n_detections(), live.n_detections());
+        assert_eq!(restored.width(), live.width());
     }
 
     #[test]

@@ -19,17 +19,29 @@
 
 use std::sync::Arc;
 
+use anyhow::{anyhow, Result};
+
+use crate::common::json::Json;
 use crate::common::Rng;
 use crate::eval::Regressor;
-use crate::observer::{ArcFactory, ObserverFactory};
+use crate::observer::{ArcFactory, ObserverFactory, ObserverSpec};
+use crate::persist::codec::{
+    field, jf64, ju64, jusize, parr, pbool, pf64, pstr, pu64, pusize, rng_from,
+    rng_to_json,
+};
 use crate::runtime::backend::SplitBackend;
 use crate::tree::{HoeffdingTreeRegressor, HtrOptions};
 
 use super::adwin::Adwin;
 use super::batch::flush_split_attempts;
 use super::parallel::ParallelEnsemble;
-use super::vote::fold_votes;
+use super::vote::{fold_votes, fold_votes_weighted};
 use crate::tree::subspace::SubspaceSize;
+
+/// Fading factor of the per-member recent-error estimate feeding the
+/// accuracy-weighted vote (normalized EWMA; ~1/(1−λ) ≈ 100-instance
+/// horizon, fast enough to re-rank members during drift recovery).
+const VOTE_ERR_FADE: f64 = 0.99;
 
 /// ARF hyper-parameters.
 #[derive(Clone, Copy, Debug)]
@@ -50,6 +62,11 @@ pub struct ArfOptions {
     /// Master seed; member PRNGs, tree seeds and background-tree seeds all
     /// derive from it deterministically.
     pub seed: u64,
+    /// Fold the ensemble vote by inverse recent prequential error
+    /// ([`fold_votes_weighted`]) instead of the flat trained-member mean —
+    /// members still fitting the current concept outvote stale ones
+    /// during drift recovery. CLI: `qostream forest --weighted-vote`.
+    pub weighted_vote: bool,
 }
 
 impl Default for ArfOptions {
@@ -62,7 +79,40 @@ impl Default for ArfOptions {
             subspace: SubspaceSize::Sqrt,
             tree: HtrOptions::default(),
             seed: 1,
+            weighted_vote: false,
         }
+    }
+}
+
+impl ArfOptions {
+    /// Checkpoint encoding ([`crate::persist`]).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("n_members", jusize(self.n_members))
+            .set("lambda", jf64(self.lambda))
+            .set("warning_delta", jf64(self.warning_delta))
+            .set("drift_delta", jf64(self.drift_delta))
+            .set("subspace", self.subspace.label())
+            .set("tree", self.tree.to_json())
+            .set("seed", ju64(self.seed))
+            .set("weighted_vote", self.weighted_vote);
+        o
+    }
+
+    /// Decode options written by [`ArfOptions::to_json`].
+    pub fn from_json(j: &Json) -> Result<ArfOptions> {
+        let subspace = pstr(field(j, "subspace")?, "subspace")?;
+        Ok(ArfOptions {
+            n_members: pusize(field(j, "n_members")?, "n_members")?,
+            lambda: pf64(field(j, "lambda")?, "lambda")?,
+            warning_delta: pf64(field(j, "warning_delta")?, "warning_delta")?,
+            drift_delta: pf64(field(j, "drift_delta")?, "drift_delta")?,
+            subspace: SubspaceSize::parse(subspace)
+                .ok_or_else(|| anyhow!("unknown subspace {subspace:?}"))?,
+            tree: HtrOptions::from_json(field(j, "tree")?)?,
+            seed: pu64(field(j, "seed")?, "seed")?,
+            weighted_vote: pbool(field(j, "weighted_vote")?, "weighted_vote")?,
+        })
     }
 }
 
@@ -88,6 +138,15 @@ pub struct ArfMember {
     bg_trained: bool,
     n_warnings: usize,
     n_drifts: usize,
+    /// Recent prequential absolute error (EWMA, [`VOTE_ERR_FADE`]) feeding
+    /// the accuracy-weighted vote. Deliberately NOT reset on drift swaps:
+    /// the estimate is *about this member slot's current output quality*,
+    /// and the ~100-instance horizon re-converges quickly either way.
+    vote_err: f64,
+    /// Whether `vote_err` has absorbed its first sample (the first error
+    /// seeds the EWMA directly, so early weights are not inflated by the
+    /// zero initialization).
+    vote_seeded: bool,
 }
 
 impl ArfMember {
@@ -133,6 +192,12 @@ impl ArfMember {
             }
         }
         let Some(err) = err else { return };
+        self.vote_err = if self.vote_seeded {
+            VOTE_ERR_FADE * self.vote_err + (1.0 - VOTE_ERR_FADE) * err
+        } else {
+            err
+        };
+        self.vote_seeded = true;
         let warning = self.warning.update(err);
         let drift = self.drift.update(err);
         // Only a RISING error is degradation. A falling error is the tree
@@ -193,6 +258,18 @@ impl ArfMember {
         self.train_queued(x, y);
         self.flush();
     }
+
+    /// Recent error for the weighted vote: `+∞` until the EWMA has seen
+    /// its first sample, so a member trained one instance ago folds with
+    /// weight 0 instead of the maximal weight (see
+    /// [`fold_votes_weighted`]).
+    fn recent_err(&self) -> f64 {
+        if self.vote_seeded {
+            self.vote_err
+        } else {
+            f64::INFINITY
+        }
+    }
 }
 
 /// The Adaptive Random Forest Regressor.
@@ -244,6 +321,8 @@ impl ArfRegressor {
                     bg_trained: false,
                     n_warnings: 0,
                     n_drifts: 0,
+                    vote_err: 0.0,
+                    vote_seeded: false,
                 }
             })
             .collect();
@@ -252,6 +331,11 @@ impl ArfRegressor {
 
     pub fn n_members(&self) -> usize {
         self.members.len()
+    }
+
+    /// Input dimensionality the forest was built for.
+    pub fn n_features(&self) -> usize {
+        self.members.first().map(|m| m.n_features).unwrap_or(0)
     }
 
     /// Warnings raised across all members (background trees started).
@@ -282,13 +366,114 @@ impl ArfRegressor {
         self.backend = backend;
         self
     }
+
+    /// Checkpoint encoding ([`crate::persist`]): options plus every
+    /// member's complete state — foreground and background trees, both
+    /// ADWIN detectors, the member PRNG and the vote-error estimate — so
+    /// a restored forest predicts and keeps training bit-for-bit like the
+    /// live one.
+    pub fn to_json(&self) -> Result<Json> {
+        let mut members = Vec::with_capacity(self.members.len());
+        for m in &self.members {
+            let mut o = Json::obj();
+            o.set("tree", m.tree.to_json()?)
+                .set(
+                    "background",
+                    match &m.background {
+                        Some(bg) => bg.to_json()?,
+                        None => Json::Null,
+                    },
+                )
+                .set("warning", m.warning.to_json())
+                .set("drift", m.drift.to_json())
+                .set("rng", rng_to_json(&m.rng))
+                .set("tree_options", m.tree_options.to_json())
+                .set("fg_trained", m.fg_trained)
+                .set("bg_trained", m.bg_trained)
+                .set("n_warnings", jusize(m.n_warnings))
+                .set("n_drifts", jusize(m.n_drifts))
+                .set("vote_err", jf64(m.vote_err))
+                .set("vote_seeded", m.vote_seeded);
+            members.push(o);
+        }
+        let spec = ObserverSpec::from_label(&self.observer_label).ok_or_else(|| {
+            anyhow!(
+                "observer factory {:?} is not checkpointable",
+                self.observer_label
+            )
+        })?;
+        let n_features = self
+            .members
+            .first()
+            .map(|m| m.n_features)
+            .ok_or_else(|| anyhow!("forest has no members"))?;
+        let mut o = Json::obj();
+        o.set("options", self.options.to_json())
+            .set("observer", spec.label())
+            .set("n_features", jusize(n_features))
+            .set("members", Json::Arr(members));
+        Ok(o)
+    }
+
+    /// Decode a forest written by [`ArfRegressor::to_json`].
+    pub fn from_json(j: &Json) -> Result<ArfRegressor> {
+        let options = ArfOptions::from_json(field(j, "options")?)?;
+        let label = pstr(field(j, "observer")?, "observer")?;
+        let spec = ObserverSpec::from_label(label)
+            .ok_or_else(|| anyhow!("unknown observer label {label:?}"))?;
+        let shared: Arc<dyn ObserverFactory> = Arc::from(spec.to_factory());
+        let backend = options.tree.split_backend.build();
+        let n_features = pusize(field(j, "n_features")?, "n_features")?;
+        let mut members = Vec::new();
+        for m in parr(field(j, "members")?, "members")? {
+            let background = match field(m, "background")? {
+                Json::Null => None,
+                bg => Some(HoeffdingTreeRegressor::from_json(bg)?),
+            };
+            members.push(ArfMember {
+                tree: HoeffdingTreeRegressor::from_json(field(m, "tree")?)?,
+                background,
+                warning: Adwin::from_json(field(m, "warning")?)?,
+                drift: Adwin::from_json(field(m, "drift")?)?,
+                rng: rng_from(field(m, "rng")?, "rng")?,
+                n_features,
+                lambda: options.lambda,
+                tree_options: HtrOptions::from_json(field(m, "tree_options")?)?,
+                factory: shared.clone(),
+                backend: backend.clone(),
+                fg_trained: pbool(field(m, "fg_trained")?, "fg_trained")?,
+                bg_trained: pbool(field(m, "bg_trained")?, "bg_trained")?,
+                n_warnings: pusize(field(m, "n_warnings")?, "n_warnings")?,
+                n_drifts: pusize(field(m, "n_drifts")?, "n_drifts")?,
+                vote_err: pf64(field(m, "vote_err")?, "vote_err")?,
+                vote_seeded: pbool(field(m, "vote_seeded")?, "vote_seeded")?,
+            });
+        }
+        if members.is_empty() {
+            return Err(anyhow!("forest checkpoint has no members"));
+        }
+        Ok(ArfRegressor {
+            members,
+            options,
+            observer_label: label.to_string(),
+            backend,
+        })
+    }
 }
 
 impl Regressor for ArfRegressor {
     fn predict(&self, x: &[f64]) -> f64 {
         // only trained members vote: a fresh post-drift-swap tree predicts
         // the untrained prior mean and would drag the forest toward it
-        fold_votes(self.members.iter().map(|m| (m.tree.predict(x), m.fg_trained)))
+        if self.options.weighted_vote {
+            fold_votes_weighted(
+                self.members
+                    .iter()
+                    .map(|m| (m.tree.predict(x), m.fg_trained, m.recent_err())),
+            )
+        } else {
+            fold_votes(self.members.iter().map(|m| (m.tree.predict(x), m.fg_trained)))
+        }
     }
 
     fn learn_one(&mut self, x: &[f64], y: f64) {
@@ -360,6 +545,14 @@ impl ParallelEnsemble for ArfRegressor {
 
     fn member_trained(member: &ArfMember) -> bool {
         member.fg_trained
+    }
+
+    fn member_recent_err(member: &ArfMember) -> f64 {
+        member.recent_err()
+    }
+
+    fn weighted_vote(&self) -> bool {
+        self.options.weighted_vote
     }
 }
 
@@ -518,5 +711,67 @@ mod tests {
         assert_eq!(arf.name(), "arf[4xQO_s2]");
         assert_eq!(arf.n_members(), 4);
         assert_eq!(arf.options().lambda, 3.0);
+    }
+
+    #[test]
+    fn json_roundtrip_predicts_and_trains_identically() {
+        let mut arf = small_arf(3, 29);
+        let mut stream = Friedman1::new(55, 1.0);
+        for _ in 0..2500 {
+            let inst = stream.next_instance().unwrap();
+            arf.learn_one(&inst.x, inst.y);
+        }
+        let text = arf.to_json().unwrap().to_compact();
+        let mut back =
+            ArfRegressor::from_json(&crate::common::json::Json::parse(&text).unwrap())
+                .unwrap();
+        assert_eq!(back.name(), arf.name());
+        assert_eq!(back.n_members(), arf.n_members());
+        assert_eq!(back.n_splits(), arf.n_splits());
+        let probe = [0.5; 10];
+        assert_eq!(arf.predict(&probe).to_bits(), back.predict(&probe).to_bits());
+        // continued training — including member Poisson draws, detector
+        // updates and any drift swaps — stays bit-for-bit identical
+        for _ in 0..2500 {
+            let inst = stream.next_instance().unwrap();
+            arf.learn_one(&inst.x, inst.y);
+            back.learn_one(&inst.x, inst.y);
+        }
+        assert_eq!(back.n_splits(), arf.n_splits());
+        assert_eq!(back.n_drifts(), arf.n_drifts());
+        assert_eq!(arf.predict(&probe).to_bits(), back.predict(&probe).to_bits());
+    }
+
+    #[test]
+    fn weighted_vote_flag_changes_only_the_fold() {
+        let run = |weighted: bool| {
+            let mut arf = ArfRegressor::new(
+                10,
+                ArfOptions {
+                    n_members: 3,
+                    lambda: 3.0,
+                    seed: 41,
+                    weighted_vote: weighted,
+                    ..Default::default()
+                },
+                qo_factory(),
+            );
+            let mut stream = Friedman1::new(7, 1.0);
+            for _ in 0..2000 {
+                let inst = stream.next_instance().unwrap();
+                arf.learn_one(&inst.x, inst.y);
+            }
+            arf
+        };
+        let flat = run(false);
+        let weighted = run(true);
+        // training is identical (the vote never feeds back into training)…
+        assert_eq!(flat.n_splits(), weighted.n_splits());
+        // …and the folds genuinely differ once member errors diverge
+        let probe = [0.3; 10];
+        assert_ne!(
+            flat.predict(&probe).to_bits(),
+            weighted.predict(&probe).to_bits()
+        );
     }
 }

@@ -11,15 +11,23 @@
 
 use std::sync::Arc;
 
+use anyhow::{anyhow, Result};
+
+use crate::common::json::Json;
 use crate::common::Rng;
 use crate::eval::Regressor;
-use crate::observer::{ArcFactory, ObserverFactory};
+use crate::observer::{ArcFactory, ObserverFactory, ObserverSpec};
+use crate::persist::codec::{field, jf64, parr, pbool, pf64, pstr, rng_from, rng_to_json};
 use crate::runtime::backend::SplitBackend;
 use crate::tree::{HoeffdingTreeRegressor, HtrOptions};
 
 use super::batch::flush_split_attempts;
 use super::parallel::ParallelEnsemble;
-use super::vote::fold_votes;
+use super::vote::{fold_votes, fold_votes_weighted};
+
+/// Fading factor of the per-member recent-error estimate (see
+/// [`super::arf`]'s identically tuned constant).
+const VOTE_ERR_FADE: f64 = 0.99;
 
 /// One bagged member: a tree plus its private Poisson weighting stream.
 pub struct BagMember {
@@ -31,6 +39,13 @@ pub struct BagMember {
     /// can be zero early on, and an untrained tree's prior-mean prediction
     /// must not enter the ensemble vote.
     trained: bool,
+    /// Whether to maintain `vote_err` (costs one tree traversal per
+    /// instance, so it is only paid when the weighted vote is on).
+    track_err: bool,
+    /// Recent prequential absolute error (EWMA) for the weighted vote.
+    vote_err: f64,
+    /// Whether `vote_err` absorbed its first sample yet.
+    vote_seeded: bool,
 }
 
 impl BagMember {
@@ -38,6 +53,16 @@ impl BagMember {
     /// times — the online analogue of being left out of the bootstrap),
     /// queueing due split attempts on the tree.
     pub(crate) fn train_queued(&mut self, x: &[f64], y: f64) {
+        if self.track_err && self.trained {
+            // prequential: error of the pre-update prediction
+            let err = (y - self.tree.predict(x)).abs();
+            self.vote_err = if self.vote_seeded {
+                VOTE_ERR_FADE * self.vote_err + (1.0 - VOTE_ERR_FADE) * err
+            } else {
+                err
+            };
+            self.vote_seeded = true;
+        }
         let k = self.rng.poisson(self.lambda);
         for _ in 0..k {
             self.tree.learn_one_deferred(x, y);
@@ -56,6 +81,16 @@ impl BagMember {
             flush_split_attempts(self.backend.as_ref(), &mut [&mut self.tree]);
         }
     }
+
+    /// Recent error for the weighted vote: `+∞` until the EWMA has seen
+    /// its first sample (weight 0; see [`fold_votes_weighted`]).
+    fn recent_err(&self) -> f64 {
+        if self.vote_seeded {
+            self.vote_err
+        } else {
+            f64::INFINITY
+        }
+    }
 }
 
 /// Online bagging ensemble of Hoeffding tree regressors.
@@ -64,6 +99,8 @@ pub struct OnlineBaggingRegressor {
     observer_label: String,
     /// Shared split-query engine: one batched call per `learn_one` round.
     backend: Arc<dyn SplitBackend>,
+    /// Fold the vote by inverse recent error ([`fold_votes_weighted`]).
+    weighted_vote: bool,
 }
 
 impl OnlineBaggingRegressor {
@@ -98,14 +135,35 @@ impl OnlineBaggingRegressor {
                     lambda,
                     backend: backend.clone(),
                     trained: false,
+                    track_err: false,
+                    vote_err: 0.0,
+                    vote_seeded: false,
                 }
             })
             .collect();
-        OnlineBaggingRegressor { members, observer_label, backend }
+        OnlineBaggingRegressor { members, observer_label, backend, weighted_vote: false }
+    }
+
+    /// Enable (or disable) the accuracy-weighted vote: members fold with
+    /// weight inverse to their recent prequential error
+    /// ([`fold_votes_weighted`]). Turning it on also starts the per-member
+    /// error tracking (one extra tree traversal per member per instance).
+    /// CLI: `qostream forest --weighted-vote`.
+    pub fn with_weighted_vote(mut self, weighted: bool) -> OnlineBaggingRegressor {
+        self.weighted_vote = weighted;
+        for member in &mut self.members {
+            member.track_err = weighted;
+        }
+        self
     }
 
     pub fn n_members(&self) -> usize {
         self.members.len()
+    }
+
+    /// Input dimensionality the ensemble was built for.
+    pub fn n_features(&self) -> usize {
+        self.members.first().map(|m| m.tree.n_features()).unwrap_or(0)
     }
 
     /// Total splits across members (growth indicator).
@@ -125,6 +183,75 @@ impl OnlineBaggingRegressor {
         self.backend = backend;
         self
     }
+
+    /// Checkpoint encoding ([`crate::persist`]): every member's tree, PRNG
+    /// and vote state (λ and the observer travel at the top level — they
+    /// are shared configuration).
+    pub fn to_json(&self) -> Result<Json> {
+        let spec = ObserverSpec::from_label(&self.observer_label).ok_or_else(|| {
+            anyhow!(
+                "observer factory {:?} is not checkpointable",
+                self.observer_label
+            )
+        })?;
+        let first = self
+            .members
+            .first()
+            .ok_or_else(|| anyhow!("ensemble has no members"))?;
+        let mut members = Vec::with_capacity(self.members.len());
+        for m in &self.members {
+            let mut o = Json::obj();
+            o.set("tree", m.tree.to_json()?)
+                .set("rng", rng_to_json(&m.rng))
+                .set("trained", m.trained)
+                .set("vote_err", jf64(m.vote_err))
+                .set("vote_seeded", m.vote_seeded);
+            members.push(o);
+        }
+        let mut o = Json::obj();
+        o.set("observer", spec.label())
+            .set("lambda", jf64(first.lambda))
+            .set("weighted_vote", self.weighted_vote)
+            .set("members", Json::Arr(members));
+        Ok(o)
+    }
+
+    /// Decode an ensemble written by [`OnlineBaggingRegressor::to_json`].
+    pub fn from_json(j: &Json) -> Result<OnlineBaggingRegressor> {
+        let label = pstr(field(j, "observer")?, "observer")?;
+        if ObserverSpec::from_label(label).is_none() {
+            return Err(anyhow!("unknown observer label {label:?}"));
+        }
+        let lambda = pf64(field(j, "lambda")?, "lambda")?;
+        let weighted_vote = pbool(field(j, "weighted_vote")?, "weighted_vote")?;
+        let mut members = Vec::new();
+        let mut backend: Option<Arc<dyn SplitBackend>> = None;
+        for m in parr(field(j, "members")?, "members")? {
+            let tree = HoeffdingTreeRegressor::from_json(field(m, "tree")?)?;
+            let member_backend = backend
+                .get_or_insert_with(|| tree.options().split_backend.build())
+                .clone();
+            members.push(BagMember {
+                tree,
+                rng: rng_from(field(m, "rng")?, "rng")?,
+                lambda,
+                backend: member_backend,
+                trained: pbool(field(m, "trained")?, "trained")?,
+                track_err: weighted_vote,
+                vote_err: pf64(field(m, "vote_err")?, "vote_err")?,
+                vote_seeded: pbool(field(m, "vote_seeded")?, "vote_seeded")?,
+            });
+        }
+        if members.is_empty() {
+            return Err(anyhow!("bagging checkpoint has no members"));
+        }
+        Ok(OnlineBaggingRegressor {
+            members,
+            observer_label: label.to_string(),
+            backend: backend.expect("members is non-empty"),
+            weighted_vote,
+        })
+    }
 }
 
 impl Regressor for OnlineBaggingRegressor {
@@ -132,7 +259,15 @@ impl Regressor for OnlineBaggingRegressor {
         // only trained members vote (see [`super::vote`]): with every
         // Poisson draw possibly zero, a member can stay at the untrained
         // prior for a while
-        fold_votes(self.members.iter().map(|m| (m.tree.predict(x), m.trained)))
+        if self.weighted_vote {
+            fold_votes_weighted(
+                self.members
+                    .iter()
+                    .map(|m| (m.tree.predict(x), m.trained, m.recent_err())),
+            )
+        } else {
+            fold_votes(self.members.iter().map(|m| (m.tree.predict(x), m.trained)))
+        }
     }
 
     fn learn_one(&mut self, x: &[f64], y: f64) {
@@ -197,6 +332,14 @@ impl ParallelEnsemble for OnlineBaggingRegressor {
 
     fn member_trained(member: &BagMember) -> bool {
         member.trained
+    }
+
+    fn member_recent_err(member: &BagMember) -> f64 {
+        member.recent_err()
+    }
+
+    fn weighted_vote(&self) -> bool {
+        self.weighted_vote
     }
 }
 
@@ -288,5 +431,117 @@ mod tests {
         let bag =
             OnlineBaggingRegressor::new(2, 3, 1.0, HtrOptions::default(), qo_factory(), 1);
         assert_eq!(bag.name(), "bag[3xQO_s2]");
+    }
+
+    #[test]
+    fn json_roundtrip_predicts_and_trains_identically() {
+        let mut bag = OnlineBaggingRegressor::new(
+            10,
+            3,
+            2.0,
+            HtrOptions::default(),
+            qo_factory(),
+            23,
+        );
+        let mut stream = Friedman1::new(11, 1.0);
+        for _ in 0..2500 {
+            let inst = stream.next_instance().unwrap();
+            bag.learn_one(&inst.x, inst.y);
+        }
+        let text = bag.to_json().unwrap().to_compact();
+        let mut back = OnlineBaggingRegressor::from_json(
+            &crate::common::json::Json::parse(&text).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.name(), bag.name());
+        assert_eq!(back.n_splits(), bag.n_splits());
+        let probe = [0.4; 10];
+        assert_eq!(bag.predict(&probe).to_bits(), back.predict(&probe).to_bits());
+        for _ in 0..2500 {
+            let inst = stream.next_instance().unwrap();
+            bag.learn_one(&inst.x, inst.y);
+            back.learn_one(&inst.x, inst.y);
+        }
+        assert_eq!(back.n_splits(), bag.n_splits());
+        assert_eq!(bag.predict(&probe).to_bits(), back.predict(&probe).to_bits());
+    }
+
+    #[test]
+    fn weighted_vote_beats_flat_mean_after_concept_swap() {
+        // Concept A: Friedman #1. Concept B: its reflection y ↦ 20 − y
+        // (a drastic swap, so a stale member is *systematically* wrong).
+        // Members 1 and 2 keep adapting on B while member 0 stops
+        // training at the swap — the situation accuracy weighting exists
+        // for: the flat mean keeps averaging the stale member in, the
+        // weighted vote suppresses it by its inverse recent error.
+        let mut bag = OnlineBaggingRegressor::new(
+            10,
+            3,
+            1.0,
+            HtrOptions::default(),
+            qo_factory(),
+            19,
+        )
+        .with_weighted_vote(true);
+        let mut concept_a = Friedman1::new(5, 1.0);
+        for _ in 0..4000 {
+            let inst = concept_a.next_instance().unwrap();
+            bag.learn_one(&inst.x, inst.y);
+        }
+        let mut concept_b = Friedman1::new(6, 1.0);
+        for _ in 0..6000 {
+            let inst = concept_b.next_instance().unwrap();
+            let y = 20.0 - inst.y;
+            for m in 1..3 {
+                bag.members[m].learn(&inst.x, y);
+            }
+        }
+        // recent errors exactly as the prequential monitor would settle
+        // on them: each member's MAE on held-out concept-B instances
+        let mut probe = Friedman1::new(7, 0.0);
+        let probes: Vec<(Vec<f64>, f64)> = (0..300)
+            .map(|_| {
+                let inst = probe.next_instance().unwrap();
+                (inst.x, 20.0 - inst.y)
+            })
+            .collect();
+        for m in 0..3 {
+            let mae = probes
+                .iter()
+                .map(|(x, y)| (y - bag.members[m].tree.predict(x)).abs())
+                .sum::<f64>()
+                / probes.len() as f64;
+            bag.members[m].vote_err = mae;
+            bag.members[m].vote_seeded = true;
+        }
+        assert!(
+            bag.members[0].vote_err > bag.members[1].vote_err
+                && bag.members[0].vote_err > bag.members[2].vote_err,
+            "the member left on concept A must be the stale one: {:?}",
+            [
+                bag.members[0].vote_err,
+                bag.members[1].vote_err,
+                bag.members[2].vote_err
+            ]
+        );
+        let rmse = |bag: &OnlineBaggingRegressor| {
+            (probes
+                .iter()
+                .map(|(x, y)| {
+                    let e = y - bag.predict(x);
+                    e * e
+                })
+                .sum::<f64>()
+                / probes.len() as f64)
+                .sqrt()
+        };
+        let weighted = rmse(&bag);
+        bag.weighted_vote = false;
+        let flat = rmse(&bag);
+        assert!(
+            weighted < flat,
+            "weighted vote must beat the flat mean after the swap: \
+             weighted {weighted} vs flat {flat}"
+        );
     }
 }

@@ -51,4 +51,4 @@ pub use arf::{ArfOptions, ArfRegressor};
 pub use bagging::OnlineBaggingRegressor;
 pub use batch::flush_split_attempts;
 pub use parallel::{fit_parallel, ParallelEnsemble, ParallelFitConfig, ParallelFitReport};
-pub use vote::fold_votes;
+pub use vote::{fold_votes, fold_votes_weighted};

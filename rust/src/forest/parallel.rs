@@ -68,6 +68,22 @@ pub trait ParallelEnsemble {
     /// members are excluded from the ensemble vote
     /// ([`crate::forest::fold_votes`]).
     fn member_trained(member: &Self::Member) -> bool;
+
+    /// The member's recent prequential error, consumed by the
+    /// accuracy-weighted vote ([`crate::forest::vote::fold_votes_weighted`]).
+    /// Ignored unless [`Self::weighted_vote`] is on; the default suits
+    /// ensembles that never weight.
+    fn member_recent_err(_member: &Self::Member) -> f64 {
+        0.0
+    }
+
+    /// Whether the ensemble folds votes by inverse recent error. The
+    /// sharded leader ([`crate::coordinator::forest`]) consults this so
+    /// its merged vote replays exactly the fold the sequential `predict`
+    /// uses.
+    fn weighted_vote(&self) -> bool {
+        false
+    }
 }
 
 /// The shared leader loop: pull up to `max_instances` from `stream`,

@@ -17,6 +17,42 @@
 //! sum — instead shards ship per-member votes and the leader replays the
 //! exact sequential fold.
 
+/// Floor added to a member's recent error before inversion, so a member
+/// with a (transiently) zero error estimate cannot swallow the whole vote.
+const WEIGHT_ERR_FLOOR: f64 = 1e-6;
+
+/// Accuracy-weighted fold: each *trained* member votes with weight
+/// `1 / (ε + recent_err)` — its inverse recent prequential absolute error
+/// — so members still fitting the current concept count for more than
+/// members whose error exploded after a drift. Folds **in member order**
+/// (same reasoning as [`fold_votes`]: the sharded leader replays this
+/// exact fold, and IEEE addition is not associative). Falls back to the
+/// flat mean of every member's prediction when no weight mass exists —
+/// no member trained, or every trained member still lacks an error
+/// estimate. A member with no estimate yet must pass `recent_err = +∞`
+/// (weight exactly 0.0), NOT 0.0: a zero error would hand a barely
+/// trained tree the maximal weight and let it swallow the vote.
+pub fn fold_votes_weighted<I: Iterator<Item = (f64, bool, f64)>>(votes: I) -> f64 {
+    let (mut sum_all, mut n_all) = (0.0f64, 0usize);
+    let (mut num, mut den) = (0.0f64, 0.0f64);
+    for (pred, trained, recent_err) in votes {
+        sum_all += pred;
+        n_all += 1;
+        if trained {
+            let w = 1.0 / (WEIGHT_ERR_FLOOR + recent_err.max(0.0));
+            num += w * pred;
+            den += w;
+        }
+    }
+    if den > 0.0 {
+        num / den
+    } else if n_all > 0 {
+        sum_all / n_all as f64
+    } else {
+        0.0
+    }
+}
+
 /// Fold `(prediction, trained)` votes, in member order, into the ensemble
 /// prediction (see module docs). Returns 0.0 for an empty vote.
 pub fn fold_votes<I: Iterator<Item = (f64, bool)>>(votes: I) -> f64 {
@@ -64,5 +100,54 @@ mod tests {
     fn single_trained_member_wins_outright() {
         let v = fold_votes([(0.0, false), (7.5, true), (0.0, false)].into_iter());
         assert_eq!(v, 7.5);
+    }
+
+    #[test]
+    fn weighted_vote_downweights_the_inaccurate_member() {
+        // truth 10.0; one stale member predicts 0.0 with a large recent
+        // error: the weighted vote must land far closer to the truth than
+        // the flat mean does
+        let votes = [(10.0, true, 0.1), (10.2, true, 0.1), (0.0, true, 5.0)];
+        let weighted = fold_votes_weighted(votes.into_iter());
+        let flat = fold_votes(votes.into_iter().map(|(p, t, _)| (p, t)));
+        assert!((weighted - 10.0).abs() < (flat - 10.0).abs());
+        assert!((weighted - 10.0).abs() < 0.5, "weighted={weighted}");
+        assert!((flat - 10.0).abs() > 3.0, "flat={flat}");
+    }
+
+    #[test]
+    fn weighted_vote_equal_errors_equals_flat_mean() {
+        let votes = [(1.0, true, 0.5), (2.0, true, 0.5), (6.0, true, 0.5)];
+        let weighted = fold_votes_weighted(votes.into_iter());
+        assert!((weighted - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weighted_vote_untrained_fallback_and_empty() {
+        let v = fold_votes_weighted([(1.0, false, 0.0), (3.0, false, 9.0)].into_iter());
+        assert_eq!(v, 2.0);
+        assert_eq!(fold_votes_weighted(std::iter::empty()), 0.0);
+    }
+
+    #[test]
+    fn weighted_vote_zero_error_does_not_divide_by_zero() {
+        let v = fold_votes_weighted([(4.0, true, 0.0), (8.0, true, 0.0)].into_iter());
+        assert!(v.is_finite());
+        assert!((v - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weighted_vote_infinite_error_means_zero_weight() {
+        // the no-estimate-yet sentinel: the member is excluded, it does
+        // not dominate
+        let v = fold_votes_weighted(
+            [(100.0, true, f64::INFINITY), (2.0, true, 0.5)].into_iter(),
+        );
+        assert!((v - 2.0).abs() < 1e-9, "v={v}");
+        // all-sentinel trained members: fall back to the flat mean
+        let v = fold_votes_weighted(
+            [(1.0, true, f64::INFINITY), (3.0, true, f64::INFINITY)].into_iter(),
+        );
+        assert!((v - 2.0).abs() < 1e-9, "v={v}");
     }
 }

@@ -32,10 +32,17 @@
 //!   round-trip per shard per tick.
 //! * [`runtime`] — a PJRT/XLA backend that executes the AOT-compiled
 //!   JAX/Pallas split-evaluation artifacts from `artifacts/`.
+//! * [`persist`] — the versioned JSON model codec: `save → load` is
+//!   bit-for-bit invisible to prediction *and* continued training, for
+//!   trees, forests and every observer kind.
+//! * [`serve`] — a std-only TCP learn/predict server: one trainer thread
+//!   owns the mutable model, reader threads answer predictions from
+//!   immutable hot-swapped snapshots, checkpoints on demand.
 //! * [`bench_suite`] — regenerates every table and figure of the paper's
-//!   evaluation (see DESIGN.md for the experiment index).
-//! * [`common`] — zero-dependency substrate: PRNG, JSON writer, ASCII
-//!   tables/plots, a tiny property-testing harness, CLI parsing.
+//!   evaluation (see DESIGN.md for the experiment index), plus the
+//!   serving latency/checkpoint-size scenario.
+//! * [`common`] — zero-dependency substrate: PRNG, JSON reader/writer,
+//!   ASCII tables/plots, a tiny property-testing harness, CLI parsing.
 
 pub mod bench_suite;
 pub mod common;
@@ -44,7 +51,9 @@ pub mod criterion;
 pub mod eval;
 pub mod forest;
 pub mod observer;
+pub mod persist;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod stream;
 pub mod tree;

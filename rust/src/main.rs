@@ -1,6 +1,7 @@
 //! `qostream` CLI — the L3 entrypoint.
 //!
-//! Subcommands map one-to-one onto the paper's evaluation (DESIGN.md §3):
+//! Subcommands map one-to-one onto the paper's evaluation (DESIGN.md §3)
+//! plus the production-facing layers grown on top of it:
 //!
 //! ```text
 //! qostream protocol --describe                # Table 1 grid
@@ -10,50 +11,74 @@
 //! qostream tree [--instances N] [--seed S]    # Sec. 7 integration
 //! qostream forest [--members N] [--lambda L] [--subspace sqrt|all|K]
 //!                 [--split-backend per-observer|native-batch|xla] [--parallel W]
-//!                 [--shards N]                 # leader/shard distributed fit
+//!                 [--shards N] [--weighted-vote]
 //! qostream coordinator [--shards N] [--instances N]
+//! qostream serve [--port P] [--model tree|arf|bag] [--observer qo|ebst|<label>]
+//!                [--members N] [--snapshot-every K] [--restore ckpt.json]
+//!                [--checkpoint-out ckpt.json] [--bench]
+//! qostream checkpoint --out ckpt.json [--model ...] [--instances N]
+//! qostream checkpoint --load ckpt.json
 //! qostream xla [--instances N] [--radius R]
 //! qostream all                                # everything, standard profile
 //! ```
+//!
+//! Error contract: an unknown subcommand or a malformed flag prints the
+//! error and the usage to **stderr** and exits nonzero (regression-tested
+//! in `rust/tests/cli_usage.rs`); plain `qostream` prints usage to stdout
+//! and exits 0.
 
-use anyhow::Result;
+use anyhow::{anyhow, bail, Result};
 
-use qostream::bench_suite::{cd, fig1, fig3, forest_bench, protocol::Profile, tree_bench, Protocol};
+use qostream::bench_suite::{
+    cd, fig1, fig3, forest_bench, protocol::Profile, serve_bench, tree_bench, Protocol,
+};
 use qostream::common::cli::Args;
 use qostream::common::timing::human_time;
 use qostream::coordinator::{CoordinatorConfig, ShardedObserverCoordinator};
 use qostream::criterion::VarianceReduction;
 use qostream::eval::Regressor;
-use qostream::forest::{fit_parallel, ArfOptions, ArfRegressor, ParallelFitConfig, SubspaceSize};
-use qostream::observer::AttributeObserver;
+use qostream::forest::{
+    fit_parallel, ArfOptions, ArfRegressor, OnlineBaggingRegressor, ParallelFitConfig,
+    SubspaceSize,
+};
+use qostream::observer::{AttributeObserver, ObserverSpec};
+use qostream::persist::Model;
 use qostream::runtime::{find_artifacts_dir, Manifest, SplitBackendKind, XlaSplitEngine};
+use qostream::serve::{ServeOptions, Server};
 use qostream::stream::{Friedman1, Stream};
+use qostream::tree::{HoeffdingTreeRegressor, HtrOptions};
 
-fn protocol_from(args: &Args) -> Protocol {
+fn protocol_from(args: &Args) -> Result<Protocol> {
     let profile = Profile::parse(args.get_or("profile", "standard"))
-        .unwrap_or_else(|| panic!("--profile must be quick|standard|full"));
+        .ok_or_else(|| anyhow!("--profile must be quick|standard|full"))?;
     let mut protocol = Protocol::new(profile);
     if let Some(sizes) = args.opt("sizes") {
         let sizes: Vec<usize> = sizes
             .split(',')
-            .map(|s| s.trim().parse().unwrap_or_else(|_| panic!("bad size {s:?}")))
-            .collect();
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| anyhow!("--sizes expects integers, got {s:?}"))
+            })
+            .collect::<Result<_>>()?;
         protocol = protocol.with_sizes(sizes);
     }
     if let Some(reps) = args.opt("reps") {
-        protocol = protocol.with_repetitions(reps.parse().expect("--reps integer"));
+        protocol = protocol.with_repetitions(
+            reps.parse().map_err(|_| anyhow!("--reps expects an integer, got {reps:?}"))?,
+        );
     }
-    protocol
+    Ok(protocol)
 }
 
 fn cmd_protocol(args: &Args) -> Result<()> {
-    let protocol = protocol_from(args);
+    let protocol = protocol_from(args)?;
     println!("{}", protocol.describe());
     Ok(())
 }
 
 fn cmd_fig1(args: &Args) -> Result<()> {
-    let protocol = protocol_from(args);
+    let protocol = protocol_from(args)?;
     eprintln!("fig1: {}", protocol.describe());
     let rendered = fig1::generate(&protocol, !args.flag("quiet"))?;
     println!("{rendered}");
@@ -62,7 +87,7 @@ fn cmd_fig1(args: &Args) -> Result<()> {
 }
 
 fn cmd_fig3(args: &Args) -> Result<()> {
-    let protocol = protocol_from(args);
+    let protocol = protocol_from(args)?;
     eprintln!("fig3: {}", protocol.describe());
     let rendered = fig3::generate(&protocol, !args.flag("quiet"))?;
     println!("{rendered}");
@@ -71,7 +96,7 @@ fn cmd_fig3(args: &Args) -> Result<()> {
 }
 
 fn cmd_cd(args: &Args) -> Result<()> {
-    let protocol = protocol_from(args);
+    let protocol = protocol_from(args)?;
     let metric = args.get_or("metric", "all").to_string();
     eprintln!("cd[{metric}]: {}", protocol.describe());
     if metric == "all" {
@@ -85,40 +110,85 @@ fn cmd_cd(args: &Args) -> Result<()> {
 }
 
 fn cmd_tree(args: &Args) -> Result<()> {
-    let instances = args.usize_or("instances", 100_000);
-    let seed = args.u64_or("seed", 1);
+    let instances = args.try_usize("instances", 100_000)?;
+    let seed = args.try_u64("seed", 1)?;
     println!("{}", tree_bench::generate(instances, seed)?);
     println!("written to results/tree/");
     Ok(())
 }
 
-fn observer_factory(kind: &str) -> Box<dyn qostream::observer::ObserverFactory> {
+/// Observer selection shared by `forest`, `serve` and `checkpoint`:
+/// the `qo`/`ebst` shorthands, or any [`ObserverSpec`] label
+/// (`QO_0.01`, `QO_s3`, `TE-BST_3`, `Exhaustive`, …).
+fn observer_factory(kind: &str) -> Result<Box<dyn qostream::observer::ObserverFactory>> {
     match kind {
-        "qo" => forest_bench::qo_factory(),
-        "ebst" => forest_bench::ebst_factory(),
-        other => panic!("--observer must be qo|ebst, got {other:?}"),
+        "qo" => Ok(forest_bench::qo_factory()),
+        "ebst" => Ok(forest_bench::ebst_factory()),
+        other => ObserverSpec::from_label(other)
+            .map(|spec| spec.to_factory())
+            .ok_or_else(|| {
+                anyhow!("--observer must be qo|ebst or an observer label, got {other:?}")
+            }),
     }
 }
 
 fn cmd_forest(args: &Args) -> Result<()> {
-    let instances = args.usize_or("instances", 20_000);
+    let instances = args.try_usize("instances", 20_000)?;
     let cfg = forest_bench::ForestBenchConfig {
         instances,
-        members: args.usize_or("members", 10),
-        lambda: args.f64_or("lambda", 6.0),
+        members: args.try_usize("members", 10)?,
+        lambda: args.try_f64("lambda", 6.0)?,
         subspace: SubspaceSize::parse(args.get_or("subspace", "sqrt"))
-            .unwrap_or_else(|| panic!("--subspace must be all|sqrt|<count>|<fraction>")),
-        seed: args.u64_or("seed", 1),
-        drift_at: args.usize_or("drift-at", instances / 2),
+            .ok_or_else(|| anyhow!("--subspace must be all|sqrt|<count>|<fraction>"))?,
+        seed: args.try_u64("seed", 1)?,
+        drift_at: args.try_usize("drift-at", instances / 2)?,
         split_backend: SplitBackendKind::parse(args.get_or("split-backend", "native-batch"))
-            .unwrap_or_else(|| {
-                panic!("--split-backend must be per-observer|native-batch|xla")
-            }),
+            .ok_or_else(|| anyhow!("--split-backend must be per-observer|native-batch|xla"))?,
     };
     println!("{}", forest_bench::generate(&cfg)?);
     println!("written to results/forest/");
 
-    let workers = args.usize_or("parallel", 0);
+    if args.flag("weighted-vote") {
+        // accuracy-weighted vote demo: same members, same stream, only
+        // the fold differs — compare prequential accuracy around a drift
+        let opts = ArfOptions {
+            n_members: cfg.members,
+            lambda: cfg.lambda,
+            subspace: cfg.subspace,
+            seed: cfg.seed,
+            weighted_vote: true,
+            tree: HtrOptions { split_backend: cfg.split_backend, ..Default::default() },
+            ..Default::default()
+        };
+        let observer = args.get_or("observer", "qo").to_string();
+        let mut weighted = ArfRegressor::new(10, opts, observer_factory(&observer)?);
+        let mut flat = ArfRegressor::new(
+            10,
+            ArfOptions { weighted_vote: false, ..opts },
+            observer_factory(&observer)?,
+        );
+        let (mut err_w, mut err_f) = (0.0f64, 0.0f64);
+        let mut stream = cfg.stream();
+        for i in 0..cfg.instances {
+            let Some(inst) = stream.next_instance() else { break };
+            if i >= cfg.drift_at {
+                let ew = inst.y - weighted.predict(&inst.x);
+                let ef = inst.y - flat.predict(&inst.x);
+                err_w += ew * ew;
+                err_f += ef * ef;
+            }
+            weighted.learn_one(&inst.x, inst.y);
+            flat.learn_one(&inst.x, inst.y);
+        }
+        let n = cfg.instances.saturating_sub(cfg.drift_at).max(1) as f64;
+        println!(
+            "weighted vote (post-drift RMSE): weighted {:.4} vs flat {:.4}",
+            (err_w / n).sqrt(),
+            (err_f / n).sqrt()
+        );
+    }
+
+    let workers = args.try_usize("parallel", 0)?;
     if workers > 0 {
         // multi-core fit demo: same members, same seed, sharded over
         // worker threads — predictions must match the sequential path
@@ -128,13 +198,10 @@ fn cmd_forest(args: &Args) -> Result<()> {
             lambda: cfg.lambda,
             subspace: cfg.subspace,
             seed: cfg.seed,
-            tree: qostream::tree::HtrOptions {
-                split_backend: cfg.split_backend,
-                ..Default::default()
-            },
+            tree: HtrOptions { split_backend: cfg.split_backend, ..Default::default() },
             ..Default::default()
         };
-        let mut sequential = ArfRegressor::new(10, opts, observer_factory(&observer));
+        let mut sequential = ArfRegressor::new(10, opts, observer_factory(&observer)?);
         let mut stream = cfg.stream();
         let (seq_secs, _) = qostream::common::timing::time_once(|| {
             for _ in 0..cfg.instances {
@@ -142,7 +209,7 @@ fn cmd_forest(args: &Args) -> Result<()> {
                 sequential.learn_one(&inst.x, inst.y);
             }
         });
-        let mut parallel = ArfRegressor::new(10, opts, observer_factory(&observer));
+        let mut parallel = ArfRegressor::new(10, opts, observer_factory(&observer)?);
         let report = fit_parallel(
             &mut parallel,
             &mut *cfg.stream(),
@@ -165,7 +232,7 @@ fn cmd_forest(args: &Args) -> Result<()> {
         );
     }
 
-    let shards = args.usize_or("shards", 0);
+    let shards = args.try_usize("shards", 0)?;
     if shards > 0 {
         // leader/shard distributed forest: members sharded across workers,
         // one split-backend round-trip per shard per tick, and the
@@ -176,10 +243,10 @@ fn cmd_forest(args: &Args) -> Result<()> {
 }
 
 fn cmd_coordinator(args: &Args) -> Result<()> {
-    let shards = args.usize_or("shards", 4);
-    let instances = args.usize_or("instances", 500_000);
-    let radius = args.f64_or("radius", 0.05);
-    let mut stream = Friedman1::new(args.u64_or("seed", 1), 1.0);
+    let shards = args.try_usize("shards", 4)?;
+    let instances = args.try_usize("instances", 500_000)?;
+    let radius = args.try_f64("radius", 0.05)?;
+    let mut stream = Friedman1::new(args.try_u64("seed", 1)?, 1.0);
     let coordinator = ShardedObserverCoordinator::new(
         stream.n_features(),
         CoordinatorConfig { n_shards: shards, radius, ..Default::default() },
@@ -206,6 +273,153 @@ fn cmd_coordinator(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build the model `serve`/`checkpoint` operate on: `--restore` loads a
+/// checkpoint, otherwise `--model`/`--observer`/`--members` configure a
+/// fresh one (10 features, matching the Friedman #1 demo streams).
+fn build_model(args: &Args) -> Result<Model> {
+    if let Some(path) = args.opt("restore") {
+        let model = Model::load(path)?;
+        eprintln!("restored {} ({}) from {path}", model.name(), model.kind());
+        return Ok(model);
+    }
+    let observer = args.get_or("observer", "qo").to_string();
+    let n_features = args.try_usize("features", 10)?;
+    let members = args.try_usize("members", 5)?;
+    let seed = args.try_u64("seed", 1)?;
+    let weighted = args.flag("weighted-vote");
+    match args.get_or("model", "arf") {
+        "tree" => Ok(Model::Tree(HoeffdingTreeRegressor::new(
+            n_features,
+            HtrOptions::default(),
+            observer_factory(&observer)?,
+        ))),
+        "arf" => Ok(Model::Arf(ArfRegressor::new(
+            n_features,
+            ArfOptions {
+                n_members: members,
+                seed,
+                weighted_vote: weighted,
+                ..Default::default()
+            },
+            observer_factory(&observer)?,
+        ))),
+        "bag" | "bagging" => Ok(Model::Bagging(
+            OnlineBaggingRegressor::new(
+                n_features,
+                members,
+                6.0,
+                HtrOptions::default(),
+                observer_factory(&observer)?,
+                seed,
+            )
+            .with_weighted_vote(weighted),
+        )),
+        other => bail!("--model must be tree|arf|bag, got {other:?}"),
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    if args.flag("bench") {
+        let cfg = serve_bench::ServeBenchConfig {
+            instances: args.try_usize("instances", 5000)?,
+            members: args.try_usize("members", 5)?,
+            snapshot_every: args.try_usize("snapshot-every", 500)?,
+            min_predict_samples: args.try_usize("predict-samples", 500)?,
+            seed: args.try_u64("seed", 1)?,
+        };
+        println!("{}", serve_bench::generate(&cfg)?);
+        println!("written to results/serve/");
+        return Ok(());
+    }
+    let model = build_model(args)?;
+    let bind = format!(
+        "{}:{}",
+        args.get_or("host", "127.0.0.1"),
+        args.try_u64("port", 7878)?
+    );
+    let options = ServeOptions {
+        snapshot_every: args.try_usize("snapshot-every", 512)?,
+        queue_capacity: args.try_usize("queue", 1024)?,
+    };
+    let name = model.name();
+    let server = Server::start(model, &bind, options)?;
+    println!(
+        "serving {name} on {} (snapshot hot-swap every {} learns)\n\
+         protocol: NDJSON learn | predict | predict_batch | snapshot | stats | shutdown",
+        server.addr(),
+        options.snapshot_every
+    );
+    let final_model = server.join()?;
+    println!("server stopped");
+    if let Some(path) = args.opt("checkpoint-out") {
+        final_model.save(path)?;
+        println!("final model checkpointed to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_checkpoint(args: &Args) -> Result<()> {
+    if let Some(path) = args.opt("load") {
+        let model = Model::load(path)?;
+        println!(
+            "loaded {} ({}): {} features, {} stored elements",
+            model.name(),
+            model.kind(),
+            model.n_features(),
+            model.n_elements()
+        );
+        // restore-fidelity spot check: another codec round-trip must
+        // predict bit-identically
+        let clone = model.clone_via_codec()?;
+        let mut rng = qostream::common::Rng::new(args.try_u64("seed", 1)? ^ 0xF00D);
+        let identical = (0..100).all(|_| {
+            let x: Vec<f64> = (0..model.n_features()).map(|_| rng.f64()).collect();
+            model.predict(&x).to_bits() == clone.predict(&x).to_bits()
+        });
+        println!("round-trip predictions bit-identical: {identical}");
+        if !identical {
+            bail!("checkpoint round-trip diverged");
+        }
+        return Ok(());
+    }
+    let out = args
+        .opt("out")
+        .ok_or_else(|| anyhow!("checkpoint needs --out <path> (or --load <path>)"))?
+        .to_string();
+    let mut model = build_model(args)?;
+    let instances = args.try_usize("instances", 20_000)?;
+    if args.opt("restore").is_none() {
+        if model.n_features() != 10 {
+            bail!("the training demo streams Friedman #1 (10 features); use --features 10");
+        }
+        let mut stream = Friedman1::new(args.try_u64("seed", 1)?, 1.0);
+        for _ in 0..instances {
+            let Some(inst) = stream.next_instance() else { break };
+            model.learn_one(&inst.x, inst.y);
+        }
+    }
+    model.save(&out)?;
+    let bytes = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "{} ({}) checkpointed to {out} ({bytes} bytes, {} elements)",
+        model.name(),
+        model.kind(),
+        model.n_elements()
+    );
+    // prove the file restores to the identical model
+    let restored = Model::load(&out)?;
+    let mut rng = qostream::common::Rng::new(0xC0FFEE);
+    let identical = (0..100).all(|_| {
+        let x: Vec<f64> = (0..model.n_features()).map(|_| rng.f64()).collect();
+        model.predict(&x).to_bits() == restored.predict(&x).to_bits()
+    });
+    println!("save → load predictions bit-identical: {identical}");
+    if !identical {
+        bail!("checkpoint round-trip diverged");
+    }
+    Ok(())
+}
+
 fn cmd_xla(args: &Args) -> Result<()> {
     let dir = find_artifacts_dir()?;
     let manifest = Manifest::load(&dir)?;
@@ -217,9 +431,9 @@ fn cmd_xla(args: &Args) -> Result<()> {
         engine.s,
         client.platform_name()
     );
-    let n = args.usize_or("instances", 20_000);
-    let radius = args.f64_or("radius", 0.05);
-    let mut rng = qostream::common::Rng::new(args.u64_or("seed", 7));
+    let n = args.try_usize("instances", 20_000)?;
+    let radius = args.try_f64("radius", 0.05)?;
+    let mut rng = qostream::common::Rng::new(args.try_u64("seed", 7)?);
     let observers: Vec<qostream::observer::QuantizationObserver> = (0..engine.f)
         .map(|f| {
             let mut qo = qostream::observer::QuantizationObserver::with_radius(radius);
@@ -274,28 +488,46 @@ SUBCOMMANDS
   forest       online ensembles vs single tree    [--instances N --members M --lambda L
                (bagging + ARF on drifting data,    --subspace all|sqrt|K --drift-at N --seed S
                 batched split queries,             --split-backend per-observer|native-batch|xla
-                sharded leader/worker fitting)     --parallel W --shards N
-                                                   --observer qo|ebst (demo only)]
+                sharded leader/worker fitting,     --parallel W --shards N --weighted-vote
+                accuracy-weighted voting)          --observer qo|ebst (demo only)]
   coordinator  sharded distributed observation    [--shards N --instances N --radius R]
+  serve        online learn/predict TCP server    [--port P --model tree|arf|bag --members N
+               (NDJSON protocol, hot-swapped       --observer qo|ebst --snapshot-every K
+                read snapshots, checkpoints;       --restore ckpt.json --checkpoint-out ckpt.json
+                --bench runs the latency scenario) --bench]
+  checkpoint   save/restore model checkpoints     [--out ckpt.json | --load ckpt.json
+                                                   --model --observer --members --instances N]
   xla          AOT split-eval via PJRT artifacts  [--instances N --radius R]
   all          fig1 + fig3 + cd + tree + forest (standard profile)
 ";
 
-fn main() -> Result<()> {
-    let args = Args::from_env();
+fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
-        Some("protocol") => cmd_protocol(&args),
-        Some("fig1") => cmd_fig1(&args),
-        Some("fig3") => cmd_fig3(&args),
-        Some("cd") => cmd_cd(&args),
-        Some("tree") => cmd_tree(&args),
-        Some("forest") => cmd_forest(&args),
-        Some("coordinator") => cmd_coordinator(&args),
-        Some("xla") => cmd_xla(&args),
-        Some("all") => cmd_all(&args),
-        _ => {
+        Some("protocol") => cmd_protocol(args),
+        Some("fig1") => cmd_fig1(args),
+        Some("fig3") => cmd_fig3(args),
+        Some("cd") => cmd_cd(args),
+        Some("tree") => cmd_tree(args),
+        Some("forest") => cmd_forest(args),
+        Some("coordinator") => cmd_coordinator(args),
+        Some("serve") => cmd_serve(args),
+        Some("checkpoint") => cmd_checkpoint(args),
+        Some("xla") => cmd_xla(args),
+        Some("all") => cmd_all(args),
+        Some(other) => bail!("unknown subcommand {other:?}"),
+        None => {
             print!("{USAGE}");
             Ok(())
         }
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        eprintln!();
+        eprint!("{USAGE}");
+        std::process::exit(2);
     }
 }

@@ -14,7 +14,13 @@
 //! insertion and the traversal are iterative, so adversarially sorted
 //! input (a degenerate O(n)-deep tree) cannot overflow the stack.
 
+use anyhow::{anyhow, Result};
+
+use crate::common::json::Json;
 use crate::criterion::SplitCriterion;
+use crate::persist::codec::{
+    field, jf64, jusize, parr, pf64, pusize, varstats_from, varstats_to_json,
+};
 use crate::stats::VarStats;
 
 use super::{AttributeObserver, SplitSuggestion};
@@ -111,6 +117,55 @@ impl EBst {
         }
     }
 
+    /// Decode an observer written by [`AttributeObserver::to_json`]. The
+    /// arena is restored in its original insertion order, so continued
+    /// insertion produces the identical tree shape.
+    pub fn from_json(j: &Json) -> Result<EBst> {
+        let nodes = parr(field(j, "nodes")?, "nodes")?;
+        let mut arena = Vec::with_capacity(nodes.len());
+        for item in nodes {
+            let entry = parr(item, "nodes")?;
+            if entry.len() != 4 {
+                return Err(anyhow!("ebst node: expected [key, stats, left, right]"));
+            }
+            let left = pusize(&entry[2], "node.left")?;
+            let right = pusize(&entry[3], "node.right")?;
+            if left > u32::MAX as usize || right > u32::MAX as usize {
+                return Err(anyhow!("ebst node: child index overflows u32"));
+            }
+            arena.push(Node {
+                key: pf64(&entry[0], "node.key")?,
+                stats_le: varstats_from(&entry[1], "node.stats")?,
+                left: left as u32,
+                right: right as u32,
+            });
+        }
+        let root = pusize(field(j, "root")?, "root")?;
+        if root > u32::MAX as usize {
+            return Err(anyhow!("ebst: root index overflows u32"));
+        }
+        let n = arena.len();
+        if root as u32 != NONE && root >= n {
+            return Err(anyhow!("ebst: root index out of range"));
+        }
+        // live arenas only ever append children after their parent, so
+        // child indices strictly increase along every path; enforcing it
+        // here makes a cyclic (corrupt) checkpoint fail at load instead
+        // of looping the iterative insert/traversal forever
+        for (idx, node) in arena.iter().enumerate() {
+            for child in [node.left, node.right] {
+                if child != NONE && (child as usize >= n || child as usize <= idx) {
+                    return Err(anyhow!("ebst: child index out of order"));
+                }
+            }
+        }
+        Ok(EBst {
+            arena,
+            root: root as u32,
+            total: varstats_from(field(j, "total")?, "total")?,
+        })
+    }
+
     fn best_split_impl(&self, criterion: &dyn SplitCriterion) -> Option<SplitSuggestion> {
         let mut best: Option<SplitSuggestion> = None;
         let total = self.total;
@@ -160,6 +215,30 @@ impl AttributeObserver for EBst {
         self.root = NONE;
         self.total = VarStats::new();
     }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("type", "ebst")
+            .set("root", jusize(self.root as usize))
+            .set("total", varstats_to_json(&self.total))
+            .set(
+                "nodes",
+                Json::Arr(
+                    self.arena
+                        .iter()
+                        .map(|n| {
+                            Json::Arr(vec![
+                                jf64(n.key),
+                                varstats_to_json(&n.stats_le),
+                                jusize(n.left as usize),
+                                jusize(n.right as usize),
+                            ])
+                        })
+                        .collect(),
+                ),
+            );
+        o
+    }
 }
 
 /// TE-BST: E-BST over feature values truncated to `decimals` decimal
@@ -180,6 +259,19 @@ impl TruncatedEBst {
     #[inline]
     pub fn truncate(&self, x: f64) -> f64 {
         (x * self.factor).trunc() / self.factor
+    }
+
+    /// Decode an observer written by [`AttributeObserver::to_json`].
+    pub fn from_json(j: &Json) -> Result<TruncatedEBst> {
+        let decimals = pusize(field(j, "decimals")?, "decimals")?;
+        if decimals > 300 {
+            return Err(anyhow!("tebst: {decimals} decimal places is not representable"));
+        }
+        Ok(TruncatedEBst {
+            inner: EBst::from_json(field(j, "inner")?)?,
+            factor: 10f64.powi(decimals as i32),
+            decimals: decimals as u32,
+        })
     }
 }
 
@@ -209,6 +301,14 @@ impl AttributeObserver for TruncatedEBst {
 
     fn reset(&mut self) {
         self.inner.reset();
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("type", "tebst")
+            .set("decimals", jusize(self.decimals as usize))
+            .set("inner", self.inner.to_json());
+        o
     }
 }
 
@@ -299,6 +399,80 @@ mod tests {
             te.observe(x, x, 1.0);
         }
         assert!(te.n_elements() < bst.n_elements());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_shape_and_future_inserts() {
+        let mut bst = EBst::new();
+        let mut rng = Rng::new(71);
+        for _ in 0..600 {
+            let x = rng.normal(0.0, 2.0);
+            bst.observe(x, x.sin(), 1.0);
+        }
+        let text = bst.to_json().to_compact();
+        let mut back = EBst::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.n_elements(), bst.n_elements());
+        let sa = bst.best_split(&VarianceReduction).unwrap();
+        let sb = back.best_split(&VarianceReduction).unwrap();
+        assert_eq!(sa.threshold.to_bits(), sb.threshold.to_bits());
+        assert_eq!(sa.merit.to_bits(), sb.merit.to_bits());
+        // continued insertion stays structurally identical
+        for _ in 0..300 {
+            let x = rng.normal(0.0, 2.0);
+            bst.observe(x, x.sin(), 1.0);
+            back.observe(x, x.sin(), 1.0);
+        }
+        assert_eq!(back.n_elements(), bst.n_elements());
+        let sa = bst.best_split(&VarianceReduction).unwrap();
+        let sb = back.best_split(&VarianceReduction).unwrap();
+        assert_eq!(sa.threshold.to_bits(), sb.threshold.to_bits());
+        assert_eq!(sa.merit.to_bits(), sb.merit.to_bits());
+    }
+
+    #[test]
+    fn json_decode_rejects_corrupt_indices() {
+        let mut bst = EBst::new();
+        bst.observe(1.0, 1.0, 1.0);
+        let mut j = bst.to_json();
+        j.set("root", crate::persist::codec::jusize(99));
+        assert!(EBst::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn json_decode_rejects_cycles() {
+        use crate::persist::codec::jusize;
+        // node 0's left child pointing back at node 0 would loop the
+        // iterative insert forever; decode must reject it
+        let mut bst = EBst::new();
+        bst.observe(2.0, 1.0, 1.0);
+        bst.observe(1.0, 0.5, 1.0);
+        let doc = bst.to_json();
+        let nodes = doc.get("nodes").unwrap().as_arr().unwrap();
+        let first = nodes[0].as_arr().unwrap();
+        let patched = Json::Arr(vec![
+            first[0].clone(),
+            first[1].clone(),
+            jusize(0), // left → itself
+            first[3].clone(),
+        ]);
+        let mut rest: Vec<Json> = nodes.to_vec();
+        rest[0] = patched;
+        let mut doc = doc;
+        doc.set("nodes", Json::Arr(rest));
+        assert!(EBst::from_json(&doc).is_err(), "cyclic arena must be rejected");
+    }
+
+    #[test]
+    fn tebst_json_roundtrip_keeps_truncation() {
+        let mut te = TruncatedEBst::new(3);
+        te.observe(0.12345, 1.0, 1.0);
+        te.observe(0.12441, 3.0, 1.0);
+        let back =
+            TruncatedEBst::from_json(&Json::parse(&te.to_json().to_compact()).unwrap())
+                .unwrap();
+        assert_eq!(back.n_elements(), 2);
+        assert_eq!(back.name(), "TE-BST_3");
+        assert_eq!(back.truncate(1.23456), 1.234);
     }
 
     #[test]

@@ -5,7 +5,11 @@
 //! in memory; it is the oracle the approximate observers (QO, E-BST,
 //! TE-BST) are tested against. O(n) memory, O(n log n) query.
 
+use anyhow::{anyhow, Result};
+
+use crate::common::json::Json;
 use crate::criterion::SplitCriterion;
+use crate::persist::codec::{field, jf64, parr, pf64, varstats_from, varstats_to_json};
 use crate::stats::VarStats;
 
 use super::{AttributeObserver, SplitSuggestion};
@@ -19,6 +23,27 @@ pub struct ExhaustiveObserver {
 impl ExhaustiveObserver {
     pub fn new() -> ExhaustiveObserver {
         ExhaustiveObserver::default()
+    }
+
+    /// Decode an observer written by [`AttributeObserver::to_json`]. The
+    /// raw sample is restored in arrival order.
+    pub fn from_json(j: &Json) -> Result<ExhaustiveObserver> {
+        let mut points = Vec::new();
+        for item in parr(field(j, "points")?, "points")? {
+            let triple = parr(item, "points")?;
+            if triple.len() != 3 {
+                return Err(anyhow!("exhaustive point: expected [x, y, w]"));
+            }
+            points.push((
+                pf64(&triple[0], "point.x")?,
+                pf64(&triple[1], "point.y")?,
+                pf64(&triple[2], "point.w")?,
+            ));
+        }
+        Ok(ExhaustiveObserver {
+            points,
+            total: varstats_from(field(j, "total")?, "total")?,
+        })
     }
 
     /// Every candidate (threshold, merit), sorted by threshold — used by
@@ -91,6 +116,22 @@ impl AttributeObserver for ExhaustiveObserver {
         self.points.clear();
         self.total = VarStats::new();
     }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("type", "exhaustive")
+            .set("total", varstats_to_json(&self.total))
+            .set(
+                "points",
+                Json::Arr(
+                    self.points
+                        .iter()
+                        .map(|&(x, y, w)| Json::Arr(vec![jf64(x), jf64(y), jf64(w)]))
+                        .collect(),
+                ),
+            );
+        o
+    }
 }
 
 #[cfg(test)]
@@ -117,6 +158,24 @@ mod tests {
             ex.observe(5.0, y, 1.0);
         }
         assert!(ex.best_split(&VarianceReduction).is_none());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_sample_order() {
+        let mut ex = ExhaustiveObserver::new();
+        for (x, y) in [(3.0, 1.0), (1.0, -2.0), (2.0, 0.5), (1.0, 4.0)] {
+            ex.observe(x, y, 1.0);
+        }
+        let back = ExhaustiveObserver::from_json(
+            &Json::parse(&ex.to_json().to_compact()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.n_elements(), ex.n_elements());
+        assert_eq!(back.points, ex.points);
+        let sa = ex.best_split(&VarianceReduction).unwrap();
+        let sb = back.best_split(&VarianceReduction).unwrap();
+        assert_eq!(sa.threshold.to_bits(), sb.threshold.to_bits());
+        assert_eq!(sa.merit.to_bits(), sb.merit.to_bits());
     }
 
     #[test]

@@ -27,7 +27,11 @@ pub use multi_target::MultiTargetQuantizationObserver;
 pub use qo::QuantizationObserver;
 pub use radius::RadiusPolicy;
 
+use anyhow::{anyhow, Result};
+
+use crate::common::json::Json;
 use crate::criterion::SplitCriterion;
+use crate::persist::codec::{field, pstr};
 use crate::stats::VarStats;
 
 /// A proposed binary split `x ≤ threshold` with its merit and the target
@@ -41,7 +45,12 @@ pub struct SplitSuggestion {
 }
 
 /// The interface the tree (and the bench harness) programs against.
-pub trait AttributeObserver: Send {
+///
+/// `Send + Sync` because whole models — leaves, observers and all — are
+/// shared immutably across serving threads as `Arc` snapshots
+/// ([`crate::serve`]); every built-in observer is plain data, so the
+/// bound is free.
+pub trait AttributeObserver: Send + Sync {
     /// Monitor one observation of the feature with target `y`, weight `w`.
     fn observe(&mut self, x: f64, y: f64, w: f64);
 
@@ -68,6 +77,27 @@ pub trait AttributeObserver: Send {
     /// observer stays opaque and is answered per-observer.
     fn as_qo(&self) -> Option<&QuantizationObserver> {
         None
+    }
+
+    /// Serialize the observer's complete state for checkpointing
+    /// ([`crate::persist`]); [`observer_from_json`] decodes the tagged
+    /// layout. The default returns `Json::Null`, which the model codec
+    /// rejects at save time — custom observer implementations opt in by
+    /// overriding this (and teaching [`observer_from_json`] their tag).
+    fn to_json(&self) -> Json {
+        Json::Null
+    }
+}
+
+/// Decode any built-in observer from its [`AttributeObserver::to_json`]
+/// encoding (dispatch on the `"type"` tag).
+pub fn observer_from_json(j: &Json) -> Result<Box<dyn AttributeObserver>> {
+    match pstr(field(j, "type")?, "type")? {
+        "qo" => Ok(Box::new(QuantizationObserver::from_json(j)?)),
+        "ebst" => Ok(Box::new(EBst::from_json(j)?)),
+        "tebst" => Ok(Box::new(TruncatedEBst::from_json(j)?)),
+        "exhaustive" => Ok(Box::new(ExhaustiveObserver::from_json(j)?)),
+        other => Err(anyhow!("unknown observer type {other:?}")),
     }
 }
 
@@ -124,6 +154,86 @@ impl ObserverFactory for ArcFactory {
     }
 }
 
+/// A *serializable* description of an observer configuration — the part a
+/// checkpoint must carry so a restored tree can build observers for leaves
+/// it grows **after** loading ([`crate::persist`]). Every factory the repo
+/// ships maps to a spec through its label ([`ObserverSpec::from_label`]);
+/// custom closure factories with other labels are not checkpointable.
+///
+/// Limitation: the label does not carry a custom `StdFraction` warmup, so
+/// a restored factory uses the default (100). Observers that already
+/// exist in the tree are unaffected — their full radius state travels in
+/// the checkpoint — only leaves created after the restore see it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ObserverSpec {
+    EBst,
+    TruncatedEBst(u32),
+    Exhaustive,
+    Qo(RadiusPolicy),
+}
+
+impl ObserverSpec {
+    /// Parse a factory label (`"E-BST"`, `"TE-BST_3"`, `"Exhaustive"`,
+    /// `"QO_0.01"`, `"QO_s2"`) back into a spec. The bare `"TE-BST"` of
+    /// [`paper_lineup`] maps to the paper's 3-decimal configuration.
+    pub fn from_label(label: &str) -> Option<ObserverSpec> {
+        match label {
+            "E-BST" => Some(ObserverSpec::EBst),
+            "TE-BST" => Some(ObserverSpec::TruncatedEBst(3)),
+            "Exhaustive" => Some(ObserverSpec::Exhaustive),
+            _ => {
+                if let Some(d) = label.strip_prefix("TE-BST_") {
+                    return d.parse().ok().map(ObserverSpec::TruncatedEBst);
+                }
+                if let Some(k) = label.strip_prefix("QO_s") {
+                    return k
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|k| *k > 0.0)
+                        .map(|k| ObserverSpec::Qo(RadiusPolicy::std_fraction(k)));
+                }
+                if let Some(r) = label.strip_prefix("QO_") {
+                    return r
+                        .parse::<f64>()
+                        .ok()
+                        .filter(|r| *r > 0.0)
+                        .map(|r| ObserverSpec::Qo(RadiusPolicy::Fixed(r)));
+                }
+                None
+            }
+        }
+    }
+
+    /// The label this spec round-trips through (equals the name of the
+    /// factory [`ObserverSpec::to_factory`] builds).
+    pub fn label(&self) -> String {
+        match self {
+            ObserverSpec::EBst => "E-BST".to_string(),
+            ObserverSpec::TruncatedEBst(d) => format!("TE-BST_{d}"),
+            ObserverSpec::Exhaustive => "Exhaustive".to_string(),
+            ObserverSpec::Qo(policy) => policy.label(),
+        }
+    }
+
+    /// Build the factory this spec describes.
+    pub fn to_factory(&self) -> Box<dyn ObserverFactory> {
+        match *self {
+            ObserverSpec::EBst => factory("E-BST", || Box::new(EBst::new())),
+            ObserverSpec::TruncatedEBst(d) => {
+                factory(&format!("TE-BST_{d}"), move || Box::new(TruncatedEBst::new(d)))
+            }
+            ObserverSpec::Exhaustive => {
+                factory("Exhaustive", || Box::new(ExhaustiveObserver::new()))
+            }
+            ObserverSpec::Qo(policy) => {
+                factory(&policy.label(), move || {
+                    Box::new(QuantizationObserver::new(policy))
+                })
+            }
+        }
+    }
+}
+
 /// The paper's five compared observer configurations (Sec. 5.2).
 pub fn paper_lineup() -> Vec<Box<dyn ObserverFactory>> {
     vec![
@@ -174,6 +284,37 @@ mod tests {
         a.observe(1.0, 2.0, 1.0);
         assert_eq!(a.n_elements(), 1);
         assert_eq!(b.n_elements(), 0);
+    }
+
+    #[test]
+    fn observer_spec_roundtrips_every_paper_label() {
+        for fac in paper_lineup() {
+            let label = fac.name();
+            let spec = ObserverSpec::from_label(&label)
+                .unwrap_or_else(|| panic!("unparseable label {label:?}"));
+            // the spec's own label is the canonical fixpoint (the bare
+            // "TE-BST" paper label canonicalizes to "TE-BST_3")
+            assert_eq!(ObserverSpec::from_label(&spec.label()), Some(spec));
+            let rebuilt = spec.to_factory();
+            assert_eq!(rebuilt.name(), spec.label());
+            // the rebuilt factory produces a working observer of that kind
+            let mut ao = rebuilt.build();
+            ao.observe(1.0, 2.0, 1.0);
+            assert_eq!(ao.total().n, 1.0);
+        }
+        assert_eq!(ObserverSpec::from_label("TE-BST"), Some(ObserverSpec::TruncatedEBst(3)));
+        assert_eq!(ObserverSpec::from_label("Exhaustive"), Some(ObserverSpec::Exhaustive));
+        assert_eq!(ObserverSpec::from_label("nope"), None);
+        assert_eq!(ObserverSpec::from_label("QO_-1"), None);
+        assert_eq!(ObserverSpec::from_label("QO_snope"), None);
+    }
+
+    #[test]
+    fn observer_from_json_rejects_unknown_tags() {
+        let mut j = Json::obj();
+        j.set("type", "martian");
+        assert!(observer_from_json(&j).is_err());
+        assert!(observer_from_json(&Json::Null).is_err());
     }
 
     #[test]

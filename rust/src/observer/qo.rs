@@ -13,9 +13,15 @@
 
 use std::collections::HashMap;
 
+use anyhow::{anyhow, Result};
+
 use crate::common::fxhash::FxBuildHasher;
+use crate::common::json::Json;
 
 use crate::criterion::SplitCriterion;
+use crate::persist::codec::{
+    field, jf64, ji64, parr, pf64, pi64, pstr, varstats_from, varstats_to_json,
+};
 use crate::stats::VarStats;
 
 use super::radius::{RadiusPolicy, RadiusState};
@@ -167,6 +173,42 @@ impl QuantizationObserver {
         items
     }
 
+    /// Decode an observer written by [`AttributeObserver::to_json`]
+    /// (checkpointing; see [`crate::persist`]). The restored observer is
+    /// state-identical: same radius state (frozen or mid-warmup), same
+    /// slot statistics, same totals and strategy.
+    pub fn from_json(j: &Json) -> Result<QuantizationObserver> {
+        let policy = RadiusPolicy::from_json(field(j, "policy")?)?;
+        let state = RadiusState::from_json(field(j, "state")?)?;
+        let strategy = match pstr(field(j, "strategy")?, "strategy")? {
+            "prototype" => SplitPointStrategy::PrototypeMidpoint,
+            "grid" => SplitPointStrategy::GridBoundary,
+            other => return Err(anyhow!("unknown split-point strategy {other:?}")),
+        };
+        let mut slots: HashMap<i64, Slot, FxBuildHasher> = HashMap::default();
+        for item in parr(field(j, "slots")?, "slots")? {
+            let entry = parr(item, "slots")?;
+            if entry.len() != 3 {
+                return Err(anyhow!("slot: expected [code, sum_x, stats]"));
+            }
+            let code = pi64(&entry[0], "slot.code")?;
+            let slot = Slot {
+                sum_x: pf64(&entry[1], "slot.sum_x")?,
+                stats: varstats_from(&entry[2], "slot.stats")?,
+            };
+            if slots.insert(code, slot).is_some() {
+                return Err(anyhow!("duplicate slot code {code}"));
+            }
+        }
+        Ok(QuantizationObserver {
+            policy,
+            state,
+            slots,
+            total: varstats_from(field(j, "total")?, "total")?,
+            strategy,
+        })
+    }
+
     /// Split query over the warming buffer (before the radius freezes):
     /// exhaustive sweep over the few buffered raw points so trees can
     /// still attempt early splits.
@@ -284,6 +326,38 @@ impl AttributeObserver for QuantizationObserver {
 
     fn as_qo(&self) -> Option<&QuantizationObserver> {
         Some(self)
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("type", "qo")
+            .set("policy", self.policy.to_json())
+            .set("state", self.state.to_json())
+            .set(
+                "strategy",
+                match self.strategy {
+                    SplitPointStrategy::PrototypeMidpoint => "prototype",
+                    SplitPointStrategy::GridBoundary => "grid",
+                },
+            )
+            .set("total", varstats_to_json(&self.total))
+            .set(
+                "slots",
+                Json::Arr(
+                    // sorted by code: deterministic checkpoint text
+                    self.sorted_slots()
+                        .into_iter()
+                        .map(|(code, slot)| {
+                            Json::Arr(vec![
+                                ji64(code),
+                                jf64(slot.sum_x),
+                                varstats_to_json(&slot.stats),
+                            ])
+                        })
+                        .collect(),
+                ),
+            );
+        o
     }
 }
 
@@ -539,6 +613,66 @@ mod tests {
         extreme.observe(1e300, 1.0, 1.0); // code i64::MAX
         let s = extreme.best_split(&VarianceReduction).expect("three slots");
         assert!(s.threshold.is_finite(), "threshold={}", s.threshold);
+    }
+
+    #[test]
+    fn json_roundtrip_is_state_identical() {
+        let mut qo = QuantizationObserver::new(RadiusPolicy::std_fraction(2.0))
+            .with_strategy(SplitPointStrategy::GridBoundary);
+        let mut rng = Rng::new(17);
+        for _ in 0..800 {
+            let x = rng.normal(0.0, 1.5);
+            qo.observe(x, x * x + rng.normal(0.0, 0.1), 1.0);
+        }
+        let text = qo.to_json().to_compact();
+        let mut back =
+            QuantizationObserver::from_json(&crate::common::json::Json::parse(&text).unwrap())
+                .unwrap();
+        assert_eq!(back.radius(), qo.radius());
+        assert_eq!(back.n_elements(), qo.n_elements());
+        assert_eq!(back.strategy(), qo.strategy());
+        assert_eq!(back.total().mean.to_bits(), qo.total().mean.to_bits());
+        let sa = qo.best_split(&VarianceReduction).unwrap();
+        let sb = back.best_split(&VarianceReduction).unwrap();
+        assert_eq!(sa.threshold.to_bits(), sb.threshold.to_bits());
+        assert_eq!(sa.merit.to_bits(), sb.merit.to_bits());
+        // continued observation stays identical
+        for _ in 0..200 {
+            let x = rng.normal(0.0, 1.5);
+            let y = x * x;
+            qo.observe(x, y, 1.0);
+            back.observe(x, y, 1.0);
+        }
+        let sa = qo.best_split(&VarianceReduction).unwrap();
+        let sb = back.best_split(&VarianceReduction).unwrap();
+        assert_eq!(sa.threshold.to_bits(), sb.threshold.to_bits());
+        assert_eq!(sa.merit.to_bits(), sb.merit.to_bits());
+    }
+
+    #[test]
+    fn json_roundtrip_mid_warmup() {
+        let mut qo = QuantizationObserver::new(RadiusPolicy::std_fraction(3.0));
+        let mut rng = Rng::new(19);
+        for _ in 0..40 {
+            // fewer than the 100-observation warmup: still buffering
+            qo.observe(rng.normal(0.0, 1.0), rng.f64(), 1.0);
+        }
+        assert!(qo.radius().is_none());
+        let text = qo.to_json().to_compact();
+        let mut back =
+            QuantizationObserver::from_json(&crate::common::json::Json::parse(&text).unwrap())
+                .unwrap();
+        assert!(back.radius().is_none());
+        assert_eq!(back.n_elements(), qo.n_elements());
+        for _ in 0..100 {
+            let x = rng.normal(0.0, 1.0);
+            let y = x;
+            qo.observe(x, y, 1.0);
+            back.observe(x, y, 1.0);
+        }
+        // both froze at the identical dynamically chosen radius
+        assert_eq!(qo.radius().unwrap().to_bits(), back.radius().unwrap().to_bits());
+        assert_eq!(qo.n_elements(), back.n_elements());
     }
 
     #[test]

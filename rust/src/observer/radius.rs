@@ -7,6 +7,12 @@
 //!   from the running estimate once `warmup` observations have been
 //!   buffered (the buffered points are then re-inserted through the hash).
 
+use anyhow::{anyhow, Result};
+
+use crate::common::json::Json;
+use crate::persist::codec::{
+    field, jf64, jusize, parr, pf64, pusize, varstats_from, varstats_to_json,
+};
 use crate::stats::VarStats;
 
 /// How the QO picks its quantization radius.
@@ -30,6 +36,36 @@ impl RadiusPolicy {
             RadiusPolicy::Fixed(r) => format!("QO_{r}"),
             RadiusPolicy::StdFraction { k, .. } => format!("QO_s{k}"),
         }
+    }
+
+    /// Checkpoint encoding ([`crate::persist`]).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        match self {
+            RadiusPolicy::Fixed(r) => {
+                o.set("fixed", jf64(*r));
+            }
+            RadiusPolicy::StdFraction { k, warmup } => {
+                let mut inner = Json::obj();
+                inner.set("k", jf64(*k)).set("warmup", jusize(*warmup));
+                o.set("std", inner);
+            }
+        }
+        o
+    }
+
+    /// Decode a policy written by [`RadiusPolicy::to_json`].
+    pub fn from_json(j: &Json) -> Result<RadiusPolicy> {
+        if let Some(r) = j.get("fixed") {
+            return Ok(RadiusPolicy::Fixed(pf64(r, "fixed")?));
+        }
+        if let Some(inner) = j.get("std") {
+            return Ok(RadiusPolicy::StdFraction {
+                k: pf64(field(inner, "k")?, "k")?,
+                warmup: pusize(field(inner, "warmup")?, "warmup")?,
+            });
+        }
+        Err(anyhow!("radius policy: expected \"fixed\" or \"std\""))
     }
 }
 
@@ -103,6 +139,74 @@ impl RadiusState {
             RadiusState::Warming { buffer, .. } => buffer.len(),
         }
     }
+
+    /// Checkpoint encoding ([`crate::persist`]): the frozen radius, or the
+    /// complete warming snapshot (dispersion stats + raw buffer) so a
+    /// restored observer freezes at exactly the same radius the live one
+    /// would have.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        match self {
+            RadiusState::Frozen(r) => {
+                o.set("frozen", jf64(*r));
+            }
+            RadiusState::Warming { k, warmup, feature_stats, buffer } => {
+                let mut inner = Json::obj();
+                inner
+                    .set("k", jf64(*k))
+                    .set("warmup", jusize(*warmup))
+                    .set("feature_stats", varstats_to_json(feature_stats))
+                    .set(
+                        "buffer",
+                        Json::Arr(
+                            buffer
+                                .iter()
+                                .map(|&(x, y, w)| {
+                                    Json::Arr(vec![jf64(x), jf64(y), jf64(w)])
+                                })
+                                .collect(),
+                        ),
+                    );
+                o.set("warming", inner);
+            }
+        }
+        o
+    }
+
+    /// Decode a state written by [`RadiusState::to_json`].
+    pub fn from_json(j: &Json) -> Result<RadiusState> {
+        if let Some(r) = j.get("frozen") {
+            let r = pf64(r, "frozen")?;
+            if !(r.is_finite() && r > 0.0) {
+                return Err(anyhow!("frozen radius must be positive, got {r}"));
+            }
+            return Ok(RadiusState::Frozen(r));
+        }
+        if let Some(inner) = j.get("warming") {
+            let mut buffer = Vec::new();
+            for item in parr(field(inner, "buffer")?, "buffer")? {
+                let triple = parr(item, "buffer")?;
+                if triple.len() != 3 {
+                    return Err(anyhow!("warming buffer: expected [x, y, w]"));
+                }
+                buffer.push((
+                    pf64(&triple[0], "buffer.x")?,
+                    pf64(&triple[1], "buffer.y")?,
+                    pf64(&triple[2], "buffer.w")?,
+                ));
+            }
+            return Ok(RadiusState::Warming {
+                k: pf64(field(inner, "k")?, "k")?,
+                warmup: pusize(field(inner, "warmup")?, "warmup")?,
+                feature_stats: varstats_from(
+                    field(inner, "feature_stats")?,
+                    "feature_stats",
+                )?,
+                buffer,
+            });
+        }
+        Err(anyhow!("radius state: expected \"frozen\" or \"warming\""))
+    }
 }
 
 #[cfg(test)]
@@ -159,5 +263,55 @@ mod tests {
     fn labels_match_paper() {
         assert_eq!(RadiusPolicy::Fixed(0.01).label(), "QO_0.01");
         assert_eq!(RadiusPolicy::std_fraction(2.0).label(), "QO_s2");
+    }
+
+    #[test]
+    fn json_roundtrip_mid_warmup_freezes_identically() {
+        use crate::common::json::Json;
+        let mut live = RadiusState::new(RadiusPolicy::StdFraction { k: 2.0, warmup: 20 });
+        let mut rng = crate::common::Rng::new(31);
+        let points: Vec<(f64, f64)> =
+            (0..20).map(|_| (rng.normal(0.0, 3.0), rng.f64())).collect();
+        for &(x, y) in &points[..10] {
+            assert!(live.on_observe(x, y, 1.0).is_none());
+        }
+        // snapshot mid-warmup, then feed both copies the same tail
+        let text = live.to_json().to_compact();
+        let mut restored = RadiusState::from_json(&Json::parse(&text).unwrap()).unwrap();
+        let (mut frozen_live, mut frozen_restored) = (None, None);
+        for &(x, y) in &points[10..] {
+            frozen_live = live.on_observe(x, y, 1.0).or(frozen_live);
+            frozen_restored = restored.on_observe(x, y, 1.0).or(frozen_restored);
+        }
+        let (ra, ba) = frozen_live.expect("live must freeze");
+        let (rb, bb) = frozen_restored.expect("restored must freeze");
+        assert_eq!(ra.to_bits(), rb.to_bits());
+        assert_eq!(ba.len(), bb.len());
+        for (p, q) in ba.iter().zip(&bb) {
+            assert_eq!(p.0.to_bits(), q.0.to_bits());
+        }
+
+        // frozen states round-trip too
+        let frozen = RadiusState::Frozen(0.125);
+        let back = RadiusState::from_json(
+            &Json::parse(&frozen.to_json().to_compact()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.radius(), Some(0.125));
+    }
+
+    #[test]
+    fn policy_json_roundtrip() {
+        use crate::common::json::Json;
+        for policy in [
+            RadiusPolicy::Fixed(0.01),
+            RadiusPolicy::StdFraction { k: 3.0, warmup: 50 },
+        ] {
+            let back = RadiusPolicy::from_json(
+                &Json::parse(&policy.to_json().to_compact()).unwrap(),
+            )
+            .unwrap();
+            assert_eq!(back, policy);
+        }
     }
 }

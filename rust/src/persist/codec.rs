@@ -1,0 +1,235 @@
+//! Exact-value JSON encoding primitives shared by every model codec.
+//!
+//! The checkpoint contract is *bit-for-bit* restoration, so the helpers
+//! here are strict about the two places plain JSON numbers would lose
+//! information:
+//!
+//! * **`u64`/`usize`/`i64`** — an `f64` has 53 mantissa bits, so values
+//!   like RNG words or `usize::MAX` depth caps cannot travel as JSON
+//!   numbers. [`ju64`]/[`ji64`] encode them as decimal strings;
+//!   [`pu64`]/[`pi64`] parse them back exactly.
+//! * **non-finite `f64`** — JSON has no NaN/±∞ and the writer turns them
+//!   into `null`. [`jf64`] encodes them as the tagged strings `"NaN"`,
+//!   `"inf"`, `"-inf"` instead; finite values stay plain numbers (whose
+//!   shortest-round-trip Display representation is exact, see
+//!   [`crate::common::json`]).
+//!
+//! Decode helpers all return `anyhow::Result` with the offending key in
+//! the message, so a corrupt checkpoint fails loudly at load time rather
+//! than as a silently different model.
+
+use anyhow::{anyhow, Result};
+
+use crate::common::json::Json;
+use crate::common::Rng;
+use crate::stats::VarStats;
+
+/// Encode an `f64` exactly (non-finite values become tagged strings).
+pub fn jf64(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else if v.is_nan() {
+        Json::Str("NaN".to_string())
+    } else if v > 0.0 {
+        Json::Str("inf".to_string())
+    } else {
+        Json::Str("-inf".to_string())
+    }
+}
+
+/// Decode an `f64` written by [`jf64`].
+pub fn pf64(j: &Json, key: &str) -> Result<f64> {
+    match j {
+        Json::Num(v) => Ok(*v),
+        Json::Str(s) => match s.as_str() {
+            "NaN" => Ok(f64::NAN),
+            "inf" => Ok(f64::INFINITY),
+            "-inf" => Ok(f64::NEG_INFINITY),
+            other => Err(anyhow!("field {key:?}: not a number: {other:?}")),
+        },
+        other => Err(anyhow!("field {key:?}: expected a number, got {other:?}")),
+    }
+}
+
+/// Encode a `u64` exactly (decimal string — f64 would round above 2^53).
+pub fn ju64(v: u64) -> Json {
+    Json::Str(v.to_string())
+}
+
+/// Decode a `u64` written by [`ju64`].
+pub fn pu64(j: &Json, key: &str) -> Result<u64> {
+    match j {
+        Json::Str(s) => s
+            .parse::<u64>()
+            .map_err(|_| anyhow!("field {key:?}: not a u64: {s:?}")),
+        // tolerate plain numbers for small values (hand-edited checkpoints)
+        Json::Num(v) if *v >= 0.0 && *v == v.trunc() && *v <= 2f64.powi(53) => {
+            Ok(*v as u64)
+        }
+        other => Err(anyhow!("field {key:?}: expected a u64, got {other:?}")),
+    }
+}
+
+/// Encode an `i64` exactly (decimal string, like [`ju64`]).
+pub fn ji64(v: i64) -> Json {
+    Json::Str(v.to_string())
+}
+
+/// Decode an `i64` written by [`ji64`].
+pub fn pi64(j: &Json, key: &str) -> Result<i64> {
+    match j {
+        Json::Str(s) => s
+            .parse::<i64>()
+            .map_err(|_| anyhow!("field {key:?}: not an i64: {s:?}")),
+        Json::Num(v) if *v == v.trunc() && v.abs() <= 2f64.powi(53) => Ok(*v as i64),
+        other => Err(anyhow!("field {key:?}: expected an i64, got {other:?}")),
+    }
+}
+
+/// Encode a `usize` exactly.
+pub fn jusize(v: usize) -> Json {
+    ju64(v as u64)
+}
+
+/// Decode a `usize` written by [`jusize`].
+pub fn pusize(j: &Json, key: &str) -> Result<usize> {
+    let v = pu64(j, key)?;
+    usize::try_from(v).map_err(|_| anyhow!("field {key:?}: {v} overflows usize"))
+}
+
+/// Decode a `bool`.
+pub fn pbool(j: &Json, key: &str) -> Result<bool> {
+    j.as_bool()
+        .ok_or_else(|| anyhow!("field {key:?}: expected a bool"))
+}
+
+/// Decode a string slice.
+pub fn pstr<'a>(j: &'a Json, key: &str) -> Result<&'a str> {
+    j.as_str()
+        .ok_or_else(|| anyhow!("field {key:?}: expected a string"))
+}
+
+/// Decode an array slice.
+pub fn parr<'a>(j: &'a Json, key: &str) -> Result<&'a [Json]> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("field {key:?}: expected an array"))
+}
+
+/// Object field lookup that errors with the key name.
+pub fn field<'a>(obj: &'a Json, key: &str) -> Result<&'a Json> {
+    obj.get(key)
+        .ok_or_else(|| anyhow!("missing field {key:?}"))
+}
+
+/// [`VarStats`] as the compact triple `[n, mean, m2]`.
+pub fn varstats_to_json(s: &VarStats) -> Json {
+    Json::Arr(vec![jf64(s.n), jf64(s.mean), jf64(s.m2)])
+}
+
+/// Decode a [`VarStats`] triple written by [`varstats_to_json`].
+pub fn varstats_from(j: &Json, key: &str) -> Result<VarStats> {
+    let items = parr(j, key)?;
+    if items.len() != 3 {
+        return Err(anyhow!("field {key:?}: expected [n, mean, m2]"));
+    }
+    Ok(VarStats {
+        n: pf64(&items[0], key)?,
+        mean: pf64(&items[1], key)?,
+        m2: pf64(&items[2], key)?,
+    })
+}
+
+/// The PRNG's full state: xoshiro words plus the cached Box–Muller spare.
+pub fn rng_to_json(rng: &Rng) -> Json {
+    let (s, spare) = rng.state();
+    let mut o = Json::obj();
+    o.set("s", Json::Arr(s.iter().map(|&w| ju64(w)).collect()));
+    o.set("spare", spare.map(jf64).unwrap_or(Json::Null));
+    o
+}
+
+/// Decode a PRNG written by [`rng_to_json`].
+pub fn rng_from(j: &Json, key: &str) -> Result<Rng> {
+    let words = parr(field(j, "s")?, key)?;
+    if words.len() != 4 {
+        return Err(anyhow!("field {key:?}: expected 4 rng words"));
+    }
+    let mut s = [0u64; 4];
+    for (i, w) in words.iter().enumerate() {
+        s[i] = pu64(w, key)?;
+    }
+    let spare = field(j, "spare")?;
+    let spare = if spare.is_null() { None } else { Some(pf64(spare, key)?) };
+    Ok(Rng::from_state(s, spare))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u64_roundtrip_is_exact_above_2_53() {
+        for v in [0u64, 1, u64::MAX, u64::MAX - 1, (1u64 << 53) + 1] {
+            let j = ju64(v);
+            let text = j.to_compact();
+            let back = Json::parse(&text).unwrap();
+            assert_eq!(pu64(&back, "t").unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn i64_roundtrip() {
+        for v in [i64::MIN, -1, 0, 1, i64::MAX] {
+            let back = Json::parse(&ji64(v).to_compact()).unwrap();
+            assert_eq!(pi64(&back, "t").unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn f64_roundtrip_covers_special_values() {
+        for v in [0.0, -0.0, 0.1 + 0.2, f64::MIN_POSITIVE, 1e308, -1e-308] {
+            let back = Json::parse(&jf64(v).to_compact()).unwrap();
+            assert_eq!(pf64(&back, "t").unwrap().to_bits(), v.to_bits());
+        }
+        let nan = Json::parse(&jf64(f64::NAN).to_compact()).unwrap();
+        assert!(pf64(&nan, "t").unwrap().is_nan());
+        let inf = Json::parse(&jf64(f64::INFINITY).to_compact()).unwrap();
+        assert_eq!(pf64(&inf, "t").unwrap(), f64::INFINITY);
+        let ninf = Json::parse(&jf64(f64::NEG_INFINITY).to_compact()).unwrap();
+        assert_eq!(pf64(&ninf, "t").unwrap(), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn varstats_roundtrip() {
+        let mut s = VarStats::new();
+        s.update(1.5, 1.0);
+        s.update(-2.5, 2.0);
+        let back =
+            varstats_from(&Json::parse(&varstats_to_json(&s).to_compact()).unwrap(), "t")
+                .unwrap();
+        assert_eq!(back.n.to_bits(), s.n.to_bits());
+        assert_eq!(back.mean.to_bits(), s.mean.to_bits());
+        assert_eq!(back.m2.to_bits(), s.m2.to_bits());
+    }
+
+    #[test]
+    fn rng_roundtrip_continues_identically() {
+        let mut rng = Rng::new(5);
+        rng.normal(0.0, 1.0); // populate the spare
+        let j = Json::parse(&rng_to_json(&rng).to_compact()).unwrap();
+        let mut back = rng_from(&j, "rng").unwrap();
+        for _ in 0..8 {
+            assert_eq!(rng.next_u64(), back.next_u64());
+            assert_eq!(rng.normal(0.0, 1.0).to_bits(), back.normal(0.0, 1.0).to_bits());
+        }
+    }
+
+    #[test]
+    fn decode_errors_name_the_field() {
+        let j = Json::parse("{\"a\": true}").unwrap();
+        let err = format!("{}", field(&j, "missing").unwrap_err());
+        assert!(err.contains("missing"));
+        let err = format!("{}", pf64(field(&j, "a").unwrap(), "a").unwrap_err());
+        assert!(err.contains("\"a\""));
+    }
+}

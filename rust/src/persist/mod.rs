@@ -1,0 +1,282 @@
+//! Model persistence: a dependency-free, versioned JSON checkpoint codec.
+//!
+//! The paper's Quantization Observer keeps per-leaf monitoring state tiny
+//! and O(1) per slot (PAPER.md Sec. 4) — which is exactly what makes
+//! whole-model checkpoints cheap: a QO-backed tree serializes its
+//! complete split-monitoring state in |H| slots per leaf where an E-BST
+//! checkpoint carries one node per distinct observed value (the
+//! `bench_suite::serve_bench` scenario prints the size gap).
+//!
+//! ## Contract
+//!
+//! `save → load` is **bit-for-bit invisible**: the restored model returns
+//! bit-identical predictions *and* continues training along the identical
+//! trajectory (same PRNG draws, same split decisions, same detector
+//! firings). Everything stateful travels in the checkpoint — node arenas,
+//! observer hash slots and warmup buffers, leaf linear models, ADWIN
+//! histograms, per-member PRNG words, deferred-attempt queues. Engines
+//! that are *not* model state (split backends, thread pools) are
+//! re-instantiated from the restored options. The property is enforced
+//! end-to-end by `rust/tests/persist_roundtrip.rs` across model kinds ×
+//! observer kinds × random streams.
+//!
+//! Exactness rests on two encoding rules ([`codec`]): integers beyond
+//! f64's 53-bit mantissa travel as decimal strings, and finite floats
+//! travel through Rust's shortest-round-trip `Display` (non-finite ones
+//! as tagged strings).
+//!
+//! ## Format
+//!
+//! ```json
+//! {"format": "qostream-checkpoint", "version": 1,
+//!  "kind": "tree" | "arf" | "bagging",
+//!  "model": { …kind-specific payload… }}
+//! ```
+//!
+//! Key order is canonical (the writer sorts), so encode → decode →
+//! encode reproduces the exact same text — which is what lets the serve
+//! layer treat a checkpoint string as a content-addressable snapshot.
+
+pub mod codec;
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::common::json::Json;
+use crate::eval::Regressor;
+use crate::forest::{ArfRegressor, OnlineBaggingRegressor};
+use crate::tree::HoeffdingTreeRegressor;
+
+use codec::{field, pstr, pu64};
+
+/// Checkpoint format marker.
+pub const FORMAT: &str = "qostream-checkpoint";
+/// Current checkpoint version (bumped on incompatible layout changes).
+pub const VERSION: u64 = 1;
+
+/// A checkpointable model: every kind the CLI and the serve layer can
+/// train. Implements [`Regressor`] by delegation, so the prequential
+/// harness and the server drive all kinds uniformly.
+pub enum Model {
+    Tree(HoeffdingTreeRegressor),
+    Arf(ArfRegressor),
+    Bagging(OnlineBaggingRegressor),
+}
+
+impl Model {
+    /// The checkpoint `kind` tag.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Model::Tree(_) => "tree",
+            Model::Arf(_) => "arf",
+            Model::Bagging(_) => "bagging",
+        }
+    }
+
+    /// Input dimensionality (request validation in [`crate::serve`]).
+    pub fn n_features(&self) -> usize {
+        match self {
+            Model::Tree(t) => t.n_features(),
+            Model::Arf(f) => f.n_features(),
+            Model::Bagging(b) => b.n_features(),
+        }
+    }
+
+    /// Encode into a versioned checkpoint document.
+    pub fn to_checkpoint(&self) -> Result<Json> {
+        let payload = match self {
+            Model::Tree(t) => t.to_json()?,
+            Model::Arf(f) => f.to_json()?,
+            Model::Bagging(b) => b.to_json()?,
+        };
+        let mut o = Json::obj();
+        o.set("format", FORMAT)
+            .set("version", codec::ju64(VERSION))
+            .set("kind", self.kind())
+            .set("model", payload);
+        Ok(o)
+    }
+
+    /// Decode a checkpoint document written by [`Model::to_checkpoint`].
+    pub fn from_checkpoint(j: &Json) -> Result<Model> {
+        let format = pstr(field(j, "format")?, "format")?;
+        if format != FORMAT {
+            return Err(anyhow!("not a qostream checkpoint (format {format:?})"));
+        }
+        let version = pu64(field(j, "version")?, "version")?;
+        if version != VERSION {
+            return Err(anyhow!(
+                "checkpoint version {version} unsupported (this build reads {VERSION})"
+            ));
+        }
+        let model = field(j, "model")?;
+        match pstr(field(j, "kind")?, "kind")? {
+            "tree" => Ok(Model::Tree(HoeffdingTreeRegressor::from_json(model)?)),
+            "arf" => Ok(Model::Arf(ArfRegressor::from_json(model)?)),
+            "bagging" => Ok(Model::Bagging(OnlineBaggingRegressor::from_json(model)?)),
+            other => Err(anyhow!("unknown model kind {other:?}")),
+        }
+    }
+
+    /// Encode to the canonical compact checkpoint text.
+    pub fn to_text(&self) -> Result<String> {
+        Ok(self.to_checkpoint()?.to_compact())
+    }
+
+    /// Decode from checkpoint text ([`Model::to_text`] or a saved file).
+    pub fn from_text(text: &str) -> Result<Model> {
+        let j = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        Model::from_checkpoint(&j)
+    }
+
+    /// Write the checkpoint to a file (compact text plus a trailing
+    /// newline, so the file is itself one NDJSON record).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let mut text = self.to_text()?;
+        text.push('\n');
+        std::fs::write(path, text)
+            .with_context(|| format!("writing checkpoint {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load a checkpoint file written by [`Model::save`].
+    pub fn load(path: impl AsRef<Path>) -> Result<Model> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Model::from_text(text.trim_end())
+            .map_err(|e| e.context(format!("decoding checkpoint {}", path.display())))
+    }
+
+    /// Deep-copy through the codec. This is how the serve layer publishes
+    /// read-only snapshots: the round-trip *is* the clone, so every
+    /// published snapshot doubles as a proof the codec preserved the
+    /// model it came from.
+    pub fn clone_via_codec(&self) -> Result<Model> {
+        Model::from_text(&self.to_text()?)
+    }
+}
+
+impl Regressor for Model {
+    fn predict(&self, x: &[f64]) -> f64 {
+        match self {
+            Model::Tree(t) => t.predict(x),
+            Model::Arf(f) => f.predict(x),
+            Model::Bagging(b) => b.predict(x),
+        }
+    }
+
+    fn learn_one(&mut self, x: &[f64], y: f64) {
+        match self {
+            Model::Tree(t) => t.learn_one(x, y),
+            Model::Arf(f) => f.learn_one(x, y),
+            Model::Bagging(b) => b.learn_one(x, y),
+        }
+    }
+
+    fn name(&self) -> String {
+        match self {
+            Model::Tree(t) => t.name(),
+            Model::Arf(f) => f.name(),
+            Model::Bagging(b) => b.name(),
+        }
+    }
+
+    fn n_elements(&self) -> usize {
+        match self {
+            Model::Tree(t) => t.n_elements(),
+            Model::Arf(f) => f.n_elements(),
+            Model::Bagging(b) => b.n_elements(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::forest::ArfOptions;
+    use crate::observer::{factory, QuantizationObserver, RadiusPolicy};
+    use crate::stream::{Friedman1, Stream};
+    use crate::tree::HtrOptions;
+
+    fn qo_factory() -> Box<dyn crate::observer::ObserverFactory> {
+        factory("QO_s2", || {
+            Box::new(QuantizationObserver::new(RadiusPolicy::std_fraction(2.0)))
+        })
+    }
+
+    fn trained_tree(n: usize) -> Model {
+        let mut tree = HoeffdingTreeRegressor::new(10, HtrOptions::default(), qo_factory());
+        let mut stream = Friedman1::new(3, 1.0);
+        for _ in 0..n {
+            let inst = stream.next_instance().unwrap();
+            tree.learn_one(&inst.x, inst.y);
+        }
+        Model::Tree(tree)
+    }
+
+    #[test]
+    fn checkpoint_text_is_canonical() {
+        let model = trained_tree(2000);
+        let text = model.to_text().unwrap();
+        let reencoded = Model::from_text(&text).unwrap().to_text().unwrap();
+        assert_eq!(text, reencoded, "encode → decode → encode must be a fixpoint");
+    }
+
+    #[test]
+    fn clone_via_codec_predicts_identically() {
+        let model = trained_tree(3000);
+        let clone = model.clone_via_codec().unwrap();
+        let mut probe = Friedman1::new(9, 0.0);
+        for _ in 0..50 {
+            let inst = probe.next_instance().unwrap();
+            assert_eq!(model.predict(&inst.x).to_bits(), clone.predict(&inst.x).to_bits());
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrips_through_a_file() {
+        let model = trained_tree(1000);
+        let path = std::env::temp_dir()
+            .join(format!("qostream-ckpt-test-{}.json", std::process::id()));
+        model.save(&path).unwrap();
+        let back = Model::load(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back.kind(), "tree");
+        assert_eq!(back.name(), model.name());
+        assert_eq!(back.predict(&[0.5; 10]).to_bits(), model.predict(&[0.5; 10]).to_bits());
+    }
+
+    #[test]
+    fn version_and_format_are_enforced() {
+        let model = trained_tree(100);
+        let mut j = model.to_checkpoint().unwrap();
+        j.set("version", codec::ju64(99));
+        assert!(Model::from_checkpoint(&j).is_err());
+        let mut j = model.to_checkpoint().unwrap();
+        j.set("format", "something-else");
+        assert!(Model::from_checkpoint(&j).is_err());
+        assert!(Model::from_text("{}").is_err());
+        assert!(Model::from_text("not json").is_err());
+    }
+
+    #[test]
+    fn arf_checkpoint_kind_roundtrips() {
+        let mut arf = ArfRegressor::new(
+            10,
+            ArfOptions { n_members: 2, lambda: 2.0, seed: 5, ..Default::default() },
+            qo_factory(),
+        );
+        let mut stream = Friedman1::new(7, 1.0);
+        for _ in 0..1200 {
+            let inst = stream.next_instance().unwrap();
+            arf.learn_one(&inst.x, inst.y);
+        }
+        let model = Model::Arf(arf);
+        let back = Model::from_text(&model.to_text().unwrap()).unwrap();
+        assert_eq!(back.kind(), "arf");
+        assert_eq!(back.predict(&[0.4; 10]).to_bits(), model.predict(&[0.4; 10]).to_bits());
+    }
+}

@@ -1,0 +1,130 @@
+//! A small blocking NDJSON client for the serve protocol — used by the
+//! e2e tests, the `bench_suite` serving scenario and the CLI demo. One
+//! request per call, strictly request/response (the protocol allows
+//! pipelining; this client keeps it simple).
+
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::common::json::Json;
+
+/// Blocking client for one server connection.
+pub struct ServeClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+impl ServeClient {
+    /// Connect to a running server (e.g. `server.addr()`).
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<ServeClient> {
+        let stream = TcpStream::connect(addr).context("connecting to serve endpoint")?;
+        let read_half = stream.try_clone().context("cloning connection")?;
+        Ok(ServeClient {
+            reader: BufReader::new(read_half),
+            writer: BufWriter::new(stream),
+        })
+    }
+
+    /// Send one request line and read one response line; errors when the
+    /// server replies `{"ok":false}` (carrying the server's message).
+    pub fn request(&mut self, request: &Json) -> Result<Json> {
+        self.writer.write_all(request.to_compact().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            return Err(anyhow!("server closed the connection"));
+        }
+        let response = Json::parse(line.trim()).map_err(|e| anyhow!("{e}"))?;
+        match response.get("ok").and_then(Json::as_bool) {
+            Some(true) => Ok(response),
+            Some(false) => Err(anyhow!(
+                "server error: {}",
+                response.get("error").and_then(Json::as_str).unwrap_or("unknown")
+            )),
+            None => Err(anyhow!("malformed response: {line}")),
+        }
+    }
+
+    /// Enqueue one training instance (the ack means *queued*, see the
+    /// protocol docs).
+    pub fn learn(&mut self, x: &[f64], y: f64) -> Result<()> {
+        let mut req = Json::obj();
+        req.set("cmd", "learn").set("x", x.to_vec()).set("y", y);
+        self.request(&req)?;
+        Ok(())
+    }
+
+    /// Predict from the server's current read snapshot.
+    pub fn predict(&mut self, x: &[f64]) -> Result<f64> {
+        let mut req = Json::obj();
+        req.set("cmd", "predict").set("x", x.to_vec());
+        let response = self.request(&req)?;
+        response
+            .get("prediction")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("response missing \"prediction\""))
+    }
+
+    /// Batch predictions, all answered from one consistent snapshot.
+    pub fn predict_batch(&mut self, xs: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let mut req = Json::obj();
+        req.set("cmd", "predict_batch")
+            .set("xs", Json::Arr(xs.iter().map(|x| Json::from(x.clone())).collect()));
+        let response = self.request(&req)?;
+        let preds = response
+            .get("predictions")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("response missing \"predictions\""))?;
+        preds
+            .iter()
+            .map(|p| p.as_f64().ok_or_else(|| anyhow!("non-numeric prediction")))
+            .collect()
+    }
+
+    /// Force a snapshot publication and return the checkpoint text:
+    /// canonical compact JSON, byte-identical to what the server-side
+    /// [`crate::persist::Model::to_text`] produced, and loadable via
+    /// [`crate::persist::Model::from_text`].
+    pub fn snapshot(&mut self) -> Result<String> {
+        let mut req = Json::obj();
+        req.set("cmd", "snapshot");
+        let response = self.request(&req)?;
+        let checkpoint = response
+            .get("checkpoint")
+            .ok_or_else(|| anyhow!("response missing \"checkpoint\""))?;
+        Ok(checkpoint.to_compact())
+    }
+
+    /// Server counters and identity.
+    pub fn stats(&mut self) -> Result<Json> {
+        let mut req = Json::obj();
+        req.set("cmd", "stats");
+        self.request(&req)
+    }
+
+    /// Stop the server (its [`super::Server::join`] then returns).
+    pub fn shutdown(&mut self) -> Result<()> {
+        let mut req = Json::obj();
+        req.set("cmd", "shutdown");
+        self.request(&req)?;
+        Ok(())
+    }
+
+    /// Send a raw line (protocol-robustness tests) and return the raw
+    /// response line.
+    pub fn raw_line(&mut self, line: &str) -> Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut response = String::new();
+        let n = self.reader.read_line(&mut response)?;
+        if n == 0 {
+            return Err(anyhow!("server closed the connection"));
+        }
+        Ok(response.trim().to_string())
+    }
+}

@@ -1,0 +1,61 @@
+//! `serve/` — an online learn/predict TCP server with model checkpointing
+//! and hot-swapped read snapshots. Pure `std::net`; no runtime deps.
+//!
+//! ## Architecture
+//!
+//! A single **trainer thread** owns the mutable model and consumes
+//! `learn` requests from a bounded channel (the same
+//! backpressure-over-`sync_channel` shape as [`crate::coordinator`]: a
+//! full queue blocks the producing connection, it never balloons).
+//! **Reader threads** (one per TCP connection) answer `predict` /
+//! `predict_batch` from an immutable `Arc` **snapshot** of the model that
+//! the trainer atomically hot-swaps every `snapshot_every` applied
+//! learns. The swap is an `Arc` pointer store behind an `RwLock` held
+//! for nanoseconds — reads never wait on training, and training never
+//! waits on reads.
+//!
+//! Snapshots are produced by [`crate::persist::Model::clone_via_codec`]:
+//! every published snapshot is an encode → decode round-trip of the live
+//! model, so serving continuously re-proves the checkpoint codec's
+//! bit-for-bit fidelity (the paper's O(1)-state Quantization Observer is
+//! what keeps that round-trip cheap, PAPER.md Sec. 4).
+//!
+//! ## Wire protocol — newline-delimited JSON
+//!
+//! One request per line, one JSON response per line, in order:
+//!
+//! | request | response |
+//! |---|---|
+//! | `{"cmd":"learn","x":[…],"y":1.5}` | `{"ok":true}` (acks the *enqueue*) |
+//! | `{"cmd":"predict","x":[…]}` | `{"ok":true,"prediction":p}` |
+//! | `{"cmd":"predict_batch","xs":[[…],…]}` | `{"ok":true,"predictions":[…]}` |
+//! | `{"cmd":"snapshot"}` | `{"ok":true,"checkpoint":{…}}` (a [`crate::persist`] document) |
+//! | `{"cmd":"stats"}` | `{"ok":true,"model":…,"learns_applied":…,…}` |
+//! | `{"cmd":"shutdown"}` | `{"ok":true}`, then the server stops |
+//!
+//! Malformed lines, unknown commands, dimension mismatches and
+//! non-finite inputs get `{"ok":false,"error":"…"}` — the connection
+//! stays usable. Predictions are serialized with shortest-round-trip
+//! float formatting, so the `f64` a client parses is bit-identical to
+//! the one the model produced.
+//!
+//! ## Consistency guarantees
+//!
+//! * **Learn → snapshot (same connection):** `snapshot` travels through
+//!   the same FIFO trainer queue as `learn`, so a checkpoint reflects
+//!   every learn the same connection acked before it (and it also
+//!   publishes, so subsequent predicts see at least that state).
+//! * **Learn → predict (same connection):** predicts are served from the
+//!   last *published* snapshot, which trails the live model by at most
+//!   `snapshot_every` applied learns — the documented staleness window.
+//!   Issue `snapshot` to force publication when a read-your-writes point
+//!   is needed.
+//! * **Restore:** a fresh server started from a checkpoint returns
+//!   bit-identical predictions to the server that produced it (enforced
+//!   end-to-end in `rust/tests/serve_e2e.rs`).
+
+pub mod client;
+pub mod server;
+
+pub use client::ServeClient;
+pub use server::{Server, ServeOptions};

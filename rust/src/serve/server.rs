@@ -1,0 +1,419 @@
+//! The TCP server: acceptor + per-connection reader threads + the single
+//! trainer thread that owns the model (see the module docs in
+//! [`super`] for the architecture and wire protocol).
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, RwLock};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::common::json::Json;
+use crate::eval::Regressor;
+use crate::persist::Model;
+
+/// Per-line request size cap: network input must not pick our allocation
+/// size. Generous enough for large `predict_batch` requests.
+const MAX_REQUEST_BYTES: u64 = 16 * 1024 * 1024;
+
+/// Server tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeOptions {
+    /// Applied learns between automatic snapshot publications (0 = only
+    /// publish on explicit `snapshot` requests).
+    pub snapshot_every: usize,
+    /// Bounded trainer-queue depth in learns (backpressure window: a full
+    /// queue blocks the sending connection's `learn` ack).
+    pub queue_capacity: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions { snapshot_every: 512, queue_capacity: 1024 }
+    }
+}
+
+/// What connection handlers send the trainer. FIFO per connection, which
+/// is what makes `snapshot` reflect previously acked learns.
+enum TrainerMsg {
+    Learn(Vec<f64>, f64),
+    /// Publish + reply with the checkpoint document (or the failure
+    /// message). The document travels as parsed [`Json`] so the handler
+    /// embeds it without re-parsing the (potentially multi-MB) text.
+    Snapshot(mpsc::Sender<Result<Json, String>>),
+    Shutdown,
+}
+
+/// Monotonic counters shared across all threads (lock-free reads for the
+/// `stats` command).
+#[derive(Default)]
+struct ServerStats {
+    learns_enqueued: AtomicU64,
+    learns_applied: AtomicU64,
+    predicts: AtomicU64,
+    snapshots: AtomicU64,
+    snapshot_failures: AtomicU64,
+    connections: AtomicU64,
+}
+
+/// Immutable facts captured before the model moves into the trainer.
+struct ModelInfo {
+    name: String,
+    kind: &'static str,
+    n_features: usize,
+    snapshot_every: usize,
+    started: Instant,
+}
+
+/// Read the current snapshot `Arc` (surviving lock poisoning: the guarded
+/// value is just a pointer, always valid).
+fn current_snapshot(lock: &RwLock<Arc<Model>>) -> Arc<Model> {
+    match lock.read() {
+        Ok(guard) => guard.clone(),
+        Err(poisoned) => poisoned.into_inner().clone(),
+    }
+}
+
+/// Encode the live model, publish the decoded clone as the new read
+/// snapshot, and return the checkpoint document.
+fn publish_snapshot(
+    model: &Model,
+    snapshot: &RwLock<Arc<Model>>,
+    stats: &ServerStats,
+) -> Result<Json, String> {
+    let doc = model.to_checkpoint().map_err(|e| e.to_string())?;
+    let clone = Model::from_checkpoint(&doc).map_err(|e| e.to_string())?;
+    let shared = Arc::new(clone);
+    match snapshot.write() {
+        Ok(mut guard) => *guard = shared,
+        Err(poisoned) => {
+            let mut guard = poisoned.into_inner();
+            *guard = shared;
+        }
+    }
+    stats.snapshots.fetch_add(1, Ordering::Relaxed);
+    Ok(doc)
+}
+
+/// A running serve instance. Dropping the handle does NOT stop the
+/// server; send a `shutdown` request (e.g. [`super::ServeClient::shutdown`])
+/// and then [`Server::join`] it.
+pub struct Server {
+    addr: SocketAddr,
+    acceptor: thread::JoinHandle<()>,
+    trainer: thread::JoinHandle<Model>,
+}
+
+impl Server {
+    /// Bind `bind_addr` (use port 0 for an ephemeral port) and start the
+    /// trainer, acceptor and snapshot machinery. The initial snapshot is
+    /// published before the listener accepts, so the very first `predict`
+    /// already has a model to read — this also means `start` fails
+    /// cleanly when the model is not checkpointable.
+    pub fn start(model: Model, bind_addr: &str, options: ServeOptions) -> Result<Server> {
+        let listener = TcpListener::bind(bind_addr)
+            .with_context(|| format!("binding {bind_addr}"))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+
+        let stats = Arc::new(ServerStats::default());
+        let info = Arc::new(ModelInfo {
+            name: model.name(),
+            kind: model.kind(),
+            n_features: model.n_features(),
+            snapshot_every: options.snapshot_every,
+            started: Instant::now(),
+        });
+        let initial = model.clone_via_codec().map_err(|e| {
+            e.context("publishing the initial snapshot (model not checkpointable?)")
+        })?;
+        let snapshot = Arc::new(RwLock::new(Arc::new(initial)));
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::sync_channel::<TrainerMsg>(options.queue_capacity.max(1));
+
+        let trainer = {
+            let snapshot = snapshot.clone();
+            let stats = stats.clone();
+            let snapshot_every = options.snapshot_every;
+            thread::spawn(move || {
+                let mut model = model;
+                while let Ok(msg) = rx.recv() {
+                    match msg {
+                        TrainerMsg::Learn(x, y) => {
+                            model.learn_one(&x, y);
+                            let applied =
+                                stats.learns_applied.fetch_add(1, Ordering::Relaxed) + 1;
+                            if snapshot_every > 0
+                                && applied % snapshot_every as u64 == 0
+                                && publish_snapshot(&model, &snapshot, &stats).is_err()
+                            {
+                                stats.snapshot_failures.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                        TrainerMsg::Snapshot(reply) => {
+                            let out = publish_snapshot(&model, &snapshot, &stats);
+                            if out.is_err() {
+                                stats.snapshot_failures.fetch_add(1, Ordering::Relaxed);
+                            }
+                            // a dropped reply just means the client left
+                            reply.send(out).ok();
+                        }
+                        TrainerMsg::Shutdown => break,
+                    }
+                }
+                model
+            })
+        };
+
+        let acceptor = {
+            let shutdown = shutdown.clone();
+            thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let tx = tx.clone();
+                    let snapshot = snapshot.clone();
+                    let stats = stats.clone();
+                    let info = info.clone();
+                    let shutdown = shutdown.clone();
+                    stats.connections.fetch_add(1, Ordering::Relaxed);
+                    thread::spawn(move || {
+                        handle_connection(stream, tx, snapshot, stats, info, shutdown, addr);
+                    });
+                }
+            })
+        };
+
+        Ok(Server { addr, acceptor, trainer })
+    }
+
+    /// The bound address (read the ephemeral port from here).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Block until a `shutdown` request stops the server; returns the
+    /// final trained model (callers can [`Model::save`] it).
+    pub fn join(self) -> Result<Model> {
+        self.acceptor
+            .join()
+            .map_err(|_| anyhow!("acceptor thread panicked"))?;
+        self.trainer
+            .join()
+            .map_err(|_| anyhow!("trainer thread panicked"))
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    tx: mpsc::SyncSender<TrainerMsg>,
+    snapshot: Arc<RwLock<Arc<Model>>>,
+    stats: Arc<ServerStats>,
+    info: Arc<ModelInfo>,
+    shutdown: Arc<AtomicBool>,
+    self_addr: SocketAddr,
+) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let mut line = String::new();
+        let n = match (&mut reader).take(MAX_REQUEST_BYTES).read_line(&mut line) {
+            Ok(n) => n,
+            Err(_) => break, // includes non-UTF-8 input
+        };
+        if n == 0 {
+            break; // client closed the connection
+        }
+        if !line.ends_with('\n') && n as u64 >= MAX_REQUEST_BYTES {
+            let _ = write_response(&mut writer, &error_response("request too large"));
+            break;
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let (response, stop) = respond(trimmed, &tx, &snapshot, &stats, &info);
+        if write_response(&mut writer, &response).is_err() {
+            break;
+        }
+        if stop {
+            // order matters: flag first, then wake the trainer, then poke
+            // the acceptor loose from accept()
+            shutdown.store(true, Ordering::SeqCst);
+            tx.send(TrainerMsg::Shutdown).ok();
+            TcpStream::connect(self_addr).ok();
+            break;
+        }
+    }
+}
+
+fn write_response(writer: &mut BufWriter<TcpStream>, response: &Json) -> std::io::Result<()> {
+    writer.write_all(response.to_compact().as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()
+}
+
+fn error_response(message: &str) -> Json {
+    let mut o = Json::obj();
+    o.set("ok", false).set("error", message);
+    o
+}
+
+fn ok_response() -> Json {
+    let mut o = Json::obj();
+    o.set("ok", true);
+    o
+}
+
+/// Extract and validate one feature vector.
+fn parse_x(j: Option<&Json>, n_features: usize) -> Result<Vec<f64>, String> {
+    let arr = j
+        .and_then(Json::as_arr)
+        .ok_or_else(|| "\"x\" must be an array of numbers".to_string())?;
+    if arr.len() != n_features {
+        return Err(format!("expected {n_features} features, got {}", arr.len()));
+    }
+    let mut x = Vec::with_capacity(arr.len());
+    for v in arr {
+        let v = v.as_f64().ok_or_else(|| "\"x\" must contain numbers".to_string())?;
+        if !v.is_finite() {
+            return Err("\"x\" must be finite".to_string());
+        }
+        x.push(v);
+    }
+    Ok(x)
+}
+
+/// Dispatch one request line; returns the response and whether the server
+/// should stop.
+fn respond(
+    line: &str,
+    tx: &mpsc::SyncSender<TrainerMsg>,
+    snapshot: &RwLock<Arc<Model>>,
+    stats: &ServerStats,
+    info: &ModelInfo,
+) -> (Json, bool) {
+    let request = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return (error_response(&e), false),
+    };
+    let Some(cmd) = request.get("cmd").and_then(Json::as_str) else {
+        return (error_response("missing \"cmd\""), false);
+    };
+    match cmd {
+        "learn" => {
+            let x = match parse_x(request.get("x"), info.n_features) {
+                Ok(x) => x,
+                Err(e) => return (error_response(&e), false),
+            };
+            let Some(y) = request.get("y").and_then(Json::as_f64) else {
+                return (error_response("\"y\" must be a number"), false);
+            };
+            if !y.is_finite() {
+                return (error_response("\"y\" must be finite"), false);
+            }
+            // blocking send = backpressure: the ack waits for queue space
+            if tx.send(TrainerMsg::Learn(x, y)).is_err() {
+                return (error_response("trainer is shut down"), false);
+            }
+            stats.learns_enqueued.fetch_add(1, Ordering::Relaxed);
+            (ok_response(), false)
+        }
+        "predict" => {
+            let x = match parse_x(request.get("x"), info.n_features) {
+                Ok(x) => x,
+                Err(e) => return (error_response(&e), false),
+            };
+            let model = current_snapshot(snapshot);
+            stats.predicts.fetch_add(1, Ordering::Relaxed);
+            let mut o = ok_response();
+            o.set("prediction", model.predict(&x));
+            (o, false)
+        }
+        "predict_batch" => {
+            let Some(xs) = request.get("xs").and_then(Json::as_arr) else {
+                return (error_response("\"xs\" must be an array of arrays"), false);
+            };
+            let mut batch = Vec::with_capacity(xs.len());
+            for item in xs {
+                match parse_x(Some(item), info.n_features) {
+                    Ok(x) => batch.push(x),
+                    Err(e) => return (error_response(&e), false),
+                }
+            }
+            // one snapshot for the whole batch: a consistent view even if
+            // the trainer swaps mid-request
+            let model = current_snapshot(snapshot);
+            stats.predicts.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            let predictions: Vec<f64> = batch.iter().map(|x| model.predict(x)).collect();
+            let mut o = ok_response();
+            o.set("predictions", predictions);
+            (o, false)
+        }
+        "snapshot" => {
+            let (reply_tx, reply_rx) = mpsc::channel();
+            if tx.send(TrainerMsg::Snapshot(reply_tx)).is_err() {
+                return (error_response("trainer is shut down"), false);
+            }
+            match reply_rx.recv() {
+                Ok(Ok(checkpoint)) => {
+                    let mut o = ok_response();
+                    o.set("checkpoint", checkpoint);
+                    (o, false)
+                }
+                Ok(Err(e)) => (error_response(&e), false),
+                Err(_) => (error_response("trainer is shut down"), false),
+            }
+        }
+        "stats" => {
+            let mut o = ok_response();
+            o.set("model", info.name.as_str())
+                .set("kind", info.kind)
+                .set("n_features", info.n_features)
+                .set("snapshot_every", info.snapshot_every)
+                .set("learns_enqueued", stats.learns_enqueued.load(Ordering::Relaxed))
+                .set("learns_applied", stats.learns_applied.load(Ordering::Relaxed))
+                .set("predicts", stats.predicts.load(Ordering::Relaxed))
+                .set("snapshots", stats.snapshots.load(Ordering::Relaxed))
+                .set(
+                    "snapshot_failures",
+                    stats.snapshot_failures.load(Ordering::Relaxed),
+                )
+                .set("connections", stats.connections.load(Ordering::Relaxed))
+                .set("uptime_ms", info.started.elapsed().as_millis() as u64);
+            (o, false)
+        }
+        "shutdown" => (ok_response(), true),
+        other => (error_response(&format!("unknown cmd {other:?}")), false),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_x_validates_shape_and_values() {
+        let good = Json::parse("[1.0, 2.0]").unwrap();
+        assert_eq!(parse_x(Some(&good), 2).unwrap(), vec![1.0, 2.0]);
+        assert!(parse_x(Some(&good), 3).is_err());
+        assert!(parse_x(None, 2).is_err());
+        let bad = Json::parse("[1.0, \"x\"]").unwrap();
+        assert!(parse_x(Some(&bad), 2).is_err());
+        let non_finite = Json::parse("[1.0, null]").unwrap();
+        assert!(parse_x(Some(&non_finite), 2).is_err());
+    }
+
+    #[test]
+    fn responses_have_the_ok_envelope() {
+        assert_eq!(ok_response().to_compact(), "{\"ok\":true}");
+        let e = error_response("boom");
+        assert_eq!(e.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(e.get("error").and_then(Json::as_str), Some("boom"));
+    }
+}

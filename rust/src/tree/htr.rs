@@ -12,10 +12,16 @@
 
 use std::sync::Arc;
 
+use anyhow::{anyhow, Result};
+
+use crate::common::json::Json;
 use crate::common::Rng;
-use crate::criterion::{SplitCriterion, VarianceReduction};
+use crate::criterion::{SdReduction, SplitCriterion, VarianceReduction};
 use crate::eval::Regressor;
-use crate::observer::{AttributeObserver, ObserverFactory, SplitSuggestion};
+use crate::observer::{AttributeObserver, ObserverFactory, ObserverSpec, SplitSuggestion};
+use crate::persist::codec::{
+    field, jf64, jusize, parr, pf64, pstr, pusize, rng_from, rng_to_json,
+};
 use crate::runtime::backend::{SplitBackend, SplitQuery};
 
 use super::subspace::sample_subspace;
@@ -101,6 +107,16 @@ impl HoeffdingTreeRegressor {
     /// The criterion split candidates are scored under.
     pub fn criterion(&self) -> &dyn SplitCriterion {
         self.criterion.as_ref()
+    }
+
+    /// The tree's configuration.
+    pub fn options(&self) -> &HtrOptions {
+        &self.options
+    }
+
+    /// Input dimensionality the tree was built for.
+    pub fn n_features(&self) -> usize {
+        self.n_features
     }
 
     fn route(&self, x: &[f64]) -> u32 {
@@ -357,6 +373,139 @@ impl HoeffdingTreeRegressor {
                 self.describe_node(*right, indent + 1, out);
             }
         }
+    }
+
+    /// Checkpoint encoding ([`crate::persist`]): the full arena (leaves
+    /// with their observers and models, split nodes), options, PRNG state
+    /// and the deferred-attempt queue — everything needed for
+    /// `save → load` to be bit-for-bit invisible to both prediction and
+    /// continued training. Fails when the observer factory's label is not
+    /// [`ObserverSpec`]-representable (a custom closure factory) or an
+    /// observer kind does not serialize.
+    pub fn to_json(&self) -> Result<Json> {
+        let spec = ObserverSpec::from_label(&self.observer_label).ok_or_else(|| {
+            anyhow!(
+                "observer factory {:?} is not checkpointable (no ObserverSpec label)",
+                self.observer_label
+            )
+        })?;
+        let mut nodes = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let mut o = Json::obj();
+            match node {
+                Node::Leaf(leaf) => {
+                    o.set("leaf", leaf.to_json()?);
+                }
+                Node::Split { feature, threshold, left, right } => {
+                    let mut s = Json::obj();
+                    s.set("feature", jusize(*feature))
+                        .set("threshold", jf64(*threshold))
+                        .set("left", jusize(*left as usize))
+                        .set("right", jusize(*right as usize));
+                    o.set("split", s);
+                }
+            }
+            nodes.push(o);
+        }
+        let mut o = Json::obj();
+        o.set("n_features", jusize(self.n_features))
+            .set("options", self.options.to_json())
+            .set("observer", spec.label())
+            .set("criterion", self.criterion.name())
+            .set("n_splits", jusize(self.n_splits))
+            .set("rng", rng_to_json(&self.rng))
+            .set("root", jusize(self.root as usize))
+            .set(
+                "pending",
+                Json::Arr(self.pending.iter().map(|&l| jusize(l as usize)).collect()),
+            )
+            .set("nodes", Json::Arr(nodes));
+        Ok(o)
+    }
+
+    /// Decode a tree written by [`Self::to_json`]. The split backend is
+    /// re-instantiated from the restored options (backend objects are
+    /// stateless engines, not model state).
+    pub fn from_json(j: &Json) -> Result<HoeffdingTreeRegressor> {
+        let options = HtrOptions::from_json(field(j, "options")?)?;
+        let label = pstr(field(j, "observer")?, "observer")?;
+        let spec = ObserverSpec::from_label(label)
+            .ok_or_else(|| anyhow!("unknown observer label {label:?}"))?;
+        let criterion: Box<dyn SplitCriterion> =
+            match pstr(field(j, "criterion")?, "criterion")? {
+                "variance-reduction" => Box::new(VarianceReduction),
+                "sd-reduction" => Box::new(SdReduction),
+                other => return Err(anyhow!("unknown split criterion {other:?}")),
+            };
+        let n_features = pusize(field(j, "n_features")?, "n_features")?;
+        let raw = parr(field(j, "nodes")?, "nodes")?;
+        if raw.is_empty() {
+            return Err(anyhow!("tree checkpoint has no nodes"));
+        }
+        let mut nodes = Vec::with_capacity(raw.len());
+        for (idx, item) in raw.iter().enumerate() {
+            if let Some(leaf) = item.get("leaf") {
+                let leaf = LeafState::from_json(leaf)?;
+                if leaf.monitored.iter().any(|&f| f >= n_features) {
+                    return Err(anyhow!("leaf monitors a feature out of range"));
+                }
+                if leaf.linear.n_elements() != n_features + 1 {
+                    return Err(anyhow!("leaf linear model dimensionality mismatch"));
+                }
+                nodes.push(Node::Leaf(Box::new(leaf)));
+            } else if let Some(split) = item.get("split") {
+                let left = pusize(field(split, "left")?, "left")?;
+                let right = pusize(field(split, "right")?, "right")?;
+                if left >= raw.len() || right >= raw.len() {
+                    return Err(anyhow!("split child index out of range"));
+                }
+                // live trees only ever append children after their parent,
+                // so indices strictly increase along every root→leaf path;
+                // enforcing that here makes a cyclic (corrupt) checkpoint
+                // fail at load instead of hanging `route()` forever
+                if left <= idx || right <= idx {
+                    return Err(anyhow!("split children must come after their parent"));
+                }
+                let feature = pusize(field(split, "feature")?, "feature")?;
+                if feature >= n_features {
+                    return Err(anyhow!("split feature out of range"));
+                }
+                nodes.push(Node::Split {
+                    feature,
+                    threshold: pf64(field(split, "threshold")?, "threshold")?,
+                    left: left as u32,
+                    right: right as u32,
+                });
+            } else {
+                return Err(anyhow!("tree node: expected \"leaf\" or \"split\""));
+            }
+        }
+        let root = pusize(field(j, "root")?, "root")?;
+        if root >= nodes.len() {
+            return Err(anyhow!("root index out of range"));
+        }
+        let mut pending = Vec::new();
+        for item in parr(field(j, "pending")?, "pending")? {
+            let idx = pusize(item, "pending")?;
+            if idx >= nodes.len() {
+                return Err(anyhow!("pending leaf index out of range"));
+            }
+            pending.push(idx as u32);
+        }
+        let backend = options.split_backend.instantiate();
+        Ok(HoeffdingTreeRegressor {
+            nodes,
+            root: root as u32,
+            n_features,
+            options,
+            factory: spec.to_factory(),
+            criterion,
+            n_splits: pusize(field(j, "n_splits")?, "n_splits")?,
+            observer_label: label.to_string(),
+            rng: rng_from(field(j, "rng")?, "rng")?,
+            backend,
+            pending,
+        })
     }
 
     /// Sum of observer elements across all leaves (paper memory metric).
@@ -698,6 +847,118 @@ mod tests {
         assert!(tree.pending_attempts().is_empty());
         // one flush resolves the (single) due root attempt
         assert!(tree.n_splits() >= 1, "flush must perform the queued attempt");
+    }
+
+    #[test]
+    fn json_roundtrip_predicts_and_trains_identically() {
+        use crate::tree::subspace::SubspaceSize;
+        let mut tree = HoeffdingTreeRegressor::new(
+            4,
+            HtrOptions { subspace: SubspaceSize::Fixed(2), seed: 3, ..Default::default() },
+            qo_factory(),
+        );
+        let mut rng = Rng::new(97);
+        for _ in 0..6000 {
+            let x: Vec<f64> = (0..4).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            tree.learn_one(&x, if x[1] <= 0.0 { -3.0 } else { 2.0 * x[0] });
+        }
+        assert!(tree.n_splits() >= 1, "tree must have structure to test");
+        let text = tree.to_json().unwrap().to_compact();
+        let mut back = HoeffdingTreeRegressor::from_json(
+            &crate::common::json::Json::parse(&text).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.n_splits(), tree.n_splits());
+        assert_eq!(back.n_nodes(), tree.n_nodes());
+        assert_eq!(back.name(), tree.name());
+        for _ in 0..50 {
+            let probe: Vec<f64> = (0..4).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            assert_eq!(tree.predict(&probe).to_bits(), back.predict(&probe).to_bits());
+        }
+        // continued training (incl. future subspace draws from the
+        // restored PRNG) stays bit-for-bit identical
+        for _ in 0..6000 {
+            let x: Vec<f64> = (0..4).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let y = if x[1] <= 0.0 { -3.0 } else { 2.0 * x[0] };
+            tree.learn_one(&x, y);
+            back.learn_one(&x, y);
+        }
+        assert_eq!(back.n_splits(), tree.n_splits());
+        assert_eq!(back.n_nodes(), tree.n_nodes());
+        for _ in 0..50 {
+            let probe: Vec<f64> = (0..4).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            assert_eq!(tree.predict(&probe).to_bits(), back.predict(&probe).to_bits());
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_the_deferred_queue() {
+        let mut tree = HoeffdingTreeRegressor::new(
+            1,
+            HtrOptions { leaf_model: LeafModelKind::Mean, ..Default::default() },
+            qo_factory(),
+        );
+        let mut rng = Rng::new(41);
+        for _ in 0..5000 {
+            let x = rng.uniform(-1.0, 1.0);
+            tree.learn_one_deferred(&[x], if x <= 0.0 { -5.0 } else { 5.0 });
+        }
+        assert!(!tree.pending_attempts().is_empty());
+        let back = HoeffdingTreeRegressor::from_json(
+            &crate::common::json::Json::parse(&tree.to_json().unwrap().to_compact())
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.pending_attempts(), tree.pending_attempts());
+        let mut back = back;
+        back.flush_pending(&crate::runtime::backend::PerObserverBackend);
+        assert!(back.n_splits() >= 1, "restored queue must still resolve");
+    }
+
+    #[test]
+    fn cyclic_checkpoint_is_rejected_at_load() {
+        // corrupt a real checkpoint so a split points back at itself /
+        // an ancestor: decode must fail instead of letting route() hang
+        let mut tree = HoeffdingTreeRegressor::new(
+            1,
+            HtrOptions { leaf_model: LeafModelKind::Mean, ..Default::default() },
+            qo_factory(),
+        );
+        let mut rng = Rng::new(13);
+        for _ in 0..5000 {
+            let x = rng.uniform(-1.0, 1.0);
+            tree.learn_one(&[x], if x <= 0.0 { -5.0 } else { 5.0 });
+        }
+        assert!(tree.n_splits() >= 1, "need a split node to corrupt");
+        let doc = tree.to_json().unwrap();
+        let mut nodes: Vec<crate::common::json::Json> =
+            doc.get("nodes").unwrap().as_arr().unwrap().to_vec();
+        let mut corrupted = false;
+        for node in &mut nodes {
+            if let Some(split) = node.get("split") {
+                let mut split = split.clone();
+                split.set("left", crate::persist::codec::jusize(0));
+                node.set("split", split);
+                corrupted = true;
+                break;
+            }
+        }
+        assert!(corrupted, "checkpoint had no split node");
+        let mut doc = doc;
+        doc.set("nodes", crate::common::json::Json::Arr(nodes));
+        let err = HoeffdingTreeRegressor::from_json(&doc);
+        assert!(err.is_err(), "cyclic checkpoint must be rejected");
+    }
+
+    #[test]
+    fn custom_closure_factory_is_rejected_at_save() {
+        let tree = HoeffdingTreeRegressor::new(
+            1,
+            HtrOptions::default(),
+            factory("my-custom-observer", || Box::new(EBst::new())),
+        );
+        let err = format!("{}", tree.to_json().unwrap_err());
+        assert!(err.contains("my-custom-observer"), "{err}");
     }
 
     #[test]

@@ -1,9 +1,15 @@
 //! Leaf state of the Hoeffding Tree Regressor: per-feature attribute
 //! observers, target statistics and the leaf prediction model.
 
+use anyhow::{anyhow, Result};
+
+use crate::common::json::Json;
 use crate::eval::baselines::LinearSgd;
 use crate::eval::Regressor;
-use crate::observer::{AttributeObserver, ObserverFactory};
+use crate::observer::{observer_from_json, AttributeObserver, ObserverFactory};
+use crate::persist::codec::{
+    field, jf64, jusize, parr, pf64, pstr, pusize, varstats_from, varstats_to_json,
+};
 use crate::stats::VarStats;
 
 /// Leaf prediction strategy (FIMT: target mean / perceptron / adaptive).
@@ -16,6 +22,27 @@ pub enum LeafModelKind {
     /// Track faded errors of both and predict with whichever is currently
     /// more accurate (FIMT-DD's adaptive node model).
     Adaptive,
+}
+
+impl LeafModelKind {
+    /// Stable spelling used by the CLI and the checkpoint codec.
+    pub fn label(&self) -> &'static str {
+        match self {
+            LeafModelKind::Mean => "mean",
+            LeafModelKind::Linear => "linear",
+            LeafModelKind::Adaptive => "adaptive",
+        }
+    }
+
+    /// Parse a [`LeafModelKind::label`] spelling.
+    pub fn parse(s: &str) -> Option<LeafModelKind> {
+        match s {
+            "mean" => Some(LeafModelKind::Mean),
+            "linear" => Some(LeafModelKind::Linear),
+            "adaptive" => Some(LeafModelKind::Adaptive),
+            _ => None,
+        }
+    }
 }
 
 /// Fading factor for the adaptive model's error trackers.
@@ -104,6 +131,87 @@ impl LeafState {
         self.weight_since_attempt += w;
     }
 
+    /// Checkpoint encoding ([`crate::persist`]): everything the leaf owns,
+    /// including the full state of each observer. Returns an error when an
+    /// observer kind does not support serialization (a custom
+    /// [`AttributeObserver`] that kept the default `to_json`).
+    pub fn to_json(&self) -> Result<Json> {
+        let observers = match &self.observers {
+            None => Json::Null,
+            Some(obs) => {
+                let mut items = Vec::with_capacity(obs.len());
+                for ao in obs {
+                    let encoded = ao.to_json();
+                    if encoded.is_null() {
+                        return Err(anyhow!(
+                            "observer {:?} does not support checkpointing",
+                            ao.name()
+                        ));
+                    }
+                    items.push(encoded);
+                }
+                Json::Arr(items)
+            }
+        };
+        let mut o = Json::obj();
+        o.set("stats", varstats_to_json(&self.stats))
+            .set("observers", observers)
+            .set(
+                "monitored",
+                Json::Arr(self.monitored.iter().map(|&f| jusize(f)).collect()),
+            )
+            .set("linear", self.linear.to_json())
+            .set("kind", self.kind.label())
+            .set("mean_err", jf64(self.mean_err))
+            .set("lin_err", jf64(self.lin_err))
+            .set("weight_since_attempt", jf64(self.weight_since_attempt))
+            .set("depth", jusize(self.depth));
+        Ok(o)
+    }
+
+    /// Decode a leaf written by [`LeafState::to_json`].
+    pub fn from_json(j: &Json) -> Result<LeafState> {
+        let observers = match field(j, "observers")? {
+            Json::Null => None,
+            arr => {
+                let mut obs: Vec<Box<dyn AttributeObserver>> = Vec::new();
+                for item in parr(arr, "observers")? {
+                    obs.push(observer_from_json(item)?);
+                }
+                Some(obs)
+            }
+        };
+        let monitored: Vec<usize> = parr(field(j, "monitored")?, "monitored")?
+            .iter()
+            .map(|f| pusize(f, "monitored"))
+            .collect::<Result<_>>()?;
+        if let Some(obs) = &observers {
+            if obs.len() != monitored.len() {
+                return Err(anyhow!(
+                    "leaf: {} observers for {} monitored features",
+                    obs.len(),
+                    monitored.len()
+                ));
+            }
+        }
+        let kind_label = pstr(field(j, "kind")?, "kind")?;
+        Ok(LeafState {
+            stats: varstats_from(field(j, "stats")?, "stats")?,
+            observers,
+            monitored,
+            linear: LinearSgd::from_json(field(j, "linear")?)?,
+            kind: LeafModelKind::parse(kind_label)
+                .ok_or_else(|| anyhow!("unknown leaf model {kind_label:?}"))?,
+            mean_err: pf64(field(j, "mean_err")?, "mean_err")?,
+            lin_err: pf64(field(j, "lin_err")?, "lin_err")?,
+            weight_since_attempt: pf64(
+                field(j, "weight_since_attempt")?,
+                "weight_since_attempt",
+            )?,
+            depth: pusize(field(j, "depth")?, "depth")?,
+        })
+    }
+
     /// Total stored elements across this leaf's observers (the paper's
     /// memory metric).
     pub fn n_elements(&self) -> usize {
@@ -164,6 +272,70 @@ mod tests {
         assert_eq!(observers.len(), 1);
         assert_eq!(observers[0].n_elements(), 1, "x[1] is constant: one slot");
         assert_eq!(leaf.stats.n, 50.0);
+    }
+
+    #[test]
+    fn leaf_json_roundtrip_continues_identically() {
+        let mut leaf = LeafState::new(
+            2,
+            vec![0, 1],
+            qo_factory().as_ref(),
+            LeafModelKind::Adaptive,
+            0.02,
+            1,
+            true,
+        );
+        let mut rng = Rng::new(61);
+        for _ in 0..300 {
+            let x = [rng.f64(), rng.normal(0.0, 1.0)];
+            leaf.learn(&x, 3.0 * x[0], 1.0);
+        }
+        let text = leaf.to_json().unwrap().to_compact();
+        let mut back =
+            LeafState::from_json(&crate::common::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.monitored, leaf.monitored);
+        assert_eq!(back.depth, leaf.depth);
+        assert_eq!(back.n_elements(), leaf.n_elements());
+        let probe = [0.4, -0.2];
+        assert_eq!(leaf.predict(&probe).to_bits(), back.predict(&probe).to_bits());
+        for _ in 0..100 {
+            let x = [rng.f64(), rng.normal(0.0, 1.0)];
+            let y = 3.0 * x[0];
+            leaf.learn(&x, y, 1.0);
+            back.learn(&x, y, 1.0);
+        }
+        assert_eq!(leaf.predict(&probe).to_bits(), back.predict(&probe).to_bits());
+        assert_eq!(
+            leaf.weight_since_attempt.to_bits(),
+            back.weight_since_attempt.to_bits()
+        );
+    }
+
+    #[test]
+    fn frozen_leaf_roundtrips_without_observers() {
+        let leaf = LeafState::new(
+            1,
+            vec![0],
+            qo_factory().as_ref(),
+            LeafModelKind::Mean,
+            0.02,
+            5,
+            false,
+        );
+        let back = LeafState::from_json(
+            &crate::common::json::Json::parse(&leaf.to_json().unwrap().to_compact())
+                .unwrap(),
+        )
+        .unwrap();
+        assert!(!back.is_active());
+    }
+
+    #[test]
+    fn leaf_model_kind_labels_roundtrip() {
+        for kind in [LeafModelKind::Mean, LeafModelKind::Linear, LeafModelKind::Adaptive] {
+            assert_eq!(LeafModelKind::parse(kind.label()), Some(kind));
+        }
+        assert_eq!(LeafModelKind::parse("nope"), None);
     }
 
     #[test]

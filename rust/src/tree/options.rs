@@ -1,5 +1,10 @@
 //! Hoeffding Tree Regressor configuration.
 
+use anyhow::{anyhow, Result};
+
+use crate::common::json::Json;
+use crate::persist::codec::{field, jf64, ju64, jusize, pf64, pstr, pu64, pusize};
+
 pub use super::leaf::LeafModelKind;
 pub use super::subspace::SubspaceSize;
 pub use crate::runtime::backend::SplitBackendKind;
@@ -62,6 +67,47 @@ impl HtrOptions {
         }
         ((1.0 / self.split_confidence).ln() / (2.0 * n)).sqrt()
     }
+
+    /// Checkpoint encoding ([`crate::persist`]). `max_depth` and `seed`
+    /// travel as decimal strings (`usize::MAX` and raw seeds exceed what
+    /// an f64 JSON number represents exactly); enum knobs travel through
+    /// their CLI labels.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("grace_period", jusize(self.grace_period))
+            .set("split_confidence", jf64(self.split_confidence))
+            .set("tie_threshold", jf64(self.tie_threshold))
+            .set("leaf_model", self.leaf_model.label())
+            .set("max_depth", jusize(self.max_depth))
+            .set("leaf_lr", jf64(self.leaf_lr))
+            .set("min_branch_frac", jf64(self.min_branch_frac))
+            .set("subspace", self.subspace.label())
+            .set("seed", ju64(self.seed))
+            .set("split_backend", self.split_backend.label());
+        o
+    }
+
+    /// Decode options written by [`HtrOptions::to_json`].
+    pub fn from_json(j: &Json) -> Result<HtrOptions> {
+        let leaf_model = pstr(field(j, "leaf_model")?, "leaf_model")?;
+        let subspace = pstr(field(j, "subspace")?, "subspace")?;
+        let split_backend = pstr(field(j, "split_backend")?, "split_backend")?;
+        Ok(HtrOptions {
+            grace_period: pusize(field(j, "grace_period")?, "grace_period")?,
+            split_confidence: pf64(field(j, "split_confidence")?, "split_confidence")?,
+            tie_threshold: pf64(field(j, "tie_threshold")?, "tie_threshold")?,
+            leaf_model: LeafModelKind::parse(leaf_model)
+                .ok_or_else(|| anyhow!("unknown leaf model {leaf_model:?}"))?,
+            max_depth: pusize(field(j, "max_depth")?, "max_depth")?,
+            leaf_lr: pf64(field(j, "leaf_lr")?, "leaf_lr")?,
+            min_branch_frac: pf64(field(j, "min_branch_frac")?, "min_branch_frac")?,
+            subspace: SubspaceSize::parse(subspace)
+                .ok_or_else(|| anyhow!("unknown subspace {subspace:?}"))?,
+            seed: pu64(field(j, "seed")?, "seed")?,
+            split_backend: SplitBackendKind::parse(split_backend)
+                .ok_or_else(|| anyhow!("unknown split backend {split_backend:?}"))?,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -82,6 +128,32 @@ mod tests {
     #[test]
     fn bound_at_zero_is_infinite() {
         assert!(HtrOptions::default().hoeffding_bound(0.0).is_infinite());
+    }
+
+    #[test]
+    fn json_roundtrip_covers_extreme_fields() {
+        let opts = HtrOptions {
+            grace_period: 123,
+            split_confidence: 1e-9,
+            tie_threshold: 0.07,
+            leaf_model: LeafModelKind::Linear,
+            max_depth: usize::MAX, // beyond f64's exact-integer range
+            leaf_lr: 0.015,
+            min_branch_frac: 0.02,
+            subspace: SubspaceSize::Fraction(0.5),
+            seed: u64::MAX - 7,
+            split_backend: SplitBackendKind::PerObserver,
+        };
+        let text = opts.to_json().to_compact();
+        let back =
+            HtrOptions::from_json(&crate::common::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.grace_period, opts.grace_period);
+        assert_eq!(back.split_confidence, opts.split_confidence);
+        assert_eq!(back.leaf_model, opts.leaf_model);
+        assert_eq!(back.max_depth, usize::MAX);
+        assert_eq!(back.seed, u64::MAX - 7);
+        assert_eq!(back.subspace, SubspaceSize::Fraction(0.5));
+        assert_eq!(back.split_backend, SplitBackendKind::PerObserver);
     }
 
     #[test]

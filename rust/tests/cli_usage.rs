@@ -1,0 +1,98 @@
+//! CLI error-handling regression tests (satellite contract): unknown
+//! subcommands and malformed flags must print usage to **stderr** and
+//! exit nonzero; bare `qostream` prints usage to stdout and exits 0.
+
+use std::process::Command;
+
+fn qostream(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_qostream"))
+        .args(args)
+        .output()
+        .expect("spawn qostream")
+}
+
+#[test]
+fn no_subcommand_prints_usage_to_stdout_and_exits_zero() {
+    let out = qostream(&[]);
+    assert!(out.status.success(), "bare invocation must exit 0");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("USAGE"), "usage must go to stdout: {stdout}");
+    assert!(stdout.contains("serve"), "usage must list the serve subcommand");
+    assert!(stdout.contains("checkpoint"), "usage must list checkpoint");
+}
+
+#[test]
+fn unknown_subcommand_prints_usage_to_stderr_and_exits_nonzero() {
+    let out = qostream(&["frobnicate"]);
+    assert!(!out.status.success(), "unknown subcommand must exit nonzero");
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("frobnicate"), "error must name the subcommand: {stderr}");
+    assert!(stderr.contains("USAGE"), "usage must go to stderr: {stderr}");
+    assert!(
+        String::from_utf8_lossy(&out.stdout).is_empty(),
+        "nothing should land on stdout"
+    );
+}
+
+#[test]
+fn malformed_integer_flag_prints_usage_and_exits_nonzero() {
+    let out = qostream(&["tree", "--instances", "banana"]);
+    assert!(!out.status.success());
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--instances"), "error must name the flag: {stderr}");
+    assert!(stderr.contains("USAGE"));
+}
+
+#[test]
+fn malformed_enum_flag_prints_usage_and_exits_nonzero() {
+    for args in [
+        vec!["forest", "--instances", "10", "--subspace", "martian"],
+        vec!["forest", "--instances", "10", "--split-backend", "warp-drive"],
+        vec!["protocol", "--profile", "ultra"],
+        vec!["serve", "--bench", "--instances", "nope"],
+        vec!["checkpoint"], // neither --out nor --load
+    ] {
+        let out = qostream(&args);
+        assert!(!out.status.success(), "{args:?} must exit nonzero");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(stderr.contains("USAGE"), "{args:?} must print usage to stderr: {stderr}");
+    }
+}
+
+#[test]
+fn checkpoint_save_then_load_roundtrips_via_the_binary() {
+    let dir = std::env::temp_dir().join(format!("qostream-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.json");
+    let path_str = path.to_str().unwrap();
+
+    let out = qostream(&[
+        "checkpoint",
+        "--out",
+        path_str,
+        "--model",
+        "tree",
+        "--instances",
+        "1500",
+    ]);
+    assert!(
+        out.status.success(),
+        "save failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("bit-identical: true"), "{stdout}");
+
+    let out = qostream(&["checkpoint", "--load", path_str]);
+    assert!(
+        out.status.success(),
+        "load failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("bit-identical: true"), "{stdout}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,169 @@
+//! Checkpoint round-trip property test (satellite contract): for random
+//! streams × model kinds {tree, ARF, bagging} × observer kinds
+//! {QO (dynamic + fixed radius), E-BST, TE-BST, exhaustive}, `save → load`
+//! must produce **bit-identical predictions** and an **identical
+//! subsequent training trajectory** (same split counts, same structure,
+//! same predictions after further training).
+
+use qostream::common::proptest::check;
+use qostream::common::Rng;
+use qostream::eval::Regressor;
+use qostream::forest::{ArfOptions, ArfRegressor, OnlineBaggingRegressor};
+use qostream::observer::{ObserverFactory, ObserverSpec};
+use qostream::persist::Model;
+use qostream::tree::{HoeffdingTreeRegressor, HtrOptions, SubspaceSize};
+
+/// The observer grid: every checkpointable kind, through the same spec
+/// labels the codec stores.
+fn observer_grid() -> Vec<Box<dyn ObserverFactory>> {
+    ["QO_s2", "QO_0.05", "E-BST", "TE-BST_3", "Exhaustive"]
+        .iter()
+        .map(|label| ObserverSpec::from_label(label).expect(label).to_factory())
+        .collect()
+}
+
+/// One synthetic instance: 4 features, a piecewise target with noise.
+fn draw_instance(rng: &mut Rng) -> (Vec<f64>, f64) {
+    let x: Vec<f64> = (0..4).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let base = if x[0] <= 0.0 { 3.0 * x[1] } else { -2.0 + x[2] };
+    let y = base + rng.normal(0.0, 0.2);
+    (x, y)
+}
+
+/// Assert save → load is invisible: identical predictions now, identical
+/// trajectory after `extra` more instances.
+fn assert_roundtrip_invisible(mut live: Model, rng: &mut Rng, extra: usize) {
+    let text = live.to_text().expect("encode");
+    let mut restored = Model::from_text(&text).expect("decode");
+    assert_eq!(restored.name(), live.name());
+    assert_eq!(restored.kind(), live.kind());
+    assert_eq!(restored.n_elements(), live.n_elements());
+    for _ in 0..20 {
+        let (x, _) = draw_instance(rng);
+        assert_eq!(
+            live.predict(&x).to_bits(),
+            restored.predict(&x).to_bits(),
+            "prediction diverged right after restore ({})",
+            live.name()
+        );
+    }
+    for _ in 0..extra {
+        let (x, y) = draw_instance(rng);
+        live.learn_one(&x, y);
+        restored.learn_one(&x, y);
+    }
+    assert_eq!(
+        restored.n_elements(),
+        live.n_elements(),
+        "element counts diverged after continued training ({})",
+        live.name()
+    );
+    for _ in 0..20 {
+        let (x, _) = draw_instance(rng);
+        assert_eq!(
+            live.predict(&x).to_bits(),
+            restored.predict(&x).to_bits(),
+            "trajectory diverged after continued training ({})",
+            live.name()
+        );
+    }
+}
+
+#[test]
+fn tree_roundtrip_across_observers_and_streams() {
+    for (i, factory) in observer_grid().into_iter().enumerate() {
+        let label = factory.name();
+        check(&format!("tree-roundtrip[{label}]"), 0xD0 + i as u64, 3, |rng| {
+            let mut tree = HoeffdingTreeRegressor::new(
+                4,
+                HtrOptions {
+                    grace_period: 100,
+                    seed: rng.next_u64(),
+                    subspace: SubspaceSize::Fixed(3),
+                    ..Default::default()
+                },
+                ObserverSpec::from_label(&label).expect("grid label").to_factory(),
+            );
+            let n = 600 + rng.below(900) as usize;
+            for _ in 0..n {
+                let (x, y) = draw_instance(rng);
+                tree.learn_one(&x, y);
+            }
+            assert_roundtrip_invisible(Model::Tree(tree), rng, 600);
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn arf_roundtrip_across_observers() {
+    for (i, factory) in observer_grid().into_iter().enumerate() {
+        let label = factory.name();
+        check(&format!("arf-roundtrip[{label}]"), 0xE0 + i as u64, 2, |rng| {
+            let mut arf = ArfRegressor::new(
+                4,
+                ArfOptions {
+                    n_members: 3,
+                    lambda: 2.0,
+                    seed: rng.next_u64(),
+                    weighted_vote: rng.bool(0.5),
+                    tree: HtrOptions { grace_period: 100, ..Default::default() },
+                    ..Default::default()
+                },
+                ObserverSpec::from_label(&label).expect("grid label").to_factory(),
+            );
+            let n = 500 + rng.below(700) as usize;
+            for _ in 0..n {
+                let (x, y) = draw_instance(rng);
+                arf.learn_one(&x, y);
+            }
+            assert_roundtrip_invisible(Model::Arf(arf), rng, 500);
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn bagging_roundtrip_across_observers() {
+    for (i, factory) in observer_grid().into_iter().enumerate() {
+        let label = factory.name();
+        check(&format!("bag-roundtrip[{label}]"), 0xF0 + i as u64, 2, |rng| {
+            let mut bag = OnlineBaggingRegressor::new(
+                4,
+                3,
+                1.5,
+                HtrOptions { grace_period: 100, ..Default::default() },
+                ObserverSpec::from_label(&label).expect("grid label").to_factory(),
+                rng.next_u64(),
+            )
+            .with_weighted_vote(rng.bool(0.5));
+            let n = 500 + rng.below(700) as usize;
+            for _ in 0..n {
+                let (x, y) = draw_instance(rng);
+                bag.learn_one(&x, y);
+            }
+            assert_roundtrip_invisible(Model::Bagging(bag), rng, 500);
+            Ok(())
+        });
+    }
+}
+
+#[test]
+fn checkpoint_of_a_checkpoint_is_byte_identical() {
+    // canonicalization: the codec is a fixpoint on its own output, for
+    // every model kind
+    let mut rng = Rng::new(0xAB);
+    let mut tree = HoeffdingTreeRegressor::new(
+        4,
+        HtrOptions::default(),
+        ObserverSpec::from_label("QO_s2").unwrap().to_factory(),
+    );
+    for _ in 0..1500 {
+        let (x, y) = draw_instance(&mut rng);
+        tree.learn_one(&x, y);
+    }
+    let model = Model::Tree(tree);
+    let once = model.to_text().unwrap();
+    let twice = Model::from_text(&once).unwrap().to_text().unwrap();
+    assert_eq!(once, twice);
+}

@@ -1,0 +1,187 @@
+//! End-to-end tests driving a real TCP serving session: learn / predict /
+//! snapshot / stats / shutdown over the NDJSON protocol, plus the
+//! acceptance contract — a client trains a forest through `serve`, takes
+//! a checkpoint, a fresh server restores it, and both servers return
+//! **bit-identical** predictions on a held-out batch.
+
+use qostream::forest::{ArfOptions, ArfRegressor};
+use qostream::observer::{factory, QuantizationObserver, RadiusPolicy};
+use qostream::persist::Model;
+use qostream::serve::{ServeClient, ServeOptions, Server};
+use qostream::stream::{Friedman1, Stream};
+use qostream::tree::{HoeffdingTreeRegressor, HtrOptions};
+
+fn qo_factory() -> Box<dyn qostream::observer::ObserverFactory> {
+    factory("QO_s2", || {
+        Box::new(QuantizationObserver::new(RadiusPolicy::std_fraction(2.0)))
+    })
+}
+
+fn tree_model() -> Model {
+    Model::Tree(HoeffdingTreeRegressor::new(10, HtrOptions::default(), qo_factory()))
+}
+
+fn arf_model(members: usize, seed: u64) -> Model {
+    Model::Arf(ArfRegressor::new(
+        10,
+        ArfOptions { n_members: members, lambda: 3.0, seed, ..Default::default() },
+        qo_factory(),
+    ))
+}
+
+/// CI smoke test (satellite contract): ephemeral port, learn / predict /
+/// snapshot / stats / shutdown, clean exit.
+#[test]
+fn smoke_learn_predict_snapshot_shutdown() {
+    let server = Server::start(tree_model(), "127.0.0.1:0", ServeOptions::default())
+        .expect("server must start");
+    let mut client = ServeClient::connect(server.addr()).expect("connect");
+    let mut stream = Friedman1::new(1, 1.0);
+    for _ in 0..100 {
+        let inst = stream.next_instance().unwrap();
+        client.learn(&inst.x, inst.y).expect("learn ack");
+    }
+    let p = client.predict(&[0.5; 10]).expect("predict");
+    assert!(p.is_finite());
+    let checkpoint = client.snapshot().expect("snapshot");
+    assert!(checkpoint.contains("qostream-checkpoint"));
+    let stats = client.stats().expect("stats");
+    assert_eq!(
+        stats.get("kind").and_then(qostream::common::json::Json::as_str),
+        Some("tree")
+    );
+    assert!(
+        stats
+            .get("learns_enqueued")
+            .and_then(qostream::common::json::Json::as_f64)
+            .unwrap_or(0.0)
+            >= 100.0
+    );
+    client.shutdown().expect("shutdown ack");
+    let final_model = server.join().expect("clean exit");
+    assert_eq!(final_model.kind(), "tree");
+}
+
+/// The acceptance contract: train a forest over TCP, checkpoint it,
+/// restore into a fresh server, and compare held-out predictions
+/// bit-for-bit across both servers.
+#[test]
+fn restored_server_is_bit_identical_on_held_out_batch() {
+    let server_a = Server::start(
+        arf_model(3, 7),
+        "127.0.0.1:0",
+        // small swap interval: hot-swapping stays exercised during training
+        ServeOptions { snapshot_every: 200, ..Default::default() },
+    )
+    .expect("server A");
+    let mut client_a = ServeClient::connect(server_a.addr()).expect("connect A");
+
+    let mut stream = Friedman1::new(11, 1.0);
+    for _ in 0..1500 {
+        let inst = stream.next_instance().unwrap();
+        client_a.learn(&inst.x, inst.y).expect("learn");
+    }
+    // snapshot: trainer-FIFO guarantees all 1500 learns are in; also
+    // publishes, so A's reads now serve exactly the checkpointed state
+    let checkpoint = client_a.snapshot().expect("checkpoint");
+
+    let restored = Model::from_text(&checkpoint).expect("restore checkpoint");
+    assert_eq!(restored.kind(), "arf");
+    let server_b =
+        Server::start(restored, "127.0.0.1:0", ServeOptions::default()).expect("server B");
+    let mut client_b = ServeClient::connect(server_b.addr()).expect("connect B");
+
+    // held-out batch, never trained on
+    let mut held_out = Friedman1::new(0xDEAD, 0.0);
+    let batch: Vec<Vec<f64>> =
+        (0..100).map(|_| held_out.next_instance().unwrap().x).collect();
+    let preds_a = client_a.predict_batch(&batch).expect("batch A");
+    let preds_b = client_b.predict_batch(&batch).expect("batch B");
+    assert_eq!(preds_a.len(), 100);
+    for (i, (a, b)) in preds_a.iter().zip(&preds_b).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "prediction {i} diverged: {a} (live) vs {b} (restored)"
+        );
+    }
+    // single predicts agree with the batch (same snapshot both ways)
+    let single_a = client_a.predict(&batch[0]).expect("single A");
+    assert_eq!(single_a.to_bits(), preds_a[0].to_bits());
+
+    client_a.shutdown().expect("shutdown A");
+    client_b.shutdown().expect("shutdown B");
+    server_a.join().expect("A clean exit");
+    server_b.join().expect("B clean exit");
+}
+
+/// Reads must keep flowing while a concurrent connection trains, and the
+/// published snapshot must trail by at most the swap interval.
+#[test]
+fn concurrent_reads_during_training() {
+    let server = Server::start(
+        arf_model(2, 3),
+        "127.0.0.1:0",
+        ServeOptions { snapshot_every: 50, ..Default::default() },
+    )
+    .expect("server");
+    let addr = server.addr();
+
+    let writer = std::thread::spawn(move || {
+        let mut client = ServeClient::connect(addr).expect("writer connect");
+        let mut stream = Friedman1::new(21, 1.0);
+        for _ in 0..800 {
+            let inst = stream.next_instance().unwrap();
+            client.learn(&inst.x, inst.y).expect("learn");
+        }
+    });
+
+    let mut reader = ServeClient::connect(addr).expect("reader connect");
+    let probe = [0.4; 10];
+    for _ in 0..200 {
+        let p = reader.predict(&probe).expect("predict during training");
+        assert!(p.is_finite());
+    }
+    writer.join().expect("writer thread");
+
+    // an explicit snapshot is a sync point: it drains the trainer FIFO,
+    // so the counters below are deterministic
+    reader.snapshot().expect("snapshot");
+    let stats = reader.stats().expect("stats");
+    let swaps = stats
+        .get("snapshots")
+        .and_then(qostream::common::json::Json::as_f64)
+        .unwrap_or(0.0);
+    assert!(swaps >= 1.0, "hot-swap never ran: {swaps}");
+    reader.shutdown().expect("shutdown");
+    server.join().expect("clean exit");
+}
+
+/// Protocol robustness: malformed lines and bad requests produce error
+/// responses, and the connection stays usable afterwards.
+#[test]
+fn malformed_requests_get_errors_not_disconnects() {
+    let server =
+        Server::start(tree_model(), "127.0.0.1:0", ServeOptions::default()).expect("server");
+    let mut client = ServeClient::connect(server.addr()).expect("connect");
+
+    for bad in [
+        "this is not json",
+        "{\"cmd\":\"warp\"}",
+        "{\"no\":\"cmd\"}",
+        "{\"cmd\":\"learn\",\"x\":[1,2],\"y\":0}",            // wrong arity
+        "{\"cmd\":\"learn\",\"x\":[1,2,3,4,5,6,7,8,9,10]}",   // missing y
+        "{\"cmd\":\"predict\",\"x\":\"nope\"}",
+    ] {
+        let response = client.raw_line(bad).expect("server must respond");
+        assert!(
+            response.contains("\"ok\":false"),
+            "expected an error envelope for {bad:?}, got {response}"
+        );
+    }
+    // the connection survived all of it
+    let p = client.predict(&[0.0; 10]).expect("still usable");
+    assert!(p.is_finite());
+    client.shutdown().expect("shutdown");
+    server.join().expect("clean exit");
+}
