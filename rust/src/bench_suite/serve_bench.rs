@@ -10,20 +10,23 @@
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::common::json::Json;
 use crate::common::table::Table;
 use crate::common::timing::human_time;
 use crate::eval::Regressor;
 use crate::forest::{ArfOptions, ArfRegressor};
+use crate::persist::delta::DeltaLog;
 use crate::persist::Model;
-use crate::serve::{ServeClient, ServeOptions, Server};
+use crate::serve::replicate::replication_lags;
+use crate::serve::{Follower, FollowerOptions, ServeClient, ServeOptions, Server};
 use crate::stream::{Friedman1, Stream};
 use crate::tree::{HoeffdingTreeRegressor, HtrOptions};
 
-use super::forest_bench::{ebst_factory, qo_factory};
+use super::forest_bench::{self, ebst_factory, qo_factory};
 use super::report::Report;
 
 /// Scenario parameters (CLI-exposed via `qostream serve --bench`).
@@ -187,6 +190,400 @@ fn checkpoint_sizes(cfg: &ServeBenchConfig) -> Result<Vec<(String, usize, usize)
     Ok(out)
 }
 
+/// Steady-state delta vs full checkpoint sizes (offline, deterministic):
+/// train one QO tree, publish a checkpoint into a [`DeltaLog`] every
+/// `snapshot_every` learns, and compare the delta ring's bytes against
+/// the full document. The acceptance contract is `ratio >= 5` — exact
+/// diffs of the paper's O(1)-slot state must be much smaller than
+/// re-shipping the model.
+#[derive(Clone, Copy, Debug)]
+pub struct DeltaSizeResult {
+    pub versions: usize,
+    /// Mean delta bytes over the post-warmup measurement window (every
+    /// published version — the warmup already put the tree in steady
+    /// state before version 0).
+    pub mean_delta_bytes: f64,
+    pub max_delta_bytes: usize,
+    /// Full-document bytes at the final version.
+    pub full_bytes: usize,
+    /// `full_bytes / mean_delta_bytes`.
+    pub ratio: f64,
+}
+
+/// Train a tree for `warmup` instances first (so the full checkpoint is
+/// at its steady-state size), then publish a delta every
+/// `snapshot_every` learns for `measured` further instances.
+pub fn delta_size_scenario(
+    warmup: usize,
+    measured: usize,
+    snapshot_every: usize,
+    seed: u64,
+) -> Result<DeltaSizeResult> {
+    let snapshot_every = snapshot_every.max(1);
+    let mut model =
+        Model::Tree(HoeffdingTreeRegressor::new(10, HtrOptions::default(), qo_factory()));
+    let mut stream = Friedman1::new(seed, 1.0);
+    for _ in 0..warmup {
+        let inst = stream.next_instance().expect("endless stream");
+        model.learn_one(&inst.x, inst.y);
+    }
+    let mut log = DeltaLog::new(model.to_checkpoint()?, usize::MAX);
+    for i in 1..=measured {
+        let inst = stream.next_instance().expect("endless stream");
+        model.learn_one(&inst.x, inst.y);
+        if i % snapshot_every == 0 {
+            log.publish(model.to_checkpoint()?);
+        }
+    }
+    let sizes: Vec<usize> = log.entries().map(|e| e.delta_bytes).collect();
+    if sizes.is_empty() {
+        return Err(anyhow!("no versions published (measured < snapshot_every?)"));
+    }
+    let mean_delta_bytes = sizes.iter().sum::<usize>() as f64 / sizes.len() as f64;
+    let full_bytes = log.full_bytes();
+    Ok(DeltaSizeResult {
+        versions: sizes.len(),
+        mean_delta_bytes,
+        max_delta_bytes: sizes.iter().copied().max().unwrap_or(0),
+        full_bytes,
+        ratio: full_bytes as f64 / mean_delta_bytes.max(1.0),
+    })
+}
+
+/// Replicated-serving scenario parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicationBenchConfig {
+    /// Learns the background client streams through the leader.
+    pub instances: usize,
+    /// ARF members of the served model.
+    pub members: usize,
+    /// Applied learns between published versions.
+    pub snapshot_every: usize,
+    /// Follower replicas.
+    pub followers: usize,
+    /// Follower poll interval in milliseconds.
+    pub poll_ms: u64,
+    pub seed: u64,
+}
+
+impl Default for ReplicationBenchConfig {
+    fn default() -> ReplicationBenchConfig {
+        ReplicationBenchConfig {
+            instances: 4000,
+            members: 3,
+            snapshot_every: 100,
+            followers: 2,
+            poll_ms: 5,
+            seed: 1,
+        }
+    }
+}
+
+/// Measured outcome of one replicated-serving run.
+#[derive(Clone, Debug)]
+pub struct ReplicationBenchResult {
+    /// Versions the leader published.
+    pub versions: u64,
+    /// Delta applications summed over all followers.
+    pub deltas_applied: u64,
+    /// Full resyncs summed over all followers (0 in a healthy steady run;
+    /// the bootstrap sync is not counted).
+    pub full_resyncs: u64,
+    pub lag_samples: usize,
+    /// Publish → apply replication lag, over all followers × versions.
+    pub lag_p50_s: f64,
+    pub lag_p99_s: f64,
+    /// Mean delta bytes over the steady-state half of the leader's ring.
+    pub mean_delta_bytes: f64,
+    pub full_bytes: usize,
+    pub delta_ratio: f64,
+    /// Single-connection predict throughput against the leader.
+    pub leader_reads_per_sec: f64,
+    /// Aggregate single-connection predict throughput over all followers.
+    pub follower_reads_per_sec: f64,
+    /// Every follower's predictions matched the leader's bit-for-bit on a
+    /// held-out batch at the same version.
+    pub bit_identical: bool,
+}
+
+/// Predicts/sec over one connection for a fixed wall-clock window.
+fn reads_per_sec(addr: std::net::SocketAddr, window: Duration) -> Result<f64> {
+    let mut client = ServeClient::connect(addr)?;
+    let probe = [0.42; 10];
+    let start = Instant::now();
+    let mut count = 0u64;
+    while start.elapsed() < window {
+        client.predict(&probe)?;
+        count += 1;
+    }
+    Ok(count as f64 / start.elapsed().as_secs_f64())
+}
+
+/// Drive a leader + follower fleet end-to-end over real sockets and
+/// measure replication lag, delta sizes, read scaling and bit-identity.
+pub fn run_replication(cfg: &ReplicationBenchConfig) -> Result<ReplicationBenchResult> {
+    let model = Model::Arf(ArfRegressor::new(
+        10,
+        ArfOptions {
+            n_members: cfg.members,
+            lambda: 6.0,
+            seed: cfg.seed,
+            ..Default::default()
+        },
+        qo_factory(),
+    ));
+    let server = Server::start(
+        model,
+        "127.0.0.1:0",
+        ServeOptions {
+            snapshot_every: cfg.snapshot_every,
+            // retain every delta: the bench reads sizes off the ring
+            delta_history: 1 << 16,
+            ..Default::default()
+        },
+    )?;
+    let leader_addr = server.addr();
+
+    let mut followers = Vec::with_capacity(cfg.followers);
+    for _ in 0..cfg.followers.max(1) {
+        followers.push(Follower::start(
+            &leader_addr.to_string(),
+            "127.0.0.1:0",
+            FollowerOptions {
+                poll_interval: Duration::from_millis(cfg.poll_ms),
+                ..Default::default()
+            },
+        )?);
+    }
+
+    // write path: stream learns through the leader, then force a final
+    // publish so the head reflects every acked learn
+    let mut client = ServeClient::connect(leader_addr)?;
+    let mut stream = Friedman1::new(cfg.seed, 1.0);
+    for _ in 0..cfg.instances {
+        let inst = stream.next_instance().expect("endless stream");
+        client.learn(&inst.x, inst.y)?;
+    }
+    client.snapshot()?;
+
+    // wait (bounded) for every follower to reach the head version
+    let replication = server.replication();
+    let head = { crate::serve::server::lock_poisoned(&replication).version() };
+    let deadline = Instant::now() + Duration::from_secs(30);
+    for follower in &followers {
+        while follower.version() < head {
+            if Instant::now() > deadline {
+                return Err(anyhow!(
+                    "follower stuck at v{} (leader at v{head})",
+                    follower.version()
+                ));
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    // bit-identity: held-out batch, leader vs every follower at the head
+    let mut held_out = Friedman1::new(cfg.seed ^ 0xD00D, 0.0);
+    let batch: Vec<Vec<f64>> =
+        (0..30).map(|_| held_out.next_instance().expect("endless").x).collect();
+    let leader_preds = client.predict_batch(&batch)?;
+    let mut bit_identical = true;
+    for follower in &followers {
+        let mut fc = ServeClient::connect(follower.addr())?;
+        let preds = fc.predict_batch(&batch)?;
+        bit_identical &= leader_preds
+            .iter()
+            .zip(&preds)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+    }
+
+    // read scaling: per-endpoint single-connection predict throughput
+    let window = Duration::from_millis(150);
+    let leader_reads_per_sec = reads_per_sec(leader_addr, window)?;
+    let mut follower_reads_per_sec = 0.0;
+    for follower in &followers {
+        follower_reads_per_sec += reads_per_sec(follower.addr(), window)?;
+    }
+
+    // replication lag + delta sizes off the leader's log
+    let (lags, mean_delta_bytes, full_bytes) = {
+        let log = crate::serve::server::lock_poisoned(&replication);
+        let mut lags = Vec::new();
+        for follower in &followers {
+            lags.extend(replication_lags(&log, &follower.applied_log()));
+        }
+        let sizes: Vec<usize> = log.entries().map(|e| e.delta_bytes).collect();
+        let steady = &sizes[sizes.len() / 2..];
+        let mean = if steady.is_empty() {
+            0.0
+        } else {
+            steady.iter().sum::<usize>() as f64 / steady.len() as f64
+        };
+        (lags, mean, log.full_bytes())
+    };
+    let mut sorted = lags.clone();
+    let lag_p50_s = percentile(&mut sorted, 0.50);
+    let lag_p99_s = percentile(&mut sorted, 0.99);
+
+    let mut deltas_applied = 0u64;
+    let mut full_resyncs = 0u64;
+    for follower in followers {
+        let mut fc = ServeClient::connect(follower.addr())?;
+        let stats = fc.stats()?;
+        deltas_applied +=
+            stats.get("deltas_applied").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        full_resyncs +=
+            stats.get("full_resyncs").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+        fc.shutdown()?;
+        follower.join()?;
+    }
+    client.shutdown()?;
+    server.join()?;
+
+    Ok(ReplicationBenchResult {
+        versions: head,
+        deltas_applied,
+        full_resyncs,
+        lag_samples: lags.len(),
+        lag_p50_s,
+        lag_p99_s,
+        mean_delta_bytes,
+        full_bytes,
+        delta_ratio: full_bytes as f64 / mean_delta_bytes.max(1.0),
+        leader_reads_per_sec,
+        follower_reads_per_sec,
+        bit_identical,
+    })
+}
+
+/// The pinned-seed micro-bench behind `qostream serve --bench --smoke`:
+/// serving latency/throughput, a forest-training subset, and the delta
+/// steady-state ratio, as one flat JSON document (`BENCH_ci.json`) the CI
+/// gate diffs against the committed `BENCH_baseline.json`.
+pub fn run_smoke(seed: u64) -> Result<Json> {
+    let serve = run(&ServeBenchConfig {
+        instances: 2500,
+        members: 3,
+        snapshot_every: 250,
+        min_predict_samples: 300,
+        seed,
+    })?;
+    let rows = forest_bench::run(&forest_bench::ForestBenchConfig {
+        instances: 3000,
+        members: 3,
+        drift_at: 0,
+        seed,
+        ..Default::default()
+    });
+    let forest_inst_per_sec = rows
+        .iter()
+        .find(|r| r.model.starts_with("arf["))
+        .map(|r| r.throughput)
+        .ok_or_else(|| anyhow!("forest subset produced no ARF row"))?;
+    let delta = delta_size_scenario(8000, 600, 5, seed)?;
+
+    let mut j = Json::obj();
+    j.set("schema", "qostream-bench-smoke/1")
+        .set("seed", seed)
+        .set("learns_per_sec", serve.learns_per_sec())
+        .set("predict_p50_s", serve.predict_p50)
+        .set("predict_p99_s", serve.predict_p99)
+        .set("predict_samples", serve.predict_samples)
+        .set("forest_inst_per_sec", forest_inst_per_sec)
+        .set("delta_ratio", delta.ratio)
+        .set("mean_delta_bytes", delta.mean_delta_bytes)
+        .set("full_checkpoint_bytes", delta.full_bytes);
+    Ok(j)
+}
+
+/// Compare a smoke run against the committed baseline. Returns the list
+/// of violations (empty = the gate passes). Throughput metrics fail when
+/// they drop more than `tolerance` below baseline; latency metrics fail
+/// when they rise more than `tolerance` above it; the delta ratio has a
+/// hard functional floor of 5× independent of the baseline.
+pub fn gate(current: &Json, baseline: &Json) -> Vec<String> {
+    let tolerance = baseline.get("tolerance").and_then(Json::as_f64).unwrap_or(0.30);
+    let metric = |doc: &Json, key: &str| doc.get(key).and_then(Json::as_f64);
+    let mut violations = Vec::new();
+    // a key the baseline tracks but the run lacks would silently disable
+    // the gate — treat it as a failure, not a pass
+    let require = |key: &str, violations: &mut Vec<String>| -> Option<(f64, f64)> {
+        match (metric(current, key), metric(baseline, key)) {
+            (Some(cur), Some(base)) => Some((cur, base)),
+            (None, Some(_)) => {
+                violations.push(format!(
+                    "{key} missing from the current run (the baseline gates on it)"
+                ));
+                None
+            }
+            _ => None, // not a baseline-tracked metric
+        }
+    };
+    for key in ["learns_per_sec", "forest_inst_per_sec"] {
+        if let Some((cur, base)) = require(key, &mut violations) {
+            let floor = base * (1.0 - tolerance);
+            if base > 0.0 && cur < floor {
+                violations.push(format!(
+                    "{key} regressed >{:.0}%: {cur:.1} < {floor:.1} (baseline {base:.1})",
+                    tolerance * 100.0
+                ));
+            }
+        }
+    }
+    for key in ["predict_p99_s", "predict_p50_s"] {
+        if let Some((cur, base)) = require(key, &mut violations) {
+            let ceiling = base * (1.0 + tolerance);
+            if base > 0.0 && cur > ceiling {
+                violations.push(format!(
+                    "{key} regressed >{:.0}%: {} > {} (baseline {})",
+                    tolerance * 100.0,
+                    human_time(cur),
+                    human_time(ceiling),
+                    human_time(base)
+                ));
+            }
+        }
+    }
+    match metric(current, "delta_ratio") {
+        Some(ratio) if ratio < 5.0 => violations.push(format!(
+            "delta_ratio {ratio:.2} below the 5x floor (deltas must stay \
+             much smaller than full checkpoints)"
+        )),
+        Some(_) => {}
+        None => violations
+            .push("delta_ratio missing from the current run (5x floor unchecked)".into()),
+    }
+    violations
+}
+
+/// CLI entry for `serve --bench --smoke`: run, write `out`, and (when a
+/// baseline is given) gate — a violation is an `Err`, which the CLI turns
+/// into a nonzero exit for CI.
+pub fn run_smoke_cli(out: &str, baseline: Option<&str>) -> Result<String> {
+    let current = run_smoke(1)?;
+    let mut text = current.to_pretty();
+    text.push('\n');
+    std::fs::write(out, &text)
+        .map_err(|e| anyhow!("writing bench output {out}: {e}"))?;
+    let mut rendered = format!("bench smoke (pinned seed) written to {out}\n{text}");
+    if let Some(baseline_path) = baseline {
+        let baseline_text = std::fs::read_to_string(baseline_path)
+            .map_err(|e| anyhow!("reading baseline {baseline_path}: {e}"))?;
+        let baseline_doc =
+            Json::parse(&baseline_text).map_err(|e| anyhow!("baseline: {e}"))?;
+        let violations = gate(&current, &baseline_doc);
+        if violations.is_empty() {
+            rendered.push_str(&format!("gate: PASS vs {baseline_path}\n"));
+        } else {
+            return Err(anyhow!(
+                "bench gate FAILED vs {baseline_path}:\n  {}",
+                violations.join("\n  ")
+            ));
+        }
+    }
+    Ok(rendered)
+}
+
 /// Render + persist under `results/serve/`.
 pub fn generate(cfg: &ServeBenchConfig) -> Result<String> {
     let result = run(cfg)?;
@@ -216,6 +613,40 @@ pub fn generate(cfg: &ServeBenchConfig) -> Result<String> {
     }
     out.push_str(&table.render());
 
+    let delta = delta_size_scenario(8000, 1000, 10, cfg.seed)?;
+    out.push_str(&format!(
+        "delta checkpoints (steady-state QO tree, publish every 10 learns, {} versions):\n  \
+         mean delta {:.0} B vs full {} B -> {:.1}x smaller (max delta {} B)\n",
+        delta.versions,
+        delta.mean_delta_bytes,
+        delta.full_bytes,
+        delta.ratio,
+        delta.max_delta_bytes
+    ));
+
+    let repl_cfg = ReplicationBenchConfig { seed: cfg.seed, ..Default::default() };
+    let replication = run_replication(&repl_cfg)?;
+    out.push_str(&format!(
+        "replicated serving ({} followers, {} versions, {} deltas applied, \
+         {} full resyncs):\n  replication lag: p50 {}  p99 {}  ({} samples)\n  \
+         steady-state delta {:.0} B vs full {} B -> {:.1}x smaller\n  \
+         reads/sec: leader {:.0}, followers {:.0} aggregate  \
+         (bit-identical: {})\n",
+        repl_cfg.followers,
+        replication.versions,
+        replication.deltas_applied,
+        replication.full_resyncs,
+        human_time(replication.lag_p50_s),
+        human_time(replication.lag_p99_s),
+        replication.lag_samples,
+        replication.mean_delta_bytes,
+        replication.full_bytes,
+        replication.delta_ratio,
+        replication.leader_reads_per_sec,
+        replication.follower_reads_per_sec,
+        replication.bit_identical
+    ));
+
     let report = Report::create("serve")?;
     report.write_text("serve.txt", &out)?;
     let mut j = crate::common::json::Json::obj();
@@ -225,7 +656,20 @@ pub fn generate(cfg: &ServeBenchConfig) -> Result<String> {
         .set("predict_p50_s", result.predict_p50)
         .set("predict_p99_s", result.predict_p99)
         .set("predict_samples", result.predict_samples)
-        .set("snapshots", result.snapshots);
+        .set("snapshots", result.snapshots)
+        .set("delta_versions", delta.versions)
+        .set("delta_mean_bytes", delta.mean_delta_bytes)
+        .set("delta_full_bytes", delta.full_bytes)
+        .set("delta_ratio", delta.ratio)
+        .set("replication_versions", replication.versions)
+        .set("replication_deltas_applied", replication.deltas_applied)
+        .set("replication_full_resyncs", replication.full_resyncs)
+        .set("replication_lag_p50_s", replication.lag_p50_s)
+        .set("replication_lag_p99_s", replication.lag_p99_s)
+        .set("replication_delta_ratio", replication.delta_ratio)
+        .set("leader_reads_per_sec", replication.leader_reads_per_sec)
+        .set("follower_reads_per_sec", replication.follower_reads_per_sec)
+        .set("replication_bit_identical", replication.bit_identical);
     let mut sizes = crate::common::json::Json::Arr(Vec::new());
     for (label, bytes, elements) in &result.checkpoint_sizes {
         let mut row = crate::common::json::Json::obj();
@@ -240,6 +684,83 @@ pub fn generate(cfg: &ServeBenchConfig) -> Result<String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn delta_checkpoints_are_much_smaller_than_full() {
+        // acceptance contract: steady-state deltas >= 5x smaller than the
+        // full checkpoint (exactness is covered by persist_roundtrip)
+        let result = delta_size_scenario(8000, 600, 5, 7).expect("scenario");
+        assert!(result.versions >= 100);
+        assert!(result.full_bytes > 0);
+        assert!(
+            result.ratio >= 5.0,
+            "delta ratio {:.2} below the 5x floor (mean delta {:.0} B, full {} B)",
+            result.ratio,
+            result.mean_delta_bytes,
+            result.full_bytes
+        );
+    }
+
+    #[test]
+    fn tiny_replication_scenario_reports_sane_numbers() {
+        let cfg = ReplicationBenchConfig {
+            instances: 900,
+            members: 2,
+            snapshot_every: 150,
+            followers: 2,
+            poll_ms: 2,
+            seed: 5,
+        };
+        let result = run_replication(&cfg).expect("replication scenario");
+        assert!(result.versions >= 2, "too few versions: {result:?}");
+        assert!(result.bit_identical, "follower diverged from the leader");
+        assert!(result.deltas_applied >= 1, "no deltas ever applied: {result:?}");
+        assert_eq!(result.full_resyncs, 0, "healthy run must not full-resync");
+        assert!(result.lag_samples >= 1);
+        assert!(result.lag_p99_s >= result.lag_p50_s);
+        assert!(result.leader_reads_per_sec > 0.0);
+        assert!(result.follower_reads_per_sec > 0.0);
+    }
+
+    #[test]
+    fn gate_passes_and_fails_on_the_right_sides() {
+        let doc = |learns: f64, p99: f64, ratio: f64| {
+            let mut j = Json::obj();
+            j.set("learns_per_sec", learns)
+                .set("forest_inst_per_sec", 10_000.0)
+                .set("predict_p99_s", p99)
+                .set("predict_p50_s", p99 / 2.0)
+                .set("delta_ratio", ratio);
+            j
+        };
+        let baseline = doc(10_000.0, 0.001, 10.0);
+        // identical run: pass
+        assert!(gate(&doc(10_000.0, 0.001, 10.0), &baseline).is_empty());
+        // 20% slower learns: within the 30% tolerance
+        assert!(gate(&doc(8_000.0, 0.001, 10.0), &baseline).is_empty());
+        // 40% slower learns: fail
+        let v = gate(&doc(6_000.0, 0.001, 10.0), &baseline);
+        assert!(v.iter().any(|m| m.contains("learns_per_sec")), "{v:?}");
+        // 40% higher p99: fail
+        let v = gate(&doc(10_000.0, 0.0014, 10.0), &baseline);
+        assert!(v.iter().any(|m| m.contains("predict_p99_s")), "{v:?}");
+        // delta ratio under the hard floor: fail regardless of baseline
+        let v = gate(&doc(10_000.0, 0.001, 3.0), &baseline);
+        assert!(v.iter().any(|m| m.contains("delta_ratio")), "{v:?}");
+        // faster-than-baseline never fails
+        assert!(gate(&doc(50_000.0, 0.0001, 50.0), &baseline).is_empty());
+        // custom tolerance is honored
+        let mut tight = doc(10_000.0, 0.001, 10.0);
+        tight.set("tolerance", 0.05);
+        let v = gate(&doc(9_000.0, 0.001, 10.0), &tight);
+        assert!(v.iter().any(|m| m.contains("learns_per_sec")), "{v:?}");
+        // schema drift must FAIL the gate, not silently disable it
+        let mut partial = Json::obj();
+        partial.set("predict_p99_s", 0.001);
+        let v = gate(&partial, &baseline);
+        assert!(v.iter().any(|m| m.contains("learns_per_sec missing")), "{v:?}");
+        assert!(v.iter().any(|m| m.contains("delta_ratio missing")), "{v:?}");
+    }
 
     #[test]
     fn percentile_nearest_rank() {

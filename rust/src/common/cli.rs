@@ -97,6 +97,12 @@ impl Args {
         }
     }
 
+    /// Millisecond option as a [`std::time::Duration`] (non-panicking,
+    /// like [`Args::try_u64`]) — e.g. `--poll-ms 25`.
+    pub fn try_ms(&self, key: &str, default_ms: u64) -> anyhow::Result<std::time::Duration> {
+        Ok(std::time::Duration::from_millis(self.try_u64(key, default_ms)?))
+    }
+
     /// Non-panicking variant of [`Args::f64_or`].
     pub fn try_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
         match self.opt(key) {
@@ -158,5 +164,13 @@ mod tests {
         assert!(a.try_f64("n", 0.0).is_err());
         assert_eq!(a.try_u64("k", 0).unwrap(), 7);
         assert!(a.try_u64("n", 0).is_err());
+    }
+
+    #[test]
+    fn try_ms_parses_durations() {
+        let a = parse("x --poll-ms 250 --bad abc");
+        assert_eq!(a.try_ms("poll-ms", 25).unwrap().as_millis(), 250);
+        assert_eq!(a.try_ms("missing", 25).unwrap().as_millis(), 25);
+        assert!(a.try_ms("bad", 25).is_err());
     }
 }

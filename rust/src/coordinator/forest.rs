@@ -126,6 +126,49 @@ pub fn fit_sharded<E: ParallelEnsemble>(
     fit_sharded_voting(ensemble, stream, max_instances, &[], config).0
 }
 
+/// Replay stream over a borrowed batch slice — the serve layer's
+/// micro-batches ([`crate::serve`] drains its trainer queue into one of
+/// these and pushes it through the sharded machinery).
+struct BatchStream<'a> {
+    items: &'a [Instance],
+    pos: usize,
+}
+
+impl Stream for BatchStream<'_> {
+    fn next_instance(&mut self) -> Option<Instance> {
+        let inst = self.items.get(self.pos)?.clone();
+        self.pos += 1;
+        Some(inst)
+    }
+
+    fn n_features(&self) -> usize {
+        self.items.first().map(|i| i.x.len()).unwrap_or(0)
+    }
+
+    fn name(&self) -> String {
+        "batch".to_string()
+    }
+}
+
+/// Train `ensemble` on one bounded batch with members sharded across
+/// worker threads — the incremental entry point the serve layer uses to
+/// front a sharded fleet from a long-lived trainer loop. Exactly
+/// [`fit_sharded`] over a replay of `batch` (so it inherits the
+/// bit-for-bit-sequential contract); each call spawns and joins its
+/// scoped shard threads, so amortize by batching (the serve layer's
+/// `shard_batch` knob).
+pub fn train_batch_sharded<E: ParallelEnsemble>(
+    ensemble: &mut E,
+    batch: &[Instance],
+    config: ForestCoordinatorConfig,
+) -> Option<ShardedFitReport> {
+    if batch.is_empty() {
+        return None;
+    }
+    let mut stream = BatchStream { items: batch, pos: 0 };
+    Some(fit_sharded(ensemble, &mut stream, batch.len(), config))
+}
+
 /// [`fit_sharded`], then answer `probes` through the distributed vote
 /// protocol: shards compute their members' predictions in parallel and the
 /// leader merges them into one prediction per probe — bit-for-bit what the

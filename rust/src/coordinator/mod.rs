@@ -34,7 +34,8 @@ pub mod leader;
 pub mod shard;
 
 pub use forest::{
-    fit_sharded, fit_sharded_voting, ForestCoordinatorConfig, ShardedFitReport,
+    fit_sharded, fit_sharded_voting, train_batch_sharded, ForestCoordinatorConfig,
+    ShardedFitReport,
 };
 pub use leader::{CoordinatorConfig, CoordinatorReport, ShardedObserverCoordinator};
 pub use shard::Partitioner;

@@ -280,6 +280,10 @@ pub struct ArfRegressor {
     /// Shared split-query engine: one batched call resolves every
     /// member's due attempts per [`Regressor::learn_one`] round.
     backend: Arc<dyn SplitBackend>,
+    /// Instances absorbed since [`Self::mark_synced`] — runtime-only
+    /// touched-state tracking for the serve/replication layer (not
+    /// checkpointed; see [`HoeffdingTreeRegressor::learns_since_sync`]).
+    learns_since_sync: u64,
 }
 
 impl ArfRegressor {
@@ -326,7 +330,43 @@ impl ArfRegressor {
                 }
             })
             .collect();
-        ArfRegressor { members, options, observer_label, backend }
+        ArfRegressor { members, options, observer_label, backend, learns_since_sync: 0 }
+    }
+
+    /// Instances absorbed since the last [`Self::mark_synced`]. The
+    /// member-tree counters are folded in as a backstop, but they alone
+    /// are NOT sufficient: member training mutates checkpointed state
+    /// (PRNG words, detectors) even when the Poisson draw trains no tree,
+    /// so any path that trains members outside [`Regressor::learn_one`]
+    /// must report its instances via [`Self::note_learns`].
+    pub fn learns_since_sync(&self) -> u64 {
+        self.members
+            .iter()
+            .flat_map(|m| {
+                std::iter::once(m.tree.learns_since_sync())
+                    .chain(m.background.as_ref().map(|b| b.learns_since_sync()))
+            })
+            .fold(self.learns_since_sync, u64::max)
+    }
+
+    /// Record `n` instances trained through an external member-training
+    /// path (e.g. the sharded coordinator), which bypasses
+    /// [`Regressor::learn_one`] and would otherwise leave the
+    /// touched-state counter stale when every Poisson draw was zero.
+    pub fn note_learns(&mut self, n: u64) {
+        self.learns_since_sync += n;
+    }
+
+    /// Reset the touched-state counters (ensemble and every member tree)
+    /// after a snapshot/delta publication.
+    pub fn mark_synced(&mut self) {
+        self.learns_since_sync = 0;
+        for member in &mut self.members {
+            member.tree.mark_synced();
+            if let Some(bg) = &mut member.background {
+                bg.mark_synced();
+            }
+        }
     }
 
     pub fn n_members(&self) -> usize {
@@ -457,6 +497,7 @@ impl ArfRegressor {
             options,
             observer_label: label.to_string(),
             backend,
+            learns_since_sync: 0,
         })
     }
 }
@@ -477,6 +518,7 @@ impl Regressor for ArfRegressor {
     }
 
     fn learn_one(&mut self, x: &[f64], y: f64) {
+        self.learns_since_sync += 1;
         for member in &mut self.members {
             member.train_queued(x, y);
         }

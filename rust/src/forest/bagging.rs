@@ -101,6 +101,10 @@ pub struct OnlineBaggingRegressor {
     backend: Arc<dyn SplitBackend>,
     /// Fold the vote by inverse recent error ([`fold_votes_weighted`]).
     weighted_vote: bool,
+    /// Instances absorbed since [`Self::mark_synced`] — runtime-only
+    /// touched-state tracking for the serve/replication layer (not
+    /// checkpointed).
+    learns_since_sync: u64,
 }
 
 impl OnlineBaggingRegressor {
@@ -141,7 +145,44 @@ impl OnlineBaggingRegressor {
                 }
             })
             .collect();
-        OnlineBaggingRegressor { members, observer_label, backend, weighted_vote: false }
+        OnlineBaggingRegressor {
+            members,
+            observer_label,
+            backend,
+            weighted_vote: false,
+            learns_since_sync: 0,
+        }
+    }
+
+    /// Instances absorbed since the last [`Self::mark_synced`]. The
+    /// member-tree counters are folded in as a backstop, but they alone
+    /// are NOT sufficient: member training mutates checkpointed state
+    /// (PRNG words, error trackers) even when the Poisson draw trains no
+    /// tree, so any path that trains members outside
+    /// [`Regressor::learn_one`] must report its instances via
+    /// [`Self::note_learns`].
+    pub fn learns_since_sync(&self) -> u64 {
+        self.members
+            .iter()
+            .map(|m| m.tree.learns_since_sync())
+            .fold(self.learns_since_sync, u64::max)
+    }
+
+    /// Record `n` instances trained through an external member-training
+    /// path (e.g. the sharded coordinator), which bypasses
+    /// [`Regressor::learn_one`] and would otherwise leave the
+    /// touched-state counter stale when every Poisson draw was zero.
+    pub fn note_learns(&mut self, n: u64) {
+        self.learns_since_sync += n;
+    }
+
+    /// Reset the touched-state counters after a snapshot/delta
+    /// publication.
+    pub fn mark_synced(&mut self) {
+        self.learns_since_sync = 0;
+        for member in &mut self.members {
+            member.tree.mark_synced();
+        }
     }
 
     /// Enable (or disable) the accuracy-weighted vote: members fold with
@@ -250,6 +291,7 @@ impl OnlineBaggingRegressor {
             observer_label: label.to_string(),
             backend: backend.expect("members is non-empty"),
             weighted_vote,
+            learns_since_sync: 0,
         })
     }
 }
@@ -271,6 +313,7 @@ impl Regressor for OnlineBaggingRegressor {
     }
 
     fn learn_one(&mut self, x: &[f64], y: f64) {
+        self.learns_since_sync += 1;
         for member in &mut self.members {
             member.train_queued(x, y);
         }

@@ -34,10 +34,14 @@
 //!   JAX/Pallas split-evaluation artifacts from `artifacts/`.
 //! * [`persist`] — the versioned JSON model codec: `save → load` is
 //!   bit-for-bit invisible to prediction *and* continued training, for
-//!   trees, forests and every observer kind.
+//!   trees, forests and every observer kind; [`persist::delta`] turns
+//!   consecutive checkpoints into exact structural deltas (versioned,
+//!   hash-verified) for replication.
 //! * [`serve`] — a std-only TCP learn/predict server: one trainer thread
-//!   owns the mutable model, reader threads answer predictions from
-//!   immutable hot-swapped snapshots, checkpoints on demand.
+//!   owns the mutable model (optionally sharded over the coordinator),
+//!   reader threads answer predictions from immutable hot-swapped
+//!   snapshots, checkpoints on demand, and follower read replicas
+//!   ([`serve::replicate`]) mirror the leader via delta checkpoints.
 //! * [`bench_suite`] — regenerates every table and figure of the paper's
 //!   evaluation (see DESIGN.md for the experiment index), plus the
 //!   serving latency/checkpoint-size scenario.

@@ -15,7 +15,9 @@
 //! qostream coordinator [--shards N] [--instances N]
 //! qostream serve [--port P] [--model tree|arf|bag] [--observer qo|ebst|<label>]
 //!                [--members N] [--snapshot-every K] [--restore ckpt.json]
-//!                [--checkpoint-out ckpt.json] [--bench]
+//!                [--checkpoint-out ckpt.json] [--shards N] [--shard-batch B]
+//!                [--delta-history K] [--follower-of HOST:PORT] [--poll-ms MS]
+//!                [--bench [--replication] [--smoke --out F --baseline F]]
 //! qostream checkpoint --out ckpt.json [--model ...] [--instances N]
 //! qostream checkpoint --load ckpt.json
 //! qostream xla [--instances N] [--radius R]
@@ -44,7 +46,7 @@ use qostream::forest::{
 use qostream::observer::{AttributeObserver, ObserverSpec};
 use qostream::persist::Model;
 use qostream::runtime::{find_artifacts_dir, Manifest, SplitBackendKind, XlaSplitEngine};
-use qostream::serve::{ServeOptions, Server};
+use qostream::serve::{Follower, FollowerOptions, ServeOptions, Server};
 use qostream::stream::{Friedman1, Stream};
 use qostream::tree::{HoeffdingTreeRegressor, HtrOptions};
 
@@ -320,6 +322,42 @@ fn build_model(args: &Args) -> Result<Model> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     if args.flag("bench") {
+        if args.flag("smoke") {
+            // pinned-seed micro-bench + CI regression gate: writes the
+            // BENCH_ci.json artifact and exits nonzero on a gate violation
+            let out = args.get_or("out", "BENCH_ci.json");
+            print!("{}", serve_bench::run_smoke_cli(out, args.opt("baseline"))?);
+            return Ok(());
+        }
+        if args.flag("replication") {
+            let cfg = serve_bench::ReplicationBenchConfig {
+                instances: args.try_usize("instances", 4000)?,
+                members: args.try_usize("members", 3)?,
+                snapshot_every: args.try_usize("snapshot-every", 100)?,
+                followers: args.try_usize("followers", 2)?,
+                poll_ms: args.try_u64("poll-ms", 5)?,
+                seed: args.try_u64("seed", 1)?,
+            };
+            let r = serve_bench::run_replication(&cfg)?;
+            println!(
+                "replication: {} versions, {} deltas applied, {} full resyncs\n\
+                 lag p50 {:.2}ms p99 {:.2}ms ({} samples); delta {:.0}B vs full {}B \
+                 ({:.1}x); reads/s leader {:.0} followers {:.0}; bit-identical: {}",
+                r.versions,
+                r.deltas_applied,
+                r.full_resyncs,
+                r.lag_p50_s * 1e3,
+                r.lag_p99_s * 1e3,
+                r.lag_samples,
+                r.mean_delta_bytes,
+                r.full_bytes,
+                r.delta_ratio,
+                r.leader_reads_per_sec,
+                r.follower_reads_per_sec,
+                r.bit_identical
+            );
+            return Ok(());
+        }
         let cfg = serve_bench::ServeBenchConfig {
             instances: args.try_usize("instances", 5000)?,
             members: args.try_usize("members", 5)?,
@@ -331,23 +369,52 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!("written to results/serve/");
         return Ok(());
     }
-    let model = build_model(args)?;
     let bind = format!(
         "{}:{}",
         args.get_or("host", "127.0.0.1"),
         args.try_u64("port", 7878)?
     );
+    if let Some(leader) = args.opt("follower-of") {
+        // read replica: no trainer, mirrors the leader's published delta
+        // checkpoints and serves predict/predict_batch/stats
+        let options = FollowerOptions {
+            poll_interval: args.try_ms("poll-ms", 25)?,
+            ..Default::default()
+        };
+        let follower = Follower::start(leader, &bind, options)?;
+        println!(
+            "following {leader} on {} (poll every {:?})\n\
+             protocol: NDJSON predict | predict_batch | snapshot | stats | shutdown",
+            follower.addr(),
+            options.poll_interval
+        );
+        follower.join()?;
+        println!("follower stopped");
+        return Ok(());
+    }
+    let model = build_model(args)?;
     let options = ServeOptions {
         snapshot_every: args.try_usize("snapshot-every", 512)?,
         queue_capacity: args.try_usize("queue", 1024)?,
+        delta_history: args.try_usize("delta-history", 64)?,
+        shards: args.try_usize("shards", 0)?,
+        shard_batch: args.try_usize("shard-batch", 256)?,
     };
     let name = model.name();
     let server = Server::start(model, &bind, options)?;
+    let sharding = if options.shards > 1 {
+        format!(", {} trainer shards", options.shards)
+    } else {
+        String::new()
+    };
     println!(
-        "serving {name} on {} (snapshot hot-swap every {} learns)\n\
-         protocol: NDJSON learn | predict | predict_batch | snapshot | stats | shutdown",
+        "serving {name} on {} (snapshot hot-swap every {} learns, \
+         {}-deep delta ring{sharding})\n\
+         protocol: NDJSON learn | predict | predict_batch | snapshot | stats \
+         | repl_sync | shutdown",
         server.addr(),
-        options.snapshot_every
+        options.snapshot_every,
+        options.delta_history
     );
     let final_model = server.join()?;
     println!("server stopped");
@@ -493,8 +560,11 @@ SUBCOMMANDS
   coordinator  sharded distributed observation    [--shards N --instances N --radius R]
   serve        online learn/predict TCP server    [--port P --model tree|arf|bag --members N
                (NDJSON protocol, hot-swapped       --observer qo|ebst --snapshot-every K
-                read snapshots, checkpoints;       --restore ckpt.json --checkpoint-out ckpt.json
-                --bench runs the latency scenario) --bench]
+                read snapshots, checkpoints,       --restore ckpt.json --checkpoint-out ckpt.json
+                delta-checkpoint replication,      --shards N --shard-batch B --delta-history K
+                sharded training;                  --follower-of HOST:PORT --poll-ms MS
+                --bench runs the latency scenario, --bench [--replication] [--smoke
+                --smoke writes/gates BENCH_ci.json) --out BENCH_ci.json --baseline FILE]]
   checkpoint   save/restore model checkpoints     [--out ckpt.json | --load ckpt.json
                                                    --model --observer --members --instances N]
   xla          AOT split-eval via PJRT artifacts  [--instances N --radius R]

@@ -1,0 +1,732 @@
+//! Delta checkpoints: exact structural diffs between canonical
+//! checkpoint documents, plus the versioned [`DeltaLog`] the replication
+//! layer ([`crate::serve::replicate`]) publishes from.
+//!
+//! ## Why diffs are exact here
+//!
+//! The checkpoint codec ([`super`]) writes **canonical** text: object keys
+//! are sorted, floats print their shortest round-trip representation, and
+//! encode → decode → encode is a byte-for-byte fixpoint. The paper's slot
+//! tables and `VarStats` are mergeable/subtractable O(1) summaries
+//! (PAPER.md Sec. 3–4), so the state a learn touches is a handful of
+//! localized slots — which means two consecutive checkpoints differ in a
+//! few small subtrees (the touched leaves' observers, the routed path's
+//! counters, the PRNG words) while the rest of the document is identical.
+//! A structural diff therefore *is* the touched-state extraction: it
+//! recurses only where subtrees differ and emits exactly the changed
+//! values. `apply(base, diff(base, next)) == next` **structurally**, and
+//! because the text form is canonical, also **byte-for-byte** (the
+//! property `rust/tests/persist_roundtrip.rs` asserts across model ×
+//! observer kinds).
+//!
+//! ## Patch format
+//!
+//! A patch is a JSON array of ops, applied in order:
+//!
+//! * `{"p": [..path..], "v": value}` — set: replace the value at the path
+//!   (for arrays, an index equal to the current length appends).
+//! * `{"p": [..path..], "d": true}` — delete the object key at the path.
+//! * `{"p": [..path..], "n": len}` — truncate the array at the path.
+//!
+//! Path segments are object keys (strings) or array indices (numbers).
+//! Ops are emitted depth-first in deterministic order (truncations before
+//! element edits, appends in increasing index order), so applying them
+//! sequentially is always well-defined.
+//!
+//! ## Versioning
+//!
+//! [`DeltaLog`] assigns monotonically increasing versions to published
+//! documents (version 0 = the initial document), keeps a bounded ring of
+//! recent per-version patches, and answers sync requests with either
+//! `up_to_date`, the missing patch chain, or a full document when the
+//! requester has fallen behind the ring (gap → full resync). Every entry
+//! carries the FxHash of the target version's canonical text so an
+//! applier can detect divergence at the exact version it happened.
+
+use std::collections::VecDeque;
+use std::hash::Hasher;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::common::fxhash::FxHasher;
+use crate::common::json::Json;
+
+use super::codec::{field, ju64, pu64, pusize};
+
+/// FxHash of a document's canonical compact text (the replication
+/// layer's cheap divergence detector).
+pub fn doc_hash(doc: &Json) -> u64 {
+    let mut h = FxHasher::default();
+    h.write(doc.to_compact().as_bytes());
+    h.finish()
+}
+
+/// Equality with canonical-*text* semantics: numbers compare by bit
+/// pattern, so `0.0` and `-0.0` — which the canonical writer prints
+/// differently (`0` vs `-0`), and PR 4 deliberately made survive the
+/// codec — are different values here. The derived `PartialEq` would call
+/// them equal and make [`diff`] silently drop a sign-of-zero change,
+/// breaking the byte-for-byte contract.
+fn canonical_eq(a: &Json, b: &Json) -> bool {
+    match (a, b) {
+        (Json::Num(x), Json::Num(y)) => x.to_bits() == y.to_bits(),
+        (Json::Arr(xs), Json::Arr(ys)) => {
+            xs.len() == ys.len() && xs.iter().zip(ys).all(|(x, y)| canonical_eq(x, y))
+        }
+        (Json::Obj(xs), Json::Obj(ys)) => {
+            xs.len() == ys.len()
+                && xs
+                    .iter()
+                    .zip(ys)
+                    .all(|((ka, va), (kb, vb))| ka == kb && canonical_eq(va, vb))
+        }
+        _ => a == b,
+    }
+}
+
+fn op_set(path: &[Json], value: &Json) -> Json {
+    let mut o = Json::obj();
+    o.set("p", Json::Arr(path.to_vec())).set("v", value.clone());
+    o
+}
+
+fn op_del(path: &[Json]) -> Json {
+    let mut o = Json::obj();
+    o.set("p", Json::Arr(path.to_vec())).set("d", true);
+    o
+}
+
+fn op_truncate(path: &[Json], len: usize) -> Json {
+    let mut o = Json::obj();
+    o.set("p", Json::Arr(path.to_vec())).set("n", len);
+    o
+}
+
+/// Structural diff: the op sequence that rewrites `old` into `new`
+/// (empty when they are equal). Recurses into matching containers, and at
+/// deeper levels keeps whichever encoding is smaller on the wire: the
+/// child ops, or one op replacing the whole subtree. Both are exact —
+/// the choice only affects delta bytes. (The collapse matters in
+/// practice: checkpoint slot tables are code-*sorted arrays*, so one
+/// inserted slot shifts a tail that would otherwise diff
+/// element-by-element, and a dense cluster of tiny scalar edits can cost
+/// more in repeated paths than the subtree it rewrites.)
+pub fn diff(old: &Json, new: &Json) -> Json {
+    let mut ops = Vec::new();
+    let mut path = Vec::new();
+    diff_into(old, new, &mut path, &mut ops);
+    Json::Arr(ops)
+}
+
+/// Shallowest path depth at which [`diff_into`] considers replacing a
+/// whole subtree. Above this (the document root, the `model` payload,
+/// a tree's full node arena) a replacement is never a useful delta —
+/// it approximates a full resync — and *measuring* it would serialize
+/// nearly the whole document on every publish.
+const COLLAPSE_MIN_DEPTH: usize = 3;
+
+/// Record an op: its compact size is computed exactly once, here (+1 for
+/// the separating comma in the patch array).
+fn push_op(ops: &mut Vec<Json>, op: Json) -> usize {
+    let bytes = op.to_compact().len() + 1;
+    ops.push(op);
+    bytes
+}
+
+/// Early-abort check that `value`'s compact serialization stays under
+/// `cap` bytes. Approximate on escaped object keys — an overestimate can
+/// only skip a borderline collapse, which costs a few delta bytes, never
+/// exactness. The abort is what keeps [`diff`] from serializing a
+/// near-document-sized subtree (a whole forest member, say) just to
+/// discover the replacement loses to a handful of child ops.
+fn fits_within(value: &Json, cap: usize) -> bool {
+    fn take(remaining: &mut usize, n: usize) -> bool {
+        if *remaining < n {
+            false
+        } else {
+            *remaining -= n;
+            true
+        }
+    }
+    fn go(v: &Json, remaining: &mut usize) -> bool {
+        match v {
+            Json::Null => take(remaining, 4),
+            Json::Bool(b) => take(remaining, if *b { 4 } else { 5 }),
+            Json::Num(_) | Json::Str(_) => take(remaining, v.to_compact().len()),
+            Json::Arr(items) => {
+                take(remaining, 2 + items.len().saturating_sub(1))
+                    && items.iter().all(|item| go(item, remaining))
+            }
+            Json::Obj(map) => {
+                take(remaining, 2 + map.len().saturating_sub(1))
+                    && map
+                        .iter()
+                        .all(|(k, item)| take(remaining, k.len() + 3) && go(item, remaining))
+            }
+        }
+    }
+    let mut remaining = cap;
+    go(value, &mut remaining)
+}
+
+/// Append either `child_ops` (whose serialized size the caller
+/// accumulated) or a single whole-subtree `set`, whichever is smaller.
+/// Returns the appended bytes.
+fn collapse_or_extend(
+    new: &Json,
+    path: &[Json],
+    child_ops: Vec<Json>,
+    child_bytes: usize,
+    ops: &mut Vec<Json>,
+) -> usize {
+    // a replacement is at least the subtree itself, so only measure it
+    // exactly when the subtree alone could undercut the child ops
+    if path.len() >= COLLAPSE_MIN_DEPTH && fits_within(new, child_bytes) {
+        let replace = op_set(path, new);
+        let replace_bytes = replace.to_compact().len() + 1;
+        if replace_bytes < child_bytes {
+            ops.push(replace);
+            return replace_bytes;
+        }
+    }
+    ops.extend(child_ops);
+    child_bytes
+}
+
+/// Returns the serialized size of the ops appended for this subtree.
+fn diff_into(old: &Json, new: &Json, path: &mut Vec<Json>, ops: &mut Vec<Json>) -> usize {
+    if canonical_eq(old, new) {
+        return 0;
+    }
+    match (old, new) {
+        (Json::Obj(a), Json::Obj(b)) => {
+            let mut child_ops = Vec::new();
+            let mut child_bytes = 0;
+            for key in a.keys() {
+                if !b.contains_key(key) {
+                    path.push(Json::Str(key.clone()));
+                    child_bytes += push_op(&mut child_ops, op_del(path));
+                    path.pop();
+                }
+            }
+            for (key, new_value) in b {
+                path.push(Json::Str(key.clone()));
+                child_bytes += match a.get(key) {
+                    Some(old_value) => {
+                        diff_into(old_value, new_value, path, &mut child_ops)
+                    }
+                    None => push_op(&mut child_ops, op_set(path, new_value)),
+                };
+                path.pop();
+            }
+            collapse_or_extend(new, path, child_ops, child_bytes, ops)
+        }
+        (Json::Arr(a), Json::Arr(b)) => {
+            let mut child_ops = Vec::new();
+            let mut child_bytes = 0;
+            if b.len() < a.len() {
+                child_bytes += push_op(&mut child_ops, op_truncate(path, b.len()));
+            }
+            let common = a.len().min(b.len());
+            for i in 0..common {
+                path.push(Json::Num(i as f64));
+                child_bytes += diff_into(&a[i], &b[i], path, &mut child_ops);
+                path.pop();
+            }
+            for (i, item) in b.iter().enumerate().skip(a.len()) {
+                path.push(Json::Num(i as f64));
+                child_bytes += push_op(&mut child_ops, op_set(path, item));
+                path.pop();
+            }
+            collapse_or_extend(new, path, child_ops, child_bytes, ops)
+        }
+        _ => push_op(ops, op_set(path, new)),
+    }
+}
+
+/// A path segment: object key or array index.
+enum Seg<'a> {
+    Key(&'a str),
+    Index(usize),
+}
+
+fn seg(j: &Json) -> Result<Seg<'_>> {
+    match j {
+        Json::Str(s) => Ok(Seg::Key(s)),
+        Json::Num(v) if *v >= 0.0 && *v == v.trunc() => Ok(Seg::Index(*v as usize)),
+        other => Err(anyhow!("invalid path segment {other:?}")),
+    }
+}
+
+/// Navigate to the value at `segs` (mutable).
+fn locate<'a>(doc: &'a mut Json, segs: &[Json]) -> Result<&'a mut Json> {
+    let mut cur = doc;
+    for s in segs {
+        cur = match (seg(s)?, cur) {
+            (Seg::Key(k), Json::Obj(map)) => map
+                .get_mut(k)
+                .ok_or_else(|| anyhow!("patch path: missing key {k:?}"))?,
+            (Seg::Index(i), Json::Arr(items)) => items
+                .get_mut(i)
+                .ok_or_else(|| anyhow!("patch path: index {i} out of range"))?,
+            _ => return Err(anyhow!("patch path: segment does not match the document")),
+        };
+    }
+    Ok(cur)
+}
+
+fn apply_op(doc: &mut Json, op: &Json) -> Result<()> {
+    let path = op
+        .get("p")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("patch op missing \"p\""))?;
+    if let Some(n) = op.get("n") {
+        let n = pusize(n, "n")?;
+        match locate(doc, path)? {
+            Json::Arr(items) => {
+                if n > items.len() {
+                    return Err(anyhow!("truncate to {n} beyond length {}", items.len()));
+                }
+                items.truncate(n);
+                Ok(())
+            }
+            _ => Err(anyhow!("truncate target is not an array")),
+        }
+    } else if op.get("d").is_some() {
+        let (last, parent_path) =
+            path.split_last().ok_or_else(|| anyhow!("delete op with empty path"))?;
+        match (seg(last)?, locate(doc, parent_path)?) {
+            (Seg::Key(k), Json::Obj(map)) => {
+                map.remove(k).ok_or_else(|| anyhow!("delete: missing key {k:?}"))?;
+                Ok(())
+            }
+            _ => Err(anyhow!("delete target must be an object key")),
+        }
+    } else {
+        let value = op.get("v").ok_or_else(|| anyhow!("patch op missing \"v\""))?;
+        let Some((last, parent_path)) = path.split_last() else {
+            *doc = value.clone(); // whole-document replacement
+            return Ok(());
+        };
+        match (seg(last)?, locate(doc, parent_path)?) {
+            (Seg::Key(k), Json::Obj(map)) => {
+                map.insert(k.to_string(), value.clone());
+                Ok(())
+            }
+            (Seg::Index(i), Json::Arr(items)) => {
+                if i < items.len() {
+                    items[i] = value.clone();
+                } else if i == items.len() {
+                    items.push(value.clone()); // append (diff emits in order)
+                } else {
+                    return Err(anyhow!("set index {i} beyond length {}", items.len()));
+                }
+                Ok(())
+            }
+            _ => Err(anyhow!("set target does not match the document")),
+        }
+    }
+}
+
+/// Apply a patch produced by [`diff`]: `apply(&a, &diff(&a, &b)) == b`.
+pub fn apply(base: &Json, patch: &Json) -> Result<Json> {
+    let ops = patch.as_arr().ok_or_else(|| anyhow!("patch must be an array of ops"))?;
+    let mut doc = base.clone();
+    for op in ops {
+        apply_op(&mut doc, op)?;
+    }
+    Ok(doc)
+}
+
+/// One published version's delta record.
+pub struct DeltaEntry {
+    /// The version this patch upgrades *from* (target = `from + 1`).
+    pub from: u64,
+    /// The patch ops ([`diff`] output).
+    pub ops: Json,
+    /// Compact-text size of the patch.
+    pub delta_bytes: usize,
+    /// Compact-text size of the full document at the target version.
+    pub full_bytes: usize,
+    /// [`doc_hash`] of the document at the target version.
+    pub hash: u64,
+    /// When the target version was published (replication-lag metric).
+    pub published: Instant,
+}
+
+/// Versioned delta publisher: owns the latest document, assigns versions,
+/// and keeps a bounded ring of per-version patches for catch-up syncs.
+/// The document lives behind an `Arc` so a full-sync response can leave
+/// the serving lock after a pointer clone instead of a multi-MB deep
+/// copy (see [`SyncPayload`]).
+pub struct DeltaLog {
+    version: u64,
+    doc: Arc<Json>,
+    hash: u64,
+    full_bytes: usize,
+    entries: VecDeque<DeltaEntry>,
+    capacity: usize,
+}
+
+impl DeltaLog {
+    /// Start a log at version 0 with `doc` as the anchor. `capacity`
+    /// bounds the delta ring — requesters further behind get a full
+    /// document instead of a patch chain.
+    pub fn new(doc: Json, capacity: usize) -> DeltaLog {
+        let text = doc.to_compact();
+        let mut h = FxHasher::default();
+        h.write(text.as_bytes());
+        DeltaLog {
+            version: 0,
+            hash: h.finish(),
+            full_bytes: text.len(),
+            doc: Arc::new(doc),
+            entries: VecDeque::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn hash(&self) -> u64 {
+        self.hash
+    }
+
+    /// The current full document.
+    pub fn doc(&self) -> &Json {
+        &self.doc
+    }
+
+    /// The current full document as a shared pointer (cheap to clone
+    /// while holding a lock on the log).
+    pub fn doc_arc(&self) -> Arc<Json> {
+        self.doc.clone()
+    }
+
+    /// Compact-text size of the current full document.
+    pub fn full_bytes(&self) -> usize {
+        self.full_bytes
+    }
+
+    /// The retained delta ring, oldest first.
+    pub fn entries(&self) -> impl Iterator<Item = &DeltaEntry> {
+        self.entries.iter()
+    }
+
+    /// Publish a new document. Returns `(version, changed)`: an unchanged
+    /// document does **not** bump the version (no-op deltas never enter
+    /// the ring), so followers only ever see versions that differ.
+    pub fn publish(&mut self, new_doc: Json) -> (u64, bool) {
+        if canonical_eq(&new_doc, &self.doc) {
+            return (self.version, false);
+        }
+        let ops = diff(&self.doc, &new_doc);
+        let text = new_doc.to_compact();
+        let mut h = FxHasher::default();
+        h.write(text.as_bytes());
+        let hash = h.finish();
+        self.entries.push_back(DeltaEntry {
+            from: self.version,
+            delta_bytes: ops.to_compact().len(),
+            full_bytes: text.len(),
+            hash,
+            published: Instant::now(),
+            ops,
+        });
+        while self.entries.len() > self.capacity {
+            self.entries.pop_front();
+        }
+        self.version += 1;
+        self.doc = Arc::new(new_doc);
+        self.hash = hash;
+        self.full_bytes = text.len();
+        (self.version, true)
+    }
+
+    /// Decide what a requester at version `have` (`None` = knows
+    /// nothing) should receive. Built while the caller holds its lock on
+    /// the log, but cheap to build: delta ops are delta-sized clones and
+    /// the full document travels as an `Arc` — the caller embeds it into
+    /// the wire response *after* releasing the lock
+    /// ([`SyncPayload::into_response`]), so a follower bootstrap never
+    /// stalls the trainer's publish path on a multi-MB deep copy.
+    pub fn sync_payload(&self, have: Option<u64>) -> SyncPayload {
+        let (version, hash) = (self.version, self.hash);
+        let Some(have) = have else {
+            return SyncPayload::Full { version, hash, doc: self.doc_arc() };
+        };
+        if have == self.version {
+            return SyncPayload::UpToDate { version, hash };
+        }
+        let behind = self.version.wrapping_sub(have);
+        if have < self.version && behind as usize <= self.entries.len() {
+            let start = self.entries.len() - behind as usize;
+            // the ring is contiguous by construction; verify anyway so a
+            // logic bug degrades to a full sync instead of a bad chain
+            if self.entries[start].from == have {
+                let mut deltas = Json::Arr(Vec::new());
+                for entry in self.entries.iter().skip(start) {
+                    let mut d = Json::obj();
+                    d.set("from", ju64(entry.from))
+                        .set("to", ju64(entry.from + 1))
+                        .set("hash", ju64(entry.hash))
+                        .set("ops", entry.ops.clone());
+                    deltas.push(d);
+                }
+                return SyncPayload::Deltas { version, hash, deltas };
+            }
+        }
+        // gap (requester behind the ring, ahead of us, or ring mismatch)
+        SyncPayload::Full { version, hash, doc: self.doc_arc() }
+    }
+}
+
+/// One sync decision ([`DeltaLog::sync_payload`]), embeddable into a
+/// wire response outside the log lock.
+pub enum SyncPayload {
+    UpToDate { version: u64, hash: u64 },
+    Deltas { version: u64, hash: u64, deltas: Json },
+    Full { version: u64, hash: u64, doc: Arc<Json> },
+}
+
+impl SyncPayload {
+    /// Write the `version`/`hash` header plus the variant's body into
+    /// `response`. The full document is deep-cloned HERE — call this
+    /// after releasing the log lock.
+    pub fn into_response(self, response: &mut Json) {
+        match self {
+            SyncPayload::UpToDate { version, hash } => {
+                response
+                    .set("version", ju64(version))
+                    .set("hash", ju64(hash))
+                    .set("up_to_date", true);
+            }
+            SyncPayload::Deltas { version, hash, deltas } => {
+                response
+                    .set("version", ju64(version))
+                    .set("hash", ju64(hash))
+                    .set("deltas", deltas);
+            }
+            SyncPayload::Full { version, hash, doc } => {
+                response
+                    .set("version", ju64(version))
+                    .set("hash", ju64(hash))
+                    .set("full", (*doc).clone());
+            }
+        }
+    }
+}
+
+/// Decode the `from`/`to`/`hash`/`ops` fields of one wire delta.
+pub fn decode_wire_delta(d: &Json) -> Result<(u64, u64, u64, &Json)> {
+    Ok((
+        pu64(field(d, "from")?, "from")?,
+        pu64(field(d, "to")?, "to")?,
+        pu64(field(d, "hash")?, "hash")?,
+        field(d, "ops")?,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Json {
+        Json::parse(s).unwrap()
+    }
+
+    fn roundtrip(old: &str, new: &str) -> Json {
+        let (a, b) = (parse(old), parse(new));
+        let patch = diff(&a, &b);
+        let applied = apply(&a, &patch).expect("apply");
+        assert_eq!(applied.to_compact(), b.to_compact(), "patch {}", patch.to_compact());
+        patch
+    }
+
+    #[test]
+    fn diff_of_equal_docs_is_empty() {
+        let a = parse(r#"{"x":[1,2,{"y":"z"}],"n":null}"#);
+        assert_eq!(diff(&a, &a).to_compact(), "[]");
+    }
+
+    #[test]
+    fn scalar_and_nested_changes() {
+        roundtrip(r#"{"a":1,"b":{"c":2}}"#, r#"{"a":1,"b":{"c":3}}"#);
+        roundtrip(r#"{"a":1}"#, r#"{"a":"now a string"}"#);
+        roundtrip(r#"{"a":{"deep":{"er":[1,2]}}}"#, r#"{"a":{"deep":{"er":[1,5]}}}"#);
+    }
+
+    #[test]
+    fn key_insertions_and_deletions() {
+        roundtrip(r#"{"a":1,"b":2}"#, r#"{"a":1}"#);
+        roundtrip(r#"{"a":1}"#, r#"{"a":1,"b":{"new":[1]}}"#);
+        roundtrip(r#"{"a":1,"b":2,"c":3}"#, r#"{"d":4}"#);
+    }
+
+    #[test]
+    fn array_grow_shrink_and_edit() {
+        roundtrip("[1,2,3]", "[1,2,3,4,5]");
+        roundtrip("[1,2,3,4,5]", "[1,2]");
+        roundtrip("[1,2,3]", "[9,2,8]");
+        roundtrip("[[1],[2]]", "[[1,1],[2]]");
+        roundtrip("[1,2,3]", "[]");
+        roundtrip("[]", "[1]");
+        // shrink + edit + type change in one patch
+        roundtrip(r#"[{"a":1},{"b":2},3]"#, r#"[{"a":9},"two"]"#);
+    }
+
+    #[test]
+    fn type_mismatch_replaces_whole_subtree() {
+        roundtrip(r#"{"a":[1,2]}"#, r#"{"a":{"k":1}}"#);
+        roundtrip("[1]", r#"{"a":1}"#);
+        roundtrip("1", "[1]");
+    }
+
+    #[test]
+    fn diff_is_small_for_local_changes() {
+        // a 200-element array with one edit: the patch must not ship the
+        // other 199 elements
+        let a = Json::Arr((0..200).map(|i| Json::Num(i as f64)).collect());
+        let mut items: Vec<Json> = (0..200).map(|i| Json::Num(i as f64)).collect();
+        items[117] = Json::Num(-1.0);
+        let b = Json::Arr(items);
+        let patch = diff(&a, &b);
+        assert_eq!(patch.as_arr().unwrap().len(), 1);
+        assert!(patch.to_compact().len() < 40, "{}", patch.to_compact());
+    }
+
+    #[test]
+    fn apply_rejects_divergent_bases() {
+        // bulky unchanged siblings keep the diff targeted at ["a","b"]
+        // (a whole-subtree collapse would upsert instead of fail)
+        let bulk = format!("\"bulk\":\"{}\"", "x".repeat(200));
+        let a = parse(&format!(r#"{{"a":{{"b":1,{bulk}}},{bulk}}}"#));
+        let b = parse(&format!(r#"{{"a":{{"b":2,{bulk}}},{bulk}}}"#));
+        let patch = diff(&a, &b);
+        assert_eq!(patch.as_arr().unwrap().len(), 1, "{}", patch.to_compact());
+        // a base missing the path must fail loudly, not silently corrupt
+        let unrelated = parse(r#"{"c":1}"#);
+        assert!(apply(&unrelated, &patch).is_err());
+        assert!(apply(&a, &parse(r#"[{"p":["a","x","y"],"v":1}]"#)).is_err());
+        assert!(apply(&a, &parse(r#"[{"p":["a"],"n":"5"}]"#)).is_err());
+        assert!(apply(&a, &parse(r#"{"not":"an array"}"#)).is_err());
+    }
+
+    #[test]
+    fn dense_changes_collapse_to_one_subtree_op() {
+        // every element of a small array (nested past COLLAPSE_MIN_DEPTH)
+        // changes: one set of the whole array must beat per-element
+        // path-heavy ops
+        let wrap = |slots: &str| {
+            parse(&format!(
+                r#"{{"w":{{"d":{{"slots":{slots},"keep":"unchanged-sibling"}}}}}}"#
+            ))
+        };
+        let a = wrap("[[1,1.0],[2,2.0],[3,3.0]]");
+        let b = wrap("[[1,1.5],[2,2.5],[3,3.5]]");
+        let patch = diff(&a, &b);
+        let applied = apply(&a, &patch).unwrap();
+        assert_eq!(applied.to_compact(), b.to_compact());
+        assert_eq!(patch.as_arr().unwrap().len(), 1, "{}", patch.to_compact());
+        // and the single op targets ["w","d","slots"], not the document
+        let op = &patch.as_arr().unwrap()[0];
+        assert_eq!(op.get("p").and_then(Json::as_arr).map(<[Json]>::len), Some(3));
+    }
+
+    #[test]
+    fn shallow_levels_never_collapse_to_whole_document_sets() {
+        // even when a shallow rewrite would be byte-smaller, levels above
+        // COLLAPSE_MIN_DEPTH stay as targeted ops: a whole-document (or
+        // whole-model) set is a de-facto full resync, and measuring it
+        // would serialize the entire document on every publish
+        let a = parse(r#"{"a":{"b":1}}"#);
+        let b = parse(r#"{"a":{"b":2}}"#);
+        let patch = diff(&a, &b);
+        assert_eq!(patch.to_compact(), r#"[{"p":["a","b"],"v":2}]"#);
+        assert_eq!(apply(&a, &patch).unwrap().to_compact(), b.to_compact());
+    }
+
+    #[test]
+    fn delta_log_versions_and_sync_paths() {
+        let v0 = parse(r#"{"x":0}"#);
+        let mut log = DeltaLog::new(v0.clone(), 2);
+        assert_eq!(log.version(), 0);
+
+        // unchanged publish: no version bump, no ring entry
+        let (v, changed) = log.publish(v0.clone());
+        assert_eq!((v, changed), (0, false));
+
+        for i in 1..=4 {
+            let (v, changed) = log.publish(parse(&format!(r#"{{"x":{i}}}"#)));
+            assert_eq!((v, changed), (i, true));
+        }
+        assert_eq!(log.entries().count(), 2, "ring capacity respected");
+
+        // up to date
+        let mut r = Json::obj();
+        log.sync_payload(Some(4)).into_response(&mut r);
+        assert_eq!(r.get("up_to_date").and_then(Json::as_bool), Some(true));
+        assert_eq!(pu64(r.get("version").unwrap(), "v").unwrap(), 4);
+
+        // within the ring: delta chain that reconstructs the head
+        let mut r = Json::obj();
+        log.sync_payload(Some(2)).into_response(&mut r);
+        let deltas = r.get("deltas").and_then(Json::as_arr).expect("delta chain");
+        assert_eq!(deltas.len(), 2);
+        let mut doc = parse(r#"{"x":2}"#);
+        for d in deltas {
+            let (from, to, hash, ops) = decode_wire_delta(d).unwrap();
+            assert_eq!(to, from + 1);
+            doc = apply(&doc, ops).unwrap();
+            assert_eq!(doc_hash(&doc), hash, "hash mismatch at v{to}");
+        }
+        assert_eq!(doc.to_compact(), log.doc().to_compact());
+
+        // behind the ring → full; unknown (None) → full; ahead → full
+        for have in [Some(0), None, Some(99)] {
+            let mut r = Json::obj();
+            log.sync_payload(have).into_response(&mut r);
+            assert!(r.get("full").is_some(), "have={have:?} must fall back to full");
+            assert_eq!(
+                r.get("full").unwrap().to_compact(),
+                log.doc().to_compact()
+            );
+        }
+    }
+
+    #[test]
+    fn sign_of_zero_changes_are_not_dropped() {
+        // derived PartialEq calls 0.0 == -0.0; the canonical writer does
+        // not ("0" vs "-0"), so the diff must ship the sign flip
+        let a = parse(r#"{"w":0}"#);
+        let mut b = Json::obj();
+        b.set("w", Json::Num(-0.0));
+        assert_eq!(b.to_compact(), r#"{"w":-0}"#);
+        let patch = diff(&a, &b);
+        assert_eq!(
+            patch.as_arr().map(<[Json]>::len),
+            Some(1),
+            "sign-of-zero change must produce an op: {}",
+            patch.to_compact()
+        );
+        assert_eq!(apply(&a, &patch).unwrap().to_compact(), b.to_compact());
+
+        // and the log must treat it as a real new version
+        let mut log = DeltaLog::new(a, 4);
+        let (version, changed) = log.publish(b);
+        assert!(changed, "sign flip must bump the version");
+        assert_eq!(version, 1);
+    }
+
+    #[test]
+    fn log_hash_matches_doc_hash() {
+        let mut log = DeltaLog::new(parse(r#"{"a":1}"#), 8);
+        log.publish(parse(r#"{"a":2,"b":[1,2,3]}"#));
+        assert_eq!(log.hash(), doc_hash(log.doc()));
+        assert_eq!(log.full_bytes(), log.doc().to_compact().len());
+    }
+}

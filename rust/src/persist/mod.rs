@@ -38,6 +38,7 @@
 //! layer treat a checkpoint string as a content-addressable snapshot.
 
 pub mod codec;
+pub mod delta;
 
 use std::path::Path;
 
@@ -156,6 +157,29 @@ impl Model {
     /// model it came from.
     pub fn clone_via_codec(&self) -> Result<Model> {
         Model::from_text(&self.to_text()?)
+    }
+
+    /// Instances absorbed since the last [`Model::mark_synced`]. The
+    /// serve layer's publisher marks the model synced on every real
+    /// publication and uses a zero here as proof that the replication
+    /// log's document still equals the live model — skipping the whole
+    /// encode → decode → diff round-trip for no-op snapshots.
+    pub fn learns_since_sync(&self) -> u64 {
+        match self {
+            Model::Tree(t) => t.learns_since_sync(),
+            Model::Arf(f) => f.learns_since_sync(),
+            Model::Bagging(b) => b.learns_since_sync(),
+        }
+    }
+
+    /// Reset the touched-state counters after publishing a
+    /// snapshot/delta of this model.
+    pub fn mark_synced(&mut self) {
+        match self {
+            Model::Tree(t) => t.mark_synced(),
+            Model::Arf(f) => f.mark_synced(),
+            Model::Bagging(b) => b.mark_synced(),
+        }
     }
 }
 

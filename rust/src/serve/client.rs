@@ -99,6 +99,19 @@ impl ServeClient {
         Ok(checkpoint.to_compact())
     }
 
+    /// Replication catch-up: ask the server for everything newer than
+    /// version `have` (`None` = bootstrap, returns a full document). The
+    /// response carries `version`, `hash`, and one of `up_to_date` /
+    /// `deltas` / `full` — see [`super::replicate`] for the protocol.
+    pub fn repl_sync(&mut self, have: Option<u64>) -> Result<Json> {
+        let mut req = Json::obj();
+        req.set("cmd", "repl_sync");
+        if let Some(have) = have {
+            req.set("have", crate::persist::codec::ju64(have));
+        }
+        self.request(&req)
+    }
+
     /// Server counters and identity.
     pub fn stats(&mut self) -> Result<Json> {
         let mut req = Json::obj();

@@ -29,8 +29,9 @@
 //! | `{"cmd":"learn","x":[…],"y":1.5}` | `{"ok":true}` (acks the *enqueue*) |
 //! | `{"cmd":"predict","x":[…]}` | `{"ok":true,"prediction":p}` |
 //! | `{"cmd":"predict_batch","xs":[[…],…]}` | `{"ok":true,"predictions":[…]}` |
-//! | `{"cmd":"snapshot"}` | `{"ok":true,"checkpoint":{…}}` (a [`crate::persist`] document) |
-//! | `{"cmd":"stats"}` | `{"ok":true,"model":…,"learns_applied":…,…}` |
+//! | `{"cmd":"snapshot"}` | `{"ok":true,"checkpoint":{…},"version":…}` (a [`crate::persist`] document) |
+//! | `{"cmd":"stats"}` | `{"ok":true,"model":…,"learns_applied":…,"snapshot_version":…,"snapshot_age_learns":…,…}` |
+//! | `{"cmd":"repl_sync","have":…}` | `{"ok":true,"version":…,"hash":…,` one of `"up_to_date"/"deltas"/"full"}` |
 //! | `{"cmd":"shutdown"}` | `{"ok":true}`, then the server stops |
 //!
 //! Malformed lines, unknown commands, dimension mismatches and
@@ -53,9 +54,21 @@
 //! * **Restore:** a fresh server started from a checkpoint returns
 //!   bit-identical predictions to the server that produced it (enforced
 //!   end-to-end in `rust/tests/serve_e2e.rs`).
+//!
+//! ## Replication (see [`replicate`])
+//!
+//! A leader publishes versioned **delta checkpoints** from its snapshot
+//! machinery ([`crate::persist::delta`]); follower replicas poll
+//! `repl_sync`, apply the exact diffs to their mirrored document, and
+//! answer reads bit-identically to the leader at every applied version.
+//! With `ServeOptions::shards > 1` the leader's trainer fans micro-batches
+//! out over the sharded forest machinery, so one endpoint fronts a
+//! sharded ARF/bagging fleet while followers scale the read path.
 
 pub mod client;
+pub mod replicate;
 pub mod server;
 
 pub use client::ServeClient;
+pub use replicate::{Follower, FollowerOptions};
 pub use server::{Server, ServeOptions};

@@ -1,0 +1,471 @@
+//! Follower read-replicas: replicated serving over delta checkpoints.
+//!
+//! ## Roles
+//!
+//! The **leader** is a normal [`super::Server`]: its trainer owns the
+//! single write path (optionally sharded over
+//! [`crate::coordinator::train_batch_sharded`]) and every published
+//! snapshot feeds a versioned [`DeltaLog`]. A **follower**
+//! ([`Follower`]) holds no trainer at all: it mirrors the leader's
+//! *published* checkpoint document and answers `predict` /
+//! `predict_batch` / `stats` (+ `snapshot` of its mirrored document) from
+//! an immutable `Arc<Model>` it hot-swaps on every applied version.
+//! `learn` requests are rejected — training stays on the leader.
+//!
+//! ## Wire protocol (rides the leader's existing NDJSON port)
+//!
+//! The follower polls the leader with the `repl_sync` command:
+//!
+//! ```text
+//! → {"cmd":"repl_sync","have":"7"}
+//! ← {"ok":true,"version":"9","hash":"…",
+//!    "deltas":[{"from":"7","to":"8","hash":"…","ops":[…]},
+//!              {"from":"8","to":"9","hash":"…","ops":[…]}]}
+//! ```
+//!
+//! Responses carry exactly one of `up_to_date`, `deltas`, or `full`.
+//! Versions are monotonic (assigned by the leader's [`DeltaLog`]; version
+//! 0 is the model the leader started with). `have` omitted means "send
+//! a full document" — the bootstrap handshake.
+//!
+//! ## Consistency + resync rules
+//!
+//! * **Exactness.** Checkpoint text is canonical, so each delta is an
+//!   exact structural diff; applying it reproduces the leader's document
+//!   **byte-for-byte**. A follower at version v therefore returns
+//!   predictions bit-identical to the leader's read snapshot at version v
+//!   (enforced per-version in `rust/tests/replicate_e2e.rs`).
+//! * **Monotonic handshake.** The follower only applies a delta whose
+//!   `from` equals its current version, and versions only move forward.
+//! * **Hash verification.** Every delta (and full document) carries the
+//!   FxHash of the target's canonical text; the follower verifies after
+//!   applying. A mismatch — corruption, divergence, a leader restart —
+//!   marks the replica stale and the next poll requests a **full
+//!   resync** (`have` omitted).
+//! * **Gap detection.** The leader keeps a bounded delta ring
+//!   ([`super::ServeOptions::delta_history`]). A follower further behind
+//!   than the ring (e.g. it was down across many publications) gets a
+//!   full document instead of a chain — same full-resync path.
+//! * **Leader loss.** Poll failures never take the replica down: it keeps
+//!   serving its last applied version (staleness is visible in `stats`)
+//!   and reconnects with backoff.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::common::json::Json;
+use crate::eval::Regressor;
+use crate::persist::codec::{field, ju64, pu64};
+use crate::persist::delta::{self, DeltaLog};
+use crate::persist::Model;
+
+use super::client::ServeClient;
+use super::server::{
+    current_snapshot, drive_connection, error_response, lock_poisoned, ok_response,
+    parse_x,
+};
+
+/// Follower tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct FollowerOptions {
+    /// Delay between catch-up polls of the leader.
+    pub poll_interval: Duration,
+    /// Delay before re-dialing the leader after a connection failure.
+    pub reconnect_backoff: Duration,
+}
+
+impl Default for FollowerOptions {
+    fn default() -> FollowerOptions {
+        FollowerOptions {
+            poll_interval: Duration::from_millis(25),
+            reconnect_backoff: Duration::from_millis(200),
+        }
+    }
+}
+
+/// State shared between the poller and the serving connections.
+struct FollowerShared {
+    /// The mirrored canonical checkpoint document, paired with the
+    /// version it belongs to (poller-written; `snapshot` requests read
+    /// the pair atomically so the response can never mislabel a document
+    /// with a version installed concurrently).
+    doc: Mutex<(u64, Json)>,
+    /// The decoded model serving reads, hot-swapped per applied version.
+    snapshot: RwLock<Arc<Model>>,
+    version: AtomicU64,
+    /// [`delta::doc_hash`] of the mirrored document — compared against
+    /// the head hash the leader reports on every poll, so a divergent
+    /// replica at the *same* version number (e.g. after a leader restart
+    /// from a different checkpoint) is caught and full-resyncs.
+    doc_hash: AtomicU64,
+    /// The head version the leader reported on the last successful poll.
+    leader_version: AtomicU64,
+    deltas_applied: AtomicU64,
+    full_resyncs: AtomicU64,
+    polls: AtomicU64,
+    poll_errors: AtomicU64,
+    predicts: AtomicU64,
+    connections: AtomicU64,
+    shutdown: AtomicBool,
+    /// (version, instant applied) — replication-lag metric for the bench
+    /// suite (bounded; see [`APPLY_LOG_CAP`]).
+    applied_log: Mutex<Vec<(u64, Instant)>>,
+    leader: String,
+    name: String,
+    kind: &'static str,
+    n_features: usize,
+    started: Instant,
+}
+
+/// Applied-version log bound (the bench reads it; serving never does).
+const APPLY_LOG_CAP: usize = 8192;
+
+/// Install a freshly decoded version: document, model, version + hash,
+/// lag log.
+fn install(shared: &FollowerShared, version: u64, hash: u64, doc: Json, model: Model) {
+    *lock_poisoned(&shared.doc) = (version, doc);
+    let arc = Arc::new(model);
+    match shared.snapshot.write() {
+        Ok(mut guard) => *guard = arc,
+        Err(poisoned) => *poisoned.into_inner() = arc,
+    }
+    shared.version.store(version, Ordering::SeqCst);
+    shared.doc_hash.store(hash, Ordering::SeqCst);
+    let mut log = lock_poisoned(&shared.applied_log);
+    if log.len() < APPLY_LOG_CAP {
+        log.push((version, Instant::now()));
+    }
+}
+
+/// Handle one successful `repl_sync` response. Returns an error when the
+/// payload could not be applied — the caller then forces a full resync.
+fn apply_sync(shared: &FollowerShared, response: &Json) -> Result<()> {
+    let leader_version = pu64(field(response, "version")?, "version")?;
+    shared.leader_version.store(leader_version, Ordering::Relaxed);
+    if response.get("up_to_date").is_some() {
+        // same version number is not enough: the head hash must match our
+        // mirrored document, else we diverged (e.g. the leader restarted
+        // from a different checkpoint and landed on our version)
+        let head_hash = pu64(field(response, "hash")?, "hash")?;
+        if head_hash != shared.doc_hash.load(Ordering::SeqCst) {
+            return Err(anyhow!("up_to_date but head hash differs — replica diverged"));
+        }
+        return Ok(());
+    }
+    if let Some(full) = response.get("full") {
+        let hash = pu64(field(response, "hash")?, "hash")?;
+        if delta::doc_hash(full) != hash {
+            return Err(anyhow!("full document hash mismatch"));
+        }
+        let model = Model::from_checkpoint(full)?;
+        install(shared, leader_version, hash, full.clone(), model);
+        shared.full_resyncs.fetch_add(1, Ordering::Relaxed);
+        return Ok(());
+    }
+    if let Some(deltas) = response.get("deltas").and_then(Json::as_arr) {
+        // apply the chain version by version: every intermediate state is
+        // decoded, verified and *served*, so the replica passes through
+        // exactly the leader's published sequence
+        let (mut version, mut doc) = lock_poisoned(&shared.doc).clone();
+        for d in deltas {
+            let (from, to, hash, ops) = delta::decode_wire_delta(d)?;
+            if from != version || to != version + 1 {
+                return Err(anyhow!(
+                    "delta covers {from}→{to} but the replica is at {version}"
+                ));
+            }
+            doc = delta::apply(&doc, ops)
+                .map_err(|e| e.context(format!("applying delta {from}→{to}")))?;
+            if delta::doc_hash(&doc) != hash {
+                return Err(anyhow!("hash mismatch after applying delta to v{to}"));
+            }
+            let model = Model::from_checkpoint(&doc)
+                .map_err(|e| e.context(format!("decoding v{to}")))?;
+            install(shared, to, hash, doc.clone(), model);
+            shared.deltas_applied.fetch_add(1, Ordering::Relaxed);
+            version = to;
+        }
+        return Ok(());
+    }
+    Err(anyhow!("malformed repl_sync response (no up_to_date/full/deltas)"))
+}
+
+fn poll_loop(shared: Arc<FollowerShared>, options: FollowerOptions) {
+    let mut client: Option<ServeClient> = None;
+    let mut force_full = false;
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        thread::sleep(options.poll_interval);
+        if shared.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        if client.is_none() {
+            match ServeClient::connect(shared.leader.as_str()) {
+                Ok(c) => client = Some(c),
+                Err(_) => {
+                    shared.poll_errors.fetch_add(1, Ordering::Relaxed);
+                    thread::sleep(options.reconnect_backoff);
+                    continue;
+                }
+            }
+        }
+        let have = if force_full {
+            None
+        } else {
+            Some(shared.version.load(Ordering::SeqCst))
+        };
+        let response = match client.as_mut().expect("connected above").repl_sync(have) {
+            Ok(r) => r,
+            Err(_) => {
+                // leader gone or mid-restart: drop the connection, keep
+                // serving the last applied version, retry with backoff
+                shared.poll_errors.fetch_add(1, Ordering::Relaxed);
+                client = None;
+                thread::sleep(options.reconnect_backoff);
+                continue;
+            }
+        };
+        shared.polls.fetch_add(1, Ordering::Relaxed);
+        match apply_sync(&shared, &response) {
+            Ok(()) => force_full = false,
+            Err(_) => {
+                // divergence/corruption: next poll requests a full resync
+                shared.poll_errors.fetch_add(1, Ordering::Relaxed);
+                force_full = true;
+            }
+        }
+    }
+}
+
+/// A running follower replica. Stop it with a `shutdown` request on its
+/// own port, then [`Follower::join`].
+pub struct Follower {
+    addr: SocketAddr,
+    acceptor: thread::JoinHandle<()>,
+    poller: thread::JoinHandle<()>,
+    shared: Arc<FollowerShared>,
+}
+
+impl Follower {
+    /// Bootstrap from `leader_addr` (one blocking full sync — fails
+    /// cleanly when the leader is unreachable), bind `bind_addr`, and
+    /// start the serving + polling threads.
+    pub fn start(
+        leader_addr: &str,
+        bind_addr: &str,
+        options: FollowerOptions,
+    ) -> Result<Follower> {
+        let mut client = ServeClient::connect(leader_addr)
+            .map_err(|e| e.context(format!("dialing leader {leader_addr}")))?;
+        let response = client
+            .repl_sync(None)
+            .map_err(|e| e.context("bootstrap repl_sync"))?;
+        let version = pu64(field(&response, "version")?, "version")?;
+        let full = field(&response, "full")
+            .map_err(|e| e.context("bootstrap expects a full document"))?;
+        let hash = pu64(field(&response, "hash")?, "hash")?;
+        if delta::doc_hash(full) != hash {
+            return Err(anyhow!("bootstrap document hash mismatch"));
+        }
+        let model = Model::from_checkpoint(full)
+            .map_err(|e| e.context("decoding bootstrap document"))?;
+
+        let listener = TcpListener::bind(bind_addr)
+            .with_context(|| format!("binding {bind_addr}"))?;
+        let addr = listener.local_addr().context("reading bound address")?;
+
+        let shared = Arc::new(FollowerShared {
+            doc: Mutex::new((version, full.clone())),
+            name: model.name(),
+            kind: model.kind(),
+            n_features: model.n_features(),
+            snapshot: RwLock::new(Arc::new(model)),
+            version: AtomicU64::new(version),
+            doc_hash: AtomicU64::new(hash),
+            leader_version: AtomicU64::new(version),
+            deltas_applied: AtomicU64::new(0),
+            full_resyncs: AtomicU64::new(0),
+            polls: AtomicU64::new(0),
+            poll_errors: AtomicU64::new(0),
+            predicts: AtomicU64::new(0),
+            connections: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+            applied_log: Mutex::new(vec![(version, Instant::now())]),
+            leader: leader_addr.to_string(),
+            started: Instant::now(),
+        });
+
+        let poller = {
+            let shared = shared.clone();
+            thread::spawn(move || poll_loop(shared, options))
+        };
+
+        let acceptor = {
+            let shared = shared.clone();
+            thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if shared.shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let shared = shared.clone();
+                    shared.connections.fetch_add(1, Ordering::Relaxed);
+                    thread::spawn(move || handle_replica_connection(stream, shared, addr));
+                }
+            })
+        };
+
+        Ok(Follower { addr, acceptor, poller, shared })
+    }
+
+    /// The bound address (read the ephemeral port from here).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The replica's currently applied version.
+    pub fn version(&self) -> u64 {
+        self.shared.version.load(Ordering::SeqCst)
+    }
+
+    /// Applied `(version, instant)` pairs — the bench suite joins these
+    /// against the leader's publish instants for the replication-lag
+    /// distribution.
+    pub fn applied_log(&self) -> Vec<(u64, Instant)> {
+        lock_poisoned(&self.shared.applied_log).clone()
+    }
+
+    /// Block until a `shutdown` request stops the replica.
+    pub fn join(self) -> Result<()> {
+        self.acceptor
+            .join()
+            .map_err(|_| anyhow!("follower acceptor panicked"))?;
+        self.poller.join().map_err(|_| anyhow!("follower poller panicked"))?;
+        Ok(())
+    }
+}
+
+fn handle_replica_connection(
+    stream: TcpStream,
+    shared: Arc<FollowerShared>,
+    self_addr: SocketAddr,
+) {
+    let stop = drive_connection(stream, |line| respond_replica(line, &shared));
+    if stop {
+        // flag first, then poke the acceptor loose from accept()
+        shared.shutdown.store(true, Ordering::SeqCst);
+        TcpStream::connect(self_addr).ok();
+    }
+}
+
+/// Dispatch one request on a follower connection.
+fn respond_replica(line: &str, shared: &FollowerShared) -> (Json, bool) {
+    let request = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return (error_response(&e), false),
+    };
+    let Some(cmd) = request.get("cmd").and_then(Json::as_str) else {
+        return (error_response("missing \"cmd\""), false);
+    };
+    match cmd {
+        "predict" => {
+            let x = match parse_x(request.get("x"), shared.n_features) {
+                Ok(x) => x,
+                Err(e) => return (error_response(&e), false),
+            };
+            let model = current_snapshot(&shared.snapshot);
+            shared.predicts.fetch_add(1, Ordering::Relaxed);
+            let mut o = ok_response();
+            o.set("prediction", model.predict(&x));
+            (o, false)
+        }
+        "predict_batch" => {
+            let Some(xs) = request.get("xs").and_then(Json::as_arr) else {
+                return (error_response("\"xs\" must be an array of arrays"), false);
+            };
+            let mut batch = Vec::with_capacity(xs.len());
+            for item in xs {
+                match parse_x(Some(item), shared.n_features) {
+                    Ok(x) => batch.push(x),
+                    Err(e) => return (error_response(&e), false),
+                }
+            }
+            let model = current_snapshot(&shared.snapshot);
+            shared.predicts.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            let predictions: Vec<f64> = batch.iter().map(|x| model.predict(x)).collect();
+            let mut o = ok_response();
+            o.set("predictions", predictions);
+            (o, false)
+        }
+        "snapshot" => {
+            // the mirrored document at the currently served version — a
+            // follower can seed offline analysis or a fresh leader
+            let (version, doc) = lock_poisoned(&shared.doc).clone();
+            let mut o = ok_response();
+            o.set("checkpoint", doc).set("version", ju64(version));
+            (o, false)
+        }
+        "stats" => {
+            let version = shared.version.load(Ordering::SeqCst);
+            let leader_version = shared.leader_version.load(Ordering::Relaxed);
+            let mut o = ok_response();
+            o.set("role", "follower")
+                .set("model", shared.name.as_str())
+                .set("kind", shared.kind)
+                .set("n_features", shared.n_features)
+                .set("leader", shared.leader.as_str())
+                .set("snapshot_version", ju64(version))
+                .set("leader_version_seen", ju64(leader_version))
+                .set("staleness_versions", leader_version.saturating_sub(version))
+                .set("deltas_applied", shared.deltas_applied.load(Ordering::Relaxed))
+                .set("full_resyncs", shared.full_resyncs.load(Ordering::Relaxed))
+                .set("polls", shared.polls.load(Ordering::Relaxed))
+                .set("poll_errors", shared.poll_errors.load(Ordering::Relaxed))
+                .set("predicts", shared.predicts.load(Ordering::Relaxed))
+                .set("connections", shared.connections.load(Ordering::Relaxed))
+                .set("uptime_ms", shared.started.elapsed().as_millis() as u64);
+            (o, false)
+        }
+        "learn" => (
+            error_response("read-only follower: send learns to the leader"),
+            false,
+        ),
+        "repl_sync" => (
+            error_response("followers do not serve replication (sync from the leader)"),
+            false,
+        ),
+        "shutdown" => (ok_response(), true),
+        other => (error_response(&format!("unknown cmd {other:?}")), false),
+    }
+}
+
+/// In-process helper for benches/tests: build a [`DeltaLog`]-shaped view
+/// of how far a follower lags the leader, as (version, lag) pairs.
+/// Returns lags in seconds for every version both sides saw.
+pub fn replication_lags(
+    leader_log: &DeltaLog,
+    follower_applies: &[(u64, Instant)],
+) -> Vec<f64> {
+    let mut published: Vec<(u64, Instant)> = leader_log
+        .entries()
+        .map(|e| (e.from + 1, e.published))
+        .collect();
+    published.sort_unstable_by_key(|&(v, _)| v);
+    let mut lags = Vec::new();
+    for &(version, applied) in follower_applies {
+        if let Ok(idx) = published.binary_search_by_key(&version, |&(v, _)| v) {
+            let publish_instant = published[idx].1;
+            lags.push(
+                applied
+                    .checked_duration_since(publish_instant)
+                    .unwrap_or(Duration::ZERO)
+                    .as_secs_f64(),
+            );
+        }
+    }
+    lags
+}

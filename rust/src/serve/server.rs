@@ -1,19 +1,33 @@
 //! The TCP server: acceptor + per-connection reader threads + the single
 //! trainer thread that owns the model (see the module docs in
 //! [`super`] for the architecture and wire protocol).
+//!
+//! Beyond the base learn/predict protocol this file implements the
+//! **leader** side of replication ([`super::replicate`] has the follower):
+//! every published snapshot also feeds a versioned [`DeltaLog`], and the
+//! `repl_sync` command answers followers with `up_to_date`, a delta
+//! chain, or a full document. With `ServeOptions::shards > 1` the trainer
+//! drains its queue into micro-batches and pushes them through the
+//! sharded forest machinery ([`crate::coordinator::train_batch_sharded`])
+//! — one endpoint fronting a sharded fleet, bit-identical to sequential
+//! training.
 
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, RwLock};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard, RwLock};
 use std::thread;
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::common::json::Json;
+use crate::coordinator::{train_batch_sharded, ForestCoordinatorConfig};
 use crate::eval::Regressor;
+use crate::persist::codec::{ju64, pu64};
+use crate::persist::delta::DeltaLog;
 use crate::persist::Model;
+use crate::stream::Instance;
 
 /// Per-line request size cap: network input must not pick our allocation
 /// size. Generous enough for large `predict_batch` requests.
@@ -28,11 +42,27 @@ pub struct ServeOptions {
     /// Bounded trainer-queue depth in learns (backpressure window: a full
     /// queue blocks the sending connection's `learn` ack).
     pub queue_capacity: usize,
+    /// Versions retained in the replication delta ring: followers at most
+    /// this far behind catch up with deltas, older ones full-resync.
+    pub delta_history: usize,
+    /// Worker shards the trainer spreads ensemble members over (0 or 1 =
+    /// train in the trainer thread). Requires an ensemble model.
+    pub shards: usize,
+    /// Max learns per sharded micro-batch (amortizes the scoped-thread
+    /// spawn per batch). Only consulted when `shards > 1`; the staleness
+    /// bound for reads becomes `snapshot_every + shard_batch`.
+    pub shard_batch: usize,
 }
 
 impl Default for ServeOptions {
     fn default() -> ServeOptions {
-        ServeOptions { snapshot_every: 512, queue_capacity: 1024 }
+        ServeOptions {
+            snapshot_every: 512,
+            queue_capacity: 1024,
+            delta_history: 64,
+            shards: 0,
+            shard_batch: 256,
+        }
     }
 }
 
@@ -40,10 +70,12 @@ impl Default for ServeOptions {
 /// is what makes `snapshot` reflect previously acked learns.
 enum TrainerMsg {
     Learn(Vec<f64>, f64),
-    /// Publish + reply with the checkpoint document (or the failure
-    /// message). The document travels as parsed [`Json`] so the handler
-    /// embeds it without re-parsing the (potentially multi-MB) text.
-    Snapshot(mpsc::Sender<Result<Json, String>>),
+    /// Publish + reply with the checkpoint document and its published
+    /// version (or the failure message). Both travel together from the
+    /// trainer so the pairing cannot race with later publications; the
+    /// document travels as parsed [`Json`] so the handler embeds it
+    /// without re-parsing the (potentially multi-MB) text.
+    Snapshot(mpsc::Sender<Result<(Json, u64), String>>),
     Shutdown,
 }
 
@@ -57,6 +89,11 @@ struct ServerStats {
     snapshots: AtomicU64,
     snapshot_failures: AtomicU64,
     connections: AtomicU64,
+    /// Version of the last published snapshot ([`DeltaLog::version`]).
+    snapshot_version: AtomicU64,
+    /// `learns_applied` at the moment of the last publication — the
+    /// difference to the live counter is the snapshot's age in learns.
+    learns_at_snapshot: AtomicU64,
 }
 
 /// Immutable facts captured before the model moves into the trainer.
@@ -65,25 +102,47 @@ struct ModelInfo {
     kind: &'static str,
     n_features: usize,
     snapshot_every: usize,
+    shards: usize,
     started: Instant,
 }
 
 /// Read the current snapshot `Arc` (surviving lock poisoning: the guarded
 /// value is just a pointer, always valid).
-fn current_snapshot(lock: &RwLock<Arc<Model>>) -> Arc<Model> {
+pub(crate) fn current_snapshot(lock: &RwLock<Arc<Model>>) -> Arc<Model> {
     match lock.read() {
         Ok(guard) => guard.clone(),
         Err(poisoned) => poisoned.into_inner().clone(),
     }
 }
 
+/// Lock a mutex, surviving poisoning (every guarded value in the serve
+/// layer is left consistent between mutations, so a panicked writer is
+/// no reason to refuse reads). Shared with [`super::replicate`].
+pub(crate) fn lock_poisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
 /// Encode the live model, publish the decoded clone as the new read
-/// snapshot, and return the checkpoint document.
+/// snapshot, feed the replication log, and return the checkpoint
+/// document with its version.
 fn publish_snapshot(
-    model: &Model,
+    model: &mut Model,
     snapshot: &RwLock<Arc<Model>>,
     stats: &ServerStats,
-) -> Result<Json, String> {
+    replication: &Mutex<DeltaLog>,
+) -> Result<(Json, u64), String> {
+    if model.learns_since_sync() == 0 {
+        // touched-state fast path: nothing trained since the last
+        // publication, so the log's document IS the current model state
+        // (true at start too — the log was seeded from this model) and
+        // the whole encode → decode → diff round-trip can be skipped
+        let (doc, version) = {
+            let log = lock_poisoned(replication);
+            (log.doc_arc(), log.version())
+        };
+        // the deep clone happens after the lock is released
+        return Ok(((*doc).clone(), version));
+    }
     let doc = model.to_checkpoint().map_err(|e| e.to_string())?;
     let clone = Model::from_checkpoint(&doc).map_err(|e| e.to_string())?;
     let shared = Arc::new(clone);
@@ -94,8 +153,48 @@ fn publish_snapshot(
             *guard = shared;
         }
     }
+    let version = lock_poisoned(replication).publish(doc.clone()).0;
+    model.mark_synced();
+    stats.snapshot_version.store(version, Ordering::Relaxed);
+    stats
+        .learns_at_snapshot
+        .store(stats.learns_applied.load(Ordering::Relaxed), Ordering::Relaxed);
     stats.snapshots.fetch_add(1, Ordering::Relaxed);
-    Ok(doc)
+    Ok((doc, version))
+}
+
+/// Apply one micro-batch to the model: through the sharded forest
+/// machinery when configured (and worthwhile), else the sequential learn
+/// loop. Both paths are bit-for-bit identical (the sharded contract,
+/// property-tested in [`crate::coordinator::forest`]).
+fn train_batch(model: &mut Model, batch: &[Instance], shards: usize) {
+    if shards > 1 && batch.len() > 1 {
+        let config = ForestCoordinatorConfig {
+            n_shards: shards,
+            batch_size: batch.len(),
+            ..Default::default()
+        };
+        match model {
+            Model::Arf(f) => {
+                let _ = train_batch_sharded(f, batch, config);
+                // member-state mutations (PRNG draws, detectors) happen
+                // even when no tree trains, so the touched-state counter
+                // must advance by the full batch
+                f.note_learns(batch.len() as u64);
+                return;
+            }
+            Model::Bagging(b) => {
+                let _ = train_batch_sharded(b, batch, config);
+                b.note_learns(batch.len() as u64);
+                return;
+            }
+            // single trees cannot member-shard; start() rejects the combo
+            Model::Tree(_) => {}
+        }
+    }
+    for inst in batch {
+        model.learn_one(&inst.x, inst.y);
+    }
 }
 
 /// A running serve instance. Dropping the handle does NOT stop the
@@ -105,6 +204,7 @@ pub struct Server {
     addr: SocketAddr,
     acceptor: thread::JoinHandle<()>,
     trainer: thread::JoinHandle<Model>,
+    replication: Arc<Mutex<DeltaLog>>,
 }
 
 impl Server {
@@ -114,6 +214,11 @@ impl Server {
     /// already has a model to read — this also means `start` fails
     /// cleanly when the model is not checkpointable.
     pub fn start(model: Model, bind_addr: &str, options: ServeOptions) -> Result<Server> {
+        if options.shards > 1 && matches!(model, Model::Tree(_)) {
+            return Err(anyhow!(
+                "--shards needs an ensemble model (members shard; a single tree cannot)"
+            ));
+        }
         let listener = TcpListener::bind(bind_addr)
             .with_context(|| format!("binding {bind_addr}"))?;
         let addr = listener.local_addr().context("reading bound address")?;
@@ -124,11 +229,16 @@ impl Server {
             kind: model.kind(),
             n_features: model.n_features(),
             snapshot_every: options.snapshot_every,
+            shards: options.shards,
             started: Instant::now(),
         });
-        let initial = model.clone_via_codec().map_err(|e| {
+        let doc = model.to_checkpoint().map_err(|e| {
             e.context("publishing the initial snapshot (model not checkpointable?)")
         })?;
+        let initial = Model::from_checkpoint(&doc)
+            .map_err(|e| e.context("decoding the initial snapshot"))?;
+        let replication =
+            Arc::new(Mutex::new(DeltaLog::new(doc, options.delta_history.max(1))));
         let snapshot = Arc::new(RwLock::new(Arc::new(initial)));
         let shutdown = Arc::new(AtomicBool::new(false));
         let (tx, rx) = mpsc::sync_channel::<TrainerMsg>(options.queue_capacity.max(1));
@@ -136,31 +246,73 @@ impl Server {
         let trainer = {
             let snapshot = snapshot.clone();
             let stats = stats.clone();
-            let snapshot_every = options.snapshot_every;
+            let replication = replication.clone();
+            let snapshot_every = options.snapshot_every as u64;
+            let shards = options.shards;
+            // sequential mode keeps the exact one-learn-per-message
+            // schedule; sharded mode amortizes scoped-thread spawns over
+            // micro-batches
+            let max_batch = if shards > 1 { options.shard_batch.max(1) } else { 1 };
             thread::spawn(move || {
                 let mut model = model;
-                while let Ok(msg) = rx.recv() {
+                // a non-Learn message encountered mid-drain is handled
+                // after the batch it interrupted (FIFO preserved)
+                let mut carry: Option<TrainerMsg> = None;
+                'run: loop {
+                    let msg = match carry.take() {
+                        Some(m) => m,
+                        None => match rx.recv() {
+                            Ok(m) => m,
+                            Err(_) => break 'run,
+                        },
+                    };
                     match msg {
                         TrainerMsg::Learn(x, y) => {
-                            model.learn_one(&x, y);
-                            let applied =
-                                stats.learns_applied.fetch_add(1, Ordering::Relaxed) + 1;
+                            let mut batch = vec![Instance { x, y }];
+                            while batch.len() < max_batch {
+                                match rx.try_recv() {
+                                    Ok(TrainerMsg::Learn(x, y)) => {
+                                        batch.push(Instance { x, y })
+                                    }
+                                    Ok(other) => {
+                                        carry = Some(other);
+                                        break;
+                                    }
+                                    Err(_) => break,
+                                }
+                            }
+                            train_batch(&mut model, &batch, shards);
+                            let n = batch.len() as u64;
+                            let before = stats.learns_applied.fetch_add(n, Ordering::Relaxed);
+                            let applied = before + n;
+                            // publish when the batch crossed a boundary
                             if snapshot_every > 0
-                                && applied % snapshot_every as u64 == 0
-                                && publish_snapshot(&model, &snapshot, &stats).is_err()
+                                && before / snapshot_every != applied / snapshot_every
+                                && publish_snapshot(
+                                    &mut model,
+                                    &snapshot,
+                                    &stats,
+                                    &replication,
+                                )
+                                .is_err()
                             {
                                 stats.snapshot_failures.fetch_add(1, Ordering::Relaxed);
                             }
                         }
                         TrainerMsg::Snapshot(reply) => {
-                            let out = publish_snapshot(&model, &snapshot, &stats);
+                            let out = publish_snapshot(
+                                &mut model,
+                                &snapshot,
+                                &stats,
+                                &replication,
+                            );
                             if out.is_err() {
                                 stats.snapshot_failures.fetch_add(1, Ordering::Relaxed);
                             }
                             // a dropped reply just means the client left
                             reply.send(out).ok();
                         }
-                        TrainerMsg::Shutdown => break,
+                        TrainerMsg::Shutdown => break 'run,
                     }
                 }
                 model
@@ -169,6 +321,7 @@ impl Server {
 
         let acceptor = {
             let shutdown = shutdown.clone();
+            let replication = replication.clone();
             thread::spawn(move || {
                 for conn in listener.incoming() {
                     if shutdown.load(Ordering::SeqCst) {
@@ -180,20 +333,37 @@ impl Server {
                     let stats = stats.clone();
                     let info = info.clone();
                     let shutdown = shutdown.clone();
+                    let replication = replication.clone();
                     stats.connections.fetch_add(1, Ordering::Relaxed);
                     thread::spawn(move || {
-                        handle_connection(stream, tx, snapshot, stats, info, shutdown, addr);
+                        handle_connection(
+                            stream,
+                            tx,
+                            snapshot,
+                            stats,
+                            info,
+                            shutdown,
+                            replication,
+                            addr,
+                        );
                     });
                 }
             })
         };
 
-        Ok(Server { addr, acceptor, trainer })
+        Ok(Server { addr, acceptor, trainer, replication })
     }
 
     /// The bound address (read the ephemeral port from here).
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The leader's replication log (version, delta ring, publish
+    /// instants) — the bench suite reads lag and delta/full byte sizes
+    /// from here.
+    pub fn replication(&self) -> Arc<Mutex<DeltaLog>> {
+        self.replication.clone()
     }
 
     /// Block until a `shutdown` request stops the server; returns the
@@ -208,6 +378,46 @@ impl Server {
     }
 }
 
+/// The framed NDJSON connection loop shared by leader and follower
+/// ([`super::replicate`]) connections: one capped request line in, one
+/// response line out, until the peer hangs up or `respond` asks to stop.
+/// Returns whether a stop was requested (the caller runs its own
+/// shutdown dance — the leader also has a trainer to wake).
+pub(crate) fn drive_connection<F>(stream: TcpStream, mut respond: F) -> bool
+where
+    F: FnMut(&str) -> (Json, bool),
+{
+    let Ok(read_half) = stream.try_clone() else { return false };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let mut line = String::new();
+        let n = match (&mut reader).take(MAX_REQUEST_BYTES).read_line(&mut line) {
+            Ok(n) => n,
+            Err(_) => return false, // includes non-UTF-8 input
+        };
+        if n == 0 {
+            return false; // client closed the connection
+        }
+        if !line.ends_with('\n') && n as u64 >= MAX_REQUEST_BYTES {
+            let _ = write_response(&mut writer, &error_response("request too large"));
+            return false;
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let (response, stop) = respond(trimmed);
+        if write_response(&mut writer, &response).is_err() {
+            return false;
+        }
+        if stop {
+            return true;
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn handle_connection(
     stream: TcpStream,
     tx: mpsc::SyncSender<TrainerMsg>,
@@ -215,63 +425,44 @@ fn handle_connection(
     stats: Arc<ServerStats>,
     info: Arc<ModelInfo>,
     shutdown: Arc<AtomicBool>,
+    replication: Arc<Mutex<DeltaLog>>,
     self_addr: SocketAddr,
 ) {
-    let Ok(read_half) = stream.try_clone() else { return };
-    let mut reader = BufReader::new(read_half);
-    let mut writer = BufWriter::new(stream);
-    loop {
-        let mut line = String::new();
-        let n = match (&mut reader).take(MAX_REQUEST_BYTES).read_line(&mut line) {
-            Ok(n) => n,
-            Err(_) => break, // includes non-UTF-8 input
-        };
-        if n == 0 {
-            break; // client closed the connection
-        }
-        if !line.ends_with('\n') && n as u64 >= MAX_REQUEST_BYTES {
-            let _ = write_response(&mut writer, &error_response("request too large"));
-            break;
-        }
-        let trimmed = line.trim();
-        if trimmed.is_empty() {
-            continue;
-        }
-        let (response, stop) = respond(trimmed, &tx, &snapshot, &stats, &info);
-        if write_response(&mut writer, &response).is_err() {
-            break;
-        }
-        if stop {
-            // order matters: flag first, then wake the trainer, then poke
-            // the acceptor loose from accept()
-            shutdown.store(true, Ordering::SeqCst);
-            tx.send(TrainerMsg::Shutdown).ok();
-            TcpStream::connect(self_addr).ok();
-            break;
-        }
+    let stop = drive_connection(stream, |line| {
+        respond(line, &tx, &snapshot, &stats, &info, &replication)
+    });
+    if stop {
+        // order matters: flag first, then wake the trainer, then poke
+        // the acceptor loose from accept()
+        shutdown.store(true, Ordering::SeqCst);
+        tx.send(TrainerMsg::Shutdown).ok();
+        TcpStream::connect(self_addr).ok();
     }
 }
 
-fn write_response(writer: &mut BufWriter<TcpStream>, response: &Json) -> std::io::Result<()> {
+pub(crate) fn write_response(
+    writer: &mut BufWriter<TcpStream>,
+    response: &Json,
+) -> std::io::Result<()> {
     writer.write_all(response.to_compact().as_bytes())?;
     writer.write_all(b"\n")?;
     writer.flush()
 }
 
-fn error_response(message: &str) -> Json {
+pub(crate) fn error_response(message: &str) -> Json {
     let mut o = Json::obj();
     o.set("ok", false).set("error", message);
     o
 }
 
-fn ok_response() -> Json {
+pub(crate) fn ok_response() -> Json {
     let mut o = Json::obj();
     o.set("ok", true);
     o
 }
 
 /// Extract and validate one feature vector.
-fn parse_x(j: Option<&Json>, n_features: usize) -> Result<Vec<f64>, String> {
+pub(crate) fn parse_x(j: Option<&Json>, n_features: usize) -> Result<Vec<f64>, String> {
     let arr = j
         .and_then(Json::as_arr)
         .ok_or_else(|| "\"x\" must be an array of numbers".to_string())?;
@@ -297,6 +488,7 @@ fn respond(
     snapshot: &RwLock<Arc<Model>>,
     stats: &ServerStats,
     info: &ModelInfo,
+    replication: &Mutex<DeltaLog>,
 ) -> (Json, bool) {
     let request = match Json::parse(line) {
         Ok(j) => j,
@@ -361,29 +553,56 @@ fn respond(
                 return (error_response("trainer is shut down"), false);
             }
             match reply_rx.recv() {
-                Ok(Ok(checkpoint)) => {
+                Ok(Ok((checkpoint, version))) => {
                     let mut o = ok_response();
-                    o.set("checkpoint", checkpoint);
+                    o.set("checkpoint", checkpoint).set("version", ju64(version));
                     (o, false)
                 }
                 Ok(Err(e)) => (error_response(&e), false),
                 Err(_) => (error_response("trainer is shut down"), false),
             }
         }
-        "stats" => {
+        "repl_sync" => {
+            // follower catch-up: answered from the replication log without
+            // a trainer round-trip (replication is defined over *published*
+            // versions, which is exactly what the log holds)
+            let have = match request.get("have") {
+                None => None,
+                Some(j) => match pu64(j, "have") {
+                    Ok(v) => Some(v),
+                    Err(e) => return (error_response(&e.to_string()), false),
+                },
+            };
+            let payload = lock_poisoned(replication).sync_payload(have);
+            // full documents embed (deep-clone) outside the log lock, so
+            // a bootstrapping follower never stalls the publish path
             let mut o = ok_response();
-            o.set("model", info.name.as_str())
+            payload.into_response(&mut o);
+            (o, false)
+        }
+        "stats" => {
+            let applied = stats.learns_applied.load(Ordering::Relaxed);
+            let at_snapshot = stats.learns_at_snapshot.load(Ordering::Relaxed);
+            let mut o = ok_response();
+            o.set("role", "leader")
+                .set("model", info.name.as_str())
                 .set("kind", info.kind)
                 .set("n_features", info.n_features)
                 .set("snapshot_every", info.snapshot_every)
+                .set("shards", info.shards)
                 .set("learns_enqueued", stats.learns_enqueued.load(Ordering::Relaxed))
-                .set("learns_applied", stats.learns_applied.load(Ordering::Relaxed))
+                .set("learns_applied", applied)
                 .set("predicts", stats.predicts.load(Ordering::Relaxed))
                 .set("snapshots", stats.snapshots.load(Ordering::Relaxed))
                 .set(
                     "snapshot_failures",
                     stats.snapshot_failures.load(Ordering::Relaxed),
                 )
+                .set(
+                    "snapshot_version",
+                    ju64(stats.snapshot_version.load(Ordering::Relaxed)),
+                )
+                .set("snapshot_age_learns", applied.saturating_sub(at_snapshot))
                 .set("connections", stats.connections.load(Ordering::Relaxed))
                 .set("uptime_ms", info.started.elapsed().as_millis() as u64);
             (o, false)

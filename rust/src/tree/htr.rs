@@ -53,6 +53,11 @@ pub struct HoeffdingTreeRegressor {
     /// Leaves whose split attempts became due in deferred mode
     /// ([`Self::learn_one_deferred`]), awaiting a batched flush.
     pending: Vec<u32>,
+    /// Instances absorbed since [`Self::mark_synced`] — runtime-only
+    /// touched-state tracking for the serve/replication layer (how stale
+    /// a published snapshot is); deliberately NOT checkpointed: it
+    /// describes the sync cadence, not the model.
+    learns_since_sync: u64,
 }
 
 impl HoeffdingTreeRegressor {
@@ -87,6 +92,7 @@ impl HoeffdingTreeRegressor {
             rng,
             backend,
             pending: Vec::new(),
+            learns_since_sync: 0,
         }
     }
 
@@ -270,6 +276,7 @@ impl HoeffdingTreeRegressor {
     /// became due (shared by the inline and deferred learn paths).
     fn learn_routing(&mut self, x: &[f64], y: f64) -> Option<u32> {
         debug_assert_eq!(x.len(), self.n_features);
+        self.learns_since_sync += 1;
         let leaf_idx = self.route(x);
         let Node::Leaf(leaf) = &mut self.nodes[leaf_idx as usize] else { unreachable!() };
         leaf.learn(x, y, 1.0);
@@ -321,6 +328,20 @@ impl HoeffdingTreeRegressor {
         for leaf_idx in self.take_pending() {
             self.attempt_split_through(leaf_idx, backend);
         }
+    }
+
+    /// Instances absorbed since the last [`Self::mark_synced`] (covers
+    /// both the inline and deferred learn paths). The serve layer's
+    /// publisher uses a zero here to skip the encode → decode → diff
+    /// round-trip when an explicit snapshot arrives with nothing new.
+    pub fn learns_since_sync(&self) -> u64 {
+        self.learns_since_sync
+    }
+
+    /// Reset the touched-state counter (called when a snapshot/delta of
+    /// this tree has been published).
+    pub fn mark_synced(&mut self) {
+        self.learns_since_sync = 0;
     }
 
     pub fn n_splits(&self) -> usize {
@@ -505,6 +526,7 @@ impl HoeffdingTreeRegressor {
             rng: rng_from(field(j, "rng")?, "rng")?,
             backend,
             pending,
+            learns_since_sync: 0,
         })
     }
 

@@ -10,7 +10,7 @@ use qostream::common::Rng;
 use qostream::eval::Regressor;
 use qostream::forest::{ArfOptions, ArfRegressor, OnlineBaggingRegressor};
 use qostream::observer::{ObserverFactory, ObserverSpec};
-use qostream::persist::Model;
+use qostream::persist::{delta, Model};
 use qostream::tree::{HoeffdingTreeRegressor, HtrOptions, SubspaceSize};
 
 /// The observer grid: every checkpointable kind, through the same spec
@@ -143,6 +143,99 @@ fn bagging_roundtrip_across_observers() {
                 bag.learn_one(&x, y);
             }
             assert_roundtrip_invisible(Model::Bagging(bag), rng, 500);
+            Ok(())
+        });
+    }
+}
+
+/// Build one model of each checkpointable kind for `label`.
+fn model_grid(label: &str, rng: &mut Rng) -> Vec<Model> {
+    let fac = || ObserverSpec::from_label(label).expect(label).to_factory();
+    let tree_opts = HtrOptions { grace_period: 100, ..Default::default() };
+    vec![
+        Model::Tree(HoeffdingTreeRegressor::new(4, tree_opts, fac())),
+        Model::Arf(ArfRegressor::new(
+            4,
+            ArfOptions {
+                n_members: 2,
+                lambda: 2.0,
+                seed: rng.next_u64(),
+                tree: tree_opts,
+                ..Default::default()
+            },
+            fac(),
+        )),
+        Model::Bagging(OnlineBaggingRegressor::new(
+            4,
+            2,
+            1.5,
+            tree_opts,
+            fac(),
+            rng.next_u64(),
+        )),
+    ]
+}
+
+/// The delta-checkpoint acceptance property: a full checkpoint at v0 plus
+/// k structural deltas, replayed on a fresh copy, must reproduce the full
+/// checkpoint at vk **byte-for-byte** — and decode to a model with
+/// bit-identical predictions — across {tree, ARF, bagging} × {QO dynamic,
+/// QO fixed-radius, E-BST}.
+#[test]
+fn delta_chain_reconstructs_full_checkpoints_byte_for_byte() {
+    for (i, label) in ["QO_s2", "QO_0.05", "E-BST"].iter().enumerate() {
+        check(&format!("delta-chain[{label}]"), 0x1CE + i as u64, 2, |rng| {
+            for mut model in model_grid(label, rng) {
+                let name = model.name();
+                let base = 300 + rng.below(400) as usize;
+                for _ in 0..base {
+                    let (x, y) = draw_instance(rng);
+                    model.learn_one(&x, y);
+                }
+                let v0 = model.to_checkpoint().expect("encode v0");
+
+                // k delta steps of random length
+                let mut patches = Vec::new();
+                let mut full_docs = Vec::new();
+                let mut prev = v0.clone();
+                for _ in 0..3 {
+                    let chunk = 100 + rng.below(300) as usize;
+                    for _ in 0..chunk {
+                        let (x, y) = draw_instance(rng);
+                        model.learn_one(&x, y);
+                    }
+                    let doc = model.to_checkpoint().expect("encode step");
+                    patches.push(delta::diff(&prev, &doc));
+                    full_docs.push(doc.clone());
+                    prev = doc;
+                }
+
+                // replay the chain on a fresh copy of v0
+                let mut replica = v0;
+                for (step, (patch, want)) in
+                    patches.iter().zip(&full_docs).enumerate()
+                {
+                    replica = delta::apply(&replica, patch)
+                        .map_err(|e| format!("{name}: apply step {step}: {e}"))?;
+                    if replica.to_compact() != want.to_compact() {
+                        return Err(format!(
+                            "{name}: delta step {step} diverged from the full checkpoint"
+                        ));
+                    }
+                    if delta::doc_hash(&replica) != delta::doc_hash(want) {
+                        return Err(format!("{name}: hash diverged at step {step}"));
+                    }
+                }
+                // the reconstructed head is a live, bit-identical model
+                let restored = Model::from_checkpoint(&replica)
+                    .map_err(|e| format!("{name}: decode head: {e}"))?;
+                for _ in 0..10 {
+                    let (x, _) = draw_instance(rng);
+                    if restored.predict(&x).to_bits() != model.predict(&x).to_bits() {
+                        return Err(format!("{name}: reconstructed head predicts differently"));
+                    }
+                }
+            }
             Ok(())
         });
     }

@@ -1,0 +1,307 @@
+//! End-to-end replication tests over real sockets (the CI-pinned step):
+//! a leader trains and publishes versioned delta checkpoints, followers
+//! poll/apply them, and the acceptance contract holds — **bit-identical
+//! predictions to the leader at every applied version**, gap detection →
+//! full resync, follower kill/restart → clean re-bootstrap, and a sharded
+//! leader replicating exactly like a sequential one.
+
+use std::time::{Duration, Instant};
+
+use qostream::common::json::Json;
+use qostream::eval::Regressor;
+use qostream::forest::{ArfOptions, ArfRegressor};
+use qostream::observer::{factory, QuantizationObserver, RadiusPolicy};
+use qostream::persist::Model;
+use qostream::serve::{Follower, FollowerOptions, ServeClient, ServeOptions, Server};
+use qostream::stream::{Friedman1, Stream};
+
+fn qo_factory() -> Box<dyn qostream::observer::ObserverFactory> {
+    factory("QO_s2", || {
+        Box::new(QuantizationObserver::new(RadiusPolicy::std_fraction(2.0)))
+    })
+}
+
+fn arf(members: usize, seed: u64) -> ArfRegressor {
+    ArfRegressor::new(
+        10,
+        ArfOptions { n_members: members, lambda: 3.0, seed, ..Default::default() },
+        qo_factory(),
+    )
+}
+
+fn probes(n: usize) -> Vec<Vec<f64>> {
+    let mut held_out = Friedman1::new(0xFACE, 0.0);
+    (0..n).map(|_| held_out.next_instance().unwrap().x).collect()
+}
+
+/// Block until the follower reaches `version` (bounded).
+fn wait_version(follower: &Follower, version: u64) {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    while follower.version() < version {
+        assert!(
+            Instant::now() < deadline,
+            "follower stuck at v{} waiting for v{version}",
+            follower.version()
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+fn follower_stat(client: &mut ServeClient, key: &str) -> f64 {
+    client
+        .stats()
+        .expect("stats")
+        .get(key)
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("stats missing {key:?}"))
+}
+
+/// The acceptance contract: with auto-publication off, every explicit
+/// snapshot is one version; the follower must pass through each one and
+/// answer **bit-identically to the leader at that version**.
+#[test]
+fn follower_bit_identical_at_every_version() {
+    let server = Server::start(
+        Model::Arf(arf(3, 7)),
+        "127.0.0.1:0",
+        ServeOptions { snapshot_every: 0, ..Default::default() },
+    )
+    .expect("leader");
+    let follower = Follower::start(
+        &server.addr().to_string(),
+        "127.0.0.1:0",
+        FollowerOptions { poll_interval: Duration::from_millis(3), ..Default::default() },
+    )
+    .expect("follower");
+    assert_eq!(follower.version(), 0, "bootstrap must land on the initial version");
+
+    let mut client = ServeClient::connect(server.addr()).expect("leader client");
+    let mut follower_client = ServeClient::connect(follower.addr()).expect("replica client");
+    let mut stream = Friedman1::new(11, 1.0);
+    let batch = probes(40);
+
+    let rounds = 5u64;
+    for round in 1..=rounds {
+        for _ in 0..150 {
+            let inst = stream.next_instance().unwrap();
+            client.learn(&inst.x, inst.y).expect("learn");
+        }
+        // snapshot rides the trainer FIFO: the published version reflects
+        // every acked learn, and bumps the leader to version `round`
+        client.snapshot().expect("snapshot");
+        wait_version(&follower, round);
+
+        let leader_preds = client.predict_batch(&batch).expect("leader batch");
+        let follower_preds =
+            follower_client.predict_batch(&batch).expect("follower batch");
+        for (i, (a, b)) in leader_preds.iter().zip(&follower_preds).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "v{round} probe {i}: leader {a} vs follower {b}"
+            );
+        }
+    }
+
+    // a healthy steady run replicates purely by deltas
+    let stats = follower_client.stats().expect("stats");
+    assert_eq!(stats.get("role").and_then(Json::as_str), Some("follower"));
+    assert_eq!(follower_stat(&mut follower_client, "deltas_applied") as u64, rounds);
+    assert_eq!(follower_stat(&mut follower_client, "full_resyncs") as u64, 0);
+
+    follower_client.shutdown().expect("follower shutdown");
+    follower.join().expect("follower exit");
+    client.shutdown().expect("leader shutdown");
+    server.join().expect("leader exit");
+}
+
+/// Gap detection: a follower that falls further behind than the leader's
+/// delta ring must full-resync (and still converge bit-identically); a
+/// killed follower re-bootstraps cleanly from the current head.
+#[test]
+fn gap_forces_full_resync_and_restart_rebootstraps() {
+    let server = Server::start(
+        Model::Arf(arf(2, 3)),
+        "127.0.0.1:0",
+        // tiny ring: 2 retained deltas
+        ServeOptions { snapshot_every: 0, delta_history: 2, ..Default::default() },
+    )
+    .expect("leader");
+    let addr = server.addr().to_string();
+    let mut client = ServeClient::connect(server.addr()).expect("leader client");
+    let mut stream = Friedman1::new(21, 1.0);
+
+    // a slow follower: its poll interval is far longer than the burst of
+    // publications below (generous margin — debug-build checkpoints are
+    // slow), so its first real poll finds it 4 versions behind a 2-deep
+    // ring
+    let slow = Follower::start(
+        &addr,
+        "127.0.0.1:0",
+        FollowerOptions {
+            poll_interval: Duration::from_secs(3),
+            ..Default::default()
+        },
+    )
+    .expect("slow follower");
+    assert_eq!(slow.version(), 0);
+
+    for _ in 0..4 {
+        for _ in 0..80 {
+            let inst = stream.next_instance().unwrap();
+            client.learn(&inst.x, inst.y).expect("learn");
+        }
+        client.snapshot().expect("snapshot");
+    }
+    wait_version(&slow, 4);
+    let mut slow_client = ServeClient::connect(slow.addr()).expect("slow client");
+    assert!(
+        follower_stat(&mut slow_client, "full_resyncs") >= 1.0,
+        "a 4-behind follower over a 2-deep ring must have full-resynced"
+    );
+    let batch = probes(30);
+    let leader_preds = client.predict_batch(&batch).expect("leader batch");
+    let slow_preds = slow_client.predict_batch(&batch).expect("slow batch");
+    for (a, b) in leader_preds.iter().zip(&slow_preds) {
+        assert_eq!(a.to_bits(), b.to_bits(), "post-resync divergence");
+    }
+    // kill the follower
+    slow_client.shutdown().expect("slow shutdown");
+    slow.join().expect("slow exit");
+
+    // leader keeps going while no follower exists
+    for _ in 0..80 {
+        let inst = stream.next_instance().unwrap();
+        client.learn(&inst.x, inst.y).expect("learn");
+    }
+    client.snapshot().expect("snapshot");
+
+    // a fresh follower bootstraps straight to the current head
+    let reborn = Follower::start(
+        &addr,
+        "127.0.0.1:0",
+        FollowerOptions { poll_interval: Duration::from_millis(3), ..Default::default() },
+    )
+    .expect("reborn follower");
+    assert_eq!(reborn.version(), 5, "bootstrap must land on the leader's head");
+    let mut reborn_client = ServeClient::connect(reborn.addr()).expect("reborn client");
+    let leader_preds = client.predict_batch(&batch).expect("leader batch");
+    let reborn_preds = reborn_client.predict_batch(&batch).expect("reborn batch");
+    for (a, b) in leader_preds.iter().zip(&reborn_preds) {
+        assert_eq!(a.to_bits(), b.to_bits(), "post-restart divergence");
+    }
+    // and from there it follows deltas again
+    for _ in 0..80 {
+        let inst = stream.next_instance().unwrap();
+        client.learn(&inst.x, inst.y).expect("learn");
+    }
+    client.snapshot().expect("snapshot");
+    wait_version(&reborn, 6);
+    assert!(follower_stat(&mut reborn_client, "deltas_applied") >= 1.0);
+
+    reborn_client.shutdown().expect("reborn shutdown");
+    reborn.join().expect("reborn exit");
+    client.shutdown().expect("leader shutdown");
+    server.join().expect("leader exit");
+}
+
+/// One endpoint fronting a sharded fleet: a leader training with
+/// `shards > 1` must stay bit-identical to the sequential ensemble, and
+/// its followers replicate that state exactly.
+#[test]
+fn sharded_leader_is_bit_identical_and_replicates() {
+    let n = 600usize;
+    // in-process sequential reference, same seeds, same stream
+    let mut reference = arf(4, 9);
+    let mut stream = Friedman1::new(13, 1.0);
+    for _ in 0..n {
+        let inst = stream.next_instance().unwrap();
+        reference.learn_one(&inst.x, inst.y);
+    }
+
+    let server = Server::start(
+        Model::Arf(arf(4, 9)),
+        "127.0.0.1:0",
+        ServeOptions { snapshot_every: 0, shards: 2, shard_batch: 64, ..Default::default() },
+    )
+    .expect("sharded leader");
+    let mut client = ServeClient::connect(server.addr()).expect("leader client");
+    let mut stream = Friedman1::new(13, 1.0);
+    for _ in 0..n {
+        let inst = stream.next_instance().unwrap();
+        client.learn(&inst.x, inst.y).expect("learn");
+    }
+    client.snapshot().expect("snapshot");
+
+    let follower = Follower::start(
+        &server.addr().to_string(),
+        "127.0.0.1:0",
+        FollowerOptions { poll_interval: Duration::from_millis(3), ..Default::default() },
+    )
+    .expect("follower");
+    wait_version(&follower, 1);
+    let mut follower_client = ServeClient::connect(follower.addr()).expect("replica");
+
+    let batch = probes(40);
+    let leader_preds = client.predict_batch(&batch).expect("leader batch");
+    let follower_preds = follower_client.predict_batch(&batch).expect("follower batch");
+    for ((x, served), replicated) in batch.iter().zip(&leader_preds).zip(&follower_preds)
+    {
+        let sequential = reference.predict(x);
+        assert_eq!(
+            served.to_bits(),
+            sequential.to_bits(),
+            "sharded serve diverged from sequential at {x:?}"
+        );
+        assert_eq!(
+            replicated.to_bits(),
+            sequential.to_bits(),
+            "replica diverged from sequential at {x:?}"
+        );
+    }
+
+    // stats surface the sharding config
+    let stats = client.stats().expect("stats");
+    assert_eq!(stats.get("shards").and_then(Json::as_f64), Some(2.0));
+
+    follower_client.shutdown().expect("follower shutdown");
+    follower.join().expect("follower exit");
+    client.shutdown().expect("leader shutdown");
+    server.join().expect("leader exit");
+}
+
+/// Followers are strictly read replicas: learns are rejected with an
+/// error envelope, reads keep working, and the connection stays usable.
+#[test]
+fn follower_rejects_learns_but_serves_reads() {
+    let server = Server::start(
+        Model::Arf(arf(2, 1)),
+        "127.0.0.1:0",
+        ServeOptions::default(),
+    )
+    .expect("leader");
+    let follower = Follower::start(
+        &server.addr().to_string(),
+        "127.0.0.1:0",
+        FollowerOptions::default(),
+    )
+    .expect("follower");
+    let mut client = ServeClient::connect(follower.addr()).expect("replica client");
+
+    let response = client
+        .raw_line("{\"cmd\":\"learn\",\"x\":[0,0,0,0,0,0,0,0,0,0],\"y\":1.0}")
+        .expect("response");
+    assert!(response.contains("\"ok\":false"), "{response}");
+    assert!(response.contains("read-only"), "{response}");
+
+    let p = client.predict(&[0.5; 10]).expect("predict still works");
+    assert!(p.is_finite());
+    let snapshot = client.raw_line("{\"cmd\":\"snapshot\"}").expect("snapshot");
+    assert!(snapshot.contains("qostream-checkpoint"), "follower snapshot");
+
+    client.shutdown().expect("follower shutdown");
+    follower.join().expect("follower exit");
+    let mut leader_client = ServeClient::connect(server.addr()).expect("leader client");
+    leader_client.shutdown().expect("leader shutdown");
+    server.join().expect("leader exit");
+}

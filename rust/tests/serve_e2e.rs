@@ -57,6 +57,26 @@ fn smoke_learn_predict_snapshot_shutdown() {
             .unwrap_or(0.0)
             >= 100.0
     );
+    // staleness reporting (ops/follower contract): the explicit snapshot
+    // just published, so the version is known and the age is zero
+    assert_eq!(
+        stats.get("role").and_then(qostream::common::json::Json::as_str),
+        Some("leader")
+    );
+    let version: u64 = stats
+        .get("snapshot_version")
+        .and_then(qostream::common::json::Json::as_str)
+        .expect("stats must report snapshot_version")
+        .parse()
+        .expect("version is a decimal string");
+    assert!(version >= 1, "explicit snapshot must have bumped the version");
+    assert_eq!(
+        stats
+            .get("snapshot_age_learns")
+            .and_then(qostream::common::json::Json::as_f64),
+        Some(0.0),
+        "age must reset right after a snapshot"
+    );
     client.shutdown().expect("shutdown ack");
     let final_model = server.join().expect("clean exit");
     assert_eq!(final_model.kind(), "tree");
