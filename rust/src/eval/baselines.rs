@@ -68,6 +68,13 @@ impl LinearSgd {
         }
     }
 
+    /// Resident heap footprint in bytes (weights + normalization stats).
+    pub fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<LinearSgd>()
+            + self.weights.capacity() * std::mem::size_of::<f64>()
+            + self.feature_stats.capacity() * std::mem::size_of::<VarStats>()
+    }
+
     #[inline]
     fn norm_x(&self, i: usize, xi: f64) -> f64 {
         let s = &self.feature_stats[i];

@@ -206,6 +206,7 @@ impl ArfMember {
         if drift && self.drift.rising() {
             // swap in the background tree (fresh restart when none trained
             // yet) and re-arm both detectors for the new concept
+            let promoted_background = self.background.is_some();
             self.tree = match self.background.take() {
                 Some(bg) => {
                     self.fg_trained = self.bg_trained;
@@ -220,10 +221,19 @@ impl ArfMember {
             self.warning.reset();
             self.drift.reset();
             self.n_drifts += 1;
+            if let Some(m) = crate::obs::m() {
+                m.forest_drifts.inc();
+                if promoted_background {
+                    m.forest_bg_promotions.inc();
+                }
+            }
         } else if warning && self.warning.rising() && self.background.is_none() {
             self.background = Some(self.fresh_tree());
             self.bg_trained = false;
             self.n_warnings += 1;
+            if let Some(m) = crate::obs::m() {
+                m.forest_warnings.inc();
+            }
         }
     }
 
@@ -395,6 +405,22 @@ impl ArfRegressor {
 
     pub fn options(&self) -> &ArfOptions {
         &self.options
+    }
+
+    /// Resident heap footprint in bytes across all members (foreground and
+    /// background trees) — the byte-level companion of
+    /// [`Regressor::n_elements`], feeding the `model_mem_bytes` gauge.
+    pub fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<ArfRegressor>()
+            + self
+                .members
+                .iter()
+                .map(|m| {
+                    std::mem::size_of::<ArfMember>()
+                        + m.tree.mem_bytes()
+                        + m.background.as_ref().map(|b| b.mem_bytes()).unwrap_or(0)
+                })
+                .sum::<usize>()
     }
 
     /// Replace the shared split-query engine (e.g. an instrumented backend

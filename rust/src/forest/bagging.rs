@@ -212,6 +212,17 @@ impl OnlineBaggingRegressor {
         self.members.iter().map(|m| m.tree.n_splits()).sum()
     }
 
+    /// Resident heap footprint in bytes across all member trees — the
+    /// byte-level companion of [`Regressor::n_elements`].
+    pub fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<OnlineBaggingRegressor>()
+            + self
+                .members
+                .iter()
+                .map(|m| std::mem::size_of::<BagMember>() + m.tree.mem_bytes())
+                .sum::<usize>()
+    }
+
     /// Replace the shared split-query engine (e.g. an instrumented backend
     /// in tests); every member's flush handle is updated too.
     pub fn with_split_backend(

@@ -51,7 +51,15 @@ pub fn flush_split_attempts(
     }
 
     // Phase 3: one backend call for the whole forest round.
+    let started = crate::obs::m().map(|_| std::time::Instant::now());
     let results: Vec<Option<SplitSuggestion>> = backend.best_splits(&queries);
+    if let Some(m) = crate::obs::m() {
+        m.backend_batches.inc();
+        m.backend_batch_size.record(queries.len() as u64);
+        if let Some(t) = started {
+            m.backend_latency_ns.record(t.elapsed().as_nanos() as u64);
+        }
+    }
     drop(queries);
 
     // Phase 4 (mutable): hand each job its result segment.

@@ -45,6 +45,11 @@
 //! * [`bench_suite`] — regenerates every table and figure of the paper's
 //!   evaluation (see DESIGN.md for the experiment index), plus the
 //!   serving latency/checkpoint-size scenario.
+//! * [`obs`] — dependency-free observability: a lock-free metrics
+//!   registry (atomic counters/gauges + log2-bucketed histograms with
+//!   exact merge and p50/p90/p99 readout), a bounded split-decision
+//!   trace ring, and Prometheus text exposition — no-ops when disabled,
+//!   served live via the `metrics` / `trace_splits` protocol commands.
 //! * [`common`] — zero-dependency substrate: PRNG, JSON reader/writer,
 //!   ASCII tables/plots, a tiny property-testing harness, CLI parsing.
 
@@ -54,6 +59,7 @@ pub mod coordinator;
 pub mod criterion;
 pub mod eval;
 pub mod forest;
+pub mod obs;
 pub mod observer;
 pub mod persist;
 pub mod runtime;

@@ -384,7 +384,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let follower = Follower::start(leader, &bind, options)?;
         println!(
             "following {leader} on {} (poll every {:?})\n\
-             protocol: NDJSON predict | predict_batch | snapshot | stats | shutdown",
+             protocol: NDJSON predict | predict_batch | snapshot | stats \
+             | metrics | trace_splits | shutdown",
             follower.addr(),
             options.poll_interval
         );
@@ -411,7 +412,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "serving {name} on {} (snapshot hot-swap every {} learns, \
          {}-deep delta ring{sharding})\n\
          protocol: NDJSON learn | predict | predict_batch | snapshot | stats \
-         | repl_sync | shutdown",
+         | repl_sync | metrics | trace_splits | shutdown",
         server.addr(),
         options.snapshot_every,
         options.delta_history

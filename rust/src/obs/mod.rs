@@ -1,0 +1,715 @@
+//! `obs/` — a dependency-free metrics + tracing layer.
+//!
+//! The paper's central claim is a *cost profile* — O(1) monitoring per
+//! instance and sub-linear split evaluation (PAPER.md Sec. 3–4) — and the
+//! serving layer's north star is operating that profile under real
+//! traffic. This module makes both observable from a running process
+//! with `std` only (no external crates, matching the vendor-shim policy):
+//!
+//! * **Counters / gauges** — single relaxed `AtomicU64`s.
+//! * **Histograms** — log2-bucketed `AtomicU64` arrays with an exact
+//!   merge (bucketwise add: merging two recordings is *identical* to
+//!   having recorded into one histogram, property-tested below) and
+//!   p50/p90/p99 readout. A quantile answer is the inclusive upper bound
+//!   of its bucket, so it over-reports by strictly less than 2× and
+//!   never under-reports.
+//! * **Split-decision trace ring** — a bounded ring recording every
+//!   split attempt's outcome (accepted / tie-broken / Hoeffding-rejected
+//!   / no-merit / branch-too-small), merit gap, slots evaluated and
+//!   elapsed ns. Split attempts are grace-period-rare, so a mutexed ring
+//!   is fine; the hot learn path never touches it.
+//!
+//! ## Overhead contract
+//!
+//! The registry is **disabled by default**. Every recording site goes
+//! through [`m()`], which is one relaxed load + branch when disabled —
+//! the instrumented binary runs the uninstrumented hot path. When
+//! enabled (servers enable on start), recording is 1–3 uncontended
+//! relaxed RMWs. `bench_suite::serve_bench::obs_overhead_scenario`
+//! measures enabled-vs-disabled learns/sec and the CI smoke gate asserts
+//! the ratio stays ≥ 0.95 (within 5%).
+//!
+//! ## Metric naming scheme
+//!
+//! `qostream_<component>_<name>[_total|_bytes|_ns]` where component is
+//! one of `tree`, `qo`, `backend`, `forest`, `serve`, `repl`, `model`.
+//! Counters end in `_total`; byte and nanosecond distributions carry
+//! their unit as the suffix.
+//!
+//! ## Exposition format
+//!
+//! [`exposition()`] renders Prometheus text exposition: counters and
+//! gauges as single samples, histograms as Prometheus *summaries*
+//! (`{quantile="0.5|0.9|0.99"}` samples plus `_sum`/`_count`). The serve
+//! protocol exposes it via the `metrics` command (and the ring via
+//! `trace_splits`) on leaders and followers alike.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Global on/off switch. Off (the default) means every recording site is
+/// a relaxed load + branch — effectively free.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Is the global registry recording?
+#[inline(always)]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the global registry on (servers call this on start).
+pub fn enable() {
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Turn the global registry off (recording sites become no-ops).
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+}
+
+/// Serializes enable/disable *experiments*: the overhead bench and the
+/// gate's own tests flip the process-global switch back and forth, and
+/// concurrent flippers (cargo runs tests in parallel threads) would
+/// corrupt each other's measurements. Hold this while toggling.
+/// Recording sites and plain [`enable()`] callers (servers) never take it.
+pub fn toggle_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The gated accessor every instrumentation site uses:
+/// `if let Some(m) = obs::m() { m.tree_learns.inc(); }`.
+/// Returns `None` when the registry is disabled, so the instrumented
+/// path compiles down to a load + branch around the recording code.
+#[inline(always)]
+pub fn m() -> Option<&'static Metrics> {
+    if enabled() {
+        Some(global())
+    } else {
+        None
+    }
+}
+
+/// The global registry, independent of the enabled gate (readout paths —
+/// exposition, stats — always see it).
+pub fn global() -> &'static Metrics {
+    static METRICS: Metrics = Metrics::new();
+    &METRICS
+}
+
+/// A monotone counter. Recording is one relaxed `fetch_add`.
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter { v: AtomicU64::new(0) }
+    }
+
+    #[inline(always)]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline(always)]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Counter {
+        Counter::new()
+    }
+}
+
+/// A last-write-wins gauge.
+pub struct Gauge {
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge { v: AtomicU64::new(0) }
+    }
+
+    #[inline(always)]
+    pub fn set(&self, v: u64) {
+        self.v.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge::new()
+    }
+}
+
+/// log2 buckets: index 0 holds the value 0, index `i ≥ 1` holds
+/// `[2^(i-1), 2^i - 1]`, and index 64 holds everything from `2^63` up.
+pub const N_BUCKETS: usize = 65;
+
+/// Bucket index of a recorded value.
+#[inline]
+pub fn bucket_index(v: u64) -> usize {
+    (u64::BITS - v.leading_zeros()) as usize
+}
+
+/// Inclusive upper bound of a bucket (the quantile representative).
+pub fn bucket_upper_bound(i: usize) -> u64 {
+    match i {
+        0 => 0,
+        1..=63 => (1u64 << i) - 1,
+        _ => u64::MAX,
+    }
+}
+
+/// A lock-free log2-bucketed histogram of `u64` samples (latencies in
+/// ns, sizes in bytes, depths, batch sizes...).
+pub struct Histogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Histogram {
+    pub const fn new() -> Histogram {
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram { buckets: [ZERO; N_BUCKETS], sum: AtomicU64::new(0), count: AtomicU64::new(0) }
+    }
+
+    /// Record one sample: three relaxed `fetch_add`s.
+    #[inline(always)]
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A point-in-time copy (not a cross-field atomic snapshot; under
+    /// concurrent recording the fields may be a few samples apart, which
+    /// is fine for monitoring readout).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut counts = [0u64; N_BUCKETS];
+        for (c, b) in counts.iter_mut().zip(&self.buckets) {
+            *c = b.load(Ordering::Relaxed);
+        }
+        HistogramSnapshot {
+            counts,
+            sum: self.sum.load(Ordering::Relaxed),
+            count: self.count.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+/// Plain-data copy of a [`Histogram`], mergeable and queryable.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    pub counts: [u64; N_BUCKETS],
+    pub sum: u64,
+    pub count: u64,
+}
+
+impl HistogramSnapshot {
+    pub fn empty() -> HistogramSnapshot {
+        HistogramSnapshot { counts: [0; N_BUCKETS], sum: 0, count: 0 }
+    }
+
+    /// Exact merge: bucketwise addition. `a.merge(&b)` is identical to
+    /// the snapshot of one histogram that recorded both sample sets
+    /// (bucketing is a pure function of the value).
+    pub fn merge(&self, other: &HistogramSnapshot) -> HistogramSnapshot {
+        let mut out = self.clone();
+        for (c, o) in out.counts.iter_mut().zip(&other.counts) {
+            *c += o;
+        }
+        out.sum += other.sum;
+        out.count += other.count;
+        out
+    }
+
+    /// The q-quantile (`0 < q <= 1`) as the inclusive upper bound of the
+    /// bucket holding the ⌈q·count⌉-th smallest sample; 0 when empty.
+    /// Over-reports by < 2× (the bucket's width), never under-reports.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper_bound(i);
+            }
+        }
+        bucket_upper_bound(N_BUCKETS - 1)
+    }
+
+    /// Mean of the recorded samples (exact — the sum is tracked exactly).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+}
+
+/// How a split attempt resolved (mirrors the decision branches of
+/// `tree::HoeffdingTreeRegressor`'s Hoeffding test).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitOutcome {
+    /// Merit ratio cleared the Hoeffding bound: split materialized.
+    Accepted,
+    /// Bound not cleared but ε shrank under the tie threshold: split
+    /// materialized as a tie-break.
+    TieBroken,
+    /// Candidates too close for the current ε: leaf keeps observing.
+    HoeffdingRejected,
+    /// Best candidate had no positive merit.
+    NoMerit,
+    /// Best candidate would create an under-populated branch.
+    BranchTooSmall,
+}
+
+impl SplitOutcome {
+    pub fn label(&self) -> &'static str {
+        match self {
+            SplitOutcome::Accepted => "accepted",
+            SplitOutcome::TieBroken => "tie_broken",
+            SplitOutcome::HoeffdingRejected => "hoeffding_rejected",
+            SplitOutcome::NoMerit => "no_merit",
+            SplitOutcome::BranchTooSmall => "branch_too_small",
+        }
+    }
+
+    /// Did this outcome materialize a split?
+    pub fn split(&self) -> bool {
+        matches!(self, SplitOutcome::Accepted | SplitOutcome::TieBroken)
+    }
+}
+
+/// One recorded split attempt.
+#[derive(Clone, Copy, Debug)]
+pub struct SplitEvent {
+    pub outcome: SplitOutcome,
+    /// `best.merit - second.merit` (0 when there was no runner-up).
+    pub merit_gap: f64,
+    /// Stored elements across the leaf's observers at decision time —
+    /// the paper's "slots" cost axis for the evaluated query.
+    pub slots_evaluated: u64,
+    /// Wall-clock ns from gathering suggestions to the decision.
+    pub elapsed_ns: u64,
+}
+
+/// Bounded ring of recent [`SplitEvent`]s plus a total-attempts counter.
+/// Mutexed: split attempts fire once per `grace_period` learns, so this
+/// is far off the hot path.
+pub struct TraceRing {
+    capacity: usize,
+    inner: Mutex<TraceInner>,
+}
+
+struct TraceInner {
+    events: VecDeque<SplitEvent>,
+    total: u64,
+}
+
+impl TraceRing {
+    pub const fn new(capacity: usize) -> TraceRing {
+        TraceRing {
+            capacity,
+            inner: Mutex::new(TraceInner { events: VecDeque::new(), total: 0 }),
+        }
+    }
+
+    pub fn record(&self, event: SplitEvent) {
+        let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.total += 1;
+        if inner.events.len() >= self.capacity {
+            inner.events.pop_front();
+        }
+        inner.events.push_back(event);
+    }
+
+    /// The retained events, oldest first.
+    pub fn events(&self) -> Vec<SplitEvent> {
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.events.iter().copied().collect()
+    }
+
+    /// Attempts ever recorded (including evicted ones).
+    pub fn total(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).total
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+/// Every metric the system records, by name. One static instance backs
+/// the process ([`global()`]); tests build their own.
+pub struct Metrics {
+    // tree
+    pub tree_learns: Counter,
+    pub tree_route_depth: Histogram,
+    pub tree_splits_accepted: Counter,
+    pub tree_splits_tie_broken: Counter,
+    pub tree_splits_hoeffding_rejected: Counter,
+    pub tree_splits_no_merit: Counter,
+    pub tree_splits_branch_too_small: Counter,
+    // observer
+    pub qo_inserts: Counter,
+    pub qo_slots_occupied: Histogram,
+    // split backend
+    pub backend_batches: Counter,
+    pub backend_batch_size: Histogram,
+    pub backend_latency_ns: Histogram,
+    // forest
+    pub forest_warnings: Counter,
+    pub forest_drifts: Counter,
+    pub forest_bg_promotions: Counter,
+    // serve
+    pub serve_learn_ns: Histogram,
+    pub serve_predict_ns: Histogram,
+    pub serve_delta_publish_bytes: Histogram,
+    pub serve_snapshot_failures_consecutive: Gauge,
+    // model
+    pub model_mem_bytes: Gauge,
+    // replication (follower side)
+    pub repl_lag_versions: Gauge,
+    pub repl_lag_learns: Gauge,
+    pub repl_deltas_applied: Counter,
+    pub repl_full_resyncs: Counter,
+    // split-decision trace
+    pub split_trace: TraceRing,
+}
+
+impl Metrics {
+    pub const fn new() -> Metrics {
+        Metrics {
+            tree_learns: Counter::new(),
+            tree_route_depth: Histogram::new(),
+            tree_splits_accepted: Counter::new(),
+            tree_splits_tie_broken: Counter::new(),
+            tree_splits_hoeffding_rejected: Counter::new(),
+            tree_splits_no_merit: Counter::new(),
+            tree_splits_branch_too_small: Counter::new(),
+            qo_inserts: Counter::new(),
+            qo_slots_occupied: Histogram::new(),
+            backend_batches: Counter::new(),
+            backend_batch_size: Histogram::new(),
+            backend_latency_ns: Histogram::new(),
+            forest_warnings: Counter::new(),
+            forest_drifts: Counter::new(),
+            forest_bg_promotions: Counter::new(),
+            serve_learn_ns: Histogram::new(),
+            serve_predict_ns: Histogram::new(),
+            serve_delta_publish_bytes: Histogram::new(),
+            serve_snapshot_failures_consecutive: Gauge::new(),
+            model_mem_bytes: Gauge::new(),
+            repl_lag_versions: Gauge::new(),
+            repl_lag_learns: Gauge::new(),
+            repl_deltas_applied: Counter::new(),
+            repl_full_resyncs: Counter::new(),
+            split_trace: TraceRing::new(256),
+        }
+    }
+
+    /// Route a split outcome to its per-outcome counter.
+    pub fn count_split_outcome(&self, outcome: SplitOutcome) {
+        match outcome {
+            SplitOutcome::Accepted => self.tree_splits_accepted.inc(),
+            SplitOutcome::TieBroken => self.tree_splits_tie_broken.inc(),
+            SplitOutcome::HoeffdingRejected => self.tree_splits_hoeffding_rejected.inc(),
+            SplitOutcome::NoMerit => self.tree_splits_no_merit.inc(),
+            SplitOutcome::BranchTooSmall => self.tree_splits_branch_too_small.inc(),
+        }
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::new()
+    }
+}
+
+fn write_counter(out: &mut String, name: &str, c: &Counter) {
+    out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+}
+
+fn write_gauge(out: &mut String, name: &str, g: &Gauge) {
+    out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+}
+
+fn write_summary(out: &mut String, name: &str, h: &Histogram) {
+    let s = h.snapshot();
+    out.push_str(&format!("# TYPE {name} summary\n"));
+    for (q, label) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")] {
+        out.push_str(&format!("{name}{{quantile=\"{label}\"}} {}\n", s.quantile(q)));
+    }
+    out.push_str(&format!("{name}_sum {}\n{name}_count {}\n", s.sum, s.count));
+}
+
+/// Prometheus text exposition of one registry.
+pub fn exposition_of(m: &Metrics) -> String {
+    let mut out = String::with_capacity(4096);
+    write_counter(&mut out, "qostream_tree_learns_total", &m.tree_learns);
+    write_summary(&mut out, "qostream_tree_route_depth", &m.tree_route_depth);
+    write_counter(&mut out, "qostream_tree_splits_accepted_total", &m.tree_splits_accepted);
+    write_counter(&mut out, "qostream_tree_splits_tie_broken_total", &m.tree_splits_tie_broken);
+    write_counter(
+        &mut out,
+        "qostream_tree_splits_hoeffding_rejected_total",
+        &m.tree_splits_hoeffding_rejected,
+    );
+    write_counter(&mut out, "qostream_tree_splits_no_merit_total", &m.tree_splits_no_merit);
+    write_counter(
+        &mut out,
+        "qostream_tree_splits_branch_too_small_total",
+        &m.tree_splits_branch_too_small,
+    );
+    write_counter(&mut out, "qostream_qo_inserts_total", &m.qo_inserts);
+    write_summary(&mut out, "qostream_qo_slots_occupied", &m.qo_slots_occupied);
+    write_counter(&mut out, "qostream_backend_batches_total", &m.backend_batches);
+    write_summary(&mut out, "qostream_backend_batch_size", &m.backend_batch_size);
+    write_summary(&mut out, "qostream_backend_latency_ns", &m.backend_latency_ns);
+    write_counter(&mut out, "qostream_forest_warnings_total", &m.forest_warnings);
+    write_counter(&mut out, "qostream_forest_drifts_total", &m.forest_drifts);
+    write_counter(&mut out, "qostream_forest_bg_promotions_total", &m.forest_bg_promotions);
+    write_summary(&mut out, "qostream_serve_learn_ns", &m.serve_learn_ns);
+    write_summary(&mut out, "qostream_serve_predict_ns", &m.serve_predict_ns);
+    write_summary(&mut out, "qostream_serve_delta_publish_bytes", &m.serve_delta_publish_bytes);
+    write_gauge(
+        &mut out,
+        "qostream_serve_snapshot_failures_consecutive",
+        &m.serve_snapshot_failures_consecutive,
+    );
+    write_gauge(&mut out, "qostream_model_mem_bytes", &m.model_mem_bytes);
+    write_gauge(&mut out, "qostream_repl_lag_versions", &m.repl_lag_versions);
+    write_gauge(&mut out, "qostream_repl_lag_learns", &m.repl_lag_learns);
+    write_counter(&mut out, "qostream_repl_deltas_applied_total", &m.repl_deltas_applied);
+    write_counter(&mut out, "qostream_repl_full_resyncs_total", &m.repl_full_resyncs);
+    write_counter(
+        &mut out,
+        "qostream_tree_split_attempts_total",
+        // the ring's total is the attempts counter; expose it as one
+        &trace_total_counter(&m.split_trace),
+    );
+    out
+}
+
+fn trace_total_counter(ring: &TraceRing) -> Counter {
+    let c = Counter::new();
+    c.add(ring.total());
+    c
+}
+
+/// Prometheus text exposition of the global registry (the serve
+/// protocol's `metrics` command).
+pub fn exposition() -> String {
+    exposition_of(global())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::common::proptest::check;
+
+    #[test]
+    fn bucket_index_is_monotone_and_bounds_hold() {
+        // every value lands in a bucket whose bounds contain it, and the
+        // index is monotone in the value
+        let probes = [
+            0u64,
+            1,
+            2,
+            3,
+            4,
+            7,
+            8,
+            1023,
+            1024,
+            u32::MAX as u64,
+            u64::MAX / 2,
+            u64::MAX,
+        ];
+        let mut last = 0usize;
+        for &v in &probes {
+            let i = bucket_index(v);
+            assert!(i < N_BUCKETS);
+            assert!(i >= last, "index not monotone at {v}");
+            last = i;
+            let lo = if i == 0 { 0 } else { bucket_upper_bound(i - 1).saturating_add(1) };
+            assert!(v >= lo && v <= bucket_upper_bound(i), "v={v} outside bucket {i}");
+        }
+    }
+
+    #[test]
+    fn prop_merge_equals_pooled_recording() {
+        check("histogram-merge-pooled", 0x0B5E, 50, |rng| {
+            let (a, b, pooled) = (Histogram::new(), Histogram::new(), Histogram::new());
+            for _ in 0..rng.below(200) {
+                let v = rng.below(1 << rng.below(40));
+                a.record(v);
+                pooled.record(v);
+            }
+            for _ in 0..rng.below(200) {
+                let v = rng.below(1 << rng.below(40));
+                b.record(v);
+                pooled.record(v);
+            }
+            let merged = a.snapshot().merge(&b.snapshot());
+            if merged != pooled.snapshot() {
+                return Err("merge != pooled".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_quantile_bounds() {
+        // the quantile estimate never under-reports the true quantile
+        // and over-reports by strictly less than 2x (one bucket width)
+        check("histogram-quantile-bounds", 0x0B5F, 50, |rng| {
+            let h = Histogram::new();
+            let n = 1 + rng.below(300) as usize;
+            let mut values: Vec<u64> = (0..n).map(|_| rng.below(1 << rng.below(32))).collect();
+            for &v in &values {
+                h.record(v);
+            }
+            values.sort_unstable();
+            let s = h.snapshot();
+            for q in [0.5, 0.9, 0.99] {
+                let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+                let truth = values[rank - 1];
+                let est = s.quantile(q);
+                if est < truth {
+                    return Err(format!("q{q}: est {est} < true {truth}"));
+                }
+                if truth > 0 && est >= truth.saturating_mul(2) {
+                    return Err(format!("q{q}: est {est} >= 2x true {truth}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantiles_on_empty_and_single_sample() {
+        let h = Histogram::new();
+        assert_eq!(h.snapshot().quantile(0.5), 0);
+        h.record(100);
+        let s = h.snapshot();
+        assert_eq!(s.count, 1);
+        assert_eq!(s.sum, 100);
+        // 100 lives in [64, 127]
+        assert_eq!(s.quantile(0.5), 127);
+        assert_eq!(s.quantile(0.99), 127);
+        assert!((s.mean() - 100.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_ring_bounds_and_counts() {
+        let ring = TraceRing::new(4);
+        for i in 0..10u64 {
+            ring.record(SplitEvent {
+                outcome: if i % 2 == 0 {
+                    SplitOutcome::Accepted
+                } else {
+                    SplitOutcome::HoeffdingRejected
+                },
+                merit_gap: i as f64,
+                slots_evaluated: i,
+                elapsed_ns: i * 100,
+            });
+        }
+        assert_eq!(ring.total(), 10);
+        let events = ring.events();
+        assert_eq!(events.len(), 4, "ring must stay bounded");
+        // oldest-first: the survivors are attempts 6..=9
+        assert_eq!(events[0].slots_evaluated, 6);
+        assert_eq!(events[3].slots_evaluated, 9);
+        assert!(events[0].outcome.split());
+        assert!(!events[1].outcome.split());
+    }
+
+    #[test]
+    fn outcome_labels_are_stable() {
+        // the wire format of trace_splits depends on these strings
+        assert_eq!(SplitOutcome::Accepted.label(), "accepted");
+        assert_eq!(SplitOutcome::TieBroken.label(), "tie_broken");
+        assert_eq!(SplitOutcome::HoeffdingRejected.label(), "hoeffding_rejected");
+        assert_eq!(SplitOutcome::NoMerit.label(), "no_merit");
+        assert_eq!(SplitOutcome::BranchTooSmall.label(), "branch_too_small");
+    }
+
+    #[test]
+    fn exposition_golden() {
+        // a local registry with known values renders the exact text the
+        // `metrics` command promises (naming scheme + summary shape)
+        let m = Metrics::new();
+        m.tree_learns.add(42);
+        m.tree_route_depth.record(3);
+        m.tree_route_depth.record(3);
+        m.count_split_outcome(SplitOutcome::Accepted);
+        m.count_split_outcome(SplitOutcome::TieBroken);
+        m.count_split_outcome(SplitOutcome::HoeffdingRejected);
+        m.model_mem_bytes.set(4096);
+        let text = exposition_of(&m);
+        for needle in [
+            "# TYPE qostream_tree_learns_total counter\nqostream_tree_learns_total 42\n",
+            "# TYPE qostream_tree_route_depth summary\n\
+             qostream_tree_route_depth{quantile=\"0.5\"} 3\n\
+             qostream_tree_route_depth{quantile=\"0.9\"} 3\n\
+             qostream_tree_route_depth{quantile=\"0.99\"} 3\n\
+             qostream_tree_route_depth_sum 6\nqostream_tree_route_depth_count 2\n",
+            "qostream_tree_splits_accepted_total 1\n",
+            "qostream_tree_splits_tie_broken_total 1\n",
+            "qostream_tree_splits_hoeffding_rejected_total 1\n",
+            "# TYPE qostream_model_mem_bytes gauge\nqostream_model_mem_bytes 4096\n",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // the acceptance criterion: >= 15 distinct series families
+        let families = text.matches("# TYPE ").count();
+        assert!(families >= 15, "only {families} series families:\n{text}");
+        // every family follows the naming scheme
+        for line in text.lines().filter(|l| l.starts_with("# TYPE ")) {
+            let name = line.split_whitespace().nth(2).unwrap();
+            assert!(name.starts_with("qostream_"), "bad metric name {name}");
+        }
+    }
+
+    #[test]
+    fn disabled_registry_yields_no_global_handle() {
+        // m() is the gate: when disabled it returns None and recording
+        // sites skip all work. The lock keeps the overhead bench (which
+        // also flips the global switch) from interleaving.
+        let _toggling = toggle_lock();
+        disable();
+        assert!(m().is_none());
+        enable();
+        assert!(m().is_some());
+        // leave it enabled: instrumentation is side-effect-free for
+        // model behavior, and other tests may be recording concurrently
+    }
+}

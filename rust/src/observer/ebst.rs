@@ -202,6 +202,10 @@ impl AttributeObserver for EBst {
         self.arena.len()
     }
 
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<EBst>() + self.arena.capacity() * std::mem::size_of::<Node>()
+    }
+
     fn name(&self) -> String {
         "E-BST".to_string()
     }
@@ -289,6 +293,11 @@ impl AttributeObserver for TruncatedEBst {
 
     fn n_elements(&self) -> usize {
         self.inner.n_elements()
+    }
+
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<TruncatedEBst>() - std::mem::size_of::<EBst>()
+            + self.inner.mem_bytes()
     }
 
     fn name(&self) -> String {

@@ -104,6 +104,11 @@ impl AttributeObserver for ExhaustiveObserver {
         self.points.len()
     }
 
+    fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<ExhaustiveObserver>()
+            + self.points.capacity() * std::mem::size_of::<(f64, f64, f64)>()
+    }
+
     fn name(&self) -> String {
         "Exhaustive".to_string()
     }

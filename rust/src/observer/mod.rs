@@ -65,6 +65,15 @@ pub trait AttributeObserver: Send + Sync {
     /// Observer name for reports.
     fn name(&self) -> String;
 
+    /// Resident heap footprint in bytes (capacity-based, so it reflects
+    /// allocations, not just live elements). The default `0` keeps custom
+    /// observers compiling; built-in observers override it so
+    /// [`crate::obs`]'s `model_mem_bytes` gauge and the `stats` response
+    /// can report real model size.
+    fn mem_bytes(&self) -> usize {
+        0
+    }
+
     /// Total target statistics seen by this observer.
     fn total(&self) -> VarStats;
 

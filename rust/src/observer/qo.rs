@@ -124,6 +124,9 @@ impl QuantizationObserver {
     #[inline]
     fn insert_hashed(&mut self, r: f64, x: f64, y: f64, w: f64) {
         self.slots.entry(Self::code(x, r)).or_default().observe(x, y, w);
+        if let Some(m) = crate::obs::m() {
+            m.qo_inserts.inc();
+        }
     }
 
     /// Merge a pre-aggregated slot into the hash. Used by the bulk XLA
@@ -270,6 +273,9 @@ impl AttributeObserver for QuantizationObserver {
             return self.best_split_buffered(criterion);
         }
         let slots = self.sorted_slots();
+        if let Some(m) = crate::obs::m() {
+            m.qo_slots_occupied.record(slots.len() as u64);
+        }
         if slots.len() < 2 {
             return None;
         }
@@ -307,6 +313,14 @@ impl AttributeObserver for QuantizationObserver {
         } else {
             self.slots.len()
         }
+    }
+
+    fn mem_bytes(&self) -> usize {
+        // hash table: each bucket holds a (code, Slot) pair plus ~1 byte
+        // of control metadata in the std SwissTable layout
+        std::mem::size_of::<QuantizationObserver>()
+            + self.slots.capacity() * (std::mem::size_of::<(i64, Slot)>() + 1)
+            + self.state.buffered() * std::mem::size_of::<(f64, f64, f64)>()
     }
 
     fn name(&self) -> String {

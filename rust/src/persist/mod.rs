@@ -159,6 +159,18 @@ impl Model {
         Model::from_text(&self.to_text()?)
     }
 
+    /// Resident heap footprint of the model in bytes (capacity-based:
+    /// node arenas, observer slot tables/arenas, leaf linear models).
+    /// Surfaced as the `qostream_model_mem_bytes` gauge and in the serve
+    /// `stats` response — the precursor to memory-governed serving.
+    pub fn mem_bytes(&self) -> usize {
+        match self {
+            Model::Tree(t) => t.mem_bytes(),
+            Model::Arf(f) => f.mem_bytes(),
+            Model::Bagging(b) => b.mem_bytes(),
+        }
+    }
+
     /// Instances absorbed since the last [`Model::mark_synced`]. The
     /// serve layer's publisher marks the model synced on every real
     /// publication and uses a zero here as proof that the replication

@@ -119,6 +119,27 @@ impl ServeClient {
         self.request(&req)
     }
 
+    /// Prometheus text exposition of the server's metrics registry
+    /// ([`crate::obs`]). Works on leaders and followers.
+    pub fn metrics(&mut self) -> Result<String> {
+        let mut req = Json::obj();
+        req.set("cmd", "metrics");
+        let response = self.request(&req)?;
+        response
+            .get("text")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| anyhow!("response missing \"text\""))
+    }
+
+    /// Recent split-attempt trace events plus the lifetime attempt count
+    /// (the [`crate::obs`] trace ring). Works on leaders and followers.
+    pub fn trace_splits(&mut self) -> Result<Json> {
+        let mut req = Json::obj();
+        req.set("cmd", "trace_splits");
+        self.request(&req)
+    }
+
     /// Stop the server (its [`super::Server::join`] then returns).
     pub fn shutdown(&mut self) -> Result<()> {
         let mut req = Json::obj();

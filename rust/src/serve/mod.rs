@@ -32,6 +32,8 @@
 //! | `{"cmd":"snapshot"}` | `{"ok":true,"checkpoint":{…},"version":…}` (a [`crate::persist`] document) |
 //! | `{"cmd":"stats"}` | `{"ok":true,"model":…,"learns_applied":…,"snapshot_version":…,"snapshot_age_learns":…,…}` |
 //! | `{"cmd":"repl_sync","have":…}` | `{"ok":true,"version":…,"hash":…,` one of `"up_to_date"/"deltas"/"full"}` |
+//! | `{"cmd":"metrics"}` | `{"ok":true,"format":"prometheus","text":"…"}` ([`crate::obs`] exposition) |
+//! | `{"cmd":"trace_splits"}` | `{"ok":true,"total":…,"capacity":…,"events":[{"outcome":…,"merit_gap":…,"slots_evaluated":…,"elapsed_ns":…},…]}` |
 //! | `{"cmd":"shutdown"}` | `{"ok":true}`, then the server stops |
 //!
 //! Malformed lines, unknown commands, dimension mismatches and

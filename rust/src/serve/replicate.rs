@@ -66,8 +66,8 @@ use crate::persist::Model;
 
 use super::client::ServeClient;
 use super::server::{
-    current_snapshot, drive_connection, error_response, lock_poisoned, ok_response,
-    parse_x,
+    current_snapshot, drive_connection, error_response, lock_poisoned, metrics_response,
+    ok_response, parse_x, trace_splits_response,
 };
 
 /// Follower tuning knobs.
@@ -105,6 +105,19 @@ struct FollowerShared {
     doc_hash: AtomicU64,
     /// The head version the leader reported on the last successful poll.
     leader_version: AtomicU64,
+    /// The leader's total applied-learn count, as reported on the last
+    /// successful poll (`leader_learns_applied` in the `repl_sync`
+    /// response).
+    leader_learns: AtomicU64,
+    /// The leader's applied-learn count at the moment it published the
+    /// version this replica currently serves — recorded when the replica
+    /// reaches the leader's head. `leader_learns − learns_at_version` is
+    /// the replica's staleness in learns.
+    learns_at_version: AtomicU64,
+    /// Why the replica last fell back to a full resync (or "bootstrap"
+    /// for the initial sync) — the apply error verbatim, so divergence is
+    /// diagnosable from one `stats` call.
+    last_resync_cause: Mutex<String>,
     deltas_applied: AtomicU64,
     full_resyncs: AtomicU64,
     polls: AtomicU64,
@@ -147,6 +160,18 @@ fn install(shared: &FollowerShared, version: u64, hash: u64, doc: Json, model: M
 fn apply_sync(shared: &FollowerShared, response: &Json) -> Result<()> {
     let leader_version = pu64(field(response, "version")?, "version")?;
     shared.leader_version.store(leader_version, Ordering::Relaxed);
+    // leader-head progress markers (absent when talking to an older
+    // leader): how many learns the leader has applied in total, and how
+    // many it had applied at its head publication
+    let leader_learns = response
+        .get("leader_learns_applied")
+        .and_then(|j| pu64(j, "leader_learns_applied").ok());
+    let learns_at_head = response
+        .get("leader_learns_at_head")
+        .and_then(|j| pu64(j, "leader_learns_at_head").ok());
+    if let Some(n) = leader_learns {
+        shared.leader_learns.store(n, Ordering::Relaxed);
+    }
     if response.get("up_to_date").is_some() {
         // same version number is not enough: the head hash must match our
         // mirrored document, else we diverged (e.g. the leader restarted
@@ -155,6 +180,7 @@ fn apply_sync(shared: &FollowerShared, response: &Json) -> Result<()> {
         if head_hash != shared.doc_hash.load(Ordering::SeqCst) {
             return Err(anyhow!("up_to_date but head hash differs — replica diverged"));
         }
+        note_at_head(shared, learns_at_head);
         return Ok(());
     }
     if let Some(full) = response.get("full") {
@@ -165,6 +191,10 @@ fn apply_sync(shared: &FollowerShared, response: &Json) -> Result<()> {
         let model = Model::from_checkpoint(full)?;
         install(shared, leader_version, hash, full.clone(), model);
         shared.full_resyncs.fetch_add(1, Ordering::Relaxed);
+        if let Some(m) = crate::obs::m() {
+            m.repl_full_resyncs.inc();
+        }
+        note_at_head(shared, learns_at_head);
         return Ok(());
     }
     if let Some(deltas) = response.get("deltas").and_then(Json::as_arr) {
@@ -188,11 +218,53 @@ fn apply_sync(shared: &FollowerShared, response: &Json) -> Result<()> {
                 .map_err(|e| e.context(format!("decoding v{to}")))?;
             install(shared, to, hash, doc.clone(), model);
             shared.deltas_applied.fetch_add(1, Ordering::Relaxed);
+            if let Some(m) = crate::obs::m() {
+                m.repl_deltas_applied.inc();
+            }
             version = to;
+        }
+        if version == leader_version {
+            note_at_head(shared, learns_at_head);
         }
         return Ok(());
     }
     Err(anyhow!("malformed repl_sync response (no up_to_date/full/deltas)"))
+}
+
+/// The replica just reached the leader's head version: pin the leader's
+/// applied-learn count at that publication, and refresh the lag gauges.
+fn note_at_head(shared: &FollowerShared, learns_at_head: Option<u64>) {
+    if let Some(n) = learns_at_head {
+        shared.learns_at_version.store(n, Ordering::Relaxed);
+    }
+    refresh_lag_gauges(shared);
+}
+
+/// Mirror the replica's staleness (versions + learns behind the leader
+/// head) into the metrics registry.
+fn refresh_lag_gauges(shared: &FollowerShared) {
+    if let Some(m) = crate::obs::m() {
+        m.repl_lag_versions.set(staleness_versions(shared));
+        m.repl_lag_learns.set(staleness_learns(shared));
+    }
+}
+
+/// Versions the replica trails the leader head seen on the last poll.
+fn staleness_versions(shared: &FollowerShared) -> u64 {
+    shared
+        .leader_version
+        .load(Ordering::Relaxed)
+        .saturating_sub(shared.version.load(Ordering::SeqCst))
+}
+
+/// Learns the replica's served model trails the leader's live model: the
+/// leader's total applied count minus its count at the publication this
+/// replica serves. Zero until the leader reports the progress markers.
+fn staleness_learns(shared: &FollowerShared) -> u64 {
+    shared
+        .leader_learns
+        .load(Ordering::Relaxed)
+        .saturating_sub(shared.learns_at_version.load(Ordering::Relaxed))
 }
 
 fn poll_loop(shared: Arc<FollowerShared>, options: FollowerOptions) {
@@ -232,10 +304,14 @@ fn poll_loop(shared: Arc<FollowerShared>, options: FollowerOptions) {
         shared.polls.fetch_add(1, Ordering::Relaxed);
         match apply_sync(&shared, &response) {
             Ok(()) => force_full = false,
-            Err(_) => {
-                // divergence/corruption: next poll requests a full resync
+            Err(e) => {
+                // divergence/corruption: next poll requests a full resync,
+                // and the verbatim apply error becomes the diagnosable
+                // last-resync-cause in `stats`
+                *lock_poisoned(&shared.last_resync_cause) = e.to_string();
                 shared.poll_errors.fetch_add(1, Ordering::Relaxed);
                 force_full = true;
+                refresh_lag_gauges(&shared);
             }
         }
     }
@@ -278,6 +354,9 @@ impl Follower {
             .with_context(|| format!("binding {bind_addr}"))?;
         let addr = listener.local_addr().context("reading bound address")?;
 
+        // a follower is a production serving process too: light up the
+        // registry so `metrics` answers from it like on the leader
+        crate::obs::enable();
         let shared = Arc::new(FollowerShared {
             doc: Mutex::new((version, full.clone())),
             name: model.name(),
@@ -287,6 +366,9 @@ impl Follower {
             version: AtomicU64::new(version),
             doc_hash: AtomicU64::new(hash),
             leader_version: AtomicU64::new(version),
+            leader_learns: AtomicU64::new(0),
+            learns_at_version: AtomicU64::new(0),
+            last_resync_cause: Mutex::new("bootstrap".to_string()),
             deltas_applied: AtomicU64::new(0),
             full_resyncs: AtomicU64::new(0),
             polls: AtomicU64::new(0),
@@ -421,6 +503,12 @@ fn respond_replica(line: &str, shared: &FollowerShared) -> (Json, bool) {
                 .set("snapshot_version", ju64(version))
                 .set("leader_version_seen", ju64(leader_version))
                 .set("staleness_versions", leader_version.saturating_sub(version))
+                .set("staleness_learns", staleness_learns(shared))
+                .set(
+                    "last_resync_cause",
+                    lock_poisoned(&shared.last_resync_cause).as_str(),
+                )
+                .set("mem_bytes", current_snapshot(&shared.snapshot).mem_bytes())
                 .set("deltas_applied", shared.deltas_applied.load(Ordering::Relaxed))
                 .set("full_resyncs", shared.full_resyncs.load(Ordering::Relaxed))
                 .set("polls", shared.polls.load(Ordering::Relaxed))
@@ -430,6 +518,8 @@ fn respond_replica(line: &str, shared: &FollowerShared) -> (Json, bool) {
                 .set("uptime_ms", shared.started.elapsed().as_millis() as u64);
             (o, false)
         }
+        "metrics" => (metrics_response(), false),
+        "trace_splits" => (trace_splits_response(), false),
         "learn" => (
             error_response("read-only follower: send learns to the leader"),
             false,

@@ -88,12 +88,27 @@ struct ServerStats {
     predicts: AtomicU64,
     snapshots: AtomicU64,
     snapshot_failures: AtomicU64,
+    /// Snapshot failures since the last successful publication — a run of
+    /// these means reads serve an ever-staler model, so it is surfaced as
+    /// a gauge (resets to 0 on success) rather than only the lifetime
+    /// total above.
+    snapshot_failures_consecutive: AtomicU64,
     connections: AtomicU64,
     /// Version of the last published snapshot ([`DeltaLog::version`]).
     snapshot_version: AtomicU64,
     /// `learns_applied` at the moment of the last publication — the
     /// difference to the live counter is the snapshot's age in learns.
     learns_at_snapshot: AtomicU64,
+}
+
+/// Record a failed snapshot publication (lifetime total + consecutive
+/// run, mirrored to the metrics registry when enabled).
+fn note_snapshot_failure(stats: &ServerStats) {
+    stats.snapshot_failures.fetch_add(1, Ordering::Relaxed);
+    let run = stats.snapshot_failures_consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+    if let Some(m) = crate::obs::m() {
+        m.serve_snapshot_failures_consecutive.set(run);
+    }
 }
 
 /// Immutable facts captured before the model moves into the trainer.
@@ -153,13 +168,30 @@ fn publish_snapshot(
             *guard = shared;
         }
     }
-    let version = lock_poisoned(replication).publish(doc.clone()).0;
+    let (version, delta_bytes) = {
+        let mut log = lock_poisoned(replication);
+        let (version, changed) = log.publish(doc.clone());
+        let delta_bytes = if changed {
+            log.entries().last().map(|e| e.delta_bytes)
+        } else {
+            None
+        };
+        (version, delta_bytes)
+    };
     model.mark_synced();
     stats.snapshot_version.store(version, Ordering::Relaxed);
     stats
         .learns_at_snapshot
         .store(stats.learns_applied.load(Ordering::Relaxed), Ordering::Relaxed);
     stats.snapshots.fetch_add(1, Ordering::Relaxed);
+    stats.snapshot_failures_consecutive.store(0, Ordering::Relaxed);
+    if let Some(m) = crate::obs::m() {
+        m.serve_snapshot_failures_consecutive.set(0);
+        m.model_mem_bytes.set(model.mem_bytes() as u64);
+        if let Some(bytes) = delta_bytes {
+            m.serve_delta_publish_bytes.record(bytes as u64);
+        }
+    }
     Ok((doc, version))
 }
 
@@ -219,6 +251,9 @@ impl Server {
                 "--shards needs an ensemble model (members shard; a single tree cannot)"
             ));
         }
+        // serving is the production path: turn the metrics registry on so
+        // every obs::m() gate in the tree/forest/persist layers goes live
+        crate::obs::enable();
         let listener = TcpListener::bind(bind_addr)
             .with_context(|| format!("binding {bind_addr}"))?;
         let addr = listener.local_addr().context("reading bound address")?;
@@ -296,7 +331,7 @@ impl Server {
                                 )
                                 .is_err()
                             {
-                                stats.snapshot_failures.fetch_add(1, Ordering::Relaxed);
+                                note_snapshot_failure(&stats);
                             }
                         }
                         TrainerMsg::Snapshot(reply) => {
@@ -307,7 +342,7 @@ impl Server {
                                 &replication,
                             );
                             if out.is_err() {
-                                stats.snapshot_failures.fetch_add(1, Ordering::Relaxed);
+                                note_snapshot_failure(&stats);
                             }
                             // a dropped reply just means the client left
                             reply.send(out).ok();
@@ -461,6 +496,38 @@ pub(crate) fn ok_response() -> Json {
     o
 }
 
+/// Answer the `metrics` command: the full Prometheus text exposition of
+/// the process-wide registry. Shared by leader and follower connections.
+pub(crate) fn metrics_response() -> Json {
+    let mut o = ok_response();
+    o.set("format", "prometheus").set("text", crate::obs::exposition());
+    o
+}
+
+/// Answer the `trace_splits` command: the bounded ring of recent split
+/// attempts (outcome, merit gap, slots evaluated, elapsed ns) plus the
+/// lifetime attempt count. Shared by leader and follower connections.
+pub(crate) fn trace_splits_response() -> Json {
+    let ring = &crate::obs::global().split_trace;
+    let events: Vec<Json> = ring
+        .events()
+        .into_iter()
+        .map(|e| {
+            let mut o = Json::obj();
+            o.set("outcome", e.outcome.label())
+                .set("merit_gap", e.merit_gap)
+                .set("slots_evaluated", e.slots_evaluated)
+                .set("elapsed_ns", e.elapsed_ns);
+            o
+        })
+        .collect();
+    let mut o = ok_response();
+    o.set("total", ring.total())
+        .set("capacity", ring.capacity())
+        .set("events", Json::Arr(events));
+    o
+}
+
 /// Extract and validate one feature vector.
 pub(crate) fn parse_x(j: Option<&Json>, n_features: usize) -> Result<Vec<f64>, String> {
     let arr = j
@@ -499,6 +566,7 @@ fn respond(
     };
     match cmd {
         "learn" => {
+            let started = crate::obs::m().map(|_| Instant::now());
             let x = match parse_x(request.get("x"), info.n_features) {
                 Ok(x) => x,
                 Err(e) => return (error_response(&e), false),
@@ -514,9 +582,15 @@ fn respond(
                 return (error_response("trainer is shut down"), false);
             }
             stats.learns_enqueued.fetch_add(1, Ordering::Relaxed);
+            if let (Some(m), Some(t)) = (crate::obs::m(), started) {
+                // enqueue latency: includes the backpressure wait, which is
+                // exactly what a saturated trainer looks like to clients
+                m.serve_learn_ns.record(t.elapsed().as_nanos() as u64);
+            }
             (ok_response(), false)
         }
         "predict" => {
+            let started = crate::obs::m().map(|_| Instant::now());
             let x = match parse_x(request.get("x"), info.n_features) {
                 Ok(x) => x,
                 Err(e) => return (error_response(&e), false),
@@ -525,6 +599,9 @@ fn respond(
             stats.predicts.fetch_add(1, Ordering::Relaxed);
             let mut o = ok_response();
             o.set("prediction", model.predict(&x));
+            if let (Some(m), Some(t)) = (crate::obs::m(), started) {
+                m.serve_predict_ns.record(t.elapsed().as_nanos() as u64);
+            }
             (o, false)
         }
         "predict_batch" => {
@@ -578,6 +655,14 @@ fn respond(
             // a bootstrapping follower never stalls the publish path
             let mut o = ok_response();
             payload.into_response(&mut o);
+            // leader-head progress markers: the follower derives its lag
+            // in learns from these (see `super::replicate`) — how many
+            // instances the leader has applied in total, and how many it
+            // had applied when the head version was published
+            let leader_applied = stats.learns_applied.load(Ordering::Relaxed);
+            let leader_at_head = stats.learns_at_snapshot.load(Ordering::Relaxed);
+            o.set("leader_learns_applied", ju64(leader_applied));
+            o.set("leader_learns_at_head", ju64(leader_at_head));
             (o, false)
         }
         "stats" => {
@@ -599,14 +684,21 @@ fn respond(
                     stats.snapshot_failures.load(Ordering::Relaxed),
                 )
                 .set(
+                    "snapshot_failures_consecutive",
+                    stats.snapshot_failures_consecutive.load(Ordering::Relaxed),
+                )
+                .set(
                     "snapshot_version",
                     ju64(stats.snapshot_version.load(Ordering::Relaxed)),
                 )
                 .set("snapshot_age_learns", applied.saturating_sub(at_snapshot))
+                .set("mem_bytes", current_snapshot(snapshot).mem_bytes())
                 .set("connections", stats.connections.load(Ordering::Relaxed))
                 .set("uptime_ms", info.started.elapsed().as_millis() as u64);
             (o, false)
         }
+        "metrics" => (metrics_response(), false),
+        "trace_splits" => (trace_splits_response(), false),
         "shutdown" => (ok_response(), true),
         other => (error_response(&format!("unknown cmd {other:?}")), false),
     }

@@ -18,6 +18,7 @@ use crate::common::json::Json;
 use crate::common::Rng;
 use crate::criterion::{SdReduction, SplitCriterion, VarianceReduction};
 use crate::eval::Regressor;
+use crate::obs;
 use crate::observer::{AttributeObserver, ObserverFactory, ObserverSpec, SplitSuggestion};
 use crate::persist::codec::{
     field, jf64, jusize, parr, pf64, pstr, pusize, rng_from, rng_to_json,
@@ -137,25 +138,43 @@ impl HoeffdingTreeRegressor {
         }
     }
 
-    /// Split decision per the Hoeffding bound over merit ratios.
-    fn should_split(&self, best: &SplitSuggestion, second_merit: f64, n: f64) -> bool {
+    /// Split decision per the Hoeffding bound over merit ratios,
+    /// classified by outcome (`split()` says whether to materialize; the
+    /// full verdict feeds the [`obs`] split-decision trace).
+    fn split_verdict(
+        &self,
+        best: &SplitSuggestion,
+        second_merit: f64,
+        n: f64,
+    ) -> obs::SplitOutcome {
+        use obs::SplitOutcome as O;
         if best.merit <= 0.0 {
-            return false;
+            return O::NoMerit;
         }
         // reject degenerate partitions
         let total_n = best.left.n + best.right.n;
         let min_branch = self.options.min_branch_frac * total_n;
         if best.left.n < min_branch || best.right.n < min_branch {
-            return false;
+            return O::BranchTooSmall;
         }
         let eps = self.options.hoeffding_bound(n);
         if second_merit <= 0.0 {
             // single (or uniquely positive) candidate: require the bound
             // to have tightened enough that ties would be declared
-            return eps < self.options.tie_threshold;
+            return if eps < self.options.tie_threshold {
+                O::TieBroken
+            } else {
+                O::HoeffdingRejected
+            };
         }
         let ratio = second_merit / best.merit;
-        ratio < 1.0 - eps || eps < self.options.tie_threshold
+        if ratio < 1.0 - eps {
+            O::Accepted
+        } else if eps < self.options.tie_threshold {
+            O::TieBroken
+        } else {
+            O::HoeffdingRejected
+        }
     }
 
     /// Evaluate a due leaf's candidates — through the configured backend
@@ -190,7 +209,16 @@ impl HoeffdingTreeRegressor {
                     criterion: self.criterion.as_ref(),
                 })
                 .collect();
-            backend.best_splits(&queries)
+            let started = obs::m().map(|_| std::time::Instant::now());
+            let results = backend.best_splits(&queries);
+            if let Some(m) = obs::m() {
+                m.backend_batches.inc();
+                m.backend_batch_size.record(queries.len() as u64);
+                if let Some(t) = started {
+                    m.backend_latency_ns.record(t.elapsed().as_nanos() as u64);
+                }
+            }
+            results
         };
         self.resolve_attempt(leaf_idx, &suggestions);
     }
@@ -202,7 +230,8 @@ impl HoeffdingTreeRegressor {
     /// if the Hoeffding bound allows. No-op when the node is no longer an
     /// active leaf.
     pub fn resolve_attempt(&mut self, leaf_idx: u32, suggestions: &[Option<SplitSuggestion>]) {
-        let (best, second_merit, n, depth) = {
+        let started = obs::m().map(|_| std::time::Instant::now());
+        let (best, second_merit, n, depth, slots_evaluated) = {
             let Node::Leaf(leaf) = &self.nodes[leaf_idx as usize] else { return };
             if !leaf.is_active() {
                 return;
@@ -231,10 +260,21 @@ impl HoeffdingTreeRegressor {
                 second,
                 leaf.stats.n,
                 leaf.depth,
+                leaf.n_elements() as u64,
             )
         };
         let (feature, suggestion) = best;
-        if !self.should_split(&suggestion, second_merit, n) {
+        let verdict = self.split_verdict(&suggestion, second_merit, n);
+        if let Some(m) = obs::m() {
+            m.count_split_outcome(verdict);
+            m.split_trace.record(obs::SplitEvent {
+                outcome: verdict,
+                merit_gap: suggestion.merit - second_merit,
+                slots_evaluated,
+                elapsed_ns: started.map(|t| t.elapsed().as_nanos() as u64).unwrap_or(0),
+            });
+        }
+        if !verdict.split() {
             return;
         }
 
@@ -280,6 +320,10 @@ impl HoeffdingTreeRegressor {
         let leaf_idx = self.route(x);
         let Node::Leaf(leaf) = &mut self.nodes[leaf_idx as usize] else { unreachable!() };
         leaf.learn(x, y, 1.0);
+        if let Some(m) = obs::m() {
+            m.tree_learns.inc();
+            m.tree_route_depth.record(leaf.depth as u64);
+        }
         if leaf.weight_since_attempt >= self.options.grace_period as f64 {
             leaf.weight_since_attempt = 0.0;
             Some(leaf_idx)
@@ -539,6 +583,21 @@ impl HoeffdingTreeRegressor {
                 _ => 0,
             })
             .sum()
+    }
+
+    /// Approximate resident bytes: the node arena plus every leaf's
+    /// observers, monitored list and linear model (capacity-based, so it
+    /// tracks what the allocator actually holds).
+    pub fn mem_bytes(&self) -> usize {
+        let mut bytes = std::mem::size_of::<Self>()
+            + self.nodes.capacity() * std::mem::size_of::<Node>()
+            + self.pending.capacity() * std::mem::size_of::<u32>();
+        for node in &self.nodes {
+            if let Node::Leaf(leaf) = node {
+                bytes += leaf.mem_bytes();
+            }
+        }
+        bytes
     }
 }
 

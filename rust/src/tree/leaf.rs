@@ -212,6 +212,26 @@ impl LeafState {
         })
     }
 
+    /// Resident heap footprint in bytes: the leaf struct, each observer's
+    /// allocations, the monitored-feature list and the linear model. Used
+    /// by [`crate::obs`]'s `model_mem_bytes` gauge (the byte-level
+    /// companion of [`LeafState::n_elements`]).
+    pub fn mem_bytes(&self) -> usize {
+        let observers = self
+            .observers
+            .as_ref()
+            .map(|obs| {
+                obs.iter()
+                    .map(|o| std::mem::size_of::<Box<dyn AttributeObserver>>() + o.mem_bytes())
+                    .sum::<usize>()
+            })
+            .unwrap_or(0);
+        std::mem::size_of::<LeafState>()
+            + observers
+            + self.monitored.capacity() * std::mem::size_of::<usize>()
+            + self.linear.mem_bytes()
+    }
+
     /// Total stored elements across this leaf's observers (the paper's
     /// memory metric).
     pub fn n_elements(&self) -> usize {

@@ -305,3 +305,74 @@ fn follower_rejects_learns_but_serves_reads() {
     leader_client.shutdown().expect("leader shutdown");
     server.join().expect("leader exit");
 }
+
+/// Observability on the replica: follower `stats` reports leader-head
+/// staleness in learns and the last resync cause, and the `metrics` /
+/// `trace_splits` commands round-trip over the follower's socket exactly
+/// like the leader's.
+#[test]
+fn follower_metrics_trace_and_staleness_round_trip() {
+    let server = Server::start(
+        Model::Arf(arf(2, 13)),
+        "127.0.0.1:0",
+        ServeOptions { snapshot_every: 0, ..Default::default() },
+    )
+    .expect("leader");
+    let follower = Follower::start(
+        &server.addr().to_string(),
+        "127.0.0.1:0",
+        FollowerOptions { poll_interval: Duration::from_millis(3), ..Default::default() },
+    )
+    .expect("follower");
+
+    let mut client = ServeClient::connect(server.addr()).expect("leader client");
+    let mut stream = Friedman1::new(17, 1.0);
+    for _ in 0..400 {
+        let inst = stream.next_instance().unwrap();
+        client.learn(&inst.x, inst.y).expect("learn");
+    }
+    client.snapshot().expect("publish v1");
+    wait_version(&follower, 1);
+
+    let mut follower_client = ServeClient::connect(follower.addr()).expect("replica client");
+    // staleness: the follower is at the head and no learns arrived after
+    // the publish, so it trails the leader by exactly zero learns
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let lag = follower_stat(&mut follower_client, "staleness_learns");
+        if lag == 0.0 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "staleness_learns stuck at {lag}");
+        std::thread::sleep(Duration::from_millis(3));
+    }
+    let stats = follower_client.stats().expect("stats");
+    let cause = stats
+        .get("last_resync_cause")
+        .and_then(Json::as_str)
+        .expect("stats must report last_resync_cause");
+    assert!(!cause.is_empty());
+    assert!(
+        follower_stat(&mut follower_client, "mem_bytes") > 0.0,
+        "replica must report its model's resident bytes"
+    );
+
+    // the metrics/trace commands answer on the replica socket too
+    let text = follower_client.metrics().expect("metrics");
+    let families = text.lines().filter(|l| l.starts_with("# TYPE qostream_")).count();
+    assert!(families >= 15, "expected >= 15 series, got {families}:\n{text}");
+    for series in ["qostream_repl_lag_learns", "qostream_repl_deltas_applied_total"] {
+        assert!(text.contains(series), "exposition missing {series}:\n{text}");
+    }
+    let trace = follower_client.trace_splits().expect("trace_splits");
+    assert!(
+        trace.get("capacity").and_then(Json::as_f64).unwrap_or(0.0) > 0.0,
+        "{trace:?}"
+    );
+    assert!(trace.get("events").and_then(Json::as_arr).is_some(), "{trace:?}");
+
+    follower_client.shutdown().expect("follower shutdown");
+    follower.join().expect("follower exit");
+    client.shutdown().expect("leader shutdown");
+    server.join().expect("leader exit");
+}

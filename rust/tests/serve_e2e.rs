@@ -205,3 +205,87 @@ fn malformed_requests_get_errors_not_disconnects() {
     client.shutdown().expect("shutdown");
     server.join().expect("clean exit");
 }
+
+/// Observability over the wire: `metrics` returns a Prometheus text
+/// exposition covering the tree/observer/backend/serve/replication
+/// series, and `trace_splits` returns the split-attempt ring — both on a
+/// live leader. Assertions on *values* stay loose: the obs registry is
+/// process-global and other tests in this binary train concurrently.
+#[test]
+fn metrics_and_trace_splits_round_trip() {
+    let server = Server::start(tree_model(), "127.0.0.1:0", ServeOptions::default())
+        .expect("server must start");
+    let mut client = ServeClient::connect(server.addr()).expect("connect");
+    // enough learns to clear the grace period several times over, so
+    // split attempts (and therefore trace events) actually happen
+    let mut stream = Friedman1::new(21, 1.0);
+    for _ in 0..900 {
+        let inst = stream.next_instance().unwrap();
+        client.learn(&inst.x, inst.y).expect("learn ack");
+    }
+    // snapshot drains the trainer FIFO, so every learn above is applied
+    client.snapshot().expect("snapshot");
+
+    let text = client.metrics().expect("metrics");
+    let families: Vec<&str> = text
+        .lines()
+        .filter(|l| l.starts_with("# TYPE qostream_"))
+        .collect();
+    assert!(
+        families.len() >= 15,
+        "exposition must cover >= 15 series, got {}:\n{text}",
+        families.len()
+    );
+    // one representative per instrumented layer
+    for series in [
+        "qostream_tree_learns_total",
+        "qostream_tree_route_depth",
+        "qostream_qo_inserts_total",
+        "qostream_backend_batches_total",
+        "qostream_forest_drifts_total",
+        "qostream_serve_learn_ns",
+        "qostream_model_mem_bytes",
+        "qostream_repl_lag_versions",
+        "qostream_tree_split_attempts_total",
+    ] {
+        assert!(text.contains(series), "exposition missing {series}:\n{text}");
+    }
+    // this server trained 900 instances, so the global learn counter and
+    // the memory gauge must both be live (other tests only add to them)
+    let counter_value = |name: &str| -> f64 {
+        text.lines()
+            .find(|l| l.starts_with(name) && !l.starts_with("# "))
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(0.0)
+    };
+    assert!(counter_value("qostream_tree_learns_total") >= 900.0, "{text}");
+    assert!(counter_value("qostream_model_mem_bytes") > 0.0, "{text}");
+
+    let trace = client.trace_splits().expect("trace_splits");
+    let json = |j: &qostream::common::json::Json, key: &str| -> f64 {
+        j.get(key).and_then(qostream::common::json::Json::as_f64).unwrap_or(-1.0)
+    };
+    assert!(json(&trace, "capacity") > 0.0, "{trace:?}");
+    assert!(json(&trace, "total") >= 1.0, "900 learns must attempt a split: {trace:?}");
+    let events = trace
+        .get("events")
+        .and_then(qostream::common::json::Json::as_arr)
+        .expect("events array");
+    assert!(!events.is_empty(), "ring must hold recent attempts");
+    for event in events {
+        let outcome = event
+            .get("outcome")
+            .and_then(qostream::common::json::Json::as_str)
+            .expect("event outcome");
+        assert!(
+            ["accepted", "tie_broken", "hoeffding_rejected", "no_merit", "branch_too_small"]
+                .contains(&outcome),
+            "unknown outcome {outcome}"
+        );
+        assert!(json(event, "elapsed_ns") >= 0.0);
+        assert!(json(event, "slots_evaluated") >= 0.0);
+    }
+    client.shutdown().expect("shutdown");
+    server.join().expect("clean exit");
+}
