@@ -9,6 +9,8 @@
 //! 3. **Insertion-cost crossover** — observe-time per element for QO
 //!    (O(1)) vs E-BST (O(log n)) as the sample grows.
 
+#![forbid(unsafe_code)]
+
 use qostream::common::table::{fnum, Table};
 use qostream::common::timing::human_time;
 use qostream::common::Rng;

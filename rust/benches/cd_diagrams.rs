@@ -2,6 +2,8 @@
 //! 4, 5 and 6: Friedman tests + Nemenyi critical-difference diagrams over
 //! the protocol grid for merit, elements, observation time and query time.
 
+#![forbid(unsafe_code)]
+
 use qostream::bench_suite::{cd, Profile, Protocol};
 
 fn main() {

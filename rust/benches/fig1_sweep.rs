@@ -3,6 +3,8 @@
 //! the quick profile. Use the CLI (`qostream fig1 --profile standard|full`)
 //! for the larger grids.
 
+#![forbid(unsafe_code)]
+
 use qostream::bench_suite::{fig1, Profile, Protocol};
 
 fn main() {

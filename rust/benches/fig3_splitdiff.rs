@@ -1,6 +1,8 @@
 //! `cargo bench --bench fig3_splitdiff` — regenerates the paper's Figure 3
 //! (average |split − E-BST split| per observer vs sample size).
 
+#![forbid(unsafe_code)]
+
 use qostream::bench_suite::{fig3, Profile, Protocol};
 
 fn main() {

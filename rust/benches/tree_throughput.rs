@@ -6,6 +6,8 @@
 //! split-query backend comparison (per-observer vs batched paths on a
 //! ≥ 10-member forest; bit-identical models, different wall-clock).
 
+#![forbid(unsafe_code)]
+
 use qostream::bench_suite::{forest_bench, tree_bench};
 
 fn main() {

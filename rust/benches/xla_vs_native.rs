@@ -7,6 +7,8 @@
 //!    across slot counts and feature batches (skips with a message when
 //!    `artifacts/` or the runtime is missing).
 
+#![forbid(unsafe_code)]
+
 use qostream::common::timing::{bench, human_time};
 use qostream::common::Rng;
 use qostream::criterion::VarianceReduction;

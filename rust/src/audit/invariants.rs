@@ -1,0 +1,1383 @@
+//! Model-invariant verifier: walks a canonical checkpoint document and
+//! checks every structural invariant in `docs/INVARIANTS.md`.
+//!
+//! The verifier re-checks, *independently of the decoders*, everything
+//! the system's correctness rests on: arena topology (children strictly
+//! after parents — the anti-cycle property `route()` depends on), the
+//! paper's QO slot tables (code-sorted, positive-weight, finite mergeable
+//! `VarStats`, Σ slot mass = column total; PAPER.md Sec. 3–4), E-BST
+//! ordering, leaf linear-model finiteness, the deferred-attempt queue,
+//! delta hash-chain continuity, and `mem_bytes()` self-consistency.
+//! Where a decoder would reject the same corruption, the verifier names
+//! the *rule* instead of just erroring — which is what lets a follower
+//! report "full resync because ARENA_CHILD_ORDER broke at
+//! model.nodes[7]" instead of a bare decode failure.
+//!
+//! Everything here is read-only and allocation-proportional to the
+//! findings; it runs only at boundaries (load / publish / apply) under
+//! `debug_assertions`, from the `qostream audit` CLI, and on the
+//! already-failed rejection path in [`crate::serve::replicate`].
+
+use crate::common::json::Json;
+use crate::persist::delta::{apply, decode_wire_delta, doc_hash, DeltaLog};
+use crate::persist::{Model, FORMAT, VERSION};
+
+use super::Finding;
+
+// ---------------------------------------------------------------------------
+// Rule ids (catalog: docs/INVARIANTS.md)
+// ---------------------------------------------------------------------------
+
+/// Checkpoint envelope: format marker, version, kind tag, model payload.
+pub const CKPT_ENVELOPE: &str = "CKPT_ENVELOPE";
+/// Tree payload schema: required fields present with the right types.
+pub const TREE_SCHEMA: &str = "TREE_SCHEMA";
+/// Forest payload schema (ARF/bagging members, ADWIN detectors).
+pub const FOREST_SCHEMA: &str = "FOREST_SCHEMA";
+/// Node arenas: every child index strictly greater than its parent's.
+pub const ARENA_CHILD_ORDER: &str = "ARENA_CHILD_ORDER";
+/// Node arenas: every node reachable from the root exactly once.
+pub const ARENA_ORPHAN: &str = "ARENA_ORPHAN";
+/// Leaf depth equals its arena depth and stays under the configured cap.
+pub const ARENA_DEPTH: &str = "ARENA_DEPTH";
+/// Deferred-attempt queue entries reference live leaves, without repeats.
+pub const PENDING_LEAF: &str = "PENDING_LEAF";
+/// Leaf linear models: finite weights/bias with the tree's arity.
+pub const LEAF_LINEAR: &str = "LEAF_LINEAR";
+/// `VarStats` triples: finite moments, `n ≥ 0`, `m2` non-negative.
+pub const VARSTATS_INVALID: &str = "VARSTATS_INVALID";
+/// QO slot tables: strictly increasing (hence unique) bucket codes.
+pub const QO_SLOT_ORDER: &str = "QO_SLOT_ORDER";
+/// QO slots: positive weight and a finite prototype sum.
+pub const QO_SLOT_WEIGHT: &str = "QO_SLOT_WEIGHT";
+/// QO: Σ slot weight equals the column total once the radius is frozen.
+pub const QO_TOTAL_DRIFT: &str = "QO_TOTAL_DRIFT";
+/// E-BST: finite keys obeying the binary-search-tree bounds.
+pub const EBST_KEY_ORDER: &str = "EBST_KEY_ORDER";
+/// Observer payloads: known type tags, labels, monitored-feature lists.
+pub const OBSERVER_SCHEMA: &str = "OBSERVER_SCHEMA";
+/// Delta chains: versions advance one at a time without gaps.
+pub const DELTA_VERSION_ORDER: &str = "DELTA_VERSION_ORDER";
+/// Delta chains: every applied patch lands on the advertised hash.
+pub const DELTA_HASH_CHAIN: &str = "DELTA_HASH_CHAIN";
+/// `mem_bytes()` agrees (within allocator slack) across a codec clone.
+pub const MEM_BYTES_STABLE: &str = "MEM_BYTES_STABLE";
+
+/// E-BST "no child" sentinel (`u32::MAX`, mirrored from the arena).
+const EBST_NONE: u64 = u32::MAX as u64;
+
+/// Relative tolerance for [`QO_TOTAL_DRIFT`]: weights are Poisson draws
+/// (integers) or 1.0, so Σ slot `n` and the column total accumulate the
+/// same exact additions — the slack only covers merge reordering.
+const QO_SUM_RTOL: f64 = 1e-6;
+
+/// Allowed `mem_bytes()` ratio between a live model and its codec clone.
+/// Capacity-based accounting differs by `Vec`/`HashMap` growth slack,
+/// which amortized doubling bounds well under this.
+const MEM_RATIO_MAX: f64 = 4.0;
+
+// ---------------------------------------------------------------------------
+// Tolerant scalar readers (the codec's string encodings, no hard errors)
+// ---------------------------------------------------------------------------
+
+/// Read an `f64` the way [`crate::persist::codec::pf64`] would.
+fn fnum(j: &Json) -> Option<f64> {
+    match j {
+        Json::Num(v) => Some(*v),
+        Json::Str(s) => match s.as_str() {
+            "NaN" => Some(f64::NAN),
+            "inf" => Some(f64::INFINITY),
+            "-inf" => Some(f64::NEG_INFINITY),
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+/// Read a `u64` the way [`crate::persist::codec::pu64`] would.
+fn unum(j: &Json) -> Option<u64> {
+    match j {
+        Json::Str(s) => s.parse::<u64>().ok(),
+        Json::Num(v) if *v >= 0.0 && *v == v.trunc() && *v <= 2f64.powi(53) => Some(*v as u64),
+        _ => None,
+    }
+}
+
+/// Read an `i64` the way [`crate::persist::codec::pi64`] would.
+fn inum(j: &Json) -> Option<i64> {
+    match j {
+        Json::Str(s) => s.parse::<i64>().ok(),
+        Json::Num(v) if *v == v.trunc() && v.abs() <= 2f64.powi(53) => Some(*v as i64),
+        _ => None,
+    }
+}
+
+fn sub(path: &str, key: &str) -> String {
+    format!("{path}.{key}")
+}
+
+// ---------------------------------------------------------------------------
+// Entry points
+// ---------------------------------------------------------------------------
+
+/// Verify a full checkpoint document ([`Model::to_checkpoint`] layout).
+/// Returns every finding, empty on a clean document.
+pub fn verify_checkpoint(doc: &Json) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if doc.as_obj().is_none() {
+        out.push(Finding::new(CKPT_ENVELOPE, "", "checkpoint is not a JSON object"));
+        return out;
+    }
+    match doc.get("format").and_then(Json::as_str) {
+        Some(f) if f == FORMAT => {}
+        Some(f) => out.push(Finding::new(
+            CKPT_ENVELOPE,
+            "format",
+            format!("expected {FORMAT:?}, got {f:?}"),
+        )),
+        None => out.push(Finding::new(CKPT_ENVELOPE, "format", "missing format marker")),
+    }
+    match doc.get("version").and_then(unum) {
+        Some(v) if v == VERSION => {}
+        Some(v) => out.push(Finding::new(
+            CKPT_ENVELOPE,
+            "version",
+            format!("expected version {VERSION}, got {v}"),
+        )),
+        None => out.push(Finding::new(CKPT_ENVELOPE, "version", "missing or non-u64 version")),
+    }
+    let Some(model) = doc.get("model") else {
+        out.push(Finding::new(CKPT_ENVELOPE, "model", "missing model payload"));
+        return out;
+    };
+    match doc.get("kind").and_then(Json::as_str) {
+        Some("tree") => verify_tree(model, "model", &mut out),
+        Some("arf") => verify_arf(model, &mut out),
+        Some("bagging") => verify_bagging(model, &mut out),
+        Some(other) => {
+            out.push(Finding::new(CKPT_ENVELOPE, "kind", format!("unknown kind {other:?}")));
+        }
+        None => out.push(Finding::new(CKPT_ENVELOPE, "kind", "missing kind tag")),
+    }
+    out
+}
+
+/// Verify a live model end to end: encode, run [`verify_checkpoint`],
+/// then prove `mem_bytes()` is codec-stable ([`MEM_BYTES_STABLE`]) by
+/// comparing the live accounting against a `clone_via_codec` restore.
+pub fn verify_model(model: &Model) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let doc = match model.to_checkpoint() {
+        Ok(doc) => doc,
+        Err(e) => {
+            out.push(Finding::new(CKPT_ENVELOPE, "model", format!("encode failed: {e}")));
+            return out;
+        }
+    };
+    out.extend(verify_checkpoint(&doc));
+    match model.clone_via_codec() {
+        Ok(clone) => {
+            let live = model.mem_bytes();
+            let restored = clone.mem_bytes();
+            let ratio_ok = live > 0
+                && restored > 0
+                && live as f64 / restored as f64 <= MEM_RATIO_MAX
+                && restored as f64 / live as f64 <= MEM_RATIO_MAX;
+            if !ratio_ok {
+                out.push(Finding::new(
+                    MEM_BYTES_STABLE,
+                    "model",
+                    format!(
+                        "mem_bytes {live} live vs {restored} restored \
+                         (expected both nonzero within {MEM_RATIO_MAX}x)"
+                    ),
+                ));
+            }
+        }
+        Err(e) => {
+            out.push(Finding::new(CKPT_ENVELOPE, "model", format!("codec round-trip failed: {e}")));
+        }
+    }
+    out
+}
+
+/// Verify a wire-delta chain (`{"from","to","hash","ops"}` records, the
+/// `repl_sync` payload shape) applied on top of `base`: versions must
+/// advance one at a time without gaps ([`DELTA_VERSION_ORDER`]), every
+/// apply must land on the advertised hash ([`DELTA_HASH_CHAIN`]), and
+/// the final document must itself pass [`verify_checkpoint`].
+pub fn verify_delta_chain(base: &Json, deltas: &[Json]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut doc = base.clone();
+    let mut prev_to: Option<u64> = None;
+    for (i, wire) in deltas.iter().enumerate() {
+        let path = format!("deltas[{i}]");
+        let (from, to, hash, ops) = match decode_wire_delta(wire) {
+            Ok(decoded) => decoded,
+            Err(e) => {
+                out.push(Finding::new(DELTA_HASH_CHAIN, path, format!("malformed wire delta: {e}")));
+                return out;
+            }
+        };
+        if to != from + 1 {
+            out.push(Finding::new(
+                DELTA_VERSION_ORDER,
+                path.clone(),
+                format!("expected to = from + 1, got {from} -> {to}"),
+            ));
+        }
+        if let Some(prev) = prev_to {
+            if from != prev {
+                out.push(Finding::new(
+                    DELTA_VERSION_ORDER,
+                    path.clone(),
+                    format!("chain gap: previous delta ended at {prev}, this one starts at {from}"),
+                ));
+            }
+        }
+        prev_to = Some(to);
+        match apply(&doc, ops) {
+            Ok(next) => {
+                let got = doc_hash(&next);
+                if got != hash {
+                    out.push(Finding::new(
+                        DELTA_HASH_CHAIN,
+                        path,
+                        format!("version {to}: applied hash {got:#x} != advertised {hash:#x}"),
+                    ));
+                    return out;
+                }
+                doc = next;
+            }
+            Err(e) => {
+                out.push(Finding::new(DELTA_HASH_CHAIN, path, format!("apply failed: {e}")));
+                return out;
+            }
+        }
+    }
+    out.extend(verify_checkpoint(&doc));
+    out
+}
+
+/// Verify an in-memory [`DeltaLog`]'s shape: contiguous entry versions
+/// ending at the head, and a head hash that matches the head document.
+pub fn verify_log(log: &DeltaLog) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let head = doc_hash(log.doc());
+    if head != log.hash() {
+        out.push(Finding::new(
+            DELTA_HASH_CHAIN,
+            "log.head",
+            format!("head document hashes to {head:#x} but the log advertises {:#x}", log.hash()),
+        ));
+    }
+    let mut prev_to: Option<u64> = None;
+    for entry in log.entries() {
+        if let Some(prev) = prev_to {
+            if entry.from != prev {
+                out.push(Finding::new(
+                    DELTA_VERSION_ORDER,
+                    format!("log.entries[from={}]", entry.from),
+                    format!("expected from = {prev} after the previous entry"),
+                ));
+            }
+        }
+        prev_to = Some(entry.from + 1);
+    }
+    if let Some(prev) = prev_to {
+        if prev != log.version() {
+            out.push(Finding::new(
+                DELTA_VERSION_ORDER,
+                "log.head",
+                format!("entries end at version {prev} but the head is {}", log.version()),
+            ));
+        }
+    }
+    out
+}
+
+/// One-line explanation of the *first* invariant a document breaks
+/// (`"RULE at path"`), or `None` when it is clean. The replication layer
+/// appends this to rejection errors so `last_resync_cause` names the
+/// broken invariant, not just the decode symptom.
+pub fn explain(doc: &Json) -> Option<String> {
+    verify_checkpoint(doc)
+        .first()
+        .map(|f| format!("{} at {}", f.rule, if f.path.is_empty() { "root" } else { &f.path }))
+}
+
+// ---------------------------------------------------------------------------
+// Tree payload
+// ---------------------------------------------------------------------------
+
+/// What a structural pass learned about one arena node.
+enum NodeShape {
+    Leaf { declared_depth: Option<usize> },
+    Split { left: usize, right: usize },
+    Bad,
+}
+
+fn verify_tree(j: &Json, path: &str, out: &mut Vec<Finding>) {
+    let n_features = match j.get("n_features").and_then(unum) {
+        Some(n) => Some(n as usize),
+        None => {
+            out.push(Finding::new(
+                TREE_SCHEMA,
+                sub(path, "n_features"),
+                "missing or non-u64 n_features",
+            ));
+            None
+        }
+    };
+    match j.get("observer").and_then(Json::as_str) {
+        Some(label) => {
+            if crate::observer::ObserverSpec::from_label(label).is_none() {
+                out.push(Finding::new(
+                    OBSERVER_SCHEMA,
+                    sub(path, "observer"),
+                    format!("unknown observer label {label:?}"),
+                ));
+            }
+        }
+        None => out.push(Finding::new(TREE_SCHEMA, sub(path, "observer"), "missing observer label")),
+    }
+    match j.get("criterion").and_then(Json::as_str) {
+        Some("variance-reduction") | Some("sd-reduction") => {}
+        Some(other) => out.push(Finding::new(
+            TREE_SCHEMA,
+            sub(path, "criterion"),
+            format!("unknown split criterion {other:?}"),
+        )),
+        None => out.push(Finding::new(TREE_SCHEMA, sub(path, "criterion"), "missing criterion")),
+    }
+    if j.get("n_splits").and_then(unum).is_none() {
+        out.push(Finding::new(TREE_SCHEMA, sub(path, "n_splits"), "missing or non-u64 n_splits"));
+    }
+    verify_rng(j.get("rng"), &sub(path, "rng"), TREE_SCHEMA, out);
+    let max_depth = j
+        .get("options")
+        .and_then(|o| o.get("max_depth"))
+        .and_then(unum)
+        .map(|d| d as usize);
+    if max_depth.is_none() {
+        out.push(Finding::new(
+            TREE_SCHEMA,
+            sub(path, "options.max_depth"),
+            "missing or non-u64 max_depth",
+        ));
+    }
+    let Some(nodes) = j.get("nodes").and_then(Json::as_arr) else {
+        out.push(Finding::new(TREE_SCHEMA, sub(path, "nodes"), "missing node arena"));
+        return;
+    };
+    if nodes.is_empty() {
+        out.push(Finding::new(TREE_SCHEMA, sub(path, "nodes"), "empty node arena"));
+        return;
+    }
+    let n = nodes.len();
+
+    // structural pass over the arena
+    let mut shapes = Vec::with_capacity(n);
+    for (idx, item) in nodes.iter().enumerate() {
+        let node_path = format!("{path}.nodes[{idx}]");
+        if let Some(leaf) = item.get("leaf") {
+            let declared_depth =
+                verify_leaf(leaf, &format!("{node_path}.leaf"), n_features, out);
+            shapes.push(NodeShape::Leaf { declared_depth });
+        } else if let Some(split) = item.get("split") {
+            let split_path = format!("{node_path}.split");
+            match (j.get("n_features").and_then(unum), split.get("feature").and_then(unum)) {
+                (Some(nf), Some(f)) if f >= nf => out.push(Finding::new(
+                    TREE_SCHEMA,
+                    sub(&split_path, "feature"),
+                    format!("split feature {f} out of range (n_features {nf})"),
+                )),
+                (_, Some(_)) => {}
+                (_, None) => out.push(Finding::new(
+                    TREE_SCHEMA,
+                    sub(&split_path, "feature"),
+                    "missing or non-u64 feature",
+                )),
+            }
+            match split.get("threshold").and_then(fnum) {
+                Some(t) if t.is_finite() => {}
+                Some(t) => out.push(Finding::new(
+                    TREE_SCHEMA,
+                    sub(&split_path, "threshold"),
+                    format!("non-finite threshold {t}"),
+                )),
+                None => out.push(Finding::new(
+                    TREE_SCHEMA,
+                    sub(&split_path, "threshold"),
+                    "missing threshold",
+                )),
+            }
+            let left = split.get("left").and_then(unum).map(|v| v as usize);
+            let right = split.get("right").and_then(unum).map(|v| v as usize);
+            let (Some(left), Some(right)) = (left, right) else {
+                out.push(Finding::new(TREE_SCHEMA, split_path, "missing child indices"));
+                shapes.push(NodeShape::Bad);
+                continue;
+            };
+            let mut ok = true;
+            for (name, child) in [("left", left), ("right", right)] {
+                if child >= n {
+                    out.push(Finding::new(
+                        ARENA_CHILD_ORDER,
+                        sub(&split_path, name),
+                        format!("child {child} out of range (arena has {n} nodes)"),
+                    ));
+                    ok = false;
+                } else if child <= idx {
+                    out.push(Finding::new(
+                        ARENA_CHILD_ORDER,
+                        sub(&split_path, name),
+                        format!("child {child} must come after its parent {idx}"),
+                    ));
+                    ok = false;
+                }
+            }
+            if left == right {
+                out.push(Finding::new(
+                    ARENA_CHILD_ORDER,
+                    split_path,
+                    format!("left and right both point at node {left}"),
+                ));
+                ok = false;
+            }
+            shapes.push(if ok { NodeShape::Split { left, right } } else { NodeShape::Bad });
+        } else {
+            out.push(Finding::new(TREE_SCHEMA, node_path, "expected a \"leaf\" or \"split\" node"));
+            shapes.push(NodeShape::Bad);
+        }
+    }
+
+    let root = match j.get("root").and_then(unum).map(|v| v as usize) {
+        Some(root) if root < n => root,
+        Some(root) => {
+            out.push(Finding::new(
+                TREE_SCHEMA,
+                sub(path, "root"),
+                format!("root {root} out of range (arena has {n} nodes)"),
+            ));
+            return;
+        }
+        None => {
+            out.push(Finding::new(TREE_SCHEMA, sub(path, "root"), "missing or non-u64 root"));
+            return;
+        }
+    };
+
+    // reachability + depth in one forward pass: children always come
+    // after their parent, so ascending order visits parents first
+    let mut depth: Vec<Option<usize>> = vec![None; n];
+    depth[root] = Some(0);
+    for idx in 0..n {
+        let NodeShape::Split { left, right } = shapes[idx] else { continue };
+        let Some(d) = depth[idx] else { continue };
+        for child in [left, right] {
+            if depth[child].is_some() {
+                out.push(Finding::new(
+                    ARENA_ORPHAN,
+                    format!("{path}.nodes[{child}]"),
+                    "node is referenced by more than one parent",
+                ));
+            } else {
+                depth[child] = Some(d + 1);
+            }
+        }
+    }
+    for (idx, d) in depth.iter().enumerate() {
+        let Some(d) = d else {
+            out.push(Finding::new(
+                ARENA_ORPHAN,
+                format!("{path}.nodes[{idx}]"),
+                "node is unreachable from the root",
+            ));
+            continue;
+        };
+        if let Some(cap) = max_depth {
+            if *d > cap {
+                out.push(Finding::new(
+                    ARENA_DEPTH,
+                    format!("{path}.nodes[{idx}]"),
+                    format!("node sits at depth {d}, beyond max_depth {cap}"),
+                ));
+            }
+        }
+        if let NodeShape::Leaf { declared_depth: Some(dd) } = shapes[idx] {
+            if dd != *d {
+                out.push(Finding::new(
+                    ARENA_DEPTH,
+                    format!("{path}.nodes[{idx}].leaf.depth"),
+                    format!("leaf declares depth {dd} but sits at arena depth {d}"),
+                ));
+            }
+        }
+    }
+
+    // deferred-attempt queue
+    match j.get("pending").and_then(Json::as_arr) {
+        Some(pending) => {
+            let mut seen = vec![false; n];
+            for (i, item) in pending.iter().enumerate() {
+                let entry_path = format!("{path}.pending[{i}]");
+                let Some(idx) = unum(item).map(|v| v as usize) else {
+                    out.push(Finding::new(PENDING_LEAF, entry_path, "non-u64 queue entry"));
+                    continue;
+                };
+                if idx >= n {
+                    out.push(Finding::new(
+                        PENDING_LEAF,
+                        entry_path,
+                        format!("queued node {idx} out of range (arena has {n} nodes)"),
+                    ));
+                    continue;
+                }
+                if !matches!(shapes[idx], NodeShape::Leaf { .. }) {
+                    out.push(Finding::new(
+                        PENDING_LEAF,
+                        entry_path,
+                        format!("queued node {idx} is not a leaf"),
+                    ));
+                }
+                if seen[idx] {
+                    out.push(Finding::new(
+                        PENDING_LEAF,
+                        entry_path,
+                        format!("node {idx} queued more than once"),
+                    ));
+                }
+                seen[idx] = true;
+            }
+        }
+        None => out.push(Finding::new(TREE_SCHEMA, sub(path, "pending"), "missing pending queue")),
+    }
+}
+
+/// Verify one leaf payload; returns the declared depth when readable.
+fn verify_leaf(j: &Json, path: &str, n_features: Option<usize>, out: &mut Vec<Finding>) -> Option<usize> {
+    verify_varstats(j.get("stats"), &sub(path, "stats"), out);
+    match j.get("kind").and_then(Json::as_str) {
+        Some("mean") | Some("linear") | Some("adaptive") => {}
+        Some(other) => out.push(Finding::new(
+            TREE_SCHEMA,
+            sub(path, "kind"),
+            format!("unknown leaf model kind {other:?}"),
+        )),
+        None => out.push(Finding::new(TREE_SCHEMA, sub(path, "kind"), "missing leaf model kind")),
+    }
+    for key in ["mean_err", "lin_err", "weight_since_attempt"] {
+        match j.get(key).and_then(fnum) {
+            Some(v) if v.is_finite() && v >= 0.0 => {}
+            Some(v) => out.push(Finding::new(
+                TREE_SCHEMA,
+                sub(path, key),
+                format!("expected a finite non-negative value, got {v}"),
+            )),
+            None => out.push(Finding::new(TREE_SCHEMA, sub(path, key), "missing value")),
+        }
+    }
+
+    // monitored feature list
+    let monitored_len = match j.get("monitored").and_then(Json::as_arr) {
+        Some(monitored) => {
+            let mut seen = std::collections::BTreeSet::new();
+            for (i, item) in monitored.iter().enumerate() {
+                let entry_path = format!("{path}.monitored[{i}]");
+                let Some(f) = unum(item).map(|v| v as usize) else {
+                    out.push(Finding::new(OBSERVER_SCHEMA, entry_path, "non-u64 feature index"));
+                    continue;
+                };
+                if let Some(nf) = n_features {
+                    if f >= nf {
+                        out.push(Finding::new(
+                            OBSERVER_SCHEMA,
+                            entry_path,
+                            format!("monitored feature {f} out of range (n_features {nf})"),
+                        ));
+                    }
+                }
+                if !seen.insert(f) {
+                    out.push(Finding::new(
+                        OBSERVER_SCHEMA,
+                        entry_path,
+                        format!("feature {f} monitored more than once"),
+                    ));
+                }
+            }
+            Some(monitored.len())
+        }
+        None => {
+            out.push(Finding::new(
+                OBSERVER_SCHEMA,
+                sub(path, "monitored"),
+                "missing monitored-feature list",
+            ));
+            None
+        }
+    };
+
+    // observers: null = frozen leaf; otherwise one per monitored feature
+    match j.get("observers") {
+        Some(Json::Null) => {}
+        Some(Json::Arr(observers)) => {
+            if let Some(m) = monitored_len {
+                if observers.len() != m {
+                    out.push(Finding::new(
+                        OBSERVER_SCHEMA,
+                        sub(path, "observers"),
+                        format!("{} observers for {m} monitored features", observers.len()),
+                    ));
+                }
+            }
+            for (i, item) in observers.iter().enumerate() {
+                verify_observer(item, &format!("{path}.observers[{i}]"), out);
+            }
+        }
+        Some(_) => out.push(Finding::new(
+            OBSERVER_SCHEMA,
+            sub(path, "observers"),
+            "expected null or an observer array",
+        )),
+        None => out.push(Finding::new(OBSERVER_SCHEMA, sub(path, "observers"), "missing observers")),
+    }
+
+    match j.get("linear") {
+        Some(linear) => verify_linear(linear, &sub(path, "linear"), n_features, out),
+        None => out.push(Finding::new(LEAF_LINEAR, sub(path, "linear"), "missing linear model")),
+    }
+
+    match j.get("depth").and_then(unum) {
+        Some(d) => Some(d as usize),
+        None => {
+            out.push(Finding::new(TREE_SCHEMA, sub(path, "depth"), "missing or non-u64 depth"));
+            None
+        }
+    }
+}
+
+fn verify_linear(j: &Json, path: &str, n_features: Option<usize>, out: &mut Vec<Finding>) {
+    match j.get("weights").and_then(Json::as_arr) {
+        Some(weights) => {
+            if let Some(nf) = n_features {
+                if weights.len() != nf {
+                    out.push(Finding::new(
+                        LEAF_LINEAR,
+                        sub(path, "weights"),
+                        format!("{} weights for {nf} features", weights.len()),
+                    ));
+                }
+            }
+            for (i, w) in weights.iter().enumerate() {
+                match fnum(w) {
+                    Some(v) if v.is_finite() => {}
+                    Some(v) => out.push(Finding::new(
+                        LEAF_LINEAR,
+                        format!("{path}.weights[{i}]"),
+                        format!("non-finite weight {v}"),
+                    )),
+                    None => out.push(Finding::new(
+                        LEAF_LINEAR,
+                        format!("{path}.weights[{i}]"),
+                        "non-numeric weight",
+                    )),
+                }
+            }
+            if let Some(stats) = j.get("feature_stats").and_then(Json::as_arr) {
+                if stats.len() != weights.len() {
+                    out.push(Finding::new(
+                        LEAF_LINEAR,
+                        sub(path, "feature_stats"),
+                        format!("{} feature_stats for {} weights", stats.len(), weights.len()),
+                    ));
+                }
+                for (i, s) in stats.iter().enumerate() {
+                    verify_varstats(Some(s), &format!("{path}.feature_stats[{i}]"), out);
+                }
+            } else {
+                out.push(Finding::new(LEAF_LINEAR, sub(path, "feature_stats"), "missing"));
+            }
+        }
+        None => out.push(Finding::new(LEAF_LINEAR, sub(path, "weights"), "missing weight vector")),
+    }
+    for key in ["bias", "lr"] {
+        match j.get(key).and_then(fnum) {
+            Some(v) if v.is_finite() => {}
+            Some(v) => out.push(Finding::new(
+                LEAF_LINEAR,
+                sub(path, key),
+                format!("non-finite {key} {v}"),
+            )),
+            None => out.push(Finding::new(LEAF_LINEAR, sub(path, key), format!("missing {key}"))),
+        }
+    }
+    verify_varstats(j.get("target_stats"), &sub(path, "target_stats"), out);
+}
+
+// ---------------------------------------------------------------------------
+// VarStats and observers
+// ---------------------------------------------------------------------------
+
+/// Verify a `[n, mean, m2]` triple; returns the parsed `n` when clean.
+fn verify_varstats(j: Option<&Json>, path: &str, out: &mut Vec<Finding>) -> Option<f64> {
+    let Some(items) = j.and_then(Json::as_arr) else {
+        out.push(Finding::new(VARSTATS_INVALID, path, "expected a [n, mean, m2] triple"));
+        return None;
+    };
+    if items.len() != 3 {
+        out.push(Finding::new(
+            VARSTATS_INVALID,
+            path,
+            format!("expected 3 elements, got {}", items.len()),
+        ));
+        return None;
+    }
+    let (Some(n), Some(mean), Some(m2)) = (fnum(&items[0]), fnum(&items[1]), fnum(&items[2]))
+    else {
+        out.push(Finding::new(VARSTATS_INVALID, path, "non-numeric moment"));
+        return None;
+    };
+    if !n.is_finite() || n < 0.0 {
+        out.push(Finding::new(
+            VARSTATS_INVALID,
+            path,
+            format!("weight n must be finite and >= 0, got {n}"),
+        ));
+        return None;
+    }
+    if !mean.is_finite() {
+        out.push(Finding::new(VARSTATS_INVALID, path, format!("non-finite mean {mean}")));
+        return None;
+    }
+    // the paper's subtract extension can leave a tiny negative m2 from
+    // float cancellation (variance() clamps it); only clear negatives
+    // are corruption
+    if !m2.is_finite() || m2 < -1e-6 * n.max(1.0) {
+        out.push(Finding::new(
+            VARSTATS_INVALID,
+            path,
+            format!("second moment m2 must be finite and >= 0, got {m2}"),
+        ));
+        return None;
+    }
+    Some(n)
+}
+
+fn verify_observer(j: &Json, path: &str, out: &mut Vec<Finding>) {
+    match j.get("type").and_then(Json::as_str) {
+        Some("qo") => verify_qo(j, path, out),
+        Some("ebst") => verify_ebst(j, path, out),
+        Some("tebst") => {
+            match j.get("decimals").and_then(unum) {
+                Some(d) if d <= 300 => {}
+                Some(d) => out.push(Finding::new(
+                    OBSERVER_SCHEMA,
+                    sub(path, "decimals"),
+                    format!("{d} decimal places is not representable"),
+                )),
+                None => out.push(Finding::new(OBSERVER_SCHEMA, sub(path, "decimals"), "missing")),
+            }
+            match j.get("inner") {
+                Some(inner) => verify_ebst(inner, &sub(path, "inner"), out),
+                None => out.push(Finding::new(OBSERVER_SCHEMA, sub(path, "inner"), "missing")),
+            }
+        }
+        Some("exhaustive") => {
+            verify_varstats(j.get("total"), &sub(path, "total"), out);
+            match j.get("points").and_then(Json::as_arr) {
+                Some(points) => {
+                    for (i, p) in points.iter().enumerate() {
+                        let ok = p
+                            .as_arr()
+                            .map(|t| t.len() == 3 && t.iter().all(|v| fnum(v).is_some()))
+                            .unwrap_or(false);
+                        if !ok {
+                            out.push(Finding::new(
+                                OBSERVER_SCHEMA,
+                                format!("{path}.points[{i}]"),
+                                "expected an [x, y, w] triple",
+                            ));
+                        }
+                    }
+                }
+                None => out.push(Finding::new(OBSERVER_SCHEMA, sub(path, "points"), "missing")),
+            }
+        }
+        Some(other) => out.push(Finding::new(
+            OBSERVER_SCHEMA,
+            sub(path, "type"),
+            format!("unknown observer type {other:?}"),
+        )),
+        None => out.push(Finding::new(OBSERVER_SCHEMA, sub(path, "type"), "missing type tag")),
+    }
+}
+
+fn verify_qo(j: &Json, path: &str, out: &mut Vec<Finding>) {
+    match j.get("policy") {
+        Some(p) if p.get("fixed").is_some() || p.get("std").is_some() => {}
+        Some(_) => out.push(Finding::new(
+            OBSERVER_SCHEMA,
+            sub(path, "policy"),
+            "expected a \"fixed\" or \"std\" radius policy",
+        )),
+        None => out.push(Finding::new(OBSERVER_SCHEMA, sub(path, "policy"), "missing")),
+    }
+    let frozen = match j.get("state") {
+        Some(s) if s.get("frozen").is_some() => {
+            match s.get("frozen").and_then(fnum) {
+                Some(r) if r.is_finite() => {}
+                _ => out.push(Finding::new(
+                    OBSERVER_SCHEMA,
+                    sub(path, "state.frozen"),
+                    "frozen radius must be a finite number",
+                )),
+            }
+            true
+        }
+        Some(s) if s.get("warming").is_some() => false,
+        Some(_) => {
+            out.push(Finding::new(
+                OBSERVER_SCHEMA,
+                sub(path, "state"),
+                "expected a \"frozen\" or \"warming\" radius state",
+            ));
+            false
+        }
+        None => {
+            out.push(Finding::new(OBSERVER_SCHEMA, sub(path, "state"), "missing"));
+            false
+        }
+    };
+    match j.get("strategy").and_then(Json::as_str) {
+        Some("prototype") | Some("grid") => {}
+        Some(other) => out.push(Finding::new(
+            OBSERVER_SCHEMA,
+            sub(path, "strategy"),
+            format!("unknown split-point strategy {other:?}"),
+        )),
+        None => out.push(Finding::new(OBSERVER_SCHEMA, sub(path, "strategy"), "missing")),
+    }
+    let total_n = verify_varstats(j.get("total"), &sub(path, "total"), out);
+
+    let Some(slots) = j.get("slots").and_then(Json::as_arr) else {
+        out.push(Finding::new(OBSERVER_SCHEMA, sub(path, "slots"), "missing slot table"));
+        return;
+    };
+    let mut prev_code: Option<i64> = None;
+    let mut slot_sum = 0.0;
+    let mut all_parsed = true;
+    for (i, item) in slots.iter().enumerate() {
+        let slot_path = format!("{path}.slots[{i}]");
+        let Some(entry) = item.as_arr().filter(|e| e.len() == 3) else {
+            out.push(Finding::new(
+                OBSERVER_SCHEMA,
+                slot_path,
+                "expected a [code, sum_x, stats] triple",
+            ));
+            all_parsed = false;
+            continue;
+        };
+        match inum(&entry[0]) {
+            Some(code) => {
+                if let Some(prev) = prev_code {
+                    if code <= prev {
+                        out.push(Finding::new(
+                            QO_SLOT_ORDER,
+                            slot_path.clone(),
+                            format!("code {code} after {prev}: codes must strictly increase"),
+                        ));
+                    }
+                }
+                prev_code = Some(code);
+            }
+            None => {
+                out.push(Finding::new(OBSERVER_SCHEMA, slot_path.clone(), "non-i64 bucket code"));
+                all_parsed = false;
+            }
+        }
+        match fnum(&entry[1]) {
+            Some(sum_x) if sum_x.is_finite() => {}
+            _ => out.push(Finding::new(
+                QO_SLOT_WEIGHT,
+                format!("{slot_path}[1]"),
+                "prototype sum_x must be a finite number",
+            )),
+        }
+        match verify_varstats(Some(&entry[2]), &format!("{slot_path}[2]"), out) {
+            Some(n) if n > 0.0 => slot_sum += n,
+            Some(n) => out.push(Finding::new(
+                QO_SLOT_WEIGHT,
+                format!("{slot_path}[2]"),
+                format!("slot weight must be > 0, got {n}"),
+            )),
+            None => all_parsed = false,
+        }
+    }
+    // Paper Sec. 3: slots partition the column, so once the radius is
+    // frozen (no points hiding in a warmup buffer) their weights must
+    // sum back to the column total exactly (mod merge reordering)
+    if frozen && all_parsed {
+        if let Some(total) = total_n {
+            if (slot_sum - total).abs() > QO_SUM_RTOL * total.max(1.0) {
+                out.push(Finding::new(
+                    QO_TOTAL_DRIFT,
+                    sub(path, "slots"),
+                    format!("slot weights sum to {slot_sum} but the column total is {total}"),
+                ));
+            }
+        }
+    }
+}
+
+fn verify_ebst(j: &Json, path: &str, out: &mut Vec<Finding>) {
+    verify_varstats(j.get("total"), &sub(path, "total"), out);
+    let Some(nodes) = j.get("nodes").and_then(Json::as_arr) else {
+        out.push(Finding::new(OBSERVER_SCHEMA, sub(path, "nodes"), "missing node arena"));
+        return;
+    };
+    let n = nodes.len();
+    let mut keys: Vec<Option<f64>> = Vec::with_capacity(n);
+    let mut children: Vec<Option<(u64, u64)>> = Vec::with_capacity(n);
+    for (idx, item) in nodes.iter().enumerate() {
+        let node_path = format!("{path}.nodes[{idx}]");
+        let Some(entry) = item.as_arr().filter(|e| e.len() == 4) else {
+            out.push(Finding::new(
+                OBSERVER_SCHEMA,
+                node_path,
+                "expected a [key, stats, left, right] row",
+            ));
+            keys.push(None);
+            children.push(None);
+            continue;
+        };
+        match fnum(&entry[0]) {
+            Some(key) if key.is_finite() => keys.push(Some(key)),
+            Some(key) => {
+                out.push(Finding::new(
+                    EBST_KEY_ORDER,
+                    format!("{node_path}[0]"),
+                    format!("non-finite key {key}"),
+                ));
+                keys.push(None);
+            }
+            None => {
+                out.push(Finding::new(OBSERVER_SCHEMA, format!("{node_path}[0]"), "non-numeric key"));
+                keys.push(None);
+            }
+        }
+        verify_varstats(Some(&entry[1]), &format!("{node_path}[1]"), out);
+        let (left, right) = (unum(&entry[2]), unum(&entry[3]));
+        let (Some(left), Some(right)) = (left, right) else {
+            out.push(Finding::new(
+                OBSERVER_SCHEMA,
+                node_path,
+                "non-u64 child index",
+            ));
+            children.push(None);
+            continue;
+        };
+        let mut ok = true;
+        for (name, child) in [("left", left), ("right", right)] {
+            if child != EBST_NONE && (child as usize >= n || child as usize <= idx) {
+                out.push(Finding::new(
+                    ARENA_CHILD_ORDER,
+                    format!("{node_path}.{name}"),
+                    format!("ebst child {child} out of order (parent {idx}, arena {n})"),
+                ));
+                ok = false;
+            }
+        }
+        if left == right && left != EBST_NONE {
+            out.push(Finding::new(
+                ARENA_CHILD_ORDER,
+                node_path,
+                format!("left and right both point at node {left}"),
+            ));
+            ok = false;
+        }
+        children.push(if ok { Some((left, right)) } else { None });
+    }
+
+    let root = match j.get("root").and_then(unum) {
+        Some(root) => root,
+        None => {
+            out.push(Finding::new(OBSERVER_SCHEMA, sub(path, "root"), "missing or non-u64 root"));
+            return;
+        }
+    };
+    if root == EBST_NONE {
+        if n != 0 {
+            out.push(Finding::new(
+                ARENA_ORPHAN,
+                sub(path, "root"),
+                format!("root is NONE but the arena holds {n} nodes"),
+            ));
+        }
+        return;
+    }
+    if root as usize >= n {
+        out.push(Finding::new(
+            OBSERVER_SCHEMA,
+            sub(path, "root"),
+            format!("root {root} out of range (arena has {n} nodes)"),
+        ));
+        return;
+    }
+
+    // BST bounds walk: every key strictly inside its inherited interval
+    // (equal keys are absorbed at the existing node, never re-inserted)
+    let mut visited = vec![false; n];
+    let mut stack: Vec<(usize, Option<f64>, Option<f64>)> = vec![(root as usize, None, None)];
+    while let Some((idx, lo, hi)) = stack.pop() {
+        if visited[idx] {
+            // child>parent precludes cycles; a repeat means double-reference
+            out.push(Finding::new(
+                ARENA_ORPHAN,
+                format!("{path}.nodes[{idx}]"),
+                "node is referenced by more than one parent",
+            ));
+            continue;
+        }
+        visited[idx] = true;
+        if let Some(key) = keys[idx] {
+            if lo.map(|lo| key <= lo).unwrap_or(false) || hi.map(|hi| key >= hi).unwrap_or(false) {
+                out.push(Finding::new(
+                    EBST_KEY_ORDER,
+                    format!("{path}.nodes[{idx}]"),
+                    format!(
+                        "key {key} violates BST bounds ({} .. {})",
+                        lo.map(|v| v.to_string()).unwrap_or_else(|| "-inf".into()),
+                        hi.map(|v| v.to_string()).unwrap_or_else(|| "inf".into()),
+                    ),
+                ));
+            }
+            if let Some((left, right)) = children[idx] {
+                if left != EBST_NONE {
+                    stack.push((left as usize, lo, Some(key)));
+                }
+                if right != EBST_NONE {
+                    stack.push((right as usize, Some(key), hi));
+                }
+            }
+        }
+    }
+    for (idx, seen) in visited.iter().enumerate() {
+        if !seen {
+            out.push(Finding::new(
+                ARENA_ORPHAN,
+                format!("{path}.nodes[{idx}]"),
+                "node is unreachable from the root",
+            ));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forest payloads
+// ---------------------------------------------------------------------------
+
+fn verify_rng(j: Option<&Json>, path: &str, rule: &'static str, out: &mut Vec<Finding>) {
+    let Some(j) = j else {
+        out.push(Finding::new(rule, path, "missing rng state"));
+        return;
+    };
+    match j.get("s").and_then(Json::as_arr) {
+        Some(words) if words.len() == 4 && words.iter().all(|w| unum(w).is_some()) => {}
+        _ => out.push(Finding::new(rule, sub(path, "s"), "expected 4 u64 xoshiro words")),
+    }
+    match j.get("spare") {
+        Some(Json::Null) => {}
+        Some(v) if fnum(v).is_some() => {}
+        _ => out.push(Finding::new(rule, sub(path, "spare"), "expected null or a number")),
+    }
+}
+
+fn verify_adwin(j: Option<&Json>, path: &str, out: &mut Vec<Finding>) {
+    let Some(j) = j else {
+        out.push(Finding::new(FOREST_SCHEMA, path, "missing detector state"));
+        return;
+    };
+    match j.get("delta").and_then(fnum) {
+        Some(d) if d > 0.0 && d < 1.0 => {}
+        Some(d) => out.push(Finding::new(
+            FOREST_SCHEMA,
+            sub(path, "delta"),
+            format!("adwin delta {d} out of (0, 1)"),
+        )),
+        None => out.push(Finding::new(FOREST_SCHEMA, sub(path, "delta"), "missing delta")),
+    }
+    match j.get("rows").and_then(Json::as_arr) {
+        Some(rows) => {
+            for (r, row) in rows.iter().enumerate() {
+                match row.as_arr() {
+                    Some(buckets) => {
+                        for (b, bucket) in buckets.iter().enumerate() {
+                            verify_varstats(
+                                Some(bucket),
+                                &format!("{path}.rows[{r}][{b}]"),
+                                out,
+                            );
+                        }
+                    }
+                    None => out.push(Finding::new(
+                        FOREST_SCHEMA,
+                        format!("{path}.rows[{r}]"),
+                        "expected a bucket row",
+                    )),
+                }
+            }
+        }
+        None => out.push(Finding::new(FOREST_SCHEMA, sub(path, "rows"), "missing bucket rows")),
+    }
+    verify_varstats(j.get("total"), &sub(path, "total"), out);
+    for key in ["tick", "n_detections"] {
+        if j.get(key).and_then(unum).is_none() {
+            out.push(Finding::new(FOREST_SCHEMA, sub(path, key), "missing or non-u64"));
+        }
+    }
+    if j.get("last_shrink_rise").and_then(Json::as_bool).is_none() {
+        out.push(Finding::new(FOREST_SCHEMA, sub(path, "last_shrink_rise"), "missing bool"));
+    }
+}
+
+fn verify_vote(j: &Json, path: &str, out: &mut Vec<Finding>) {
+    match j.get("vote_err").and_then(fnum) {
+        Some(v) if v.is_finite() && v >= 0.0 => {}
+        Some(v) => out.push(Finding::new(
+            FOREST_SCHEMA,
+            sub(path, "vote_err"),
+            format!("expected a finite non-negative error EWMA, got {v}"),
+        )),
+        None => out.push(Finding::new(FOREST_SCHEMA, sub(path, "vote_err"), "missing")),
+    }
+    if j.get("vote_seeded").and_then(Json::as_bool).is_none() {
+        out.push(Finding::new(FOREST_SCHEMA, sub(path, "vote_seeded"), "missing bool"));
+    }
+}
+
+fn verify_arf(j: &Json, out: &mut Vec<Finding>) {
+    if j.get("options").and_then(Json::as_obj).is_none() {
+        out.push(Finding::new(FOREST_SCHEMA, "model.options", "missing options object"));
+    }
+    match j.get("observer").and_then(Json::as_str) {
+        Some(label) if crate::observer::ObserverSpec::from_label(label).is_some() => {}
+        Some(label) => out.push(Finding::new(
+            OBSERVER_SCHEMA,
+            "model.observer",
+            format!("unknown observer label {label:?}"),
+        )),
+        None => out.push(Finding::new(FOREST_SCHEMA, "model.observer", "missing observer label")),
+    }
+    let n_features = j.get("n_features").and_then(unum);
+    if n_features.is_none() {
+        out.push(Finding::new(FOREST_SCHEMA, "model.n_features", "missing or non-u64"));
+    }
+    let Some(members) = j.get("members").and_then(Json::as_arr) else {
+        out.push(Finding::new(FOREST_SCHEMA, "model.members", "missing member list"));
+        return;
+    };
+    if members.is_empty() {
+        out.push(Finding::new(FOREST_SCHEMA, "model.members", "forest has no members"));
+    }
+    for (i, m) in members.iter().enumerate() {
+        let member = format!("model.members[{i}]");
+        match m.get("tree") {
+            Some(tree) => {
+                verify_tree(tree, &sub(&member, "tree"), out);
+                if let (Some(nf), Some(tf)) = (n_features, tree.get("n_features").and_then(unum)) {
+                    if nf != tf {
+                        out.push(Finding::new(
+                            FOREST_SCHEMA,
+                            sub(&member, "tree.n_features"),
+                            format!("member tree has {tf} features, forest has {nf}"),
+                        ));
+                    }
+                }
+            }
+            None => out.push(Finding::new(FOREST_SCHEMA, sub(&member, "tree"), "missing tree")),
+        }
+        match m.get("background") {
+            Some(Json::Null) => {}
+            Some(bg) => verify_tree(bg, &sub(&member, "background"), out),
+            None => out.push(Finding::new(
+                FOREST_SCHEMA,
+                sub(&member, "background"),
+                "missing background slot",
+            )),
+        }
+        verify_adwin(m.get("warning"), &sub(&member, "warning"), out);
+        verify_adwin(m.get("drift"), &sub(&member, "drift"), out);
+        verify_rng(m.get("rng"), &sub(&member, "rng"), FOREST_SCHEMA, out);
+        for key in ["fg_trained", "bg_trained"] {
+            if m.get(key).and_then(Json::as_bool).is_none() {
+                out.push(Finding::new(FOREST_SCHEMA, sub(&member, key), "missing bool"));
+            }
+        }
+        for key in ["n_warnings", "n_drifts"] {
+            if m.get(key).and_then(unum).is_none() {
+                out.push(Finding::new(FOREST_SCHEMA, sub(&member, key), "missing or non-u64"));
+            }
+        }
+        verify_vote(m, &member, out);
+    }
+}
+
+fn verify_bagging(j: &Json, out: &mut Vec<Finding>) {
+    match j.get("observer").and_then(Json::as_str) {
+        Some(label) if crate::observer::ObserverSpec::from_label(label).is_some() => {}
+        Some(label) => out.push(Finding::new(
+            OBSERVER_SCHEMA,
+            "model.observer",
+            format!("unknown observer label {label:?}"),
+        )),
+        None => out.push(Finding::new(FOREST_SCHEMA, "model.observer", "missing observer label")),
+    }
+    match j.get("lambda").and_then(fnum) {
+        Some(l) if l.is_finite() && l > 0.0 => {}
+        Some(l) => out.push(Finding::new(
+            FOREST_SCHEMA,
+            "model.lambda",
+            format!("Poisson lambda must be finite and > 0, got {l}"),
+        )),
+        None => out.push(Finding::new(FOREST_SCHEMA, "model.lambda", "missing lambda")),
+    }
+    if j.get("weighted_vote").and_then(Json::as_bool).is_none() {
+        out.push(Finding::new(FOREST_SCHEMA, "model.weighted_vote", "missing bool"));
+    }
+    let Some(members) = j.get("members").and_then(Json::as_arr) else {
+        out.push(Finding::new(FOREST_SCHEMA, "model.members", "missing member list"));
+        return;
+    };
+    if members.is_empty() {
+        out.push(Finding::new(FOREST_SCHEMA, "model.members", "ensemble has no members"));
+    }
+    for (i, m) in members.iter().enumerate() {
+        let member = format!("model.members[{i}]");
+        match m.get("tree") {
+            Some(tree) => verify_tree(tree, &sub(&member, "tree"), out),
+            None => out.push(Finding::new(FOREST_SCHEMA, sub(&member, "tree"), "missing tree")),
+        }
+        verify_rng(m.get("rng"), &sub(&member, "rng"), FOREST_SCHEMA, out);
+        if m.get("trained").and_then(Json::as_bool).is_none() {
+            out.push(Finding::new(FOREST_SCHEMA, sub(&member, "trained"), "missing bool"));
+        }
+        verify_vote(m, &member, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::Regressor;
+    use crate::observer::{factory, QuantizationObserver, RadiusPolicy};
+    use crate::persist::delta::{diff, DeltaLog};
+    use crate::stream::{Friedman1, Stream};
+    use crate::tree::{HoeffdingTreeRegressor, HtrOptions};
+
+    fn trained_model(n: usize) -> Model {
+        let factory = factory("QO_s2", || {
+            Box::new(QuantizationObserver::new(RadiusPolicy::std_fraction(2.0)))
+        });
+        let mut tree = HoeffdingTreeRegressor::new(10, HtrOptions::default(), factory);
+        let mut stream = Friedman1::new(3, 1.0);
+        for _ in 0..n {
+            let inst = stream.next_instance().unwrap();
+            tree.learn_one(&inst.x, inst.y);
+        }
+        Model::Tree(tree)
+    }
+
+    #[test]
+    fn clean_checkpoint_has_no_findings() {
+        let model = trained_model(3000);
+        let doc = model.to_checkpoint().unwrap();
+        let findings = verify_checkpoint(&doc);
+        assert!(findings.is_empty(), "false positives: {findings:?}");
+        assert!(explain(&doc).is_none());
+        let findings = verify_model(&model);
+        assert!(findings.is_empty(), "false positives: {findings:?}");
+    }
+
+    #[test]
+    fn envelope_corruption_is_flagged() {
+        let model = trained_model(200);
+        let mut doc = model.to_checkpoint().unwrap();
+        doc.set("kind", "mystery");
+        assert!(verify_checkpoint(&doc).iter().any(|f| f.rule == CKPT_ENVELOPE));
+        let findings = verify_checkpoint(&Json::parse("[1,2]").unwrap());
+        assert_eq!(findings[0].rule, CKPT_ENVELOPE);
+    }
+
+    #[test]
+    fn swapped_arena_children_are_flagged() {
+        let model = trained_model(4000);
+        let mut doc = model.to_checkpoint().unwrap();
+        // find a split node and point a child backwards
+        let Json::Obj(root) = &mut doc else { panic!() };
+        let Some(Json::Obj(m)) = root.get_mut("model") else { panic!() };
+        let Some(Json::Arr(nodes)) = m.get_mut("nodes") else { panic!() };
+        let mut corrupted = false;
+        for node in nodes.iter_mut() {
+            if let Some(mut split) = node.get("split").cloned() {
+                split.set("left", crate::persist::codec::jusize(0));
+                node.set("split", split);
+                corrupted = true;
+                break;
+            }
+        }
+        assert!(corrupted, "trained tree should have at least one split");
+        assert!(verify_checkpoint(&doc).iter().any(|f| f.rule == ARENA_CHILD_ORDER));
+    }
+
+    #[test]
+    fn delta_chain_hash_and_version_rules() {
+        let mut model = trained_model(1500);
+        let base = model.to_checkpoint().unwrap();
+        let mut stream = Friedman1::new(11, 1.0);
+        let mut deltas = Vec::new();
+        let mut prev = base.clone();
+        for v in 0..3u64 {
+            for _ in 0..400 {
+                let inst = stream.next_instance().unwrap();
+                model.learn_one(&inst.x, inst.y);
+            }
+            let next = model.to_checkpoint().unwrap();
+            let mut wire = Json::obj();
+            wire.set("from", crate::persist::codec::ju64(v))
+                .set("to", crate::persist::codec::ju64(v + 1))
+                .set("hash", crate::persist::codec::ju64(doc_hash(&next)))
+                .set("ops", diff(&prev, &next));
+            deltas.push(wire);
+            prev = next;
+        }
+        assert!(verify_delta_chain(&base, &deltas).is_empty());
+
+        let mut broken = deltas.clone();
+        broken[1].set("hash", crate::persist::codec::ju64(12345));
+        assert!(verify_delta_chain(&base, &broken)
+            .iter()
+            .any(|f| f.rule == DELTA_HASH_CHAIN));
+
+        let mut gapped = deltas.clone();
+        gapped.remove(1);
+        assert!(verify_delta_chain(&base, &gapped)
+            .iter()
+            .any(|f| f.rule == DELTA_VERSION_ORDER));
+    }
+
+    #[test]
+    fn delta_log_shape_is_clean_on_a_live_log() {
+        let mut model = trained_model(800);
+        let mut log = DeltaLog::new(model.to_checkpoint().unwrap(), 8);
+        let mut stream = Friedman1::new(13, 1.0);
+        for _ in 0..4 {
+            for _ in 0..300 {
+                let inst = stream.next_instance().unwrap();
+                model.learn_one(&inst.x, inst.y);
+            }
+            log.publish(model.to_checkpoint().unwrap());
+        }
+        assert!(verify_log(&log).is_empty());
+    }
+}

@@ -1,0 +1,499 @@
+//! Repo lint pass: a std-only source scanner enforcing qostream's
+//! repo-specific rules over `rust/src/` (plus the crate roots).
+//!
+//! These are rules `rustc`/clippy cannot know about — they encode *this*
+//! system's contracts:
+//!
+//! * [`LINT_UNWRAP_CONN`] — no `.unwrap()`/`.expect(` on the
+//!   serve/replicate connection-handling paths. A panic there kills a
+//!   connection (or poll) thread, which a malformed peer must never be
+//!   able to do; errors must flow back as protocol error responses.
+//! * [`LINT_OBS_HOT_PATH`] — no allocation or locking in
+//!   `obs/mod.rs` outside the allow-listed cold-path functions. The
+//!   instrumentation contract (PR 6's ≤5% `obs_overhead_ratio` gate)
+//!   rests on every recording site being relaxed atomics only.
+//! * [`LINT_OBSERVER_SPEC`] — every observer kind registered with
+//!   [`crate::observer::ObserverSpec`] implements `mem_bytes` +
+//!   `to_json` in its `AttributeObserver` impl and `from_json` in its
+//!   file, so persist and memory accounting cover every kind.
+//! * [`LINT_FORBID_UNSAFE`] — `#![forbid(unsafe_code)]` in every crate
+//!   root (qostream lib/bin, both vendor shims, the lint tool itself).
+//! * [`LINT_MODULE_DOCS`] — every public module reachable from `lib.rs`
+//!   opens with `//!` module docs.
+//!
+//! A line carrying an `audit:allow(<rule>)` comment is exempt — the
+//! comment doubles as the in-source justification the CI gate requires.
+//! The scanner is deliberately line-based and rustfmt-shaped (this repo
+//! is formatted by CI), not a Rust parser: good enough to gate, simple
+//! enough to never need a dependency.
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use super::Finding;
+
+/// No unwrap/expect on serve/replicate connection paths.
+pub const LINT_UNWRAP_CONN: &str = "LINT_UNWRAP_CONN";
+/// No allocation/locking in the obs hot path outside the allow-list.
+pub const LINT_OBS_HOT_PATH: &str = "LINT_OBS_HOT_PATH";
+/// Every ObserverSpec kind is fully checkpointable and accounted.
+pub const LINT_OBSERVER_SPEC: &str = "LINT_OBSERVER_SPEC";
+/// `#![forbid(unsafe_code)]` in every crate root.
+pub const LINT_FORBID_UNSAFE: &str = "LINT_FORBID_UNSAFE";
+/// Module docs (`//!`) on every public module.
+pub const LINT_MODULE_DOCS: &str = "LINT_MODULE_DOCS";
+
+/// Marker comment that exempts a line, with justification:
+/// `// audit:allow(rule): why this is fine`.
+const ALLOW_MARKER: &str = "audit:allow(";
+
+/// Serve-layer files whose connection-handling code must not panic.
+const CONN_FILES: &[&str] = &[
+    "rust/src/serve/mod.rs",
+    "rust/src/serve/server.rs",
+    "rust/src/serve/replicate.rs",
+    "rust/src/serve/client.rs",
+];
+
+/// Crate roots that must carry `#![forbid(unsafe_code)]`.
+const CRATE_ROOTS: &[&str] = &[
+    "rust/src/lib.rs",
+    "rust/src/main.rs",
+    "tools/lint.rs",
+    "vendor/anyhow/src/lib.rs",
+    "vendor/xla/src/lib.rs",
+];
+
+/// Cold-path functions in `obs/mod.rs` allowed to allocate or lock.
+/// Everything Mutex-backed routes through the `TraceRing`, which is
+/// documented (and gated by `grace_period`) as off the hot path; the
+/// rest are readout/exposition functions no recording site calls.
+const OBS_COLD_FNS: &[&str] = &[
+    "toggle_lock",
+    "TraceRing::new",
+    "TraceRing::record",
+    "TraceRing::events",
+    "TraceRing::total",
+    "Histogram::snapshot",
+    "HistogramSnapshot::empty",
+    "HistogramSnapshot::merge",
+    "HistogramSnapshot::quantile",
+    "HistogramSnapshot::mean",
+    "write_counter",
+    "write_gauge",
+    "write_summary",
+    "exposition_of",
+    "exposition",
+    "trace_total_counter",
+];
+
+/// Tokens that indicate allocation or locking on a source line.
+const HOT_PATH_TOKENS: &[&str] = &[
+    ".lock(",
+    "format!(",
+    "String::",
+    "Vec::new(",
+    "Vec::with_capacity(",
+    "vec![",
+    "VecDeque::new(",
+    "Box::new(",
+    ".to_string(",
+    ".to_owned(",
+    ".to_vec(",
+    ".collect(",
+];
+
+/// Observer kinds the [`crate::observer::ObserverSpec`] registry can
+/// produce, with the file implementing each.
+const SPEC_OBSERVERS: &[(&str, &str)] = &[
+    ("QuantizationObserver", "rust/src/observer/qo.rs"),
+    ("EBst", "rust/src/observer/ebst.rs"),
+    ("TruncatedEBst", "rust/src/observer/ebst.rs"),
+    ("ExhaustiveObserver", "rust/src/observer/exhaustive.rs"),
+];
+
+/// Run every lint rule over the repo rooted at `repo_root`. Findings
+/// carry repo-relative paths and 1-based line numbers.
+pub fn run(repo_root: &Path) -> io::Result<Vec<Finding>> {
+    let mut out = Vec::new();
+    lint_unwrap_conn(repo_root, &mut out)?;
+    lint_obs_hot_path(repo_root, &mut out)?;
+    lint_observer_spec(repo_root, &mut out)?;
+    lint_forbid_unsafe(repo_root, &mut out)?;
+    lint_module_docs(repo_root, &mut out)?;
+    Ok(out)
+}
+
+fn read(repo_root: &Path, rel: &str) -> io::Result<Option<String>> {
+    let path = repo_root.join(rel);
+    if !path.is_file() {
+        return Ok(None);
+    }
+    fs::read_to_string(path).map(Some)
+}
+
+/// Strip a trailing `// …` comment (outside string literals) and return
+/// the code part. Good enough for token scanning on rustfmt'd sources.
+fn code_part(line: &str) -> &str {
+    let bytes = line.as_bytes();
+    let mut in_str = false;
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\\' if in_str => i += 1, // skip the escaped byte
+            b'"' => in_str = !in_str,
+            b'/' if !in_str && i + 1 < bytes.len() && bytes[i + 1] == b'/' => {
+                return &line[..i];
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    line
+}
+
+fn is_comment_only(line: &str) -> bool {
+    let t = line.trim_start();
+    t.starts_with("//") || t.is_empty()
+}
+
+fn allowed(line: &str, rule: &str) -> bool {
+    line.split(ALLOW_MARKER)
+        .skip(1)
+        .any(|rest| rest.starts_with(rule) || rest.starts_with("all)"))
+}
+
+/// Where a file's trailing `#[cfg(test)] mod tests` starts (tests may
+/// unwrap freely), or the line count when there is none.
+fn tests_start(lines: &[&str]) -> usize {
+    lines
+        .iter()
+        .position(|l| l.trim_start().starts_with("#[cfg(test)]"))
+        .unwrap_or(lines.len())
+}
+
+fn lint_unwrap_conn(repo_root: &Path, out: &mut Vec<Finding>) -> io::Result<()> {
+    for rel in CONN_FILES {
+        let Some(text) = read(repo_root, rel)? else {
+            out.push(Finding::at_line(LINT_UNWRAP_CONN, *rel, 1, "connection-path file missing"));
+            continue;
+        };
+        let lines: Vec<&str> = text.lines().collect();
+        let end = tests_start(&lines);
+        for (i, line) in lines[..end].iter().enumerate() {
+            if is_comment_only(line) || allowed(line, "unwrap-conn") {
+                continue;
+            }
+            let code = code_part(line);
+            for token in [".unwrap()", ".expect("] {
+                if code.contains(token) {
+                    out.push(Finding::at_line(
+                        LINT_UNWRAP_CONN,
+                        *rel,
+                        i + 1,
+                        format!(
+                            "{token} on a connection-handling path: a malformed peer \
+                             must not be able to kill this thread"
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Extract the implemented type from an `impl … {` header:
+/// `impl Metrics {` → `Metrics`, `impl Default for Counter {` → `Counter`.
+fn impl_target(line: &str) -> Option<String> {
+    let rest = line.trim_start().strip_prefix("impl")?;
+    let target = match rest.split(" for ").nth(1) {
+        Some(t) => t,
+        None => {
+            // skip a generics group: `impl<'a> Parser<'a> {`
+            let mut t = rest;
+            if t.starts_with('<') {
+                let mut depth = 0usize;
+                let mut end = t.len();
+                for (i, c) in t.char_indices() {
+                    match c {
+                        '<' => depth += 1,
+                        '>' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                end = i + 1;
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                t = &t[end..];
+            }
+            t
+        }
+    };
+    let name: String =
+        target.trim_start().chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+/// Extract a declared fn name from a (possibly indented) `fn` line.
+fn fn_name(line: &str) -> Option<String> {
+    let t = line.trim_start();
+    let t = t.strip_prefix("pub ").unwrap_or(t);
+    let t = t.strip_prefix("pub(crate) ").unwrap_or(t);
+    let t = t.strip_prefix("const ").unwrap_or(t);
+    let rest = t.strip_prefix("fn ")?;
+    let name: String = rest.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+    if name.is_empty() {
+        None
+    } else {
+        Some(name)
+    }
+}
+
+fn lint_obs_hot_path(repo_root: &Path, out: &mut Vec<Finding>) -> io::Result<()> {
+    let rel = "rust/src/obs/mod.rs";
+    let Some(text) = read(repo_root, rel)? else {
+        out.push(Finding::at_line(LINT_OBS_HOT_PATH, rel, 1, "obs/mod.rs missing"));
+        return Ok(());
+    };
+    let lines: Vec<&str> = text.lines().collect();
+    let end = tests_start(&lines);
+    let mut current_impl: Option<String> = None;
+    let mut current_fn: Option<String> = None;
+    for (i, line) in lines[..end].iter().enumerate() {
+        // context tracking (rustfmt shape: impls at indent 0, their
+        // methods at indent 4, closing brace back at column 0)
+        if !line.starts_with(' ') {
+            if line.starts_with("impl") {
+                current_impl = impl_target(line);
+                current_fn = None;
+            } else if line.starts_with('}') {
+                current_impl = None;
+                current_fn = None;
+            } else if let Some(name) = fn_name(line) {
+                current_impl = None;
+                current_fn = Some(name);
+            }
+        } else if line.starts_with("    ") && !line.starts_with("     ") {
+            if let Some(name) = fn_name(line) {
+                current_fn = Some(match &current_impl {
+                    Some(ty) => format!("{ty}::{name}"),
+                    None => name,
+                });
+            }
+        }
+        if is_comment_only(line) || allowed(line, "obs-hot-path") {
+            continue;
+        }
+        let qualified = current_fn.as_deref().unwrap_or("");
+        if OBS_COLD_FNS.contains(&qualified) {
+            continue;
+        }
+        let code = code_part(line);
+        for token in HOT_PATH_TOKENS {
+            if code.contains(token) {
+                out.push(Finding::at_line(
+                    LINT_OBS_HOT_PATH,
+                    rel,
+                    i + 1,
+                    format!(
+                        "{token:?} in {} — allocation/locking is only allowed in the \
+                         cold-path allow-list",
+                        if qualified.is_empty() { "module scope" } else { qualified },
+                    ),
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn lint_observer_spec(repo_root: &Path, out: &mut Vec<Finding>) -> io::Result<()> {
+    for (ty, rel) in SPEC_OBSERVERS {
+        let Some(text) = read(repo_root, rel)? else {
+            out.push(Finding::at_line(
+                LINT_OBSERVER_SPEC,
+                *rel,
+                1,
+                format!("file implementing ObserverSpec kind {ty} is missing"),
+            ));
+            continue;
+        };
+        let lines: Vec<&str> = text.lines().collect();
+        let header = format!("impl AttributeObserver for {ty} ");
+        let start = lines.iter().position(|l| {
+            l.starts_with(&header) || *l == format!("impl AttributeObserver for {ty} {{")
+        });
+        let Some(start) = start else {
+            out.push(Finding::at_line(
+                LINT_OBSERVER_SPEC,
+                *rel,
+                1,
+                format!("no `impl AttributeObserver for {ty}` block"),
+            ));
+            continue;
+        };
+        let block_end = lines[start + 1..]
+            .iter()
+            .position(|l| l.starts_with('}'))
+            .map(|off| start + 1 + off)
+            .unwrap_or(lines.len());
+        for required in ["fn mem_bytes", "fn to_json"] {
+            if !lines[start..block_end].iter().any(|l| l.trim_start().contains(required)) {
+                out.push(Finding::at_line(
+                    LINT_OBSERVER_SPEC,
+                    *rel,
+                    start + 1,
+                    format!(
+                        "{ty} is ObserverSpec-registered but its AttributeObserver impl \
+                         has no `{required}` override"
+                    ),
+                ));
+            }
+        }
+        if !lines.iter().any(|l| l.trim_start().contains("fn from_json")) {
+            out.push(Finding::at_line(
+                LINT_OBSERVER_SPEC,
+                *rel,
+                start + 1,
+                format!("{ty} is ObserverSpec-registered but the file has no `fn from_json`"),
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn lint_forbid_unsafe(repo_root: &Path, out: &mut Vec<Finding>) -> io::Result<()> {
+    let mut roots: Vec<String> = CRATE_ROOTS.iter().map(|r| r.to_string()).collect();
+    // benches are crate roots too
+    let bench_dir = repo_root.join("rust/benches");
+    if bench_dir.is_dir() {
+        let mut benches = Vec::new();
+        for entry in fs::read_dir(&bench_dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if name.ends_with(".rs") {
+                benches.push(format!("rust/benches/{name}"));
+            }
+        }
+        benches.sort();
+        roots.extend(benches);
+    }
+    for rel in &roots {
+        let Some(text) = read(repo_root, rel)? else {
+            out.push(Finding::at_line(LINT_FORBID_UNSAFE, rel.as_str(), 1, "crate root missing"));
+            continue;
+        };
+        if !text.lines().any(|l| l.trim() == "#![forbid(unsafe_code)]") {
+            out.push(Finding::at_line(
+                LINT_FORBID_UNSAFE,
+                rel.as_str(),
+                1,
+                "crate root lacks #![forbid(unsafe_code)]",
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn lint_module_docs(repo_root: &Path, out: &mut Vec<Finding>) -> io::Result<()> {
+    // walk `pub mod` declarations starting from the library root
+    let mut queue: Vec<(String, String)> = vec![("rust/src/lib.rs".to_string(), String::new())];
+    let mut seen = std::collections::BTreeSet::new();
+    while let Some((rel, dir)) = queue.pop() {
+        if !seen.insert(rel.clone()) {
+            continue;
+        }
+        let Some(text) = read(repo_root, &rel)? else {
+            out.push(Finding::at_line(LINT_MODULE_DOCS, rel, 1, "declared module file missing"));
+            continue;
+        };
+        // the file itself must open with `//!` docs (shebang-free Rust)
+        let first_code = text.lines().find(|l| !l.trim().is_empty());
+        if !matches!(first_code, Some(l) if l.trim_start().starts_with("//!")) {
+            out.push(Finding::at_line(
+                LINT_MODULE_DOCS,
+                rel.clone(),
+                1,
+                "public module does not start with //! module docs",
+            ));
+        }
+        // resolve child `pub mod x;` declarations
+        let base = match rel.strip_suffix("/mod.rs") {
+            Some(prefix) => prefix.to_string(),
+            None if rel.ends_with("lib.rs") => "rust/src".to_string(),
+            None => rel.trim_end_matches(".rs").to_string(),
+        };
+        let _ = dir;
+        for line in text.lines() {
+            let t = line.trim();
+            let Some(name) = t.strip_prefix("pub mod ").and_then(|r| r.strip_suffix(';')) else {
+                continue;
+            };
+            let flat = format!("{base}/{name}.rs");
+            let nested = format!("{base}/{name}/mod.rs");
+            if repo_root.join(&flat).is_file() {
+                queue.push((flat, String::new()));
+            } else if repo_root.join(&nested).is_file() {
+                queue.push((nested, String::new()));
+            }
+            // inline `pub mod name { … }` has no file; its docs are the
+            // enclosing file's concern
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The repo root, from the crate manifest dir (tests run in-tree).
+    fn repo_root() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).to_path_buf()
+    }
+
+    #[test]
+    fn repo_is_lint_clean() {
+        let findings = run(&repo_root()).unwrap();
+        assert!(
+            findings.is_empty(),
+            "lint findings:\n{}",
+            findings.iter().map(|f| format!("  {f}\n")).collect::<String>()
+        );
+    }
+
+    #[test]
+    fn helpers_parse_rustfmt_shapes() {
+        assert_eq!(impl_target("impl Metrics {"), Some("Metrics".to_string()));
+        assert_eq!(impl_target("impl Default for Counter {"), Some("Counter".to_string()));
+        assert_eq!(
+            impl_target("impl std::fmt::Display for Finding {"),
+            Some("Finding".to_string())
+        );
+        assert_eq!(impl_target("impl<'a> Parser<'a> {"), Some("Parser".to_string()));
+        assert_eq!(fn_name("    pub fn record(&self, v: u64) {"), Some("record".to_string()));
+        assert_eq!(fn_name("pub const fn new() -> Self {"), Some("new".to_string()));
+        assert_eq!(fn_name("    let x = 1;"), None);
+        assert_eq!(code_part(r#"let s = "// not a comment"; // real"#), r#"let s = "// not a comment"; "#);
+        assert!(allowed("x.lock(); // audit:allow(obs-hot-path): init only", "obs-hot-path"));
+        assert!(!allowed("x.lock(); // audit:allow(unwrap-conn): other rule", "obs-hot-path"));
+    }
+
+    #[test]
+    fn unwrap_tokens_and_test_boundary() {
+        let lines = ["a.unwrap_or_else(|| 0);", "a.unwrap();", "#[cfg(test)]", "b.unwrap();"];
+        assert_eq!(tests_start(&lines), 2);
+        assert!(!lines[0].contains(".unwrap()"));
+        assert!(lines[1].contains(".unwrap()"));
+    }
+}

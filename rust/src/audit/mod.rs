@@ -1,0 +1,106 @@
+//! `audit/` — static analysis for the model state and the repo itself.
+//!
+//! Two halves, one findings vocabulary:
+//!
+//! * [`invariants`] — a **model-invariant verifier** that walks a
+//!   canonical checkpoint document (or a live [`crate::persist::Model`])
+//!   and checks the full catalog in `docs/INVARIANTS.md`: arena topology
+//!   (children after parents, no orphans, depth under cap), QO slot
+//!   tables (strictly code-sorted, positive weights, finite mergeable
+//!   [`crate::stats::VarStats`] — paper Sec. 3), E-BST ordering, leaf
+//!   linear-model finiteness, deferred-attempt queue liveness, delta
+//!   hash-chain continuity, and `mem_bytes()` self-consistency.
+//! * [`lint`] — a std-only **source scanner** enforcing repo rules over
+//!   `rust/src/`: no `unwrap()`/`expect()` on serve/replicate connection
+//!   paths, no allocation or locking in the `obs` hot path outside an
+//!   allow-list, checkpointability of every [`crate::observer::ObserverSpec`]
+//!   kind, `#![forbid(unsafe_code)]` in every crate root, and module
+//!   docs on every public module.
+//!
+//! Both emit structured [`Finding`]s (rule id + location + expected vs
+//! actual) rather than a bare bool, so a corrupted checkpoint or a rule
+//! violation is *explainable* — the serve layer quotes the failing rule
+//! in a follower's `last_resync_cause`, and CI prints findings as NDJSON.
+//!
+//! Verification is **zero-cost on release hot paths**: the boundary
+//! hooks (persist load, follower delta-apply, leader publish) only run
+//! under `debug_assertions` or behind the explicit `qostream audit` CLI
+//! subcommand; the rejection paths in [`crate::serve::replicate`] run it
+//! only after an apply already failed.
+
+pub mod invariants;
+pub mod lint;
+
+use crate::common::json::Json;
+
+/// One structured static-analysis finding.
+///
+/// `rule` is a stable identifier from `docs/INVARIANTS.md` (invariant
+/// rules) or the lint catalog in [`lint`]; `path` locates the violation
+/// (a dotted document path like `model.nodes[3].split.left`, or a
+/// `file:line` pair with `line` set for lint findings); `message` states
+/// expected vs actual.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Finding {
+    /// Stable rule identifier (e.g. `ARENA_CHILD_ORDER`).
+    pub rule: &'static str,
+    /// Document path or source file locating the violation.
+    pub path: String,
+    /// Source line (lint findings only).
+    pub line: Option<usize>,
+    /// Human-readable expected-vs-actual statement.
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(rule: &'static str, path: impl Into<String>, message: impl Into<String>) -> Finding {
+        Finding { rule, path: path.into(), line: None, message: message.into() }
+    }
+
+    pub fn at_line(
+        rule: &'static str,
+        path: impl Into<String>,
+        line: usize,
+        message: impl Into<String>,
+    ) -> Finding {
+        Finding { rule, path: path.into(), line: Some(line), message: message.into() }
+    }
+
+    /// Machine-readable encoding (one NDJSON line per finding in the CLI).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("rule", self.rule).set("path", self.path.as_str());
+        if let Some(line) = self.line {
+            o.set("line", line);
+        }
+        o.set("message", self.message.as_str());
+        o
+    }
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.line {
+            Some(line) => write!(f, "{} {}:{} {}", self.rule, self.path, line, self.message),
+            None => write!(f, "{} at {}: {}", self.rule, self.path, self.message),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finding_renders_rule_path_and_message() {
+        let f = Finding::new("ARENA_CHILD_ORDER", "model.nodes[3]", "left 2 <= parent 3");
+        assert_eq!(format!("{f}"), "ARENA_CHILD_ORDER at model.nodes[3]: left 2 <= parent 3");
+        let j = f.to_json().to_compact();
+        assert!(j.contains("\"rule\":\"ARENA_CHILD_ORDER\""), "{j}");
+        assert!(j.contains("\"path\":\"model.nodes[3]\""), "{j}");
+
+        let l = Finding::at_line("LINT_UNWRAP_CONN", "rust/src/serve/server.rs", 42, "unwrap()");
+        assert_eq!(format!("{l}"), "LINT_UNWRAP_CONN rust/src/serve/server.rs:42 unwrap()");
+        assert!(l.to_json().to_compact().contains("\"line\":42"));
+    }
+}

@@ -50,9 +50,18 @@
 //!   exact merge and p50/p90/p99 readout), a bounded split-decision
 //!   trace ring, and Prometheus text exposition — no-ops when disabled,
 //!   served live via the `metrics` / `trace_splits` protocol commands.
+//! * [`audit`] — the static-analysis gate: a model-invariant verifier
+//!   over checkpoint documents and delta chains (arena topology, QO slot
+//!   tables, E-BST ordering, hash-chain continuity — rule catalog in
+//!   `docs/INVARIANTS.md`) plus a std-only repo lint pass, both emitting
+//!   structured findings; wired into the CLI (`qostream audit`), the
+//!   persist/serve/replicate boundaries, and CI.
 //! * [`common`] — zero-dependency substrate: PRNG, JSON reader/writer,
 //!   ASCII tables/plots, a tiny property-testing harness, CLI parsing.
 
+#![forbid(unsafe_code)]
+
+pub mod audit;
 pub mod bench_suite;
 pub mod common;
 pub mod coordinator;

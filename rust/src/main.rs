@@ -20,6 +20,8 @@
 //!                [--bench [--replication] [--smoke --out F --baseline F]]
 //! qostream checkpoint --out ckpt.json [--model ...] [--instances N]
 //! qostream checkpoint --load ckpt.json
+//! qostream audit --checkpoint ckpt.json [--deltas FILE|DIR] [--json]
+//! qostream audit --self-check
 //! qostream xla [--instances N] [--radius R]
 //! qostream all                                # everything, standard profile
 //! ```
@@ -29,12 +31,16 @@
 //! in `rust/tests/cli_usage.rs`); plain `qostream` prints usage to stdout
 //! and exits 0.
 
-use anyhow::{anyhow, bail, Result};
+#![forbid(unsafe_code)]
 
+use anyhow::{anyhow, bail, Context, Result};
+
+use qostream::audit::invariants;
 use qostream::bench_suite::{
     cd, fig1, fig3, forest_bench, protocol::Profile, serve_bench, tree_bench, Protocol,
 };
 use qostream::common::cli::Args;
+use qostream::common::json::Json;
 use qostream::common::timing::human_time;
 use qostream::coordinator::{CoordinatorConfig, ShardedObserverCoordinator};
 use qostream::criterion::VarianceReduction;
@@ -44,7 +50,7 @@ use qostream::forest::{
     SubspaceSize,
 };
 use qostream::observer::{AttributeObserver, ObserverSpec};
-use qostream::persist::Model;
+use qostream::persist::{codec, delta, Model};
 use qostream::runtime::{find_artifacts_dir, Manifest, SplitBackendKind, XlaSplitEngine};
 use qostream::serve::{Follower, FollowerOptions, ServeOptions, Server};
 use qostream::stream::{Friedman1, Stream};
@@ -488,6 +494,150 @@ fn cmd_checkpoint(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Read wire-delta records for `audit --deltas`: either one NDJSON file
+/// (one `{"from","to","hash","ops"}` record per line) or a directory of
+/// `*.json` record files replayed in lexicographic order.
+fn audit_deltas_from(path: &str) -> Result<Vec<Json>> {
+    let meta = std::fs::metadata(path).with_context(|| format!("reading deltas {path}"))?;
+    let mut sources: Vec<(String, String)> = Vec::new();
+    if meta.is_dir() {
+        let mut files: Vec<std::path::PathBuf> = std::fs::read_dir(path)
+            .with_context(|| format!("listing deltas {path}"))?
+            .filter_map(|entry| entry.ok().map(|e| e.path()))
+            .filter(|p| p.extension().map_or(false, |ext| ext == "json"))
+            .collect();
+        files.sort();
+        for file in files {
+            let text = std::fs::read_to_string(&file)
+                .with_context(|| format!("reading delta {}", file.display()))?;
+            sources.push((file.display().to_string(), text));
+        }
+    } else {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading deltas {path}"))?;
+        sources.push((path.to_string(), text));
+    }
+    let mut records = Vec::new();
+    for (name, text) in sources {
+        for line in text.lines().map(str::trim).filter(|l| !l.is_empty()) {
+            records.push(Json::parse(line).map_err(|e| anyhow!("parsing {name}: {e}"))?);
+        }
+    }
+    Ok(records)
+}
+
+/// `audit --self-check`: train a model in-memory, build a checkpoint and
+/// a delta chain, require both to verify clean, then inject canary
+/// corruptions and require each to be detected under its rule id — the
+/// CI `static-analysis` job's end-to-end check of the verifier itself.
+fn audit_self_check() -> Result<()> {
+    let mut model = Model::Tree(HoeffdingTreeRegressor::new(
+        10,
+        HtrOptions::default(),
+        observer_factory("qo")?,
+    ));
+    let mut stream = Friedman1::new(42, 1.0);
+    for _ in 0..4000 {
+        let Some(inst) = stream.next_instance() else { break };
+        model.learn_one(&inst.x, inst.y);
+    }
+    let base = model.to_checkpoint()?;
+    let mut deltas = Vec::new();
+    let mut prev = base.clone();
+    for v in 0..3u64 {
+        for _ in 0..400 {
+            let Some(inst) = stream.next_instance() else { break };
+            model.learn_one(&inst.x, inst.y);
+        }
+        let next = model.to_checkpoint()?;
+        let mut wire = Json::obj();
+        wire.set("from", codec::ju64(v))
+            .set("to", codec::ju64(v + 1))
+            .set("hash", codec::ju64(delta::doc_hash(&next)))
+            .set("ops", delta::diff(&prev, &next));
+        deltas.push(wire);
+        prev = next;
+    }
+
+    let clean = invariants::verify_model(&model);
+    if !clean.is_empty() {
+        for f in &clean {
+            println!("{f}");
+        }
+        bail!("audit self-check: a freshly trained model failed its own audit");
+    }
+    let chain = invariants::verify_delta_chain(&base, &deltas);
+    if !chain.is_empty() {
+        for f in &chain {
+            println!("{f}");
+        }
+        bail!("audit self-check: a clean delta chain failed its own audit");
+    }
+
+    let mut missed: Vec<String> = Vec::new();
+    let mut canary = |name: &str, rule: &str, findings: Vec<qostream::audit::Finding>| {
+        if !findings.iter().any(|f| f.rule == rule) {
+            missed.push(format!("{name} (expected {rule})"));
+        }
+    };
+    let mut doc = base.clone();
+    doc.set("kind", "mystery");
+    canary("corrupted kind tag", invariants::CKPT_ENVELOPE, invariants::verify_checkpoint(&doc));
+    let mut broken = deltas.clone();
+    broken[1].set("hash", codec::ju64(1));
+    canary(
+        "corrupted delta hash",
+        invariants::DELTA_HASH_CHAIN,
+        invariants::verify_delta_chain(&base, &broken),
+    );
+    let gapped = vec![deltas[0].clone(), deltas[2].clone()];
+    canary(
+        "missing middle delta",
+        invariants::DELTA_VERSION_ORDER,
+        invariants::verify_delta_chain(&base, &gapped),
+    );
+    if !missed.is_empty() {
+        bail!("audit self-check: canaries not detected: {}", missed.join(", "));
+    }
+    println!(
+        "audit self-check: clean model + {}-delta chain verified; 3/3 canary corruptions detected",
+        deltas.len()
+    );
+    Ok(())
+}
+
+fn cmd_audit(args: &Args) -> Result<()> {
+    if args.flag("self-check") {
+        return audit_self_check();
+    }
+    let path = args
+        .opt("checkpoint")
+        .ok_or_else(|| anyhow!("audit needs --checkpoint <file> (or --self-check)"))?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let doc = Json::parse(text.trim_end()).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+    let mut findings = invariants::verify_checkpoint(&doc);
+    let mut checked = format!("checkpoint {path}");
+    if let Some(deltas_path) = args.opt("deltas") {
+        let records = audit_deltas_from(deltas_path)?;
+        findings.extend(invariants::verify_delta_chain(&doc, &records));
+        checked.push_str(&format!(" + {} delta record(s) from {deltas_path}", records.len()));
+    }
+    let json = args.flag("json");
+    for f in &findings {
+        if json {
+            println!("{}", f.to_json().to_compact());
+        } else {
+            println!("{f}");
+        }
+    }
+    if findings.is_empty() {
+        println!("audit: clean ({checked})");
+        Ok(())
+    } else {
+        bail!("audit: {} finding(s) in {checked}", findings.len());
+    }
+}
+
 fn cmd_xla(args: &Args) -> Result<()> {
     let dir = find_artifacts_dir()?;
     let manifest = Manifest::load(&dir)?;
@@ -568,6 +718,8 @@ SUBCOMMANDS
                 --smoke writes/gates BENCH_ci.json) --out BENCH_ci.json --baseline FILE]]
   checkpoint   save/restore model checkpoints     [--out ckpt.json | --load ckpt.json
                                                    --model --observer --members --instances N]
+  audit        verify checkpoint invariants       [--checkpoint ckpt.json [--deltas FILE|DIR]
+               (rule catalog: docs/INVARIANTS.md)  --json | --self-check]
   xla          AOT split-eval via PJRT artifacts  [--instances N --radius R]
   all          fig1 + fig3 + cd + tree + forest (standard profile)
 ";
@@ -583,6 +735,7 @@ fn run(args: &Args) -> Result<()> {
         Some("coordinator") => cmd_coordinator(args),
         Some("serve") => cmd_serve(args),
         Some("checkpoint") => cmd_checkpoint(args),
+        Some("audit") => cmd_audit(args),
         Some("xla") => cmd_xla(args),
         Some("all") => cmd_all(args),
         Some(other) => bail!("unknown subcommand {other:?}"),

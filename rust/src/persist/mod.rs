@@ -25,6 +25,13 @@
 //! travel through Rust's shortest-round-trip `Display` (non-finite ones
 //! as tagged strings).
 //!
+//! The structural invariants a checkpoint must satisfy (arena topology,
+//! QO slot tables, delta hash chains, …) are cataloged in
+//! `docs/INVARIANTS.md` and re-checked *independently of the decoders*
+//! by [`crate::audit::invariants`]; debug builds run that verifier at
+//! [`Model::load`], and `rust/tests/audit_corruption.rs` proves every
+//! single-field corruption is caught with its rule id.
+//!
 //! ## Format
 //!
 //! ```json
@@ -143,11 +150,28 @@ impl Model {
     }
 
     /// Load a checkpoint file written by [`Model::save`].
+    ///
+    /// Debug builds audit the document against the invariant catalog
+    /// (`docs/INVARIANTS.md`) *before* decoding: a corrupted file fails
+    /// loudly with the broken rule named, never silently loads. Release
+    /// builds skip the audit (the decoders keep their own hard checks);
+    /// `qostream audit --checkpoint FILE` runs it on demand.
     pub fn load(path: impl AsRef<Path>) -> Result<Model> {
         let path = path.as_ref();
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading checkpoint {}", path.display()))?;
-        Model::from_text(text.trim_end())
+        let doc = Json::parse(text.trim_end())
+            .map_err(|e| anyhow!("decoding checkpoint {}: {e}", path.display()))?;
+        #[cfg(debug_assertions)]
+        {
+            if let Some(cause) = crate::audit::invariants::explain(&doc) {
+                return Err(anyhow!(
+                    "checkpoint {} fails audit: {cause} (see docs/INVARIANTS.md)",
+                    path.display()
+                ));
+            }
+        }
+        Model::from_checkpoint(&doc)
             .map_err(|e| e.context(format!("decoding checkpoint {}", path.display())))
     }
 

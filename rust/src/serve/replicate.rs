@@ -49,6 +49,13 @@
 //! * **Leader loss.** Poll failures never take the replica down: it keeps
 //!   serving its last applied version (staleness is visible in `stats`)
 //!   and reconnects with backoff.
+//! * **Explainable divergence.** A rejected payload is re-run through the
+//!   model-invariant auditor ([`crate::audit::invariants`]); when a rule
+//!   from `docs/INVARIANTS.md` is broken, its id rides along in the apply
+//!   error — so `last_resync_cause` reads like "decoding v9: … [audit:
+//!   ARENA_CHILD_ORDER at model.nodes[7].split.left]" instead of a bare
+//!   decode symptom. Debug builds additionally audit every *accepted*
+//!   document before installing it.
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -155,6 +162,17 @@ fn install(shared: &FollowerShared, version: u64, hash: u64, doc: Json, model: M
     }
 }
 
+/// Enrich a rejection error with the invariant the offending document
+/// breaks, when the auditor finds one: `last_resync_cause` then names
+/// the broken rule (docs/INVARIANTS.md), not just the decode symptom.
+/// Runs only after an apply already failed — never on the accept path.
+fn audit_cause(doc: &Json, e: anyhow::Error) -> anyhow::Error {
+    match crate::audit::invariants::explain(doc) {
+        Some(cause) => anyhow!("{e} [audit: {cause}]"),
+        None => e,
+    }
+}
+
 /// Handle one successful `repl_sync` response. Returns an error when the
 /// payload could not be applied — the caller then forces a full resync.
 fn apply_sync(shared: &FollowerShared, response: &Json) -> Result<()> {
@@ -186,9 +204,16 @@ fn apply_sync(shared: &FollowerShared, response: &Json) -> Result<()> {
     if let Some(full) = response.get("full") {
         let hash = pu64(field(response, "hash")?, "hash")?;
         if delta::doc_hash(full) != hash {
-            return Err(anyhow!("full document hash mismatch"));
+            return Err(audit_cause(full, anyhow!("full document hash mismatch")));
         }
-        let model = Model::from_checkpoint(full)?;
+        // debug builds audit every accepted document before it can serve
+        #[cfg(debug_assertions)]
+        {
+            if let Some(cause) = crate::audit::invariants::explain(full) {
+                return Err(anyhow!("full document fails audit: {cause}"));
+            }
+        }
+        let model = Model::from_checkpoint(full).map_err(|e| audit_cause(full, e))?;
         install(shared, leader_version, hash, full.clone(), model);
         shared.full_resyncs.fetch_add(1, Ordering::Relaxed);
         if let Some(m) = crate::obs::m() {
@@ -212,10 +237,20 @@ fn apply_sync(shared: &FollowerShared, response: &Json) -> Result<()> {
             doc = delta::apply(&doc, ops)
                 .map_err(|e| e.context(format!("applying delta {from}→{to}")))?;
             if delta::doc_hash(&doc) != hash {
-                return Err(anyhow!("hash mismatch after applying delta to v{to}"));
+                return Err(audit_cause(
+                    &doc,
+                    anyhow!("hash mismatch after applying delta to v{to}"),
+                ));
+            }
+            // debug builds audit every accepted document before it serves
+            #[cfg(debug_assertions)]
+            {
+                if let Some(cause) = crate::audit::invariants::explain(&doc) {
+                    return Err(anyhow!("document at v{to} fails audit: {cause}"));
+                }
             }
             let model = Model::from_checkpoint(&doc)
-                .map_err(|e| e.context(format!("decoding v{to}")))?;
+                .map_err(|e| audit_cause(&doc, e.context(format!("decoding v{to}"))))?;
             install(shared, to, hash, doc.clone(), model);
             shared.deltas_applied.fetch_add(1, Ordering::Relaxed);
             if let Some(m) = crate::obs::m() {
@@ -290,7 +325,14 @@ fn poll_loop(shared: Arc<FollowerShared>, options: FollowerOptions) {
         } else {
             Some(shared.version.load(Ordering::SeqCst))
         };
-        let response = match client.as_mut().expect("connected above").repl_sync(have) {
+        // connected above, but a read-replica must never die on an
+        // assertion — a missing client is treated like a dropped leader
+        let Some(conn) = client.as_mut() else {
+            shared.poll_errors.fetch_add(1, Ordering::Relaxed);
+            thread::sleep(options.reconnect_backoff);
+            continue;
+        };
+        let response = match conn.repl_sync(have) {
             Ok(r) => r,
             Err(_) => {
                 // leader gone or mid-restart: drop the connection, keep

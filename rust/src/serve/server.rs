@@ -159,6 +159,14 @@ fn publish_snapshot(
         return Ok(((*doc).clone(), version));
     }
     let doc = model.to_checkpoint().map_err(|e| e.to_string())?;
+    // debug builds audit every document before it can reach readers or
+    // followers (docs/INVARIANTS.md); release publishes are untaxed
+    #[cfg(debug_assertions)]
+    {
+        if let Some(cause) = crate::audit::invariants::explain(&doc) {
+            return Err(format!("published checkpoint fails audit: {cause}"));
+        }
+    }
     let clone = Model::from_checkpoint(&doc).map_err(|e| e.to_string())?;
     let shared = Arc::new(clone);
     match snapshot.write() {

@@ -1,0 +1,388 @@
+//! Corruption-detection property test for the `audit::invariants`
+//! verifier (satellite contract): over the same model × observer corpus
+//! the persist round-trip suite uses, every clean checkpoint must verify
+//! with **zero findings**, and every single-field mutation — a bit-flipped
+//! float, swapped arena children, a truncated QO slot table, a broken
+//! delta hash — must be flagged with its designed rule id. In debug
+//! builds the test additionally proves `Model::load` never *silently*
+//! accepts a mutated file (the boundary hook turns findings into errors).
+
+use std::collections::BTreeMap;
+
+use qostream::audit::invariants;
+use qostream::common::json::Json;
+use qostream::common::Rng;
+use qostream::eval::Regressor;
+use qostream::forest::{ArfOptions, ArfRegressor, OnlineBaggingRegressor};
+use qostream::observer::ObserverSpec;
+use qostream::persist::codec::{ju64, jusize};
+use qostream::persist::{delta, Model};
+use qostream::tree::{HoeffdingTreeRegressor, HtrOptions};
+
+/// One synthetic instance: 4 features, a piecewise target with noise
+/// (the persist_roundtrip stream).
+fn draw_instance(rng: &mut Rng) -> (Vec<f64>, f64) {
+    let x: Vec<f64> = (0..4).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let base = if x[0] <= 0.0 { 3.0 * x[1] } else { -2.0 + x[2] };
+    let y = base + rng.normal(0.0, 0.2);
+    (x, y)
+}
+
+/// Train one model of `kind` ("tree" | "arf" | "bagging") over `label`'s
+/// observer for `n` instances.
+fn trained(label: &str, kind: &str, rng: &mut Rng, n: usize) -> Model {
+    let fac = || ObserverSpec::from_label(label).expect(label).to_factory();
+    let tree_opts = HtrOptions { grace_period: 100, ..Default::default() };
+    let mut model = match kind {
+        "tree" => Model::Tree(HoeffdingTreeRegressor::new(4, tree_opts, fac())),
+        "arf" => Model::Arf(ArfRegressor::new(
+            4,
+            ArfOptions {
+                n_members: 2,
+                lambda: 2.0,
+                seed: rng.next_u64(),
+                tree: tree_opts,
+                ..Default::default()
+            },
+            fac(),
+        )),
+        "bagging" => Model::Bagging(OnlineBaggingRegressor::new(
+            4,
+            2,
+            1.5,
+            tree_opts,
+            fac(),
+            rng.next_u64(),
+        )),
+        other => panic!("unknown kind {other}"),
+    };
+    for _ in 0..n {
+        let (x, y) = draw_instance(rng);
+        model.learn_one(&x, y);
+    }
+    model
+}
+
+// -- mutable JSON navigation (the enum variants are public) ----------------
+
+fn obj_mut(j: &mut Json) -> &mut BTreeMap<String, Json> {
+    match j {
+        Json::Obj(map) => map,
+        other => panic!("expected a JSON object, got {}", other.to_compact()),
+    }
+}
+
+fn arr_mut(j: &mut Json) -> &mut Vec<Json> {
+    match j {
+        Json::Arr(items) => items,
+        other => panic!("expected a JSON array, got {}", other.to_compact()),
+    }
+}
+
+fn nodes_mut(doc: &mut Json) -> &mut Vec<Json> {
+    let model = obj_mut(doc).get_mut("model").expect("model payload");
+    arr_mut(obj_mut(model).get_mut("nodes").expect("node arena"))
+}
+
+fn nodes(doc: &Json) -> &[Json] {
+    doc.get("model")
+        .and_then(|m| m.get("nodes"))
+        .and_then(Json::as_arr)
+        .expect("node arena")
+}
+
+/// Index of the first node holding a `leaf` / `split` payload.
+fn first_with(doc: &Json, key: &str) -> usize {
+    nodes(doc)
+        .iter()
+        .position(|n| n.get(key).is_some())
+        .unwrap_or_else(|| panic!("trained tree should hold a {key} node"))
+}
+
+/// (node, observer) indexes of the first observer matching `pred`.
+fn find_observer(doc: &Json, pred: impl Fn(&Json) -> bool) -> Option<(usize, usize)> {
+    for (ni, node) in nodes(doc).iter().enumerate() {
+        let Some(leaf) = node.get("leaf") else { continue };
+        let Some(observers) = leaf.get("observers").and_then(Json::as_arr) else { continue };
+        for (oi, o) in observers.iter().enumerate() {
+            if pred(o) {
+                return Some((ni, oi));
+            }
+        }
+    }
+    None
+}
+
+fn observer_mut(doc: &mut Json, ni: usize, oi: usize) -> &mut Json {
+    let node = &mut nodes_mut(doc)[ni];
+    let leaf = obj_mut(node).get_mut("leaf").expect("leaf payload");
+    let observers = arr_mut(obj_mut(leaf).get_mut("observers").expect("observer list"));
+    &mut observers[oi]
+}
+
+// -- assertions ------------------------------------------------------------
+
+/// The mutated document must trip `rule` (other findings may ride along —
+/// a truncated slot table also breaks the sum — but `rule` must be there).
+fn assert_rule(doc: &Json, rule: &str, what: &str) {
+    let findings = invariants::verify_checkpoint(doc);
+    assert!(
+        findings.iter().any(|f| f.rule == rule),
+        "{what}: expected a {rule} finding, got {findings:?}"
+    );
+}
+
+/// Debug builds must refuse to load the mutated file (release decoders
+/// may accept value-level corruption; the audit hook is debug-gated).
+#[cfg(debug_assertions)]
+fn assert_load_rejects(doc: &Json, what: &str) {
+    let path = std::env::temp_dir()
+        .join(format!("qostream-audit-corrupt-{}-{what}.json", std::process::id()));
+    std::fs::write(&path, format!("{}\n", doc.to_compact())).expect("write mutated checkpoint");
+    let result = Model::load(&path);
+    std::fs::remove_file(&path).ok();
+    assert!(result.is_err(), "{what}: Model::load silently accepted a corrupted checkpoint");
+}
+
+#[cfg(not(debug_assertions))]
+fn assert_load_rejects(_doc: &Json, _what: &str) {}
+
+// -- the corpus is clean (zero false positives) ----------------------------
+
+#[test]
+fn clean_corpus_has_zero_findings() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for label in ["QO_s2", "QO_0.05", "E-BST", "TE-BST_3", "Exhaustive"] {
+        for kind in ["tree", "arf", "bagging"] {
+            let n = if kind == "tree" { 900 } else { 500 };
+            let model = trained(label, kind, &mut rng, n);
+            let findings = invariants::verify_model(&model);
+            assert!(
+                findings.is_empty(),
+                "false positives on a clean {kind}[{label}]: {findings:?}"
+            );
+        }
+    }
+}
+
+// -- single-field mutations on a tree checkpoint ---------------------------
+
+#[test]
+fn envelope_and_stats_mutations_are_flagged() {
+    let mut rng = Rng::new(0xBADF00D);
+    let clean = trained("QO_s2", "tree", &mut rng, 1500).to_checkpoint().expect("encode");
+    assert!(invariants::verify_checkpoint(&clean).is_empty());
+
+    // unknown kind tag
+    let mut doc = clean.clone();
+    doc.set("kind", "mystery");
+    assert_rule(&doc, invariants::CKPT_ENVELOPE, "kind tag");
+    assert_load_rejects(&doc, "kind");
+
+    // bit-flipped float: a leaf mean that decodes to NaN
+    let mut doc = clean.clone();
+    let li = first_with(&doc, "leaf");
+    {
+        let node = &mut nodes_mut(&mut doc)[li];
+        let leaf = obj_mut(node).get_mut("leaf").expect("leaf");
+        let stats = arr_mut(obj_mut(leaf).get_mut("stats").expect("stats"));
+        stats[1] = Json::Str("NaN".into());
+    }
+    assert_rule(&doc, invariants::VARSTATS_INVALID, "NaN leaf mean");
+    assert_load_rejects(&doc, "nan-mean");
+
+    // negative sample count
+    let mut doc = clean.clone();
+    {
+        let node = &mut nodes_mut(&mut doc)[li];
+        let leaf = obj_mut(node).get_mut("leaf").expect("leaf");
+        let stats = arr_mut(obj_mut(leaf).get_mut("stats").expect("stats"));
+        stats[0] = Json::Num(-2.0);
+    }
+    assert_rule(&doc, invariants::VARSTATS_INVALID, "negative leaf n");
+    assert_load_rejects(&doc, "neg-n");
+
+    // declared leaf depth disagrees with the arena
+    let mut doc = clean.clone();
+    {
+        let node = &mut nodes_mut(&mut doc)[li];
+        let leaf = obj_mut(node).get_mut("leaf").expect("leaf");
+        leaf.set("depth", jusize(60));
+    }
+    assert_rule(&doc, invariants::ARENA_DEPTH, "forged leaf depth");
+    assert_load_rejects(&doc, "depth");
+
+    // deferred-attempt queue pointing at a node that does not exist
+    let mut doc = clean.clone();
+    {
+        let model = obj_mut(&mut doc).get_mut("model").expect("model");
+        let pending = arr_mut(obj_mut(model).get_mut("pending").expect("pending queue"));
+        pending.push(jusize(9999));
+    }
+    assert_rule(&doc, invariants::PENDING_LEAF, "dangling pending entry");
+    assert_load_rejects(&doc, "pending");
+}
+
+#[test]
+fn arena_child_mutations_are_flagged() {
+    let mut rng = Rng::new(0x5EED);
+    let clean = trained("QO_s2", "tree", &mut rng, 2500).to_checkpoint().expect("encode");
+    assert!(invariants::verify_checkpoint(&clean).is_empty());
+    let si = first_with(&clean, "split");
+
+    // child pointing backwards (breaks the anti-cycle ordering)
+    let mut doc = clean.clone();
+    {
+        let node = &mut nodes_mut(&mut doc)[si];
+        let split = obj_mut(node).get_mut("split").expect("split");
+        split.set("left", jusize(0));
+    }
+    assert_rule(&doc, invariants::ARENA_CHILD_ORDER, "backward child");
+    assert_load_rejects(&doc, "backward-child");
+
+    // both children aliased to one node (the sibling becomes an orphan)
+    let mut doc = clean.clone();
+    {
+        let node = &mut nodes_mut(&mut doc)[si];
+        let split = obj_mut(node).get_mut("split").expect("split");
+        let right = split.get("right").cloned().expect("right child");
+        split.set("left", right);
+    }
+    assert_rule(&doc, invariants::ARENA_CHILD_ORDER, "aliased children");
+    assert_load_rejects(&doc, "aliased-children");
+}
+
+// -- QO slot-table mutations ----------------------------------------------
+
+/// A frozen-radius QO observer with at least two slots (fixed-radius QO
+/// freezes immediately, so `QO_0.05` always yields one).
+fn frozen_qo(doc: &Json) -> (usize, usize) {
+    find_observer(doc, |o| {
+        o.get("type").and_then(Json::as_str) == Some("qo")
+            && o.get("state").is_some_and(|s| s.get("frozen").is_some())
+            && o.get("slots").and_then(Json::as_arr).is_some_and(|s| s.len() >= 2)
+    })
+    .expect("a frozen QO observer with >= 2 slots")
+}
+
+#[test]
+fn qo_slot_table_mutations_are_flagged() {
+    let mut rng = Rng::new(0x9005);
+    let clean = trained("QO_0.05", "tree", &mut rng, 1500).to_checkpoint().expect("encode");
+    assert!(invariants::verify_checkpoint(&clean).is_empty());
+    let (ni, oi) = frozen_qo(&clean);
+
+    // truncated slot table: the slot mass no longer sums to the total
+    let mut doc = clean.clone();
+    arr_mut(obj_mut(observer_mut(&mut doc, ni, oi)).get_mut("slots").expect("slots")).pop();
+    assert_rule(&doc, invariants::QO_TOTAL_DRIFT, "truncated slot table");
+    assert_load_rejects(&doc, "slot-truncated");
+
+    // slots out of code order
+    let mut doc = clean.clone();
+    arr_mut(obj_mut(observer_mut(&mut doc, ni, oi)).get_mut("slots").expect("slots")).swap(0, 1);
+    assert_rule(&doc, invariants::QO_SLOT_ORDER, "swapped slots");
+    assert_load_rejects(&doc, "slot-order");
+
+    // a slot claiming zero weight
+    let mut doc = clean.clone();
+    {
+        let slots =
+            arr_mut(obj_mut(observer_mut(&mut doc, ni, oi)).get_mut("slots").expect("slots"));
+        let stats = arr_mut(&mut arr_mut(&mut slots[0])[2]);
+        stats[0] = Json::Num(0.0);
+    }
+    assert_rule(&doc, invariants::QO_SLOT_WEIGHT, "weightless slot");
+    assert_load_rejects(&doc, "slot-weight");
+}
+
+// -- E-BST ordering --------------------------------------------------------
+
+#[test]
+fn ebst_key_swap_is_flagged() {
+    let mut rng = Rng::new(0xEB57);
+    let clean = trained("E-BST", "tree", &mut rng, 1500).to_checkpoint().expect("encode");
+    assert!(invariants::verify_checkpoint(&clean).is_empty());
+
+    let none = u64::from(u32::MAX);
+    let (ni, oi) = find_observer(&clean, |o| {
+        o.get("type").and_then(Json::as_str) == Some("ebst")
+            && o.get("nodes").and_then(Json::as_arr).is_some_and(|s| s.len() >= 2)
+    })
+    .expect("an E-BST observer with >= 2 nodes");
+
+    // swap the root key with one of its children: the child now sits on
+    // the wrong side of its own bound
+    let mut doc = clean.clone();
+    {
+        let o = observer_mut(&mut doc, ni, oi);
+        let root = o.get("root").and_then(Json::as_str).expect("root").parse::<u64>().expect("u64")
+            as usize;
+        let ebst_nodes = arr_mut(obj_mut(o).get_mut("nodes").expect("ebst nodes"));
+        let row = ebst_nodes[root].as_arr().expect("row");
+        let left = row[2].as_str().and_then(|s| s.parse::<u64>().ok()).expect("left");
+        let right = row[3].as_str().and_then(|s| s.parse::<u64>().ok()).expect("right");
+        let child = if left != none { left as usize } else { right as usize };
+        let root_key = arr_mut(&mut ebst_nodes[root])[0].clone();
+        let child_key = arr_mut(&mut ebst_nodes[child])[0].clone();
+        arr_mut(&mut ebst_nodes[root])[0] = child_key;
+        arr_mut(&mut ebst_nodes[child])[0] = root_key;
+    }
+    assert_rule(&doc, invariants::EBST_KEY_ORDER, "swapped E-BST keys");
+    assert_load_rejects(&doc, "ebst-keys");
+}
+
+// -- delta chains ----------------------------------------------------------
+
+#[test]
+fn delta_chain_corruptions_are_flagged() {
+    let mut rng = Rng::new(0xDE17A);
+    let mut model = trained("QO_s2", "tree", &mut rng, 1200);
+    let base = model.to_checkpoint().expect("encode base");
+
+    let mut deltas = Vec::new();
+    let mut prev = base.clone();
+    for v in 0..3u64 {
+        for _ in 0..200 {
+            let (x, y) = draw_instance(&mut rng);
+            model.learn_one(&x, y);
+        }
+        let next = model.to_checkpoint().expect("encode step");
+        let mut wire = Json::obj();
+        wire.set("from", ju64(v))
+            .set("to", ju64(v + 1))
+            .set("hash", ju64(delta::doc_hash(&next)))
+            .set("ops", delta::diff(&prev, &next));
+        deltas.push(wire);
+        prev = next;
+    }
+
+    let findings = invariants::verify_delta_chain(&base, &deltas);
+    assert!(findings.is_empty(), "false positives on a clean chain: {findings:?}");
+
+    // advertised hash does not match the applied document
+    let mut broken = deltas.clone();
+    broken[1].set("hash", ju64(0xDEAD_BEEF));
+    let findings = invariants::verify_delta_chain(&base, &broken);
+    assert!(
+        findings.iter().any(|f| f.rule == invariants::DELTA_HASH_CHAIN),
+        "expected DELTA_HASH_CHAIN, got {findings:?}"
+    );
+
+    // a version gap (the middle delta went missing)
+    let gapped = vec![deltas[0].clone(), deltas[2].clone()];
+    let findings = invariants::verify_delta_chain(&base, &gapped);
+    assert!(
+        findings.iter().any(|f| f.rule == invariants::DELTA_VERSION_ORDER),
+        "expected DELTA_VERSION_ORDER, got {findings:?}"
+    );
+
+    // a delta claiming to jump two versions at once
+    let mut skipping = deltas.clone();
+    skipping[2].set("to", ju64(9));
+    let findings = invariants::verify_delta_chain(&base, &skipping);
+    assert!(
+        findings.iter().any(|f| f.rule == invariants::DELTA_VERSION_ORDER),
+        "expected DELTA_VERSION_ORDER, got {findings:?}"
+    );
+}

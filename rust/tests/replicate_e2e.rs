@@ -2,8 +2,10 @@
 //! a leader trains and publishes versioned delta checkpoints, followers
 //! poll/apply them, and the acceptance contract holds — **bit-identical
 //! predictions to the leader at every applied version**, gap detection →
-//! full resync, follower kill/restart → clean re-bootstrap, and a sharded
-//! leader replicating exactly like a sequential one.
+//! full resync, follower kill/restart → clean re-bootstrap, a sharded
+//! leader replicating exactly like a sequential one, and a poisoned
+//! leader payload rejected with the broken invariant's rule id named in
+//! `last_resync_cause` (docs/INVARIANTS.md).
 
 use std::time::{Duration, Instant};
 
@@ -304,6 +306,168 @@ fn follower_rejects_learns_but_serves_reads() {
     let mut leader_client = ServeClient::connect(server.addr()).expect("leader client");
     leader_client.shutdown().expect("leader shutdown");
     server.join().expect("leader exit");
+}
+
+/// Explainable divergence: a leader that serves a corrupted document —
+/// with a *matching* hash, so only the decode/audit layer can object —
+/// must not take the replica down. The replica rejects the payload,
+/// names the broken invariant's rule id in `last_resync_cause`, and
+/// recovers through the normal full-resync path.
+#[test]
+fn corrupted_leader_payload_is_rejected_and_explained() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpListener;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    use qostream::common::Rng;
+    use qostream::persist::codec::{ju64, jusize};
+    use qostream::persist::delta;
+    use qostream::tree::{HoeffdingTreeRegressor, HtrOptions};
+
+    // a tree with at least one split (the audit_corruption stream:
+    // 4 features, piecewise target)
+    let mut rng = Rng::new(0xFADE);
+    let mut model = Model::Tree(HoeffdingTreeRegressor::new(
+        4,
+        HtrOptions { grace_period: 100, ..Default::default() },
+        qo_factory(),
+    ));
+    for _ in 0..2500 {
+        let x: Vec<f64> = (0..4).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let base = if x[0] <= 0.0 { 3.0 * x[1] } else { -2.0 + x[2] };
+        model.learn_one(&x, base + rng.normal(0.0, 0.2));
+    }
+    let valid = model.to_checkpoint().expect("checkpoint");
+
+    // point the first split's left child back at the root: breaks
+    // ARENA_CHILD_ORDER while the document stays well-formed JSON
+    let mut corrupt = valid.clone();
+    {
+        let Json::Obj(doc) = &mut corrupt else { panic!("checkpoint object") };
+        let Some(Json::Obj(tree)) = doc.get_mut("model") else { panic!("model") };
+        let Some(Json::Arr(nodes)) = tree.get_mut("nodes") else { panic!("nodes") };
+        let split = nodes
+            .iter_mut()
+            .find_map(|n| match n {
+                Json::Obj(node) => node.get_mut("split"),
+                _ => None,
+            })
+            .expect("trained tree should hold a split");
+        let Json::Obj(split) = split else { panic!("split object") };
+        split.insert("left".to_string(), jusize(0));
+    }
+    let h_valid = delta::doc_hash(&valid);
+    let h_corrupt = delta::doc_hash(&corrupt);
+
+    // canned repl_sync responses of a minimal fake leader
+    let line = |version: u64, hash: u64, body: Option<(&str, Json)>| {
+        let mut o = Json::obj();
+        o.set("ok", true).set("version", ju64(version)).set("hash", ju64(hash));
+        match body {
+            Some((key, value)) => o.set(key, value),
+            None => o.set("up_to_date", true),
+        };
+        o.to_compact()
+    };
+    struct FakeLeader {
+        boot: String,
+        poison: String,
+        recover: String,
+        up_to_date: String,
+        bootstrapped: AtomicBool,
+        poisoned: AtomicBool,
+    }
+    let leader = Arc::new(FakeLeader {
+        boot: line(0, h_valid, Some(("full", valid.clone()))),
+        poison: line(1, h_corrupt, Some(("full", corrupt))),
+        recover: line(2, h_valid, Some(("full", valid))),
+        up_to_date: line(2, h_valid, None),
+        bootstrapped: AtomicBool::new(false),
+        poisoned: AtomicBool::new(false),
+    });
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind fake leader");
+    let leader_addr = listener.local_addr().expect("leader addr").to_string();
+    {
+        let leader = leader.clone();
+        std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                let Ok(stream) = conn else { continue };
+                let leader = leader.clone();
+                std::thread::spawn(move || {
+                    let Ok(read_half) = stream.try_clone() else { return };
+                    let mut stream = stream;
+                    for req in BufReader::new(read_half).lines() {
+                        let Ok(req) = req else { return };
+                        let Ok(request) = Json::parse(&req) else { return };
+                        let cmd = request.get("cmd").and_then(Json::as_str);
+                        let reply = if cmd != Some("repl_sync") {
+                            "{\"ok\":false,\"error\":\"fake leader only replicates\"}"
+                        } else if request.get("have").is_none() {
+                            // bootstrap first, then every forced full
+                            // resync lands on the clean head
+                            if leader.bootstrapped.swap(true, Ordering::SeqCst) {
+                                &leader.recover
+                            } else {
+                                &leader.boot
+                            }
+                        } else if !leader.poisoned.swap(true, Ordering::SeqCst) {
+                            // the one poisoned publication: hash matches
+                            // the corrupted text, decode/audit must catch it
+                            &leader.poison
+                        } else if request.get("have").and_then(Json::as_str) == Some("2")
+                        {
+                            &leader.up_to_date
+                        } else {
+                            &leader.recover
+                        };
+                        if stream.write_all(reply.as_bytes()).is_err()
+                            || stream.write_all(b"\n").is_err()
+                            || stream.flush().is_err()
+                        {
+                            return;
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    let follower = Follower::start(
+        &leader_addr,
+        "127.0.0.1:0",
+        FollowerOptions { poll_interval: Duration::from_millis(3), ..Default::default() },
+    )
+    .expect("follower bootstraps from the fake leader");
+    assert_eq!(follower.version(), 0);
+
+    // first poll serves the corrupted v1; the replica must reject it and
+    // reach the clean v2 via the forced full resync
+    wait_version(&follower, 2);
+
+    let mut client = ServeClient::connect(follower.addr()).expect("replica client");
+    let stats = client.stats().expect("stats");
+    let cause = stats
+        .get("last_resync_cause")
+        .and_then(Json::as_str)
+        .expect("stats must report last_resync_cause")
+        .to_string();
+    assert!(
+        cause.contains("ARENA_CHILD_ORDER"),
+        "divergence must name the broken invariant, got {cause:?}"
+    );
+    assert!(
+        follower_stat(&mut client, "full_resyncs") >= 1.0,
+        "rejecting the poisoned payload must force a full resync"
+    );
+    assert!(follower_stat(&mut client, "poll_errors") >= 1.0);
+    // the replica served throughout and still answers from the clean head
+    let p = client.predict(&[0.25; 4]).expect("predict");
+    assert!(p.is_finite());
+
+    client.shutdown().expect("follower shutdown");
+    follower.join().expect("follower exit");
 }
 
 /// Observability on the replica: follower `stats` reports leader-head

@@ -206,6 +206,62 @@ fn malformed_requests_get_errors_not_disconnects() {
     server.join().expect("clean exit");
 }
 
+/// Byte-level robustness (below the JSON layer): non-UTF-8 bytes and an
+/// unterminated oversized frame must not take the server down — the
+/// offending connection is dropped (the cap answers with one error
+/// envelope first) and a clean client keeps working afterwards.
+#[test]
+fn malformed_frames_drop_connection_but_not_server() {
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::TcpStream;
+
+    let server =
+        Server::start(tree_model(), "127.0.0.1:0", ServeOptions::default()).expect("server");
+    let addr = server.addr();
+
+    // non-UTF-8 input: the framed read fails server-side and the
+    // connection is dropped without a response
+    {
+        let mut raw = TcpStream::connect(addr).expect("raw connect");
+        raw.write_all(b"{\"cmd\":\xff\xfe\"predict\"}\n").expect("write bytes");
+        raw.flush().expect("flush");
+        let mut buf = Vec::new();
+        let n = raw.read_to_end(&mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "non-UTF-8 frame must drop the connection, got {buf:?}");
+    }
+
+    // an unterminated 16 MiB line hits the per-request cap: one error
+    // envelope, then the connection closes (network input must never
+    // pick the server's allocation size)
+    {
+        let mut raw = TcpStream::connect(addr).expect("raw connect");
+        let chunk = vec![b'a'; 1024 * 1024];
+        for _ in 0..16 {
+            raw.write_all(&chunk).expect("write chunk");
+        }
+        raw.flush().expect("flush");
+        let mut reader = BufReader::new(raw);
+        let mut line = String::new();
+        reader.read_line(&mut line).expect("cap response");
+        assert!(line.contains("request too large"), "{line:?}");
+        line.clear();
+        let n = reader.read_line(&mut line).expect("read after cap");
+        assert_eq!(n, 0, "capped connection must close");
+    }
+
+    // the server survived both: a fresh client trains and reads normally
+    let mut client = ServeClient::connect(addr).expect("clean connect");
+    let mut stream = Friedman1::new(31, 1.0);
+    for _ in 0..50 {
+        let inst = stream.next_instance().unwrap();
+        client.learn(&inst.x, inst.y).expect("learn after bad frames");
+    }
+    let p = client.predict(&[0.5; 10]).expect("predict after bad frames");
+    assert!(p.is_finite());
+    client.shutdown().expect("shutdown");
+    server.join().expect("clean exit");
+}
+
 /// Observability over the wire: `metrics` returns a Prometheus text
 /// exposition covering the tree/observer/backend/serve/replication
 /// series, and `trace_splits` returns the split-attempt ring — both on a

@@ -1,0 +1,44 @@
+//! `tools/lint` — the repo lint gate's CLI entry point.
+//!
+//! Runs [`qostream::audit::lint`] over the repository and prints every
+//! finding as `RULE file:line message` (or NDJSON with `--json`),
+//! exiting 1 when anything is flagged — the `static-analysis` CI job's
+//! first step. Rules and the `audit:allow(<rule>)` escape hatch are
+//! documented in the `audit::lint` module and `docs/INVARIANTS.md`.
+
+#![forbid(unsafe_code)]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let json = args.iter().any(|a| a == "--json");
+    let root = args
+        .iter()
+        .position(|a| a == "--root")
+        .and_then(|i| args.get(i + 1))
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")));
+    let findings = match qostream::audit::lint::run(&root) {
+        Ok(findings) => findings,
+        Err(e) => {
+            eprintln!("lint: cannot scan {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    for f in &findings {
+        if json {
+            println!("{}", f.to_json().to_compact());
+        } else {
+            println!("{f}");
+        }
+    }
+    if findings.is_empty() {
+        eprintln!("lint: clean ({} rules over {})", 5, root.display());
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("lint: {} finding(s)", findings.len());
+        ExitCode::FAILURE
+    }
+}

@@ -10,6 +10,8 @@
 //! its `{:#}` format; the full source-chain machinery is intentionally
 //! not reproduced.
 
+#![forbid(unsafe_code)]
+
 use std::fmt;
 
 /// A string-backed error value, convertible from any `std::error::Error`.

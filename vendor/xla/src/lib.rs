@@ -13,6 +13,8 @@
 //! Swapping this stub for a real `xla` crate (same module paths) re-enables
 //! the full AOT artifact path without touching `qostream` itself.
 
+#![forbid(unsafe_code)]
+
 use std::fmt;
 
 /// Error type of the stubbed binding layer.
