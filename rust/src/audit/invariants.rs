@@ -7,7 +7,9 @@
 //! paper's QO slot tables (code-sorted, positive-weight, finite mergeable
 //! `VarStats`, Σ slot mass = column total; PAPER.md Sec. 3–4), E-BST
 //! ordering, leaf linear-model finiteness, the deferred-attempt queue,
-//! delta hash-chain continuity, and `mem_bytes()` self-consistency.
+//! delta hash-chain continuity, `mem_bytes()` self-consistency, and the
+//! binary checkpoint envelope ([`verify_binary`]: framing, trailer
+//! integrity, and JSON↔binary decode equivalence).
 //! Where a decoder would reject the same corruption, the verifier names
 //! the *rule* instead of just erroring — which is what lets a follower
 //! report "full resync because ARENA_CHILD_ORDER broke at
@@ -62,6 +64,13 @@ pub const DELTA_VERSION_ORDER: &str = "DELTA_VERSION_ORDER";
 pub const DELTA_HASH_CHAIN: &str = "DELTA_HASH_CHAIN";
 /// `mem_bytes()` agrees (within allocator slack) across a codec clone.
 pub const MEM_BYTES_STABLE: &str = "MEM_BYTES_STABLE";
+/// Binary checkpoint envelope: magic, version, flags, length accounting,
+/// a payload that decodes, and a header `doc_hash` equal to the decoded
+/// document's canonical-JSON hash (the cross-format equivalence rule).
+pub const BIN_ENVELOPE: &str = "BIN_ENVELOPE";
+/// Binary checkpoint trailer: end magic present and a trailer payload
+/// hash that matches the payload bytes (truncation/bit-rot guard).
+pub const BIN_TRAILER: &str = "BIN_TRAILER";
 
 /// E-BST "no child" sentinel (`u32::MAX`, mirrored from the arena).
 const EBST_NONE: u64 = u32::MAX as u64;
@@ -293,6 +302,118 @@ pub fn verify_log(log: &DeltaLog) -> Vec<Finding> {
             ));
         }
     }
+    out
+}
+
+/// Verify a **binary** checkpoint ([`crate::persist::binary`] envelope)
+/// end to end, independently of the decoder: envelope framing
+/// ([`BIN_ENVELOPE`]), trailer integrity ([`BIN_TRAILER`]), then decode
+/// the payload and require JSON↔binary equivalence — the header's
+/// `doc_hash` must equal the decoded document's canonical-JSON hash —
+/// before handing the document to [`verify_checkpoint`]. The framing
+/// checks re-read the raw bytes here rather than trusting
+/// `binary::read_envelope`, so a decoder bug cannot mask a corrupt file.
+pub fn verify_binary(bytes: &[u8]) -> Vec<Finding> {
+    use crate::persist::binary::{
+        self, BIN_VERSION, HEADER_LEN, MAGIC, TRAILER_LEN, TRAILER_MAGIC,
+    };
+    use std::hash::Hasher;
+
+    let mut out = Vec::new();
+    if bytes.len() < HEADER_LEN + TRAILER_LEN {
+        out.push(Finding::new(
+            BIN_ENVELOPE,
+            "header",
+            format!(
+                "file is {} bytes; the envelope alone needs {}",
+                bytes.len(),
+                HEADER_LEN + TRAILER_LEN
+            ),
+        ));
+        return out;
+    }
+    if &bytes[0..4] != MAGIC {
+        out.push(Finding::new(
+            BIN_ENVELOPE,
+            "header.magic",
+            format!("expected {MAGIC:?}, got {:?}", &bytes[0..4]),
+        ));
+        return out;
+    }
+    let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+    if version != BIN_VERSION {
+        out.push(Finding::new(
+            BIN_ENVELOPE,
+            "header.version",
+            format!("expected binary version {BIN_VERSION}, got {version}"),
+        ));
+        return out;
+    }
+    let flags = u16::from_le_bytes([bytes[6], bytes[7]]);
+    if flags != 0 {
+        out.push(Finding::new(
+            BIN_ENVELOPE,
+            "header.flags",
+            format!("reserved flags must be 0, got {flags:#06x}"),
+        ));
+    }
+    let header_doc_hash =
+        u64::from_le_bytes(bytes[8..16].try_into().expect("len 8"));
+    let payload_len = u64::from_le_bytes(bytes[16..24].try_into().expect("len 8"));
+    let actual_len = (bytes.len() - HEADER_LEN - TRAILER_LEN) as u64;
+    if payload_len != actual_len {
+        out.push(Finding::new(
+            BIN_ENVELOPE,
+            "header.payload_len",
+            format!("header claims {payload_len} payload bytes, file holds {actual_len}"),
+        ));
+        return out;
+    }
+    let payload = &bytes[HEADER_LEN..bytes.len() - TRAILER_LEN];
+    let trailer = &bytes[bytes.len() - TRAILER_LEN..];
+    if &trailer[0..4] != TRAILER_MAGIC {
+        out.push(Finding::new(
+            BIN_TRAILER,
+            "trailer.magic",
+            format!("expected {TRAILER_MAGIC:?}, got {:?}", &trailer[0..4]),
+        ));
+    }
+    let trailer_hash = u64::from_le_bytes(trailer[4..12].try_into().expect("len 8"));
+    let computed = {
+        let mut h = crate::common::fxhash::FxHasher::default();
+        h.write(payload);
+        h.finish()
+    };
+    if trailer_hash != computed {
+        out.push(Finding::new(
+            BIN_TRAILER,
+            "trailer.payload_hash",
+            format!("trailer advertises {trailer_hash:#018x}, payload hashes to {computed:#018x}"),
+        ));
+    }
+    let doc = match binary::decode_value(payload) {
+        Ok(doc) => doc,
+        Err(e) => {
+            out.push(Finding::new(
+                BIN_ENVELOPE,
+                "payload",
+                format!("payload does not decode: {e}"),
+            ));
+            return out;
+        }
+    };
+    let canonical = doc_hash(&doc);
+    if canonical != header_doc_hash {
+        out.push(Finding::new(
+            BIN_ENVELOPE,
+            "header.doc_hash",
+            format!(
+                "header advertises {header_doc_hash:#018x} but the decoded document's \
+                 canonical JSON hashes to {canonical:#018x}"
+            ),
+        ));
+    }
+    out.extend(verify_checkpoint(&doc));
     out
 }
 
@@ -1364,6 +1485,50 @@ mod tests {
         assert!(verify_delta_chain(&base, &gapped)
             .iter()
             .any(|f| f.rule == DELTA_VERSION_ORDER));
+    }
+
+    #[test]
+    fn binary_envelope_verification_matches_the_rule_catalog() {
+        use crate::persist::binary::{encode_doc, HEADER_LEN, TRAILER_LEN};
+
+        let model = trained_model(1200);
+        let doc = model.to_checkpoint().unwrap();
+        let bytes = encode_doc(&doc);
+        let findings = verify_binary(&bytes);
+        assert!(findings.is_empty(), "false positives: {findings:?}");
+
+        // payload bit-rot: the trailer hash no longer matches
+        let mut bad = bytes.clone();
+        bad[HEADER_LEN + 3] ^= 0x01;
+        assert!(verify_binary(&bad).iter().any(|f| f.rule == BIN_TRAILER), "{:?}", verify_binary(&bad));
+
+        // header doc_hash no longer equals the canonical-JSON hash
+        let mut bad = bytes.clone();
+        bad[9] ^= 0x01;
+        let findings = verify_binary(&bad);
+        assert!(
+            findings.iter().any(|f| f.rule == BIN_ENVELOPE && f.path == "header.doc_hash"),
+            "{findings:?}"
+        );
+
+        // trailer magic overwritten
+        let mut bad = bytes.clone();
+        let t = bad.len() - TRAILER_LEN;
+        bad[t] ^= 0xff;
+        assert!(verify_binary(&bad).iter().any(|f| f.rule == BIN_TRAILER));
+
+        // truncation and bad magic stop at the envelope rule
+        assert_eq!(verify_binary(&bytes[..HEADER_LEN - 1])[0].rule, BIN_ENVELOPE);
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xff;
+        assert_eq!(verify_binary(&bad)[0].rule, BIN_ENVELOPE);
+
+        // a *model* corruption inside a well-formed envelope surfaces the
+        // model rule: binary audits see through to the document
+        let mut corrupt = doc.clone();
+        corrupt.set("kind", "mystery");
+        let env = encode_doc(&corrupt);
+        assert!(verify_binary(&env).iter().any(|f| f.rule == CKPT_ENVELOPE));
     }
 
     #[test]

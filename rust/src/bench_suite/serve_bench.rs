@@ -6,7 +6,11 @@
 //! A background client streams Friedman #1 `learn`s over TCP while the
 //! foreground client hammers `predict` and records per-request latency;
 //! snapshot hot-swapping stays enabled throughout, so the p50/p99 numbers
-//! include the swaps. Run via `qostream serve --bench`.
+//! include the swaps. Offline companions measure delta-vs-full checkpoint
+//! bytes ([`delta_size_scenario`]), instrumentation overhead
+//! ([`obs_overhead_scenario`]), and the snapshot publication cost —
+//! codec round-trip vs structural clone, JSON vs binary bytes
+//! ([`snapshot_cost_scenario`]). Run via `qostream serve --bench`.
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -250,6 +254,80 @@ pub fn delta_size_scenario(
     })
 }
 
+/// Snapshot publication cost (offline, deterministic): the retired
+/// O(model) codec-round-trip publish against the O(touched) structural
+/// clone that [`crate::serve::publish`] now stages, plus JSON vs binary
+/// checkpoint bytes for the same document (`docs/FORMATS.md`).
+#[derive(Clone, Copy, Debug)]
+pub struct SnapshotCostResult {
+    pub publishes: usize,
+    /// Per-publish seconds for the old path: encode the model to its
+    /// canonical document and decode it back (`clone_via_codec`).
+    pub codec_p50_s: f64,
+    pub codec_p99_s: f64,
+    /// Per-publish seconds for the new path: `Model::clone()` behind an
+    /// `Arc` — pointer bumps for every untouched subtree.
+    pub clone_p50_s: f64,
+    pub clone_p99_s: f64,
+    /// `codec_p50_s / clone_p50_s` — how much cheaper the hot-swap got.
+    pub speedup_p50: f64,
+    /// Canonical compact JSON bytes of the final checkpoint.
+    pub json_bytes: usize,
+    /// Binary envelope bytes of the same document.
+    pub binary_bytes: usize,
+    /// `json_bytes / binary_bytes` (> 1 means binary is smaller).
+    pub bytes_ratio: f64,
+}
+
+/// Train a QO tree for `warmup` instances, then alternate `between`
+/// learns with one publish measured both ways, `publishes` times.
+pub fn snapshot_cost_scenario(
+    warmup: usize,
+    publishes: usize,
+    between: usize,
+    seed: u64,
+) -> Result<SnapshotCostResult> {
+    let mut model =
+        Model::Tree(HoeffdingTreeRegressor::new(10, HtrOptions::default(), qo_factory()));
+    let mut stream = Friedman1::new(seed, 1.0);
+    for _ in 0..warmup {
+        let inst = stream.next_instance().expect("endless stream");
+        model.learn_one(&inst.x, inst.y);
+    }
+    let mut codec_times = Vec::with_capacity(publishes);
+    let mut clone_times = Vec::with_capacity(publishes);
+    for _ in 0..publishes.max(1) {
+        for _ in 0..between {
+            let inst = stream.next_instance().expect("endless stream");
+            model.learn_one(&inst.x, inst.y);
+        }
+        let start = Instant::now();
+        let via_codec = model.clone_via_codec()?;
+        codec_times.push(start.elapsed().as_secs_f64());
+        std::hint::black_box(via_codec.n_features());
+        let start = Instant::now();
+        let shared = Arc::new(model.clone());
+        clone_times.push(start.elapsed().as_secs_f64());
+        std::hint::black_box(shared.n_features());
+    }
+    let doc = model.to_checkpoint()?;
+    let json_bytes = doc.to_compact().len();
+    let binary_bytes = crate::persist::binary::encode_doc(&doc).len();
+    let codec_p50_s = percentile(&mut codec_times.clone(), 0.50);
+    let clone_p50_s = percentile(&mut clone_times.clone(), 0.50);
+    Ok(SnapshotCostResult {
+        publishes: publishes.max(1),
+        codec_p50_s,
+        codec_p99_s: percentile(&mut codec_times, 0.99),
+        clone_p50_s,
+        clone_p99_s: percentile(&mut clone_times, 0.99),
+        speedup_p50: codec_p50_s / clone_p50_s.max(1e-12),
+        json_bytes,
+        binary_bytes,
+        bytes_ratio: json_bytes as f64 / (binary_bytes as f64).max(1.0),
+    })
+}
+
 /// Instrumentation-overhead scenario behind the `obs_overhead_ratio`
 /// smoke metric: train identical QO trees on identical streams with the
 /// [`crate::obs`] registry disabled and enabled, interleaved, and score
@@ -439,8 +517,10 @@ pub fn run_replication(cfg: &ReplicationBenchConfig) -> Result<ReplicationBenchR
     client.snapshot()?;
 
     // wait (bounded) for every follower to reach the head version
+    // the snapshot() call above materialized the log, so the plain log
+    // view is current
     let replication = server.replication();
-    let head = { crate::serve::server::lock_poisoned(&replication).version() };
+    let head = replication.log().version();
     let deadline = Instant::now() + Duration::from_secs(30);
     for follower in &followers {
         while follower.version() < head {
@@ -479,7 +559,7 @@ pub fn run_replication(cfg: &ReplicationBenchConfig) -> Result<ReplicationBenchR
 
     // replication lag + delta sizes off the leader's log
     let (lags, mean_delta_bytes, full_bytes) = {
-        let log = crate::serve::server::lock_poisoned(&replication);
+        let log = replication.log();
         let mut lags = Vec::new();
         for follower in &followers {
             lags.extend(replication_lags(&log, &follower.applied_log()));
@@ -554,6 +634,7 @@ pub fn run_smoke(seed: u64) -> Result<Json> {
         .ok_or_else(|| anyhow!("forest subset produced no ARF row"))?;
     let delta = delta_size_scenario(8000, 600, 5, seed)?;
     let overhead = obs_overhead_scenario(4000, 5, seed);
+    let snapshot = snapshot_cost_scenario(6000, 40, 25, seed)?;
 
     let mut j = Json::obj();
     j.set("schema", "qostream-bench-smoke/1")
@@ -568,7 +649,12 @@ pub fn run_smoke(seed: u64) -> Result<Json> {
         .set("full_checkpoint_bytes", delta.full_bytes)
         .set("obs_overhead_ratio", overhead.ratio)
         .set("obs_uninstrumented_lps", overhead.uninstrumented_lps)
-        .set("obs_instrumented_lps", overhead.instrumented_lps);
+        .set("obs_instrumented_lps", overhead.instrumented_lps)
+        .set("snapshot_codec_p50_s", snapshot.codec_p50_s)
+        .set("snapshot_clone_p50_s", snapshot.clone_p50_s)
+        .set("snapshot_speedup_p50", snapshot.speedup_p50)
+        .set("binary_checkpoint_bytes", snapshot.binary_bytes)
+        .set("binary_bytes_ratio", snapshot.bytes_ratio);
     Ok(j)
 }
 
@@ -640,6 +726,26 @@ pub fn gate(current: &Json, baseline: &Json) -> Vec<String> {
         None => violations.push(
             "obs_overhead_ratio missing from the current run (5% overhead floor unchecked)"
                 .into(),
+        ),
+    }
+    match metric(current, "snapshot_speedup_p50") {
+        Some(speedup) if speedup < 2.0 => violations.push(format!(
+            "snapshot_speedup_p50 {speedup:.2} below the 2x floor (structural-clone \
+             publish must beat the codec round-trip)"
+        )),
+        Some(_) => {}
+        None => violations.push(
+            "snapshot_speedup_p50 missing from the current run (2x floor unchecked)".into(),
+        ),
+    }
+    match metric(current, "binary_bytes_ratio") {
+        Some(ratio) if ratio < 1.1 => violations.push(format!(
+            "binary_bytes_ratio {ratio:.2} below the 1.1x floor (binary checkpoints \
+             must be smaller than canonical JSON)"
+        )),
+        Some(_) => {}
+        None => violations.push(
+            "binary_bytes_ratio missing from the current run (1.1x floor unchecked)".into(),
         ),
     }
     violations
@@ -725,6 +831,20 @@ pub fn generate(cfg: &ServeBenchConfig) -> Result<String> {
         overhead.ratio
     ));
 
+    let snapshot = snapshot_cost_scenario(6000, 40, 25, cfg.seed)?;
+    out.push_str(&format!(
+        "snapshot publication cost ({} publishes on a steady-state QO tree):\n  \
+         codec round-trip p50 {} vs structural clone p50 {} -> {:.1}x cheaper\n  \
+         checkpoint bytes: json {} B vs binary {} B -> {:.2}x smaller\n",
+        snapshot.publishes,
+        human_time(snapshot.codec_p50_s),
+        human_time(snapshot.clone_p50_s),
+        snapshot.speedup_p50,
+        snapshot.json_bytes,
+        snapshot.binary_bytes,
+        snapshot.bytes_ratio
+    ));
+
     let repl_cfg = ReplicationBenchConfig { seed: cfg.seed, ..Default::default() };
     let replication = run_replication(&repl_cfg)?;
     out.push_str(&format!(
@@ -765,6 +885,11 @@ pub fn generate(cfg: &ServeBenchConfig) -> Result<String> {
         .set("obs_overhead_ratio", overhead.ratio)
         .set("obs_uninstrumented_lps", overhead.uninstrumented_lps)
         .set("obs_instrumented_lps", overhead.instrumented_lps)
+        .set("snapshot_codec_p50_s", snapshot.codec_p50_s)
+        .set("snapshot_clone_p50_s", snapshot.clone_p50_s)
+        .set("snapshot_speedup_p50", snapshot.speedup_p50)
+        .set("binary_checkpoint_bytes", snapshot.binary_bytes)
+        .set("binary_bytes_ratio", snapshot.bytes_ratio)
         .set("replication_versions", replication.versions)
         .set("replication_deltas_applied", replication.deltas_applied)
         .set("replication_full_resyncs", replication.full_resyncs)
@@ -835,7 +960,9 @@ mod tests {
                 .set("predict_p99_s", p99)
                 .set("predict_p50_s", p99 / 2.0)
                 .set("delta_ratio", ratio)
-                .set("obs_overhead_ratio", 1.0);
+                .set("obs_overhead_ratio", 1.0)
+                .set("snapshot_speedup_p50", 20.0)
+                .set("binary_bytes_ratio", 1.8);
             j
         };
         let baseline = doc(10_000.0, 0.001, 10.0);
@@ -868,6 +995,16 @@ mod tests {
         tight.set("tolerance", 0.05);
         let v = gate(&doc(9_000.0, 0.001, 10.0), &tight);
         assert!(v.iter().any(|m| m.contains("learns_per_sec")), "{v:?}");
+        // snapshot publish slower than 2x the structural clone: fail
+        let mut slow_publish = doc(10_000.0, 0.001, 10.0);
+        slow_publish.set("snapshot_speedup_p50", 1.2);
+        let v = gate(&slow_publish, &baseline);
+        assert!(v.iter().any(|m| m.contains("snapshot_speedup_p50")), "{v:?}");
+        // binary checkpoints not smaller than JSON: fail
+        let mut fat_binary = doc(10_000.0, 0.001, 10.0);
+        fat_binary.set("binary_bytes_ratio", 0.9);
+        let v = gate(&fat_binary, &baseline);
+        assert!(v.iter().any(|m| m.contains("binary_bytes_ratio")), "{v:?}");
         // schema drift must FAIL the gate, not silently disable it
         let mut partial = Json::obj();
         partial.set("predict_p99_s", 0.001);
@@ -875,6 +1012,34 @@ mod tests {
         assert!(v.iter().any(|m| m.contains("learns_per_sec missing")), "{v:?}");
         assert!(v.iter().any(|m| m.contains("delta_ratio missing")), "{v:?}");
         assert!(v.iter().any(|m| m.contains("obs_overhead_ratio missing")), "{v:?}");
+        assert!(v.iter().any(|m| m.contains("snapshot_speedup_p50 missing")), "{v:?}");
+        assert!(v.iter().any(|m| m.contains("binary_bytes_ratio missing")), "{v:?}");
+    }
+
+    #[test]
+    fn snapshot_cost_scenario_reports_sane_numbers() {
+        // plumbing-sized: the 2x floor is enforced by the CI smoke gate,
+        // but even here the structural clone should not lose to a full
+        // codec round-trip, and binary must undercut JSON
+        let result = snapshot_cost_scenario(2500, 8, 10, 7).expect("scenario");
+        assert_eq!(result.publishes, 8);
+        assert!(result.codec_p50_s > 0.0);
+        assert!(result.clone_p50_s > 0.0);
+        assert!(result.codec_p99_s >= result.codec_p50_s);
+        assert!(result.clone_p99_s >= result.clone_p50_s);
+        assert!(
+            result.speedup_p50 > 1.0,
+            "structural clone ({:.2e}s) should beat the codec round-trip ({:.2e}s)",
+            result.clone_p50_s,
+            result.codec_p50_s
+        );
+        assert!(result.json_bytes > 0 && result.binary_bytes > 0);
+        assert!(
+            result.binary_bytes < result.json_bytes,
+            "binary checkpoint ({} B) must be smaller than JSON ({} B)",
+            result.binary_bytes,
+            result.json_bytes
+        );
     }
 
     #[test]

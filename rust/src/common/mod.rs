@@ -2,6 +2,7 @@
 //! `clap` or `criterion`, so this module provides the small, well-tested
 //! pieces the rest of the crate needs.
 
+pub mod b64;
 pub mod cli;
 pub mod fxhash;
 pub mod json;

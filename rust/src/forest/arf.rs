@@ -118,6 +118,7 @@ impl ArfOptions {
 
 /// One forest member: foreground tree, optional background tree, and the
 /// warning/drift detectors watching the member's own prequential error.
+#[derive(Clone)]
 pub struct ArfMember {
     pub tree: HoeffdingTreeRegressor,
     background: Option<HoeffdingTreeRegressor>,
@@ -283,6 +284,7 @@ impl ArfMember {
 }
 
 /// The Adaptive Random Forest Regressor.
+#[derive(Clone)]
 pub struct ArfRegressor {
     members: Vec<ArfMember>,
     options: ArfOptions,

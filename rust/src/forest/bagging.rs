@@ -30,6 +30,7 @@ use super::vote::{fold_votes, fold_votes_weighted};
 const VOTE_ERR_FADE: f64 = 0.99;
 
 /// One bagged member: a tree plus its private Poisson weighting stream.
+#[derive(Clone)]
 pub struct BagMember {
     pub tree: HoeffdingTreeRegressor,
     rng: Rng,
@@ -94,6 +95,7 @@ impl BagMember {
 }
 
 /// Online bagging ensemble of Hoeffding tree regressors.
+#[derive(Clone)]
 pub struct OnlineBaggingRegressor {
     members: Vec<BagMember>,
     observer_label: String,

@@ -18,9 +18,9 @@
 //!                [--checkpoint-out ckpt.json] [--shards N] [--shard-batch B]
 //!                [--delta-history K] [--follower-of HOST:PORT] [--poll-ms MS]
 //!                [--bench [--replication] [--smoke --out F --baseline F]]
-//! qostream checkpoint --out ckpt.json [--model ...] [--instances N]
-//! qostream checkpoint --load ckpt.json
-//! qostream audit --checkpoint ckpt.json [--deltas FILE|DIR] [--json]
+//! qostream checkpoint --out ckpt.json [--model ...] [--instances N] [--format json|binary]
+//! qostream checkpoint --load ckpt.json [--convert out.qosb] [--format json|binary]
+//! qostream audit --checkpoint ckpt.json|ckpt.qosb [--deltas FILE|DIR] [--json]
 //! qostream audit --self-check
 //! qostream xla [--instances N] [--radius R]
 //! qostream all                                # everything, standard profile
@@ -432,15 +432,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--format json|binary`; `None` when the flag is absent.
+fn checkpoint_format(args: &Args) -> Result<Option<bool>> {
+    match args.opt("format") {
+        None => Ok(None),
+        Some("json") => Ok(Some(false)),
+        Some("binary") => Ok(Some(true)),
+        Some(other) => bail!("--format must be json or binary, got {other:?}"),
+    }
+}
+
 fn cmd_checkpoint(args: &Args) -> Result<()> {
+    let format = checkpoint_format(args)?;
     if let Some(path) = args.opt("load") {
+        let source_bytes = std::fs::metadata(path).map(|m| m.len()).unwrap_or(0);
+        let source_binary = std::fs::read(path)
+            .map(|raw| qostream::persist::binary::is_binary(&raw))
+            .unwrap_or(false);
         let model = Model::load(path)?;
         println!(
-            "loaded {} ({}): {} features, {} stored elements",
+            "loaded {} ({}): {} features, {} stored elements ({} checkpoint, {source_bytes} bytes)",
             model.name(),
             model.kind(),
             model.n_features(),
-            model.n_elements()
+            model.n_elements(),
+            if source_binary { "binary" } else { "json" },
         );
         // restore-fidelity spot check: another codec round-trip must
         // predict bit-identically
@@ -453,6 +469,29 @@ fn cmd_checkpoint(args: &Args) -> Result<()> {
         println!("round-trip predictions bit-identical: {identical}");
         if !identical {
             bail!("checkpoint round-trip diverged");
+        }
+        if let Some(out) = args.opt("convert") {
+            // cross-format conversion: --format picks the target, default
+            // is the format the source is not in
+            let to_binary = format.unwrap_or(!source_binary);
+            if to_binary {
+                model.save_binary(out)?;
+            } else {
+                model.save(out)?;
+            }
+            let out_bytes = std::fs::metadata(out).map(|m| m.len()).unwrap_or(0);
+            let restored = Model::load(out)?;
+            let same_doc =
+                restored.to_checkpoint()?.to_compact() == model.to_checkpoint()?.to_compact();
+            println!(
+                "converted to {} {out}: {source_bytes} -> {out_bytes} bytes \
+                 ({:+.1}%), canonical document bit-identical: {same_doc}",
+                if to_binary { "binary" } else { "json" },
+                100.0 * (out_bytes as f64 - source_bytes as f64) / (source_bytes as f64).max(1.0),
+            );
+            if !same_doc {
+                bail!("format conversion changed the canonical document");
+            }
         }
         return Ok(());
     }
@@ -472,12 +511,18 @@ fn cmd_checkpoint(args: &Args) -> Result<()> {
             model.learn_one(&inst.x, inst.y);
         }
     }
-    model.save(&out)?;
+    let binary_out = format.unwrap_or(false);
+    if binary_out {
+        model.save_binary(&out)?;
+    } else {
+        model.save(&out)?;
+    }
     let bytes = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
     println!(
-        "{} ({}) checkpointed to {out} ({bytes} bytes, {} elements)",
+        "{} ({}) checkpointed to {out} ({} format, {bytes} bytes, {} elements)",
         model.name(),
         model.kind(),
+        if binary_out { "binary" } else { "json" },
         model.n_elements()
     );
     // prove the file restores to the identical model
@@ -596,11 +641,34 @@ fn audit_self_check() -> Result<()> {
         invariants::DELTA_VERSION_ORDER,
         invariants::verify_delta_chain(&base, &gapped),
     );
+    let bin = qostream::persist::binary::encode_doc(&base);
+    let bin_clean = invariants::verify_binary(&bin);
+    if !bin_clean.is_empty() {
+        for f in &bin_clean {
+            println!("{f}");
+        }
+        bail!("audit self-check: a clean binary checkpoint failed its own audit");
+    }
+    let mut flipped = bin.clone();
+    flipped[qostream::persist::binary::HEADER_LEN + 5] ^= 0x01;
+    canary(
+        "corrupted binary payload",
+        invariants::BIN_TRAILER,
+        invariants::verify_binary(&flipped),
+    );
+    let mut flipped = bin.clone();
+    flipped[10] ^= 0x01; // doc_hash byte: payload + trailer stay consistent
+    canary(
+        "corrupted binary doc_hash",
+        invariants::BIN_ENVELOPE,
+        invariants::verify_binary(&flipped),
+    );
     if !missed.is_empty() {
         bail!("audit self-check: canaries not detected: {}", missed.join(", "));
     }
     println!(
-        "audit self-check: clean model + {}-delta chain verified; 3/3 canary corruptions detected",
+        "audit self-check: clean model + {}-delta chain + binary envelope verified; \
+         5/5 canary corruptions detected",
         deltas.len()
     );
     Ok(())
@@ -613,14 +681,30 @@ fn cmd_audit(args: &Args) -> Result<()> {
     let path = args
         .opt("checkpoint")
         .ok_or_else(|| anyhow!("audit needs --checkpoint <file> (or --self-check)"))?;
-    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-    let doc = Json::parse(text.trim_end()).map_err(|e| anyhow!("parsing {path}: {e}"))?;
-    let mut findings = invariants::verify_checkpoint(&doc);
-    let mut checked = format!("checkpoint {path}");
+    let raw = std::fs::read(path).with_context(|| format!("reading {path}"))?;
+    // magic sniff: binary checkpoints get the envelope/trailer rules plus
+    // the decoded document's full catalog; JSON goes straight to it
+    let (mut findings, doc, mut checked) = if qostream::persist::binary::is_binary(&raw) {
+        let findings = invariants::verify_binary(&raw);
+        let doc = qostream::persist::binary::decode_doc(&raw).ok();
+        (findings, doc, format!("binary checkpoint {path}"))
+    } else {
+        let text = String::from_utf8(raw).map_err(|e| anyhow!("reading {path}: {e}"))?;
+        let doc = Json::parse(text.trim_end()).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+        (invariants::verify_checkpoint(&doc), Some(doc), format!("checkpoint {path}"))
+    };
     if let Some(deltas_path) = args.opt("deltas") {
-        let records = audit_deltas_from(deltas_path)?;
-        findings.extend(invariants::verify_delta_chain(&doc, &records));
-        checked.push_str(&format!(" + {} delta record(s) from {deltas_path}", records.len()));
+        match &doc {
+            Some(doc) => {
+                let records = audit_deltas_from(deltas_path)?;
+                findings
+                    .extend(invariants::verify_delta_chain(doc, &records));
+                checked
+                    .push_str(&format!(" + {} delta record(s) from {deltas_path}", records.len()));
+            }
+            // the envelope findings already say why there is no document
+            None => checked.push_str(" (deltas skipped: checkpoint did not decode)"),
+        }
     }
     let json = args.flag("json");
     for f in &findings {
@@ -717,9 +801,11 @@ SUBCOMMANDS
                 --bench runs the latency scenario, --bench [--replication] [--smoke
                 --smoke writes/gates BENCH_ci.json) --out BENCH_ci.json --baseline FILE]]
   checkpoint   save/restore model checkpoints     [--out ckpt.json | --load ckpt.json
-                                                   --model --observer --members --instances N]
-  audit        verify checkpoint invariants       [--checkpoint ckpt.json [--deltas FILE|DIR]
-               (rule catalog: docs/INVARIANTS.md)  --json | --self-check]
+               (JSON canonical; binary fast path   --format json|binary --convert OUT
+                via docs/FORMATS.md)               --model --observer --members --instances N]
+  audit        verify checkpoint invariants       [--checkpoint ckpt.json|ckpt.qosb
+               (rule catalog: docs/INVARIANTS.md;  [--deltas FILE|DIR] --json | --self-check]
+                JSON or binary, magic-sniffed)
   xla          AOT split-eval via PJRT artifacts  [--instances N --radius R]
   all          fig1 + fig3 + cd + tree + forest (standard profile)
 ";

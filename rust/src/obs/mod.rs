@@ -392,6 +392,16 @@ pub struct Metrics {
     pub serve_predict_ns: Histogram,
     pub serve_delta_publish_bytes: Histogram,
     pub serve_snapshot_failures_consecutive: Gauge,
+    /// Wall-clock of one snapshot publication (structural clone + `Arc`
+    /// swap + staging). Recorded in nanoseconds; exposed as the
+    /// `qostream_snapshot_publish_seconds` summary.
+    pub snapshot_publish_ns: Histogram,
+    /// Canonical-JSON bytes of materialized checkpoint documents
+    /// (`qostream_snapshot_bytes{format="json"}`).
+    pub snapshot_bytes_json: Counter,
+    /// Binary-envelope bytes of encoded checkpoint/delta payloads
+    /// (`qostream_snapshot_bytes{format="binary"}`).
+    pub snapshot_bytes_binary: Counter,
     // model
     pub model_mem_bytes: Gauge,
     // replication (follower side)
@@ -425,6 +435,9 @@ impl Metrics {
             serve_predict_ns: Histogram::new(),
             serve_delta_publish_bytes: Histogram::new(),
             serve_snapshot_failures_consecutive: Gauge::new(),
+            snapshot_publish_ns: Histogram::new(),
+            snapshot_bytes_json: Counter::new(),
+            snapshot_bytes_binary: Counter::new(),
             model_mem_bytes: Gauge::new(),
             repl_lag_versions: Gauge::new(),
             repl_lag_learns: Gauge::new(),
@@ -458,6 +471,31 @@ fn write_counter(out: &mut String, name: &str, c: &Counter) {
 
 fn write_gauge(out: &mut String, name: &str, g: &Gauge) {
     out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+}
+
+/// Render a nanosecond histogram as a seconds-unit summary (Prometheus
+/// convention for durations): quantiles and `_sum` divide by 1e9 and
+/// print as floats; `_count` stays a sample count.
+fn write_summary_ns_as_seconds(out: &mut String, name: &str, h: &Histogram) {
+    let s = h.snapshot();
+    out.push_str(&format!("# TYPE {name} summary\n"));
+    for (q, label) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")] {
+        out.push_str(&format!(
+            "{name}{{quantile=\"{label}\"}} {}\n",
+            s.quantile(q) as f64 / 1e9
+        ));
+    }
+    out.push_str(&format!("{name}_sum {}\n{name}_count {}\n", s.sum as f64 / 1e9, s.count));
+}
+
+/// Render one counter family whose samples split over a `format` label
+/// (the byte-size-by-encoding counters).
+fn write_format_counters(out: &mut String, name: &str, json: &Counter, binary: &Counter) {
+    out.push_str(&format!(
+        "# TYPE {name} counter\n{name}{{format=\"json\"}} {}\n{name}{{format=\"binary\"}} {}\n",
+        json.get(),
+        binary.get()
+    ));
 }
 
 fn write_summary(out: &mut String, name: &str, h: &Histogram) {
@@ -498,6 +536,17 @@ pub fn exposition_of(m: &Metrics) -> String {
     write_summary(&mut out, "qostream_serve_learn_ns", &m.serve_learn_ns);
     write_summary(&mut out, "qostream_serve_predict_ns", &m.serve_predict_ns);
     write_summary(&mut out, "qostream_serve_delta_publish_bytes", &m.serve_delta_publish_bytes);
+    write_summary_ns_as_seconds(
+        &mut out,
+        "qostream_snapshot_publish_seconds",
+        &m.snapshot_publish_ns,
+    );
+    write_format_counters(
+        &mut out,
+        "qostream_snapshot_bytes",
+        &m.snapshot_bytes_json,
+        &m.snapshot_bytes_binary,
+    );
     write_gauge(
         &mut out,
         "qostream_serve_snapshot_failures_consecutive",
@@ -697,6 +746,31 @@ mod tests {
             let name = line.split_whitespace().nth(2).unwrap();
             assert!(name.starts_with("qostream_"), "bad metric name {name}");
         }
+    }
+
+    #[test]
+    fn snapshot_publish_and_bytes_families_render() {
+        // the snapshot-cost instruments: a ns histogram exposed in
+        // seconds, and one byte counter family split by format label
+        let m = Metrics::new();
+        m.snapshot_publish_ns.record(2_000_000_000); // 2s → bucket upper bound < 4s
+        m.snapshot_bytes_json.add(1000);
+        m.snapshot_bytes_binary.add(400);
+        let text = exposition_of(&m);
+        assert!(text.contains("# TYPE qostream_snapshot_publish_seconds summary\n"));
+        assert!(text.contains("qostream_snapshot_publish_seconds_count 1\n"));
+        assert!(text.contains("# TYPE qostream_snapshot_bytes counter\n"));
+        assert!(text.contains("qostream_snapshot_bytes{format=\"json\"} 1000\n"));
+        assert!(text.contains("qostream_snapshot_bytes{format=\"binary\"} 400\n"));
+        // the quantile is the bucket's upper bound in seconds: within
+        // [2, 4) for a 2s sample (log2 buckets over-report < 2x)
+        let q50 = text
+            .lines()
+            .find(|l| l.starts_with("qostream_snapshot_publish_seconds{quantile=\"0.5\"}"))
+            .and_then(|l| l.split_whitespace().nth(1))
+            .and_then(|v| v.parse::<f64>().ok())
+            .unwrap();
+        assert!((2.0..4.0).contains(&q50), "q50 = {q50}");
     }
 
     #[test]

@@ -243,6 +243,10 @@ impl AttributeObserver for EBst {
             );
         o
     }
+
+    fn clone_box(&self) -> Box<dyn AttributeObserver> {
+        Box::new(self.clone())
+    }
 }
 
 /// TE-BST: E-BST over feature values truncated to `decimals` decimal
@@ -318,6 +322,10 @@ impl AttributeObserver for TruncatedEBst {
             .set("decimals", jusize(self.decimals as usize))
             .set("inner", self.inner.to_json());
         o
+    }
+
+    fn clone_box(&self) -> Box<dyn AttributeObserver> {
+        Box::new(self.clone())
     }
 }
 

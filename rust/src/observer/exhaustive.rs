@@ -137,6 +137,10 @@ impl AttributeObserver for ExhaustiveObserver {
             );
         o
     }
+
+    fn clone_box(&self) -> Box<dyn AttributeObserver> {
+        Box::new(self.clone())
+    }
 }
 
 #[cfg(test)]

@@ -96,6 +96,22 @@ pub trait AttributeObserver: Send + Sync {
     fn to_json(&self) -> Json {
         Json::Null
     }
+
+    /// Clone this observer into a fresh box. Structural-sharing snapshots
+    /// ([`crate::serve`]) keep leaves behind `Arc` and copy-on-write the
+    /// touched ones — which deep-clones the leaf's observers through this
+    /// hook. Built-in observers are plain data, so their impls are a
+    /// one-line `Box::new(self.clone())`.
+    fn clone_box(&self) -> Box<dyn AttributeObserver>;
+}
+
+/// Boxed observers clone through [`AttributeObserver::clone_box`], which
+/// is what lets [`crate::tree::leaf::LeafState`] derive `Clone` for the
+/// copy-on-write snapshot path.
+impl Clone for Box<dyn AttributeObserver> {
+    fn clone(&self) -> Box<dyn AttributeObserver> {
+        self.clone_box()
+    }
 }
 
 /// Decode any built-in observer from its [`AttributeObserver::to_json`]

@@ -66,7 +66,7 @@ pub enum SplitPointStrategy {
 }
 
 /// The Quantization Observer (paper Sec. 4).
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct QuantizationObserver {
     policy: RadiusPolicy,
     state: RadiusState,
@@ -372,6 +372,10 @@ impl AttributeObserver for QuantizationObserver {
                 ),
             );
         o
+    }
+
+    fn clone_box(&self) -> Box<dyn AttributeObserver> {
+        Box::new(self.clone())
     }
 }
 

@@ -1,0 +1,473 @@
+//! Compact length-prefixed **binary** checkpoint codec — the disk + wire
+//! fast path beside the canonical JSON text (`docs/FORMATS.md`).
+//!
+//! JSON stays the canonical, debuggable interchange: a binary checkpoint
+//! is nothing but an alternate serialization of the *same* canonical
+//! document ([`super::Model::to_checkpoint`]), so decoding it and
+//! re-encoding as JSON reproduces the canonical text byte-for-byte. The
+//! envelope carries the [`doc_hash`] of that canonical text, which is
+//! what lets delta chains and follower hash-verification stay valid
+//! across formats.
+//!
+//! ## Envelope layout (all integers little-endian)
+//!
+//! ```text
+//! offset size field
+//!      0    4 magic "QOSB"
+//!      4    2 format version (currently 1)
+//!      6    2 flags (reserved, must be 0)
+//!      8    8 doc_hash — FxHash64 of the canonical compact JSON text
+//!     16    8 payload length N
+//!     24    N payload: one binary-encoded value (below)
+//! 24 + N    4 trailer magic "QOSE"
+//! 28 + N    8 payload_hash — FxHash64 of the payload bytes
+//! ```
+//!
+//! ## Value encoding
+//!
+//! One tag byte, then tag-specific data; lengths/counts are LEB128
+//! varints. Numbers follow the same exactness rules as the JSON codec
+//! ([`super::codec`]): every `f64` travels by bit pattern — integral
+//! values (whose bits survive an i64 round-trip, which excludes `-0.0`
+//! and the non-finites) as a zigzag varint, everything else as the raw
+//! 8-byte IEEE-754 image.
+//!
+//! ```text
+//! 0x00 null        0x01 false       0x02 true
+//! 0x03 f64 — 8 bytes of to_bits()
+//! 0x04 integral f64 — zigzag LEB128 of the value as i64
+//! 0x05 string — varint byte length + UTF-8 bytes
+//! 0x06 array — varint count + that many values
+//! 0x07 object — varint count + (varint key length + key bytes + value)…
+//!      in ascending key order (the canonical JSON writer's order)
+//! ```
+//!
+//! Decoding is strict: unknown tags, truncated lengths, non-UTF-8 keys,
+//! unsorted/duplicate object keys, trailing payload bytes and depth
+//! beyond [`MAX_DEPTH`] are all hard errors, mirroring the JSON
+//! parser's posture. [`crate::audit::invariants::verify_binary`]
+//! re-checks the envelope/trailer independently (rules `BIN_ENVELOPE`
+//! and `BIN_TRAILER`).
+
+use std::hash::Hasher;
+
+use anyhow::{anyhow, Result};
+
+use crate::common::fxhash::FxHasher;
+use crate::common::json::Json;
+
+use super::delta::doc_hash;
+
+/// Envelope magic: "qostream binary" header.
+pub const MAGIC: &[u8; 4] = b"QOSB";
+/// Trailer magic ("end" marker guarding against truncation).
+pub const TRAILER_MAGIC: &[u8; 4] = b"QOSE";
+/// Binary format version (independent of the checkpoint *document*
+/// version, which travels inside the payload like any other field).
+pub const BIN_VERSION: u16 = 1;
+/// Envelope header size in bytes.
+pub const HEADER_LEN: usize = 24;
+/// Trailer size in bytes.
+pub const TRAILER_LEN: usize = 12;
+/// Maximum nesting depth accepted by the decoder (matches the JSON
+/// parser's recursion cap).
+pub const MAX_DEPTH: usize = 64;
+
+/// Does this byte string look like a binary checkpoint? (Magic sniff —
+/// lets [`super::Model::load`] accept either format from one path.)
+pub fn is_binary(bytes: &[u8]) -> bool {
+    bytes.len() >= MAGIC.len() && &bytes[..MAGIC.len()] == MAGIC
+}
+
+fn hash_bytes(bytes: &[u8]) -> u64 {
+    let mut h = FxHasher::default();
+    h.write(bytes);
+    h.finish()
+}
+
+fn push_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+#[inline]
+fn zigzag(i: i64) -> u64 {
+    // shift in u64 space: `i64 << 1` would overflow-panic in debug builds
+    ((i as u64) << 1) ^ ((i >> 63) as u64)
+}
+
+#[inline]
+fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+/// Append the binary encoding of one value (no envelope) to `out`.
+pub fn encode_value(j: &Json, out: &mut Vec<u8>) {
+    match j {
+        Json::Null => out.push(0x00),
+        Json::Bool(false) => out.push(0x01),
+        Json::Bool(true) => out.push(0x02),
+        Json::Num(v) => {
+            // integral fast path: exact iff the bit pattern survives the
+            // i64 round-trip (rejects -0.0, NaN, infinities, huge values)
+            let i = *v as i64;
+            if (i as f64).to_bits() == v.to_bits() {
+                out.push(0x04);
+                push_varint(out, zigzag(i));
+            } else {
+                out.push(0x03);
+                out.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+        Json::Str(s) => {
+            out.push(0x05);
+            push_varint(out, s.len() as u64);
+            out.extend_from_slice(s.as_bytes());
+        }
+        Json::Arr(items) => {
+            out.push(0x06);
+            push_varint(out, items.len() as u64);
+            for item in items {
+                encode_value(item, out);
+            }
+        }
+        Json::Obj(map) => {
+            out.push(0x07);
+            push_varint(out, map.len() as u64);
+            // BTreeMap iterates in ascending key order — the same order
+            // the canonical JSON writer emits
+            for (k, v) in map {
+                push_varint(out, k.len() as u64);
+                out.extend_from_slice(k.as_bytes());
+                encode_value(v, out);
+            }
+        }
+    }
+}
+
+/// Encode a value (no envelope) into a fresh buffer.
+pub fn encode_value_vec(j: &Json) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_value(j, &mut out);
+    out
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or_else(|| anyhow!("binary value truncated at byte {}", self.pos))?;
+        let slice = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(slice)
+    }
+
+    fn byte(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn varint(&mut self) -> Result<u64> {
+        let mut v: u64 = 0;
+        for shift in (0..64).step_by(7) {
+            let byte = self.byte()?;
+            v |= ((byte & 0x7f) as u64) << shift;
+            if byte & 0x80 == 0 {
+                // canonical LEB128: no gratuitous trailing zero-groups
+                if byte == 0 && shift != 0 {
+                    return Err(anyhow!("binary varint has a redundant final byte"));
+                }
+                return Ok(v);
+            }
+        }
+        Err(anyhow!("binary varint longer than 64 bits"))
+    }
+
+    fn len(&mut self) -> Result<usize> {
+        let v = self.varint()?;
+        usize::try_from(v).map_err(|_| anyhow!("binary length {v} overflows usize"))
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json> {
+        if depth > MAX_DEPTH {
+            return Err(anyhow!("binary value nested deeper than {MAX_DEPTH}"));
+        }
+        match self.byte()? {
+            0x00 => Ok(Json::Null),
+            0x01 => Ok(Json::Bool(false)),
+            0x02 => Ok(Json::Bool(true)),
+            0x03 => {
+                let raw: [u8; 8] = self.take(8)?.try_into().expect("len 8");
+                Ok(Json::Num(f64::from_bits(u64::from_le_bytes(raw))))
+            }
+            0x04 => Ok(Json::Num(unzigzag(self.varint()?) as f64)),
+            0x05 => {
+                let n = self.len()?;
+                let s = std::str::from_utf8(self.take(n)?)
+                    .map_err(|_| anyhow!("binary string is not UTF-8"))?;
+                Ok(Json::Str(s.to_string()))
+            }
+            0x06 => {
+                let n = self.len()?;
+                let mut items = Vec::with_capacity(n.min(4096));
+                for _ in 0..n {
+                    items.push(self.value(depth + 1)?);
+                }
+                Ok(Json::Arr(items))
+            }
+            0x07 => {
+                let n = self.len()?;
+                let mut map = std::collections::BTreeMap::new();
+                let mut last: Option<String> = None;
+                for _ in 0..n {
+                    let klen = self.len()?;
+                    let key = std::str::from_utf8(self.take(klen)?)
+                        .map_err(|_| anyhow!("binary object key is not UTF-8"))?
+                        .to_string();
+                    if last.as_deref() >= Some(key.as_str()) {
+                        return Err(anyhow!(
+                            "binary object keys out of order (…{key:?})"
+                        ));
+                    }
+                    let value = self.value(depth + 1)?;
+                    last = Some(key.clone());
+                    map.insert(key, value);
+                }
+                Ok(Json::Obj(map))
+            }
+            tag => Err(anyhow!("unknown binary value tag {tag:#04x}")),
+        }
+    }
+}
+
+/// Decode one binary-encoded value; the input must be exactly one value
+/// with no trailing bytes.
+pub fn decode_value(bytes: &[u8]) -> Result<Json> {
+    let mut r = Reader { bytes, pos: 0 };
+    let v = r.value(0)?;
+    if r.pos != bytes.len() {
+        return Err(anyhow!(
+            "binary value has {} trailing bytes",
+            bytes.len() - r.pos
+        ));
+    }
+    Ok(v)
+}
+
+/// Wrap a canonical checkpoint document in the full binary envelope
+/// (header + payload + trailer). The header's `doc_hash` is computed
+/// from the document's canonical JSON text, so it equals the hash the
+/// delta log and the replication protocol already use.
+pub fn encode_doc(doc: &Json) -> Vec<u8> {
+    let payload = encode_value_vec(doc);
+    let mut out = Vec::with_capacity(HEADER_LEN + payload.len() + TRAILER_LEN);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&BIN_VERSION.to_le_bytes());
+    out.extend_from_slice(&0u16.to_le_bytes()); // flags
+    out.extend_from_slice(&doc_hash(doc).to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&payload);
+    out.extend_from_slice(TRAILER_MAGIC);
+    out.extend_from_slice(&hash_bytes(&payload).to_le_bytes());
+    out
+}
+
+/// Parsed envelope header fields (exposed for the audit layer, which
+/// re-verifies them with findings instead of errors).
+pub struct Envelope<'a> {
+    pub version: u16,
+    pub flags: u16,
+    pub doc_hash: u64,
+    pub payload: &'a [u8],
+    pub trailer_hash: u64,
+}
+
+/// Split a binary checkpoint into its envelope parts, verifying magic,
+/// version, length accounting and the trailer's payload hash.
+pub fn read_envelope(bytes: &[u8]) -> Result<Envelope<'_>> {
+    if bytes.len() < HEADER_LEN + TRAILER_LEN {
+        return Err(anyhow!(
+            "binary checkpoint too short ({} bytes; envelope needs {})",
+            bytes.len(),
+            HEADER_LEN + TRAILER_LEN
+        ));
+    }
+    if &bytes[0..4] != MAGIC {
+        return Err(anyhow!("binary checkpoint has a bad magic header"));
+    }
+    let version = u16::from_le_bytes(bytes[4..6].try_into().expect("len 2"));
+    if version != BIN_VERSION {
+        return Err(anyhow!(
+            "binary checkpoint version {version} unsupported (this build reads {BIN_VERSION})"
+        ));
+    }
+    let flags = u16::from_le_bytes(bytes[6..8].try_into().expect("len 2"));
+    if flags != 0 {
+        return Err(anyhow!("binary checkpoint has unknown flags {flags:#06x}"));
+    }
+    let doc_hash = u64::from_le_bytes(bytes[8..16].try_into().expect("len 8"));
+    let payload_len = u64::from_le_bytes(bytes[16..24].try_into().expect("len 8"));
+    let expected = (bytes.len() - HEADER_LEN - TRAILER_LEN) as u64;
+    if payload_len != expected {
+        return Err(anyhow!(
+            "binary checkpoint length mismatch: header claims {payload_len} payload bytes, file has {expected}"
+        ));
+    }
+    let payload = &bytes[HEADER_LEN..bytes.len() - TRAILER_LEN];
+    let trailer = &bytes[bytes.len() - TRAILER_LEN..];
+    if &trailer[0..4] != TRAILER_MAGIC {
+        return Err(anyhow!("binary checkpoint has a bad trailer magic"));
+    }
+    let trailer_hash = u64::from_le_bytes(trailer[4..12].try_into().expect("len 8"));
+    let actual = hash_bytes(payload);
+    if trailer_hash != actual {
+        return Err(anyhow!(
+            "binary checkpoint payload hash mismatch (trailer {trailer_hash:#018x}, computed {actual:#018x})"
+        ));
+    }
+    Ok(Envelope { version, flags, doc_hash, payload, trailer_hash })
+}
+
+/// Decode a full binary checkpoint back into its canonical document,
+/// verifying the envelope, the trailer hash, and that the decoded
+/// document's canonical text matches the header's `doc_hash` — the
+/// cross-format equivalence guarantee.
+pub fn decode_doc(bytes: &[u8]) -> Result<Json> {
+    let env = read_envelope(bytes)?;
+    let doc = decode_value(env.payload)?;
+    let canonical = doc_hash(&doc);
+    if canonical != env.doc_hash {
+        return Err(anyhow!(
+            "binary checkpoint doc_hash mismatch: header {:#018x}, canonical JSON {:#018x}",
+            env.doc_hash,
+            canonical
+        ));
+    }
+    Ok(doc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(text: &str) -> Json {
+        Json::parse(text).unwrap()
+    }
+
+    #[test]
+    fn value_roundtrip_covers_every_shape() {
+        let doc = parse(
+            r#"{"arr":[1,2.5,-3,"s",null,true,false],"nested":{"a":{"b":[{"c":0}]}},"big":"18446744073709551615"}"#,
+        );
+        let bytes = encode_value_vec(&doc);
+        let back = decode_value(&bytes).unwrap();
+        assert_eq!(back.to_compact(), doc.to_compact());
+    }
+
+    #[test]
+    fn floats_roundtrip_by_bit_pattern() {
+        for v in [
+            0.0,
+            -0.0,
+            1.5,
+            -1.0 / 3.0,
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            1e300,
+            -2.2250738585072014e-308,
+            9007199254740993.0, // 2^53 + 1: not exactly representable as written
+        ] {
+            let j = Json::Num(v);
+            let back = decode_value(&encode_value_vec(&j)).unwrap();
+            let Json::Num(b) = back else { panic!("not a number") };
+            assert_eq!(b.to_bits(), v.to_bits(), "value {v}");
+        }
+        // -0.0 must NOT take the integral path (it would decode as +0.0)
+        let bytes = encode_value_vec(&Json::Num(-0.0));
+        assert_eq!(bytes[0], 0x03, "-0.0 must use the raw f64 tag");
+        let bytes = encode_value_vec(&Json::Num(7.0));
+        assert_eq!(bytes[0], 0x04, "integral values use the varint tag");
+        assert_eq!(bytes.len(), 2, "small ints are two bytes");
+    }
+
+    #[test]
+    fn envelope_roundtrips_and_hashes_match() {
+        let doc = parse(r#"{"format":"qostream-checkpoint","model":{"w":[0.25,1,2]},"version":"1"}"#);
+        let bytes = encode_doc(&doc);
+        assert!(is_binary(&bytes));
+        let env = read_envelope(&bytes).unwrap();
+        assert_eq!(env.version, BIN_VERSION);
+        assert_eq!(env.doc_hash, doc_hash(&doc));
+        let back = decode_doc(&bytes).unwrap();
+        assert_eq!(back.to_compact(), doc.to_compact());
+    }
+
+    #[test]
+    fn corruption_anywhere_is_detected() {
+        let doc = parse(r#"{"k":[1,2,3.5,"x"],"m":{"n":null}}"#);
+        let bytes = encode_doc(&doc);
+        // header magic
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xff;
+        assert!(read_envelope(&bad).is_err());
+        // version
+        let mut bad = bytes.clone();
+        bad[4] = 0x7f;
+        assert!(read_envelope(&bad).is_err());
+        // payload byte → trailer hash mismatch
+        let mut bad = bytes.clone();
+        bad[HEADER_LEN + 2] ^= 0x01;
+        assert!(read_envelope(&bad).is_err());
+        // trailer magic
+        let mut bad = bytes.clone();
+        let t = bad.len() - TRAILER_LEN;
+        bad[t] ^= 0xff;
+        assert!(read_envelope(&bad).is_err());
+        // truncation
+        assert!(read_envelope(&bytes[..bytes.len() - 1]).is_err());
+        assert!(read_envelope(&bytes[..HEADER_LEN - 1]).is_err());
+    }
+
+    #[test]
+    fn doc_hash_mismatch_is_detected() {
+        let doc = parse(r#"{"a":1}"#);
+        let mut bytes = encode_doc(&doc);
+        // flip a doc_hash byte; payload + trailer stay consistent
+        bytes[9] ^= 0x01;
+        let err = decode_doc(&bytes).unwrap_err().to_string();
+        assert!(err.contains("doc_hash"), "{err}");
+    }
+
+    #[test]
+    fn strict_decoding_rejects_malformed_values() {
+        assert!(decode_value(&[0x08]).is_err(), "unknown tag");
+        assert!(decode_value(&[0x03, 1, 2]).is_err(), "truncated f64");
+        assert!(decode_value(&[0x05, 0x02, b'a']).is_err(), "truncated string");
+        assert!(decode_value(&[0x05, 0x01, 0xff]).is_err(), "invalid UTF-8");
+        assert!(decode_value(&[0x00, 0x00]).is_err(), "trailing bytes");
+        // unsorted keys: {"b":null,"a":null} in wire order b, a
+        let mut bad = vec![0x07, 0x02];
+        bad.extend_from_slice(&[0x01, b'b', 0x00, 0x01, b'a', 0x00]);
+        assert!(decode_value(&bad).is_err(), "unsorted object keys");
+        // deep nesting beyond the cap: [[[…null…]]]
+        let mut deep = Vec::new();
+        for _ in 0..MAX_DEPTH + 2 {
+            deep.extend_from_slice(&[0x06, 0x01]);
+        }
+        deep.push(0x00);
+        assert!(decode_value(&deep).is_err(), "depth cap");
+    }
+}

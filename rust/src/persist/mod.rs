@@ -43,7 +43,15 @@
 //! Key order is canonical (the writer sorts), so encode → decode →
 //! encode reproduces the exact same text — which is what lets the serve
 //! layer treat a checkpoint string as a content-addressable snapshot.
+//!
+//! Beside the canonical text there is a compact **binary** fast path
+//! ([`binary`]): the same document in a length-prefixed envelope whose
+//! `doc_hash` equals the canonical text's, so the two formats are
+//! interchangeable and mutually verifiable — layout and negotiation
+//! rules in `docs/FORMATS.md`. [`Model::load`] sniffs the leading magic
+//! bytes and accepts either.
 
+pub mod binary;
 pub mod codec;
 pub mod delta;
 
@@ -66,6 +74,14 @@ pub const VERSION: u64 = 1;
 /// A checkpointable model: every kind the CLI and the serve layer can
 /// train. Implements [`Regressor`] by delegation, so the prequential
 /// harness and the server drive all kinds uniformly.
+///
+/// `Clone` is a *structural* clone: node arenas are copied but leaf
+/// state is shared behind `Arc` and copy-on-written by whichever side
+/// trains next, so cloning costs O(nodes) pointer work — not a codec
+/// round-trip. This is the serve layer's snapshot hot-swap primitive
+/// (see `docs/FORMATS.md`); [`Model::clone_via_codec`] remains as the
+/// slow path the CLI uses to prove checkpoint bit-identity.
+#[derive(Clone)]
 pub enum Model {
     Tree(HoeffdingTreeRegressor),
     Arf(ArfRegressor),
@@ -149,7 +165,41 @@ impl Model {
         Ok(())
     }
 
-    /// Load a checkpoint file written by [`Model::save`].
+    /// Encode into the binary checkpoint envelope ([`binary`]): the same
+    /// canonical document, length-prefixed with hashes — the disk + wire
+    /// fast path (`docs/FORMATS.md`).
+    pub fn to_binary(&self) -> Result<Vec<u8>> {
+        Ok(binary::encode_doc(&self.to_checkpoint()?))
+    }
+
+    /// Decode a binary checkpoint ([`Model::to_binary`]). Envelope,
+    /// trailer hash and canonical `doc_hash` are all verified; debug
+    /// builds additionally audit the decoded document like
+    /// [`Model::load`] does.
+    pub fn from_binary(bytes: &[u8]) -> Result<Model> {
+        let doc = binary::decode_doc(bytes)?;
+        #[cfg(debug_assertions)]
+        {
+            if let Some(cause) = crate::audit::invariants::explain(&doc) {
+                return Err(anyhow!(
+                    "binary checkpoint fails audit: {cause} (see docs/INVARIANTS.md)"
+                ));
+            }
+        }
+        Model::from_checkpoint(&doc)
+    }
+
+    /// Write the checkpoint in the binary envelope format.
+    pub fn save_binary(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_binary()?)
+            .with_context(|| format!("writing binary checkpoint {}", path.display()))?;
+        Ok(())
+    }
+
+    /// Load a checkpoint file written by [`Model::save`] or
+    /// [`Model::save_binary`] — the leading magic bytes select the
+    /// decoder, so callers never need to know which format a file is in.
     ///
     /// Debug builds audit the document against the invariant catalog
     /// (`docs/INVARIANTS.md`) *before* decoding: a corrupted file fails
@@ -158,10 +208,17 @@ impl Model {
     /// `qostream audit --checkpoint FILE` runs it on demand.
     pub fn load(path: impl AsRef<Path>) -> Result<Model> {
         let path = path.as_ref();
-        let text = std::fs::read_to_string(path)
+        let raw = std::fs::read(path)
             .with_context(|| format!("reading checkpoint {}", path.display()))?;
-        let doc = Json::parse(text.trim_end())
-            .map_err(|e| anyhow!("decoding checkpoint {}: {e}", path.display()))?;
+        let doc = if binary::is_binary(&raw) {
+            binary::decode_doc(&raw)
+                .map_err(|e| e.context(format!("decoding binary checkpoint {}", path.display())))?
+        } else {
+            let text = std::str::from_utf8(&raw)
+                .map_err(|e| anyhow!("checkpoint {} is not UTF-8: {e}", path.display()))?;
+            Json::parse(text.trim_end())
+                .map_err(|e| anyhow!("decoding checkpoint {}: {e}", path.display()))?
+        };
         #[cfg(debug_assertions)]
         {
             if let Some(cause) = crate::audit::invariants::explain(&doc) {

@@ -104,10 +104,22 @@ impl ServeClient {
     /// response carries `version`, `hash`, and one of `up_to_date` /
     /// `deltas` / `full` — see [`super::replicate`] for the protocol.
     pub fn repl_sync(&mut self, have: Option<u64>) -> Result<Json> {
+        self.repl_sync_format(have, false)
+    }
+
+    /// Like [`ServeClient::repl_sync`], optionally negotiating
+    /// `format:"binary"`: payloads then travel as base64 binary
+    /// checkpoint envelopes (`full_b64` / per-delta `ops_b64`). Leaders
+    /// that predate the binary codec ignore the field and answer inline
+    /// JSON — callers must accept both shapes.
+    pub fn repl_sync_format(&mut self, have: Option<u64>, binary: bool) -> Result<Json> {
         let mut req = Json::obj();
         req.set("cmd", "repl_sync");
         if let Some(have) = have {
             req.set("have", crate::persist::codec::ju64(have));
+        }
+        if binary {
+            req.set("format", "binary");
         }
         self.request(&req)
     }

@@ -14,11 +14,15 @@
 //! for nanoseconds — reads never wait on training, and training never
 //! waits on reads.
 //!
-//! Snapshots are produced by [`crate::persist::Model::clone_via_codec`]:
-//! every published snapshot is an encode → decode round-trip of the live
-//! model, so serving continuously re-proves the checkpoint codec's
-//! bit-for-bit fidelity (the paper's O(1)-state Quantization Observer is
-//! what keeps that round-trip cheap, PAPER.md Sec. 4).
+//! Snapshots are **structural clones**: model state lives behind `Arc`s
+//! (leaf subtrees, observer factories), so publishing is O(touched) —
+//! pointer bumps now, copy-on-write later at the next learn that touches
+//! a leaf — instead of the encode → decode codec round-trip earlier
+//! revisions ran per publication (still available as
+//! [`crate::persist::Model::clone_via_codec`]). The canonical checkpoint
+//! document is materialized lazily, only when replication or an explicit
+//! `snapshot` asks for it ([`publish`]); codec fidelity is re-proven at
+//! every materialization, where debug builds also audit the document.
 //!
 //! ## Wire protocol — newline-delimited JSON
 //!
@@ -31,7 +35,7 @@
 //! | `{"cmd":"predict_batch","xs":[[…],…]}` | `{"ok":true,"predictions":[…]}` |
 //! | `{"cmd":"snapshot"}` | `{"ok":true,"checkpoint":{…},"version":…}` (a [`crate::persist`] document) |
 //! | `{"cmd":"stats"}` | `{"ok":true,"model":…,"learns_applied":…,"snapshot_version":…,"snapshot_age_learns":…,…}` |
-//! | `{"cmd":"repl_sync","have":…}` | `{"ok":true,"version":…,"hash":…,` one of `"up_to_date"/"deltas"/"full"}` |
+//! | `{"cmd":"repl_sync","have":…[,"format":"binary"]}` | `{"ok":true,"version":…,"hash":…,` one of `"up_to_date"/"deltas"/"full"}` (binary: `"full_b64"` / per-delta `"ops_b64"`, see `docs/FORMATS.md`) |
 //! | `{"cmd":"metrics"}` | `{"ok":true,"format":"prometheus","text":"…"}` ([`crate::obs`] exposition) |
 //! | `{"cmd":"trace_splits"}` | `{"ok":true,"total":…,"capacity":…,"events":[{"outcome":…,"merit_gap":…,"slots_evaluated":…,"elapsed_ns":…},…]}` |
 //! | `{"cmd":"shutdown"}` | `{"ok":true}`, then the server stops |
@@ -68,6 +72,7 @@
 //! sharded ARF/bagging fleet while followers scale the read path.
 
 pub mod client;
+pub mod publish;
 pub mod replicate;
 pub mod server;
 

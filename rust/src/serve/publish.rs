@@ -1,0 +1,290 @@
+//! Zero-copy snapshot publication: the leader's structural-clone
+//! hot-swap plus the lazily materialized replication log.
+//!
+//! The publish path used to run the full codec round-trip — encode the
+//! live model to its canonical JSON document, audit it, decode it back,
+//! swap the decoded clone in as the read snapshot — on every
+//! `snapshot_every` boundary, an O(model) tax per publication. Model
+//! state is now shared behind `Arc`s (leaf subtrees, observer factories,
+//! criteria), so `Model::clone()` is O(nodes) pointer bumps with the
+//! deep copies deferred to the next learn that actually touches a leaf
+//! (copy-on-write at the single mutation point). The trainer therefore
+//! publishes in O(touched) and *stages* the same `Arc` here; the
+//! canonical document is only materialized when something actually needs
+//! it — a `repl_sync` poll, an explicit `snapshot` request, or the bench
+//! suite reading the log.
+//!
+//! Staging overwrites: only the newest staged state is ever encoded, so
+//! a burst of publications between two follower polls costs one codec
+//! pass, not one per boundary. Replication stays defined over
+//! *materialized* versions ([`DeltaLog`] semantics are unchanged);
+//! followers simply observe a coarser version sequence when they poll
+//! less often than the leader publishes.
+//!
+//! This module also owns the `format:"binary"` side of the `repl_sync`
+//! negotiation: when a follower asks for it, sync payloads are embedded
+//! as base64 [`crate::persist::binary`] envelopes instead of inline JSON
+//! (`full_b64` / per-delta `ops_b64`, see `docs/FORMATS.md`). Decoding a
+//! binary envelope reproduces the canonical document bit-for-bit, so the
+//! follower's hash verification pipeline is format-agnostic.
+
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::common::b64;
+use crate::common::json::Json;
+use crate::persist::binary;
+use crate::persist::delta::{DeltaLog, SyncPayload};
+use crate::persist::Model;
+
+use super::server::lock_poisoned;
+
+/// The leader's replication state: staged-but-unencoded model state plus
+/// the versioned delta log it materializes into.
+pub struct Replication {
+    /// Model state staged by the trainer's last publication, not yet
+    /// encoded into the log (`None` = the log is current). Overwritten
+    /// by newer stages; taken under [`Replication::materialize`]'s log
+    /// lock so materializers cannot publish out of order.
+    staged: Mutex<Option<Arc<Model>>>,
+    /// The versioned delta log, fed at materialize time.
+    log: Mutex<DeltaLog>,
+}
+
+impl Replication {
+    pub fn new(log: DeltaLog) -> Replication {
+        Replication { staged: Mutex::new(None), log: Mutex::new(log) }
+    }
+
+    /// Stage freshly published model state (trainer thread). Cheap — a
+    /// pointer store — and never blocks on an encode in progress, which
+    /// holds the *other* lock.
+    pub fn stage(&self, model: Arc<Model>) {
+        *lock_poisoned(&self.staged) = Some(model);
+    }
+
+    /// The delta log as-is, **without** materializing staged state.
+    /// Readout for benches/tests; protocol paths want
+    /// [`Replication::materialize`].
+    pub fn log(&self) -> MutexGuard<'_, DeltaLog> {
+        lock_poisoned(&self.log)
+    }
+
+    /// Encode any staged model into the log and return the (now current)
+    /// log. The log lock is held across take + encode + publish so
+    /// concurrent materializers serialize and versions stay monotonic;
+    /// the trainer's [`Replication::stage`] only touches the staged slot,
+    /// so publishing never waits on an encode here.
+    pub fn materialize(&self) -> Result<MutexGuard<'_, DeltaLog>, String> {
+        let mut log = lock_poisoned(&self.log);
+        // take() in its own statement: an `if let` scrutinee would keep
+        // the staged guard alive across the whole block (temporary
+        // lifetime extension) and deadlock the error path's re-lock
+        let staged = lock_poisoned(&self.staged).take();
+        if let Some(model) = staged {
+            let doc = match encode_staged(&model) {
+                Ok(doc) => doc,
+                Err(e) => {
+                    // keep the state for the next attempt unless the
+                    // trainer staged something newer meanwhile
+                    let mut slot = lock_poisoned(&self.staged);
+                    if slot.is_none() {
+                        *slot = Some(model);
+                    }
+                    return Err(e);
+                }
+            };
+            let (_, changed) = log.publish(doc);
+            if changed {
+                if let Some(m) = crate::obs::m() {
+                    m.snapshot_bytes_json.add(log.full_bytes() as u64);
+                    if let Some(entry) = log.entries().last() {
+                        m.serve_delta_publish_bytes.record(entry.delta_bytes as u64);
+                    }
+                }
+            }
+        }
+        Ok(log)
+    }
+}
+
+/// Canonical document of a staged model; debug builds audit it before it
+/// can reach followers or `snapshot` clients (docs/INVARIANTS.md) — the
+/// same gate the eager publish path used to run, moved to materialize
+/// time. (Read snapshots are structural clones of the live model and
+/// never pass through a document at all.)
+fn encode_staged(model: &Model) -> Result<Json, String> {
+    let doc = model.to_checkpoint().map_err(|e| e.to_string())?;
+    #[cfg(debug_assertions)]
+    {
+        if let Some(cause) = crate::audit::invariants::explain(&doc) {
+            return Err(format!("materialized checkpoint fails audit: {cause}"));
+        }
+    }
+    Ok(doc)
+}
+
+/// Embed a sync decision into a `repl_sync` response. `binary` is the
+/// follower's negotiated preference: payloads travel as base64
+/// [`crate::persist::binary`] envelopes (`full_b64`, per-delta
+/// `ops_b64`) instead of inline JSON. Version/hash headers and the
+/// `up_to_date` variant are identical in both formats. Call after
+/// releasing the log lock — the deep clone / binary encode happens here.
+pub fn embed_sync_payload(payload: SyncPayload, binary_format: bool, response: &mut Json) {
+    use crate::persist::codec::ju64;
+    if !binary_format {
+        payload.into_response(response);
+        return;
+    }
+    response.set("format", "binary");
+    match payload {
+        SyncPayload::UpToDate { version, hash } => {
+            response
+                .set("version", ju64(version))
+                .set("hash", ju64(hash))
+                .set("up_to_date", true);
+        }
+        SyncPayload::Deltas { version, hash, deltas } => {
+            response.set("version", ju64(version)).set("hash", ju64(hash));
+            let mut out = Vec::new();
+            if let Json::Arr(items) = deltas {
+                for d in items {
+                    let mut e = Json::obj();
+                    for key in ["from", "to", "hash"] {
+                        if let Some(v) = d.get(key) {
+                            e.set(key, v.clone());
+                        }
+                    }
+                    let ops = d.get("ops").cloned().unwrap_or_else(|| Json::Arr(Vec::new()));
+                    let bytes = binary::encode_doc(&ops);
+                    if let Some(m) = crate::obs::m() {
+                        m.snapshot_bytes_binary.add(bytes.len() as u64);
+                    }
+                    e.set("ops_b64", b64::encode(&bytes));
+                    out.push(e);
+                }
+            }
+            response.set("deltas", Json::Arr(out));
+        }
+        SyncPayload::Full { version, hash, doc } => {
+            response.set("version", ju64(version)).set("hash", ju64(hash));
+            let bytes = binary::encode_doc(&doc);
+            if let Some(m) = crate::obs::m() {
+                m.snapshot_bytes_binary.add(bytes.len() as u64);
+            }
+            response.set("full_b64", b64::encode(&bytes));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::delta::doc_hash;
+
+    fn parse(s: &str) -> Json {
+        Json::parse(s).unwrap()
+    }
+
+    #[test]
+    fn binary_full_payload_round_trips_bit_for_bit() {
+        let doc = parse(r#"{"a":[1,2.5,-0],"b":{"s":"x"}}"#);
+        let payload = SyncPayload::Full {
+            version: 7,
+            hash: doc_hash(&doc),
+            doc: Arc::new(doc.clone()),
+        };
+        let mut response = Json::obj();
+        embed_sync_payload(payload, true, &mut response);
+        assert_eq!(response.get("format").and_then(Json::as_str), Some("binary"));
+        assert!(response.get("full").is_none(), "binary responses must not inline JSON");
+        let b = response.get("full_b64").and_then(Json::as_str).unwrap();
+        let decoded = binary::decode_doc(&b64::decode(b).unwrap()).unwrap();
+        assert_eq!(decoded.to_compact(), doc.to_compact());
+        assert_eq!(doc_hash(&decoded), doc_hash(&doc));
+    }
+
+    #[test]
+    fn binary_delta_payload_preserves_chain_fields() {
+        let ops = parse(r#"[{"p":["a",0],"v":9}]"#);
+        let mut d = Json::obj();
+        d.set("from", "3").set("to", "4").set("hash", "12345").set("ops", ops.clone());
+        let payload = SyncPayload::Deltas {
+            version: 4,
+            hash: 12345,
+            deltas: Json::Arr(vec![d]),
+        };
+        let mut response = Json::obj();
+        embed_sync_payload(payload, true, &mut response);
+        let deltas = response.get("deltas").and_then(Json::as_arr).unwrap();
+        assert_eq!(deltas.len(), 1);
+        let e = &deltas[0];
+        assert_eq!(e.get("from").and_then(Json::as_str), Some("3"));
+        assert!(e.get("ops").is_none(), "binary deltas must not inline ops");
+        let b = e.get("ops_b64").and_then(Json::as_str).unwrap();
+        let decoded = binary::decode_doc(&b64::decode(b).unwrap()).unwrap();
+        assert_eq!(decoded.to_compact(), ops.to_compact());
+    }
+
+    #[test]
+    fn json_format_is_the_untouched_fallback() {
+        let doc = parse(r#"{"a":1}"#);
+        let payload = SyncPayload::Full {
+            version: 1,
+            hash: doc_hash(&doc),
+            doc: Arc::new(doc.clone()),
+        };
+        let mut response = Json::obj();
+        embed_sync_payload(payload, false, &mut response);
+        assert!(response.get("format").is_none());
+        assert!(response.get("full_b64").is_none());
+        assert_eq!(response.get("full").unwrap().to_compact(), doc.to_compact());
+    }
+
+    #[test]
+    fn materialize_is_lazy_and_collapses_staged_bursts() {
+        use crate::eval::Regressor;
+        use crate::observer::{factory, QuantizationObserver, RadiusPolicy};
+        use crate::tree::{HoeffdingTreeRegressor, HtrOptions};
+
+        let opts = HtrOptions { grace_period: 8, ..HtrOptions::default() };
+        let qo = factory("QO_s2", || {
+            Box::new(QuantizationObserver::new(RadiusPolicy::std_fraction(2.0)))
+        });
+        let mut tree = HoeffdingTreeRegressor::new(2, opts, qo);
+        let mut rng = crate::common::Rng::new(0xBEEF);
+        let mut learn = |t: &mut HoeffdingTreeRegressor, n: usize| {
+            for _ in 0..n {
+                let x = [rng.f64(), rng.f64()];
+                let y = 3.0 * x[0] - x[1];
+                t.learn_one(&x, y);
+            }
+        };
+        learn(&mut tree, 64);
+        let mut model = Model::Tree(tree);
+        let repl = Replication::new(DeltaLog::new(model.to_checkpoint().unwrap(), 8));
+        assert_eq!(repl.log().version(), 0);
+
+        // two stages between materializations: one version, not two
+        model.mark_synced();
+        if let Model::Tree(t) = &mut model {
+            learn(t, 32);
+        }
+        repl.stage(Arc::new(model.clone()));
+        if let Model::Tree(t) = &mut model {
+            learn(t, 32);
+        }
+        repl.stage(Arc::new(model.clone()));
+        {
+            let log = repl.materialize().unwrap();
+            assert_eq!(log.version(), 1, "a staged burst collapses to one version");
+            assert_eq!(
+                log.doc().to_compact(),
+                model.to_checkpoint().unwrap().to_compact(),
+                "materialized doc is the newest staged state"
+            );
+        }
+        // nothing staged: materialize is a no-op
+        let log = repl.materialize().unwrap();
+        assert_eq!(log.version(), 1);
+    }
+}

@@ -28,6 +28,17 @@
 //! 0 is the model the leader started with). `have` omitted means "send
 //! a full document" — the bootstrap handshake.
 //!
+//! **Binary negotiation.** By default
+//! ([`FollowerOptions::prefer_binary`]) the follower adds
+//! `"format":"binary"` to its polls; a leader that understands it
+//! answers with base64 [`crate::persist::binary`] envelopes —
+//! `full_b64` instead of `full`, `ops_b64` instead of each delta's
+//! `ops` (see `docs/FORMATS.md`). Decoding an envelope reproduces the
+//! canonical document **bit-for-bit**, so every verification below
+//! (hash checks, audits, byte-identical serving) is format-agnostic.
+//! Old leaders simply ignore the field and answer inline JSON — the
+//! apply path accepts both shapes, which is the whole fallback story.
+//!
 //! ## Consistency + resync rules
 //!
 //! * **Exactness.** Checkpoint text is canonical, so each delta is an
@@ -65,8 +76,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::common::b64;
 use crate::common::json::Json;
 use crate::eval::Regressor;
+use crate::persist::binary;
 use crate::persist::codec::{field, ju64, pu64};
 use crate::persist::delta::{self, DeltaLog};
 use crate::persist::Model;
@@ -84,6 +97,13 @@ pub struct FollowerOptions {
     pub poll_interval: Duration,
     /// Delay before re-dialing the leader after a connection failure.
     pub reconnect_backoff: Duration,
+    /// Ask the leader for `format:"binary"` sync payloads (base64
+    /// [`crate::persist::binary`] envelopes instead of inline JSON —
+    /// smaller on the wire, same bytes after decoding). Leaders that
+    /// predate the binary codec ignore the request and answer JSON; the
+    /// apply path accepts both, so this is a preference, not a
+    /// requirement.
+    pub prefer_binary: bool,
 }
 
 impl Default for FollowerOptions {
@@ -91,6 +111,7 @@ impl Default for FollowerOptions {
         FollowerOptions {
             poll_interval: Duration::from_millis(25),
             reconnect_backoff: Duration::from_millis(200),
+            prefer_binary: true,
         }
     }
 }
@@ -173,6 +194,31 @@ fn audit_cause(doc: &Json, e: anyhow::Error) -> anyhow::Error {
     }
 }
 
+/// Resolve a sync response's full document, whichever format it arrived
+/// in: a base64 binary envelope (`full_b64`, the honored negotiation) or
+/// inline canonical JSON (`full`). `None` when the response carries no
+/// full document. Binary decoding is strict — envelope hashes verify
+/// inside [`binary::decode_doc`] before the document-level hash check
+/// even runs.
+fn decode_full(response: &Json) -> Result<Option<Json>> {
+    if let Some(text) = response.get("full_b64").and_then(Json::as_str) {
+        let bytes = b64::decode(text).context("base64 of full_b64")?;
+        let doc = binary::decode_doc(&bytes).context("binary envelope of full_b64")?;
+        return Ok(Some(doc));
+    }
+    Ok(response.get("full").cloned())
+}
+
+/// Resolve one wire delta's patch ops, binary (`ops_b64`) or inline
+/// JSON (`ops`).
+fn decode_ops(d: &Json) -> Result<Json> {
+    if let Some(text) = d.get("ops_b64").and_then(Json::as_str) {
+        let bytes = b64::decode(text).context("base64 of ops_b64")?;
+        return binary::decode_doc(&bytes).context("binary envelope of ops_b64");
+    }
+    Ok(field(d, "ops")?.clone())
+}
+
 /// Handle one successful `repl_sync` response. Returns an error when the
 /// payload could not be applied — the caller then forces a full resync.
 fn apply_sync(shared: &FollowerShared, response: &Json) -> Result<()> {
@@ -201,20 +247,20 @@ fn apply_sync(shared: &FollowerShared, response: &Json) -> Result<()> {
         note_at_head(shared, learns_at_head);
         return Ok(());
     }
-    if let Some(full) = response.get("full") {
+    if let Some(full) = decode_full(response)? {
         let hash = pu64(field(response, "hash")?, "hash")?;
-        if delta::doc_hash(full) != hash {
-            return Err(audit_cause(full, anyhow!("full document hash mismatch")));
+        if delta::doc_hash(&full) != hash {
+            return Err(audit_cause(&full, anyhow!("full document hash mismatch")));
         }
         // debug builds audit every accepted document before it can serve
         #[cfg(debug_assertions)]
         {
-            if let Some(cause) = crate::audit::invariants::explain(full) {
+            if let Some(cause) = crate::audit::invariants::explain(&full) {
                 return Err(anyhow!("full document fails audit: {cause}"));
             }
         }
-        let model = Model::from_checkpoint(full).map_err(|e| audit_cause(full, e))?;
-        install(shared, leader_version, hash, full.clone(), model);
+        let model = Model::from_checkpoint(&full).map_err(|e| audit_cause(&full, e))?;
+        install(shared, leader_version, hash, full, model);
         shared.full_resyncs.fetch_add(1, Ordering::Relaxed);
         if let Some(m) = crate::obs::m() {
             m.repl_full_resyncs.inc();
@@ -228,13 +274,16 @@ fn apply_sync(shared: &FollowerShared, response: &Json) -> Result<()> {
         // exactly the leader's published sequence
         let (mut version, mut doc) = lock_poisoned(&shared.doc).clone();
         for d in deltas {
-            let (from, to, hash, ops) = delta::decode_wire_delta(d)?;
+            let from = pu64(field(d, "from")?, "from")?;
+            let to = pu64(field(d, "to")?, "to")?;
+            let hash = pu64(field(d, "hash")?, "hash")?;
+            let ops = decode_ops(d)?;
             if from != version || to != version + 1 {
                 return Err(anyhow!(
                     "delta covers {from}→{to} but the replica is at {version}"
                 ));
             }
-            doc = delta::apply(&doc, ops)
+            doc = delta::apply(&doc, &ops)
                 .map_err(|e| e.context(format!("applying delta {from}→{to}")))?;
             if delta::doc_hash(&doc) != hash {
                 return Err(audit_cause(
@@ -332,7 +381,7 @@ fn poll_loop(shared: Arc<FollowerShared>, options: FollowerOptions) {
             thread::sleep(options.reconnect_backoff);
             continue;
         };
-        let response = match conn.repl_sync(have) {
+        let response = match conn.repl_sync_format(have, options.prefer_binary) {
             Ok(r) => r,
             Err(_) => {
                 // leader gone or mid-restart: drop the connection, keep
@@ -380,16 +429,17 @@ impl Follower {
         let mut client = ServeClient::connect(leader_addr)
             .map_err(|e| e.context(format!("dialing leader {leader_addr}")))?;
         let response = client
-            .repl_sync(None)
+            .repl_sync_format(None, options.prefer_binary)
             .map_err(|e| e.context("bootstrap repl_sync"))?;
         let version = pu64(field(&response, "version")?, "version")?;
-        let full = field(&response, "full")
-            .map_err(|e| e.context("bootstrap expects a full document"))?;
+        let full = decode_full(&response)
+            .map_err(|e| e.context("bootstrap full document"))?
+            .ok_or_else(|| anyhow!("bootstrap expects a full document"))?;
         let hash = pu64(field(&response, "hash")?, "hash")?;
-        if delta::doc_hash(full) != hash {
+        if delta::doc_hash(&full) != hash {
             return Err(anyhow!("bootstrap document hash mismatch"));
         }
-        let model = Model::from_checkpoint(full)
+        let model = Model::from_checkpoint(&full)
             .map_err(|e| e.context("decoding bootstrap document"))?;
 
         let listener = TcpListener::bind(bind_addr)

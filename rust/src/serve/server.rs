@@ -4,9 +4,12 @@
 //!
 //! Beyond the base learn/predict protocol this file implements the
 //! **leader** side of replication ([`super::replicate`] has the follower):
-//! every published snapshot also feeds a versioned [`DeltaLog`], and the
+//! every published snapshot also stages state for the versioned
+//! [`DeltaLog`] (materialized lazily, see [`super::publish`]), and the
 //! `repl_sync` command answers followers with `up_to_date`, a delta
-//! chain, or a full document. With `ServeOptions::shards > 1` the trainer
+//! chain, or a full document — as inline JSON or, when the follower
+//! negotiates `format:"binary"`, as base64 binary checkpoint envelopes.
+//! With `ServeOptions::shards > 1` the trainer
 //! drains its queue into micro-batches and pushes them through the
 //! sharded forest machinery ([`crate::coordinator::train_batch_sharded`])
 //! — one endpoint fronting a sharded fleet, bit-identical to sequential
@@ -28,6 +31,8 @@ use crate::persist::codec::{ju64, pu64};
 use crate::persist::delta::DeltaLog;
 use crate::persist::Model;
 use crate::stream::Instance;
+
+use super::publish::{embed_sync_payload, Replication};
 
 /// Per-line request size cap: network input must not pick our allocation
 /// size. Generous enough for large `predict_batch` requests.
@@ -94,7 +99,9 @@ struct ServerStats {
     /// total above.
     snapshot_failures_consecutive: AtomicU64,
     connections: AtomicU64,
-    /// Version of the last published snapshot ([`DeltaLog::version`]).
+    /// Version of the last *materialized* publication
+    /// ([`DeltaLog::version`]); staged-but-unmaterialized publications
+    /// are not yet versioned (see [`super::publish`]).
     snapshot_version: AtomicU64,
     /// `learns_applied` at the moment of the last publication — the
     /// difference to the live counter is the snapshot's age in learns.
@@ -137,57 +144,14 @@ pub(crate) fn lock_poisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
 }
 
-/// Encode the live model, publish the decoded clone as the new read
-/// snapshot, feed the replication log, and return the checkpoint
-/// document with its version.
-fn publish_snapshot(
-    model: &mut Model,
-    snapshot: &RwLock<Arc<Model>>,
-    stats: &ServerStats,
-    replication: &Mutex<DeltaLog>,
-) -> Result<(Json, u64), String> {
-    if model.learns_since_sync() == 0 {
-        // touched-state fast path: nothing trained since the last
-        // publication, so the log's document IS the current model state
-        // (true at start too — the log was seeded from this model) and
-        // the whole encode → decode → diff round-trip can be skipped
-        let (doc, version) = {
-            let log = lock_poisoned(replication);
-            (log.doc_arc(), log.version())
-        };
-        // the deep clone happens after the lock is released
-        return Ok(((*doc).clone(), version));
-    }
-    let doc = model.to_checkpoint().map_err(|e| e.to_string())?;
-    // debug builds audit every document before it can reach readers or
-    // followers (docs/INVARIANTS.md); release publishes are untaxed
-    #[cfg(debug_assertions)]
-    {
-        if let Some(cause) = crate::audit::invariants::explain(&doc) {
-            return Err(format!("published checkpoint fails audit: {cause}"));
-        }
-    }
-    let clone = Model::from_checkpoint(&doc).map_err(|e| e.to_string())?;
-    let shared = Arc::new(clone);
-    match snapshot.write() {
-        Ok(mut guard) => *guard = shared,
-        Err(poisoned) => {
-            let mut guard = poisoned.into_inner();
-            *guard = shared;
-        }
-    }
-    let (version, delta_bytes) = {
-        let mut log = lock_poisoned(replication);
-        let (version, changed) = log.publish(doc.clone());
-        let delta_bytes = if changed {
-            log.entries().last().map(|e| e.delta_bytes)
-        } else {
-            None
-        };
-        (version, delta_bytes)
-    };
-    model.mark_synced();
-    stats.snapshot_version.store(version, Ordering::Relaxed);
+/// Advance the snapshot bookkeeping to "published right now": the age
+/// counter (`snapshot_age_learns` in `stats`) resets, the lifetime
+/// snapshot count bumps, and a failure run ends. Shared by the staging
+/// publish and the zero-dirty explicit-snapshot path — the latter used
+/// to skip this, leaving a forced snapshot's age pointing at the
+/// *previous* publication (regression-tested in
+/// `rust/tests/serve_e2e.rs`).
+fn note_snapshot_published(stats: &ServerStats) {
     stats
         .learns_at_snapshot
         .store(stats.learns_applied.load(Ordering::Relaxed), Ordering::Relaxed);
@@ -195,12 +159,61 @@ fn publish_snapshot(
     stats.snapshot_failures_consecutive.store(0, Ordering::Relaxed);
     if let Some(m) = crate::obs::m() {
         m.serve_snapshot_failures_consecutive.set(0);
-        m.model_mem_bytes.set(model.mem_bytes() as u64);
-        if let Some(bytes) = delta_bytes {
-            m.serve_delta_publish_bytes.record(bytes as u64);
-        }
     }
-    Ok((doc, version))
+}
+
+/// Publish the live model as the new read snapshot in O(touched): a
+/// structural clone (`Arc` bumps; deep copies are deferred to the next
+/// learn that touches a leaf), an `Arc` swap, and a pointer staged for
+/// lazy materialization into the replication log ([`super::publish`]).
+/// Infallible — the codec round-trip that used to be able to fail here
+/// now runs at materialize time.
+fn stage_publish(
+    model: &mut Model,
+    snapshot: &RwLock<Arc<Model>>,
+    stats: &ServerStats,
+    replication: &Replication,
+) {
+    let started = Instant::now();
+    let shared = Arc::new(model.clone());
+    match snapshot.write() {
+        Ok(mut guard) => *guard = shared.clone(),
+        Err(poisoned) => *poisoned.into_inner() = shared.clone(),
+    }
+    replication.stage(shared);
+    model.mark_synced();
+    note_snapshot_published(stats);
+    if let Some(m) = crate::obs::m() {
+        m.model_mem_bytes.set(model.mem_bytes() as u64);
+        m.snapshot_publish_ns.record(started.elapsed().as_nanos() as u64);
+    }
+}
+
+/// Explicit `snapshot` request: publish (when anything trained since the
+/// last publication), materialize the log, and return the canonical
+/// checkpoint document with its version.
+fn publish_snapshot(
+    model: &mut Model,
+    snapshot: &RwLock<Arc<Model>>,
+    stats: &ServerStats,
+    replication: &Replication,
+) -> Result<(Json, u64), String> {
+    if model.learns_since_sync() > 0 {
+        stage_publish(model, snapshot, stats, replication);
+    } else {
+        // zero-dirty: the read snapshot already equals the live model,
+        // but the bookkeeping still advances — a snapshot request racing
+        // a just-crossed publication boundary must reset the snapshot
+        // age, not report the previous publication's
+        note_snapshot_published(stats);
+    }
+    let (doc, version) = {
+        let log = replication.materialize()?;
+        (log.doc_arc(), log.version())
+    };
+    stats.snapshot_version.store(version, Ordering::Relaxed);
+    // the deep clone happens after the log lock is released
+    Ok(((*doc).clone(), version))
 }
 
 /// Apply one micro-batch to the model: through the sharded forest
@@ -244,7 +257,7 @@ pub struct Server {
     addr: SocketAddr,
     acceptor: thread::JoinHandle<()>,
     trainer: thread::JoinHandle<Model>,
-    replication: Arc<Mutex<DeltaLog>>,
+    replication: Arc<Replication>,
 }
 
 impl Server {
@@ -281,7 +294,7 @@ impl Server {
         let initial = Model::from_checkpoint(&doc)
             .map_err(|e| e.context("decoding the initial snapshot"))?;
         let replication =
-            Arc::new(Mutex::new(DeltaLog::new(doc, options.delta_history.max(1))));
+            Arc::new(Replication::new(DeltaLog::new(doc, options.delta_history.max(1))));
         let snapshot = Arc::new(RwLock::new(Arc::new(initial)));
         let shutdown = Arc::new(AtomicBool::new(false));
         let (tx, rx) = mpsc::sync_channel::<TrainerMsg>(options.queue_capacity.max(1));
@@ -328,18 +341,13 @@ impl Server {
                             let n = batch.len() as u64;
                             let before = stats.learns_applied.fetch_add(n, Ordering::Relaxed);
                             let applied = before + n;
-                            // publish when the batch crossed a boundary
+                            // publish when the batch crossed a boundary —
+                            // O(touched) now: staging cannot fail, and
+                            // encode failures surface at materialize time
                             if snapshot_every > 0
                                 && before / snapshot_every != applied / snapshot_every
-                                && publish_snapshot(
-                                    &mut model,
-                                    &snapshot,
-                                    &stats,
-                                    &replication,
-                                )
-                                .is_err()
                             {
-                                note_snapshot_failure(&stats);
+                                stage_publish(&mut model, &snapshot, &stats, &replication);
                             }
                         }
                         TrainerMsg::Snapshot(reply) => {
@@ -402,10 +410,10 @@ impl Server {
         self.addr
     }
 
-    /// The leader's replication log (version, delta ring, publish
-    /// instants) — the bench suite reads lag and delta/full byte sizes
-    /// from here.
-    pub fn replication(&self) -> Arc<Mutex<DeltaLog>> {
+    /// The leader's replication state (staged snapshot + versioned delta
+    /// log) — the bench suite reads lag and delta/full byte sizes from
+    /// here; call [`Replication::materialize`] first for a current view.
+    pub fn replication(&self) -> Arc<Replication> {
         self.replication.clone()
     }
 
@@ -468,7 +476,7 @@ fn handle_connection(
     stats: Arc<ServerStats>,
     info: Arc<ModelInfo>,
     shutdown: Arc<AtomicBool>,
-    replication: Arc<Mutex<DeltaLog>>,
+    replication: Arc<Replication>,
     self_addr: SocketAddr,
 ) {
     let stop = drive_connection(stream, |line| {
@@ -563,7 +571,7 @@ fn respond(
     snapshot: &RwLock<Arc<Model>>,
     stats: &ServerStats,
     info: &ModelInfo,
-    replication: &Mutex<DeltaLog>,
+    replication: &Replication,
 ) -> (Json, bool) {
     let request = match Json::parse(line) {
         Ok(j) => j,
@@ -650,7 +658,8 @@ fn respond(
         "repl_sync" => {
             // follower catch-up: answered from the replication log without
             // a trainer round-trip (replication is defined over *published*
-            // versions, which is exactly what the log holds)
+            // versions). Materialize first — the trainer publishes by
+            // staging, and the log must be current before answering.
             let have = match request.get("have") {
                 None => None,
                 Some(j) => match pu64(j, "have") {
@@ -658,11 +667,22 @@ fn respond(
                     Err(e) => return (error_response(&e.to_string()), false),
                 },
             };
-            let payload = lock_poisoned(replication).sync_payload(have);
-            // full documents embed (deep-clone) outside the log lock, so
-            // a bootstrapping follower never stalls the publish path
+            let binary = request.get("format").and_then(Json::as_str) == Some("binary");
+            let payload = match replication.materialize() {
+                Ok(log) => log.sync_payload(have),
+                Err(e) => {
+                    note_snapshot_failure(stats);
+                    return (
+                        error_response(&format!("materializing the snapshot: {e}")),
+                        false,
+                    );
+                }
+            };
+            // full documents embed (deep-clone / binary-encode) outside
+            // the log lock, so a bootstrapping follower never stalls the
+            // publish path
             let mut o = ok_response();
-            payload.into_response(&mut o);
+            embed_sync_payload(payload, binary, &mut o);
             // leader-head progress markers: the follower derives its lag
             // in learns from these (see `super::replicate`) — how many
             // instances the leader has applied in total, and how many it

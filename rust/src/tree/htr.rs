@@ -30,19 +30,32 @@ use super::subspace::sample_subspace;
 use super::leaf::LeafState;
 use super::options::HtrOptions;
 
+/// Arena node. Leaves live behind `Arc` so cloning a tree (the serve
+/// layer's snapshot hot-swap) shares every leaf with the clone; the
+/// trainer copy-on-writes a leaf (via [`Arc::make_mut`]) only when it
+/// next touches it, making the clone O(touched) deep work instead of
+/// O(model).
+#[derive(Clone)]
 enum Node {
-    Leaf(Box<LeafState>),
+    Leaf(Arc<LeafState>),
     Split { feature: usize, threshold: f64, left: u32, right: u32 },
 }
 
 /// FIMT-like Hoeffding tree for streaming regression.
+///
+/// `Clone` is cheap-by-sharing: the node arena is copied, but every leaf
+/// (the heavy state: observers, slot tables, linear models) is shared
+/// behind `Arc` and only deep-copied when the original tree mutates it
+/// again — see [`crate::serve`]'s zero-copy snapshots and
+/// `docs/FORMATS.md`.
+#[derive(Clone)]
 pub struct HoeffdingTreeRegressor {
     nodes: Vec<Node>,
     root: u32,
     n_features: usize,
     options: HtrOptions,
-    factory: Box<dyn ObserverFactory>,
-    criterion: Box<dyn SplitCriterion>,
+    factory: Arc<dyn ObserverFactory>,
+    criterion: Arc<dyn SplitCriterion>,
     n_splits: usize,
     observer_label: String,
     /// Subspace draws (and any future stochastic choices). With
@@ -71,7 +84,7 @@ impl HoeffdingTreeRegressor {
         let mut rng = Rng::new(options.seed);
         let k = options.subspace.resolve(n_features);
         let monitored = sample_subspace(&mut rng, n_features, k);
-        let root_leaf = Node::Leaf(Box::new(LeafState::new(
+        let root_leaf = Node::Leaf(Arc::new(LeafState::new(
             n_features,
             monitored,
             factory.as_ref(),
@@ -86,8 +99,8 @@ impl HoeffdingTreeRegressor {
             root: 0,
             n_features,
             options,
-            factory,
-            criterion: Box::new(VarianceReduction),
+            factory: Arc::from(factory),
+            criterion: Arc::new(VarianceReduction),
             n_splits: 0,
             observer_label,
             rng,
@@ -99,7 +112,7 @@ impl HoeffdingTreeRegressor {
 
     /// Replace the split criterion (default: Variance Reduction).
     pub fn with_criterion(mut self, criterion: Box<dyn SplitCriterion>) -> Self {
-        self.criterion = criterion;
+        self.criterion = Arc::from(criterion);
         self
     }
 
@@ -302,7 +315,7 @@ impl HoeffdingTreeRegressor {
             );
             child.stats = stats;
             child.linear = parent_linear.clone();
-            self.nodes.push(Node::Leaf(Box::new(child)));
+            self.nodes.push(Node::Leaf(Arc::new(child)));
             (self.nodes.len() - 1) as u32
         };
         let left = mk_child(monitored_left, suggestion.left);
@@ -319,6 +332,10 @@ impl HoeffdingTreeRegressor {
         self.learns_since_sync += 1;
         let leaf_idx = self.route(x);
         let Node::Leaf(leaf) = &mut self.nodes[leaf_idx as usize] else { unreachable!() };
+        // copy-on-write: if a published snapshot still shares this leaf,
+        // deep-clone it now (once per leaf per publish) and mutate the
+        // private copy; unshared leaves mutate in place at zero cost
+        let leaf = Arc::make_mut(leaf);
         leaf.learn(x, y, 1.0);
         if let Some(m) = obs::m() {
             m.tree_learns.inc();
@@ -517,7 +534,7 @@ impl HoeffdingTreeRegressor {
                 if leaf.linear.n_elements() != n_features + 1 {
                     return Err(anyhow!("leaf linear model dimensionality mismatch"));
                 }
-                nodes.push(Node::Leaf(Box::new(leaf)));
+                nodes.push(Node::Leaf(Arc::new(leaf)));
             } else if let Some(split) = item.get("split") {
                 let left = pusize(field(split, "left")?, "left")?;
                 let right = pusize(field(split, "right")?, "right")?;
@@ -563,8 +580,8 @@ impl HoeffdingTreeRegressor {
             root: root as u32,
             n_features,
             options,
-            factory: spec.to_factory(),
-            criterion,
+            factory: Arc::from(spec.to_factory()),
+            criterion: Arc::from(criterion),
             n_splits: pusize(field(j, "n_splits")?, "n_splits")?,
             observer_label: label.to_string(),
             rng: rng_from(field(j, "rng")?, "rng")?,

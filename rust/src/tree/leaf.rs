@@ -49,6 +49,12 @@ impl LeafModelKind {
 const FADE: f64 = 0.995;
 
 /// Mutable state of one leaf.
+///
+/// `Clone` (through [`AttributeObserver::clone_box`]) is what powers the
+/// copy-on-write snapshot path: published snapshots share leaves behind
+/// `Arc`, and the trainer deep-clones only the leaves it touches
+/// afterwards ([`crate::tree::HoeffdingTreeRegressor`]).
+#[derive(Clone)]
 pub struct LeafState {
     /// Robust statistics of the leaf's target distribution. May be
     /// warm-started from the parent branch statistics at split time.

@@ -3,7 +3,9 @@
 //! {QO (dynamic + fixed radius), E-BST, TE-BST, exhaustive}, `save → load`
 //! must produce **bit-identical predictions** and an **identical
 //! subsequent training trajectory** (same split counts, same structure,
-//! same predictions after further training).
+//! same predictions after further training). The binary checkpoint fast
+//! path is held to the same bar: binary ≡ canonical JSON bit-for-bit
+//! across the whole corpus (`docs/FORMATS.md`).
 
 use qostream::common::proptest::check;
 use qostream::common::Rng;
@@ -234,6 +236,73 @@ fn delta_chain_reconstructs_full_checkpoints_byte_for_byte() {
                     if restored.predict(&x).to_bits() != model.predict(&x).to_bits() {
                         return Err(format!("{name}: reconstructed head predicts differently"));
                     }
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+/// The binary fast path is an alternate serialization of the canonical
+/// document, nothing more: across the full corpus ({tree, ARF, bagging}
+/// × every checkpointable observer kind), a binary checkpoint must
+/// decode back to the canonical JSON **byte-for-byte**, restore to a
+/// model with bit-identical predictions, and train on identically from
+/// there (`docs/FORMATS.md`).
+#[test]
+fn binary_checkpoint_equals_json_across_the_corpus() {
+    for (i, factory) in observer_grid().into_iter().enumerate() {
+        let label = factory.name();
+        check(&format!("binary-vs-json[{label}]"), 0xB1 + i as u64, 1, |rng| {
+            for mut model in model_grid(&label, rng) {
+                let name = model.name();
+                let n = 300 + rng.below(500) as usize;
+                for _ in 0..n {
+                    let (x, y) = draw_instance(rng);
+                    model.learn_one(&x, y);
+                }
+
+                // bit-for-bit canonical-document equivalence
+                let doc = model.to_checkpoint().expect("encode");
+                let bytes = model.to_binary().expect("binary encode");
+                let decoded = qostream::persist::binary::decode_doc(&bytes)
+                    .map_err(|e| format!("{name}: binary decode: {e}"))?;
+                if decoded.to_compact() != doc.to_compact() {
+                    return Err(format!("{name}: binary decode changed the canonical text"));
+                }
+                if delta::doc_hash(&decoded) != delta::doc_hash(&doc) {
+                    return Err(format!("{name}: binary decode changed the doc hash"));
+                }
+
+                // a binary restore behaves exactly like a JSON restore
+                let mut restored = Model::from_binary(&bytes)
+                    .map_err(|e| format!("{name}: binary restore: {e}"))?;
+                for _ in 0..10 {
+                    let (x, _) = draw_instance(rng);
+                    if restored.predict(&x).to_bits() != model.predict(&x).to_bits() {
+                        return Err(format!("{name}: binary restore predicts differently"));
+                    }
+                }
+                for _ in 0..200 {
+                    let (x, y) = draw_instance(rng);
+                    model.learn_one(&x, y);
+                    restored.learn_one(&x, y);
+                }
+                if restored.n_elements() != model.n_elements() {
+                    return Err(format!("{name}: element counts diverged after training on"));
+                }
+                for _ in 0..10 {
+                    let (x, _) = draw_instance(rng);
+                    if restored.predict(&x).to_bits() != model.predict(&x).to_bits() {
+                        return Err(format!("{name}: trajectory diverged after binary restore"));
+                    }
+                }
+                // re-encoding the restored model is a fixpoint in both formats
+                if restored.to_text().expect("re-encode") != model.to_text().expect("encode") {
+                    return Err(format!("{name}: JSON re-encode after binary restore differs"));
+                }
+                if restored.to_binary().expect("re-encode") != model.to_binary().expect("encode") {
+                    return Err(format!("{name}: binary re-encode after restore differs"));
                 }
             }
             Ok(())

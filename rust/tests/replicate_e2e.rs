@@ -272,6 +272,137 @@ fn sharded_leader_is_bit_identical_and_replicates() {
     server.join().expect("leader exit");
 }
 
+/// Binary wire negotiation (`docs/FORMATS.md`): a `format:"binary"` poll
+/// is answered with base64 envelopes (`full_b64` / per-delta `ops_b64`)
+/// that decode to the **same bytes** as the inline-JSON answer to a
+/// plain poll, and a binary-preferring follower and a JSON-fallback
+/// follower track the same leader bit-identically version by version.
+#[test]
+fn binary_and_json_followers_replicate_bit_identically() {
+    use qostream::common::b64;
+    use qostream::persist::binary;
+
+    let server = Server::start(
+        Model::Arf(arf(2, 9)),
+        "127.0.0.1:0",
+        ServeOptions { snapshot_every: 0, ..Default::default() },
+    )
+    .expect("leader");
+    let addr = server.addr().to_string();
+    let mut client = ServeClient::connect(server.addr()).expect("leader client");
+    let mut probe = ServeClient::connect(server.addr()).expect("probe client");
+
+    // --- wire shape, straight through the client API ---
+    // bootstrap: binary answers `full_b64`, plain answers inline `full`,
+    // and the envelope decodes to the identical canonical document
+    let bin_boot = probe.repl_sync_format(None, true).expect("binary bootstrap");
+    assert_eq!(bin_boot.get("format").and_then(Json::as_str), Some("binary"));
+    assert!(bin_boot.get("full").is_none(), "binary answer must not inline JSON: {bin_boot:?}");
+    let envelope = bin_boot
+        .get("full_b64")
+        .and_then(Json::as_str)
+        .expect("binary bootstrap carries full_b64");
+    let decoded = binary::decode_doc(&b64::decode(envelope).expect("valid base64"))
+        .expect("envelope decodes");
+    let json_boot = probe.repl_sync(None).expect("json bootstrap");
+    assert!(json_boot.get("full_b64").is_none(), "plain poll must fall back to inline JSON");
+    let inline = json_boot.get("full").expect("json bootstrap carries full");
+    assert_eq!(
+        decoded.to_compact(),
+        inline.to_compact(),
+        "both formats must carry the same canonical document"
+    );
+    assert_eq!(
+        bin_boot.get("hash").and_then(Json::as_str),
+        json_boot.get("hash").and_then(Json::as_str),
+        "advertised hash is format-agnostic"
+    );
+
+    // --- end to end: one follower per format against the same leader ---
+    let binary_follower = Follower::start(
+        &addr,
+        "127.0.0.1:0",
+        FollowerOptions { poll_interval: Duration::from_millis(3), ..Default::default() },
+    )
+    .expect("binary follower");
+    let json_follower = Follower::start(
+        &addr,
+        "127.0.0.1:0",
+        FollowerOptions {
+            poll_interval: Duration::from_millis(3),
+            prefer_binary: false,
+            ..Default::default()
+        },
+    )
+    .expect("json follower");
+    let mut binary_client = ServeClient::connect(binary_follower.addr()).expect("binary replica");
+    let mut json_client = ServeClient::connect(json_follower.addr()).expect("json replica");
+
+    let mut stream = Friedman1::new(17, 1.0);
+    let batch = probes(40);
+    let rounds = 4u64;
+    for round in 1..=rounds {
+        for _ in 0..120 {
+            let inst = stream.next_instance().unwrap();
+            client.learn(&inst.x, inst.y).expect("learn");
+        }
+        client.snapshot().expect("snapshot");
+
+        // delta shape at this version: binary polls get `ops_b64`, plain
+        // polls get inline `ops`, both decoding to the same operations
+        let bin_sync = probe.repl_sync_format(Some(round - 1), true).expect("binary sync");
+        let json_sync = probe.repl_sync(Some(round - 1)).expect("json sync");
+        let bin_delta = bin_sync
+            .get("deltas")
+            .and_then(Json::as_arr)
+            .and_then(|d| d.first())
+            .expect("binary sync carries deltas");
+        let json_delta = json_sync
+            .get("deltas")
+            .and_then(Json::as_arr)
+            .and_then(|d| d.first())
+            .expect("json sync carries deltas");
+        assert!(bin_delta.get("ops").is_none(), "{bin_delta:?}");
+        let ops_envelope = bin_delta
+            .get("ops_b64")
+            .and_then(Json::as_str)
+            .expect("binary delta carries ops_b64");
+        let ops = binary::decode_doc(&b64::decode(ops_envelope).expect("valid base64"))
+            .expect("ops envelope decodes");
+        assert_eq!(
+            ops.to_compact(),
+            json_delta.get("ops").expect("inline ops").to_compact(),
+            "v{round}: delta operations must be format-agnostic"
+        );
+
+        wait_version(&binary_follower, round);
+        wait_version(&json_follower, round);
+        let leader_preds = client.predict_batch(&batch).expect("leader batch");
+        let bin_preds = binary_client.predict_batch(&batch).expect("binary batch");
+        let json_preds = json_client.predict_batch(&batch).expect("json batch");
+        for (i, ((a, b), c)) in
+            leader_preds.iter().zip(&bin_preds).zip(&json_preds).enumerate()
+        {
+            assert_eq!(a.to_bits(), b.to_bits(), "v{round} probe {i}: binary follower");
+            assert_eq!(a.to_bits(), c.to_bits(), "v{round} probe {i}: json follower");
+        }
+    }
+
+    // both replicas rode the delta path the whole way — the formats
+    // differ on the wire, never in behavior
+    for replica in [&mut binary_client, &mut json_client] {
+        assert_eq!(follower_stat(replica, "deltas_applied") as u64, rounds);
+        assert_eq!(follower_stat(replica, "full_resyncs") as u64, 0);
+    }
+
+    binary_client.shutdown().expect("binary shutdown");
+    binary_follower.join().expect("binary exit");
+    json_client.shutdown().expect("json shutdown");
+    json_follower.join().expect("json exit");
+    client.shutdown().expect("leader shutdown");
+    server.join().expect("leader exit");
+}
+
 /// Followers are strictly read replicas: learns are rejected with an
 /// error envelope, reads keep working, and the connection stays usable.
 #[test]

@@ -82,6 +82,64 @@ fn smoke_learn_predict_snapshot_shutdown() {
     assert_eq!(final_model.kind(), "tree");
 }
 
+/// Regression: an explicit `snapshot` that lands when the trainer has
+/// nothing dirty (`learns_since_sync == 0` — e.g. right after the
+/// `snapshot_every` boundary auto-published) must still refresh the
+/// publication bookkeeping: the `snapshots` counter bumps and
+/// `snapshot_age_learns` reports zero, instead of the request being
+/// swallowed by the clean fast path.
+#[test]
+fn zero_dirty_snapshot_still_refreshes_bookkeeping() {
+    let server = Server::start(
+        tree_model(),
+        "127.0.0.1:0",
+        ServeOptions { snapshot_every: 100, ..Default::default() },
+    )
+    .expect("server must start");
+    let mut client = ServeClient::connect(server.addr()).expect("connect");
+    let mut stream = Friedman1::new(33, 1.0);
+    for _ in 0..100 {
+        let inst = stream.next_instance().unwrap();
+        client.learn(&inst.x, inst.y).expect("learn ack");
+    }
+    let stat = |stats: &qostream::common::json::Json, key: &str| -> f64 {
+        stats.get(key).and_then(qostream::common::json::Json::as_f64).unwrap_or(-1.0)
+    };
+    // the 100th applied learn crosses the snapshot_every boundary, so the
+    // trainer auto-publishes and the model goes clean; wait for that state
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+    let auto_published = loop {
+        let stats = client.stats().expect("stats");
+        if stat(&stats, "learns_applied") >= 100.0 && stat(&stats, "snapshots") >= 1.0 {
+            break stat(&stats, "snapshots");
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "auto-publish never happened: {stats:?}"
+        );
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    };
+
+    // explicit snapshot on the clean model: the checkpoint still comes
+    // back, the publication counter still bumps, the age stays zero
+    let checkpoint = client.snapshot().expect("zero-dirty snapshot");
+    assert!(checkpoint.contains("qostream-checkpoint"));
+    let stats = client.stats().expect("stats");
+    assert!(
+        stat(&stats, "snapshots") > auto_published,
+        "zero-dirty snapshot must still count as a publication: {stats:?}"
+    );
+    assert_eq!(
+        stat(&stats, "snapshot_age_learns"),
+        0.0,
+        "zero-dirty snapshot must pin the age at zero: {stats:?}"
+    );
+    // nothing changed, so a second snapshot returns the identical document
+    assert_eq!(client.snapshot().expect("second snapshot"), checkpoint);
+    client.shutdown().expect("shutdown");
+    server.join().expect("clean exit");
+}
+
 /// The acceptance contract: train a forest over TCP, checkpoint it,
 /// restore into a fresh server, and compare held-out predictions
 /// bit-for-bit across both servers.
@@ -303,9 +361,21 @@ fn metrics_and_trace_splits_round_trip() {
         "qostream_model_mem_bytes",
         "qostream_repl_lag_versions",
         "qostream_tree_split_attempts_total",
+        "qostream_snapshot_publish_seconds",
     ] {
         assert!(text.contains(series), "exposition missing {series}:\n{text}");
     }
+    // the zero-copy publish instrumentation: both checkpoint-size series
+    // render with their format label, and the snapshot above materialized
+    // a full JSON document, so the json counter is live
+    assert!(
+        text.contains("qostream_snapshot_bytes{format=\"json\"}"),
+        "exposition missing json snapshot bytes:\n{text}"
+    );
+    assert!(
+        text.contains("qostream_snapshot_bytes{format=\"binary\"}"),
+        "exposition missing binary snapshot bytes:\n{text}"
+    );
     // this server trained 900 instances, so the global learn counter and
     // the memory gauge must both be live (other tests only add to them)
     let counter_value = |name: &str| -> f64 {
@@ -317,6 +387,10 @@ fn metrics_and_trace_splits_round_trip() {
     };
     assert!(counter_value("qostream_tree_learns_total") >= 900.0, "{text}");
     assert!(counter_value("qostream_model_mem_bytes") > 0.0, "{text}");
+    assert!(
+        counter_value("qostream_snapshot_bytes{format=\"json\"}") > 0.0,
+        "snapshot materialization must record the JSON document size:\n{text}"
+    );
 
     let trace = client.trace_splits().expect("trace_splits");
     let json = |j: &qostream::common::json::Json, key: &str| -> f64 {
