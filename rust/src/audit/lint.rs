@@ -54,6 +54,7 @@ const CONN_FILES: &[&str] = &[
     "rust/src/serve/server.rs",
     "rust/src/serve/replicate.rs",
     "rust/src/serve/client.rs",
+    "rust/src/serve/fleet.rs",
 ];
 
 /// Crate roots that must carry `#![forbid(unsafe_code)]`.
@@ -74,18 +75,17 @@ const OBS_COLD_FNS: &[&str] = &[
     "TraceRing::new",
     "TraceRing::record",
     "TraceRing::events",
+    "TraceRing::recent",
     "TraceRing::total",
     "Histogram::snapshot",
     "HistogramSnapshot::empty",
     "HistogramSnapshot::merge",
+    "HistogramSnapshot::minus",
     "HistogramSnapshot::quantile",
     "HistogramSnapshot::mean",
-    "write_counter",
-    "write_gauge",
-    "write_summary",
+    "describe",
     "exposition_of",
     "exposition",
-    "trace_total_counter",
 ];
 
 /// Tokens that indicate allocation or locking on a source line.

@@ -454,6 +454,16 @@ pub struct ReplicationBenchResult {
     /// Every follower's predictions matched the leader's bit-for-bit on a
     /// held-out batch at the same version.
     pub bit_identical: bool,
+    /// Live publish→apply freshness spans recorded by follower apply
+    /// during this run (the `qostream_repl_freshness_seconds` histogram,
+    /// windowed to the run via [`crate::obs::HistogramSnapshot::minus`]).
+    pub freshness_samples: u64,
+    /// Live freshness p50/p99 in seconds. Log2-bucket quantiles: each
+    /// over-reports its exact sample by less than 2× (bucket upper
+    /// bound) — the agreement contract against the offline
+    /// [`replication_lags`] join is asserted in the tests.
+    pub freshness_p50_s: f64,
+    pub freshness_p99_s: f64,
 }
 
 /// Predicts/sec over one connection for a fixed wall-clock window.
@@ -472,6 +482,14 @@ fn reads_per_sec(addr: std::net::SocketAddr, window: Duration) -> Result<f64> {
 /// Drive a leader + follower fleet end-to-end over real sockets and
 /// measure replication lag, delta sizes, read scaling and bit-identity.
 pub fn run_replication(cfg: &ReplicationBenchConfig) -> Result<ReplicationBenchResult> {
+    // live freshness isolation: serialize with enable/disable experiments
+    // (the overhead scenario toggles the process-global switch), force
+    // the registry on, and window the global freshness histogram to this
+    // run via a before/after `minus` — parallel tests recording their own
+    // spans would otherwise bleed into our distribution
+    let _toggling = crate::obs::toggle_lock();
+    crate::obs::enable();
+    let freshness_before = crate::obs::global().repl_freshness_ns.snapshot();
     let model = Model::Arf(ArfRegressor::new(
         10,
         ArfOptions {
@@ -592,6 +610,11 @@ pub fn run_replication(cfg: &ReplicationBenchConfig) -> Result<ReplicationBenchR
     client.shutdown()?;
     server.join()?;
 
+    // everything this run's followers applied, minus what the histogram
+    // held before the run started
+    let freshness =
+        crate::obs::global().repl_freshness_ns.snapshot().minus(&freshness_before);
+
     Ok(ReplicationBenchResult {
         versions: head,
         deltas_applied,
@@ -605,6 +628,9 @@ pub fn run_replication(cfg: &ReplicationBenchConfig) -> Result<ReplicationBenchR
         leader_reads_per_sec,
         follower_reads_per_sec,
         bit_identical,
+        freshness_samples: freshness.count,
+        freshness_p50_s: freshness.quantile(0.50) as f64 / 1e9,
+        freshness_p99_s: freshness.quantile(0.99) as f64 / 1e9,
     })
 }
 
@@ -635,6 +661,14 @@ pub fn run_smoke(seed: u64) -> Result<Json> {
     let delta = delta_size_scenario(8000, 600, 5, seed)?;
     let overhead = obs_overhead_scenario(4000, 5, seed);
     let snapshot = snapshot_cost_scenario(6000, 40, 25, seed)?;
+    let replication = run_replication(&ReplicationBenchConfig {
+        instances: 800,
+        members: 2,
+        snapshot_every: 100,
+        followers: 2,
+        poll_ms: 2,
+        seed,
+    })?;
 
     let mut j = Json::obj();
     j.set("schema", "qostream-bench-smoke/1")
@@ -654,7 +688,10 @@ pub fn run_smoke(seed: u64) -> Result<Json> {
         .set("snapshot_clone_p50_s", snapshot.clone_p50_s)
         .set("snapshot_speedup_p50", snapshot.speedup_p50)
         .set("binary_checkpoint_bytes", snapshot.binary_bytes)
-        .set("binary_bytes_ratio", snapshot.bytes_ratio);
+        .set("binary_bytes_ratio", snapshot.bytes_ratio)
+        .set("freshness_p99_s", replication.freshness_p99_s)
+        .set("freshness_p50_s", replication.freshness_p50_s)
+        .set("freshness_samples", replication.freshness_samples);
     Ok(j)
 }
 
@@ -747,6 +784,21 @@ pub fn gate(current: &Json, baseline: &Json) -> Vec<String> {
         None => violations.push(
             "binary_bytes_ratio missing from the current run (1.1x floor unchecked)".into(),
         ),
+    }
+    // live replication freshness is poll-interval-dominated and its log2
+    // bucket quantile can land one power-of-two step higher run to run,
+    // so a ±tolerance band would flap — the baseline value is an
+    // absolute ceiling instead
+    match (metric(current, "freshness_p99_s"), metric(baseline, "freshness_p99_s")) {
+        (Some(cur), Some(ceiling)) if cur > ceiling => violations.push(format!(
+            "freshness_p99_s {cur:.3}s above the {ceiling:.3}s ceiling \
+             (live publish->apply freshness regressed)"
+        )),
+        (None, Some(_)) => violations.push(
+            "freshness_p99_s missing from the current run (the baseline gates on it)"
+                .into(),
+        ),
+        _ => {}
     }
     violations
 }
@@ -850,6 +902,7 @@ pub fn generate(cfg: &ServeBenchConfig) -> Result<String> {
     out.push_str(&format!(
         "replicated serving ({} followers, {} versions, {} deltas applied, \
          {} full resyncs):\n  replication lag: p50 {}  p99 {}  ({} samples)\n  \
+         live freshness:  p50 {}  p99 {}  ({} spans, wall-clock stamps)\n  \
          steady-state delta {:.0} B vs full {} B -> {:.1}x smaller\n  \
          reads/sec: leader {:.0}, followers {:.0} aggregate  \
          (bit-identical: {})\n",
@@ -860,6 +913,9 @@ pub fn generate(cfg: &ServeBenchConfig) -> Result<String> {
         human_time(replication.lag_p50_s),
         human_time(replication.lag_p99_s),
         replication.lag_samples,
+        human_time(replication.freshness_p50_s),
+        human_time(replication.freshness_p99_s),
+        replication.freshness_samples,
         replication.mean_delta_bytes,
         replication.full_bytes,
         replication.delta_ratio,
@@ -895,6 +951,9 @@ pub fn generate(cfg: &ServeBenchConfig) -> Result<String> {
         .set("replication_full_resyncs", replication.full_resyncs)
         .set("replication_lag_p50_s", replication.lag_p50_s)
         .set("replication_lag_p99_s", replication.lag_p99_s)
+        .set("replication_freshness_p50_s", replication.freshness_p50_s)
+        .set("replication_freshness_p99_s", replication.freshness_p99_s)
+        .set("replication_freshness_samples", replication.freshness_samples)
         .set("replication_delta_ratio", replication.delta_ratio)
         .set("leader_reads_per_sec", replication.leader_reads_per_sec)
         .set("follower_reads_per_sec", replication.follower_reads_per_sec)
@@ -949,6 +1008,25 @@ mod tests {
         assert!(result.lag_p99_s >= result.lag_p50_s);
         assert!(result.leader_reads_per_sec > 0.0);
         assert!(result.follower_reads_per_sec > 0.0);
+        // live freshness (wall-clock stamps recorded by follower apply)
+        // must agree with the offline publish-instant/apply-log join: both
+        // observe the same publish->apply events, and the live quantile is
+        // a log2 bucket upper bound, so it may over-report by < 2x. The
+        // 50ms slack absorbs clock-source skew (Instant vs SystemTime).
+        assert!(result.freshness_samples >= 1, "no live freshness spans: {result:?}");
+        assert!(result.freshness_p99_s >= result.freshness_p50_s);
+        assert!(
+            result.freshness_p99_s + 0.05 >= result.lag_p99_s,
+            "live p99 {:.4}s under offline p99 {:.4}s",
+            result.freshness_p99_s,
+            result.lag_p99_s
+        );
+        assert!(
+            result.freshness_p99_s <= result.lag_p99_s * 2.0 + 0.05,
+            "live p99 {:.4}s above 2x offline p99 {:.4}s",
+            result.freshness_p99_s,
+            result.lag_p99_s
+        );
     }
 
     #[test]
@@ -962,7 +1040,8 @@ mod tests {
                 .set("delta_ratio", ratio)
                 .set("obs_overhead_ratio", 1.0)
                 .set("snapshot_speedup_p50", 20.0)
-                .set("binary_bytes_ratio", 1.8);
+                .set("binary_bytes_ratio", 1.8)
+                .set("freshness_p99_s", 0.5);
             j
         };
         let baseline = doc(10_000.0, 0.001, 10.0);
@@ -1005,6 +1084,16 @@ mod tests {
         fat_binary.set("binary_bytes_ratio", 0.9);
         let v = gate(&fat_binary, &baseline);
         assert!(v.iter().any(|m| m.contains("binary_bytes_ratio")), "{v:?}");
+        // freshness above the baseline's absolute ceiling: fail
+        let mut stale = doc(10_000.0, 0.001, 10.0);
+        stale.set("freshness_p99_s", 0.9);
+        let v = gate(&stale, &baseline);
+        assert!(v.iter().any(|m| m.contains("freshness_p99_s")), "{v:?}");
+        // exactly at the ceiling: pass (already covered by the identical
+        // run above, but make the boundary explicit)
+        let mut at_ceiling = doc(10_000.0, 0.001, 10.0);
+        at_ceiling.set("freshness_p99_s", 0.5);
+        assert!(gate(&at_ceiling, &baseline).is_empty());
         // schema drift must FAIL the gate, not silently disable it
         let mut partial = Json::obj();
         partial.set("predict_p99_s", 0.001);
@@ -1014,6 +1103,7 @@ mod tests {
         assert!(v.iter().any(|m| m.contains("obs_overhead_ratio missing")), "{v:?}");
         assert!(v.iter().any(|m| m.contains("snapshot_speedup_p50 missing")), "{v:?}");
         assert!(v.iter().any(|m| m.contains("binary_bytes_ratio missing")), "{v:?}");
+        assert!(v.iter().any(|m| m.contains("freshness_p99_s missing")), "{v:?}");
     }
 
     #[test]

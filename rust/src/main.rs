@@ -18,6 +18,8 @@
 //!                [--checkpoint-out ckpt.json] [--shards N] [--shard-batch B]
 //!                [--delta-history K] [--follower-of HOST:PORT] [--poll-ms MS]
 //!                [--bench [--replication] [--smoke --out F --baseline F]]
+//! qostream fleet --targets HOST:PORT[,...] [--listen HOST:PORT] [--top [--interval-ms MS]]
+//!                [--once] [--no-discover]
 //! qostream checkpoint --out ckpt.json [--model ...] [--instances N] [--format json|binary]
 //! qostream checkpoint --load ckpt.json [--convert out.qosb] [--format json|binary]
 //! qostream audit --checkpoint ckpt.json|ckpt.qosb [--deltas FILE|DIR] [--json]
@@ -52,7 +54,7 @@ use qostream::forest::{
 use qostream::observer::{AttributeObserver, ObserverSpec};
 use qostream::persist::{codec, delta, Model};
 use qostream::runtime::{find_artifacts_dir, Manifest, SplitBackendKind, XlaSplitEngine};
-use qostream::serve::{Follower, FollowerOptions, ServeOptions, Server};
+use qostream::serve::{fleet, Follower, FollowerOptions, ServeOptions, Server};
 use qostream::stream::{Friedman1, Stream};
 use qostream::tree::{HoeffdingTreeRegressor, HtrOptions};
 
@@ -347,7 +349,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             let r = serve_bench::run_replication(&cfg)?;
             println!(
                 "replication: {} versions, {} deltas applied, {} full resyncs\n\
-                 lag p50 {:.2}ms p99 {:.2}ms ({} samples); delta {:.0}B vs full {}B \
+                 lag p50 {:.2}ms p99 {:.2}ms ({} samples); live freshness p50 {:.2}ms \
+                 p99 {:.2}ms ({} spans); delta {:.0}B vs full {}B \
                  ({:.1}x); reads/s leader {:.0} followers {:.0}; bit-identical: {}",
                 r.versions,
                 r.deltas_applied,
@@ -355,6 +358,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 r.lag_p50_s * 1e3,
                 r.lag_p99_s * 1e3,
                 r.lag_samples,
+                r.freshness_p50_s * 1e3,
+                r.freshness_p99_s * 1e3,
+                r.freshness_samples,
                 r.mean_delta_bytes,
                 r.full_bytes,
                 r.delta_ratio,
@@ -390,8 +396,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let follower = Follower::start(leader, &bind, options)?;
         println!(
             "following {leader} on {} (poll every {:?})\n\
-             protocol: NDJSON predict | predict_batch | snapshot | stats \
-             | metrics | trace_splits | shutdown",
+             protocol: NDJSON predict | predict_batch | snapshot | stats | health \
+             | metrics | metrics_raw | trace_splits | trace_repl | shutdown",
             follower.addr(),
             options.poll_interval
         );
@@ -417,8 +423,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "serving {name} on {} (snapshot hot-swap every {} learns, \
          {}-deep delta ring{sharding})\n\
-         protocol: NDJSON learn | predict | predict_batch | snapshot | stats \
-         | repl_sync | metrics | trace_splits | shutdown",
+         protocol: NDJSON learn | predict | predict_batch | snapshot | stats | health \
+         | repl_sync | metrics | metrics_raw | trace_splits | trace_repl | shutdown",
         server.addr(),
         options.snapshot_every,
         options.delta_history
@@ -767,6 +773,64 @@ fn cmd_xla(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `qostream fleet` — fleet-wide observability aggregation (see
+/// [`qostream::serve::fleet`] and `docs/OBSERVABILITY.md`): discover a
+/// leader's followers, scrape `health` + `metrics_raw` from every node,
+/// merge the registries exactly, and either print the fleet exposition
+/// once, serve it over HTTP for Prometheus (`--listen`), or render a
+/// live per-node dashboard (`--top`).
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let targets: Vec<String> = args
+        .opt("targets")
+        .ok_or_else(|| anyhow!("fleet needs --targets HOST:PORT[,HOST:PORT…]"))?
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(str::to_string)
+        .collect();
+    if targets.is_empty() {
+        bail!("--targets parsed to an empty list");
+    }
+    let auto_discover = !args.flag("no-discover");
+    let resolve = |seeds: &[String]| -> Vec<String> {
+        if auto_discover {
+            fleet::discover(seeds)
+        } else {
+            seeds.to_vec()
+        }
+    };
+    if let Some(listen) = args.opt("listen") {
+        let listener = std::net::TcpListener::bind(listen)
+            .with_context(|| format!("binding scrape endpoint {listen}"))?;
+        println!(
+            "fleet scrape endpoint on {} ({} seed target(s), discovery {})",
+            listener.local_addr()?,
+            targets.len(),
+            if auto_discover { "on" } else { "off" }
+        );
+        fleet::serve_scrapes(listener, targets, auto_discover);
+        return Ok(());
+    }
+    if args.flag("top") {
+        let interval = args.try_ms("interval-ms", 1000)?;
+        loop {
+            let scrape = fleet::scrape_fleet(&resolve(&targets));
+            if args.flag("once") {
+                print!("{}", scrape.dashboard());
+                return Ok(());
+            }
+            // clear + home, then redraw — a minimal terminal dashboard
+            print!("\x1b[2J\x1b[H{}", scrape.dashboard());
+            use std::io::Write;
+            std::io::stdout().flush().ok();
+            std::thread::sleep(interval);
+        }
+    }
+    let scrape = fleet::scrape_fleet(&resolve(&targets));
+    print!("{}", scrape.exposition());
+    Ok(())
+}
+
 fn cmd_all(args: &Args) -> Result<()> {
     cmd_fig1(args)?;
     cmd_fig3(args)?;
@@ -800,6 +864,10 @@ SUBCOMMANDS
                 sharded training;                  --follower-of HOST:PORT --poll-ms MS
                 --bench runs the latency scenario, --bench [--replication] [--smoke
                 --smoke writes/gates BENCH_ci.json) --out BENCH_ci.json --baseline FILE]]
+  fleet        fleet-wide scrape aggregator       [--targets HOST:PORT[,...] --listen HOST:PORT
+               (discovers followers via the        --top --interval-ms MS --once --no-discover]
+                leader, merges node registries
+                exactly; docs/OBSERVABILITY.md)
   checkpoint   save/restore model checkpoints     [--out ckpt.json | --load ckpt.json
                (JSON canonical; binary fast path   --format json|binary --convert OUT
                 via docs/FORMATS.md)               --model --observer --members --instances N]
@@ -820,6 +888,7 @@ fn run(args: &Args) -> Result<()> {
         Some("forest") => cmd_forest(args),
         Some("coordinator") => cmd_coordinator(args),
         Some("serve") => cmd_serve(args),
+        Some("fleet") => cmd_fleet(args),
         Some("checkpoint") => cmd_checkpoint(args),
         Some("audit") => cmd_audit(args),
         Some("xla") => cmd_xla(args),

@@ -13,11 +13,32 @@
 //!   p50/p90/p99 readout. A quantile answer is the inclusive upper bound
 //!   of its bucket, so it over-reports by strictly less than 2× and
 //!   never under-reports.
-//! * **Split-decision trace ring** — a bounded ring recording every
-//!   split attempt's outcome (accepted / tie-broken / Hoeffding-rejected
-//!   / no-merit / branch-too-small), merit gap, slots evaluated and
-//!   elapsed ns. Split attempts are grace-period-rare, so a mutexed ring
-//!   is fine; the hot learn path never touches it.
+//! * **Trace rings** — bounded rings of recent events behind one
+//!   generic [`TraceRing`]: the split-decision ring (every split
+//!   attempt's outcome — accepted / tie-broken / Hoeffding-rejected /
+//!   no-merit / branch-too-small — merit gap, slots evaluated, elapsed
+//!   ns) and the replication-apply ring (version, learns covered,
+//!   publish→apply freshness span). Both event kinds are rare (split
+//!   attempts ride the grace period; applies ride the poll interval),
+//!   so a mutexed ring is fine; the hot learn path never touches them.
+//!   The `trace_splits` / `trace_repl` protocol commands dump them
+//!   **newest first** via [`TraceRing::recent`] (asserted in tests);
+//!   [`TraceRing::events`] keeps the oldest-first in-process view.
+//! * **Windowed metrics** ([`window`]) — time-rotated rings of
+//!   counters/histograms giving 1m/5m rates and rolling-window
+//!   quantiles beside the lifetime totals, reusing the same exact
+//!   bucketwise merge.
+//! * **Registry snapshots** ([`snapshot`]) — a mergeable, JSON-codable
+//!   capture of the whole registry. The fleet aggregator
+//!   (`serve/fleet.rs`) scrapes these via the `metrics_raw` command and
+//!   merges them **exactly** (bucketwise histogram addition) into one
+//!   fleet-wide exposition; the single-process exposition below renders
+//!   through the very same capture→render path, so the two can't drift.
+//!
+//! The full metric-family catalog — name, type, labels, window, where
+//! each is recorded — lives in `docs/OBSERVABILITY.md`, generated from
+//! the same [`CATALOG`] table that drives the `# HELP` lines (a unit
+//! test asserts doc and code agree).
 //!
 //! ## Overhead contract
 //!
@@ -38,15 +59,23 @@
 //!
 //! ## Exposition format
 //!
-//! [`exposition()`] renders Prometheus text exposition: counters and
+//! [`exposition()`] renders Prometheus text exposition: `# HELP` +
+//! `# TYPE` per family (help text from [`CATALOG`]), counters and
 //! gauges as single samples, histograms as Prometheus *summaries*
-//! (`{quantile="0.5|0.9|0.99"}` samples plus `_sum`/`_count`). The serve
-//! protocol exposes it via the `metrics` command (and the ring via
-//! `trace_splits`) on leaders and followers alike.
+//! (`{quantile="0.5|0.9|0.99"}` samples plus `_sum`/`_count`), windowed
+//! families as gauges with a `window="1m|5m"` label. The serve protocol
+//! exposes it via the `metrics` command (and the rings via
+//! `trace_splits` / `trace_repl`) on leaders and followers alike.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
+
+pub mod snapshot;
+pub mod window;
+
+pub use snapshot::RegistrySnapshot;
+pub use window::{WindowedCounter, WindowedHistogram};
 
 /// Global on/off switch. Off (the default) means every recording site is
 /// a relaxed load + branch — effectively free.
@@ -244,6 +273,21 @@ impl HistogramSnapshot {
         out
     }
 
+    /// Saturating bucketwise subtraction: the samples recorded *since*
+    /// `earlier` was taken of the same histogram. The bench isolates one
+    /// run's samples from the process-global registry with a
+    /// before/after diff (`after.minus(&before)`), immune to whatever
+    /// other tests recorded earlier in the process.
+    pub fn minus(&self, earlier: &HistogramSnapshot) -> HistogramSnapshot {
+        let mut out = self.clone();
+        for (c, e) in out.counts.iter_mut().zip(&earlier.counts) {
+            *c = c.saturating_sub(*e);
+        }
+        out.sum = out.sum.saturating_sub(earlier.sum);
+        out.count = out.count.saturating_sub(earlier.count);
+        out
+    }
+
     /// The q-quantile (`0 < q <= 1`) as the inclusive upper bound of the
     /// bucket holding the ⌈q·count⌉-th smallest sample; 0 when empty.
     /// Over-reports by < 2× (the bucket's width), never under-reports.
@@ -319,28 +363,47 @@ pub struct SplitEvent {
     pub elapsed_ns: u64,
 }
 
-/// Bounded ring of recent [`SplitEvent`]s plus a total-attempts counter.
-/// Mutexed: split attempts fire once per `grace_period` learns, so this
-/// is far off the hot path.
-pub struct TraceRing {
-    capacity: usize,
-    inner: Mutex<TraceInner>,
+/// One applied replication version on a follower (the `trace_repl`
+/// ring): which version landed, the cumulative acked learns it covers,
+/// and the wall-clock publish→apply freshness span.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplEvent {
+    /// The version the apply landed on.
+    pub version: u64,
+    /// Cumulative leader learns covered by that version (0 when the
+    /// leader predates the freshness stamps).
+    pub learns: u64,
+    /// Publish→apply wall-clock span in ns (clamped at 0 under clock
+    /// skew — the stamps are wall-clock across two hosts).
+    pub span_ns: u64,
+    /// Applied via a full resync rather than a delta chain.
+    pub full: bool,
 }
 
-struct TraceInner {
-    events: VecDeque<SplitEvent>,
+/// Bounded ring of recent events plus a total counter, generic over the
+/// event payload: [`SplitEvent`] for the split-decision ring,
+/// [`ReplEvent`] for the replication-apply ring. Mutexed: both event
+/// kinds are rare (split attempts fire once per `grace_period` learns,
+/// applies once per poll), so this is far off the hot path.
+pub struct TraceRing<T = SplitEvent> {
+    capacity: usize,
+    inner: Mutex<TraceInner<T>>,
+}
+
+struct TraceInner<T> {
+    events: VecDeque<T>,
     total: u64,
 }
 
-impl TraceRing {
-    pub const fn new(capacity: usize) -> TraceRing {
+impl<T: Copy> TraceRing<T> {
+    pub const fn new(capacity: usize) -> TraceRing<T> {
         TraceRing {
             capacity,
             inner: Mutex::new(TraceInner { events: VecDeque::new(), total: 0 }),
         }
     }
 
-    pub fn record(&self, event: SplitEvent) {
+    pub fn record(&self, event: T) {
         let mut inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         inner.total += 1;
         if inner.events.len() >= self.capacity {
@@ -350,9 +413,17 @@ impl TraceRing {
     }
 
     /// The retained events, oldest first.
-    pub fn events(&self) -> Vec<SplitEvent> {
+    pub fn events(&self) -> Vec<T> {
         let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         inner.events.iter().copied().collect()
+    }
+
+    /// Up to `limit` of the most recent events, **newest first** — the
+    /// wire shape of `trace_splits` / `trace_repl` (a dashboard wants
+    /// the latest decisions at the top; ordering asserted in tests).
+    pub fn recent(&self, limit: usize) -> Vec<T> {
+        let inner = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        inner.events.iter().rev().take(limit).copied().collect()
     }
 
     /// Attempts ever recorded (including evicted ones).
@@ -390,6 +461,12 @@ pub struct Metrics {
     // serve
     pub serve_learn_ns: Histogram,
     pub serve_predict_ns: Histogram,
+    /// Learns acked, time-windowed (1m/5m rates in the exposition).
+    pub serve_learn_window: WindowedCounter,
+    /// Predictions served, time-windowed.
+    pub serve_predict_window: WindowedCounter,
+    /// Predict latency over the trailing windows (windowed p50/p99).
+    pub serve_predict_ns_window: WindowedHistogram,
     pub serve_delta_publish_bytes: Histogram,
     pub serve_snapshot_failures_consecutive: Gauge,
     /// Wall-clock of one snapshot publication (structural clone + `Arc`
@@ -404,13 +481,23 @@ pub struct Metrics {
     pub snapshot_bytes_binary: Counter,
     // model
     pub model_mem_bytes: Gauge,
+    /// Unix seconds this process's server/follower role started
+    /// (`qostream_process_start_seconds`) — rate math and restart
+    /// detection from the scrape alone.
+    pub process_start_seconds: Gauge,
     // replication (follower side)
     pub repl_lag_versions: Gauge,
     pub repl_lag_learns: Gauge,
     pub repl_deltas_applied: Counter,
     pub repl_full_resyncs: Counter,
-    // split-decision trace
+    /// Live publish→apply span of each applied version, in ns (exposed
+    /// as the `qostream_repl_freshness_seconds` summary).
+    pub repl_freshness_ns: Histogram,
+    /// The freshness spans over the trailing windows.
+    pub repl_freshness_ns_window: WindowedHistogram,
+    // trace rings
     pub split_trace: TraceRing,
+    pub repl_trace: TraceRing<ReplEvent>,
 }
 
 impl Metrics {
@@ -433,17 +520,24 @@ impl Metrics {
             forest_bg_promotions: Counter::new(),
             serve_learn_ns: Histogram::new(),
             serve_predict_ns: Histogram::new(),
+            serve_learn_window: WindowedCounter::new(),
+            serve_predict_window: WindowedCounter::new(),
+            serve_predict_ns_window: WindowedHistogram::new(),
             serve_delta_publish_bytes: Histogram::new(),
             serve_snapshot_failures_consecutive: Gauge::new(),
             snapshot_publish_ns: Histogram::new(),
             snapshot_bytes_json: Counter::new(),
             snapshot_bytes_binary: Counter::new(),
             model_mem_bytes: Gauge::new(),
+            process_start_seconds: Gauge::new(),
             repl_lag_versions: Gauge::new(),
             repl_lag_learns: Gauge::new(),
             repl_deltas_applied: Counter::new(),
             repl_full_resyncs: Counter::new(),
+            repl_freshness_ns: Histogram::new(),
+            repl_freshness_ns_window: WindowedHistogram::new(),
             split_trace: TraceRing::new(256),
+            repl_trace: TraceRing::new(256),
         }
     }
 
@@ -465,111 +559,197 @@ impl Default for Metrics {
     }
 }
 
-fn write_counter(out: &mut String, name: &str, c: &Counter) {
-    out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+/// One metric family's catalog entry: the single source of truth behind
+/// the `# HELP` lines, the `# TYPE` kinds, and the family table in
+/// `docs/OBSERVABILITY.md` (a test asserts code and doc agree).
+pub struct MetricDesc {
+    /// Full exposition family name (`qostream_…`).
+    pub name: &'static str,
+    /// Prometheus type emitted on the `# TYPE` line.
+    pub kind: &'static str,
+    /// One-line help text emitted on the `# HELP` line.
+    pub help: &'static str,
 }
 
-fn write_gauge(out: &mut String, name: &str, g: &Gauge) {
-    out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+/// Every metric family the exposition can emit, in exposition order.
+pub const CATALOG: &[MetricDesc] = &[
+    MetricDesc {
+        name: "qostream_tree_learns_total",
+        kind: "counter",
+        help: "Instances learned across all trees",
+    },
+    MetricDesc {
+        name: "qostream_tree_route_depth",
+        kind: "summary",
+        help: "Leaf depth reached when routing a learned instance",
+    },
+    MetricDesc {
+        name: "qostream_tree_splits_accepted_total",
+        kind: "counter",
+        help: "Split attempts accepted by the Hoeffding bound",
+    },
+    MetricDesc {
+        name: "qostream_tree_splits_tie_broken_total",
+        kind: "counter",
+        help: "Split attempts materialized via the tie-break threshold",
+    },
+    MetricDesc {
+        name: "qostream_tree_splits_hoeffding_rejected_total",
+        kind: "counter",
+        help: "Split attempts rejected by the Hoeffding bound",
+    },
+    MetricDesc {
+        name: "qostream_tree_splits_no_merit_total",
+        kind: "counter",
+        help: "Split attempts whose best candidate had no positive merit",
+    },
+    MetricDesc {
+        name: "qostream_tree_splits_branch_too_small_total",
+        kind: "counter",
+        help: "Split attempts rejected for an under-populated branch",
+    },
+    MetricDesc {
+        name: "qostream_qo_inserts_total",
+        kind: "counter",
+        help: "Values inserted into quantization-observer slot tables",
+    },
+    MetricDesc {
+        name: "qostream_qo_slots_occupied",
+        kind: "summary",
+        help: "Occupied slots per quantization observer at query time",
+    },
+    MetricDesc {
+        name: "qostream_backend_batches_total",
+        kind: "counter",
+        help: "Split-candidate batches flushed through the split backend",
+    },
+    MetricDesc {
+        name: "qostream_backend_batch_size",
+        kind: "summary",
+        help: "Leaves evaluated per split-backend batch",
+    },
+    MetricDesc {
+        name: "qostream_backend_latency_ns",
+        kind: "summary",
+        help: "Wall-clock ns per split-backend batch",
+    },
+    MetricDesc {
+        name: "qostream_forest_warnings_total",
+        kind: "counter",
+        help: "ADWIN warning signals across forest members",
+    },
+    MetricDesc {
+        name: "qostream_forest_drifts_total",
+        kind: "counter",
+        help: "ADWIN drift signals across forest members",
+    },
+    MetricDesc {
+        name: "qostream_forest_bg_promotions_total",
+        kind: "counter",
+        help: "Background trees promoted to foreground on drift",
+    },
+    MetricDesc {
+        name: "qostream_serve_learn_ns",
+        kind: "summary",
+        help: "Wall-clock ns per acked learn request",
+    },
+    MetricDesc {
+        name: "qostream_serve_predict_ns",
+        kind: "summary",
+        help: "Wall-clock ns per served prediction",
+    },
+    MetricDesc {
+        name: "qostream_serve_learn_rate",
+        kind: "gauge",
+        help: "Learns per second over the trailing window",
+    },
+    MetricDesc {
+        name: "qostream_serve_predict_rate",
+        kind: "gauge",
+        help: "Predictions per second over the trailing window",
+    },
+    MetricDesc {
+        name: "qostream_serve_predict_ns_window",
+        kind: "gauge",
+        help: "Predict latency quantiles (ns) over the trailing window",
+    },
+    MetricDesc {
+        name: "qostream_serve_delta_publish_bytes",
+        kind: "summary",
+        help: "Compact-text bytes of each published delta",
+    },
+    MetricDesc {
+        name: "qostream_snapshot_publish_seconds",
+        kind: "summary",
+        help: "Wall-clock seconds per snapshot publication (clone + swap + stage)",
+    },
+    MetricDesc {
+        name: "qostream_snapshot_bytes",
+        kind: "counter",
+        help: "Bytes of materialized checkpoint payloads by encoding",
+    },
+    MetricDesc {
+        name: "qostream_serve_snapshot_failures_consecutive",
+        kind: "gauge",
+        help: "Consecutive snapshot publication failures (0 = healthy)",
+    },
+    MetricDesc {
+        name: "qostream_model_mem_bytes",
+        kind: "gauge",
+        help: "Resident bytes of the served model",
+    },
+    MetricDesc {
+        name: "qostream_process_start_seconds",
+        kind: "gauge",
+        help: "Unix seconds the serving role started (restart detection)",
+    },
+    MetricDesc {
+        name: "qostream_repl_lag_versions",
+        kind: "gauge",
+        help: "Versions this follower trails the leader head",
+    },
+    MetricDesc {
+        name: "qostream_repl_lag_learns",
+        kind: "gauge",
+        help: "Learns this follower trails the leader head",
+    },
+    MetricDesc {
+        name: "qostream_repl_deltas_applied_total",
+        kind: "counter",
+        help: "Delta versions applied by this follower",
+    },
+    MetricDesc {
+        name: "qostream_repl_full_resyncs_total",
+        kind: "counter",
+        help: "Full resyncs this follower fell back to",
+    },
+    MetricDesc {
+        name: "qostream_repl_freshness_seconds",
+        kind: "summary",
+        help: "Live publish-to-apply span of each applied version",
+    },
+    MetricDesc {
+        name: "qostream_repl_freshness_seconds_window",
+        kind: "gauge",
+        help: "Freshness span quantiles (seconds) over the trailing window",
+    },
+    MetricDesc {
+        name: "qostream_tree_split_attempts_total",
+        kind: "counter",
+        help: "Split attempts ever recorded by the trace ring",
+    },
+];
+
+/// Catalog lookup by family name (the renderer's `# HELP` source).
+pub fn describe(name: &str) -> Option<&'static MetricDesc> {
+    CATALOG.iter().find(|d| d.name == name)
 }
 
-/// Render a nanosecond histogram as a seconds-unit summary (Prometheus
-/// convention for durations): quantiles and `_sum` divide by 1e9 and
-/// print as floats; `_count` stays a sample count.
-fn write_summary_ns_as_seconds(out: &mut String, name: &str, h: &Histogram) {
-    let s = h.snapshot();
-    out.push_str(&format!("# TYPE {name} summary\n"));
-    for (q, label) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")] {
-        out.push_str(&format!(
-            "{name}{{quantile=\"{label}\"}} {}\n",
-            s.quantile(q) as f64 / 1e9
-        ));
-    }
-    out.push_str(&format!("{name}_sum {}\n{name}_count {}\n", s.sum as f64 / 1e9, s.count));
-}
-
-/// Render one counter family whose samples split over a `format` label
-/// (the byte-size-by-encoding counters).
-fn write_format_counters(out: &mut String, name: &str, json: &Counter, binary: &Counter) {
-    out.push_str(&format!(
-        "# TYPE {name} counter\n{name}{{format=\"json\"}} {}\n{name}{{format=\"binary\"}} {}\n",
-        json.get(),
-        binary.get()
-    ));
-}
-
-fn write_summary(out: &mut String, name: &str, h: &Histogram) {
-    let s = h.snapshot();
-    out.push_str(&format!("# TYPE {name} summary\n"));
-    for (q, label) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")] {
-        out.push_str(&format!("{name}{{quantile=\"{label}\"}} {}\n", s.quantile(q)));
-    }
-    out.push_str(&format!("{name}_sum {}\n{name}_count {}\n", s.sum, s.count));
-}
-
-/// Prometheus text exposition of one registry.
+/// Prometheus text exposition of one registry — rendered through the
+/// same [`RegistrySnapshot`] capture→render path the fleet aggregator
+/// merges, so single-process and fleet output cannot drift.
 pub fn exposition_of(m: &Metrics) -> String {
-    let mut out = String::with_capacity(4096);
-    write_counter(&mut out, "qostream_tree_learns_total", &m.tree_learns);
-    write_summary(&mut out, "qostream_tree_route_depth", &m.tree_route_depth);
-    write_counter(&mut out, "qostream_tree_splits_accepted_total", &m.tree_splits_accepted);
-    write_counter(&mut out, "qostream_tree_splits_tie_broken_total", &m.tree_splits_tie_broken);
-    write_counter(
-        &mut out,
-        "qostream_tree_splits_hoeffding_rejected_total",
-        &m.tree_splits_hoeffding_rejected,
-    );
-    write_counter(&mut out, "qostream_tree_splits_no_merit_total", &m.tree_splits_no_merit);
-    write_counter(
-        &mut out,
-        "qostream_tree_splits_branch_too_small_total",
-        &m.tree_splits_branch_too_small,
-    );
-    write_counter(&mut out, "qostream_qo_inserts_total", &m.qo_inserts);
-    write_summary(&mut out, "qostream_qo_slots_occupied", &m.qo_slots_occupied);
-    write_counter(&mut out, "qostream_backend_batches_total", &m.backend_batches);
-    write_summary(&mut out, "qostream_backend_batch_size", &m.backend_batch_size);
-    write_summary(&mut out, "qostream_backend_latency_ns", &m.backend_latency_ns);
-    write_counter(&mut out, "qostream_forest_warnings_total", &m.forest_warnings);
-    write_counter(&mut out, "qostream_forest_drifts_total", &m.forest_drifts);
-    write_counter(&mut out, "qostream_forest_bg_promotions_total", &m.forest_bg_promotions);
-    write_summary(&mut out, "qostream_serve_learn_ns", &m.serve_learn_ns);
-    write_summary(&mut out, "qostream_serve_predict_ns", &m.serve_predict_ns);
-    write_summary(&mut out, "qostream_serve_delta_publish_bytes", &m.serve_delta_publish_bytes);
-    write_summary_ns_as_seconds(
-        &mut out,
-        "qostream_snapshot_publish_seconds",
-        &m.snapshot_publish_ns,
-    );
-    write_format_counters(
-        &mut out,
-        "qostream_snapshot_bytes",
-        &m.snapshot_bytes_json,
-        &m.snapshot_bytes_binary,
-    );
-    write_gauge(
-        &mut out,
-        "qostream_serve_snapshot_failures_consecutive",
-        &m.serve_snapshot_failures_consecutive,
-    );
-    write_gauge(&mut out, "qostream_model_mem_bytes", &m.model_mem_bytes);
-    write_gauge(&mut out, "qostream_repl_lag_versions", &m.repl_lag_versions);
-    write_gauge(&mut out, "qostream_repl_lag_learns", &m.repl_lag_learns);
-    write_counter(&mut out, "qostream_repl_deltas_applied_total", &m.repl_deltas_applied);
-    write_counter(&mut out, "qostream_repl_full_resyncs_total", &m.repl_full_resyncs);
-    write_counter(
-        &mut out,
-        "qostream_tree_split_attempts_total",
-        // the ring's total is the attempts counter; expose it as one
-        &trace_total_counter(&m.split_trace),
-    );
-    out
-}
-
-fn trace_total_counter(ring: &TraceRing) -> Counter {
-    let c = Counter::new();
-    c.add(ring.total());
-    c
+    RegistrySnapshot::capture(m).exposition()
 }
 
 /// Prometheus text exposition of the global registry (the serve
@@ -699,6 +879,57 @@ mod tests {
         assert_eq!(events[3].slots_evaluated, 9);
         assert!(events[0].outcome.split());
         assert!(!events[1].outcome.split());
+    }
+
+    #[test]
+    fn trace_ring_recent_is_newest_first_and_capped() {
+        // the wire shape of trace_splits/trace_repl: newest first, and
+        // `limit` never exceeds what the ring holds
+        let ring: TraceRing<ReplEvent> = TraceRing::new(4);
+        for i in 1..=10u64 {
+            ring.record(ReplEvent { version: i, learns: i * 5, span_ns: i, full: false });
+        }
+        let recent = ring.recent(3);
+        assert_eq!(recent.len(), 3);
+        assert_eq!(recent[0].version, 10, "newest first");
+        assert_eq!(recent[2].version, 8);
+        // a limit past the ring's occupancy clamps to the survivors
+        let all = ring.recent(1000);
+        assert_eq!(all.len(), 4);
+        assert_eq!(all[0].version, 10);
+        assert_eq!(all[3].version, 7);
+        // recent(k) is events() reversed and truncated
+        let mut from_events = ring.events();
+        from_events.reverse();
+        assert_eq!(
+            all.iter().map(|e| e.version).collect::<Vec<_>>(),
+            from_events.iter().map(|e| e.version).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn histogram_minus_isolates_a_run() {
+        // the bench pattern: snapshot before, record, snapshot after,
+        // diff — the diff is exactly the run's samples
+        let h = Histogram::new();
+        h.record(100);
+        h.record(2000);
+        let before = h.snapshot();
+        h.record(100);
+        h.record(300_000);
+        let run = h.snapshot().minus(&before);
+        assert_eq!(run.count, 2);
+        assert_eq!(run.sum, 300_100);
+        let mut expect = HistogramSnapshot::empty();
+        expect.counts[bucket_index(100)] += 1;
+        expect.counts[bucket_index(300_000)] += 1;
+        expect.sum = 300_100;
+        expect.count = 2;
+        assert_eq!(run, expect);
+        // diffing against a later snapshot saturates instead of wrapping
+        let inverted = before.minus(&h.snapshot());
+        assert_eq!(inverted.count, 0);
+        assert_eq!(inverted.sum, 0);
     }
 
     #[test]

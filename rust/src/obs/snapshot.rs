@@ -1,0 +1,822 @@
+//! Registry snapshots: a mergeable, JSON-codable capture of the whole
+//! metrics registry, and the **single renderer** behind every
+//! Prometheus exposition this crate emits.
+//!
+//! Why this exists: the fleet aggregator (`serve/fleet.rs`) must merge
+//! N nodes' metrics **exactly**. Quantiles rendered to text cannot be
+//! merged (a p99 of p99s is not a fleet p99), but the underlying log2
+//! histograms can — bucketwise addition is identical to having recorded
+//! every node's samples into one histogram
+//! ([`HistogramSnapshot::merge`], property-tested). So nodes ship their
+//! raw bucket counts over the wire (the `metrics_raw` protocol
+//! command), the aggregator merges [`RegistrySnapshot`]s, and renders
+//! the merged result with the same code path a single process uses:
+//! [`crate::obs::exposition_of`] is literally
+//! `RegistrySnapshot::capture(m).exposition()`. One renderer — the
+//! fleet view and the node view cannot drift.
+//!
+//! Merge semantics per family kind:
+//!
+//! * **counters / summaries / windowed summaries** — exact sums
+//!   (bucketwise for histograms).
+//! * **gauges** — summed: the merged view reads as a fleet total
+//!   (`model_mem_bytes` = fleet RAM). Per-node gauge values are served
+//!   beside the merged families with `node`/`role` labels by the
+//!   aggregator, so nothing is lost.
+//! * **rates** — windowed event *counts* travel and sum; the rate is
+//!   derived at render time, so merged rates are fleet-wide
+//!   events/second, exactly.
+//!
+//! The wire format (`qostream-metrics-snapshot/1`) encodes histograms
+//! sparsely (only occupied buckets) with `u64`s as decimal strings
+//! ([`crate::persist::codec::ju64`]) so counts survive JSON exactly.
+
+use anyhow::{anyhow, Result};
+
+use crate::common::json::Json;
+use crate::persist::codec::{ju64, jusize, pu64, pusize};
+
+use super::window::{self, WINDOWS};
+use super::{HistogramSnapshot, Metrics, N_BUCKETS};
+
+/// Wire-format identifier for encoded snapshots.
+pub const SCHEMA: &str = "qostream-metrics-snapshot/1";
+
+/// How a histogram family's samples are scaled at render time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Samples render as their raw `u64` values.
+    Unit,
+    /// Nanosecond samples render as seconds (Prometheus duration
+    /// convention): quantiles and `_sum` divide by 1e9.
+    NsAsSeconds,
+}
+
+impl Scale {
+    fn tag(self) -> &'static str {
+        match self {
+            Scale::Unit => "unit",
+            Scale::NsAsSeconds => "ns_s",
+        }
+    }
+
+    fn from_tag(tag: &str) -> Result<Scale> {
+        match tag {
+            "unit" => Ok(Scale::Unit),
+            "ns_s" => Ok(Scale::NsAsSeconds),
+            other => Err(anyhow!("unknown scale tag {other:?}")),
+        }
+    }
+}
+
+/// One family's captured data.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FamilyData {
+    /// Samples as `(label-block, value)`; the label block is either
+    /// empty or a literal `{key="value"}` suffix.
+    Counter(Vec<(String, u64)>),
+    Gauge(Vec<(String, u64)>),
+    Summary { scale: Scale, hist: HistogramSnapshot },
+    /// Per-window histograms, as `(window-label, hist)`.
+    WindowedSummary { scale: Scale, windows: Vec<(String, HistogramSnapshot)> },
+    /// Per-window event counts, as `(window-label, window-secs, count)`.
+    WindowedRate { windows: Vec<(String, u64, u64)> },
+}
+
+impl FamilyData {
+    /// The Prometheus type emitted on the `# TYPE` line (windowed
+    /// families render as gauges with a `window` label).
+    pub fn prom_kind(&self) -> &'static str {
+        match self {
+            FamilyData::Counter(_) => "counter",
+            FamilyData::Gauge(_) => "gauge",
+            FamilyData::Summary { .. } => "summary",
+            FamilyData::WindowedSummary { .. } | FamilyData::WindowedRate { .. } => "gauge",
+        }
+    }
+
+    fn wire_kind(&self) -> &'static str {
+        match self {
+            FamilyData::Counter(_) => "counter",
+            FamilyData::Gauge(_) => "gauge",
+            FamilyData::Summary { .. } => "summary",
+            FamilyData::WindowedSummary { .. } => "wsummary",
+            FamilyData::WindowedRate { .. } => "rate",
+        }
+    }
+}
+
+/// One named metric family.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Family {
+    pub name: String,
+    pub data: FamilyData,
+}
+
+impl Family {
+    fn counter(name: &str, v: u64) -> Family {
+        Family { name: name.to_string(), data: FamilyData::Counter(vec![(String::new(), v)]) }
+    }
+
+    fn gauge(name: &str, v: u64) -> Family {
+        Family { name: name.to_string(), data: FamilyData::Gauge(vec![(String::new(), v)]) }
+    }
+
+    fn summary(name: &str, scale: Scale, hist: HistogramSnapshot) -> Family {
+        Family { name: name.to_string(), data: FamilyData::Summary { scale, hist } }
+    }
+}
+
+/// A point-in-time capture of every family in a [`Metrics`] registry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RegistrySnapshot {
+    pub families: Vec<Family>,
+}
+
+impl RegistrySnapshot {
+    /// Capture a registry now.
+    pub fn capture(m: &Metrics) -> RegistrySnapshot {
+        RegistrySnapshot::capture_at(m, window::now_unix_secs())
+    }
+
+    /// Capture a registry with an explicit unix-seconds instant for the
+    /// windowed families (deterministic in tests).
+    pub fn capture_at(m: &Metrics, now_secs: u64) -> RegistrySnapshot {
+        let wsummary = |name: &str, scale: Scale, h: &super::WindowedHistogram| Family {
+            name: name.to_string(),
+            data: FamilyData::WindowedSummary {
+                scale,
+                windows: WINDOWS
+                    .iter()
+                    .map(|(label, secs)| {
+                        (label.to_string(), h.snapshot_window_at(*secs, now_secs))
+                    })
+                    .collect(),
+            },
+        };
+        let wrate = |name: &str, c: &super::WindowedCounter| Family {
+            name: name.to_string(),
+            data: FamilyData::WindowedRate {
+                windows: WINDOWS
+                    .iter()
+                    .map(|(label, secs)| {
+                        (label.to_string(), *secs, c.sum_window_at(*secs, now_secs))
+                    })
+                    .collect(),
+            },
+        };
+        let families = vec![
+            Family::counter("qostream_tree_learns_total", m.tree_learns.get()),
+            Family::summary(
+                "qostream_tree_route_depth",
+                Scale::Unit,
+                m.tree_route_depth.snapshot(),
+            ),
+            Family::counter("qostream_tree_splits_accepted_total", m.tree_splits_accepted.get()),
+            Family::counter(
+                "qostream_tree_splits_tie_broken_total",
+                m.tree_splits_tie_broken.get(),
+            ),
+            Family::counter(
+                "qostream_tree_splits_hoeffding_rejected_total",
+                m.tree_splits_hoeffding_rejected.get(),
+            ),
+            Family::counter("qostream_tree_splits_no_merit_total", m.tree_splits_no_merit.get()),
+            Family::counter(
+                "qostream_tree_splits_branch_too_small_total",
+                m.tree_splits_branch_too_small.get(),
+            ),
+            Family::counter("qostream_qo_inserts_total", m.qo_inserts.get()),
+            Family::summary(
+                "qostream_qo_slots_occupied",
+                Scale::Unit,
+                m.qo_slots_occupied.snapshot(),
+            ),
+            Family::counter("qostream_backend_batches_total", m.backend_batches.get()),
+            Family::summary(
+                "qostream_backend_batch_size",
+                Scale::Unit,
+                m.backend_batch_size.snapshot(),
+            ),
+            Family::summary(
+                "qostream_backend_latency_ns",
+                Scale::Unit,
+                m.backend_latency_ns.snapshot(),
+            ),
+            Family::counter("qostream_forest_warnings_total", m.forest_warnings.get()),
+            Family::counter("qostream_forest_drifts_total", m.forest_drifts.get()),
+            Family::counter("qostream_forest_bg_promotions_total", m.forest_bg_promotions.get()),
+            Family::summary("qostream_serve_learn_ns", Scale::Unit, m.serve_learn_ns.snapshot()),
+            Family::summary(
+                "qostream_serve_predict_ns",
+                Scale::Unit,
+                m.serve_predict_ns.snapshot(),
+            ),
+            wrate("qostream_serve_learn_rate", &m.serve_learn_window),
+            wrate("qostream_serve_predict_rate", &m.serve_predict_window),
+            wsummary("qostream_serve_predict_ns_window", Scale::Unit, &m.serve_predict_ns_window),
+            Family::summary(
+                "qostream_serve_delta_publish_bytes",
+                Scale::Unit,
+                m.serve_delta_publish_bytes.snapshot(),
+            ),
+            Family::summary(
+                "qostream_snapshot_publish_seconds",
+                Scale::NsAsSeconds,
+                m.snapshot_publish_ns.snapshot(),
+            ),
+            Family {
+                name: "qostream_snapshot_bytes".to_string(),
+                data: FamilyData::Counter(vec![
+                    ("{format=\"json\"}".to_string(), m.snapshot_bytes_json.get()),
+                    ("{format=\"binary\"}".to_string(), m.snapshot_bytes_binary.get()),
+                ]),
+            },
+            Family::gauge(
+                "qostream_serve_snapshot_failures_consecutive",
+                m.serve_snapshot_failures_consecutive.get(),
+            ),
+            Family::gauge("qostream_model_mem_bytes", m.model_mem_bytes.get()),
+            Family::gauge("qostream_process_start_seconds", m.process_start_seconds.get()),
+            Family::gauge("qostream_repl_lag_versions", m.repl_lag_versions.get()),
+            Family::gauge("qostream_repl_lag_learns", m.repl_lag_learns.get()),
+            Family::counter("qostream_repl_deltas_applied_total", m.repl_deltas_applied.get()),
+            Family::counter("qostream_repl_full_resyncs_total", m.repl_full_resyncs.get()),
+            Family::summary(
+                "qostream_repl_freshness_seconds",
+                Scale::NsAsSeconds,
+                m.repl_freshness_ns.snapshot(),
+            ),
+            wsummary(
+                "qostream_repl_freshness_seconds_window",
+                Scale::NsAsSeconds,
+                &m.repl_freshness_ns_window,
+            ),
+            Family::counter("qostream_tree_split_attempts_total", m.split_trace.total()),
+        ];
+        RegistrySnapshot { families }
+    }
+
+    /// Exact merge of two captures (fleet aggregation): counters and
+    /// histograms sum bucketwise, gauges sum to fleet totals, windowed
+    /// rates sum their event counts. Errors when the two snapshots do
+    /// not carry the same family sequence (version skew across nodes).
+    pub fn merge(&self, other: &RegistrySnapshot) -> Result<RegistrySnapshot> {
+        if self.families.len() != other.families.len() {
+            return Err(anyhow!(
+                "family count mismatch: {} vs {}",
+                self.families.len(),
+                other.families.len()
+            ));
+        }
+        let mut families = Vec::with_capacity(self.families.len());
+        for (a, b) in self.families.iter().zip(&other.families) {
+            if a.name != b.name {
+                return Err(anyhow!("family mismatch: {:?} vs {:?}", a.name, b.name));
+            }
+            let data = match (&a.data, &b.data) {
+                (FamilyData::Counter(x), FamilyData::Counter(y)) => {
+                    FamilyData::Counter(merge_samples(x, y))
+                }
+                (FamilyData::Gauge(x), FamilyData::Gauge(y)) => {
+                    FamilyData::Gauge(merge_samples(x, y))
+                }
+                (
+                    FamilyData::Summary { scale, hist },
+                    FamilyData::Summary { scale: s2, hist: h2 },
+                ) if scale == s2 => FamilyData::Summary { scale: *scale, hist: hist.merge(h2) },
+                (
+                    FamilyData::WindowedSummary { scale, windows },
+                    FamilyData::WindowedSummary { scale: s2, windows: w2 },
+                ) if scale == s2 => {
+                    let mut out = windows.clone();
+                    for (label, hist) in w2 {
+                        match out.iter_mut().find(|(l, _)| l == label) {
+                            Some((_, h)) => *h = h.merge(hist),
+                            None => out.push((label.clone(), hist.clone())),
+                        }
+                    }
+                    FamilyData::WindowedSummary { scale: *scale, windows: out }
+                }
+                (
+                    FamilyData::WindowedRate { windows },
+                    FamilyData::WindowedRate { windows: w2 },
+                ) => {
+                    let mut out = windows.clone();
+                    for (label, secs, count) in w2 {
+                        match out.iter_mut().find(|(l, _, _)| l == label) {
+                            Some((_, s, c)) if *s == *secs => *c += count,
+                            Some(_) => {
+                                return Err(anyhow!("window {label:?} spans differ in {:?}", a.name))
+                            }
+                            None => out.push((label.clone(), *secs, *count)),
+                        }
+                    }
+                    FamilyData::WindowedRate { windows: out }
+                }
+                _ => return Err(anyhow!("family kind mismatch in {:?}", a.name)),
+            };
+            families.push(Family { name: a.name.clone(), data });
+        }
+        Ok(RegistrySnapshot { families })
+    }
+
+    /// Render this capture as Prometheus text exposition (`# HELP` +
+    /// `# TYPE` per family, help text from [`super::CATALOG`]).
+    pub fn exposition(&self) -> String {
+        let mut out = String::with_capacity(8192);
+        for f in &self.families {
+            if let Some(desc) = super::describe(&f.name) {
+                out.push_str(&format!("# HELP {} {}\n", f.name, desc.help));
+            }
+            out.push_str(&format!("# TYPE {} {}\n", f.name, f.data.prom_kind()));
+            match &f.data {
+                FamilyData::Counter(samples) | FamilyData::Gauge(samples) => {
+                    for (labels, v) in samples {
+                        out.push_str(&format!("{}{labels} {v}\n", f.name));
+                    }
+                }
+                FamilyData::Summary { scale, hist } => {
+                    for (q, label) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")] {
+                        let v = hist.quantile(q);
+                        match scale {
+                            Scale::Unit => out
+                                .push_str(&format!("{}{{quantile=\"{label}\"}} {v}\n", f.name)),
+                            Scale::NsAsSeconds => out.push_str(&format!(
+                                "{}{{quantile=\"{label}\"}} {}\n",
+                                f.name,
+                                v as f64 / 1e9
+                            )),
+                        }
+                    }
+                    match scale {
+                        Scale::Unit => out.push_str(&format!(
+                            "{n}_sum {}\n{n}_count {}\n",
+                            hist.sum,
+                            hist.count,
+                            n = f.name
+                        )),
+                        Scale::NsAsSeconds => out.push_str(&format!(
+                            "{n}_sum {}\n{n}_count {}\n",
+                            hist.sum as f64 / 1e9,
+                            hist.count,
+                            n = f.name
+                        )),
+                    }
+                }
+                FamilyData::WindowedSummary { scale, windows } => {
+                    for (wlabel, hist) in windows {
+                        for (q, qlabel) in [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")] {
+                            let v = hist.quantile(q);
+                            match scale {
+                                Scale::Unit => out.push_str(&format!(
+                                    "{}{{window=\"{wlabel}\",quantile=\"{qlabel}\"}} {v}\n",
+                                    f.name
+                                )),
+                                Scale::NsAsSeconds => out.push_str(&format!(
+                                    "{}{{window=\"{wlabel}\",quantile=\"{qlabel}\"}} {}\n",
+                                    f.name,
+                                    v as f64 / 1e9
+                                )),
+                            }
+                        }
+                    }
+                }
+                FamilyData::WindowedRate { windows } => {
+                    for (wlabel, secs, count) in windows {
+                        let rate =
+                            if *secs == 0 { 0.0 } else { *count as f64 / *secs as f64 };
+                        out.push_str(&format!("{}{{window=\"{wlabel}\"}} {rate}\n", f.name));
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The summed value of a counter family (across its label samples).
+    pub fn counter_value(&self, name: &str) -> Option<u64> {
+        self.families.iter().find(|f| f.name == name).and_then(|f| match &f.data {
+            FamilyData::Counter(samples) => Some(samples.iter().map(|(_, v)| v).sum()),
+            _ => None,
+        })
+    }
+
+    /// The summed value of a gauge family.
+    pub fn gauge_value(&self, name: &str) -> Option<u64> {
+        self.families.iter().find(|f| f.name == name).and_then(|f| match &f.data {
+            FamilyData::Gauge(samples) => Some(samples.iter().map(|(_, v)| v).sum()),
+            _ => None,
+        })
+    }
+
+    /// The histogram behind a summary family.
+    pub fn summary_hist(&self, name: &str) -> Option<&HistogramSnapshot> {
+        self.families.iter().find(|f| f.name == name).and_then(|f| match &f.data {
+            FamilyData::Summary { hist, .. } => Some(hist),
+            _ => None,
+        })
+    }
+
+    /// The derived events/second of a rate family for one window label.
+    pub fn rate(&self, name: &str, window: &str) -> Option<f64> {
+        self.families.iter().find(|f| f.name == name).and_then(|f| match &f.data {
+            FamilyData::WindowedRate { windows } => windows
+                .iter()
+                .find(|(l, _, _)| l == window)
+                .map(|(_, secs, count)| {
+                    if *secs == 0 {
+                        0.0
+                    } else {
+                        *count as f64 / *secs as f64
+                    }
+                }),
+            _ => None,
+        })
+    }
+
+    /// Encode for the `metrics_raw` wire command.
+    pub fn to_json(&self) -> Json {
+        let mut families = Json::Arr(Vec::new());
+        for f in &self.families {
+            let mut o = Json::obj();
+            o.set("name", f.name.as_str()).set("kind", f.data.wire_kind());
+            match &f.data {
+                FamilyData::Counter(samples) | FamilyData::Gauge(samples) => {
+                    let mut arr = Json::Arr(Vec::new());
+                    for (labels, v) in samples {
+                        let mut pair = Json::Arr(Vec::new());
+                        pair.push(labels.as_str());
+                        pair.push(ju64(*v));
+                        arr.push(pair);
+                    }
+                    o.set("samples", arr);
+                }
+                FamilyData::Summary { scale, hist } => {
+                    o.set("scale", scale.tag()).set("hist", hist_to_json(hist));
+                }
+                FamilyData::WindowedSummary { scale, windows } => {
+                    let mut arr = Json::Arr(Vec::new());
+                    for (label, hist) in windows {
+                        let mut pair = Json::Arr(Vec::new());
+                        pair.push(label.as_str());
+                        pair.push(hist_to_json(hist));
+                        arr.push(pair);
+                    }
+                    o.set("scale", scale.tag()).set("windows", arr);
+                }
+                FamilyData::WindowedRate { windows } => {
+                    let mut arr = Json::Arr(Vec::new());
+                    for (label, secs, count) in windows {
+                        let mut triple = Json::Arr(Vec::new());
+                        triple.push(label.as_str());
+                        triple.push(ju64(*secs));
+                        triple.push(ju64(*count));
+                        arr.push(triple);
+                    }
+                    o.set("windows", arr);
+                }
+            }
+            families.push(o);
+        }
+        let mut out = Json::obj();
+        out.set("schema", SCHEMA).set("families", families);
+        out
+    }
+
+    /// Decode a `metrics_raw` payload.
+    pub fn from_json(j: &Json) -> Result<RegistrySnapshot> {
+        let schema = j.get("schema").and_then(Json::as_str);
+        if schema != Some(SCHEMA) {
+            return Err(anyhow!("unsupported metrics snapshot schema {schema:?}"));
+        }
+        let fams = j
+            .get("families")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("snapshot missing families array"))?;
+        let mut families = Vec::with_capacity(fams.len());
+        for f in fams {
+            let name = f
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("family missing name"))?
+                .to_string();
+            let kind = f
+                .get("kind")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("family {name:?} missing kind"))?;
+            let data = match kind {
+                "counter" | "gauge" => {
+                    let raw = f
+                        .get("samples")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("family {name:?} missing samples"))?;
+                    let mut samples = Vec::with_capacity(raw.len());
+                    for pair in raw {
+                        let pair =
+                            pair.as_arr().ok_or_else(|| anyhow!("{name:?}: bad sample"))?;
+                        let labels = pair
+                            .first()
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("{name:?}: bad sample labels"))?;
+                        let v = pu64(
+                            pair.get(1).ok_or_else(|| anyhow!("{name:?}: bad sample value"))?,
+                            "sample",
+                        )?;
+                        samples.push((labels.to_string(), v));
+                    }
+                    if kind == "counter" {
+                        FamilyData::Counter(samples)
+                    } else {
+                        FamilyData::Gauge(samples)
+                    }
+                }
+                "summary" => FamilyData::Summary {
+                    scale: scale_of(f, &name)?,
+                    hist: hist_from_json(
+                        f.get("hist").ok_or_else(|| anyhow!("{name:?} missing hist"))?,
+                    )?,
+                },
+                "wsummary" => {
+                    let raw = f
+                        .get("windows")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("family {name:?} missing windows"))?;
+                    let mut windows = Vec::with_capacity(raw.len());
+                    for pair in raw {
+                        let pair =
+                            pair.as_arr().ok_or_else(|| anyhow!("{name:?}: bad window"))?;
+                        let label = pair
+                            .first()
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("{name:?}: bad window label"))?;
+                        let hist = hist_from_json(
+                            pair.get(1).ok_or_else(|| anyhow!("{name:?}: bad window hist"))?,
+                        )?;
+                        windows.push((label.to_string(), hist));
+                    }
+                    FamilyData::WindowedSummary { scale: scale_of(f, &name)?, windows }
+                }
+                "rate" => {
+                    let raw = f
+                        .get("windows")
+                        .and_then(Json::as_arr)
+                        .ok_or_else(|| anyhow!("family {name:?} missing windows"))?;
+                    let mut windows = Vec::with_capacity(raw.len());
+                    for triple in raw {
+                        let triple =
+                            triple.as_arr().ok_or_else(|| anyhow!("{name:?}: bad window"))?;
+                        let label = triple
+                            .first()
+                            .and_then(Json::as_str)
+                            .ok_or_else(|| anyhow!("{name:?}: bad window label"))?;
+                        let secs = pu64(
+                            triple.get(1).ok_or_else(|| anyhow!("{name:?}: bad window secs"))?,
+                            "secs",
+                        )?;
+                        let count = pu64(
+                            triple.get(2).ok_or_else(|| anyhow!("{name:?}: bad window count"))?,
+                            "count",
+                        )?;
+                        windows.push((label.to_string(), secs, count));
+                    }
+                    FamilyData::WindowedRate { windows }
+                }
+                other => return Err(anyhow!("family {name:?}: unknown kind {other:?}")),
+            };
+            families.push(Family { name, data });
+        }
+        Ok(RegistrySnapshot { families })
+    }
+}
+
+fn scale_of(f: &Json, name: &str) -> Result<Scale> {
+    Scale::from_tag(
+        f.get("scale")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("family {name:?} missing scale"))?,
+    )
+}
+
+fn merge_samples(a: &[(String, u64)], b: &[(String, u64)]) -> Vec<(String, u64)> {
+    let mut out = a.to_vec();
+    for (labels, v) in b {
+        match out.iter_mut().find(|(l, _)| l == labels) {
+            Some((_, existing)) => *existing += v,
+            None => out.push((labels.clone(), *v)),
+        }
+    }
+    out
+}
+
+/// Sparse histogram encoding: only occupied buckets travel, `u64`s as
+/// decimal strings for exactness.
+fn hist_to_json(h: &HistogramSnapshot) -> Json {
+    let mut buckets = Json::Arr(Vec::new());
+    for (i, c) in h.counts.iter().enumerate() {
+        if *c != 0 {
+            let mut pair = Json::Arr(Vec::new());
+            pair.push(jusize(i));
+            pair.push(ju64(*c));
+            buckets.push(pair);
+        }
+    }
+    let mut o = Json::obj();
+    o.set("c", buckets).set("sum", ju64(h.sum)).set("count", ju64(h.count));
+    o
+}
+
+fn hist_from_json(j: &Json) -> Result<HistogramSnapshot> {
+    let mut out = HistogramSnapshot::empty();
+    let buckets =
+        j.get("c").and_then(Json::as_arr).ok_or_else(|| anyhow!("hist missing buckets"))?;
+    for pair in buckets {
+        let pair = pair.as_arr().ok_or_else(|| anyhow!("bad hist bucket"))?;
+        let i = pusize(pair.first().ok_or_else(|| anyhow!("bad hist bucket index"))?, "bucket")?;
+        if i >= N_BUCKETS {
+            return Err(anyhow!("hist bucket index {i} out of range"));
+        }
+        out.counts[i] =
+            pu64(pair.get(1).ok_or_else(|| anyhow!("bad hist bucket count"))?, "bucket count")?;
+    }
+    out.sum = pu64(j.get("sum").ok_or_else(|| anyhow!("hist missing sum"))?, "sum")?;
+    out.count = pu64(j.get("count").ok_or_else(|| anyhow!("hist missing count"))?, "count")?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{SplitEvent, SplitOutcome};
+    use super::*;
+    use crate::common::proptest::check;
+
+    const T0: u64 = 1_700_000_000;
+
+    fn split_event(i: u64) -> SplitEvent {
+        SplitEvent {
+            outcome: SplitOutcome::Accepted,
+            merit_gap: 0.5,
+            slots_evaluated: i,
+            elapsed_ns: i * 10,
+        }
+    }
+
+    fn populate(m: &Metrics, seed: u64) {
+        m.tree_learns.add(100 + seed);
+        for i in 0..20 {
+            m.tree_route_depth.record(i % 7);
+            m.serve_predict_ns.record(1000 * (seed + i));
+            m.repl_freshness_ns.record(i * 1_000_000);
+            m.serve_predict_ns_window.record_at(1000 * (seed + i), T0 - (i % 50));
+            m.repl_freshness_ns_window.record_at(i * 1_000_000, T0 - (i % 200));
+            m.serve_learn_window.add_at(1, T0 - (i % 100));
+        }
+        m.snapshot_bytes_json.add(10 * seed);
+        m.snapshot_bytes_binary.add(3 * seed);
+        m.split_trace.record(split_event(seed));
+    }
+
+    #[test]
+    fn capture_roundtrips_through_json_exactly() {
+        let m = Metrics::new();
+        populate(&m, 3);
+        m.model_mem_bytes.set(1 << 20);
+        let snap = RegistrySnapshot::capture_at(&m, T0);
+        let decoded = RegistrySnapshot::from_json(&Json::parse(&snap.to_json().to_compact())
+            .expect("wire text parses"))
+        .expect("decodes");
+        assert_eq!(snap, decoded);
+    }
+
+    #[test]
+    fn merged_capture_equals_pooled_recording() {
+        // the fleet-aggregation contract: merging two nodes' snapshots
+        // is bit-exact equal to one registry that recorded everything
+        let (a, b, pooled) = (Metrics::new(), Metrics::new(), Metrics::new());
+        populate(&a, 1);
+        populate(&b, 9);
+        populate(&pooled, 1);
+        populate(&pooled, 9);
+        a.model_mem_bytes.set(500);
+        b.model_mem_bytes.set(700);
+        pooled.model_mem_bytes.set(1200); // gauges merge as fleet sums
+        let merged = RegistrySnapshot::capture_at(&a, T0)
+            .merge(&RegistrySnapshot::capture_at(&b, T0))
+            .expect("same family sequence");
+        assert_eq!(merged, RegistrySnapshot::capture_at(&pooled, T0));
+        // and the rendered fleet exposition is the pooled one, verbatim
+        assert_eq!(merged.exposition(), RegistrySnapshot::capture_at(&pooled, T0).exposition());
+    }
+
+    #[test]
+    fn prop_merge_matches_pooled_over_random_recordings() {
+        check("registry-merge-pooled", 0x0F1E, 25, |rng| {
+            let (a, b, pooled) = (Metrics::new(), Metrics::new(), Metrics::new());
+            for (node, which) in [(&a, 0u64), (&b, 1)] {
+                for _ in 0..rng.below(100) {
+                    let v = rng.below(1 << rng.below(40));
+                    node.repl_freshness_ns.record(v);
+                    pooled.repl_freshness_ns.record(v);
+                    let at = T0 - rng.below(300);
+                    node.serve_predict_ns_window.record_at(v, at);
+                    pooled.serve_predict_ns_window.record_at(v, at);
+                    node.serve_learn_window.add_at(1 + which, at);
+                    pooled.serve_learn_window.add_at(1 + which, at);
+                }
+            }
+            let merged = RegistrySnapshot::capture_at(&a, T0)
+                .merge(&RegistrySnapshot::capture_at(&b, T0))
+                .map_err(|e| e.to_string())?;
+            if merged != RegistrySnapshot::capture_at(&pooled, T0) {
+                return Err("merged != pooled".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_family_sequences() {
+        let m = Metrics::new();
+        let a = RegistrySnapshot::capture_at(&m, T0);
+        let mut b = RegistrySnapshot::capture_at(&m, T0);
+        b.families[0].name = "qostream_other".to_string();
+        assert!(a.merge(&b).is_err());
+        let mut c = RegistrySnapshot::capture_at(&m, T0);
+        c.families.pop();
+        assert!(a.merge(&c).is_err());
+    }
+
+    #[test]
+    fn exposition_carries_help_for_every_family() {
+        let m = Metrics::new();
+        populate(&m, 2);
+        let text = RegistrySnapshot::capture_at(&m, T0).exposition();
+        let mut families = 0usize;
+        let mut prev: Option<&str> = None;
+        for line in text.lines() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                families += 1;
+                let (name, kind) = {
+                    let mut it = rest.split_whitespace();
+                    (it.next().expect("name"), it.next().expect("kind"))
+                };
+                // every TYPE is immediately preceded by its HELP line
+                let help =
+                    prev.and_then(|p| p.strip_prefix("# HELP ")).expect("HELP precedes TYPE");
+                assert!(help.starts_with(name), "HELP/TYPE name mismatch at {name}");
+                // and the catalog agrees on the kind
+                let desc = super::super::describe(name)
+                    .unwrap_or_else(|| panic!("{name} missing from CATALOG"));
+                assert_eq!(desc.kind, kind, "catalog kind drift for {name}");
+            }
+            prev = Some(line);
+        }
+        // bidirectional: every catalog entry actually renders
+        assert_eq!(families, super::super::CATALOG.len(), "families vs catalog:\n{text}");
+    }
+
+    #[test]
+    fn windowed_families_render_with_window_labels() {
+        let m = Metrics::new();
+        for _ in 0..30 {
+            m.serve_learn_window.add_at(2, T0);
+            m.serve_predict_ns_window.record_at(50_000, T0);
+            m.repl_freshness_ns_window.record_at(30_000_000, T0); // 30ms
+        }
+        let text = RegistrySnapshot::capture_at(&m, T0).exposition();
+        // 60 learns over the 1m window = 1 learn/sec
+        assert!(
+            text.contains("qostream_serve_learn_rate{window=\"1m\"} 1\n"),
+            "missing 1m learn rate:\n{text}"
+        );
+        assert!(text.contains("qostream_serve_learn_rate{window=\"5m\"} 0.2\n"), "{text}");
+        assert!(
+            text.contains("qostream_serve_predict_ns_window{window=\"1m\",quantile=\"0.99\"}"),
+            "{text}"
+        );
+        // the freshness window renders in seconds: 30ms lands in the
+        // (2^24..2^25] ns bucket, upper bound ~0.0335s
+        let line = text
+            .lines()
+            .find(|l| {
+                l.starts_with("qostream_repl_freshness_seconds_window{window=\"1m\",quantile=\"0.5\"}")
+            })
+            .expect("windowed freshness line");
+        let v: f64 = line.split_whitespace().nth(1).unwrap().parse().unwrap();
+        assert!((0.03..0.07).contains(&v), "windowed freshness p50 {v}");
+    }
+
+    #[test]
+    fn docs_catalog_stays_in_sync_with_code() {
+        // docs/OBSERVABILITY.md documents every family; a new metric
+        // without a doc row (or a doc row for a removed metric) fails here
+        let doc = include_str!("../../../docs/OBSERVABILITY.md");
+        for desc in super::super::CATALOG {
+            assert!(
+                doc.contains(&format!("`{}`", desc.name)),
+                "docs/OBSERVABILITY.md missing a row for {}",
+                desc.name
+            );
+        }
+    }
+}

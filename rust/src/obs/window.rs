@@ -1,0 +1,356 @@
+//! Time-windowed metrics: rates and rolling-window quantiles.
+//!
+//! Lifetime totals (the base registry in [`crate::obs`]) answer "how much
+//! ever"; operations needs "how much *lately*" — learns/sec over the last
+//! minute, predict p99 over the last five. This module adds two
+//! time-rotated primitives that stay inside the registry's constraints
+//! (std-only, `const`-constructible, atomics-only recording):
+//!
+//! * [`WindowedCounter`] — a ring of [`N_TIME_BUCKETS`] per-epoch
+//!   counters, each covering [`BUCKET_SECS`] seconds. Recording stamps
+//!   the bucket with its epoch and `fetch_add`s; a bucket whose epoch is
+//!   stale is claimed via compare-and-swap and reset. Reading sums the
+//!   buckets whose epochs fall inside the requested window.
+//! * [`WindowedHistogram`] — the same ring, but each time bucket holds a
+//!   full log2 histogram (`[AtomicU64; N_BUCKETS]` + sum + count).
+//!   Reading merges the live time buckets bucketwise — the **same exact
+//!   merge** as [`HistogramSnapshot::merge`] — into one snapshot, so
+//!   windowed quantiles carry the identical accuracy contract as
+//!   lifetime ones (over-report < 2×, never under-report).
+//!
+//! ## Accuracy contract
+//!
+//! These are monitoring-grade, not accounting-grade:
+//!
+//! * Window edges are quantized to [`BUCKET_SECS`]: a "60 s" window
+//!   covers the last 12 whole epochs plus the in-progress one, so it
+//!   reads up to one bucket width long.
+//! * Rotation races: when an epoch rolls over, the first recorder CASes
+//!   the bucket's epoch and resets its counts; a concurrent recorder
+//!   landing between the claim and the reset can lose its sample. This
+//!   happens at most once per bucket per [`BUCKET_SECS`] and only under
+//!   contention — bounded, and irrelevant at monitoring precision.
+//!
+//! Lifetime totals stay exact; only the windowed view is approximate.
+//! The windowed instruments are recorded from the **serve layer** (learn
+//! batches, predict responses, replication applies), never from the tree
+//! learn hot path, so the `obs_overhead_ratio ≥ 0.95` contract
+//! (`docs/OBSERVABILITY.md`) is untouched by them.
+//!
+//! ## Clock
+//!
+//! Wall-clock unix seconds ([`now_unix_secs`]) — windows must be
+//! meaningful across scrapes and across processes (the fleet aggregator
+//! compares nodes), so a process-local monotonic origin is not enough.
+//! Every read/record method has an `_at` variant taking an explicit
+//! timestamp; tests drive those deterministically.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use super::{HistogramSnapshot, N_BUCKETS};
+
+/// Seconds covered by one time bucket.
+pub const BUCKET_SECS: u64 = 5;
+
+/// Time buckets in the ring: 64 × 5 s = 320 s of history, enough for the
+/// 5-minute window with headroom.
+pub const N_TIME_BUCKETS: usize = 64;
+
+/// The two windows the exposition reports, as `(label, seconds)`.
+pub const WINDOWS: &[(&str, u64)] = &[("1m", 60), ("5m", 300)];
+
+/// Wall-clock unix seconds (0 if the clock reads before the epoch).
+pub fn now_unix_secs() -> u64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs()).unwrap_or(0)
+}
+
+/// Wall-clock unix microseconds (0 if the clock reads before the epoch).
+/// The freshness span stamps (`serve/publish.rs` → `serve/replicate.rs`)
+/// use this resolution: publish→apply spans are tens of milliseconds.
+pub fn now_unix_us() -> u64 {
+    u64::try_from(
+        SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_micros()).unwrap_or(0),
+    )
+    .unwrap_or(u64::MAX)
+}
+
+#[inline]
+fn epoch_of(now_secs: u64) -> u64 {
+    now_secs / BUCKET_SECS
+}
+
+/// Is a bucket stamped `slot_epoch` inside the `window_secs` window
+/// ending at the epoch of `now_secs`? Includes the in-progress epoch.
+#[inline]
+fn in_window(slot_epoch: u64, now_secs: u64, window_secs: u64) -> bool {
+    let now_epoch = epoch_of(now_secs);
+    let span = window_secs.div_ceil(BUCKET_SECS);
+    slot_epoch <= now_epoch && slot_epoch + span > now_epoch
+}
+
+/// One time-rotated counter bucket: the epoch it currently covers plus
+/// the count recorded during that epoch.
+struct CounterSlot {
+    epoch: AtomicU64,
+    count: AtomicU64,
+}
+
+impl CounterSlot {
+    const fn new() -> CounterSlot {
+        // epoch 0 would collide with a live epoch only for clocks reading
+        // the first 5 s after 1970 — stamp u64::MAX as "never written"
+        CounterSlot { epoch: AtomicU64::new(u64::MAX), count: AtomicU64::new(0) }
+    }
+
+    /// Claim the slot for `epoch` if it is stamped with an older one.
+    /// Returns after the slot is stamped `epoch` (by us or a racer).
+    #[inline]
+    fn rotate(&self, epoch: u64) {
+        let seen = self.epoch.load(Ordering::Relaxed);
+        if seen == epoch {
+            return;
+        }
+        if self.epoch.compare_exchange(seen, epoch, Ordering::Relaxed, Ordering::Relaxed).is_ok() {
+            // we won the claim: discard the previous epoch's count
+            self.count.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// A counter whose recent history is readable per time window. Recording
+/// is a load + (rarely) one CAS + one `fetch_add`, all relaxed.
+pub struct WindowedCounter {
+    slots: [CounterSlot; N_TIME_BUCKETS],
+}
+
+impl WindowedCounter {
+    pub const fn new() -> WindowedCounter {
+        const SLOT: CounterSlot = CounterSlot::new();
+        WindowedCounter { slots: [SLOT; N_TIME_BUCKETS] }
+    }
+
+    /// Record `n` events now.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.add_at(n, now_unix_secs());
+    }
+
+    /// Record `n` events at an explicit unix-seconds instant (tests).
+    #[inline]
+    pub fn add_at(&self, n: u64, now_secs: u64) {
+        let epoch = epoch_of(now_secs);
+        let slot = &self.slots[(epoch % N_TIME_BUCKETS as u64) as usize];
+        slot.rotate(epoch);
+        slot.count.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Events recorded over the trailing `window_secs` (quantized to
+    /// bucket width, see the module docs).
+    pub fn sum_window(&self, window_secs: u64) -> u64 {
+        self.sum_window_at(window_secs, now_unix_secs())
+    }
+
+    /// [`WindowedCounter::sum_window`] at an explicit instant.
+    pub fn sum_window_at(&self, window_secs: u64, now_secs: u64) -> u64 {
+        self.slots
+            .iter()
+            .filter(|s| in_window(s.epoch.load(Ordering::Relaxed), now_secs, window_secs))
+            .map(|s| s.count.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Events per second over the trailing window.
+    pub fn rate_at(&self, window_secs: u64, now_secs: u64) -> f64 {
+        if window_secs == 0 {
+            return 0.0;
+        }
+        self.sum_window_at(window_secs, now_secs) as f64 / window_secs as f64
+    }
+}
+
+impl Default for WindowedCounter {
+    fn default() -> WindowedCounter {
+        WindowedCounter::new()
+    }
+}
+
+/// One time-rotated histogram bucket: a full log2 histogram stamped with
+/// the epoch it covers.
+struct HistSlot {
+    epoch: AtomicU64,
+    counts: [AtomicU64; N_BUCKETS],
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+impl HistSlot {
+    const fn new() -> HistSlot {
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        HistSlot {
+            epoch: AtomicU64::new(u64::MAX),
+            counts: [ZERO; N_BUCKETS],
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    fn rotate(&self, epoch: u64) {
+        let seen = self.epoch.load(Ordering::Relaxed);
+        if seen == epoch {
+            return;
+        }
+        if self.epoch.compare_exchange(seen, epoch, Ordering::Relaxed, Ordering::Relaxed).is_ok() {
+            for c in &self.counts {
+                c.store(0, Ordering::Relaxed);
+            }
+            self.sum.store(0, Ordering::Relaxed);
+            self.count.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// A histogram whose recent samples are readable per time window as an
+/// exact-merged [`HistogramSnapshot`].
+pub struct WindowedHistogram {
+    slots: [HistSlot; N_TIME_BUCKETS],
+}
+
+impl WindowedHistogram {
+    pub const fn new() -> WindowedHistogram {
+        const SLOT: HistSlot = HistSlot::new();
+        WindowedHistogram { slots: [SLOT; N_TIME_BUCKETS] }
+    }
+
+    /// Record one sample now.
+    #[inline]
+    pub fn record(&self, v: u64) {
+        self.record_at(v, now_unix_secs());
+    }
+
+    /// Record one sample at an explicit unix-seconds instant (tests).
+    #[inline]
+    pub fn record_at(&self, v: u64, now_secs: u64) {
+        let epoch = epoch_of(now_secs);
+        let slot = &self.slots[(epoch % N_TIME_BUCKETS as u64) as usize];
+        slot.rotate(epoch);
+        slot.counts[super::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        slot.sum.fetch_add(v, Ordering::Relaxed);
+        slot.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Merge the trailing `window_secs` of samples into one snapshot —
+    /// bucketwise addition, the same exact merge as
+    /// [`HistogramSnapshot::merge`].
+    pub fn snapshot_window(&self, window_secs: u64) -> HistogramSnapshot {
+        self.snapshot_window_at(window_secs, now_unix_secs())
+    }
+
+    /// [`WindowedHistogram::snapshot_window`] at an explicit instant.
+    pub fn snapshot_window_at(&self, window_secs: u64, now_secs: u64) -> HistogramSnapshot {
+        let mut out = HistogramSnapshot::empty();
+        for slot in &self.slots {
+            if !in_window(slot.epoch.load(Ordering::Relaxed), now_secs, window_secs) {
+                continue;
+            }
+            for (o, c) in out.counts.iter_mut().zip(&slot.counts) {
+                *o += c.load(Ordering::Relaxed);
+            }
+            out.sum += slot.sum.load(Ordering::Relaxed);
+            out.count += slot.count.load(Ordering::Relaxed);
+        }
+        out
+    }
+}
+
+impl Default for WindowedHistogram {
+    fn default() -> WindowedHistogram {
+        WindowedHistogram::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const T0: u64 = 1_700_000_000; // an arbitrary fixed "now"
+
+    #[test]
+    fn counter_windows_include_recent_and_drop_old_epochs() {
+        let c = WindowedCounter::new();
+        c.add_at(10, T0); // in-progress epoch
+        c.add_at(5, T0 - 30); // 30 s ago: inside 1m and 5m
+        c.add_at(7, T0 - 120); // 2 min ago: inside 5m only
+        c.add_at(100, T0 - 400); // beyond the 5m window entirely
+        assert_eq!(c.sum_window_at(60, T0), 15);
+        assert_eq!(c.sum_window_at(300, T0), 22);
+        assert!((c.rate_at(60, T0) - 15.0 / 60.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn counter_ring_reuse_overwrites_stale_epochs() {
+        let c = WindowedCounter::new();
+        c.add_at(3, T0);
+        // one full ring later the same slot covers a new epoch: the old
+        // count must be discarded, not summed
+        let later = T0 + BUCKET_SECS * N_TIME_BUCKETS as u64;
+        c.add_at(4, later);
+        assert_eq!(c.sum_window_at(60, later), 4);
+        assert_eq!(c.sum_window_at(300, later), 4);
+    }
+
+    #[test]
+    fn histogram_window_merge_matches_direct_recording() {
+        // samples inside the window must merge to exactly the snapshot of
+        // a plain histogram that recorded them (same bucketing, same
+        // bucketwise addition)
+        let w = WindowedHistogram::new();
+        let reference = super::super::Histogram::new();
+        for (v, age) in [(100u64, 0u64), (1000, 10), (9, 55)] {
+            w.record_at(v, T0 - age);
+            reference.record(v);
+        }
+        w.record_at(1 << 20, T0 - 200); // inside 5m, outside 1m
+        assert_eq!(w.snapshot_window_at(60, T0), reference.snapshot());
+        let five = w.snapshot_window_at(300, T0);
+        assert_eq!(five.count, 4);
+        assert_eq!(five.sum, reference.snapshot().sum + (1 << 20));
+    }
+
+    #[test]
+    fn windowed_quantiles_reflect_only_the_window() {
+        let w = WindowedHistogram::new();
+        for _ in 0..100 {
+            w.record_at(1_000_000, T0 - 200); // old slow samples
+        }
+        for _ in 0..100 {
+            w.record_at(100, T0); // recent fast samples
+        }
+        // the 1m view only sees the fast samples; the 5m view is
+        // dominated by the slow ones at p99
+        assert!(w.snapshot_window_at(60, T0).quantile(0.99) < 256);
+        assert!(w.snapshot_window_at(300, T0).quantile(0.99) >= 1_000_000);
+    }
+
+    #[test]
+    fn window_edges_are_quantized_to_bucket_width() {
+        // a sample "60 s ago" may still be visible in a 60 s window
+        // because the in-progress epoch extends it (documented); one full
+        // extra bucket earlier it must be gone
+        let t0 = T0 - (T0 % BUCKET_SECS); // align for determinism
+        let c = WindowedCounter::new();
+        c.add_at(1, t0 - 60 - BUCKET_SECS);
+        assert_eq!(c.sum_window_at(60, t0), 0);
+        c.add_at(1, t0 - 60 + BUCKET_SECS);
+        assert_eq!(c.sum_window_at(60, t0), 1);
+    }
+
+    #[test]
+    fn clock_helpers_are_sane() {
+        let s = now_unix_secs();
+        let us = now_unix_us();
+        assert!(s > 1_500_000_000, "unix clock reads before 2017: {s}");
+        assert!(us / 1_000_000 >= s);
+    }
+}

@@ -354,6 +354,15 @@ pub struct DeltaEntry {
     pub hash: u64,
     /// When the target version was published (replication-lag metric).
     pub published: Instant,
+    /// Wall-clock unix microseconds of the publication. Travels on
+    /// `repl_sync` responses (`pub_us`) so followers can measure the
+    /// live publish→apply freshness span; `Instant`s cannot cross
+    /// processes. Assumes NTP-synced hosts — spans are clamped at zero
+    /// on the follower under clock skew.
+    pub published_unix_us: u64,
+    /// Cumulative acked learns the target version covers (`learns` on
+    /// the wire); 0 when the publisher did not supply it.
+    pub learns_at_publish: u64,
 }
 
 /// Versioned delta publisher: owns the latest document, assigns versions,
@@ -368,6 +377,12 @@ pub struct DeltaLog {
     full_bytes: usize,
     entries: VecDeque<DeltaEntry>,
     capacity: usize,
+    /// Unix-µs publish instant of the head version (anchor instant for
+    /// version 0). Shipped on full syncs so a bootstrapping follower
+    /// records a freshness span too.
+    published_unix_us: u64,
+    /// Cumulative acked learns covered by the head version.
+    learns_at_publish: u64,
 }
 
 impl DeltaLog {
@@ -385,6 +400,8 @@ impl DeltaLog {
             doc: Arc::new(doc),
             entries: VecDeque::new(),
             capacity: capacity.max(1),
+            published_unix_us: crate::obs::window::now_unix_us(),
+            learns_at_publish: 0,
         }
     }
 
@@ -420,7 +437,16 @@ impl DeltaLog {
     /// Publish a new document. Returns `(version, changed)`: an unchanged
     /// document does **not** bump the version (no-op deltas never enter
     /// the ring), so followers only ever see versions that differ.
+    /// Stamped "now" with no learns marker — serving leaders publish
+    /// through [`DeltaLog::publish_with`] instead.
     pub fn publish(&mut self, new_doc: Json) -> (u64, bool) {
+        self.publish_with(new_doc, 0, crate::obs::window::now_unix_us())
+    }
+
+    /// [`DeltaLog::publish`] with an explicit publish instant (unix µs)
+    /// and the cumulative acked learns the new document covers — the
+    /// pair followers need to report live freshness and staleness.
+    pub fn publish_with(&mut self, new_doc: Json, learns: u64, now_us: u64) -> (u64, bool) {
         if canonical_eq(&new_doc, &self.doc) {
             return (self.version, false);
         }
@@ -435,6 +461,8 @@ impl DeltaLog {
             full_bytes: text.len(),
             hash,
             published: Instant::now(),
+            published_unix_us: now_us,
+            learns_at_publish: learns,
             ops,
         });
         while self.entries.len() > self.capacity {
@@ -444,6 +472,8 @@ impl DeltaLog {
         self.doc = Arc::new(new_doc);
         self.hash = hash;
         self.full_bytes = text.len();
+        self.published_unix_us = now_us;
+        self.learns_at_publish = learns;
         (self.version, true)
     }
 
@@ -456,8 +486,9 @@ impl DeltaLog {
     /// stalls the trainer's publish path on a multi-MB deep copy.
     pub fn sync_payload(&self, have: Option<u64>) -> SyncPayload {
         let (version, hash) = (self.version, self.hash);
+        let (pub_us, learns) = (self.published_unix_us, self.learns_at_publish);
         let Some(have) = have else {
-            return SyncPayload::Full { version, hash, doc: self.doc_arc() };
+            return SyncPayload::Full { version, hash, pub_us, learns, doc: self.doc_arc() };
         };
         if have == self.version {
             return SyncPayload::UpToDate { version, hash };
@@ -474,6 +505,8 @@ impl DeltaLog {
                     d.set("from", ju64(entry.from))
                         .set("to", ju64(entry.from + 1))
                         .set("hash", ju64(entry.hash))
+                        .set("pub_us", ju64(entry.published_unix_us))
+                        .set("learns", ju64(entry.learns_at_publish))
                         .set("ops", entry.ops.clone());
                     deltas.push(d);
                 }
@@ -481,7 +514,7 @@ impl DeltaLog {
             }
         }
         // gap (requester behind the ring, ahead of us, or ring mismatch)
-        SyncPayload::Full { version, hash, doc: self.doc_arc() }
+        SyncPayload::Full { version, hash, pub_us, learns, doc: self.doc_arc() }
     }
 }
 
@@ -490,7 +523,7 @@ impl DeltaLog {
 pub enum SyncPayload {
     UpToDate { version: u64, hash: u64 },
     Deltas { version: u64, hash: u64, deltas: Json },
-    Full { version: u64, hash: u64, doc: Arc<Json> },
+    Full { version: u64, hash: u64, pub_us: u64, learns: u64, doc: Arc<Json> },
 }
 
 impl SyncPayload {
@@ -511,10 +544,12 @@ impl SyncPayload {
                     .set("hash", ju64(hash))
                     .set("deltas", deltas);
             }
-            SyncPayload::Full { version, hash, doc } => {
+            SyncPayload::Full { version, hash, pub_us, learns, doc } => {
                 response
                     .set("version", ju64(version))
                     .set("hash", ju64(hash))
+                    .set("pub_us", ju64(pub_us))
+                    .set("learns", ju64(learns))
                     .set("full", (*doc).clone());
             }
         }
@@ -529,6 +564,16 @@ pub fn decode_wire_delta(d: &Json) -> Result<(u64, u64, u64, &Json)> {
         pu64(field(d, "hash")?, "hash")?,
         field(d, "ops")?,
     ))
+}
+
+/// The optional freshness stamps of one wire delta (or a `repl_sync`
+/// response head): `(publish unix µs, learns covered)`. Both absent
+/// when the leader predates the stamps — followers degrade gracefully.
+pub fn wire_freshness(d: &Json) -> (Option<u64>, Option<u64>) {
+    (
+        d.get("pub_us").and_then(|j| pu64(j, "pub_us").ok()),
+        d.get("learns").and_then(|j| pu64(j, "learns").ok()),
+    )
 }
 
 #[cfg(test)]
@@ -728,5 +773,37 @@ mod tests {
         log.publish(parse(r#"{"a":2,"b":[1,2,3]}"#));
         assert_eq!(log.hash(), doc_hash(log.doc()));
         assert_eq!(log.full_bytes(), log.doc().to_compact().len());
+    }
+
+    #[test]
+    fn freshness_stamps_travel_on_both_sync_shapes() {
+        let mut log = DeltaLog::new(parse(r#"{"x":0}"#), 8);
+        log.publish_with(parse(r#"{"x":1}"#), 500, 1_000_000);
+        log.publish_with(parse(r#"{"x":2}"#), 900, 2_500_000);
+
+        // delta chain: each wire delta carries its own version's stamps
+        let mut r = Json::obj();
+        log.sync_payload(Some(0)).into_response(&mut r);
+        let deltas = r.get("deltas").and_then(Json::as_arr).unwrap();
+        assert_eq!(deltas.len(), 2);
+        assert_eq!(wire_freshness(&deltas[0]), (Some(1_000_000), Some(500)));
+        assert_eq!(wire_freshness(&deltas[1]), (Some(2_500_000), Some(900)));
+
+        // full sync: the head's stamps ride the response itself
+        let mut r = Json::obj();
+        log.sync_payload(None).into_response(&mut r);
+        assert!(r.get("full").is_some());
+        assert_eq!(wire_freshness(&r), (Some(2_500_000), Some(900)));
+
+        // a stamp-less payload (old leader) degrades to None, not error
+        assert_eq!(wire_freshness(&parse(r#"{"from":"1"}"#)), (None, None));
+
+        // plain publish stamps wall-clock time and no learns marker
+        log.publish(parse(r#"{"x":3}"#));
+        let mut r = Json::obj();
+        log.sync_payload(None).into_response(&mut r);
+        let (pub_us, learns) = wire_freshness(&r);
+        assert!(pub_us.unwrap() > 2_500_000, "wall-clock stamp expected");
+        assert_eq!(learns, Some(0));
     }
 }

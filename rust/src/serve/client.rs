@@ -113,6 +113,20 @@ impl ServeClient {
     /// that predate the binary codec ignore the field and answer inline
     /// JSON — callers must accept both shapes.
     pub fn repl_sync_format(&mut self, have: Option<u64>, binary: bool) -> Result<Json> {
+        self.repl_sync_advertise(have, binary, None)
+    }
+
+    /// Like [`ServeClient::repl_sync_format`], additionally advertising
+    /// the caller's own serve address (`addr`). The leader remembers
+    /// recently seen addresses and lists them in its `stats` response
+    /// (`followers`), which is how fleet tooling discovers a whole fleet
+    /// from one leader endpoint. Purely advisory — old leaders ignore it.
+    pub fn repl_sync_advertise(
+        &mut self,
+        have: Option<u64>,
+        binary: bool,
+        addr: Option<&str>,
+    ) -> Result<Json> {
         let mut req = Json::obj();
         req.set("cmd", "repl_sync");
         if let Some(have) = have {
@@ -120,6 +134,9 @@ impl ServeClient {
         }
         if binary {
             req.set("format", "binary");
+        }
+        if let Some(addr) = addr {
+            req.set("addr", addr);
         }
         self.request(&req)
     }
@@ -144,11 +161,57 @@ impl ServeClient {
             .ok_or_else(|| anyhow!("response missing \"text\""))
     }
 
+    /// Structured JSON snapshot of the full metrics registry
+    /// ([`crate::obs::snapshot::RegistrySnapshot`] wire form) — what the
+    /// fleet aggregator scrapes so it can merge histograms *exactly*
+    /// instead of re-parsing rendered quantiles. Works on both roles.
+    pub fn metrics_raw(&mut self) -> Result<Json> {
+        let mut req = Json::obj();
+        req.set("cmd", "metrics_raw");
+        let response = self.request(&req)?;
+        response
+            .get("snapshot")
+            .cloned()
+            .ok_or_else(|| anyhow!("response missing \"snapshot\""))
+    }
+
+    /// Structured liveness/readiness: `status` (`ok` / `degraded`),
+    /// `role`, `snapshot_version`, `staleness_learns`, `mem_bytes`,
+    /// `uptime_secs` and a human-readable `reasons` array. Works on both
+    /// roles (each reports its own degradation signals).
+    pub fn health(&mut self) -> Result<Json> {
+        let mut req = Json::obj();
+        req.set("cmd", "health");
+        self.request(&req)
+    }
+
     /// Recent split-attempt trace events plus the lifetime attempt count
     /// (the [`crate::obs`] trace ring). Works on leaders and followers.
     pub fn trace_splits(&mut self) -> Result<Json> {
+        self.trace_splits_limit(None)
+    }
+
+    /// Like [`ServeClient::trace_splits`], asking for at most `limit`
+    /// events (newest first; the server caps it at the ring capacity).
+    pub fn trace_splits_limit(&mut self, limit: Option<usize>) -> Result<Json> {
         let mut req = Json::obj();
         req.set("cmd", "trace_splits");
+        if let Some(limit) = limit {
+            req.set("limit", limit);
+        }
+        self.request(&req)
+    }
+
+    /// Recent replication-apply trace events — per applied version: the
+    /// version, the leader's learn count at publication and the live
+    /// publish→apply freshness span (newest first). Works on both roles;
+    /// a leader's ring is simply empty.
+    pub fn trace_repl(&mut self, limit: Option<usize>) -> Result<Json> {
+        let mut req = Json::obj();
+        req.set("cmd", "trace_repl");
+        if let Some(limit) = limit {
+            req.set("limit", limit);
+        }
         self.request(&req)
     }
 

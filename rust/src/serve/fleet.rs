@@ -1,0 +1,546 @@
+//! Fleet-wide scrape aggregation: one Prometheus endpoint for a whole
+//! leader + follower deployment (`qostream fleet`, and the e2e tests).
+//!
+//! ## What it does
+//!
+//! Given a seed list of `HOST:PORT` serve endpoints, the aggregator
+//!
+//! 1. **discovers** the rest of the fleet: every seed that answers
+//!    `stats` with a `followers` array (a leader — followers advertise
+//!    their serve address on each `repl_sync` poll, see
+//!    [`super::publish::Replication::note_follower`]) contributes those
+//!    addresses to the target set;
+//! 2. **scrapes** each node over the existing NDJSON protocol —
+//!    `health` for role/status/staleness and `metrics_raw` for the full
+//!    registry as a mergeable [`RegistrySnapshot`];
+//! 3. **merges exactly**: histograms travel as raw log2 buckets, so
+//!    fleet-level quantiles come from *summed buckets*, not from
+//!    averaging per-node quantiles (which is statistically meaningless).
+//!    The merged output is bit-identical to capturing one registry that
+//!    saw every node's recordings (property-tested in
+//!    `rust/tests/fleet_e2e.rs`);
+//! 4. **renders** one exposition: the merged registry families followed
+//!    by per-node `qostream_node_*` gauges labelled
+//!    `{node="HOST:PORT",role="leader|follower"}`, plus
+//!    `qostream_fleet_nodes` / `qostream_fleet_nodes_up` totals. An
+//!    unreachable node stays in the output as `qostream_node_up 0` —
+//!    silently dropping a dead replica is how staleness hides.
+//!
+//! The text dashboard ([`FleetScrape::dashboard`], `qostream fleet
+//! --top`) shows the same per-node view as an ASCII table. The metric
+//! catalog, label scheme and scrape topology are documented in
+//! `docs/OBSERVABILITY.md`.
+//!
+//! ## Serving scrapes
+//!
+//! [`serve_scrapes`] answers plain HTTP `GET` with the fleet exposition
+//! (`text/plain; version=0.0.4`), so a stock Prometheus can scrape one
+//! aggregator instead of N nodes. The server is deliberately minimal —
+//! request head read and discarded, one response per connection — and,
+//! like every connection path in `serve/`, it must never panic on peer
+//! input (enforced by `LINT_UNWRAP_CONN`).
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::common::json::Json;
+use crate::common::table::{fnum, Table};
+use crate::obs::RegistrySnapshot;
+use crate::persist::codec::pu64;
+
+use super::client::ServeClient;
+
+/// Registry family names the per-node columns are derived from.
+const FRESHNESS_FAMILY: &str = "qostream_repl_freshness_seconds";
+const LEARN_RATE_FAMILY: &str = "qostream_serve_learn_rate";
+
+/// One node's scrape result. `up == false` means the node was
+/// unreachable or answered garbage — identity fields then keep their
+/// zero/`"?"` defaults and `snapshot` is `None`.
+#[derive(Clone, Debug)]
+pub struct NodeScrape {
+    pub addr: String,
+    pub up: bool,
+    /// `leader` / `follower` as self-reported by `health`.
+    pub role: String,
+    /// `ok` / `degraded` as self-reported by `health`.
+    pub status: String,
+    pub snapshot_version: u64,
+    pub staleness_learns: u64,
+    pub mem_bytes: u64,
+    pub uptime_secs: u64,
+    /// The node's full registry ([`RegistrySnapshot`]) for exact merging.
+    pub snapshot: Option<RegistrySnapshot>,
+}
+
+impl NodeScrape {
+    fn down(addr: &str) -> NodeScrape {
+        NodeScrape {
+            addr: addr.to_string(),
+            up: false,
+            role: "?".to_string(),
+            status: "down".to_string(),
+            snapshot_version: 0,
+            staleness_learns: 0,
+            mem_bytes: 0,
+            uptime_secs: 0,
+            snapshot: None,
+        }
+    }
+
+    /// Live freshness p99 in seconds from this node's own histogram
+    /// (`None` when the node is down or has recorded no applies).
+    pub fn freshness_p99_secs(&self) -> Option<f64> {
+        let hist = self.snapshot.as_ref()?.summary_hist(FRESHNESS_FAMILY)?;
+        if hist.count == 0 {
+            return None;
+        }
+        Some(hist.quantile(0.99) as f64 / 1e9)
+    }
+
+    /// Learns/sec over the node's 1m window (`None` when down; 0.0 on a
+    /// follower, which never learns).
+    pub fn learns_per_sec(&self) -> Option<f64> {
+        self.snapshot.as_ref()?.rate(LEARN_RATE_FAMILY, "1m")
+    }
+}
+
+/// A whole fleet's scrape: per-node rows plus the exactly merged
+/// registry (`None` when no node was reachable).
+#[derive(Clone, Debug)]
+pub struct FleetScrape {
+    pub nodes: Vec<NodeScrape>,
+    pub merged: Option<RegistrySnapshot>,
+    /// Snapshots that could not be merged (family-set drift in a
+    /// mixed-version fleet). Surfaced rather than silently dropped.
+    pub merge_skipped: usize,
+}
+
+/// Expand a seed target list with every follower the seeds' leaders
+/// know about. Order is deterministic: seeds first (as given), then
+/// discovered followers in leader-reported order; duplicates dropped.
+/// Unreachable seeds stay in the list — the scrape marks them down.
+pub fn discover(seeds: &[String]) -> Vec<String> {
+    let mut targets: Vec<String> = Vec::new();
+    let mut push_unique = |targets: &mut Vec<String>, addr: &str| {
+        if !addr.is_empty() && !targets.iter().any(|t| t == addr) {
+            targets.push(addr.to_string());
+        }
+    };
+    for seed in seeds {
+        push_unique(&mut targets, seed);
+        let Ok(mut client) = ServeClient::connect(seed.as_str()) else { continue };
+        let Ok(stats) = client.stats() else { continue };
+        let Some(followers) = stats.get("followers").and_then(Json::as_arr) else {
+            continue; // a follower seed (or an old leader): nothing to expand
+        };
+        for f in followers {
+            if let Some(addr) = f.as_str() {
+                push_unique(&mut targets, addr);
+            }
+        }
+    }
+    targets
+}
+
+/// Scrape one node: `health` + `metrics_raw` over one connection. Never
+/// errors — an unreachable or malformed node comes back as
+/// [`NodeScrape::down`], because the aggregate must keep rendering when
+/// part of the fleet is on fire.
+pub fn scrape_node(addr: &str) -> NodeScrape {
+    match try_scrape(addr) {
+        Ok(node) => node,
+        Err(_) => NodeScrape::down(addr),
+    }
+}
+
+fn try_scrape(addr: &str) -> Result<NodeScrape> {
+    let mut client = ServeClient::connect(addr)?;
+    let health = client.health()?;
+    let snapshot = RegistrySnapshot::from_json(&client.metrics_raw()?)?;
+    let text = |key: &str| -> String {
+        health.get(key).and_then(Json::as_str).unwrap_or("?").to_string()
+    };
+    let num = |key: &str| -> u64 {
+        health.get(key).and_then(|j| pu64(j, key).ok()).unwrap_or(0)
+    };
+    Ok(NodeScrape {
+        addr: addr.to_string(),
+        up: true,
+        role: text("role"),
+        status: text("status"),
+        snapshot_version: num("snapshot_version"),
+        staleness_learns: num("staleness_learns"),
+        mem_bytes: num("mem_bytes"),
+        uptime_secs: num("uptime_secs"),
+        snapshot: Some(snapshot),
+    })
+}
+
+/// Scrape every target and merge the reachable registries exactly.
+pub fn scrape_fleet(targets: &[String]) -> FleetScrape {
+    let nodes: Vec<NodeScrape> = targets.iter().map(|t| scrape_node(t)).collect();
+    let mut merged: Option<RegistrySnapshot> = None;
+    let mut merge_skipped = 0usize;
+    for node in &nodes {
+        let Some(snap) = &node.snapshot else { continue };
+        merged = Some(match merged.take() {
+            None => snap.clone(),
+            Some(acc) => match acc.merge(snap) {
+                Ok(m) => m,
+                Err(_) => {
+                    merge_skipped += 1;
+                    acc
+                }
+            },
+        });
+    }
+    FleetScrape { nodes, merged, merge_skipped }
+}
+
+/// Escape a Prometheus label value (`\`, `"`, newline).
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+impl FleetScrape {
+    /// The fleet exposition: merged registry families, then fleet and
+    /// per-node gauges. One scrape endpoint for the whole deployment.
+    pub fn exposition(&self) -> String {
+        let mut out = String::with_capacity(16 * 1024);
+        if let Some(merged) = &self.merged {
+            out.push_str(&merged.exposition());
+        }
+        let up = self.nodes.iter().filter(|n| n.up).count();
+        out.push_str("# HELP qostream_fleet_nodes Scrape targets in the fleet.\n");
+        out.push_str("# TYPE qostream_fleet_nodes gauge\n");
+        out.push_str(&format!("qostream_fleet_nodes {}\n", self.nodes.len()));
+        out.push_str("# HELP qostream_fleet_nodes_up Targets that answered the scrape.\n");
+        out.push_str("# TYPE qostream_fleet_nodes_up gauge\n");
+        out.push_str(&format!("qostream_fleet_nodes_up {up}\n"));
+        self.node_family(&mut out, "qostream_node_up", "1 when the node answered.", |n| {
+            Some(if n.up { "1".to_string() } else { "0".to_string() })
+        });
+        self.node_family(
+            &mut out,
+            "qostream_node_staleness_learns",
+            "Learns the node's served snapshot trails the live model.",
+            |n| n.up.then(|| n.staleness_learns.to_string()),
+        );
+        self.node_family(
+            &mut out,
+            "qostream_node_mem_bytes",
+            "Resident model size the node reports.",
+            |n| n.up.then(|| n.mem_bytes.to_string()),
+        );
+        self.node_family(
+            &mut out,
+            "qostream_node_snapshot_version",
+            "Snapshot version the node currently serves.",
+            |n| n.up.then(|| n.snapshot_version.to_string()),
+        );
+        self.node_family(
+            &mut out,
+            "qostream_node_uptime_secs",
+            "Node process uptime in seconds.",
+            |n| n.up.then(|| n.uptime_secs.to_string()),
+        );
+        self.node_family(
+            &mut out,
+            "qostream_node_freshness_p99_seconds",
+            "Node-local publish-to-apply freshness p99 (followers only).",
+            |n| n.freshness_p99_secs().map(|v| format!("{v}")),
+        );
+        self.node_family(
+            &mut out,
+            "qostream_node_learns_per_sec",
+            "Learns/sec over the node's 1m window.",
+            |n| n.learns_per_sec().map(|v| format!("{v}")),
+        );
+        out
+    }
+
+    /// Render one per-node gauge family; nodes where `value` returns
+    /// `None` are skipped (e.g. freshness on a leader).
+    fn node_family(
+        &self,
+        out: &mut String,
+        name: &str,
+        help: &str,
+        value: impl Fn(&NodeScrape) -> Option<String>,
+    ) {
+        let samples: Vec<(String, String)> = self
+            .nodes
+            .iter()
+            .filter_map(|n| {
+                value(n).map(|v| {
+                    let labels = format!(
+                        "node=\"{}\",role=\"{}\"",
+                        escape_label(&n.addr),
+                        escape_label(&n.role)
+                    );
+                    (labels, v)
+                })
+            })
+            .collect();
+        if samples.is_empty() {
+            return;
+        }
+        out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} gauge\n"));
+        for (labels, v) in samples {
+            out.push_str(&format!("{name}{{{labels}}} {v}\n"));
+        }
+    }
+
+    /// The `--top` view: one ASCII table row per node.
+    pub fn dashboard(&self) -> String {
+        let mut t = Table::new(vec![
+            "node",
+            "role",
+            "status",
+            "version",
+            "stale(learns)",
+            "mem_bytes",
+            "fresh_p99_s",
+            "learns/s",
+            "uptime_s",
+        ]);
+        let or_dash = |v: Option<f64>| v.map(fnum).unwrap_or_else(|| "-".to_string());
+        for n in &self.nodes {
+            t.row(vec![
+                n.addr.clone(),
+                n.role.clone(),
+                n.status.clone(),
+                n.snapshot_version.to_string(),
+                n.staleness_learns.to_string(),
+                n.mem_bytes.to_string(),
+                or_dash(n.freshness_p99_secs()),
+                or_dash(n.learns_per_sec()),
+                n.uptime_secs.to_string(),
+            ]);
+        }
+        let up = self.nodes.iter().filter(|n| n.up).count();
+        let mut out = t.render();
+        out.push_str(&format!("nodes: {}  up: {up}", self.nodes.len()));
+        if self.merge_skipped > 0 {
+            out.push_str(&format!("  UNMERGED: {}", self.merge_skipped));
+        }
+        out.push('\n');
+        out
+    }
+}
+
+/// Answer HTTP `GET`s on `listener` with a fresh fleet exposition per
+/// request. `seeds` is re-discovered on every scrape when
+/// `auto_discover` is set, so followers that join later appear without
+/// restarting the aggregator. Runs until the listener errors terminally
+/// (per-connection errors are swallowed — a broken scraper connection
+/// must not kill the endpoint).
+pub fn serve_scrapes(listener: TcpListener, seeds: Vec<String>, auto_discover: bool) {
+    for conn in listener.incoming() {
+        let Ok(stream) = conn else { continue };
+        let targets = if auto_discover { discover(&seeds) } else { seeds.clone() };
+        let body = scrape_fleet(&targets).exposition();
+        answer_http(stream, &body).ok();
+    }
+}
+
+/// Drain one HTTP request head and write a 200 with `body`. The method
+/// and path are ignored — every request gets the exposition, which is
+/// exactly what a Prometheus scrape config needs and nothing more.
+fn answer_http(stream: TcpStream, body: &str) -> Result<()> {
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .context("setting scrape read timeout")?;
+    let mut reader = BufReader::new(stream.try_clone().context("cloning scrape conn")?);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line).context("reading request head")?;
+        if n == 0 || line.trim_end().is_empty() {
+            break; // end of head (or peer hung up) — answer anyway
+        }
+    }
+    let mut stream = stream;
+    let response = format!(
+        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes()).context("writing scrape response")?;
+    stream.flush().context("flushing scrape response")?;
+    Ok(())
+}
+
+/// Read a full HTTP response from `stream` and return its body — test
+/// helper for the scrape endpoint (kept here so the e2e tests and any
+/// future CLI probe share one implementation).
+pub fn read_http_body(stream: TcpStream) -> Result<String> {
+    let mut reader = BufReader::new(stream);
+    let mut head = String::new();
+    let mut content_length: Option<usize> = None;
+    loop {
+        head.clear();
+        let n = reader.read_line(&mut head).context("reading response head")?;
+        if n == 0 {
+            return Err(anyhow::anyhow!("connection closed before response body"));
+        }
+        let trimmed = head.trim_end();
+        if trimmed.is_empty() {
+            break;
+        }
+        if let Some(v) = trimmed
+            .to_ascii_lowercase()
+            .strip_prefix("content-length:")
+            .map(str::trim)
+            .and_then(|v| v.parse::<usize>().ok())
+        {
+            content_length = Some(v);
+        }
+    }
+    let mut body = Vec::new();
+    match content_length {
+        Some(len) => {
+            body.resize(len, 0);
+            reader.read_exact(&mut body).context("reading response body")?;
+        }
+        None => {
+            reader.read_to_end(&mut body).context("reading response body")?;
+        }
+    }
+    String::from_utf8(body).context("response body is not UTF-8")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Metrics;
+
+    fn fake_node(addr: &str, role: &str, staleness: u64) -> NodeScrape {
+        let m = Box::leak(Box::new(Metrics::new()));
+        m.serve_learn_ns.record(1_000);
+        m.repl_freshness_ns.record(40_000_000); // 40ms
+        NodeScrape {
+            addr: addr.to_string(),
+            up: true,
+            role: role.to_string(),
+            status: "ok".to_string(),
+            snapshot_version: 7,
+            staleness_learns: staleness,
+            mem_bytes: 1024,
+            uptime_secs: 12,
+            snapshot: Some(RegistrySnapshot::capture(m)),
+        }
+    }
+
+    #[test]
+    fn exposition_labels_every_node_and_counts_the_fleet() {
+        let fleet = FleetScrape {
+            nodes: vec![
+                fake_node("10.0.0.1:7000", "leader", 0),
+                fake_node("10.0.0.2:7001", "follower", 5),
+                NodeScrape::down("10.0.0.3:7002"),
+            ],
+            merged: None,
+            merge_skipped: 0,
+        };
+        let text = fleet.exposition();
+        assert!(text.contains("qostream_fleet_nodes 3\n"));
+        assert!(text.contains("qostream_fleet_nodes_up 2\n"));
+        assert!(text.contains(
+            "qostream_node_up{node=\"10.0.0.1:7000\",role=\"leader\"} 1\n"
+        ));
+        assert!(text.contains(
+            "qostream_node_up{node=\"10.0.0.3:7002\",role=\"?\"} 0\n"
+        ));
+        assert!(text.contains(
+            "qostream_node_staleness_learns{node=\"10.0.0.2:7001\",role=\"follower\"} 5\n"
+        ));
+        // a down node contributes up=0 but no other samples
+        assert!(!text.contains("qostream_node_mem_bytes{node=\"10.0.0.3:7002\""));
+        // every emitted family carries HELP + TYPE
+        for family in ["qostream_node_up", "qostream_node_freshness_p99_seconds"] {
+            assert!(text.contains(&format!("# HELP {family} ")));
+            assert!(text.contains(&format!("# TYPE {family} gauge\n")));
+        }
+    }
+
+    #[test]
+    fn freshness_p99_reads_the_node_histogram() {
+        let node = fake_node("a:1", "follower", 0);
+        let p99 = node.freshness_p99_secs().expect("histogram has one sample");
+        // one 40ms sample lands in a log2 bucket whose upper bound is
+        // < 2x the value; the quantile over-reports inside that bound
+        assert!(p99 >= 0.04 && p99 < 0.08, "p99 {p99}");
+        assert_eq!(NodeScrape::down("b:2").freshness_p99_secs(), None);
+    }
+
+    #[test]
+    fn dashboard_renders_a_row_per_node() {
+        let fleet = FleetScrape {
+            nodes: vec![fake_node("a:1", "leader", 0), NodeScrape::down("b:2")],
+            merged: None,
+            merge_skipped: 1,
+        };
+        let text = fleet.dashboard();
+        assert!(text.contains("| a:1"));
+        assert!(text.contains("| b:2"));
+        assert!(text.contains("down"));
+        assert!(text.contains("nodes: 2  up: 1  UNMERGED: 1"));
+    }
+
+    #[test]
+    fn label_escaping_is_prometheus_safe() {
+        assert_eq!(escape_label(r#"a"b\c"#), r#"a\"b\\c"#);
+        assert_eq!(escape_label("x\ny"), "x\\ny");
+    }
+
+    #[test]
+    fn http_body_roundtrip_over_a_socketpair() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let body = "qostream_fleet_nodes 1\n".to_string();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            answer_http(stream, &body).unwrap();
+        });
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let got = read_http_body(stream).unwrap();
+        assert_eq!(got, "qostream_fleet_nodes 1\n");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn merge_skip_keeps_the_accumulated_registry() {
+        // a snapshot with a different family count cannot merge; the
+        // fleet keeps what it has and counts the skip
+        let good = fake_node("a:1", "leader", 0);
+        let mut bad = fake_node("b:2", "follower", 0);
+        if let Some(s) = &mut bad.snapshot {
+            s.families.pop();
+        }
+        let nodes = vec![good, bad];
+        let mut merged: Option<RegistrySnapshot> = None;
+        let mut skipped = 0;
+        for n in &nodes {
+            let Some(snap) = &n.snapshot else { continue };
+            merged = Some(match merged.take() {
+                None => snap.clone(),
+                Some(acc) => match acc.merge(snap) {
+                    Ok(m) => m,
+                    Err(_) => {
+                        skipped += 1;
+                        acc
+                    }
+                },
+            });
+        }
+        let merged = merged.expect("first snapshot always seeds the merge");
+        assert_eq!(skipped, 1);
+        assert_eq!(merged.families.len(), crate::obs::CATALOG.len());
+    }
+}

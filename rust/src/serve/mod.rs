@@ -37,7 +37,10 @@
 //! | `{"cmd":"stats"}` | `{"ok":true,"model":…,"learns_applied":…,"snapshot_version":…,"snapshot_age_learns":…,…}` |
 //! | `{"cmd":"repl_sync","have":…[,"format":"binary"]}` | `{"ok":true,"version":…,"hash":…,` one of `"up_to_date"/"deltas"/"full"}` (binary: `"full_b64"` / per-delta `"ops_b64"`, see `docs/FORMATS.md`) |
 //! | `{"cmd":"metrics"}` | `{"ok":true,"format":"prometheus","text":"…"}` ([`crate::obs`] exposition) |
-//! | `{"cmd":"trace_splits"}` | `{"ok":true,"total":…,"capacity":…,"events":[{"outcome":…,"merit_gap":…,"slots_evaluated":…,"elapsed_ns":…},…]}` |
+//! | `{"cmd":"metrics_raw"}` | `{"ok":true,"snapshot":{…}}` (mergeable [`crate::obs::RegistrySnapshot`] — what [`fleet`] scrapes) |
+//! | `{"cmd":"health"}` | `{"ok":true,"status":"ok"/"degraded","role":…,"snapshot_version":…,"staleness_learns":…,"mem_bytes":…,"uptime_secs":…,"reasons":[…]}` |
+//! | `{"cmd":"trace_splits"[,"limit":n]}` | `{"ok":true,"total":…,"capacity":…,"events":[{"outcome":…,"merit_gap":…,"slots_evaluated":…,"elapsed_ns":…},…]}` (newest first) |
+//! | `{"cmd":"trace_repl"[,"limit":n]}` | `{"ok":true,"total":…,"capacity":…,"events":[{"version":…,"learns":…,"span_ns":…,"full":…},…]}` (newest first) |
 //! | `{"cmd":"shutdown"}` | `{"ok":true}`, then the server stops |
 //!
 //! Malformed lines, unknown commands, dimension mismatches and
@@ -70,8 +73,18 @@
 //! With `ServeOptions::shards > 1` the leader's trainer fans micro-batches
 //! out over the sharded forest machinery, so one endpoint fronts a
 //! sharded ARF/bagging fleet while followers scale the read path.
+//!
+//! ## Observability (see `docs/OBSERVABILITY.md`)
+//!
+//! Both roles serve the full metric catalog (`metrics` /
+//! `metrics_raw`), structured `health`, and the trace rings
+//! (`trace_splits` / `trace_repl`). Followers additionally record live
+//! learn→serve **freshness spans** per applied version. The [`fleet`]
+//! aggregator discovers a leader's followers, scrapes every node, and
+//! merges the histograms *exactly* into one fleet-wide exposition.
 
 pub mod client;
+pub mod fleet;
 pub mod publish;
 pub mod replicate;
 pub mod server;

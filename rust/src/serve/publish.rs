@@ -29,6 +29,7 @@
 //! follower's hash verification pipeline is format-agnostic.
 
 use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 use crate::common::b64;
 use crate::common::json::Json;
@@ -41,25 +42,67 @@ use super::server::lock_poisoned;
 /// The leader's replication state: staged-but-unencoded model state plus
 /// the versioned delta log it materializes into.
 pub struct Replication {
-    /// Model state staged by the trainer's last publication, not yet
-    /// encoded into the log (`None` = the log is current). Overwritten
-    /// by newer stages; taken under [`Replication::materialize`]'s log
-    /// lock so materializers cannot publish out of order.
-    staged: Mutex<Option<Arc<Model>>>,
+    /// Model state staged by the trainer's last publication (paired
+    /// with the cumulative acked learns it covers), not yet encoded
+    /// into the log (`None` = the log is current). Overwritten by newer
+    /// stages; taken under [`Replication::materialize`]'s log lock so
+    /// materializers cannot publish out of order.
+    staged: Mutex<Option<(Arc<Model>, u64)>>,
     /// The versioned delta log, fed at materialize time.
     log: Mutex<DeltaLog>,
+    /// Serve addresses followers advertised on `repl_sync` polls, by
+    /// last-seen instant. Fleet tooling discovers a leader's whole
+    /// fleet from this (the `followers` array in `stats`); entries not
+    /// seen within [`FOLLOWER_TTL`] are pruned.
+    followers: Mutex<Vec<(String, Instant)>>,
 }
+
+/// How long an advertised follower address stays listed after its last
+/// `repl_sync` poll. Generous against slow poll intervals; small enough
+/// that a dead follower drops out of discovery within a minute.
+pub const FOLLOWER_TTL: Duration = Duration::from_secs(60);
 
 impl Replication {
     pub fn new(log: DeltaLog) -> Replication {
-        Replication { staged: Mutex::new(None), log: Mutex::new(log) }
+        Replication {
+            staged: Mutex::new(None),
+            log: Mutex::new(log),
+            followers: Mutex::new(Vec::new()),
+        }
     }
 
-    /// Stage freshly published model state (trainer thread). Cheap — a
-    /// pointer store — and never blocks on an encode in progress, which
-    /// holds the *other* lock.
-    pub fn stage(&self, model: Arc<Model>) {
-        *lock_poisoned(&self.staged) = Some(model);
+    /// Record (or refresh) a follower's advertised serve address.
+    pub fn note_follower(&self, addr: &str) {
+        if addr.is_empty() || addr.len() > 256 {
+            return; // advisory field; never let a peer bloat the registry
+        }
+        let now = Instant::now();
+        let mut followers = lock_poisoned(&self.followers);
+        match followers.iter_mut().find(|(a, _)| a.as_str() == addr) {
+            Some((_, seen)) => *seen = now,
+            None => followers.push((addr.to_string(), now)),
+        }
+        followers.retain(|(_, seen)| now.duration_since(*seen) < FOLLOWER_TTL);
+    }
+
+    /// Advertised follower addresses seen within [`FOLLOWER_TTL`].
+    pub fn followers(&self) -> Vec<String> {
+        let now = Instant::now();
+        lock_poisoned(&self.followers)
+            .iter()
+            .filter(|(_, seen)| now.duration_since(*seen) < FOLLOWER_TTL)
+            .map(|(a, _)| a.clone())
+            .collect()
+    }
+
+    /// Stage freshly published model state (trainer thread) together
+    /// with the cumulative acked learns it covers. Cheap — a pointer
+    /// store — and never blocks on an encode in progress, which holds
+    /// the *other* lock. The publish instant is stamped at materialize
+    /// time, when the version becomes observable to followers — that is
+    /// the instant freshness spans measure from.
+    pub fn stage(&self, model: Arc<Model>, learns: u64) {
+        *lock_poisoned(&self.staged) = Some((model, learns));
     }
 
     /// The delta log as-is, **without** materializing staged state.
@@ -80,7 +123,7 @@ impl Replication {
         // the staged guard alive across the whole block (temporary
         // lifetime extension) and deadlock the error path's re-lock
         let staged = lock_poisoned(&self.staged).take();
-        if let Some(model) = staged {
+        if let Some((model, learns)) = staged {
             let doc = match encode_staged(&model) {
                 Ok(doc) => doc,
                 Err(e) => {
@@ -88,12 +131,12 @@ impl Replication {
                     // trainer staged something newer meanwhile
                     let mut slot = lock_poisoned(&self.staged);
                     if slot.is_none() {
-                        *slot = Some(model);
+                        *slot = Some((model, learns));
                     }
                     return Err(e);
                 }
             };
-            let (_, changed) = log.publish(doc);
+            let (_, changed) = log.publish_with(doc, learns, crate::obs::window::now_unix_us());
             if changed {
                 if let Some(m) = crate::obs::m() {
                     m.snapshot_bytes_json.add(log.full_bytes() as u64);
@@ -149,7 +192,7 @@ pub fn embed_sync_payload(payload: SyncPayload, binary_format: bool, response: &
             if let Json::Arr(items) = deltas {
                 for d in items {
                     let mut e = Json::obj();
-                    for key in ["from", "to", "hash"] {
+                    for key in ["from", "to", "hash", "pub_us", "learns"] {
                         if let Some(v) = d.get(key) {
                             e.set(key, v.clone());
                         }
@@ -165,8 +208,12 @@ pub fn embed_sync_payload(payload: SyncPayload, binary_format: bool, response: &
             }
             response.set("deltas", Json::Arr(out));
         }
-        SyncPayload::Full { version, hash, doc } => {
-            response.set("version", ju64(version)).set("hash", ju64(hash));
+        SyncPayload::Full { version, hash, pub_us, learns, doc } => {
+            response
+                .set("version", ju64(version))
+                .set("hash", ju64(hash))
+                .set("pub_us", ju64(pub_us))
+                .set("learns", ju64(learns));
             let bytes = binary::encode_doc(&doc);
             if let Some(m) = crate::obs::m() {
                 m.snapshot_bytes_binary.add(bytes.len() as u64);
@@ -191,6 +238,8 @@ mod tests {
         let payload = SyncPayload::Full {
             version: 7,
             hash: doc_hash(&doc),
+            pub_us: 1_000,
+            learns: 50,
             doc: Arc::new(doc.clone()),
         };
         let mut response = Json::obj();
@@ -231,6 +280,8 @@ mod tests {
         let payload = SyncPayload::Full {
             version: 1,
             hash: doc_hash(&doc),
+            pub_us: 0,
+            learns: 0,
             doc: Arc::new(doc.clone()),
         };
         let mut response = Json::obj();
@@ -269,11 +320,11 @@ mod tests {
         if let Model::Tree(t) = &mut model {
             learn(t, 32);
         }
-        repl.stage(Arc::new(model.clone()));
+        repl.stage(Arc::new(model.clone()), 96);
         if let Model::Tree(t) = &mut model {
             learn(t, 32);
         }
-        repl.stage(Arc::new(model.clone()));
+        repl.stage(Arc::new(model.clone()), 128);
         {
             let log = repl.materialize().unwrap();
             assert_eq!(log.version(), 1, "a staged burst collapses to one version");
@@ -286,5 +337,23 @@ mod tests {
         // nothing staged: materialize is a no-op
         let log = repl.materialize().unwrap();
         assert_eq!(log.version(), 1);
+    }
+
+    #[test]
+    fn follower_registry_dedupes_and_ignores_junk() {
+        let doc = parse(r#"{"a":1}"#);
+        let repl = Replication::new(DeltaLog::new(doc, 4));
+        assert!(repl.followers().is_empty());
+
+        repl.note_follower("10.0.0.1:7000");
+        repl.note_follower("10.0.0.2:7000");
+        repl.note_follower("10.0.0.1:7000"); // refresh, not duplicate
+        let mut seen = repl.followers();
+        seen.sort();
+        assert_eq!(seen, vec!["10.0.0.1:7000".to_string(), "10.0.0.2:7000".to_string()]);
+
+        repl.note_follower("");
+        repl.note_follower(&"x".repeat(300));
+        assert_eq!(repl.followers().len(), 2, "empty/oversized addresses are dropped");
     }
 }

@@ -67,6 +67,24 @@
 //!   ARENA_CHILD_ORDER at model.nodes[7].split.left]" instead of a bare
 //!   decode symptom. Debug builds additionally audit every *accepted*
 //!   document before installing it.
+//!
+//! ## Freshness + health (see `docs/OBSERVABILITY.md`)
+//!
+//! Every sync payload carries the wall-clock instant the leader
+//! published each version (`pub_us`, unix µs) and the leader's
+//! applied-learn count at that publication (`learns`). On apply, the
+//! follower records the live **publish→apply span** into the
+//! `qostream_repl_freshness_seconds` histogram (lifetime + windowed)
+//! and a bounded [`crate::obs::ReplEvent`] ring served by the
+//! `trace_repl` command (newest first, optional `limit`). Old leaders
+//! without the stamps degrade gracefully: nothing is recorded. The
+//! bootstrap full sync is deliberately *not* recorded — its span would
+//! measure how long the follower was down, not the learn→serve
+//! pipeline. The `health` command reports `ok` / `degraded`
+//! (degraded once [`HEALTH_FAILURE_RUN`] consecutive poll rounds fail),
+//! and each poll advertises this replica's serve address so the
+//! leader's `stats` lists its fleet (`followers`) for discovery by
+//! [`super::fleet`].
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -86,8 +104,9 @@ use crate::persist::Model;
 
 use super::client::ServeClient;
 use super::server::{
-    current_snapshot, drive_connection, error_response, lock_poisoned, metrics_response,
-    ok_response, parse_x, trace_splits_response,
+    current_snapshot, drive_connection, error_response, lock_poisoned,
+    metrics_raw_response, metrics_response, ok_response, parse_limit, parse_x,
+    trace_repl_response, trace_splits_response, HEALTH_FAILURE_RUN,
 };
 
 /// Follower tuning knobs.
@@ -150,6 +169,11 @@ struct FollowerShared {
     full_resyncs: AtomicU64,
     polls: AtomicU64,
     poll_errors: AtomicU64,
+    /// Consecutive poll/apply failures since the last fully successful
+    /// sync round — the follower's `health` degradation signal (degraded
+    /// at [`HEALTH_FAILURE_RUN`]); `poll_errors` above is the lifetime
+    /// total.
+    poll_errors_consecutive: AtomicU64,
     predicts: AtomicU64,
     connections: AtomicU64,
     shutdown: AtomicBool,
@@ -157,6 +181,10 @@ struct FollowerShared {
     /// suite (bounded; see [`APPLY_LOG_CAP`]).
     applied_log: Mutex<Vec<(u64, Instant)>>,
     leader: String,
+    /// This replica's own serve address, advertised on every poll so the
+    /// leader's `stats` can list its fleet (see
+    /// [`super::publish::Replication::note_follower`]).
+    self_addr: String,
     name: String,
     kind: &'static str,
     n_features: usize,
@@ -181,6 +209,30 @@ fn install(shared: &FollowerShared, version: u64, hash: u64, doc: Json, model: M
     if log.len() < APPLY_LOG_CAP {
         log.push((version, Instant::now()));
     }
+}
+
+/// Record a live publish→apply freshness span for a version this replica
+/// just installed. `pub_us` is the wall-clock instant (unix µs) the
+/// leader stamped at publication, carried on the sync payload
+/// ([`delta::wire_freshness`]); `None` means an old leader that predates
+/// the stamps — nothing is recorded, so the freshness histogram never
+/// mixes in garbage. Spans clamp at zero under clock skew; the
+/// cross-host accuracy contract (NTP-grade clocks) is spelled out in
+/// `docs/OBSERVABILITY.md`.
+fn record_freshness(version: u64, pub_us: Option<u64>, learns: Option<u64>, full: bool) {
+    let Some(m) = crate::obs::m() else { return };
+    let Some(pub_us) = pub_us else { return };
+    let span_ns = crate::obs::window::now_unix_us()
+        .saturating_sub(pub_us)
+        .saturating_mul(1_000);
+    m.repl_freshness_ns.record(span_ns);
+    m.repl_freshness_ns_window.record(span_ns);
+    m.repl_trace.record(crate::obs::ReplEvent {
+        version,
+        learns: learns.unwrap_or(0),
+        span_ns,
+        full,
+    });
 }
 
 /// Enrich a rejection error with the invariant the offending document
@@ -265,6 +317,8 @@ fn apply_sync(shared: &FollowerShared, response: &Json) -> Result<()> {
         if let Some(m) = crate::obs::m() {
             m.repl_full_resyncs.inc();
         }
+        let (pub_us, learns) = delta::wire_freshness(response);
+        record_freshness(leader_version, pub_us, learns, true);
         note_at_head(shared, learns_at_head);
         return Ok(());
     }
@@ -305,6 +359,8 @@ fn apply_sync(shared: &FollowerShared, response: &Json) -> Result<()> {
             if let Some(m) = crate::obs::m() {
                 m.repl_deltas_applied.inc();
             }
+            let (pub_us, learns) = delta::wire_freshness(d);
+            record_freshness(to, pub_us, learns, false);
             version = to;
         }
         if version == leader_version {
@@ -351,6 +407,14 @@ fn staleness_learns(shared: &FollowerShared) -> u64 {
         .saturating_sub(shared.learns_at_version.load(Ordering::Relaxed))
 }
 
+/// One failed poll round: bump the lifetime counter and the consecutive
+/// run (the latter drives `health` degradation at
+/// [`HEALTH_FAILURE_RUN`]; it resets only on a fully applied sync).
+fn note_poll_error(shared: &FollowerShared) {
+    shared.poll_errors.fetch_add(1, Ordering::Relaxed);
+    shared.poll_errors_consecutive.fetch_add(1, Ordering::Relaxed);
+}
+
 fn poll_loop(shared: Arc<FollowerShared>, options: FollowerOptions) {
     let mut client: Option<ServeClient> = None;
     let mut force_full = false;
@@ -363,7 +427,7 @@ fn poll_loop(shared: Arc<FollowerShared>, options: FollowerOptions) {
             match ServeClient::connect(shared.leader.as_str()) {
                 Ok(c) => client = Some(c),
                 Err(_) => {
-                    shared.poll_errors.fetch_add(1, Ordering::Relaxed);
+                    note_poll_error(&shared);
                     thread::sleep(options.reconnect_backoff);
                     continue;
                 }
@@ -377,16 +441,20 @@ fn poll_loop(shared: Arc<FollowerShared>, options: FollowerOptions) {
         // connected above, but a read-replica must never die on an
         // assertion — a missing client is treated like a dropped leader
         let Some(conn) = client.as_mut() else {
-            shared.poll_errors.fetch_add(1, Ordering::Relaxed);
+            note_poll_error(&shared);
             thread::sleep(options.reconnect_backoff);
             continue;
         };
-        let response = match conn.repl_sync_format(have, options.prefer_binary) {
+        let response = match conn.repl_sync_advertise(
+            have,
+            options.prefer_binary,
+            Some(shared.self_addr.as_str()),
+        ) {
             Ok(r) => r,
             Err(_) => {
                 // leader gone or mid-restart: drop the connection, keep
                 // serving the last applied version, retry with backoff
-                shared.poll_errors.fetch_add(1, Ordering::Relaxed);
+                note_poll_error(&shared);
                 client = None;
                 thread::sleep(options.reconnect_backoff);
                 continue;
@@ -394,13 +462,16 @@ fn poll_loop(shared: Arc<FollowerShared>, options: FollowerOptions) {
         };
         shared.polls.fetch_add(1, Ordering::Relaxed);
         match apply_sync(&shared, &response) {
-            Ok(()) => force_full = false,
+            Ok(()) => {
+                force_full = false;
+                shared.poll_errors_consecutive.store(0, Ordering::Relaxed);
+            }
             Err(e) => {
                 // divergence/corruption: next poll requests a full resync,
                 // and the verbatim apply error becomes the diagnosable
                 // last-resync-cause in `stats`
                 *lock_poisoned(&shared.last_resync_cause) = e.to_string();
-                shared.poll_errors.fetch_add(1, Ordering::Relaxed);
+                note_poll_error(&shared);
                 force_full = true;
                 refresh_lag_gauges(&shared);
             }
@@ -449,6 +520,9 @@ impl Follower {
         // a follower is a production serving process too: light up the
         // registry so `metrics` answers from it like on the leader
         crate::obs::enable();
+        if let Some(m) = crate::obs::m() {
+            m.process_start_seconds.set(crate::obs::window::now_unix_secs());
+        }
         let shared = Arc::new(FollowerShared {
             doc: Mutex::new((version, full.clone())),
             name: model.name(),
@@ -465,11 +539,13 @@ impl Follower {
             full_resyncs: AtomicU64::new(0),
             polls: AtomicU64::new(0),
             poll_errors: AtomicU64::new(0),
+            poll_errors_consecutive: AtomicU64::new(0),
             predicts: AtomicU64::new(0),
             connections: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
             applied_log: Mutex::new(vec![(version, Instant::now())]),
             leader: leader_addr.to_string(),
+            self_addr: addr.to_string(),
             started: Instant::now(),
         });
 
@@ -607,11 +683,43 @@ fn respond_replica(line: &str, shared: &FollowerShared) -> (Json, bool) {
                 .set("poll_errors", shared.poll_errors.load(Ordering::Relaxed))
                 .set("predicts", shared.predicts.load(Ordering::Relaxed))
                 .set("connections", shared.connections.load(Ordering::Relaxed))
-                .set("uptime_ms", shared.started.elapsed().as_millis() as u64);
+                .set("uptime_ms", shared.started.elapsed().as_millis() as u64)
+                .set("uptime_secs", shared.started.elapsed().as_secs());
+            (o, false)
+        }
+        "health" => {
+            // structured liveness: degraded when the poller has failed
+            // HEALTH_FAILURE_RUN rounds in a row (leader unreachable or
+            // every sync rejected) — the replica still serves its last
+            // applied version, but it is visibly going stale
+            let run = shared.poll_errors_consecutive.load(Ordering::Relaxed);
+            let mut reasons: Vec<String> = Vec::new();
+            if run >= HEALTH_FAILURE_RUN {
+                reasons.push(format!(
+                    "leader sync failing (poll_errors_consecutive={run})"
+                ));
+            }
+            let mut o = ok_response();
+            o.set("status", if reasons.is_empty() { "ok" } else { "degraded" })
+                .set("role", "follower")
+                .set("snapshot_version", ju64(shared.version.load(Ordering::SeqCst)))
+                .set("staleness_learns", staleness_learns(shared))
+                .set("poll_errors_consecutive", run)
+                .set("mem_bytes", current_snapshot(&shared.snapshot).mem_bytes())
+                .set("uptime_secs", shared.started.elapsed().as_secs())
+                .set("reasons", Json::Arr(reasons.into_iter().map(Json::from).collect()));
             (o, false)
         }
         "metrics" => (metrics_response(), false),
-        "trace_splits" => (trace_splits_response(), false),
+        "metrics_raw" => (metrics_raw_response(), false),
+        "trace_splits" => match parse_limit(&request) {
+            Ok(limit) => (trace_splits_response(limit), false),
+            Err(e) => (error_response(&e), false),
+        },
+        "trace_repl" => match parse_limit(&request) {
+            Ok(limit) => (trace_repl_response(limit), false),
+            Err(e) => (error_response(&e), false),
+        },
         "learn" => (
             error_response("read-only follower: send learns to the leader"),
             false,

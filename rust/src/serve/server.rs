@@ -180,7 +180,7 @@ fn stage_publish(
         Ok(mut guard) => *guard = shared.clone(),
         Err(poisoned) => *poisoned.into_inner() = shared.clone(),
     }
-    replication.stage(shared);
+    replication.stage(shared, stats.learns_applied.load(Ordering::Relaxed));
     model.mark_synced();
     note_snapshot_published(stats);
     if let Some(m) = crate::obs::m() {
@@ -275,6 +275,9 @@ impl Server {
         // serving is the production path: turn the metrics registry on so
         // every obs::m() gate in the tree/forest/persist layers goes live
         crate::obs::enable();
+        if let Some(m) = crate::obs::m() {
+            m.process_start_seconds.set(crate::obs::window::now_unix_secs());
+        }
         let listener = TcpListener::bind(bind_addr)
             .with_context(|| format!("binding {bind_addr}"))?;
         let addr = listener.local_addr().context("reading bound address")?;
@@ -520,13 +523,34 @@ pub(crate) fn metrics_response() -> Json {
     o
 }
 
-/// Answer the `trace_splits` command: the bounded ring of recent split
-/// attempts (outcome, merit gap, slots evaluated, elapsed ns) plus the
-/// lifetime attempt count. Shared by leader and follower connections.
-pub(crate) fn trace_splits_response() -> Json {
+/// Consecutive-failure run length at which `health` reports `degraded`
+/// (leader: snapshot publication failures; follower: poll errors).
+pub(crate) const HEALTH_FAILURE_RUN: u64 = 3;
+
+/// Parse the optional `limit` field of `trace_splits`/`trace_repl`
+/// requests. `None` = dump the whole ring; responders additionally cap
+/// at the ring's capacity, so `limit` can never oversize a response.
+pub(crate) fn parse_limit(request: &Json) -> Result<Option<usize>, String> {
+    match request.get("limit") {
+        None => Ok(None),
+        Some(j) => match j.as_f64() {
+            Some(v) if v >= 0.0 && v == v.trunc() && v <= u32::MAX as f64 => {
+                Ok(Some(v as usize))
+            }
+            _ => Err("\"limit\" must be a non-negative integer".to_string()),
+        },
+    }
+}
+
+/// Answer the `trace_splits` command: up to `limit` recent split
+/// attempts (outcome, merit gap, slots evaluated, elapsed ns),
+/// **newest first**, plus the lifetime attempt count. Shared by leader
+/// and follower connections.
+pub(crate) fn trace_splits_response(limit: Option<usize>) -> Json {
     let ring = &crate::obs::global().split_trace;
+    let take = limit.unwrap_or(ring.capacity()).min(ring.capacity());
     let events: Vec<Json> = ring
-        .events()
+        .recent(take)
         .into_iter()
         .map(|e| {
             let mut o = Json::obj();
@@ -541,6 +565,46 @@ pub(crate) fn trace_splits_response() -> Json {
     o.set("total", ring.total())
         .set("capacity", ring.capacity())
         .set("events", Json::Arr(events));
+    o
+}
+
+/// Answer the `trace_repl` command: up to `limit` recently applied
+/// replication versions (version, cumulative leader learns covered,
+/// live publish→apply span, full-resync flag), **newest first** — the
+/// per-event view behind `qostream_repl_freshness_seconds`. Events are
+/// recorded by follower apply ([`super::replicate`]); a leader answers
+/// with an empty ring. Shared by both roles so fleet tooling can probe
+/// either end with one command.
+pub(crate) fn trace_repl_response(limit: Option<usize>) -> Json {
+    let ring = &crate::obs::global().repl_trace;
+    let take = limit.unwrap_or(ring.capacity()).min(ring.capacity());
+    let events: Vec<Json> = ring
+        .recent(take)
+        .into_iter()
+        .map(|e| {
+            let mut o = Json::obj();
+            o.set("version", ju64(e.version))
+                .set("learns", ju64(e.learns))
+                .set("span_ns", e.span_ns)
+                .set("full", e.full);
+            o
+        })
+        .collect();
+    let mut o = ok_response();
+    o.set("total", ring.total())
+        .set("capacity", ring.capacity())
+        .set("events", Json::Arr(events));
+    o
+}
+
+/// Answer the `metrics_raw` command: the registry as an exactly
+/// mergeable [`crate::obs::RegistrySnapshot`] JSON document — what the
+/// fleet aggregator consumes (rendered quantiles cannot be merged; raw
+/// buckets can, exactly). Shared by leader and follower connections.
+pub(crate) fn metrics_raw_response() -> Json {
+    let snap = crate::obs::RegistrySnapshot::capture(crate::obs::global());
+    let mut o = ok_response();
+    o.set("snapshot", snap.to_json());
     o
 }
 
@@ -602,6 +666,7 @@ fn respond(
                 // enqueue latency: includes the backpressure wait, which is
                 // exactly what a saturated trainer looks like to clients
                 m.serve_learn_ns.record(t.elapsed().as_nanos() as u64);
+                m.serve_learn_window.add(1);
             }
             (ok_response(), false)
         }
@@ -616,7 +681,10 @@ fn respond(
             let mut o = ok_response();
             o.set("prediction", model.predict(&x));
             if let (Some(m), Some(t)) = (crate::obs::m(), started) {
-                m.serve_predict_ns.record(t.elapsed().as_nanos() as u64);
+                let ns = t.elapsed().as_nanos() as u64;
+                m.serve_predict_ns.record(ns);
+                m.serve_predict_window.add(1);
+                m.serve_predict_ns_window.record(ns);
             }
             (o, false)
         }
@@ -635,6 +703,9 @@ fn respond(
             // the trainer swaps mid-request
             let model = current_snapshot(snapshot);
             stats.predicts.fetch_add(batch.len() as u64, Ordering::Relaxed);
+            if let Some(m) = crate::obs::m() {
+                m.serve_predict_window.add(batch.len() as u64);
+            }
             let predictions: Vec<f64> = batch.iter().map(|x| model.predict(x)).collect();
             let mut o = ok_response();
             o.set("predictions", predictions);
@@ -668,6 +739,11 @@ fn respond(
                 },
             };
             let binary = request.get("format").and_then(Json::as_str) == Some("binary");
+            // a polling follower may advertise its own serve address so
+            // fleet tooling can discover the whole fleet from the leader
+            if let Some(addr) = request.get("addr").and_then(Json::as_str) {
+                replication.note_follower(addr);
+            }
             let payload = match replication.materialize() {
                 Ok(log) => log.sync_payload(have),
                 Err(e) => {
@@ -722,11 +798,49 @@ fn respond(
                 .set("snapshot_age_learns", applied.saturating_sub(at_snapshot))
                 .set("mem_bytes", current_snapshot(snapshot).mem_bytes())
                 .set("connections", stats.connections.load(Ordering::Relaxed))
-                .set("uptime_ms", info.started.elapsed().as_millis() as u64);
+                .set("uptime_ms", info.started.elapsed().as_millis() as u64)
+                .set("uptime_secs", info.started.elapsed().as_secs())
+                .set(
+                    "followers",
+                    Json::Arr(replication.followers().into_iter().map(Json::from).collect()),
+                );
+            (o, false)
+        }
+        "health" => {
+            // structured ok/degraded verdict a load-balancer can eject on
+            let applied = stats.learns_applied.load(Ordering::Relaxed);
+            let at_snapshot = stats.learns_at_snapshot.load(Ordering::Relaxed);
+            let run = stats.snapshot_failures_consecutive.load(Ordering::Relaxed);
+            let mut reasons = Vec::new();
+            if run >= HEALTH_FAILURE_RUN {
+                reasons.push(format!(
+                    "snapshot publication failing (snapshot_failures_consecutive={run})"
+                ));
+            }
+            let mut o = ok_response();
+            o.set("status", if reasons.is_empty() { "ok" } else { "degraded" })
+                .set("role", "leader")
+                .set(
+                    "snapshot_version",
+                    ju64(stats.snapshot_version.load(Ordering::Relaxed)),
+                )
+                .set("staleness_learns", applied.saturating_sub(at_snapshot))
+                .set("snapshot_failures_consecutive", run)
+                .set("mem_bytes", current_snapshot(snapshot).mem_bytes())
+                .set("uptime_secs", info.started.elapsed().as_secs())
+                .set("reasons", Json::Arr(reasons.into_iter().map(Json::from).collect()));
             (o, false)
         }
         "metrics" => (metrics_response(), false),
-        "trace_splits" => (trace_splits_response(), false),
+        "metrics_raw" => (metrics_raw_response(), false),
+        "trace_splits" => match parse_limit(&request) {
+            Ok(limit) => (trace_splits_response(limit), false),
+            Err(e) => (error_response(&e), false),
+        },
+        "trace_repl" => match parse_limit(&request) {
+            Ok(limit) => (trace_repl_response(limit), false),
+            Err(e) => (error_response(&e), false),
+        },
         "shutdown" => (ok_response(), true),
         other => (error_response(&format!("unknown cmd {other:?}")), false),
     }

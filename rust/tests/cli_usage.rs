@@ -53,6 +53,8 @@ fn malformed_enum_flag_prints_usage_and_exits_nonzero() {
         vec!["protocol", "--profile", "ultra"],
         vec!["serve", "--bench", "--instances", "nope"],
         vec!["checkpoint"], // neither --out nor --load
+        vec!["fleet"],      // no --targets
+        vec!["fleet", "--targets", " , "], // targets parse to an empty list
     ] {
         let out = qostream(&args);
         assert!(!out.status.success(), "{args:?} must exit nonzero");

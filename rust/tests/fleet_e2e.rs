@@ -1,0 +1,211 @@
+//! End-to-end fleet-observability tests over real sockets: a leader's
+//! `stats.followers` seeds auto-discovery, `scrape_fleet` reads every
+//! node's `health` + `metrics_raw`, and the aggregator's merged
+//! registry is **bit-exact equal** to merging the per-node snapshots
+//! locally (the acceptance contract — quantiles come from summed
+//! buckets, never from averaged quantiles). Also drives the
+//! `serve_scrapes` HTTP endpoint end to end.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use qostream::forest::{ArfOptions, ArfRegressor};
+use qostream::obs::RegistrySnapshot;
+use qostream::observer::{factory, QuantizationObserver, RadiusPolicy};
+use qostream::persist::Model;
+use qostream::serve::{fleet, Follower, FollowerOptions, ServeClient, ServeOptions, Server};
+use qostream::stream::{Friedman1, Stream};
+
+fn qo_factory() -> Box<dyn qostream::observer::ObserverFactory> {
+    factory("QO_s2", || {
+        Box::new(QuantizationObserver::new(RadiusPolicy::std_fraction(2.0)))
+    })
+}
+
+fn arf_model(members: usize, seed: u64) -> Model {
+    Model::Arf(ArfRegressor::new(
+        10,
+        ArfOptions { n_members: members, lambda: 3.0, seed, ..Default::default() },
+        qo_factory(),
+    ))
+}
+
+/// Block until the follower reaches `version` (bounded).
+fn wait_version(follower: &Follower, version: u64) {
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    while follower.version() < version {
+        assert!(
+            std::time::Instant::now() < deadline,
+            "follower stuck at v{} waiting for v{version}",
+            follower.version()
+        );
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// The tentpole end to end: seed `discover` with only the leader, find
+/// the whole fleet through its `stats.followers`, scrape every node,
+/// and prove the aggregator's merged registry equals a local merge of
+/// the very snapshots it scraped — bit-exact, by `PartialEq` on the
+/// decoded bucket arrays.
+#[test]
+fn discovery_scrape_and_exact_merge() {
+    let server = Server::start(
+        arf_model(2, 31),
+        "127.0.0.1:0",
+        ServeOptions { snapshot_every: 0, ..Default::default() },
+    )
+    .expect("leader");
+    let leader_addr = server.addr().to_string();
+    let start_follower = || {
+        Follower::start(
+            &leader_addr,
+            "127.0.0.1:0",
+            FollowerOptions { poll_interval: Duration::from_millis(3), ..Default::default() },
+        )
+        .expect("follower")
+    };
+    let follower_a = start_follower();
+    let follower_b = start_follower();
+
+    let mut client = ServeClient::connect(server.addr()).expect("leader client");
+    let mut stream = Friedman1::new(29, 1.0);
+    for round in 1..=3u64 {
+        for _ in 0..150 {
+            let inst = stream.next_instance().unwrap();
+            client.learn(&inst.x, inst.y).expect("learn");
+        }
+        client.snapshot().expect("publish");
+        wait_version(&follower_a, round);
+        wait_version(&follower_b, round);
+    }
+
+    // discovery: the leader seed expands to the full fleet, seed first
+    let targets = fleet::discover(&[leader_addr.clone()]);
+    assert_eq!(targets.len(), 3, "leader + 2 advertised followers: {targets:?}");
+    assert_eq!(targets[0], leader_addr, "seeds stay first: {targets:?}");
+    for addr in [follower_a.addr().to_string(), follower_b.addr().to_string()] {
+        assert!(targets.contains(&addr), "{addr} not discovered: {targets:?}");
+    }
+
+    let scrape = fleet::scrape_fleet(&targets);
+    assert_eq!(scrape.nodes.len(), 3);
+    assert_eq!(scrape.merge_skipped, 0, "same-version fleet must merge fully");
+    for node in &scrape.nodes {
+        assert!(node.up, "{} must be reachable", node.addr);
+        assert_eq!(node.status, "ok", "{}: {:?}", node.addr, node.status);
+        assert_eq!(node.snapshot_version, 3, "{} at the head", node.addr);
+    }
+    assert_eq!(scrape.nodes.iter().filter(|n| n.role == "leader").count(), 1);
+    assert_eq!(scrape.nodes.iter().filter(|n| n.role == "follower").count(), 2);
+
+    // the acceptance contract: merging the scraped per-node snapshots
+    // locally reproduces the aggregator's merged registry bit-exactly
+    let mut local: Option<RegistrySnapshot> = None;
+    for node in &scrape.nodes {
+        let snap = node.snapshot.as_ref().expect("up node carries a snapshot");
+        local = Some(match local.take() {
+            None => snap.clone(),
+            Some(acc) => acc.merge(snap).expect("uniform fleet must merge"),
+        });
+    }
+    let local = local.expect("three snapshots");
+    assert_eq!(scrape.merged.as_ref(), Some(&local), "merge must be deterministic");
+
+    // ... and the merged freshness histogram is the exact bucketwise sum
+    // of its inputs (never an average of quantiles)
+    let fam = "qostream_repl_freshness_seconds";
+    let merged_hist = local.summary_hist(fam).expect("freshness family");
+    for bucket in 0..merged_hist.counts.len() {
+        let summed: u64 = scrape
+            .nodes
+            .iter()
+            .filter_map(|n| n.snapshot.as_ref()?.summary_hist(fam))
+            .map(|h| h.counts[bucket])
+            .sum();
+        assert_eq!(merged_hist.counts[bucket], summed, "bucket {bucket} drifted");
+    }
+    assert!(merged_hist.count >= 6, "2 followers x 3 versions applied: {merged_hist:?}");
+
+    // per-node derived views: every follower has live freshness
+    for node in scrape.nodes.iter().filter(|n| n.role == "follower") {
+        let p99 = node.freshness_p99_secs().expect("follower freshness");
+        assert!(p99 > 0.0, "{}: p99 {p99}", node.addr);
+    }
+
+    // rendered fleet exposition: totals, one labeled row per node, and
+    // the merged families beside them
+    let text = scrape.exposition();
+    assert!(text.contains("qostream_fleet_nodes 3\n"), "{text}");
+    assert!(text.contains("qostream_fleet_nodes_up 3\n"), "{text}");
+    for node in &scrape.nodes {
+        let row = format!(
+            "qostream_node_up{{node=\"{}\",role=\"{}\"}} 1\n",
+            node.addr, node.role
+        );
+        assert!(text.contains(&row), "missing {row:?} in:\n{text}");
+    }
+    assert!(text.contains("qostream_tree_learns_total"), "{text}");
+    assert!(text.contains("qostream_node_freshness_p99_seconds"), "{text}");
+
+    // dashboard: one row per node plus the fleet footer
+    let dash = scrape.dashboard();
+    for node in &scrape.nodes {
+        assert!(dash.contains(&node.addr), "dashboard missing {}:\n{dash}", node.addr);
+    }
+    assert!(dash.contains("nodes: 3  up: 3"), "{dash}");
+
+    let mut client_a = ServeClient::connect(follower_a.addr()).expect("follower a");
+    client_a.shutdown().expect("follower a shutdown");
+    follower_a.join().expect("follower a exit");
+    let mut client_b = ServeClient::connect(follower_b.addr()).expect("follower b");
+    client_b.shutdown().expect("follower b shutdown");
+    follower_b.join().expect("follower b exit");
+    client.shutdown().expect("leader shutdown");
+    server.join().expect("leader exit");
+}
+
+/// `qostream fleet --listen` end to end: the HTTP endpoint re-discovers
+/// and re-scrapes per request and answers a plain Prometheus text page
+/// a scraper can parse with nothing but content-length.
+#[test]
+fn http_endpoint_serves_the_fleet_exposition() {
+    let server = Server::start(
+        arf_model(2, 37),
+        "127.0.0.1:0",
+        ServeOptions { snapshot_every: 0, ..Default::default() },
+    )
+    .expect("leader");
+    let leader_addr = server.addr().to_string();
+    let mut client = ServeClient::connect(server.addr()).expect("leader client");
+    let mut stream = Friedman1::new(41, 1.0);
+    for _ in 0..100 {
+        let inst = stream.next_instance().unwrap();
+        client.learn(&inst.x, inst.y).expect("learn");
+    }
+    client.snapshot().expect("publish");
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind scrape endpoint");
+    let endpoint = listener.local_addr().expect("endpoint addr");
+    let seeds = vec![leader_addr.clone()];
+    // serve_scrapes loops forever; the thread dies with the test process
+    std::thread::spawn(move || fleet::serve_scrapes(listener, seeds, true));
+
+    for _ in 0..2 {
+        // two rounds: the endpoint must answer repeated scrapes
+        let mut conn = TcpStream::connect(endpoint).expect("connect scraper");
+        conn.write_all(b"GET /metrics HTTP/1.1\r\nHost: fleet\r\n\r\n")
+            .expect("send request");
+        let body = fleet::read_http_body(conn).expect("parse http response");
+        assert!(body.contains("qostream_fleet_nodes 1\n"), "{body}");
+        assert!(body.contains("qostream_fleet_nodes_up 1\n"), "{body}");
+        let row = format!("qostream_node_up{{node=\"{leader_addr}\",role=\"leader\"}} 1\n");
+        assert!(body.contains(&row), "missing {row:?} in:\n{body}");
+        assert!(body.contains("# HELP qostream_fleet_nodes "), "{body}");
+        assert!(body.contains("qostream_tree_learns_total"), "{body}");
+    }
+
+    client.shutdown().expect("leader shutdown");
+    server.join().expect("leader exit");
+}

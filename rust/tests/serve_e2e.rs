@@ -419,3 +419,76 @@ fn metrics_and_trace_splits_round_trip() {
     client.shutdown().expect("shutdown");
     server.join().expect("clean exit");
 }
+
+/// Fleet-observability satellites on the leader role, over a real
+/// socket: structured `health` (ok verdict, role, uptime), `# HELP`
+/// lines golden against the shared metric catalog, and `trace_splits`
+/// honoring `limit` with newest-first ordering (the limited dump is an
+/// exact prefix of the full newest-first dump).
+#[test]
+fn health_help_lines_and_trace_limit_round_trip() {
+    use qostream::common::json::Json;
+
+    let server = Server::start(tree_model(), "127.0.0.1:0", ServeOptions::default())
+        .expect("server must start");
+    let mut client = ServeClient::connect(server.addr()).expect("connect");
+    let mut stream = Friedman1::new(33, 1.0);
+    for _ in 0..900 {
+        let inst = stream.next_instance().unwrap();
+        client.learn(&inst.x, inst.y).expect("learn ack");
+    }
+    client.snapshot().expect("snapshot");
+
+    // health: a freshly trained leader reports ok, its role, and uptime
+    let health = client.health().expect("health");
+    let text =
+        |j: &Json, key: &str| j.get(key).and_then(Json::as_str).unwrap_or("?").to_string();
+    let num = |j: &Json, key: &str| j.get(key).and_then(Json::as_f64).unwrap_or(-1.0);
+    assert_eq!(text(&health, "status"), "ok", "{health:?}");
+    assert_eq!(text(&health, "role"), "leader", "{health:?}");
+    assert!(num(&health, "uptime_secs") >= 0.0, "{health:?}");
+    assert!(num(&health, "mem_bytes") > 0.0, "{health:?}");
+    assert!(num(&health, "snapshot_failures_consecutive") == 0.0, "{health:?}");
+    let version = health
+        .get("snapshot_version")
+        .and_then(|v| qostream::persist::codec::pu64(v, "snapshot_version").ok())
+        .expect("snapshot_version must be a ju64");
+    assert!(version >= 1, "{health:?}");
+    let reasons = health.get("reasons").and_then(Json::as_arr).expect("reasons array");
+    assert!(reasons.is_empty(), "healthy leader must list no reasons: {health:?}");
+
+    // every `# TYPE` family in the exposition carries a `# HELP` line
+    // whose text comes verbatim from the shared obs::CATALOG table
+    let metrics = client.metrics().expect("metrics");
+    let mut families = 0;
+    for line in metrics.lines().filter(|l| l.starts_with("# TYPE ")) {
+        let name = line.split_whitespace().nth(2).expect("family name on TYPE line");
+        let desc = qostream::obs::describe(name)
+            .unwrap_or_else(|| panic!("{name} rendered but missing from obs::CATALOG"));
+        let golden = format!("# HELP {} {}", desc.name, desc.help);
+        assert!(
+            metrics.lines().any(|l| l == golden),
+            "exposition HELP for {name} must match the catalog: {golden:?}"
+        );
+        families += 1;
+    }
+    assert!(families >= 15, "exposition must cover >= 15 families, got {families}");
+
+    // trace_splits limit: the dump shrinks to the requested count while
+    // `total` keeps reporting lifetime attempts. (Newest-first ordering
+    // is asserted against identifiable version stamps in
+    // replicate_e2e's trace_repl test — the split ring is process-global
+    // and concurrent tests append to it, so order is not stable here.)
+    let full = client.trace_splits().expect("trace_splits");
+    let limited = client.trace_splits_limit(Some(3)).expect("trace_splits limit");
+    let events = |j: &Json| j.get("events").and_then(Json::as_arr).unwrap_or(&[]).to_vec();
+    assert!(events(&full).len() >= 3, "900 learns must log >= 3 attempts: {full:?}");
+    assert_eq!(events(&limited).len(), 3, "{limited:?}");
+    assert!(num(&limited, "total") >= 3.0, "total ignores the limit: {limited:?}");
+    // a zero limit is honored, not treated as "unlimited"
+    let none = client.trace_splits_limit(Some(0)).expect("trace_splits 0");
+    assert!(events(&none).is_empty(), "{none:?}");
+
+    client.shutdown().expect("shutdown");
+    server.join().expect("clean exit");
+}
