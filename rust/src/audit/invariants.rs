@@ -71,6 +71,11 @@ pub const BIN_ENVELOPE: &str = "BIN_ENVELOPE";
 /// Binary checkpoint trailer: end magic present and a trailer payload
 /// hash that matches the payload bytes (truncation/bit-rot guard).
 pub const BIN_TRAILER: &str = "BIN_TRAILER";
+/// Governed checkpoints: the envelope's own memory claim
+/// (`mem_budget`/`mem_bytes`, stamped by [`crate::govern`]) must be
+/// parseable and must respect the budget it advertises — a file that
+/// claims a budget it exceeds convicts itself (docs/MEMORY.md).
+pub const GOVERN_BUDGET: &str = "GOVERN_BUDGET";
 
 /// E-BST "no child" sentinel (`u32::MAX`, mirrored from the arena).
 const EBST_NONE: u64 = u32::MAX as u64;
@@ -154,6 +159,20 @@ pub fn verify_checkpoint(doc: &Json) -> Vec<Finding> {
             format!("expected version {VERSION}, got {v}"),
         )),
         None => out.push(Finding::new(CKPT_ENVELOPE, "version", "missing or non-u64 version")),
+    }
+    // governed envelopes carry their own budget claim; hold the file to it
+    match crate::govern::governed_claim(doc) {
+        Ok(None) => {}
+        Ok(Some((budget, claimed))) => {
+            if budget > 0 && claimed > budget {
+                out.push(Finding::new(
+                    GOVERN_BUDGET,
+                    "mem_bytes",
+                    format!("checkpoint claims {claimed} B under a {budget} B budget"),
+                ));
+            }
+        }
+        Err(e) => out.push(Finding::new(GOVERN_BUDGET, "mem_budget", format!("{e}"))),
     }
     let Some(model) = doc.get("model") else {
         out.push(Finding::new(CKPT_ENVELOPE, "model", "missing model payload"));
@@ -1529,6 +1548,23 @@ mod tests {
         corrupt.set("kind", "mystery");
         let env = encode_doc(&corrupt);
         assert!(verify_binary(&env).iter().any(|f| f.rule == CKPT_ENVELOPE));
+    }
+
+    #[test]
+    fn governed_budget_claims_are_checked() {
+        let model = trained_model(1500);
+        let mut doc = model.to_checkpoint().unwrap();
+        assert!(verify_checkpoint(&doc).is_empty());
+        // honest claim: footprint comfortably inside the budget
+        crate::govern::stamp_governed(&mut doc, model.mem_bytes() * 2, model.mem_bytes());
+        let findings = verify_checkpoint(&doc);
+        assert!(findings.is_empty(), "honest claim flagged: {findings:?}");
+        // over-budget claim: the file convicts itself
+        crate::govern::stamp_governed(&mut doc, 1, model.mem_bytes());
+        assert!(verify_checkpoint(&doc).iter().any(|f| f.rule == GOVERN_BUDGET));
+        // unparseable claim: a forged stamp is a finding, not a pass
+        doc.set(crate::govern::CLAIM_KEY, "not-a-number");
+        assert!(verify_checkpoint(&doc).iter().any(|f| f.rule == GOVERN_BUDGET));
     }
 
     #[test]

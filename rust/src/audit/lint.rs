@@ -12,6 +12,11 @@
 //!   `obs/mod.rs` outside the allow-listed cold-path functions. The
 //!   instrumentation contract (PR 6's ≤5% `obs_overhead_ratio` gate)
 //!   rests on every recording site being relaxed atomics only.
+//! * [`LINT_GOVERN_HOT_PATH`] — no allocation or locking in the
+//!   per-learn budget check of `govern/mod.rs` (`Governor::over_budget`
+//!   and its Copy accessors). The governance contract (docs/MEMORY.md)
+//!   is that deciding *whether* to govern costs one integer compare;
+//!   only the triggered escalation (`enforce`) may allocate.
 //! * [`LINT_OBSERVER_SPEC`] — every observer kind registered with
 //!   [`crate::observer::ObserverSpec`] implements `mem_bytes` +
 //!   `to_json` in its `AttributeObserver` impl and `from_json` in its
@@ -37,6 +42,8 @@ use super::Finding;
 pub const LINT_UNWRAP_CONN: &str = "LINT_UNWRAP_CONN";
 /// No allocation/locking in the obs hot path outside the allow-list.
 pub const LINT_OBS_HOT_PATH: &str = "LINT_OBS_HOT_PATH";
+/// No allocation/locking in the per-learn governance budget check.
+pub const LINT_GOVERN_HOT_PATH: &str = "LINT_GOVERN_HOT_PATH";
 /// Every ObserverSpec kind is fully checkpointable and accounted.
 pub const LINT_OBSERVER_SPEC: &str = "LINT_OBSERVER_SPEC";
 /// `#![forbid(unsafe_code)]` in every crate root.
@@ -119,6 +126,7 @@ pub fn run(repo_root: &Path) -> io::Result<Vec<Finding>> {
     let mut out = Vec::new();
     lint_unwrap_conn(repo_root, &mut out)?;
     lint_obs_hot_path(repo_root, &mut out)?;
+    lint_govern_hot_path(repo_root, &mut out)?;
     lint_observer_spec(repo_root, &mut out)?;
     lint_forbid_unsafe(repo_root, &mut out)?;
     lint_module_docs(repo_root, &mut out)?;
@@ -311,6 +319,80 @@ fn lint_obs_hot_path(repo_root: &Path, out: &mut Vec<Finding>) -> io::Result<()>
                     ),
                 ));
             }
+        }
+    }
+    Ok(())
+}
+
+/// Functions in `govern/mod.rs` on the per-learn path: consulted before
+/// every budget decision, so they must never allocate or lock. Tracked
+/// by name so a rename cannot silently retire the rule.
+const GOVERN_HOT_FNS: &[&str] =
+    &["Governor::new", "Governor::budget", "Governor::enabled", "Governor::over_budget"];
+
+fn lint_govern_hot_path(repo_root: &Path, out: &mut Vec<Finding>) -> io::Result<()> {
+    let rel = "rust/src/govern/mod.rs";
+    let Some(text) = read(repo_root, rel)? else {
+        out.push(Finding::at_line(LINT_GOVERN_HOT_PATH, rel, 1, "govern/mod.rs missing"));
+        return Ok(());
+    };
+    let lines: Vec<&str> = text.lines().collect();
+    let end = tests_start(&lines);
+    let mut current_impl: Option<String> = None;
+    let mut current_fn: Option<String> = None;
+    let mut seen: std::collections::BTreeSet<&str> = std::collections::BTreeSet::new();
+    for (i, line) in lines[..end].iter().enumerate() {
+        // same rustfmt-shaped context tracking as the obs hot-path rule
+        if !line.starts_with(' ') {
+            if line.starts_with("impl") {
+                current_impl = impl_target(line);
+                current_fn = None;
+            } else if line.starts_with('}') {
+                current_impl = None;
+                current_fn = None;
+            } else if let Some(name) = fn_name(line) {
+                current_impl = None;
+                current_fn = Some(name);
+            }
+        } else if line.starts_with("    ") && !line.starts_with("     ") {
+            if let Some(name) = fn_name(line) {
+                current_fn = Some(match &current_impl {
+                    Some(ty) => format!("{ty}::{name}"),
+                    None => name,
+                });
+            }
+        }
+        if is_comment_only(line) || allowed(line, "govern-hot-path") {
+            continue;
+        }
+        let qualified = current_fn.as_deref().unwrap_or("");
+        let Some(hot) = GOVERN_HOT_FNS.iter().copied().find(|f| *f == qualified) else {
+            continue;
+        };
+        seen.insert(hot);
+        let code = code_part(line);
+        for token in HOT_PATH_TOKENS {
+            if code.contains(token) {
+                out.push(Finding::at_line(
+                    LINT_GOVERN_HOT_PATH,
+                    rel,
+                    i + 1,
+                    format!(
+                        "{token:?} in {qualified} — the per-learn budget check must stay \
+                         one integer compare; only the triggered escalation may allocate"
+                    ),
+                ));
+            }
+        }
+    }
+    for hot in GOVERN_HOT_FNS.iter().copied() {
+        if !seen.contains(hot) {
+            out.push(Finding::at_line(
+                LINT_GOVERN_HOT_PATH,
+                rel,
+                1,
+                format!("hot-path function {hot} not found (renamed without updating the lint?)"),
+            ));
         }
     }
     Ok(())

@@ -328,6 +328,127 @@ pub fn snapshot_cost_scenario(
     })
 }
 
+/// Memory-budget scenario behind the `mem_budget_rmse_ratio` /
+/// `mem_budget_peak_ratio` smoke metrics: two identical ARF forests on
+/// the same drifting Friedman #1 stream — one unbounded, one governed
+/// between "publishes" exactly the way the serve trainer does
+/// ([`crate::govern`], docs/MEMORY.md) — with prequential RMSE scored
+/// over the post-warmup window.
+#[derive(Clone, Copy, Debug)]
+pub struct MemBudgetResult {
+    pub instances: usize,
+    /// The byte budget the governed run was held to (derived: a fixed
+    /// fraction of the unbounded run's final footprint, so the scenario
+    /// stays meaningful as the model's baseline size drifts).
+    pub budget_bytes: usize,
+    pub unbounded_rmse: f64,
+    pub governed_rmse: f64,
+    /// `governed_rmse / unbounded_rmse` — the ≤ 1.10 acceptance bound.
+    pub rmse_ratio: f64,
+    /// Peak governed `mem_bytes()` at publish boundaries — the only
+    /// states snapshots, replication and audit can ever observe.
+    pub governed_peak_bytes: usize,
+    pub unbounded_final_bytes: usize,
+    /// `governed_peak_bytes / budget_bytes` — ≤ 1.0 proves enforcement.
+    pub peak_ratio: f64,
+    pub compactions: u64,
+    pub evictions: u64,
+    pub prunes: u64,
+}
+
+/// Run the budget comparison: `instances` learns, an abrupt concept
+/// drift at the midpoint, governance enforced every `enforce_every`
+/// learns (the publish cadence). The budget is 7/10 of the unbounded
+/// final footprint — deep enough that governance must act, shallow
+/// enough that the exact slot compactions (paper Sec. 3 mergeability)
+/// carry most of it.
+pub fn mem_budget_scenario(
+    instances: usize,
+    members: usize,
+    enforce_every: usize,
+    seed: u64,
+) -> Result<MemBudgetResult> {
+    let drift_at = instances / 2;
+    let stream = || -> Box<dyn Stream> {
+        Box::new(crate::stream::AbruptDrift::new(
+            Box::new(Friedman1::new(seed, 1.0)),
+            Box::new(Friedman1::swapped(seed.wrapping_add(1), 1.0)),
+            drift_at,
+        ))
+    };
+    let forest = || {
+        Model::Arf(ArfRegressor::new(
+            10,
+            ArfOptions { n_members: members, lambda: 6.0, seed, ..Default::default() },
+            qo_factory(),
+        ))
+    };
+    let skip = instances / 10; // prequential warmup excluded from RMSE
+
+    // pass 1: the unbounded reference
+    let mut unbounded = forest();
+    let mut s = stream();
+    let mut err = 0.0;
+    let mut scored = 0usize;
+    for i in 0..instances {
+        let inst = s.next_instance().expect("endless stream");
+        if i >= skip {
+            let e = inst.y - unbounded.predict(&inst.x);
+            err += e * e;
+            scored += 1;
+        }
+        unbounded.learn_one(&inst.x, inst.y);
+    }
+    let unbounded_rmse = (err / scored.max(1) as f64).sqrt();
+    let unbounded_final_bytes = unbounded.mem_bytes();
+
+    // pass 2: same forest, same stream, governed at the publish cadence
+    let budget_bytes = unbounded_final_bytes * 7 / 10;
+    let governor = crate::govern::Governor::new(budget_bytes);
+    let mut governed = forest();
+    let mut s = stream();
+    let mut err = 0.0;
+    let mut peak = 0usize;
+    let (mut compactions, mut evictions, mut prunes) = (0u64, 0u64, 0u64);
+    let enforce_every = enforce_every.max(1);
+    for i in 0..instances {
+        let inst = s.next_instance().expect("endless stream");
+        if i >= skip {
+            let e = inst.y - governed.predict(&inst.x);
+            err += e * e;
+        }
+        governed.learn_one(&inst.x, inst.y);
+        if (i + 1) % enforce_every == 0 || i + 1 == instances {
+            let report = governor.enforce(&mut governed);
+            if !report.within_budget {
+                return Err(anyhow!(
+                    "budget {budget_bytes} B below the structural floor \
+                     ({} B after the full ladder)",
+                    report.end_bytes
+                ));
+            }
+            compactions += report.compactions;
+            evictions += report.evictions;
+            prunes += report.prunes;
+            peak = peak.max(report.end_bytes);
+        }
+    }
+    let governed_rmse = (err / scored.max(1) as f64).sqrt();
+    Ok(MemBudgetResult {
+        instances,
+        budget_bytes,
+        unbounded_rmse,
+        governed_rmse,
+        rmse_ratio: governed_rmse / unbounded_rmse.max(1e-12),
+        governed_peak_bytes: peak,
+        unbounded_final_bytes,
+        peak_ratio: peak as f64 / budget_bytes.max(1) as f64,
+        compactions,
+        evictions,
+        prunes,
+    })
+}
+
 /// Instrumentation-overhead scenario behind the `obs_overhead_ratio`
 /// smoke metric: train identical QO trees on identical streams with the
 /// [`crate::obs`] registry disabled and enabled, interleaved, and score
@@ -661,6 +782,7 @@ pub fn run_smoke(seed: u64) -> Result<Json> {
     let delta = delta_size_scenario(8000, 600, 5, seed)?;
     let overhead = obs_overhead_scenario(4000, 5, seed);
     let snapshot = snapshot_cost_scenario(6000, 40, 25, seed)?;
+    let mem_budget = mem_budget_scenario(6000, 3, 250, seed)?;
     let replication = run_replication(&ReplicationBenchConfig {
         instances: 800,
         members: 2,
@@ -689,6 +811,11 @@ pub fn run_smoke(seed: u64) -> Result<Json> {
         .set("snapshot_speedup_p50", snapshot.speedup_p50)
         .set("binary_checkpoint_bytes", snapshot.binary_bytes)
         .set("binary_bytes_ratio", snapshot.bytes_ratio)
+        .set("mem_budget_rmse_ratio", mem_budget.rmse_ratio)
+        .set("mem_budget_peak_ratio", mem_budget.peak_ratio)
+        .set("mem_budget_bytes", mem_budget.budget_bytes)
+        .set("mem_budget_governed_rmse", mem_budget.governed_rmse)
+        .set("mem_budget_unbounded_rmse", mem_budget.unbounded_rmse)
         .set("freshness_p99_s", replication.freshness_p99_s)
         .set("freshness_p50_s", replication.freshness_p50_s)
         .set("freshness_samples", replication.freshness_samples);
@@ -783,6 +910,33 @@ pub fn gate(current: &Json, baseline: &Json) -> Vec<String> {
         Some(_) => {}
         None => violations.push(
             "binary_bytes_ratio missing from the current run (1.1x floor unchecked)".into(),
+        ),
+    }
+    // memory governance has absolute functional ceilings, independent of
+    // the baseline's values: a budgeted forest must stay within 10% of
+    // unbounded RMSE, and no published state may ever exceed its budget
+    match metric(current, "mem_budget_rmse_ratio") {
+        Some(ratio) if ratio > 1.10 => violations.push(format!(
+            "mem_budget_rmse_ratio {ratio:.3} above the 1.10 ceiling (budgeted \
+             forest must stay within 10% of unbounded RMSE)"
+        )),
+        Some(_) => {}
+        None => violations.push(
+            "mem_budget_rmse_ratio missing from the current run (10% budget-accuracy \
+             ceiling unchecked)"
+                .into(),
+        ),
+    }
+    match metric(current, "mem_budget_peak_ratio") {
+        Some(ratio) if ratio > 1.0 => violations.push(format!(
+            "mem_budget_peak_ratio {ratio:.3} above 1.0 (published state exceeded \
+             its memory budget)"
+        )),
+        Some(_) => {}
+        None => violations.push(
+            "mem_budget_peak_ratio missing from the current run (budget enforcement \
+             unchecked)"
+                .into(),
         ),
     }
     // live replication freshness is poll-interval-dominated and its log2
@@ -897,6 +1051,25 @@ pub fn generate(cfg: &ServeBenchConfig) -> Result<String> {
         snapshot.bytes_ratio
     ));
 
+    let mem_budget = mem_budget_scenario(6000, 3, 250, cfg.seed)?;
+    out.push_str(&format!(
+        "memory governance ({} learns, drift at the midpoint, enforce every 250):\n  \
+         budget {} B (7/10 of unbounded {} B), peak governed {} B -> ratio {:.3}\n  \
+         RMSE governed {:.4} vs unbounded {:.4} -> ratio {:.3} (contract: <= 1.10)\n  \
+         ladder: {} compactions, {} evictions, {} prunes\n",
+        mem_budget.instances,
+        mem_budget.budget_bytes,
+        mem_budget.unbounded_final_bytes,
+        mem_budget.governed_peak_bytes,
+        mem_budget.peak_ratio,
+        mem_budget.governed_rmse,
+        mem_budget.unbounded_rmse,
+        mem_budget.rmse_ratio,
+        mem_budget.compactions,
+        mem_budget.evictions,
+        mem_budget.prunes
+    ));
+
     let repl_cfg = ReplicationBenchConfig { seed: cfg.seed, ..Default::default() };
     let replication = run_replication(&repl_cfg)?;
     out.push_str(&format!(
@@ -946,6 +1119,9 @@ pub fn generate(cfg: &ServeBenchConfig) -> Result<String> {
         .set("snapshot_speedup_p50", snapshot.speedup_p50)
         .set("binary_checkpoint_bytes", snapshot.binary_bytes)
         .set("binary_bytes_ratio", snapshot.bytes_ratio)
+        .set("mem_budget_rmse_ratio", mem_budget.rmse_ratio)
+        .set("mem_budget_peak_ratio", mem_budget.peak_ratio)
+        .set("mem_budget_bytes", mem_budget.budget_bytes)
         .set("replication_versions", replication.versions)
         .set("replication_deltas_applied", replication.deltas_applied)
         .set("replication_full_resyncs", replication.full_resyncs)
@@ -1041,6 +1217,8 @@ mod tests {
                 .set("obs_overhead_ratio", 1.0)
                 .set("snapshot_speedup_p50", 20.0)
                 .set("binary_bytes_ratio", 1.8)
+                .set("mem_budget_rmse_ratio", 1.0)
+                .set("mem_budget_peak_ratio", 0.9)
                 .set("freshness_p99_s", 0.5);
             j
         };
@@ -1084,6 +1262,20 @@ mod tests {
         fat_binary.set("binary_bytes_ratio", 0.9);
         let v = gate(&fat_binary, &baseline);
         assert!(v.iter().any(|m| m.contains("binary_bytes_ratio")), "{v:?}");
+        // budgeted RMSE more than 10% over unbounded: fail
+        let mut lossy = doc(10_000.0, 0.001, 10.0);
+        lossy.set("mem_budget_rmse_ratio", 1.2);
+        let v = gate(&lossy, &baseline);
+        assert!(v.iter().any(|m| m.contains("mem_budget_rmse_ratio")), "{v:?}");
+        // exactly at the 1.10 ceiling: pass
+        let mut at_rmse_ceiling = doc(10_000.0, 0.001, 10.0);
+        at_rmse_ceiling.set("mem_budget_rmse_ratio", 1.10);
+        assert!(gate(&at_rmse_ceiling, &baseline).is_empty());
+        // published state over its budget: fail
+        let mut over_budget = doc(10_000.0, 0.001, 10.0);
+        over_budget.set("mem_budget_peak_ratio", 1.01);
+        let v = gate(&over_budget, &baseline);
+        assert!(v.iter().any(|m| m.contains("mem_budget_peak_ratio")), "{v:?}");
         // freshness above the baseline's absolute ceiling: fail
         let mut stale = doc(10_000.0, 0.001, 10.0);
         stale.set("freshness_p99_s", 0.9);
@@ -1103,7 +1295,36 @@ mod tests {
         assert!(v.iter().any(|m| m.contains("obs_overhead_ratio missing")), "{v:?}");
         assert!(v.iter().any(|m| m.contains("snapshot_speedup_p50 missing")), "{v:?}");
         assert!(v.iter().any(|m| m.contains("binary_bytes_ratio missing")), "{v:?}");
+        assert!(v.iter().any(|m| m.contains("mem_budget_rmse_ratio missing")), "{v:?}");
+        assert!(v.iter().any(|m| m.contains("mem_budget_peak_ratio missing")), "{v:?}");
         assert!(v.iter().any(|m| m.contains("freshness_p99_s missing")), "{v:?}");
+    }
+
+    #[test]
+    fn mem_budget_scenario_enforces_the_budget() {
+        // plumbing-sized: the 1.10 RMSE ceiling is enforced by the CI
+        // smoke gate; here the functional core must hold — every publish
+        // boundary within budget, governance actually acted, and the
+        // accuracy cost of exact compaction stays small
+        let result = mem_budget_scenario(3000, 2, 200, 9).expect("scenario");
+        assert_eq!(result.instances, 3000);
+        assert!(result.budget_bytes > 0);
+        assert!(result.budget_bytes < result.unbounded_final_bytes);
+        assert!(
+            result.governed_peak_bytes <= result.budget_bytes,
+            "published state exceeded the budget: {result:?}"
+        );
+        assert!(result.peak_ratio <= 1.0);
+        assert!(
+            result.compactions + result.evictions + result.prunes > 0,
+            "a 7/10 budget must force the ladder to act: {result:?}"
+        );
+        assert!(result.unbounded_rmse > 0.0);
+        assert!(result.rmse_ratio.is_finite());
+        assert!(
+            result.rmse_ratio < 1.5,
+            "governed RMSE wildly off unbounded: {result:?}"
+        );
     }
 
     #[test]

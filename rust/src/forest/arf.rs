@@ -425,6 +425,77 @@ impl ArfRegressor {
                 .sum::<usize>()
     }
 
+    /// Memory-governance step (a) across the whole forest
+    /// ([`crate::govern`]): compact QO slot tables on every member's
+    /// foreground *and* background tree
+    /// ([`HoeffdingTreeRegressor::compact_observers`]). Returns how many
+    /// observers shrank.
+    pub fn compact_observers(&mut self, target_slots: usize) -> usize {
+        let mut compacted = 0;
+        for m in &mut self.members {
+            compacted += m.tree.compact_observers(target_slots);
+            if let Some(bg) = &mut m.background {
+                compacted += bg.compact_observers(target_slots);
+            }
+        }
+        compacted
+    }
+
+    /// Memory-governance step (b) across the whole forest
+    /// ([`crate::govern`]): deactivate observers on the `per_tree`
+    /// coldest leaves of every member tree (foreground and background;
+    /// [`HoeffdingTreeRegressor::evict_coldest`]). Returns the total
+    /// leaves evicted.
+    pub fn evict_coldest(&mut self, per_tree: usize) -> usize {
+        let mut evicted = 0;
+        for m in &mut self.members {
+            evicted += m.tree.evict_coldest(per_tree);
+            if let Some(bg) = &mut m.background {
+                evicted += bg.evict_coldest(per_tree);
+            }
+        }
+        evicted
+    }
+
+    /// Leaves still holding observers across all member trees.
+    pub fn n_active_leaves(&self) -> usize {
+        self.members
+            .iter()
+            .map(|m| {
+                m.tree.n_active_leaves()
+                    + m.background.as_ref().map(|b| b.n_active_leaves()).unwrap_or(0)
+            })
+            .sum()
+    }
+
+    /// Memory-governance step (c) ([`crate::govern`]): drop the member
+    /// with the worst recent prequential error — the same inverse-error
+    /// EWMA that weights the vote ([`ArfMember::recent_err`]; unseeded
+    /// members rank as `+∞`, so a member contributing nothing to the
+    /// vote is pruned first). Ties keep the earliest member and prune
+    /// the later one, so governance is deterministic. The last member is
+    /// never pruned (a forest must keep predicting); `options.n_members`
+    /// follows the live count so checkpoints stay self-consistent.
+    /// Returns the pruned member's index, or `None` when only one
+    /// member remains.
+    pub fn prune_worst(&mut self) -> Option<usize> {
+        if self.members.len() <= 1 {
+            return None;
+        }
+        let mut worst = 0usize;
+        for (i, m) in self.members.iter().enumerate() {
+            if m.recent_err() > self.members[worst].recent_err()
+                || (i > worst
+                    && m.recent_err() == self.members[worst].recent_err())
+            {
+                worst = i;
+            }
+        }
+        self.members.remove(worst);
+        self.options.n_members = self.members.len();
+        Some(worst)
+    }
+
     /// Replace the shared split-query engine (e.g. an instrumented backend
     /// in tests); every member's flush handle is updated too.
     pub fn with_split_backend(mut self, backend: Arc<dyn SplitBackend>) -> ArfRegressor {
@@ -810,6 +881,79 @@ mod tests {
         assert_eq!(back.n_splits(), arf.n_splits());
         assert_eq!(back.n_drifts(), arf.n_drifts());
         assert_eq!(arf.predict(&probe).to_bits(), back.predict(&probe).to_bits());
+    }
+
+    #[test]
+    fn prune_worst_drops_the_least_accurate_member_and_roundtrips() {
+        let mut arf = small_arf(4, 37);
+        let mut stream = Friedman1::new(45, 1.0);
+        for _ in 0..3000 {
+            let inst = stream.next_instance().unwrap();
+            arf.learn_one(&inst.x, inst.y);
+        }
+        // make member 1 unambiguously the worst
+        arf.members[1].vote_err = 1e9;
+        arf.members[1].vote_seeded = true;
+        assert_eq!(arf.prune_worst(), Some(1));
+        assert_eq!(arf.n_members(), 3);
+        assert_eq!(arf.options().n_members, 3);
+        assert_eq!(arf.name(), "arf[3xQO_s2]");
+        let probe = [0.5; 10];
+        assert!(arf.predict(&probe).is_finite());
+        // a pruned forest checkpoints and restores bit-identically
+        let back =
+            ArfRegressor::from_json(&crate::common::json::Json::parse(
+                &arf.to_json().unwrap().to_compact(),
+            )
+            .unwrap())
+            .unwrap();
+        assert_eq!(back.n_members(), 3);
+        assert_eq!(back.predict(&probe).to_bits(), arf.predict(&probe).to_bits());
+        // unseeded members (vote weight 0) are pruned before seeded ones
+        arf.members[0].vote_seeded = false;
+        assert_eq!(arf.prune_worst(), Some(0));
+        // exact tie: the later member is the one pruned
+        arf.members[0].vote_err = 0.5;
+        arf.members[0].vote_seeded = true;
+        arf.members[1].vote_err = 0.5;
+        arf.members[1].vote_seeded = true;
+        assert_eq!(arf.prune_worst(), Some(1), "later member pruned on ties");
+        assert_eq!(arf.n_members(), 1);
+        assert_eq!(arf.prune_worst(), None, "last member must survive");
+        assert_eq!(arf.n_members(), 1);
+    }
+
+    #[test]
+    fn forest_compact_and_evict_walk_every_member() {
+        let mut arf = ArfRegressor::new(
+            10,
+            ArfOptions {
+                n_members: 3,
+                lambda: 3.0,
+                seed: 91,
+                tree: HtrOptions::default(),
+                ..Default::default()
+            },
+            factory("QO_0.01", || {
+                Box::new(QuantizationObserver::new(RadiusPolicy::Fixed(0.01)))
+            }),
+        );
+        let mut stream = Friedman1::new(63, 1.0);
+        for _ in 0..4000 {
+            let inst = stream.next_instance().unwrap();
+            arf.learn_one(&inst.x, inst.y);
+        }
+        let before = arf.mem_bytes();
+        let probe = [0.4; 10];
+        let pred = arf.predict(&probe);
+        assert!(arf.compact_observers(8) > 0);
+        assert!(arf.mem_bytes() < before);
+        assert_eq!(arf.predict(&probe).to_bits(), pred.to_bits());
+        let active = arf.n_active_leaves();
+        assert!(active >= arf.n_members());
+        assert!(arf.evict_coldest(1) >= arf.n_members());
+        assert!(arf.n_active_leaves() < active);
+        assert_eq!(arf.predict(&probe).to_bits(), pred.to_bits());
     }
 
     #[test]

@@ -225,6 +225,53 @@ impl OnlineBaggingRegressor {
                 .sum::<usize>()
     }
 
+    /// Memory-governance step (a) ([`crate::govern`]): compact QO slot
+    /// tables on every member tree
+    /// ([`HoeffdingTreeRegressor::compact_observers`]). Returns how many
+    /// observers shrank.
+    pub fn compact_observers(&mut self, target_slots: usize) -> usize {
+        self.members
+            .iter_mut()
+            .map(|m| m.tree.compact_observers(target_slots))
+            .sum()
+    }
+
+    /// Memory-governance step (b) ([`crate::govern`]): deactivate
+    /// observers on the `per_tree` coldest leaves of every member tree
+    /// ([`HoeffdingTreeRegressor::evict_coldest`]). Returns the total
+    /// leaves evicted.
+    pub fn evict_coldest(&mut self, per_tree: usize) -> usize {
+        self.members.iter_mut().map(|m| m.tree.evict_coldest(per_tree)).sum()
+    }
+
+    /// Leaves still holding observers across all member trees.
+    pub fn n_active_leaves(&self) -> usize {
+        self.members.iter().map(|m| m.tree.n_active_leaves()).sum()
+    }
+
+    /// Memory-governance step (c) ([`crate::govern`]): drop the member
+    /// with the worst recent prequential error ([`BagMember::recent_err`];
+    /// without `--weighted-vote` no errors are tracked, every member
+    /// ranks `+∞` and the tie rule prunes the last member). Ties prune
+    /// the later member; the last member always survives. Returns the
+    /// pruned member's index, or `None` when only one remains.
+    pub fn prune_worst(&mut self) -> Option<usize> {
+        if self.members.len() <= 1 {
+            return None;
+        }
+        let mut worst = 0usize;
+        for (i, m) in self.members.iter().enumerate() {
+            if m.recent_err() > self.members[worst].recent_err()
+                || (i > worst
+                    && m.recent_err() == self.members[worst].recent_err())
+            {
+                worst = i;
+            }
+        }
+        self.members.remove(worst);
+        Some(worst)
+    }
+
     /// Replace the shared split-query engine (e.g. an instrumented backend
     /// in tests); every member's flush handle is updated too.
     pub fn with_split_backend(
@@ -480,6 +527,53 @@ mod tests {
             bag.predict(&[0.2; 10])
         };
         assert_eq!(run().to_bits(), run().to_bits());
+    }
+
+    #[test]
+    fn governance_walkers_cover_members_and_prune_keeps_one() {
+        let mut bag = OnlineBaggingRegressor::new(
+            10,
+            3,
+            1.0,
+            HtrOptions::default(),
+            factory("QO_0.01", || {
+                Box::new(QuantizationObserver::new(RadiusPolicy::fixed(0.01)))
+            }),
+            11,
+        );
+        let mut stream = Friedman1::new(5, 1.0);
+        for _ in 0..4000 {
+            let inst = stream.next_instance().unwrap();
+            bag.learn_one(&inst.x, inst.y);
+        }
+        let probe = [0.4; 10];
+        let before_mem = bag.mem_bytes();
+        let before_pred = bag.predict(&probe);
+        let compacted = bag.compact_observers(8);
+        assert!(compacted > 0, "expected dense QO tables to compact");
+        assert!(bag.mem_bytes() < before_mem, "compaction must shrink mem");
+        assert_eq!(
+            bag.predict(&probe).to_bits(),
+            before_pred.to_bits(),
+            "compaction must not touch predictions"
+        );
+
+        let active = bag.n_active_leaves();
+        assert!(active >= bag.n_members());
+        let evicted = bag.evict_coldest(1);
+        assert_eq!(evicted, bag.n_members(), "one leaf per member tree");
+        assert!(bag.n_active_leaves() < active);
+
+        // Without weighted voting every member ranks +inf, so ties prune
+        // the later member until one remains.
+        assert_eq!(bag.prune_worst(), Some(2));
+        assert_eq!(bag.prune_worst(), Some(1));
+        assert_eq!(bag.n_members(), 1);
+        assert_eq!(bag.prune_worst(), None, "last member survives");
+        // The survivor still round-trips.
+        let j = bag.to_json().unwrap();
+        let back = OnlineBaggingRegressor::from_json(&j).unwrap();
+        assert_eq!(back.predict(&probe).to_bits(), bag.predict(&probe).to_bits());
     }
 
     #[test]

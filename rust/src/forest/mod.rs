@@ -34,7 +34,10 @@
 //!
 //! Both ensembles implement [`crate::eval::Regressor`], so the
 //! prequential harness, the CLI (`qostream forest`) and the bench suite
-//! drive them exactly like a single tree.
+//! drive them exactly like a single tree. Both also expose the
+//! memory-governance walkers (`compact_observers` / `evict_coldest` /
+//! `prune_worst`) that [`crate::govern`] escalates through to hold an
+//! ensemble inside a byte budget — see `docs/MEMORY.md`.
 
 pub mod adwin;
 pub mod arf;

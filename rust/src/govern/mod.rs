@@ -1,0 +1,395 @@
+//! `govern/` — memory-governed serving: keep a model inside a fixed
+//! byte budget, forever.
+//!
+//! The paper's QO observer already bounds *per-leaf* monitoring cost
+//! (hash slots instead of a BST over every distinct value, PAPER.md
+//! Sec. 4), but a tree that keeps splitting — or a forest that keeps
+//! re-seeding background trees — still grows without bound. This module
+//! adds the missing control loop on top of the `mem_bytes()` accounting
+//! that every layer already exposes: given a budget, escalate through
+//! three increasingly lossy steps until the model fits.
+//!
+//! ## The escalation ladder
+//!
+//! * **(a) Compact** — merge adjacent QO slot pairs in place
+//!   ([`QuantizationObserver::compact`]) at a shrinking per-observer
+//!   slot target (64 → 32 → … → 2). *Exact* for the stored statistics:
+//!   the merged [`crate::stats::VarStats`] is bit-identical to having
+//!   observed both slots' populations into one (the paper's Sec. 3
+//!   mergeability), so predictions are untouched and only split-point
+//!   *resolution* coarsens.
+//! * **(b) Evict** — deactivate observers on the coldest leaves
+//!   ([`HoeffdingTreeRegressor::evict_coldest`]), coldest = least
+//!   weight since the last split attempt. Same semantics as the
+//!   max-depth freeze: the leaf still predicts and adapts its target
+//!   mean, it just stops attempting splits.
+//! * **(c) Prune** — drop the ensemble member with the worst recent
+//!   prequential error (`prune_worst`, the PR 4 inverse-error EWMAs);
+//!   the last member always survives.
+//!
+//! Each step only runs while the model is still over budget, so a
+//! generous budget never costs accuracy. When even the full ladder
+//! cannot fit (the budget is below the structural skeleton of one
+//! member), [`GovernReport::within_budget`] is `false` — the caller
+//! (the serve trainer, the CLI) surfaces that instead of thrashing.
+//!
+//! ## Hot-path contract
+//!
+//! The per-batch check is [`Governor::over_budget`]: one integer
+//! compare, no allocation, no model walk — the caller passes the
+//! `mem_bytes()` it already computes for the `qostream_model_mem_bytes`
+//! gauge. `tools/lint` pins this (`LINT_GOVERN_HOT_PATH`): the check
+//! must stay allocation-free; only a *triggered* [`Governor::enforce`]
+//! may allocate. The serve trainer runs the check between
+//! `train_batch` and `stage_publish`, so snapshots, replication deltas
+//! and audits only ever see governed state — followers receive it
+//! through ordinary deltas, no protocol change (`docs/MEMORY.md`).
+//!
+//! ## Checkpoint claims
+//!
+//! Governed checkpoints carry two extra envelope keys
+//! ([`stamp_governed`]): the budget and the `mem_bytes()` measured at
+//! save time. Loaders ignore unknown envelope keys, so the stamp is
+//! wire-compatible with every prior reader; `qostream audit` verifies
+//! the claim (`GOVERN_BUDGET` in `docs/INVARIANTS.md`).
+
+use crate::common::json::Json;
+use crate::persist::codec::{jusize, pusize};
+use crate::persist::Model;
+use anyhow::Result;
+
+#[cfg(doc)]
+use crate::observer::QuantizationObserver;
+#[cfg(doc)]
+use crate::tree::HoeffdingTreeRegressor;
+
+/// Envelope key carrying the byte budget a checkpoint was governed to.
+pub const BUDGET_KEY: &str = "mem_budget";
+
+/// Envelope key carrying the `mem_bytes()` measured at save time.
+pub const CLAIM_KEY: &str = "mem_bytes";
+
+/// Per-observer slot targets step (a) walks, largest first. Each rung
+/// roughly halves the previous one; the floor of 2 matches
+/// [`QuantizationObserver::compact`]'s minimum (a split needs two
+/// candidate partitions).
+pub const COMPACT_TARGETS: &[usize] = &[64, 32, 16, 8, 4, 2];
+
+/// What one [`Governor::enforce`] pass did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GovernReport {
+    /// `mem_bytes()` when the pass started.
+    pub start_bytes: usize,
+    /// `mem_bytes()` when the pass finished.
+    pub end_bytes: usize,
+    /// Observers whose slot tables shrank in step (a).
+    pub compactions: u64,
+    /// Leaves whose observers were deactivated in step (b).
+    pub evictions: u64,
+    /// Ensemble members dropped in step (c).
+    pub prunes: u64,
+    /// Did the model end the pass at or under budget? `false` means the
+    /// budget is below the structural floor (one member's skeleton).
+    pub within_budget: bool,
+}
+
+impl GovernReport {
+    /// Did this pass change the model at all?
+    pub fn acted(&self) -> bool {
+        self.compactions > 0 || self.evictions > 0 || self.prunes > 0
+    }
+}
+
+/// The budget enforcer. Cheap to construct and `Copy` — the serve
+/// trainer keeps one by value.
+#[derive(Clone, Copy, Debug)]
+pub struct Governor {
+    /// Byte budget; 0 means unbounded (every check passes).
+    budget: usize,
+}
+
+impl Governor {
+    /// A governor for `budget` bytes; 0 disables governance.
+    pub fn new(budget: usize) -> Governor {
+        Governor { budget }
+    }
+
+    /// The configured budget (0 = unbounded).
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Is governance enabled at all?
+    pub fn enabled(&self) -> bool {
+        self.budget > 0
+    }
+
+    /// The hot-path check: one integer compare against a `mem_bytes()`
+    /// the caller already holds. No allocation, no model walk —
+    /// `tools/lint` (`LINT_GOVERN_HOT_PATH`) keeps it that way.
+    #[inline(always)]
+    pub fn over_budget(&self, mem_bytes: usize) -> bool {
+        self.budget != 0 && mem_bytes > self.budget
+    }
+
+    /// Run the escalation ladder until `model.mem_bytes()` fits the
+    /// budget (or nothing more can be shed). A no-op — and allocation
+    /// free — when the model already fits. Updates the `govern_*`
+    /// counters and the `mem_budget` / `mem_bytes` gauges when the
+    /// metrics registry is enabled.
+    pub fn enforce(&self, model: &mut Model) -> GovernReport {
+        let start = model.mem_bytes();
+        let mut report = GovernReport {
+            start_bytes: start,
+            end_bytes: start,
+            within_budget: !self.over_budget(start),
+            ..GovernReport::default()
+        };
+        if report.within_budget {
+            return report;
+        }
+        // (a) compact QO slot tables, coarsest target first
+        for &target in COMPACT_TARGETS {
+            report.compactions += compact(model, target) as u64;
+            report.end_bytes = model.mem_bytes();
+            if !self.over_budget(report.end_bytes) {
+                break;
+            }
+        }
+        // (b) evict the coldest leaves, one per tree per round, until
+        // the model fits or no active leaves remain
+        while self.over_budget(report.end_bytes) {
+            let evicted = evict(model, 1);
+            if evicted == 0 {
+                break;
+            }
+            report.evictions += evicted as u64;
+            report.end_bytes = model.mem_bytes();
+        }
+        // (c) prune the worst ensemble member (never the last one)
+        while self.over_budget(report.end_bytes) {
+            if prune(model).is_none() {
+                break;
+            }
+            report.prunes += 1;
+            report.end_bytes = model.mem_bytes();
+        }
+        report.within_budget = !self.over_budget(report.end_bytes);
+        if let Some(m) = crate::obs::m() {
+            m.govern_compactions.add(report.compactions);
+            m.govern_evictions.add(report.evictions);
+            m.govern_prunes.add(report.prunes);
+            m.mem_budget_bytes.set(self.budget as u64);
+            m.model_mem_bytes.set(report.end_bytes as u64);
+        }
+        report
+    }
+}
+
+/// Step (a) dispatch: compact every QO observer in the model to at most
+/// `target_slots` slots. Returns how many observers shrank.
+fn compact(model: &mut Model, target_slots: usize) -> usize {
+    match model {
+        Model::Tree(t) => t.compact_observers(target_slots),
+        Model::Arf(f) => f.compact_observers(target_slots),
+        Model::Bagging(b) => b.compact_observers(target_slots),
+    }
+}
+
+/// Step (b) dispatch: evict the `per_tree` coldest active leaves of
+/// every tree in the model. Returns how many leaves were deactivated.
+fn evict(model: &mut Model, per_tree: usize) -> usize {
+    match model {
+        Model::Tree(t) => t.evict_coldest(per_tree),
+        Model::Arf(f) => f.evict_coldest(per_tree),
+        Model::Bagging(b) => b.evict_coldest(per_tree),
+    }
+}
+
+/// Step (c) dispatch: drop the worst ensemble member. `None` for plain
+/// trees (nothing to prune) and for ensembles already at one member.
+fn prune(model: &mut Model) -> Option<usize> {
+    match model {
+        Model::Tree(_) => None,
+        Model::Arf(f) => f.prune_worst(),
+        Model::Bagging(b) => b.prune_worst(),
+    }
+}
+
+/// Stamp a checkpoint document as governed: record the budget and the
+/// `mem_bytes()` measured at save time as envelope keys. Loaders that
+/// predate governance ignore unknown envelope keys, so the stamped
+/// document stays readable everywhere; `qostream audit` verifies the
+/// claim (`GOVERN_BUDGET`).
+pub fn stamp_governed(doc: &mut Json, budget: usize, mem_bytes: usize) {
+    doc.set(BUDGET_KEY, jusize(budget));
+    doc.set(CLAIM_KEY, jusize(mem_bytes));
+}
+
+/// Read a governed stamp back: `Ok(Some((budget, claimed_mem_bytes)))`
+/// when both keys are present, `Ok(None)` for ungoverned checkpoints,
+/// `Err` when the keys exist but do not parse (a corrupt or forged
+/// stamp — the audit canary exercises this).
+pub fn governed_claim(doc: &Json) -> Result<Option<(usize, usize)>> {
+    match (doc.get(BUDGET_KEY), doc.get(CLAIM_KEY)) {
+        (None, None) => Ok(None),
+        (budget, claim) => {
+            let budget = match budget {
+                Some(b) => pusize(b, BUDGET_KEY)?,
+                None => 0,
+            };
+            let claimed = match claim {
+                Some(c) => pusize(c, CLAIM_KEY)?,
+                None => 0,
+            };
+            Ok(Some((budget, claimed)))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::Regressor;
+    use crate::forest::{ArfOptions, ArfRegressor};
+    use crate::observer::{factory, QuantizationObserver, RadiusPolicy};
+    use crate::stream::{Friedman1, Stream};
+    use crate::tree::{HoeffdingTreeRegressor, HtrOptions};
+
+    fn qo_factory() -> Box<dyn crate::observer::ObserverFactory> {
+        factory("QO_0.01", || {
+            Box::new(QuantizationObserver::new(RadiusPolicy::fixed(0.01)))
+        })
+    }
+
+    fn grown_tree(n: usize) -> HoeffdingTreeRegressor {
+        let mut tree =
+            HoeffdingTreeRegressor::new(10, HtrOptions::default(), qo_factory());
+        let mut stream = Friedman1::new(5, 1.0);
+        for _ in 0..n {
+            let inst = stream.next_instance().unwrap();
+            tree.learn_one(&inst.x, inst.y);
+        }
+        tree
+    }
+
+    #[test]
+    fn unbounded_and_roomy_budgets_are_no_ops() {
+        let mut model = Model::Tree(grown_tree(3000));
+        let before = model.mem_bytes();
+        let r = Governor::new(0).enforce(&mut model);
+        assert!(r.within_budget && !r.acted());
+        assert_eq!(model.mem_bytes(), before, "unbounded must not touch the model");
+        let r = Governor::new(before * 2).enforce(&mut model);
+        assert!(r.within_budget && !r.acted());
+        assert_eq!(model.mem_bytes(), before, "roomy budget must not touch the model");
+    }
+
+    #[test]
+    fn compaction_alone_satisfies_a_mild_budget() {
+        // QO_0.01 tables are dense: halving the footprint is reachable
+        // by step (a) alone, and predictions stay bit-identical
+        let mut model = Model::Tree(grown_tree(6000));
+        let probe = [0.3; 10];
+        let before_pred = model.predict(&probe);
+        let start = model.mem_bytes();
+        let governor = Governor::new(start * 7 / 10);
+        let r = governor.enforce(&mut model);
+        assert!(r.within_budget, "mild budget must be reachable: {r:?}");
+        assert!(r.compactions > 0);
+        assert_eq!(r.evictions, 0, "compaction sufficed; eviction must not fire: {r:?}");
+        assert_eq!(r.prunes, 0);
+        assert_eq!(r.end_bytes, model.mem_bytes());
+        assert!(r.end_bytes <= governor.budget());
+        assert_eq!(model.predict(&probe).to_bits(), before_pred.to_bits());
+    }
+
+    #[test]
+    fn tight_budget_escalates_to_eviction() {
+        let mut model = Model::Tree(grown_tree(6000));
+        // below what compaction alone can reach, above the bare skeleton
+        let skeleton = {
+            let mut clone = match &model {
+                Model::Tree(t) => Model::Tree(t.clone()),
+                _ => unreachable!(),
+            };
+            Governor::new(1).enforce(&mut clone);
+            clone.mem_bytes()
+        };
+        let budget = skeleton + (model.mem_bytes() - skeleton) / 20;
+        let r = Governor::new(budget).enforce(&mut model);
+        assert!(r.within_budget, "evictions must reach the budget: {r:?}");
+        assert!(r.evictions > 0, "expected eviction to fire: {r:?}");
+        assert!(model.mem_bytes() <= budget);
+        // the governed model still predicts (frozen leaves keep their
+        // target statistics)
+        assert!(model.predict(&[0.3; 10]).is_finite());
+    }
+
+    #[test]
+    fn impossible_budget_stops_at_the_structural_floor() {
+        let mut model = Model::Tree(grown_tree(2000));
+        let r = Governor::new(1).enforce(&mut model);
+        assert!(!r.within_budget, "1 byte cannot hold a tree: {r:?}");
+        assert!(r.acted());
+        // a second pass finds nothing more to shed and reports honestly
+        let r2 = Governor::new(1).enforce(&mut model);
+        assert!(!r2.within_budget);
+        assert_eq!(r2.compactions, 0);
+        assert_eq!(r2.evictions, 0);
+        assert_eq!(model.mem_bytes(), r.end_bytes, "floor must be stable");
+    }
+
+    #[test]
+    fn forest_escalation_prunes_down_to_one_member() {
+        let mut arf = ArfRegressor::new(
+            10,
+            ArfOptions { n_members: 3, seed: 17, ..ArfOptions::default() },
+            qo_factory(),
+        );
+        let mut stream = Friedman1::new(5, 1.0);
+        for _ in 0..3000 {
+            let inst = stream.next_instance().unwrap();
+            arf.learn_one(&inst.x, inst.y);
+        }
+        let mut model = Model::Arf(arf);
+        let r = Governor::new(1).enforce(&mut model);
+        assert_eq!(r.prunes, 2, "must prune down to the last member: {r:?}");
+        assert!(!r.within_budget);
+        let Model::Arf(arf) = &model else { unreachable!() };
+        assert_eq!(arf.n_members(), 1, "last member survives");
+    }
+
+    #[test]
+    fn enforce_feeds_the_govern_metric_families() {
+        let _toggling = crate::obs::toggle_lock();
+        crate::obs::enable();
+        let g = crate::obs::global();
+        let (c0, e0) =
+            (g.govern_compactions.get(), g.govern_evictions.get());
+        let mut model = Model::Tree(grown_tree(5000));
+        let budget = model.mem_bytes() * 7 / 10;
+        let r = Governor::new(budget).enforce(&mut model);
+        assert!(r.acted());
+        assert!(g.govern_compactions.get() >= c0 + r.compactions);
+        assert!(g.govern_evictions.get() >= e0 + r.evictions);
+        assert_eq!(g.mem_budget_bytes.get(), budget as u64);
+    }
+
+    #[test]
+    fn governed_stamp_roundtrips_and_rejects_garbage() {
+        let model = Model::Tree(grown_tree(500));
+        let mut doc = model.to_checkpoint().unwrap();
+        assert_eq!(governed_claim(&doc).unwrap(), None, "ungoverned has no claim");
+        let mem = model.mem_bytes();
+        stamp_governed(&mut doc, 1 << 20, mem);
+        assert_eq!(governed_claim(&doc).unwrap(), Some((1 << 20, mem)));
+        // the stamped envelope still loads everywhere (unknown envelope
+        // keys are ignored by design)
+        let back = Model::from_checkpoint(&doc).unwrap();
+        assert_eq!(back.mem_bytes(), mem);
+        // a forged non-numeric stamp is an error, not a silent None
+        doc.set(CLAIM_KEY, "not-a-number");
+        assert!(governed_claim(&doc).is_err());
+    }
+}

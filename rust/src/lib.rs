@@ -45,6 +45,11 @@
 //! * [`bench_suite`] — regenerates every table and figure of the paper's
 //!   evaluation (see DESIGN.md for the experiment index), plus the
 //!   serving latency/checkpoint-size scenario.
+//! * [`govern`] — memory-governed serving: given a byte budget, an
+//!   escalation ladder (exact QO slot compaction → cold-leaf observer
+//!   eviction → worst-member pruning) keeps a forever-training model
+//!   inside fixed RAM; governed checkpoints carry an auditable budget
+//!   claim (see `docs/MEMORY.md`).
 //! * [`obs`] — dependency-free observability: a lock-free metrics
 //!   registry (atomic counters/gauges + log2-bucketed histograms with
 //!   exact merge and p50/p90/p99 readout), a bounded split-decision
@@ -68,6 +73,7 @@ pub mod coordinator;
 pub mod criterion;
 pub mod eval;
 pub mod forest;
+pub mod govern;
 pub mod obs;
 pub mod observer;
 pub mod persist;

@@ -11,12 +11,13 @@
 //! qostream tree [--instances N] [--seed S]    # Sec. 7 integration
 //! qostream forest [--members N] [--lambda L] [--subspace sqrt|all|K]
 //!                 [--split-backend per-observer|native-batch|xla] [--parallel W]
-//!                 [--shards N] [--weighted-vote]
+//!                 [--shards N] [--weighted-vote] [--mem-budget BYTES]
 //! qostream coordinator [--shards N] [--instances N]
 //! qostream serve [--port P] [--model tree|arf|bag] [--observer qo|ebst|<label>]
 //!                [--members N] [--snapshot-every K] [--restore ckpt.json]
 //!                [--checkpoint-out ckpt.json] [--shards N] [--shard-batch B]
-//!                [--delta-history K] [--follower-of HOST:PORT] [--poll-ms MS]
+//!                [--delta-history K] [--mem-budget BYTES]
+//!                [--follower-of HOST:PORT] [--poll-ms MS]
 //!                [--bench [--replication] [--smoke --out F --baseline F]]
 //! qostream fleet --targets HOST:PORT[,...] [--listen HOST:PORT] [--top [--interval-ms MS]]
 //!                [--once] [--no-discover]
@@ -249,6 +250,42 @@ fn cmd_forest(args: &Args) -> Result<()> {
         // leader-merged vote asserted bit-identical to sequential
         println!("{}", forest_bench::sharded_comparison(&cfg, shards).render());
     }
+
+    let mem_budget = args.try_usize("mem-budget", 0)?;
+    if mem_budget > 0 {
+        // memory-governance demo: grow the same forest on the same
+        // stream, then run the escalation ladder (compact -> evict ->
+        // prune, docs/MEMORY.md) and report what it took to fit
+        let observer = args.get_or("observer", "qo").to_string();
+        let mut model = Model::Arf(ArfRegressor::new(
+            10,
+            ArfOptions {
+                n_members: cfg.members,
+                lambda: cfg.lambda,
+                subspace: cfg.subspace,
+                seed: cfg.seed,
+                tree: HtrOptions { split_backend: cfg.split_backend, ..Default::default() },
+                ..Default::default()
+            },
+            observer_factory(&observer)?,
+        ));
+        let mut stream = cfg.stream();
+        for _ in 0..cfg.instances {
+            let Some(inst) = stream.next_instance() else { break };
+            model.learn_one(&inst.x, inst.y);
+        }
+        let report = qostream::govern::Governor::new(mem_budget).enforce(&mut model);
+        println!(
+            "memory governance: {} B -> {} B under a {mem_budget} B budget \
+             ({} compactions, {} evictions, {} prunes; within budget: {})",
+            report.start_bytes,
+            report.end_bytes,
+            report.compactions,
+            report.evictions,
+            report.prunes,
+            report.within_budget
+        );
+    }
     Ok(())
 }
 
@@ -412,6 +449,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         delta_history: args.try_usize("delta-history", 64)?,
         shards: args.try_usize("shards", 0)?,
         shard_batch: args.try_usize("shard-batch", 256)?,
+        mem_budget: args.try_usize("mem-budget", 0)?,
     };
     let name = model.name();
     let server = Server::start(model, &bind, options)?;
@@ -420,9 +458,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         String::new()
     };
+    let budget = if options.mem_budget > 0 {
+        format!(", {} B memory budget", options.mem_budget)
+    } else {
+        String::new()
+    };
     println!(
         "serving {name} on {} (snapshot hot-swap every {} learns, \
-         {}-deep delta ring{sharding})\n\
+         {}-deep delta ring{sharding}{budget})\n\
          protocol: NDJSON learn | predict | predict_batch | snapshot | stats | health \
          | repl_sync | metrics | metrics_raw | trace_splits | trace_repl | shutdown",
         server.addr(),
@@ -432,7 +475,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let final_model = server.join()?;
     println!("server stopped");
     if let Some(path) = args.opt("checkpoint-out") {
-        final_model.save(path)?;
+        if options.mem_budget > 0 {
+            // governed run: stamp the budget and the measured footprint
+            // into the envelope so `qostream audit` can hold the file to
+            // its own claim (GOVERN_BUDGET, docs/MEMORY.md)
+            let mut doc = final_model.to_checkpoint()?;
+            qostream::govern::stamp_governed(
+                &mut doc,
+                options.mem_budget,
+                final_model.mem_bytes(),
+            );
+            let mut text = doc.to_compact();
+            text.push('\n');
+            std::fs::write(path, text)
+                .with_context(|| format!("writing governed checkpoint {path}"))?;
+        } else {
+            final_model.save(path)?;
+        }
         println!("final model checkpointed to {path}");
     }
     Ok(())
@@ -669,12 +728,21 @@ fn audit_self_check() -> Result<()> {
         invariants::BIN_ENVELOPE,
         invariants::verify_binary(&flipped),
     );
+    let mut forged = base.clone();
+    // a governed stamp claiming a budget the footprint exceeds: the
+    // checkpoint convicts itself (docs/MEMORY.md)
+    qostream::govern::stamp_governed(&mut forged, 1, model.mem_bytes());
+    canary(
+        "forged memory-budget claim",
+        invariants::GOVERN_BUDGET,
+        invariants::verify_checkpoint(&forged),
+    );
     if !missed.is_empty() {
         bail!("audit self-check: canaries not detected: {}", missed.join(", "));
     }
     println!(
         "audit self-check: clean model + {}-delta chain + binary envelope verified; \
-         5/5 canary corruptions detected",
+         6/6 canary corruptions detected",
         deltas.len()
     );
     Ok(())
@@ -855,13 +923,15 @@ SUBCOMMANDS
                (bagging + ARF on drifting data,    --subspace all|sqrt|K --drift-at N --seed S
                 batched split queries,             --split-backend per-observer|native-batch|xla
                 sharded leader/worker fitting,     --parallel W --shards N --weighted-vote
-                accuracy-weighted voting)          --observer qo|ebst (demo only)]
+                accuracy-weighted voting,          --mem-budget BYTES (governed demo)
+                memory governance demo)            --observer qo|ebst (demo only)]
   coordinator  sharded distributed observation    [--shards N --instances N --radius R]
   serve        online learn/predict TCP server    [--port P --model tree|arf|bag --members N
                (NDJSON protocol, hot-swapped       --observer qo|ebst --snapshot-every K
                 read snapshots, checkpoints,       --restore ckpt.json --checkpoint-out ckpt.json
                 delta-checkpoint replication,      --shards N --shard-batch B --delta-history K
-                sharded training;                  --follower-of HOST:PORT --poll-ms MS
+                sharded training, memory           --mem-budget BYTES (docs/MEMORY.md)
+                governance;                        --follower-of HOST:PORT --poll-ms MS
                 --bench runs the latency scenario, --bench [--replication] [--smoke
                 --smoke writes/gates BENCH_ci.json) --out BENCH_ci.json --baseline FILE]]
   fleet        fleet-wide scrape aggregator       [--targets HOST:PORT[,...] --listen HOST:PORT

@@ -53,7 +53,8 @@
 //! ## Metric naming scheme
 //!
 //! `qostream_<component>_<name>[_total|_bytes|_ns]` where component is
-//! one of `tree`, `qo`, `backend`, `forest`, `serve`, `repl`, `model`.
+//! one of `tree`, `qo`, `backend`, `forest`, `serve`, `repl`, `model`,
+//! `govern`.
 //! Counters end in `_total`; byte and nanosecond distributions carry
 //! their unit as the suffix.
 //!
@@ -434,6 +435,16 @@ impl<T: Copy> TraceRing<T> {
     pub fn capacity(&self) -> usize {
         self.capacity
     }
+
+    /// Steady-state resident bytes of this ring: the struct itself plus
+    /// a full `capacity`-deep event buffer. The `VecDeque` starts empty
+    /// and its growth doubles, so the true heap size crosses this bound
+    /// only transiently during a doubling — the same accounting-grade
+    /// slack every other `mem_bytes()` in the crate accepts
+    /// (`MEM_RATIO` in `docs/INVARIANTS.md`).
+    pub fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<TraceRing<T>>() + self.capacity * std::mem::size_of::<T>()
+    }
 }
 
 /// Every metric the system records, by name. One static instance backs
@@ -481,6 +492,12 @@ pub struct Metrics {
     pub snapshot_bytes_binary: Counter,
     // model
     pub model_mem_bytes: Gauge,
+    // governance (crate::govern): escalation-step totals and the
+    // configured budget (0 = unbounded)
+    pub govern_compactions: Counter,
+    pub govern_evictions: Counter,
+    pub govern_prunes: Counter,
+    pub mem_budget_bytes: Gauge,
     /// Unix seconds this process's server/follower role started
     /// (`qostream_process_start_seconds`) — rate math and restart
     /// detection from the scrape alone.
@@ -529,6 +546,10 @@ impl Metrics {
             snapshot_bytes_json: Counter::new(),
             snapshot_bytes_binary: Counter::new(),
             model_mem_bytes: Gauge::new(),
+            govern_compactions: Counter::new(),
+            govern_evictions: Counter::new(),
+            govern_prunes: Counter::new(),
+            mem_budget_bytes: Gauge::new(),
             process_start_seconds: Gauge::new(),
             repl_lag_versions: Gauge::new(),
             repl_lag_learns: Gauge::new(),
@@ -539,6 +560,20 @@ impl Metrics {
             split_trace: TraceRing::new(256),
             repl_trace: TraceRing::new(256),
         }
+    }
+
+    /// Resident bytes of the whole registry. Every instrument except
+    /// the trace rings is a fixed inline block of atomics (counters,
+    /// gauges, histograms, and the windowed rings of [`window`] all
+    /// store `[AtomicU64; _]` arrays in place), so `size_of::<Metrics>`
+    /// covers them exactly; only the two rings add heap, charged at
+    /// their steady-state bound ([`TraceRing::mem_bytes`]). The PR 9
+    /// windowed instruments and rings were previously missing from all
+    /// accounting — a pinning test below keeps this sum honest.
+    pub fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<Metrics>()
+            + self.split_trace.capacity() * std::mem::size_of::<SplitEvent>()
+            + self.repl_trace.capacity() * std::mem::size_of::<ReplEvent>()
     }
 
     /// Route a split outcome to its per-outcome counter.
@@ -697,6 +732,26 @@ pub const CATALOG: &[MetricDesc] = &[
         name: "qostream_model_mem_bytes",
         kind: "gauge",
         help: "Resident bytes of the served model",
+    },
+    MetricDesc {
+        name: "qostream_govern_compactions_total",
+        kind: "counter",
+        help: "QO slot tables compacted by the memory governor",
+    },
+    MetricDesc {
+        name: "qostream_govern_evictions_total",
+        kind: "counter",
+        help: "Cold leaves whose observers the memory governor evicted",
+    },
+    MetricDesc {
+        name: "qostream_govern_prunes_total",
+        kind: "counter",
+        help: "Ensemble members pruned by the memory governor",
+    },
+    MetricDesc {
+        name: "qostream_model_mem_budget_bytes",
+        kind: "gauge",
+        help: "Configured model memory budget (0 = unbounded)",
     },
     MetricDesc {
         name: "qostream_process_start_seconds",
@@ -930,6 +985,54 @@ mod tests {
         let inverted = before.minus(&h.snapshot());
         assert_eq!(inverted.count, 0);
         assert_eq!(inverted.sum, 0);
+    }
+
+    #[test]
+    fn registry_mem_accounting_pins_every_instrument() {
+        use std::mem::size_of;
+        // the windowed instruments are fixed inline blocks: nothing on
+        // the heap, so their accounting is exactly their struct size —
+        // and that size must actually contain their rings
+        assert_eq!(WindowedCounter::new().mem_bytes(), size_of::<WindowedCounter>());
+        assert!(
+            WindowedCounter::new().mem_bytes() >= window::N_TIME_BUCKETS * 2 * 8,
+            "a windowed counter holds an (epoch, count) pair per time bucket"
+        );
+        assert_eq!(WindowedHistogram::new().mem_bytes(), size_of::<WindowedHistogram>());
+        assert!(
+            WindowedHistogram::new().mem_bytes()
+                >= window::N_TIME_BUCKETS * (N_BUCKETS + 3) * 8,
+            "a windowed histogram holds a full bucket array per time bucket"
+        );
+        // trace rings charge struct + steady-state buffer, independent
+        // of current occupancy (the bound a budget must plan for)
+        let ring: TraceRing = TraceRing::new(256);
+        assert_eq!(
+            ring.mem_bytes(),
+            size_of::<TraceRing>() + 256 * size_of::<SplitEvent>()
+        );
+        let occupied: TraceRing = TraceRing::new(256);
+        occupied.record(SplitEvent {
+            outcome: SplitOutcome::Accepted,
+            merit_gap: 0.0,
+            slots_evaluated: 1,
+            elapsed_ns: 1,
+        });
+        assert_eq!(occupied.mem_bytes(), ring.mem_bytes());
+        // the registry total is the inline block plus both rings' heap —
+        // the PR 9 instruments can no longer go missing from the sum
+        let m = Metrics::new();
+        assert_eq!(
+            m.mem_bytes(),
+            size_of::<Metrics>()
+                + m.split_trace.capacity() * size_of::<SplitEvent>()
+                + m.repl_trace.capacity() * size_of::<ReplEvent>()
+        );
+        assert!(
+            m.mem_bytes()
+                > size_of::<WindowedCounter>() * 2 + size_of::<WindowedHistogram>() * 2,
+            "the registry total must contain its windowed instruments"
+        );
     }
 
     #[test]

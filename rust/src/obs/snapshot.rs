@@ -237,6 +237,10 @@ impl RegistrySnapshot {
                 m.serve_snapshot_failures_consecutive.get(),
             ),
             Family::gauge("qostream_model_mem_bytes", m.model_mem_bytes.get()),
+            Family::counter("qostream_govern_compactions_total", m.govern_compactions.get()),
+            Family::counter("qostream_govern_evictions_total", m.govern_evictions.get()),
+            Family::counter("qostream_govern_prunes_total", m.govern_prunes.get()),
+            Family::gauge("qostream_model_mem_budget_bytes", m.mem_budget_bytes.get()),
             Family::gauge("qostream_process_start_seconds", m.process_start_seconds.get()),
             Family::gauge("qostream_repl_lag_versions", m.repl_lag_versions.get()),
             Family::gauge("qostream_repl_lag_learns", m.repl_lag_learns.get()),

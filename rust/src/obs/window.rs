@@ -160,6 +160,12 @@ impl WindowedCounter {
             .sum()
     }
 
+    /// Resident bytes: the ring is a fixed inline array of atomics —
+    /// no heap, so the struct size is exact (pinned in `obs` tests).
+    pub fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<WindowedCounter>()
+    }
+
     /// Events per second over the trailing window.
     pub fn rate_at(&self, window_secs: u64, now_secs: u64) -> f64 {
         if window_secs == 0 {
@@ -245,6 +251,12 @@ impl WindowedHistogram {
     /// [`HistogramSnapshot::merge`].
     pub fn snapshot_window(&self, window_secs: u64) -> HistogramSnapshot {
         self.snapshot_window_at(window_secs, now_unix_secs())
+    }
+
+    /// Resident bytes: fixed inline atomics, no heap — exact
+    /// (pinned in `obs` tests).
+    pub fn mem_bytes(&self) -> usize {
+        std::mem::size_of::<WindowedHistogram>()
     }
 
     /// [`WindowedHistogram::snapshot_window`] at an explicit instant.

@@ -88,6 +88,14 @@ pub trait AttributeObserver: Send + Sync {
         None
     }
 
+    /// Mutable counterpart of [`AttributeObserver::as_qo`], used by the
+    /// memory-governance pass ([`crate::govern`]) to compact QO slot
+    /// tables in place. Non-QO observers stay opaque (and ungoverned —
+    /// their memory is bounded only by eviction).
+    fn as_qo_mut(&mut self) -> Option<&mut QuantizationObserver> {
+        None
+    }
+
     /// Serialize the observer's complete state for checkpointing
     /// ([`crate::persist`]); [`observer_from_json`] decodes the tagged
     /// layout. The default returns `Json::Null`, which the model codec

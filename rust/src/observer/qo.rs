@@ -176,6 +176,53 @@ impl QuantizationObserver {
         items
     }
 
+    /// Compact the slot table down to at most `target_slots` occupied
+    /// slots by merging adjacent (code-ordered) slot pairs — the memory
+    /// governor's step (a) ([`crate::govern`]).
+    ///
+    /// The merge is *exact* in the paper's sense (Sec. 3): per-slot
+    /// [`VarStats`] are mergeable, so a merged slot carries precisely the
+    /// statistics both originals held and every surviving split boundary
+    /// proposes the same left/right candidate stats the prefix-merge in
+    /// [`AttributeObserver::best_split`] would have accumulated across
+    /// the originals. What is lost is *resolution*: boundaries interior
+    /// to a merged pair can no longer be proposed. The merged slot keeps
+    /// the left slot's bucket code, so codes stay strictly increasing
+    /// (`QO_SLOT_ORDER`) and `total` is untouched (`QO_TOTAL_DRIFT`).
+    ///
+    /// The table is rebuilt with exact capacity so [`mem_bytes`]
+    /// actually shrinks. No-op while the radius is still warming (the
+    /// buffer, not the hash, holds the state) or when already at or
+    /// under the target. Returns the number of slots merged away.
+    ///
+    /// [`mem_bytes`]: AttributeObserver::mem_bytes
+    pub fn compact(&mut self, target_slots: usize) -> usize {
+        if self.state.radius().is_none() {
+            return 0;
+        }
+        let target = target_slots.max(2);
+        if self.slots.len() <= target {
+            return 0;
+        }
+        let mut items = self.sorted_slots();
+        let before = items.len();
+        while items.len() > target {
+            let mut merged: Vec<(i64, Slot)> = Vec::with_capacity(items.len().div_ceil(2));
+            let mut it = items.into_iter();
+            while let Some((code, mut slot)) = it.next() {
+                if let Some((_, right)) = it.next() {
+                    slot.sum_x += right.sum_x;
+                    slot.stats += right.stats;
+                }
+                merged.push((code, slot));
+            }
+            items = merged;
+        }
+        self.slots = HashMap::with_capacity_and_hasher(items.len(), FxBuildHasher::default());
+        self.slots.extend(items);
+        before - self.slots.len()
+    }
+
     /// Decode an observer written by [`AttributeObserver::to_json`]
     /// (checkpointing; see [`crate::persist`]). The restored observer is
     /// state-identical: same radius state (frozen or mid-warmup), same
@@ -339,6 +386,10 @@ impl AttributeObserver for QuantizationObserver {
     }
 
     fn as_qo(&self) -> Option<&QuantizationObserver> {
+        Some(self)
+    }
+
+    fn as_qo_mut(&mut self) -> Option<&mut QuantizationObserver> {
         Some(self)
     }
 
@@ -691,6 +742,87 @@ mod tests {
         // both froze at the identical dynamically chosen radius
         assert_eq!(qo.radius().unwrap().to_bits(), back.radius().unwrap().to_bits());
         assert_eq!(qo.n_elements(), back.n_elements());
+    }
+
+    #[test]
+    fn compact_preserves_totals_order_and_boundary_stats() {
+        let mut qo = QuantizationObserver::with_radius(0.01);
+        let mut rng = Rng::new(21);
+        for _ in 0..20_000 {
+            let x = rng.uniform(-1.0, 1.0);
+            qo.observe(x, if x <= 0.3 { 0.0 } else { 5.0 }, 1.0);
+        }
+        let original = qo.sorted_slots();
+        assert!(original.len() > 64, "{}", original.len());
+        let removed = qo.compact(64);
+        let compacted = qo.sorted_slots();
+        assert_eq!(removed, original.len() - compacted.len());
+        assert!(compacted.len() <= 64 && compacted.len() > 32, "{}", compacted.len());
+        // codes stay strictly increasing and are a subset of the originals
+        for w in compacted.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+        let codes: std::collections::HashSet<i64> = original.iter().map(|&(c, _)| c).collect();
+        assert!(compacted.iter().all(|(c, _)| codes.contains(c)));
+        // totals untouched; slot-stat sum still equals total (QO_TOTAL_DRIFT)
+        let merged = compacted.iter().fold(VarStats::new(), |acc, &(_, s)| acc + s.stats);
+        assert!((merged.n - qo.total().n).abs() < 1e-9);
+        assert!((merged.m2 - qo.total().m2).abs() / qo.total().m2.max(1.0) < 1e-9);
+        // each compacted slot's stats equal the VarStats merge of the
+        // originals it covers (exactness: same fold best_split performs)
+        let mut idx = 0;
+        for (i, &(code, slot)) in compacted.iter().enumerate() {
+            assert_eq!(code, original[idx].0);
+            let end = if i + 1 < compacted.len() {
+                original.iter().position(|&(c, _)| c == compacted[i + 1].0).unwrap()
+            } else {
+                original.len()
+            };
+            let (mut sum_x, mut stats) = (0.0, VarStats::new());
+            for &(_, s) in &original[idx..end] {
+                sum_x += s.sum_x;
+                stats += s.stats;
+            }
+            assert_eq!(slot.sum_x.to_bits(), sum_x.to_bits());
+            assert_eq!(slot.stats.n.to_bits(), stats.n.to_bits());
+            assert_eq!(slot.stats.mean.to_bits(), stats.mean.to_bits());
+            assert_eq!(slot.stats.m2.to_bits(), stats.m2.to_bits());
+            idx = end;
+        }
+        // the split is still found near the step
+        let s = qo.best_split(&VarianceReduction).unwrap();
+        assert!((s.threshold - 0.3).abs() < 0.05, "threshold={}", s.threshold);
+    }
+
+    #[test]
+    fn compact_shrinks_mem_and_is_idempotent() {
+        let mut qo = QuantizationObserver::with_radius(0.005);
+        let mut rng = Rng::new(23);
+        for _ in 0..30_000 {
+            qo.observe(rng.uniform(-1.0, 1.0), rng.f64(), 1.0);
+        }
+        let before = qo.mem_bytes();
+        assert!(qo.compact(16) > 0);
+        assert!(qo.n_elements() <= 16);
+        assert!(qo.mem_bytes() < before, "{} !< {before}", qo.mem_bytes());
+        // already at target: no further merging
+        assert_eq!(qo.compact(16), 0);
+        // target floor is 2 slots — a split query must stay possible
+        qo.compact(0);
+        assert!(qo.n_elements() >= 2);
+        assert!(qo.best_split(&VarianceReduction).is_some());
+    }
+
+    #[test]
+    fn compact_is_a_noop_while_warming() {
+        let mut qo = QuantizationObserver::new(RadiusPolicy::std_fraction(2.0));
+        let mut rng = Rng::new(29);
+        for _ in 0..40 {
+            qo.observe(rng.normal(0.0, 1.0), rng.f64(), 1.0);
+        }
+        assert!(qo.radius().is_none());
+        assert_eq!(qo.compact(2), 0);
+        assert_eq!(qo.n_elements(), 40, "warmup buffer must be untouched");
     }
 
     #[test]

@@ -82,6 +82,17 @@
 //! learn→serve **freshness spans** per applied version. The [`fleet`]
 //! aggregator discovers a leader's followers, scrapes every node, and
 //! merges the histograms *exactly* into one fleet-wide exposition.
+//!
+//! ## Memory governance (see `docs/MEMORY.md`)
+//!
+//! With [`ServeOptions::mem_budget`] set, the trainer runs the
+//! [`crate::govern`] escalation ladder at every snapshot publication,
+//! *before* the structural clone — so read snapshots, staged
+//! replication deltas, checkpoints, and the debug-build audit only ever
+//! see a model inside the budget. Followers inherit the governed state
+//! through ordinary deltas (no protocol change); `stats` reports
+//! `mem_bytes` / `mem_budget` / `over_budget`, and an unmeetable budget
+//! degrades `health` instead of crashing the server.
 
 pub mod client;
 pub mod fleet;

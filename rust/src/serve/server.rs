@@ -57,6 +57,11 @@ pub struct ServeOptions {
     /// spawn per batch). Only consulted when `shards > 1`; the staleness
     /// bound for reads becomes `snapshot_every + shard_batch`.
     pub shard_batch: usize,
+    /// Model memory budget in bytes (0 = unbounded). The trainer runs
+    /// the [`crate::govern`] escalation ladder right before every
+    /// snapshot publication, so read snapshots, replication deltas and
+    /// checkpoints only ever expose governed state (`docs/MEMORY.md`).
+    pub mem_budget: usize,
 }
 
 impl Default for ServeOptions {
@@ -67,6 +72,7 @@ impl Default for ServeOptions {
             delta_history: 64,
             shards: 0,
             shard_batch: 256,
+            mem_budget: 0,
         }
     }
 }
@@ -99,6 +105,10 @@ struct ServerStats {
     /// total above.
     snapshot_failures_consecutive: AtomicU64,
     connections: AtomicU64,
+    /// Is the live model over its memory budget even after a full
+    /// governance pass (1 = the budget sits below the structural floor —
+    /// `health` degrades on this; always 0 when ungoverned)?
+    over_budget: AtomicU64,
     /// Version of the last *materialized* publication
     /// ([`DeltaLog::version`]); staged-but-unmaterialized publications
     /// are not yet versioned (see [`super::publish`]).
@@ -125,6 +135,7 @@ struct ModelInfo {
     n_features: usize,
     snapshot_every: usize,
     shards: usize,
+    mem_budget: usize,
     started: Instant,
 }
 
@@ -173,7 +184,19 @@ fn stage_publish(
     snapshot: &RwLock<Arc<Model>>,
     stats: &ServerStats,
     replication: &Replication,
+    governor: &crate::govern::Governor,
 ) {
+    // govern *before* the clone: every state the outside world can see —
+    // the read snapshot, the staged replication pointer, checkpoints —
+    // is already inside the budget. enforce() is one mem_bytes() walk
+    // when the model fits; followers receive the governed state through
+    // ordinary deltas (no protocol change, see docs/MEMORY.md).
+    if governor.enabled() {
+        let report = governor.enforce(model);
+        stats
+            .over_budget
+            .store(u64::from(!report.within_budget), Ordering::Relaxed);
+    }
     let started = Instant::now();
     let shared = Arc::new(model.clone());
     match snapshot.write() {
@@ -197,9 +220,10 @@ fn publish_snapshot(
     snapshot: &RwLock<Arc<Model>>,
     stats: &ServerStats,
     replication: &Replication,
+    governor: &crate::govern::Governor,
 ) -> Result<(Json, u64), String> {
     if model.learns_since_sync() > 0 {
-        stage_publish(model, snapshot, stats, replication);
+        stage_publish(model, snapshot, stats, replication, governor);
     } else {
         // zero-dirty: the read snapshot already equals the live model,
         // but the bookkeeping still advances — a snapshot request racing
@@ -289,6 +313,7 @@ impl Server {
             n_features: model.n_features(),
             snapshot_every: options.snapshot_every,
             shards: options.shards,
+            mem_budget: options.mem_budget,
             started: Instant::now(),
         });
         let doc = model.to_checkpoint().map_err(|e| {
@@ -308,6 +333,7 @@ impl Server {
             let replication = replication.clone();
             let snapshot_every = options.snapshot_every as u64;
             let shards = options.shards;
+            let governor = crate::govern::Governor::new(options.mem_budget);
             // sequential mode keeps the exact one-learn-per-message
             // schedule; sharded mode amortizes scoped-thread spawns over
             // micro-batches
@@ -350,7 +376,13 @@ impl Server {
                             if snapshot_every > 0
                                 && before / snapshot_every != applied / snapshot_every
                             {
-                                stage_publish(&mut model, &snapshot, &stats, &replication);
+                                stage_publish(
+                                    &mut model,
+                                    &snapshot,
+                                    &stats,
+                                    &replication,
+                                    &governor,
+                                );
                             }
                         }
                         TrainerMsg::Snapshot(reply) => {
@@ -359,6 +391,7 @@ impl Server {
                                 &snapshot,
                                 &stats,
                                 &replication,
+                                &governor,
                             );
                             if out.is_err() {
                                 note_snapshot_failure(&stats);
@@ -797,6 +830,11 @@ fn respond(
                 )
                 .set("snapshot_age_learns", applied.saturating_sub(at_snapshot))
                 .set("mem_bytes", current_snapshot(snapshot).mem_bytes())
+                .set("mem_budget", info.mem_budget)
+                .set(
+                    "over_budget",
+                    stats.over_budget.load(Ordering::Relaxed) != 0,
+                )
                 .set("connections", stats.connections.load(Ordering::Relaxed))
                 .set("uptime_ms", info.started.elapsed().as_millis() as u64)
                 .set("uptime_secs", info.started.elapsed().as_secs())
@@ -817,6 +855,13 @@ fn respond(
                     "snapshot publication failing (snapshot_failures_consecutive={run})"
                 ));
             }
+            if stats.over_budget.load(Ordering::Relaxed) != 0 {
+                reasons.push(format!(
+                    "model exceeds its memory budget even fully governed \
+                     (mem_budget={})",
+                    info.mem_budget
+                ));
+            }
             let mut o = ok_response();
             o.set("status", if reasons.is_empty() { "ok" } else { "degraded" })
                 .set("role", "leader")
@@ -827,6 +872,7 @@ fn respond(
                 .set("staleness_learns", applied.saturating_sub(at_snapshot))
                 .set("snapshot_failures_consecutive", run)
                 .set("mem_bytes", current_snapshot(snapshot).mem_bytes())
+                .set("mem_budget", info.mem_budget)
                 .set("uptime_secs", info.started.elapsed().as_secs())
                 .set("reasons", Json::Arr(reasons.into_iter().map(Json::from).collect()));
             (o, false)

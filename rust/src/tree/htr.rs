@@ -602,6 +602,89 @@ impl HoeffdingTreeRegressor {
             .sum()
     }
 
+    /// Leaves that still hold observers (can still attempt splits).
+    pub fn n_active_leaves(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n, Node::Leaf(l) if l.is_active()))
+            .count()
+    }
+
+    /// Memory-governance step (a) ([`crate::govern`]): compact every
+    /// active leaf's Quantization Observers down to at most
+    /// `target_slots` slots each ([`QuantizationObserver::compact`] —
+    /// exact under the paper's mergeable `VarStats`, Sec. 3). Non-QO
+    /// observers are left untouched (their memory yields only to
+    /// eviction). Returns how many observers actually shrank.
+    ///
+    /// Leaves are copy-on-written only when at least one of their
+    /// observers needs compacting, so published snapshots sharing the
+    /// other leaves stay shared.
+    ///
+    /// [`QuantizationObserver::compact`]:
+    /// crate::observer::QuantizationObserver::compact
+    pub fn compact_observers(&mut self, target_slots: usize) -> usize {
+        let target = target_slots.max(2);
+        let mut compacted = 0;
+        for node in &mut self.nodes {
+            let Node::Leaf(leaf) = node else { continue };
+            let needs = leaf.observers.as_ref().is_some_and(|obs| {
+                obs.iter().any(|o| {
+                    o.as_qo()
+                        .is_some_and(|q| q.radius().is_some() && q.n_elements() > target)
+                })
+            });
+            if !needs {
+                continue;
+            }
+            let leaf = Arc::make_mut(leaf);
+            if let Some(observers) = &mut leaf.observers {
+                for ao in observers.iter_mut() {
+                    if let Some(q) = ao.as_qo_mut() {
+                        if q.compact(target) > 0 {
+                            compacted += 1;
+                        }
+                    }
+                }
+            }
+        }
+        compacted
+    }
+
+    /// Memory-governance step (b) ([`crate::govern`]): deactivate the
+    /// observers of the `n` coldest active leaves — smallest
+    /// `weight_since_attempt`, i.e. the leaves farthest from their next
+    /// split attempt. An evicted leaf keeps predicting (stats + linear
+    /// model survive) but can never split again, exactly like a leaf
+    /// frozen at `max_depth`; checkpoints encode it as `observers: null`
+    /// and deltas carry the shrink like any other touched leaf. Ties
+    /// break on arena index so governance is deterministic. Returns how
+    /// many leaves were evicted.
+    pub fn evict_coldest(&mut self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        let mut cold: Vec<(f64, usize)> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, node)| match node {
+                Node::Leaf(l) if l.is_active() => Some((l.weight_since_attempt, i)),
+                _ => None,
+            })
+            .collect();
+        cold.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+        });
+        let mut evicted = 0;
+        for &(_, idx) in cold.iter().take(n) {
+            let Node::Leaf(leaf) = &mut self.nodes[idx] else { unreachable!() };
+            Arc::make_mut(leaf).observers = None;
+            evicted += 1;
+        }
+        evicted
+    }
+
     /// Approximate resident bytes: the node arena plus every leaf's
     /// observers, monitored list and linear model (capacity-based, so it
     /// tracks what the allocator actually holds).
@@ -1057,6 +1140,73 @@ mod tests {
         );
         let err = format!("{}", tree.to_json().unwrap_err());
         assert!(err.contains("my-custom-observer"), "{err}");
+    }
+
+    #[test]
+    fn compact_observers_shrinks_memory_without_breaking_predictions() {
+        let mut tree = HoeffdingTreeRegressor::new(
+            2,
+            HtrOptions::default(),
+            factory("QO_0.001", || {
+                Box::new(QuantizationObserver::with_radius(0.001))
+            }),
+        );
+        let mut rng = Rng::new(201);
+        for _ in 0..8000 {
+            let x = [rng.uniform(-1.0, 1.0), rng.uniform(-1.0, 1.0)];
+            tree.learn_one(&x, if x[0] <= 0.2 { -1.0 } else { 3.0 });
+        }
+        let before = tree.mem_bytes();
+        let probe = [0.4, -0.1];
+        let pred = tree.predict(&probe);
+        let compacted = tree.compact_observers(16);
+        assert!(compacted > 0, "radius 0.001 must leave slots to compact");
+        assert!(tree.mem_bytes() < before, "{} !< {before}", tree.mem_bytes());
+        // predictions come from leaf stats/linear models, not observers
+        assert_eq!(tree.predict(&probe).to_bits(), pred.to_bits());
+        // idempotent at the same target
+        assert_eq!(tree.compact_observers(16), 0);
+        // compacted trees still checkpoint + restore
+        let back = HoeffdingTreeRegressor::from_json(
+            &crate::common::json::Json::parse(&tree.to_json().unwrap().to_compact())
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.predict(&probe).to_bits(), pred.to_bits());
+    }
+
+    #[test]
+    fn evict_coldest_freezes_lightest_leaves_first() {
+        let mut tree = HoeffdingTreeRegressor::new(
+            1,
+            HtrOptions { leaf_model: LeafModelKind::Mean, ..Default::default() },
+            qo_factory(),
+        );
+        let mut rng = Rng::new(203);
+        for _ in 0..8000 {
+            let x = rng.uniform(-1.0, 1.0);
+            tree.learn_one(&[x], if x <= 0.0 { -5.0 } else { 5.0 });
+        }
+        let active = tree.n_active_leaves();
+        assert!(active >= 2, "need multiple leaves: {active}");
+        let before = tree.mem_bytes();
+        let probe = [-0.5];
+        let pred = tree.predict(&probe);
+        assert_eq!(tree.evict_coldest(1), 1);
+        assert_eq!(tree.n_active_leaves(), active - 1);
+        assert!(tree.mem_bytes() < before);
+        assert_eq!(tree.predict(&probe).to_bits(), pred.to_bits());
+        // evicting more than remain is bounded
+        assert_eq!(tree.evict_coldest(usize::MAX), active - 1);
+        assert_eq!(tree.n_active_leaves(), 0);
+        assert_eq!(tree.total_elements(), 0);
+        // further learning is safe and never splits again
+        let splits = tree.n_splits();
+        for _ in 0..3000 {
+            let x = rng.uniform(-1.0, 1.0);
+            tree.learn_one(&[x], if x <= 0.0 { -5.0 } else { 5.0 });
+        }
+        assert_eq!(tree.n_splits(), splits);
     }
 
     #[test]

@@ -1,0 +1,194 @@
+//! End-to-end memory-governance soak over a real TCP session: a leader
+//! trained far past its byte budget on a drifting stream must publish
+//! only governed state — every probe of the published snapshot stays
+//! inside the budget — while prequential RMSE stays within tolerance of
+//! an identically-driven unbounded leader. The weekly scheduled CI run
+//! stretches the soak 10x via `GOVERN_SOAK_SCALE` (docs/MEMORY.md).
+
+use qostream::common::json::Json;
+use qostream::forest::{ArfOptions, ArfRegressor};
+use qostream::observer::{factory, QuantizationObserver, RadiusPolicy};
+use qostream::persist::Model;
+use qostream::serve::{ServeClient, ServeOptions, Server};
+use qostream::stream::{AbruptDrift, Friedman1, Stream};
+
+/// Soak multiplier: CI's weekly `schedule:` run sets `GOVERN_SOAK_SCALE=10`
+/// so the same test trains an order of magnitude longer, surfacing slow
+/// leaks a PR-sized run misses. Defaults to 1 everywhere else.
+fn soak_scale() -> usize {
+    std::env::var("GOVERN_SOAK_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+        .max(1)
+}
+
+fn qo_factory() -> Box<dyn qostream::observer::ObserverFactory> {
+    factory("QO_0.01", || {
+        Box::new(QuantizationObserver::new(RadiusPolicy::Fixed(0.01)))
+    })
+}
+
+fn arf_model(seed: u64) -> Model {
+    Model::Arf(ArfRegressor::new(
+        10,
+        ArfOptions { n_members: 3, lambda: 6.0, seed, ..Default::default() },
+        qo_factory(),
+    ))
+}
+
+/// Friedman1 with an abrupt mid-stream concept swap — drift forces fresh
+/// leaf growth after the budget is already tight, so the escalation
+/// ladder keeps getting re-triggered instead of enforcing once.
+fn drifting_stream(seed: u64, instances: usize) -> AbruptDrift {
+    AbruptDrift::new(
+        Box::new(Friedman1::new(seed, 1.0)),
+        Box::new(Friedman1::swapped(seed.wrapping_add(1), 1.0)),
+        instances / 2,
+    )
+}
+
+fn num(j: &Json, key: &str) -> f64 {
+    j.get(key).and_then(Json::as_f64).unwrap_or(-1.0)
+}
+
+/// Drive one leader through the drifting stream over TCP, prequentially
+/// scoring against the published snapshot after `skip` warmup learns.
+/// When `budget > 0`, every probe (explicit snapshot = trainer sync
+/// point, then `stats`) asserts the published footprint is inside the
+/// budget and the `over_budget` flag is clear. Returns the prequential
+/// RMSE and the final published `mem_bytes`.
+fn run_pass(budget: usize, instances: usize, skip: usize, seed: u64) -> (f64, usize) {
+    let server = Server::start(
+        arf_model(seed),
+        "127.0.0.1:0",
+        ServeOptions { snapshot_every: 200, mem_budget: budget, ..Default::default() },
+    )
+    .expect("server must start");
+    let mut client = ServeClient::connect(server.addr()).expect("connect");
+    let mut stream = drifting_stream(seed, instances);
+    let probe_every = 500;
+    let mut sq_err = 0.0;
+    let mut scored = 0usize;
+    for i in 0..instances {
+        let inst = stream.next_instance().expect("stream instance");
+        if i >= skip {
+            let p = client.predict(&inst.x).expect("predict");
+            assert!(p.is_finite(), "prediction went non-finite at instance {i}");
+            let err = p - inst.y;
+            sq_err += err * err;
+            scored += 1;
+        }
+        client.learn(&inst.x, inst.y).expect("learn ack");
+        if budget > 0 && (i + 1) % probe_every == 0 {
+            // explicit snapshot: drains the trainer FIFO and publishes,
+            // so the stats below describe exactly the governed state the
+            // outside world (reads, followers, checkpoints) can see
+            client.snapshot().expect("probe snapshot");
+            let stats = client.stats().expect("probe stats");
+            let mem = num(&stats, "mem_bytes");
+            assert!(
+                mem > 0.0 && mem <= budget as f64,
+                "published snapshot breached the budget at instance {}: \
+                 mem_bytes={mem}, budget={budget}",
+                i + 1
+            );
+            assert_eq!(num(&stats, "mem_budget"), budget as f64, "{stats:?}");
+            assert_eq!(
+                stats.get("over_budget").and_then(Json::as_bool),
+                Some(false),
+                "ladder must reach the budget on this workload: {stats:?}"
+            );
+        }
+    }
+    client.snapshot().expect("final snapshot");
+    let stats = client.stats().expect("final stats");
+    let final_mem = num(&stats, "mem_bytes");
+    assert!(final_mem > 0.0, "{stats:?}");
+    client.shutdown().expect("shutdown ack");
+    server.join().expect("clean exit");
+    let rmse = (sq_err / scored.max(1) as f64).sqrt();
+    (rmse, final_mem as usize)
+}
+
+/// The soak: an unbounded reference pass sizes the workload's natural
+/// footprint, then an identically-driven leader runs under 7/10 of it.
+/// Every probe must stay inside the budget and the governed RMSE must
+/// land within tolerance of the unbounded reference.
+#[test]
+fn governed_leader_stays_inside_its_budget_over_the_wire() {
+    let scale = soak_scale();
+    let instances = 4000 * scale;
+    let skip = instances / 10;
+
+    let (unbounded_rmse, unbounded_bytes) = run_pass(0, instances, skip, 42);
+    assert!(unbounded_rmse.is_finite() && unbounded_rmse > 0.0);
+
+    let budget = unbounded_bytes * 7 / 10;
+    assert!(budget > 0, "reference footprint too small to govern: {unbounded_bytes}");
+    let (governed_rmse, governed_bytes) = run_pass(budget, instances, skip, 42);
+
+    assert!(
+        governed_bytes <= budget,
+        "final governed footprint {governed_bytes} exceeds budget {budget}"
+    );
+    let ratio = governed_rmse / unbounded_rmse;
+    // looser than the bench gate's in-process 1.10 ceiling: both passes
+    // score against a snapshot trailing by up to snapshot_every learns,
+    // which adds identical lag noise to numerator and denominator
+    assert!(
+        ratio <= 1.25,
+        "governed RMSE drifted too far from unbounded: \
+         {governed_rmse} vs {unbounded_rmse} (ratio {ratio:.3})"
+    );
+}
+
+/// An impossible budget (1 byte) exhausts the whole escalation ladder:
+/// the server must keep serving, raise the `over_budget` flag, and
+/// report `degraded` through `health` with a reason an operator (or a
+/// load balancer) can act on — never crash or stop publishing.
+#[test]
+fn impossible_budget_degrades_health_but_keeps_serving() {
+    let server = Server::start(
+        arf_model(7),
+        "127.0.0.1:0",
+        ServeOptions { snapshot_every: 100, mem_budget: 1, ..Default::default() },
+    )
+    .expect("server must start");
+    let mut client = ServeClient::connect(server.addr()).expect("connect");
+    let mut stream = Friedman1::new(7, 1.0);
+    for _ in 0..300 {
+        let inst = stream.next_instance().expect("instance");
+        client.learn(&inst.x, inst.y).expect("learn ack");
+    }
+    client.snapshot().expect("snapshot");
+
+    let stats = client.stats().expect("stats");
+    assert_eq!(
+        stats.get("over_budget").and_then(Json::as_bool),
+        Some(true),
+        "a 1-byte budget must be reported as unmeetable: {stats:?}"
+    );
+    assert_eq!(num(&stats, "mem_budget"), 1.0, "{stats:?}");
+
+    let health = client.health().expect("health");
+    assert_eq!(
+        health.get("status").and_then(Json::as_str),
+        Some("degraded"),
+        "{health:?}"
+    );
+    let reasons = health.get("reasons").and_then(Json::as_arr).expect("reasons array");
+    assert!(
+        reasons
+            .iter()
+            .any(|r| r.as_str().is_some_and(|s| s.contains("memory budget"))),
+        "degraded health must name the budget breach: {health:?}"
+    );
+
+    // fully governed (pruned to one member, coldest leaves evicted, slot
+    // tables compacted) the model still answers reads
+    let p = client.predict(&[0.5; 10]).expect("predict while degraded");
+    assert!(p.is_finite());
+    client.shutdown().expect("shutdown ack");
+    server.join().expect("clean exit");
+}

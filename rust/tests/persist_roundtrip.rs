@@ -310,6 +310,161 @@ fn binary_checkpoint_equals_json_across_the_corpus() {
     }
 }
 
+/// Dispatch memory-governance step (a) across model kinds, mirroring
+/// [`qostream::govern`]'s internal walker.
+fn compact_model(model: &mut Model, target_slots: usize) -> usize {
+    match model {
+        Model::Tree(t) => t.compact_observers(target_slots),
+        Model::Arf(f) => f.compact_observers(target_slots),
+        Model::Bagging(b) => b.compact_observers(target_slots),
+    }
+}
+
+/// Dispatch memory-governance step (b) across model kinds.
+fn evict_model(model: &mut Model, per_tree: usize) -> usize {
+    match model {
+        Model::Tree(t) => t.evict_coldest(per_tree),
+        Model::Arf(f) => f.evict_coldest(per_tree),
+        Model::Bagging(b) => b.evict_coldest(per_tree),
+    }
+}
+
+/// Governance is *exact* over the checkpoint corpus (docs/MEMORY.md):
+/// the codec preserves QO slot tables bit-for-bit and the adjacent-slot
+/// `VarStats` merge is deterministic, so compacting + evicting a live
+/// model and doing the same to its save → load restore must land on
+/// **byte-identical** checkpoints, bit-identical predictions, and an
+/// identical continued-training trajectory. On E-BST members step (a)
+/// must be a no-op — compaction only ever touches QO tables.
+#[test]
+fn governance_commutes_with_checkpoint_roundtrip() {
+    for (i, label) in ["QO_s2", "QO_0.05", "E-BST"].iter().enumerate() {
+        check(&format!("govern-commute[{label}]"), 0x60 + i as u64, 2, |rng| {
+            for mut live in model_grid(label, rng) {
+                let name = live.name();
+                let n = 800 + rng.below(800) as usize;
+                for _ in 0..n {
+                    let (x, y) = draw_instance(rng);
+                    live.learn_one(&x, y);
+                }
+                let mut restored = Model::from_text(&live.to_text().expect("encode"))
+                    .map_err(|e| format!("{name}: restore: {e}"))?;
+
+                let target = 2 + rng.below(14) as usize;
+                let per_tree = 1 + rng.below(3) as usize;
+                let ca = compact_model(&mut live, target);
+                let cb = compact_model(&mut restored, target);
+                if ca != cb {
+                    return Err(format!("{name}: compaction count diverged: {ca} vs {cb}"));
+                }
+                if *label == "E-BST" && ca != 0 {
+                    return Err(format!("{name}: compaction must not touch E-BST tables"));
+                }
+                let ea = evict_model(&mut live, per_tree);
+                let eb = evict_model(&mut restored, per_tree);
+                if ea != eb {
+                    return Err(format!("{name}: eviction count diverged: {ea} vs {eb}"));
+                }
+
+                // governed state is byte-identical on both sides...
+                let text = live.to_text().expect("encode governed");
+                if restored.to_text().expect("encode governed restore") != text {
+                    return Err(format!("{name}: governance did not commute with save/load"));
+                }
+                // ...and stays exact through continued training
+                for _ in 0..300 {
+                    let (x, y) = draw_instance(rng);
+                    live.learn_one(&x, y);
+                    restored.learn_one(&x, y);
+                }
+                for _ in 0..10 {
+                    let (x, _) = draw_instance(rng);
+                    if live.predict(&x).to_bits() != restored.predict(&x).to_bits() {
+                        return Err(format!("{name}: trajectory diverged after governance"));
+                    }
+                }
+                if live.to_text().expect("re-encode") != restored.to_text().expect("re-encode") {
+                    return Err(format!("{name}: checkpoints diverged after training on"));
+                }
+            }
+            Ok(())
+        });
+    }
+}
+
+/// A governed (budget-stamped) checkpoint is still a first-class
+/// checkpoint: the stamped envelope survives JSON parse → re-encode and
+/// the binary document codec **byte-for-byte**, decodes to a model with
+/// bit-identical predictions (the decoder ignores the stamp keys), and
+/// the stamp itself parses back exactly while the `GOVERN_BUDGET` audit
+/// invariant convicts it iff the claim exceeds the budget.
+#[test]
+fn governed_stamped_checkpoints_round_trip_bit_identically() {
+    use qostream::common::json::Json;
+
+    check("governed-stamp-roundtrip", 0x60A, 2, |rng| {
+        for mut model in model_grid("QO_0.05", rng) {
+            let name = model.name();
+            let n = 600 + rng.below(600) as usize;
+            for _ in 0..n {
+                let (x, y) = draw_instance(rng);
+                model.learn_one(&x, y);
+            }
+            // govern against a real (possibly unmeetable) budget so the
+            // corpus covers both honest and self-convicting stamps
+            let budget = model.mem_bytes() * 3 / 4;
+            qostream::govern::Governor::new(budget).enforce(&mut model);
+            let claimed = model.mem_bytes();
+            let mut doc = model.to_checkpoint().expect("encode");
+            qostream::govern::stamp_governed(&mut doc, budget, claimed);
+
+            // the stamp parses back exactly
+            match qostream::govern::governed_claim(&doc) {
+                Ok(Some((b, c))) if b == budget && c == claimed => {}
+                other => return Err(format!("{name}: stamp did not parse back: {other:?}")),
+            }
+
+            // JSON text round-trip is a byte-level fixpoint
+            let text = doc.to_compact();
+            let parsed = Json::parse(&text).map_err(|e| format!("{name}: parse: {e}"))?;
+            if parsed.to_compact() != text {
+                return Err(format!("{name}: stamped JSON re-encode differs"));
+            }
+
+            // binary document codec carries the stamped envelope verbatim
+            let bytes = qostream::persist::binary::encode_doc(&doc);
+            let back = qostream::persist::binary::decode_doc(&bytes)
+                .map_err(|e| format!("{name}: binary decode: {e}"))?;
+            if back.to_compact() != text {
+                return Err(format!("{name}: binary round-trip changed the stamped doc"));
+            }
+
+            // the decoder ignores stamp keys: restore is bit-identical
+            let restored = Model::from_checkpoint(&parsed)
+                .map_err(|e| format!("{name}: decode stamped: {e}"))?;
+            for _ in 0..10 {
+                let (x, _) = draw_instance(rng);
+                if restored.predict(&x).to_bits() != model.predict(&x).to_bits() {
+                    return Err(format!("{name}: stamped restore predicts differently"));
+                }
+            }
+
+            // GOVERN_BUDGET holds the file to its own claim
+            let convicted = qostream::audit::invariants::verify_checkpoint(&doc)
+                .iter()
+                .any(|f| f.rule == qostream::audit::invariants::GOVERN_BUDGET);
+            let should_convict = budget > 0 && claimed > budget;
+            if convicted != should_convict {
+                return Err(format!(
+                    "{name}: GOVERN_BUDGET verdict wrong (budget={budget}, \
+                     claimed={claimed}, convicted={convicted})"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn checkpoint_of_a_checkpoint_is_byte_identical() {
     // canonicalization: the codec is a fixpoint on its own output, for

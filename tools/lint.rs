@@ -35,7 +35,7 @@ fn main() -> ExitCode {
         }
     }
     if findings.is_empty() {
-        eprintln!("lint: clean ({} rules over {})", 5, root.display());
+        eprintln!("lint: clean ({} rules over {})", 6, root.display());
         ExitCode::SUCCESS
     } else {
         eprintln!("lint: {} finding(s)", findings.len());
